@@ -1,0 +1,51 @@
+//! Method comparison on perplexity (the Table-2 experience, sized to run
+//! in about a minute): Full vs Exact-TopK vs H2O vs Loki at k_f = 0.25,
+//! d_f = 0.25 on the wiki eval split.
+//!
+//!     cargo run --release --example compare_methods [-- --docs 8 --tokens 160]
+
+use loki::data::EvalDocs;
+use loki::eval::{perplexity, VariantSpec};
+use loki::runtime::RuntimeStack;
+use loki::util::args::Args;
+use loki::util::artifacts_dir;
+use loki::util::table::{fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n_docs = args.usize_or("docs", 8);
+    let max_tokens = args.usize_or("tokens", 160);
+    let stack = RuntimeStack::load(&artifacts_dir())?;
+    let man = stack.manifest.clone();
+    let docs = EvalDocs::load(&artifacts_dir(), "wiki")?;
+    let docs: Vec<Vec<i32>> = docs.docs.into_iter().take(n_docs).collect();
+
+    let variants = vec![
+        ("Full Attention", VariantSpec::Full),
+        ("Exact-TopK k=0.25", VariantSpec::TopK { k_f: 0.25 }),
+        ("H2O k=0.25", VariantSpec::H2o { k_f: 0.25 }),
+        ("Loki k=0.25 d=0.25", VariantSpec::Loki { k_f: 0.25, d_f: 0.25 }),
+        ("PCAAttn d=0.25", VariantSpec::PcaAttn { d_f: 0.25 }),
+    ];
+    let mut table = Table::new(
+        "Perplexity comparison (wiki eval split; lower is better)",
+        &["method", "ppl", "Δ vs full", "eval s"],
+    );
+    let mut full_ppl = f64::NAN;
+    for (label, variant) in variants {
+        let rep = perplexity(&stack, &man.default_pca, &variant, &docs, 16, max_tokens)?;
+        let ppl = rep.perplexity();
+        if label == "Full Attention" {
+            full_ppl = ppl;
+        }
+        table.row(vec![
+            label.to_string(),
+            fnum(ppl, 4),
+            fnum(ppl - full_ppl, 4),
+            fnum(rep.wall_s, 1),
+        ]);
+        println!("  {label}: ppl {ppl:.4} ({} tokens)", rep.n_tokens);
+    }
+    table.emit("compare_methods_example");
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Quickstart: load the AOT artifacts, start the serving engine, and
+//! generate text with Loki sparse attention.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! This is the 60-second tour: one request through the full stack —
+//! coordinator → runtime thread → compiled HLO (JAX model + Pallas
+//! decode-attention kernels) → logits → sampler.
+
+use std::sync::mpsc::channel;
+
+use loki::coordinator::request::GenRequest;
+use loki::coordinator::sampler::SampleCfg;
+use loki::coordinator::{Engine, EngineConfig};
+use loki::model::ByteTokenizer;
+use loki::runtime::{DecodeVariant, RuntimeService};
+use loki::util::artifacts_dir;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Start the runtime thread (owns the PJRT client + weights).
+    let service = RuntimeService::start(artifacts_dir())?;
+    println!(
+        "loaded {} ({} layers, head_dim {}, max_len {})",
+        service.manifest.model.name,
+        service.manifest.model.n_layers,
+        service.manifest.model.head_dim,
+        service.manifest.model.max_len
+    );
+
+    // 2. Configure the engine: Loki attention at the paper's headline
+    //    setting (k_f = 0.25 of the cache, d_f = 0.25 of head_dim —
+    //    theoretical speedup 1/(d_f/2 + k_f) ≈ 2.67x).
+    let cfg = EngineConfig {
+        variant: DecodeVariant::loki_fractions(&service.manifest, 0.25, 0.25),
+        ..Default::default()
+    };
+    let engine = Engine::new(&service, cfg.clone());
+
+    // 3. Submit a prompt and run the engine until it drains.
+    let tok = ByteTokenizer;
+    let (tx, rx) = Engine::channel(&cfg);
+    let (reply, results) = channel();
+    tx.send(GenRequest {
+        id: 1,
+        prompt: tok.encode("the code of "),
+        max_new_tokens: 40,
+        stop_token: Some(b'\n' as i32),
+        sampling: SampleCfg::greedy(),
+        reply,
+    })?;
+    drop(tx); // closing the queue lets engine.run() return when done
+
+    let metrics = engine.run(rx)?;
+    let result = results.recv()?;
+    println!("\n--- generation -------------------------------------------");
+    println!("prompt : \"the code of \"");
+    println!("output : \"{}\"", result.text);
+    println!("reason : {:?}", result.finished_reason);
+    println!("\n--- engine metrics ---------------------------------------");
+    println!("{}", metrics.report());
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! End-to-end serving driver (the repo's E2E validation workload):
+//! load the compiled model, serve a batched trace of requests through the
+//! continuous-batching engine under BOTH full attention and Loki, and
+//! report latency/throughput side by side.
+//!
+//!     cargo run --release --example serve_batch -- [--requests 24] [--rate 4]
+//!
+//! The run is recorded in EXPERIMENTS.md §E2E.
+
+use std::sync::mpsc::channel;
+
+use loki::coordinator::request::GenRequest;
+use loki::coordinator::sampler::SampleCfg;
+use loki::coordinator::{Engine, EngineConfig, SchedulerPolicy};
+use loki::data::workload::{Workload, WorkloadCfg};
+use loki::data::TaskSuite;
+use loki::model::ByteTokenizer;
+use loki::runtime::{DecodeVariant, RuntimeService};
+use loki::util::args::Args;
+use loki::util::artifacts_dir;
+use loki::util::json::{self, Json};
+
+fn run_trace(
+    service: &RuntimeService,
+    label: &str,
+    variant: DecodeVariant,
+    wl: &Workload,
+) -> anyhow::Result<Json> {
+    let cfg = EngineConfig {
+        variant,
+        scheduler: SchedulerPolicy::PrefillFirst,
+        ..Default::default()
+    };
+    let engine = Engine::new(service, cfg.clone());
+    let (tx, rx) = Engine::channel(&cfg);
+    let tok = ByteTokenizer;
+    let items = wl.items.clone();
+    let (reply, results) = channel();
+    let submitter = std::thread::spawn(move || {
+        let start = std::time::Instant::now();
+        for (i, item) in items.iter().enumerate() {
+            let wait = item.arrival_s - start.elapsed().as_secs_f64();
+            if wait > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+            }
+            tx.send(GenRequest {
+                id: i as u64,
+                prompt: tok.encode(&item.prompt),
+                max_new_tokens: item.max_new_tokens,
+                stop_token: None,
+                sampling: SampleCfg::greedy(),
+                reply: reply.clone(),
+            })
+            .expect("engine queue");
+        }
+    });
+    let metrics = engine.run(rx)?;
+    submitter.join().unwrap();
+    let n_results = results.try_iter().count();
+
+    println!("\n=== {label} ===============================================");
+    println!("{}", metrics.report());
+    assert_eq!(n_results as u64, metrics.requests_done);
+    Ok(json::obj(vec![
+        ("label", json::s(label)),
+        ("requests", json::num(metrics.requests_done as f64)),
+        ("tokens", json::num(metrics.tokens_generated as f64)),
+        ("throughput_tok_s", json::num(metrics.throughput_tok_s())),
+        ("ttft_p50_s", json::num(metrics.ttft.percentile(50.0))),
+        ("ttft_p95_s", json::num(metrics.ttft.percentile(95.0))),
+        ("e2e_p50_s", json::num(metrics.e2e_latency.percentile(50.0))),
+        ("e2e_p95_s", json::num(metrics.e2e_latency.percentile(95.0))),
+        ("step_p50_s", json::num(metrics.decode_step_time.percentile(50.0))),
+        ("injections", json::num(metrics.injections as f64)),
+    ]))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let service = RuntimeService::start(artifacts_dir())?;
+    let suite = TaskSuite::load(&artifacts_dir())?;
+    let wl = Workload::generate(
+        &WorkloadCfg {
+            n_requests: args.usize_or("requests", 24),
+            rate: args.f64_or("rate", 0.0),
+            burst_p: args.f64_or("burst", 0.0),
+            prompt_len: (48, 220),
+            gen_len: (12, 48),
+            seed: 7,
+        },
+        &suite.fillers,
+    );
+    println!(
+        "trace: {} requests over {:.1}s (rate {})",
+        wl.items.len(),
+        wl.duration_s(),
+        args.f64_or("rate", 0.0)
+    );
+
+    let man = &service.manifest;
+    let runs = vec![
+        ("full", DecodeVariant::Full),
+        ("loki k=0.25 d=0.25", DecodeVariant::loki_fractions(man, 0.25, 0.25)),
+        ("loki k=0.125 d=0.5", DecodeVariant::loki_fractions(man, 0.125, 0.5)),
+    ];
+    let mut reports = Vec::new();
+    for (label, variant) in runs {
+        reports.push(run_trace(&service, label, variant, &wl)?);
+    }
+    let out = json::arr(reports);
+    let path = loki::util::results_dir().join("e2e_serving.json");
+    std::fs::write(&path, out.to_string())?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

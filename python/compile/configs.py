@@ -1,0 +1,106 @@
+"""Model / training / artifact configuration for the Loki reproduction.
+
+Everything here is build-time only: the Rust coordinator reads the exported
+``artifacts/manifest.json`` and never imports this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """A llama-style decoder-only transformer.
+
+    head_dim (D) is the dimension Loki's PCA analysis applies to; we keep
+    D=64 so that the paper's D=128 rank phenomenology scales down 2x.
+    """
+
+    name: str = "loki-small"
+    vocab_size: int = 256  # byte-level
+    d_model: int = 192
+    n_layers: int = 4
+    n_heads: int = 3
+    head_dim: int = 64
+    d_ff: int = 512
+    max_len: int = 768  # static KV-cache length (M)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def qkv_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    def param_count(self) -> int:
+        d, v, f = self.d_model, self.vocab_size, self.d_ff
+        per_layer = 4 * d * self.qkv_dim + 3 * d * f + 2 * d
+        return v * d + self.n_layers * per_layer + d + d * v
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    seed: int = 0
+    seq_len: int = 384
+    batch_size: int = 8
+    # ~2 epochs over the 1.8M-token corpus: enough for fact memorization
+    # and prompt-copy/induction circuits (400 steps ≈ 0.7 epochs learned
+    # the templates but not retrieval — see EXPERIMENTS.md notes).
+    steps: int = 900
+    lr: float = 3e-3
+    warmup: int = 40
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    log_every: int = 20
+
+
+def _env_int(name: str, default: int) -> int:
+    return int(os.environ.get(name, default))
+
+
+def main_model() -> ModelConfig:
+    return ModelConfig()
+
+
+def train_config() -> TrainConfig:
+    """Default training config; LOKI_FAST=1 shrinks everything for CI."""
+    if os.environ.get("LOKI_FAST"):
+        return TrainConfig(steps=_env_int("LOKI_TRAIN_STEPS", 30), seq_len=128, batch_size=4)
+    return TrainConfig(steps=_env_int("LOKI_TRAIN_STEPS", 900))
+
+
+def model_family() -> List[Tuple[ModelConfig, TrainConfig]]:
+    """The model family for the Fig-1 style cross-model rank analysis.
+
+    Includes a random-init control (steps=0) — keys from an *untrained*
+    model should sit much closer to full rank, strengthening the paper's
+    claim that training induces the low-dimensional structure.
+    """
+    fast = bool(os.environ.get("LOKI_FAST"))
+    steps = 120 if not fast else 10
+    seq = 256 if not fast else 128
+    base = TrainConfig(steps=steps, seq_len=seq, batch_size=8 if not fast else 4)
+    fam = [
+        (ModelConfig(name="loki-tiny", d_model=128, n_layers=2, n_heads=2, d_ff=384), base),
+        (ModelConfig(name="loki-wide", d_model=256, n_layers=2, n_heads=4, d_ff=512), base),
+        (ModelConfig(name="loki-deep", d_model=128, n_layers=6, n_heads=2, d_ff=384), base),
+        (
+            ModelConfig(name="loki-random", d_model=192, n_layers=4, n_heads=3, d_ff=512),
+            dataclasses.replace(base, steps=0),
+        ),
+    ]
+    return fam
+
+
+# Batch-size buckets the coordinator schedules into; one compiled executable
+# per (graph, bucket).
+BATCH_BUCKETS = (1, 8)
+# Prefill prompt-length buckets (right-padded; per-lane true length is a
+# runtime input).
+PREFILL_BUCKETS = (128, 512)
+
+CALIBRATION_DATASETS = ("wiki", "web", "book")
+
+ARTIFACT_VERSION = 4

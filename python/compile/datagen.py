@@ -1,0 +1,195 @@
+"""Synthetic corpora standing in for WikiText-2 / C4 / BookCorpus.
+
+The paper only needs *distinct* text distributions for its calibration
+generalizability claims (Fig. 6 middle) and *learnable structure* for the
+quality experiments, so we generate three profiles with different word
+banks, sentence statistics and fact densities. Each corpus embeds:
+
+  * fact sentences      — "the code of <name> is <value> ."  → short-task QA
+  * copy drills         — "repeat : <w1> <w2> <w3> ; <w1> <w2> <w3> ."
+  * induction patterns  — "<a> <b> <a> <b> <a> <b> ."
+
+Copy and induction are deliberately attention-bound: degrading the top-k
+selection (low k_f/d_f) measurably breaks them, which is exactly the
+sensitivity axis the paper's downstream tables probe.
+
+Determinism: a local splitmix64 PRNG (no dependence on python's ``random``
+module internals) so corpora are stable across python versions. The Rust
+side never regenerates corpora — it consumes the exported token arrays,
+facts table and filler pool from ``artifacts/``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+MASK64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    """Tiny deterministic PRNG (same algorithm as rust/src/util/rng.rs)."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return z ^ (z >> 31)
+
+    def below(self, n: int) -> int:
+        return self.next_u64() % n
+
+    def choice(self, xs: Sequence):
+        return xs[self.below(len(xs))]
+
+    def uniform(self) -> float:
+        return self.next_u64() / 2**64
+
+
+# --------------------------------------------------------------------------
+# Pseudo-word banks. Each profile uses different syllable inventories, which
+# shifts the byte-level distribution (the only distribution a byte-level
+# model sees).
+# --------------------------------------------------------------------------
+
+_SYLLABLES = {
+    "wiki": ["tor", "ven", "al", "ker", "ion", "sta", "mer", "und", "pol", "gra",
+             "tec", "his", "cen", "der", "min", "qua"],
+    "web": ["zap", "klik", "wub", "go", "yo", "max", "biz", "net", "app", "top",
+            "fun", "hot", "win", "big", "pro", "jet"],
+    "book": ["ael", "mor", "isse", "thal", "orn", "ella", "dran", "eth", "lume",
+             "sor", "ath", "wyn", "ond", "ira", "ves", "ulm"],
+}
+
+
+def make_words(profile: str, count: int, rng: SplitMix64, min_syl=2, max_syl=3) -> List[str]:
+    syl = _SYLLABLES[profile]
+    words, seen = [], set()
+    while len(words) < count:
+        n = min_syl + rng.below(max_syl - min_syl + 1)
+        w = "".join(rng.choice(syl) for _ in range(n))
+        if w not in seen:
+            seen.add(w)
+            words.append(w)
+    return words
+
+
+@dataclasses.dataclass
+class Fact:
+    name: str
+    value: str
+
+    def sentence(self) -> str:
+        return f"the code of {self.name} is {self.value} ."
+
+    def prompt(self) -> str:
+        return f"the code of {self.name} is"
+
+
+@dataclasses.dataclass
+class CorpusSpec:
+    profile: str
+    n_words: int
+    n_facts: int
+    fact_repeat: int        # how many times each fact appears
+    sent_len: Tuple[int, int]  # (min, max) words per filler sentence
+    copy_frac: float        # fraction of sentences that are copy drills
+    induction_frac: float
+    doc_sents: Tuple[int, int]
+
+
+SPECS: Dict[str, CorpusSpec] = {
+    "wiki": CorpusSpec("wiki", 320, 192, 24, (6, 12), 0.12, 0.10, (8, 16)),
+    "web": CorpusSpec("web", 256, 192, 24, (3, 7), 0.16, 0.12, (4, 10)),
+    "book": CorpusSpec("book", 384, 192, 24, (9, 18), 0.08, 0.08, (12, 24)),
+}
+
+# Facts are SHARED across profiles (same name->value mapping) so that a model
+# trained on one profile can be asked about them in any eval context, and so
+# the calibration-dataset sweep does not change task answers.
+_FACT_SEED = 0xFAC75EED
+
+
+def make_facts(n: int = 192) -> List[Fact]:
+    rng = SplitMix64(_FACT_SEED)
+    names = make_words("book", n, rng, 2, 3)
+    values = make_words("wiki", n, rng, 2, 2)
+    return [Fact(names[i], values[i]) for i in range(n)]
+
+
+def filler_sentence(words: List[str], spec: CorpusSpec, rng: SplitMix64) -> str:
+    n = spec.sent_len[0] + rng.below(spec.sent_len[1] - spec.sent_len[0] + 1)
+    return " ".join(rng.choice(words) for _ in range(n)) + " ."
+
+
+def copy_drill(words: List[str], rng: SplitMix64) -> str:
+    k = 3 + rng.below(3)
+    ws = [rng.choice(words) for _ in range(k)]
+    return "repeat : " + " ".join(ws) + " ; " + " ".join(ws) + " ."
+
+
+def induction_pattern(words: List[str], rng: SplitMix64) -> str:
+    a, b = rng.choice(words), rng.choice(words)
+    reps = 3 + rng.below(2)
+    return " ".join(f"{a} {b}" for _ in range(reps)) + " ."
+
+
+def build_corpus(profile: str, seed: int, target_bytes: int) -> Tuple[bytes, List[Fact], List[str]]:
+    """Returns (corpus bytes, facts, filler sentence pool)."""
+    spec = SPECS[profile]
+    rng = SplitMix64(seed ^ hash(profile) & MASK64)
+    words = make_words(profile, spec.n_words, rng)
+    facts = make_facts(spec.n_facts)
+
+    # Pre-plan fact mentions so each fact is seen ~fact_repeat times.
+    fact_queue: List[str] = []
+    for f in facts:
+        fact_queue.extend([f.sentence()] * spec.fact_repeat)
+    # Shuffle (Fisher-Yates).
+    for i in range(len(fact_queue) - 1, 0, -1):
+        j = rng.below(i + 1)
+        fact_queue[i], fact_queue[j] = fact_queue[j], fact_queue[i]
+
+    pool: List[str] = []
+    out: List[str] = []
+    size = 0
+    qi = 0
+    while size < target_bytes:
+        n_sents = spec.doc_sents[0] + rng.below(spec.doc_sents[1] - spec.doc_sents[0] + 1)
+        doc: List[str] = []
+        for _ in range(n_sents):
+            u = rng.uniform()
+            if u < spec.copy_frac:
+                s = copy_drill(words, rng)
+            elif u < spec.copy_frac + spec.induction_frac:
+                s = induction_pattern(words, rng)
+            elif qi < len(fact_queue) and u < spec.copy_frac + spec.induction_frac + 0.15:
+                s = fact_queue[qi]
+                qi += 1
+            else:
+                s = filler_sentence(words, spec, rng)
+                if len(pool) < 4096:
+                    pool.append(s)
+            doc.append(s)
+        text = " ".join(doc) + "\n"
+        out.append(text)
+        size += len(text)
+    # If facts were not exhausted (small corpus), append the remainder so
+    # every fact is in-distribution.
+    if qi < len(fact_queue):
+        rest = " ".join(fact_queue[qi:]) + "\n"
+        out.append(rest)
+    return "".join(out).encode("utf-8"), facts, pool
+
+
+def tokenize(data: bytes) -> List[int]:
+    """Byte-level tokenizer (identity). Mirrors rust/src/model/tokenizer.rs."""
+    return list(data)
+
+
+def detokenize(tokens: Sequence[int]) -> str:
+    return bytes(int(t) & 0xFF for t in tokens).decode("utf-8", errors="replace")

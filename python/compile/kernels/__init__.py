@@ -1,0 +1,12 @@
+"""L1 Pallas kernels for Loki decode attention (build-time only).
+
+Exports:
+  loki_scores          — 2-D-grid approximate/exact score kernel
+  flash_decode_attend  — single-query flash attention over masked slots
+  sparq_style_scores   — 1-D-grid Appendix-C baseline
+  ref                  — pure-jnp oracles
+"""
+
+from .loki_attn import flash_decode_attend, loki_scores  # noqa: F401
+from .sparq_style import sparq_style_scores  # noqa: F401
+from . import ref  # noqa: F401

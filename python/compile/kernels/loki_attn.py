@@ -1,0 +1,179 @@
+"""L1 Pallas kernels for Loki decode attention.
+
+Two kernels make up the hot path at generation step S:
+
+  * ``loki_scores``    — approximate scores q̂[:, :d] · K̂[:, :d]ᵀ over the
+    whole cache. The PCA basis orders components, so the d-dim slice is the
+    *leading, contiguous* part of the feature axis: the HBM→VMEM schedule
+    streams only ``block_m × d`` tiles (this contiguity is Loki's edge over
+    SparQ, which must gather arbitrary feature columns). The 2-D grid
+    (batch·head × cache blocks) is our Appendix-C fix to SparQ's 1-D grid.
+  * ``flash_decode_attend`` — exact attention over the selected slots:
+    single-query flash-style online softmax, one pass over cache blocks,
+    running (m, l, acc) carried in VMEM scratch. The same kernel serves
+    full attention (mask = live slots) and Loki's sparse step (mask = live
+    ∧ selected): masked blocks still stream on CPU-interpret, but on a real
+    TPU the BlockSpec index map would skip non-selected blocks — the
+    bandwidth claim of the paper. See DESIGN.md §3.
+
+interpret=True throughout: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers the kernels into plain HLO so the Rust
+runtime can run them. Correctness vs. kernels/ref.py is enforced by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+# Cache-block width. On a real TPU this is the VMEM tiling knob (128 keeps
+# tile + query + partials inside VMEM); under CPU-interpret every grid step
+# executes *sequentially* inside an XLA while-loop, so the AOT path lowers
+# with block_m = M (one block per lane) — set via the block_m argument by
+# aot.py. See EXPERIMENTS.md §Perf for the measured effect.
+DEFAULT_BLOCK_M = 128
+
+
+def _score_kernel(q_ref, k_ref, valid_ref, o_ref, *, scale):
+    # Blocks: q [1,1,D], k [1,1,Mb,D], valid [1,1,Mb], o [1,1,Mb].
+    q = q_ref[0, 0]               # [D]
+    k = k_ref[0, 0]               # [Mb, D]
+    s = jnp.dot(k, q) * scale     # [Mb]
+    v = valid_ref[0, 0]
+    o_ref[0, 0] = jnp.where(v, s, NEG_INF)
+
+
+def _score_kernel_whole(q_ref, k_ref, valid_ref, o_ref, *, scale):
+    # Coarse single-step grid for CPU-interpret AOT lowering: one fused
+    # einsum instead of B·H·(M/block) sequential while-loop iterations
+    # (each iteration costs ~1.5 ms of dispatch overhead on the CPU PJRT
+    # runtime — see EXPERIMENTS.md §Perf).
+    s = jnp.einsum("bhmd,bhd->bhm", k_ref[...], q_ref[...]) * scale
+    o_ref[...] = jnp.where(valid_ref[...], s, NEG_INF)
+
+
+def loki_scores(q, k_cache, valid, *, scale, block_m=None,
+                interpret: bool = True):
+    """Approximate (or exact, if q is unmasked) scores for one decode step.
+
+    q:       [B, H, D] — caller applies the PCA rotation and the d-mask
+    k_cache: [B, H, M, D] (rotated keys)
+    valid:   [B, H, M] bool (per-head: H2O's heavy-hitter sets differ by head)
+    returns  [B, H, M] float32, NEG_INF on dead slots
+
+    block_m=None lowers the coarse single-step variant (CPU-interpret
+    serving artifacts); an explicit block_m lowers the TPU-shaped 2-D grid.
+    """
+    B, H, D = q.shape
+    M = k_cache.shape[2]
+    if block_m is None:
+        return pl.pallas_call(
+            functools.partial(_score_kernel_whole, scale=scale),
+            out_shape=jax.ShapeDtypeStruct((B, H, M), jnp.float32),
+            interpret=interpret,
+        )(q, k_cache, valid)
+    if M % block_m != 0:
+        block_m = M  # single block per lane for ragged caches
+    grid = (B, H, M // block_m)
+    return pl.pallas_call(
+        functools.partial(_score_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda b, h, m: (b, h, 0)),
+            pl.BlockSpec((1, 1, block_m, D), lambda b, h, m: (b, h, m, 0)),
+            pl.BlockSpec((1, 1, block_m), lambda b, h, m: (b, h, m)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_m), lambda b, h, m: (b, h, m)),
+        out_shape=jax.ShapeDtypeStruct((B, H, M), jnp.float32),
+        interpret=interpret,
+    )(q, k_cache, valid)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, scale):
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                # [D]
+    k = k_ref[0, 0]                # [Mb, D]
+    v = v_ref[0, 0]                # [Mb, D]
+    mask = mask_ref[0, 0]          # [Mb] bool
+    s = jnp.dot(k, q) * scale      # [Mb]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[0]
+    l_prev = l_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    # exp(NEG_INF - m_new) underflows to 0, so dead slots contribute nothing.
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(p, v)
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+
+    @pl.when(i == pl.num_programs(2) - 1)
+    def _fini():
+        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[0], 1e-30)
+
+
+def _attend_kernel_whole(q_ref, k_ref, v_ref, mask_ref, o_ref, *, scale):
+    # Coarse single-step variant (see _score_kernel_whole).
+    s = jnp.einsum("bhmd,bhd->bhm", k_ref[...], q_ref[...]) * scale
+    s = jnp.where(mask_ref[...], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p * mask_ref[...].astype(p.dtype)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    o_ref[...] = jnp.einsum("bhm,bhmd->bhd", p, v_ref[...])
+
+
+def flash_decode_attend(q, k, v, mask, *, scale,
+                        block_m=None, interpret: bool = True):
+    """Single-query flash attention over masked cache slots.
+
+    q: [B, H, D]; k, v: [B, H, M, D]; mask: [B, H, M] bool.
+    returns [B, H, D].
+
+    block_m=None lowers the coarse single-step variant (CPU-interpret
+    serving artifacts); an explicit block_m lowers the TPU-shaped
+    flash/online-softmax 2-D grid with VMEM scratch carries.
+    """
+    B, H, D = q.shape
+    M = k.shape[2]
+    if block_m is None:
+        return pl.pallas_call(
+            functools.partial(_attend_kernel_whole, scale=scale),
+            out_shape=jax.ShapeDtypeStruct((B, H, D), jnp.float32),
+            interpret=interpret,
+        )(q, k, v, mask)
+    if M % block_m != 0:
+        block_m = M
+    grid = (B, H, M // block_m)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda b, h, m: (b, h, 0)),
+            pl.BlockSpec((1, 1, block_m, D), lambda b, h, m: (b, h, m, 0)),
+            pl.BlockSpec((1, 1, block_m, D), lambda b, h, m: (b, h, m, 0)),
+            pl.BlockSpec((1, 1, block_m), lambda b, h, m: (b, h, m)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, h, m: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),   # running max  m
+            pltpu.VMEM((1,), jnp.float32),   # running norm l
+            pltpu.VMEM((D,), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v, mask)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package
+must match its oracle to float32 tolerance (pytest enforces it, including
+hypothesis-driven shape sweeps). They are also the "vanilla attention"
+semantics the Rust attnsim substrate mirrors.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def score_ref(q, k_cache, valid, scale):
+    """Masked dot-product scores for a single decode step.
+
+    q:       [B, H, D]  (already PCA-rotated and d-masked by the caller)
+    k_cache: [B, H, M, D]
+    valid:   [B, H, M] bool — True for live cache slots
+    returns  [B, H, M]
+    """
+    s = jnp.einsum("bhd,bhmd->bhm", q, k_cache) * scale
+    return jnp.where(valid, s, NEG_INF)
+
+
+def attend_ref(q, k, v, valid, scale):
+    """Single-query softmax attention with slot masking.
+
+    q: [B, H, D]; k, v: [B, H, M, D]; valid: [B, H, M] bool
+    returns [B, H, D] and the post-softmax probabilities [B, H, M].
+    """
+    s = jnp.einsum("bhd,bhmd->bhm", q, k) * scale
+    s = jnp.where(valid, s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p * valid.astype(p.dtype)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    p = p / denom
+    out = jnp.einsum("bhm,bhmd->bhd", p, v)
+    return out, p
+
+
+def loki_select_ref(approx_scores, j_sel):
+    """Rank slots by approximate score; True for the top-j_sel slots.
+
+    approx_scores: [B, H, M] (masked with NEG_INF on dead slots)
+    j_sel: scalar int (dynamic)
+    returns bool [B, H, M] selection mask.
+    """
+    order = jnp.argsort(-approx_scores, axis=-1)
+    ranks = jnp.argsort(order, axis=-1)
+    return ranks < j_sel

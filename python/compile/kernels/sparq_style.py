@@ -1,0 +1,53 @@
+"""Appendix-C structural baseline: SparQ-style 1-D-parallel score kernel.
+
+The SparQ kernels (Ribar et al., 2023) parallelize the m×k · k×n score
+matmul only along the *m* dimension, which in decode attention is
+proportional to batch·heads — tiny at serving batch sizes, so the GPU (or
+here, the grid) is starved. Loki's Appendix C adds the n (sequence)
+dimension to the grid and handles non-power-of-2 cache lengths; Figure 16
+shows 2–3× gains at batch 1.
+
+This module is the 1-D twin of ``loki_attn.loki_scores`` (identical
+numerics, grid = (B·H,) instead of (B, H, M/block)). The wall-clock
+comparison at real sizes is run in the Rust substrate
+(rust/src/linalg/matmul.rs: ThreadedMatmul1D vs ThreadedMatmul2D,
+``cargo bench --bench kernel_1d_vs_2d``); this kernel exists so the
+structural difference is also visible — and tested — at the Pallas layer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _score_kernel_1d(q_ref, k_ref, valid_ref, o_ref, *, scale):
+    # One grid step owns a whole (head × cache) slab: no sequence-dimension
+    # parallelism — exactly SparQ's limitation.
+    q = q_ref[0, 0]                 # [D]
+    k = k_ref[0, 0]                 # [M, D]
+    s = jnp.dot(k, q) * scale       # [M]
+    o_ref[0, 0] = jnp.where(valid_ref[0, 0], s, NEG_INF)
+
+
+def sparq_style_scores(q, k_cache, valid, *, scale, interpret: bool = True):
+    """Same contract as loki_attn.loki_scores, 1-D grid (B, H)."""
+    B, H, D = q.shape
+    M = k_cache.shape[2]
+    return pl.pallas_call(
+        functools.partial(_score_kernel_1d, scale=scale),
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1, 1, M, D), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, M), lambda b, h: (b, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, M), lambda b, h: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, M), jnp.float32),
+        interpret=interpret,
+    )(q, k_cache, valid)

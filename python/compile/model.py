@@ -1,0 +1,410 @@
+"""L2: llama-style decoder-only transformer in pure JAX.
+
+Build-time only. Three entry-point families, all of which lower to HLO text
+for the Rust runtime (see aot.py):
+
+  * ``train_forward`` / ``loss_fn``    — full causal attention, no cache
+    (used by train.py; also the perplexity oracle in tests).
+  * ``prefill``                        — process a (right-padded) prompt
+    batch, emit the *PCA-rotated* KV cache, the H2O score accumulator and
+    last-position logits.
+  * ``decode_full / decode_loki / decode_h2o / decode_pcaattn``
+    — one generation step over the static-shape cache. Loki's knobs are
+    **runtime inputs**: ``d_mask`` ([L, D] 0/1 per-layer principal-component
+    mask — equivalent to slicing the leading d components since PCA orders
+    them) and ``j_sel`` (number of selected slots). One compiled graph
+    therefore serves the entire (k_f, d_f) sweep, the variable-d_f policy
+    (Fig. 15) and — with d_mask = 1 — the Exact-TopK baseline.
+
+Cache layout (static shapes; M = cfg.max_len):
+  kc, vc : [L, B, H, M, Dh]   — kc holds K̂ = RoPE(K) · P (rotated keys;
+                                 exactness per Lemma 4.1, P orthogonal)
+  acc    : [L, B, H, M]       — accumulated attention mass (H2O state)
+  cache_len : [B] int32       — live slots per lane (continuous batching:
+                                 lanes advance independently)
+
+The decode attention hot path calls the L1 Pallas kernels
+(kernels.loki_scores / kernels.flash_decode_attend).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels import flash_decode_attend, loki_scores
+
+NEG_INF = -1e30
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    """Canonical parameter order — the runtime manifest contract."""
+    names = ["embed"]
+    for i in range(cfg.n_layers):
+        p = f"l{i:02d}"
+        names += [f"{p}.norm1", f"{p}.wq", f"{p}.wk", f"{p}.wv", f"{p}.wo",
+                  f"{p}.norm2", f"{p}.w1", f"{p}.w2", f"{p}.w3"]
+    names += ["norm_f", "unembed"]
+    return names
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    rng = np.random.default_rng(seed)
+    d, qkv, f, v = cfg.d_model, cfg.qkv_dim, cfg.d_ff, cfg.vocab_size
+
+    def nrm(shape, scale):
+        return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+    params: Dict[str, jnp.ndarray] = {"embed": nrm((v, d), 0.02)}
+    for i in range(cfg.n_layers):
+        p = f"l{i:02d}"
+        params[f"{p}.norm1"] = jnp.ones((d,), jnp.float32)
+        params[f"{p}.wq"] = nrm((d, qkv), d ** -0.5)
+        params[f"{p}.wk"] = nrm((d, qkv), d ** -0.5)
+        params[f"{p}.wv"] = nrm((d, qkv), d ** -0.5)
+        params[f"{p}.wo"] = nrm((qkv, d), (2 * qkv * cfg.n_layers) ** -0.5)
+        params[f"{p}.norm2"] = jnp.ones((d,), jnp.float32)
+        params[f"{p}.w1"] = nrm((d, f), d ** -0.5)
+        params[f"{p}.w2"] = nrm((f, d), (2 * f * cfg.n_layers) ** -0.5)
+        params[f"{p}.w3"] = nrm((d, f), d ** -0.5)
+    params["norm_f"] = jnp.ones((d,), jnp.float32)
+    params["unembed"] = nrm((d, v), d ** -0.5)
+    return params
+
+
+def params_to_tuple(cfg: ModelConfig, params: Dict[str, jnp.ndarray]):
+    return tuple(params[n] for n in param_names(cfg))
+
+
+def tuple_to_params(cfg: ModelConfig, tup) -> Dict[str, jnp.ndarray]:
+    return dict(zip(param_names(cfg), tup))
+
+
+# --------------------------------------------------------------------------
+# Primitives
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x, g, eps):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def rope_angles(cfg: ModelConfig, positions):
+    """positions [...,] -> (cos, sin) with trailing dim Dh/2."""
+    half = cfg.head_dim // 2
+    inv = cfg.rope_theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., Dh]; cos/sin broadcastable to [..., Dh/2]. Rotate-half form."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(x, w1, w2, w3):
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def split_heads(x, n_heads, head_dim):
+    # [..., H*Dh] -> [..., H, Dh] then move H before sequence axes as needed
+    return x.reshape(x.shape[:-1] + (n_heads, head_dim))
+
+
+# --------------------------------------------------------------------------
+# Training / full-sequence forward (no cache)
+# --------------------------------------------------------------------------
+
+
+def train_forward(cfg: ModelConfig, params: Dict[str, jnp.ndarray], tokens):
+    """tokens [B, T] -> logits [B, T, V]. Plain causal attention."""
+    B, T = tokens.shape
+    x = params["embed"][tokens]
+    pos = jnp.arange(T)
+    cos, sin = rope_angles(cfg, pos)          # [T, Dh/2]
+    causal = jnp.tril(jnp.ones((T, T), bool))
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    for i in range(cfg.n_layers):
+        p = f"l{i:02d}"
+        h = rmsnorm(x, params[f"{p}.norm1"], cfg.norm_eps)
+        q = split_heads(h @ params[f"{p}.wq"], cfg.n_heads, cfg.head_dim)
+        k = split_heads(h @ params[f"{p}.wk"], cfg.n_heads, cfg.head_dim)
+        v = split_heads(h @ params[f"{p}.wv"], cfg.n_heads, cfg.head_dim)
+        q = apply_rope(q, cos[:, None, :], sin[:, None, :])
+        k = apply_rope(k, cos[:, None, :], sin[:, None, :])
+        s = jnp.einsum("bihd,bjhd->bhij", q, k) * scale
+        s = jnp.where(causal[None, None], s, NEG_INF)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhij,bjhd->bihd", a, v).reshape(B, T, cfg.qkv_dim)
+        x = x + o @ params[f"{p}.wo"]
+        h = rmsnorm(x, params[f"{p}.norm2"], cfg.norm_eps)
+        x = x + swiglu(h, params[f"{p}.w1"], params[f"{p}.w2"], params[f"{p}.w3"])
+    x = rmsnorm(x, params["norm_f"], cfg.norm_eps)
+    return x @ params["unembed"]
+
+
+def loss_fn(cfg: ModelConfig, params, tokens):
+    """Next-token cross entropy; tokens [B, T+1]."""
+    logits = train_forward(cfg, params, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def collect_keys(cfg: ModelConfig, params, tokens):
+    """Forward pass that captures per-layer attention tensors.
+
+    Returns dict with stacked [L, B, T, H, Dh] arrays:
+      k_pre, k_post (pre/post-rotary keys), q_pre, q_post, v
+    Used by pca.py for calibration and exported for the Rust-side
+    dimensionality analysis (Figs. 1, 2, 8–13).
+    """
+    B, T = tokens.shape
+    x = params["embed"][tokens]
+    pos = jnp.arange(T)
+    cos, sin = rope_angles(cfg, pos)
+    causal = jnp.tril(jnp.ones((T, T), bool))
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    caps = {n: [] for n in ("k_pre", "k_post", "q_pre", "q_post", "v")}
+    for i in range(cfg.n_layers):
+        p = f"l{i:02d}"
+        h = rmsnorm(x, params[f"{p}.norm1"], cfg.norm_eps)
+        q = split_heads(h @ params[f"{p}.wq"], cfg.n_heads, cfg.head_dim)
+        k = split_heads(h @ params[f"{p}.wk"], cfg.n_heads, cfg.head_dim)
+        v = split_heads(h @ params[f"{p}.wv"], cfg.n_heads, cfg.head_dim)
+        qr = apply_rope(q, cos[:, None, :], sin[:, None, :])
+        kr = apply_rope(k, cos[:, None, :], sin[:, None, :])
+        caps["k_pre"].append(k)
+        caps["k_post"].append(kr)
+        caps["q_pre"].append(q)
+        caps["q_post"].append(qr)
+        caps["v"].append(v)
+        s = jnp.einsum("bihd,bjhd->bhij", qr, kr) * scale
+        s = jnp.where(causal[None, None], s, NEG_INF)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhij,bjhd->bihd", a, v).reshape(B, T, cfg.qkv_dim)
+        x = x + o @ params[f"{p}.wo"]
+        h = rmsnorm(x, params[f"{p}.norm2"], cfg.norm_eps)
+        x = x + swiglu(h, params[f"{p}.w1"], params[f"{p}.w2"], params[f"{p}.w3"])
+    return {n: jnp.stack(v) for n, v in caps.items()}
+
+
+# --------------------------------------------------------------------------
+# Prefill
+# --------------------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, params, proj, tokens, prompt_len):
+    """Process a right-padded prompt batch.
+
+    proj:       [L, H, Dh, Dh] per-(layer, head) orthogonal PCA basis P
+    tokens:     [B, PLEN] int32
+    prompt_len: [B] int32 (true lengths; padded tail is masked out)
+
+    Returns (kc, vc, acc, logits_last):
+      kc, vc [L, B, H, M, Dh] — rotated keys / values, zero beyond the prompt
+      acc    [L, B, H, M]     — column sums of prefill attention (H2O seed)
+      logits_last [B, V]      — logits at each lane's final prompt token
+    """
+    B, T = tokens.shape
+    M = cfg.max_len
+    x = params["embed"][tokens]
+    pos = jnp.arange(T)
+    cos, sin = rope_angles(cfg, pos)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    causal = jnp.tril(jnp.ones((T, T), bool))
+    lane_valid = pos[None, :] < prompt_len[:, None]          # [B, T]
+    attn_mask = causal[None, None] & lane_valid[:, None, None, :]  # [B,1,T,T]
+
+    kcs, vcs, accs = [], [], []
+    for i in range(cfg.n_layers):
+        p = f"l{i:02d}"
+        h = rmsnorm(x, params[f"{p}.norm1"], cfg.norm_eps)
+        q = split_heads(h @ params[f"{p}.wq"], cfg.n_heads, cfg.head_dim)
+        k = split_heads(h @ params[f"{p}.wk"], cfg.n_heads, cfg.head_dim)
+        v = split_heads(h @ params[f"{p}.wv"], cfg.n_heads, cfg.head_dim)
+        q = apply_rope(q, cos[:, None, :], sin[:, None, :])
+        k = apply_rope(k, cos[:, None, :], sin[:, None, :])
+        s = jnp.einsum("bihd,bjhd->bhij", q, k) * scale
+        s = jnp.where(attn_mask, s, NEG_INF)
+        a = jax.nn.softmax(s, axis=-1)
+        a = a * lane_valid[:, None, :, None]  # zero rows of padded queries
+        o = jnp.einsum("bhij,bjhd->bihd", a, v).reshape(B, T, cfg.qkv_dim)
+        x = x + o @ params[f"{p}.wo"]
+        h = rmsnorm(x, params[f"{p}.norm2"], cfg.norm_eps)
+        x = x + swiglu(h, params[f"{p}.w1"], params[f"{p}.w2"], params[f"{p}.w3"])
+
+        # Rotate keys into PCA space and pad out to the cache length.
+        k_hat = jnp.einsum("bjhd,hde->bhje", k, proj[i])      # [B,H,T,Dh]
+        k_hat = k_hat * lane_valid[:, None, :, None]
+        v_t = jnp.transpose(v, (0, 2, 1, 3)) * lane_valid[:, None, :, None]
+        pad = [(0, 0), (0, 0), (0, M - T), (0, 0)]
+        kcs.append(jnp.pad(k_hat, pad))
+        vcs.append(jnp.pad(v_t, pad))
+        acc_l = jnp.sum(a, axis=2)                            # [B, H, T]
+        accs.append(jnp.pad(acc_l, [(0, 0), (0, 0), (0, M - T)]))
+
+    x = rmsnorm(x, params["norm_f"], cfg.norm_eps)
+    logits = x @ params["unembed"]                            # [B, T, V]
+    last = jnp.clip(prompt_len - 1, 0, T - 1)
+    logits_last = jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
+    return jnp.stack(kcs), jnp.stack(vcs), jnp.stack(accs), logits_last
+
+
+# --------------------------------------------------------------------------
+# Decode step (shared skeleton, per-variant attention)
+# --------------------------------------------------------------------------
+
+
+def _rank_mask(scores, j_sel):
+    """True for the j_sel highest-scoring slots (per [B, H] row)."""
+    order = jnp.argsort(-scores, axis=-1)
+    ranks = jnp.argsort(order, axis=-1)
+    return ranks < j_sel
+
+
+def _decode_skeleton(cfg: ModelConfig, params, proj, kc, vc, acc, cache_len,
+                     tokens, attend_fn):
+    """One decode step. attend_fn(layer, q_hat, kc_l, vc_l, acc_l, valid)
+    -> (attn_out [B,H,Dh], acc_l') with valid [B,H,M] the live-slot mask."""
+    B = tokens.shape[0]
+    M = cfg.max_len
+    x = params["embed"][tokens]                               # [B, d]
+    cos, sin = rope_angles(cfg, cache_len)                    # [B, Dh/2]
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    slot = jnp.arange(M)
+    # After appending this token at index cache_len, slots 0..cache_len live.
+    valid2 = slot[None, :] <= cache_len[:, None]              # [B, M]
+    valid = jnp.broadcast_to(valid2[:, None, :], (B, cfg.n_heads, M))
+    write = (slot[None, :] == cache_len[:, None])[:, None, :, None]  # [B,1,M,1]
+
+    new_kc, new_vc, new_acc = [], [], []
+    for i in range(cfg.n_layers):
+        p = f"l{i:02d}"
+        h = rmsnorm(x, params[f"{p}.norm1"], cfg.norm_eps)
+        q = split_heads(h @ params[f"{p}.wq"], cfg.n_heads, cfg.head_dim)
+        k = split_heads(h @ params[f"{p}.wk"], cfg.n_heads, cfg.head_dim)
+        v = split_heads(h @ params[f"{p}.wv"], cfg.n_heads, cfg.head_dim)
+        q = apply_rope(q, cos[:, None, :], sin[:, None, :])   # [B, H, Dh]
+        k = apply_rope(k, cos[:, None, :], sin[:, None, :])
+        q_hat = jnp.einsum("bhd,hde->bhe", q, proj[i])
+        k_hat = jnp.einsum("bhd,hde->bhe", k, proj[i])
+        kc_l = jnp.where(write, k_hat[:, :, None, :], kc[i])  # append
+        vc_l = jnp.where(write, v[:, :, None, :], vc[i])
+        attn, acc_l = attend_fn(i, q_hat, kc_l, vc_l, acc[i], valid, scale)
+        x = x + attn.reshape(B, cfg.qkv_dim) @ params[f"{p}.wo"]
+        h = rmsnorm(x, params[f"{p}.norm2"], cfg.norm_eps)
+        x = x + swiglu(h, params[f"{p}.w1"], params[f"{p}.w2"], params[f"{p}.w3"])
+        new_kc.append(kc_l)
+        new_vc.append(vc_l)
+        new_acc.append(acc_l)
+
+    x = rmsnorm(x, params["norm_f"], cfg.norm_eps)
+    logits = x @ params["unembed"]
+    return logits, jnp.stack(new_kc), jnp.stack(new_vc), jnp.stack(new_acc)
+
+
+def decode_full(cfg: ModelConfig, params, proj, kc, vc, acc, cache_len, tokens):
+    """Vanilla attention over the whole live cache (rotated space — exact
+    by Lemma 4.1). acc passes through untouched."""
+
+    def attend(i, q_hat, kc_l, vc_l, acc_l, valid, scale):
+        out = flash_decode_attend(q_hat, kc_l, vc_l, valid, scale=scale)
+        return out, acc_l
+
+    return _decode_skeleton(cfg, params, proj, kc, vc, acc, cache_len, tokens, attend)
+
+
+def decode_loki(cfg: ModelConfig, params, proj, kc, vc, acc, cache_len, tokens,
+                d_mask, j_sel):
+    """Loki (Algorithm 1): approximate scores on the leading principal
+    components (d_mask), rank, select top-j_sel, exact attention over the
+    selection. d_mask = all-ones turns this graph into the Exact-TopK
+    baseline; j_sel >= M turns it into full attention."""
+
+    def attend(i, q_hat, kc_l, vc_l, acc_l, valid, scale):
+        approx = loki_scores(q_hat * d_mask[i][None, None, :], kc_l, valid,
+                             scale=scale)
+        sel = _rank_mask(approx, j_sel) & valid
+        out = flash_decode_attend(q_hat, kc_l, vc_l, sel, scale=scale)
+        return out, acc_l
+
+    return _decode_skeleton(cfg, params, proj, kc, vc, acc, cache_len, tokens, attend)
+
+
+def decode_h2o(cfg: ModelConfig, params, proj, kc, vc, acc, cache_len, tokens,
+               j_sel):
+    """H2O (Zhang et al.): attend over (heavy hitters ∪ recent window),
+    budget split 50/50 per the authors' recommendation. Emulated as a
+    masking policy over the full cache (eviction without deletion): a slot
+    outside the set accrues no attention mass, so — accumulated scores
+    being monotone — it can never re-enter, matching true eviction.
+    acc is updated with this step's attention probabilities."""
+
+    def attend(i, q_hat, kc_l, vc_l, acc_l, valid, scale):
+        B, H, M = acc_l.shape
+        slot = jnp.arange(M)
+        recent_w = j_sel - j_sel // 2
+        recent = slot[None, :] > (cache_len[:, None] - recent_w)   # [B, M]
+        recent = jnp.broadcast_to(recent[:, None, :], (B, H, M)) & valid
+        hh_scores = jnp.where(valid & ~recent, acc_l, NEG_INF)
+        hh = _rank_mask(hh_scores, j_sel // 2) & valid & ~recent
+        sel = recent | hh
+        s = loki_scores(q_hat, kc_l, sel, scale=scale)
+        p = jax.nn.softmax(s, axis=-1)
+        p = p * sel.astype(p.dtype)
+        p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+        out = flash_decode_attend(q_hat, kc_l, vc_l, sel, scale=scale)
+        return out, acc_l + p
+
+    return _decode_skeleton(cfg, params, proj, kc, vc, acc, cache_len, tokens, attend)
+
+
+def decode_pcaattn(cfg: ModelConfig, params, proj, kc, vc, acc, cache_len,
+                   tokens, d_mask):
+    """Appendix E's PCAAttn: softmax directly over the d-dimensional
+    approximate scores (no top-k rescue). Kept as a compiled variant to
+    reproduce Table 5's failure mode."""
+
+    def attend(i, q_hat, kc_l, vc_l, acc_l, valid, scale):
+        out = flash_decode_attend(q_hat * d_mask[i][None, None, :], kc_l, vc_l,
+                                  valid, scale=scale)
+        return out, acc_l
+
+    return _decode_skeleton(cfg, params, proj, kc, vc, acc, cache_len, tokens, attend)
+
+
+def inject_lane(gang_kc, gang_vc, gang_acc, lane_kc, lane_vc, lane_acc, idx):
+    """Continuous batching support: replace gang lane `idx` (a finished
+    request's slot) with a freshly prefilled single-lane cache.
+
+    gang_*: [L, B, H, M, Dh] / [L, B, H, M]; lane_*: [L, 1, H, M, Dh] /
+    [L, 1, H, M]; idx: scalar int32. Compiled once per batch bucket as
+    `inject_b{B}`; the coordinator calls it between decode iterations.
+    """
+    zero = jnp.int32(0)
+    kc = jax.lax.dynamic_update_slice(gang_kc, lane_kc, (zero, idx, zero, zero, zero))
+    vc = jax.lax.dynamic_update_slice(gang_vc, lane_vc, (zero, idx, zero, zero, zero))
+    acc = jax.lax.dynamic_update_slice(gang_acc, lane_acc, (zero, idx, zero, zero))
+    return kc, vc, acc
+
+
+DECODE_VARIANTS = ("full", "loki", "h2o", "pcaattn")
+
+
+def identity_proj(cfg: ModelConfig) -> jnp.ndarray:
+    eye = jnp.eye(cfg.head_dim, dtype=jnp.float32)
+    return jnp.broadcast_to(eye, (cfg.n_layers, cfg.n_heads, cfg.head_dim, cfg.head_dim))

@@ -1,0 +1,78 @@
+"""PCA calibration of attention keys (Section 3 / Section 4.1 of the paper).
+
+For every (layer, head) we collect keys generated while running the model
+over a calibration corpus, compute the covariance eigendecomposition, and
+keep the full orthogonal basis P (columns = principal components, sorted by
+descending eigenvalue). The runtime stores K̂ = K·P in the KV-cache and
+approximates scores with the leading d columns.
+
+Both pre-rotary and post-rotary keys are calibrated (the paper evaluates
+both as candidate transforms; pre-rotary generalizes better for some
+models). Either basis is *applied* to post-rotary keys at runtime —
+Lemma 4.1 only needs orthogonality, while approximation quality (Lemma 4.2)
+depends on how well the basis matches the runtime key distribution.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from . import model as M
+
+
+def collect_calibration_tensors(cfg: ModelConfig, params, tokens: np.ndarray,
+                                seq_len: int = 256, max_rows: int = 8192,
+                                seed: int = 0) -> Dict[str, np.ndarray]:
+    """Run the model over calibration windows, returning [L, H, N, Dh]
+    arrays for k_pre / k_post / q_pre / q_post / v."""
+    rng = np.random.default_rng(seed)
+    n_batches = max(1, max_rows // (4 * seq_len))
+    outs = {n: [] for n in ("k_pre", "k_post", "q_pre", "q_post", "v")}
+    limit = len(tokens) - seq_len - 1
+    for _ in range(n_batches):
+        idx = rng.integers(0, limit, 4)
+        batch = np.stack([tokens[i:i + seq_len] for i in idx]).astype(np.int32)
+        caps = M.collect_keys(cfg, params, jnp.asarray(batch))
+        for name, arr in caps.items():
+            # [L, B, T, H, Dh] -> [L, H, B*T, Dh]
+            a = np.asarray(arr)
+            L, B, T, H, Dh = a.shape
+            outs[name].append(a.transpose(0, 3, 1, 2, 4).reshape(L, H, B * T, Dh))
+    return {n: np.concatenate(v, axis=2)[:, :, :max_rows] for n, v in outs.items()}
+
+
+def pca_basis(samples: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """samples [L, H, N, Dh] -> (proj [L, H, Dh, Dh], eig [L, H, Dh]).
+
+    proj columns are unit eigenvectors of the key covariance, sorted by
+    descending eigenvalue; eig is normalized to sum to 1 (explained
+    variance). Mirrors rust/src/linalg/pca.rs (cross-validated in tests).
+    """
+    L, H, N, Dh = samples.shape
+    proj = np.zeros((L, H, Dh, Dh), np.float32)
+    eig = np.zeros((L, H, Dh), np.float32)
+    for l in range(L):
+        for h in range(H):
+            x = samples[l, h].astype(np.float64)
+            x = x - x.mean(axis=0, keepdims=True)
+            cov = (x.T @ x) / max(1, N - 1)
+            w, v = np.linalg.eigh(cov)          # ascending
+            order = np.argsort(w)[::-1]
+            w, v = w[order], v[:, order]
+            w = np.maximum(w, 0)
+            tot = w.sum()
+            eig[l, h] = (w / tot if tot > 0 else w).astype(np.float32)
+            proj[l, h] = v.astype(np.float32)
+    return proj, eig
+
+
+def rank_at(eig: np.ndarray, v_pct: float = 90.0) -> np.ndarray:
+    """Eq. 2: min d such that the first d normalized eigenvalues cover v%.
+
+    eig [..., Dh] normalized -> int ranks [...]."""
+    c = np.cumsum(eig, axis=-1)
+    return 1 + np.argmax(c >= v_pct / 100.0 - 1e-12, axis=-1)

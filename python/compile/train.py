@@ -1,0 +1,95 @@
+"""Build-time training loop (hand-rolled Adam; optax is not in the image).
+
+Trains the llama-style model of model.py on a synthetic corpus. Two phases:
+a main phase at TrainConfig.seq_len and a short long-context phase at
+cfg.max_len so RoPE sees the positions the serving cache will use (the
+LongBench-analog tasks decode near max_len).
+
+The loss curve is returned and exported to artifacts/train_log.json — it is
+the end-to-end training evidence recorded in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig, TrainConfig
+from . import model as M
+
+
+def batch_iterator(tokens: np.ndarray, seq_len: int, batch_size: int, seed: int):
+    """Random contiguous windows of seq_len+1 tokens."""
+    rng = np.random.default_rng(seed)
+    n = len(tokens) - seq_len - 1
+    while True:
+        idx = rng.integers(0, n, batch_size)
+        yield np.stack([tokens[i:i + seq_len + 1] for i in idx]).astype(np.int32)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _adam_step(cfg: ModelConfig, params, m, v, t, batch, lr, wd, clip):
+    loss, grads = jax.value_and_grad(lambda p: M.loss_fn(cfg, p, batch))(params)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree_util.tree_leaves(grads)))
+    scale = jnp.minimum(1.0, clip / (gnorm + 1e-9))
+    b1, b2, eps = 0.9, 0.95, 1e-8
+    new_params, new_m, new_v = {}, {}, {}
+    for key in params:
+        g = grads[key] * scale
+        m_k = b1 * m[key] + (1 - b1) * g
+        v_k = b2 * v[key] + (1 - b2) * g * g
+        mhat = m_k / (1 - b1 ** t)
+        vhat = v_k / (1 - b2 ** t)
+        upd = mhat / (jnp.sqrt(vhat) + eps)
+        decay = 0.0 if params[key].ndim == 1 else wd
+        new_params[key] = params[key] - lr * (upd + decay * params[key])
+        new_m[key] = m_k
+        new_v[key] = v_k
+    return new_params, new_m, new_v, loss, gnorm
+
+
+def train(cfg: ModelConfig, tcfg: TrainConfig, corpus_tokens: np.ndarray,
+          verbose: bool = True) -> Tuple[Dict[str, jnp.ndarray], List[dict]]:
+    """Returns (params, loss log). steps == 0 returns the random init
+    (the 'loki-random' control model in the Fig-1 family)."""
+    params = M.init_params(cfg, tcfg.seed)
+    if tcfg.steps == 0:
+        return params, []
+    m = {k: jnp.zeros_like(p) for k, p in params.items()}
+    v = {k: jnp.zeros_like(p) for k, p in params.items()}
+
+    # Phase split: last 15% of steps at the full cache length so positional
+    # embeddings cover serving-time positions.
+    long_steps = max(1, tcfg.steps * 15 // 100)
+    main_steps = tcfg.steps - long_steps
+    long_bs = max(1, tcfg.batch_size // 4)
+    it_main = batch_iterator(corpus_tokens, tcfg.seq_len, tcfg.batch_size, tcfg.seed + 1)
+    it_long = batch_iterator(corpus_tokens, min(cfg.max_len, len(corpus_tokens) // 2 - 2),
+                             long_bs, tcfg.seed + 2)
+
+    log: List[dict] = []
+    t0 = time.time()
+    for step in range(1, tcfg.steps + 1):
+        warm = min(1.0, step / max(1, tcfg.warmup))
+        # Cosine decay after warmup.
+        prog = max(0.0, (step - tcfg.warmup) / max(1, tcfg.steps - tcfg.warmup))
+        lr = tcfg.lr * warm * (0.5 * (1 + np.cos(np.pi * prog)))
+        batch = next(it_main) if step <= main_steps else next(it_long)
+        params, m, v, loss, gnorm = _adam_step(
+            cfg, params, m, v, step, jnp.asarray(batch), lr, tcfg.weight_decay,
+            tcfg.grad_clip)
+        if step % tcfg.log_every == 0 or step == 1 or step == tcfg.steps:
+            rec = {"step": step, "loss": float(loss), "lr": float(lr),
+                   "grad_norm": float(gnorm), "wall_s": round(time.time() - t0, 1),
+                   "phase": "main" if step <= main_steps else "long"}
+            log.append(rec)
+            if verbose:
+                print(f"[train {cfg.name}] step {step:4d} loss {rec['loss']:.4f} "
+                      f"lr {lr:.2e} |g| {rec['grad_norm']:.2f} ({rec['wall_s']}s)",
+                      flush=True)
+    return params, log

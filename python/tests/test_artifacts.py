@@ -1,0 +1,92 @@
+"""Artifact-contract tests: if `make artifacts` has run, the manifest and
+npz files must satisfy the invariants the Rust runtime depends on."""
+
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+ART = Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ART / "manifest.json").exists(), reason="artifacts not built")
+
+
+def manifest():
+    return json.loads((ART / "manifest.json").read_text())
+
+
+def test_manifest_lists_existing_files():
+    m = manifest()
+    for g in m["graphs"].values():
+        assert (ART / g["file"]).exists(), g["file"]
+    assert (ART / m["weights"]).exists()
+    for f in m["pca"].values():
+        assert (ART / f).exists()
+    assert m["default_pca"] in m["pca"]
+
+
+def test_graph_io_orders():
+    m = manifest()
+    pn = m["param_names"]
+    for b in m["batch_buckets"]:
+        g = m["graphs"][f"decode_loki_b{b}"]
+        assert g["inputs"][:len(pn)] == [f"params:{n}" for n in pn]
+        assert g["inputs"][-2:] == ["d_mask", "j_sel"]
+        assert g["outputs"] == ["logits", "kc", "vc", "acc"]
+        inj = m["graphs"][f"inject_b{b}"]
+        assert inj["outputs"] == ["kc", "vc", "acc"]
+
+
+def test_weights_match_param_names_and_dtype():
+    m = manifest()
+    z = np.load(ART / m["weights"])
+    assert sorted(z.files) == sorted(m["param_names"])
+    for n in z.files:
+        assert z[n].dtype == np.float32, n
+    mdl = m["model"]
+    assert z["embed"].shape == (mdl["vocab_size"], mdl["d_model"])
+
+
+def test_pca_projections_are_orthogonal():
+    m = manifest()
+    z = np.load(ART / m["pca"][m["default_pca"]])
+    proj, eig = z["proj"], z["eig"]
+    L, H, D, _ = proj.shape
+    mdl = m["model"]
+    assert (L, H, D) == (mdl["n_layers"], mdl["n_heads"], mdl["head_dim"])
+    for l in range(L):
+        for h in range(H):
+            p = proj[l, h]
+            np.testing.assert_allclose(p.T @ p, np.eye(D), atol=1e-3)
+    np.testing.assert_allclose(eig.sum(axis=-1), 1.0, atol=1e-3)
+    assert (np.diff(eig, axis=-1) <= 1e-6).all()
+
+
+def test_eval_docs_within_vocab():
+    m = manifest()
+    for prof in m["calibration_datasets"]:
+        z = np.load(ART / f"eval_{prof}.npz")
+        t = z["tokens"]
+        assert t.ndim == 2
+        assert t.min() >= 0 and t.max() < m["model"]["vocab_size"]
+
+
+def test_keys_dump_shapes():
+    m = manifest()
+    mdl = m["model"]
+    z = np.load(ART / "keys_wiki.npz")
+    for kind in ["k_pre", "k_post", "q_pre", "q_post", "v"]:
+        a = z[kind]
+        assert a.shape[0] == mdl["n_layers"]
+        assert a.shape[1] == mdl["n_heads"]
+        assert a.shape[3] == mdl["head_dim"]
+        assert np.isfinite(a).all()
+
+
+def test_hlo_text_parses_as_text():
+    m = manifest()
+    g = m["graphs"]["decode_full_b1"]
+    head = (ART / g["file"]).read_text()[:200]
+    assert head.startswith("HloModule"), head

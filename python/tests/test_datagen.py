@@ -1,0 +1,62 @@
+"""Corpus generator determinism and structure (the Rust side consumes
+these artifacts; the SplitMix64 vector is also the cross-language
+reference)."""
+
+import numpy as np
+
+from compile import datagen
+
+
+def test_splitmix_reference_vector():
+    # The same values are asserted in rust/src/util/rng.rs.
+    r = datagen.SplitMix64(42)
+    assert [r.next_u64() for _ in range(4)] == [
+        13679457532755275413,
+        2949826092126892291,
+        5139283748462763858,
+        6349198060258255764,
+    ]
+
+
+def test_corpus_is_deterministic():
+    a, facts_a, pool_a = datagen.build_corpus("wiki", seed=7, target_bytes=50_000)
+    b, facts_b, pool_b = datagen.build_corpus("wiki", seed=7, target_bytes=50_000)
+    assert a == b
+    assert [f.name for f in facts_a] == [f.name for f in facts_b]
+    assert pool_a == pool_b
+
+
+def test_profiles_differ():
+    wiki, _, _ = datagen.build_corpus("wiki", seed=7, target_bytes=30_000)
+    web, _, _ = datagen.build_corpus("web", seed=7, target_bytes=30_000)
+    assert wiki != web
+    # Byte histograms should differ measurably (different syllable banks).
+    hw = np.bincount(np.frombuffer(wiki, np.uint8), minlength=256)
+    hb = np.bincount(np.frombuffer(web, np.uint8), minlength=256)
+    tv = np.abs(hw / hw.sum() - hb / hb.sum()).sum() / 2
+    assert tv > 0.05, f"profiles too similar: TV {tv}"
+
+
+def test_facts_are_shared_and_embedded():
+    data, facts, _ = datagen.build_corpus("wiki", seed=7, target_bytes=300_000)
+    text = data.decode()
+    embedded = sum(1 for f in facts[:50] if f.sentence() in text)
+    assert embedded >= 45, f"only {embedded}/50 facts embedded"
+    # Facts are profile-independent.
+    _, facts2, _ = datagen.build_corpus("book", seed=9, target_bytes=10_000)
+    assert [f.value for f in facts] == [f.value for f in facts2]
+
+
+def test_corpus_contains_task_patterns():
+    data, _, _ = datagen.build_corpus("web", seed=7, target_bytes=200_000)
+    text = data.decode()
+    assert "repeat : " in text, "copy drills missing"
+    assert " ; " in text
+    assert "the code of " in text, "fact template missing"
+
+
+def test_tokenize_round_trip():
+    s = "the code of zorvik is ael-42 ."
+    toks = datagen.tokenize(s.encode())
+    assert datagen.detokenize(toks) == s
+    assert all(0 <= t < 256 for t in toks)

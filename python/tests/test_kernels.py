@@ -1,0 +1,135 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, including
+hypothesis-driven shape/mask sweeps and both grid modes (coarse
+CPU-lowering and the TPU-shaped blocked grid)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import (flash_decode_attend, loki_scores, ref,
+                             sparq_style_scores)
+
+SCALE = 0.125
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+def mask_from_lens(rng, b, h, m):
+    lens = rng.integers(1, m + 1, size=b)
+    valid = np.arange(m)[None, :] < lens[:, None]
+    return jnp.asarray(np.broadcast_to(valid[:, None, :], (b, h, m)))
+
+
+@pytest.mark.parametrize("block_m", [None, 64, 128])
+@pytest.mark.parametrize("bhm", [(1, 1, 128), (2, 3, 256), (4, 2, 384)])
+def test_loki_scores_matches_ref(block_m, bhm):
+    b, h, m = bhm
+    d = 32
+    rng = np.random.default_rng(b * 100 + m)
+    q, k = rand(rng, b, h, d), rand(rng, b, h, m, d)
+    valid = mask_from_lens(rng, b, h, m)
+    got = loki_scores(q, k, valid, scale=SCALE, block_m=block_m)
+    want = ref.score_ref(q, k, valid, SCALE)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("block_m", [None, 64])
+@pytest.mark.parametrize("bhm", [(1, 2, 128), (3, 2, 256)])
+def test_flash_attend_matches_ref(block_m, bhm):
+    b, h, m = bhm
+    d = 16
+    rng = np.random.default_rng(m)
+    q, k, v = rand(rng, b, h, d), rand(rng, b, h, m, d), rand(rng, b, h, m, d)
+    mask = mask_from_lens(rng, b, h, m)
+    got = flash_decode_attend(q, k, v, mask, scale=SCALE, block_m=block_m)
+    want, _ = ref.attend_ref(q, k, v, mask, SCALE)
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+def test_sparq_style_matches_ref():
+    rng = np.random.default_rng(7)
+    b, h, m, d = 2, 4, 192, 32
+    q, k = rand(rng, b, h, d), rand(rng, b, h, m, d)
+    valid = mask_from_lens(rng, b, h, m)
+    got = sparq_style_scores(q, k, valid, scale=SCALE)
+    want = ref.score_ref(q, k, valid, SCALE)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_grid_modes_agree_with_each_other():
+    rng = np.random.default_rng(11)
+    b, h, m, d = 2, 2, 256, 32
+    q, k, v = rand(rng, b, h, d), rand(rng, b, h, m, d), rand(rng, b, h, m, d)
+    mask = mask_from_lens(rng, b, h, m)
+    coarse = flash_decode_attend(q, k, v, mask, scale=SCALE, block_m=None)
+    blocked = flash_decode_attend(q, k, v, mask, scale=SCALE, block_m=64)
+    np.testing.assert_allclose(coarse, blocked, atol=1e-4)
+
+
+def test_d_mask_equals_slicing():
+    """Masking trailing PCA components == physically slicing the leading d
+    (the runtime's d_mask trick)."""
+    rng = np.random.default_rng(5)
+    b, h, m, d, dsub = 1, 2, 128, 32, 8
+    q, k = rand(rng, b, h, d), rand(rng, b, h, m, d)
+    valid = jnp.ones((b, h, m), bool)
+    dmask = jnp.asarray([1.0] * dsub + [0.0] * (d - dsub), jnp.float32)
+    masked = loki_scores(q * dmask, k, valid, scale=SCALE)
+    sliced = jnp.einsum("bhd,bhmd->bhm", q[..., :dsub], k[..., :dsub]) * SCALE
+    np.testing.assert_allclose(masked, sliced, atol=1e-5)
+
+
+def test_all_masked_slots_give_finite_output():
+    b, h, m, d = 1, 1, 64, 8
+    rng = np.random.default_rng(3)
+    q, k, v = rand(rng, b, h, d), rand(rng, b, h, m, d), rand(rng, b, h, m, d)
+    mask = jnp.zeros((b, h, m), bool).at[0, 0, 0].set(True)
+    out = flash_decode_attend(q, k, v, mask, scale=SCALE)
+    assert np.isfinite(np.asarray(out)).all()
+    # With one live slot the output is exactly that slot's value row.
+    np.testing.assert_allclose(out[0, 0], v[0, 0, 0], atol=1e-5)
+
+
+@hypothesis.settings(deadline=None, max_examples=25)
+@hypothesis.given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 3),
+    m=st.sampled_from([32, 96, 128, 256]),
+    d=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_scores_sweep(b, h, m, d, seed):
+    rng = np.random.default_rng(seed)
+    q, k = rand(rng, b, h, d), rand(rng, b, h, m, d)
+    valid = mask_from_lens(rng, b, h, m)
+    got = loki_scores(q, k, valid, scale=SCALE)
+    want = ref.score_ref(q, k, valid, SCALE)
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+@hypothesis.settings(deadline=None, max_examples=20)
+@hypothesis.given(
+    b=st.integers(1, 2),
+    m=st.sampled_from([64, 160, 256]),
+    frac=st.floats(0.05, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_attend_sparse_masks(b, m, frac, seed):
+    """Random sparse selection masks (the Loki top-k case)."""
+    h, d = 2, 16
+    rng = np.random.default_rng(seed)
+    q, k, v = rand(rng, b, h, d), rand(rng, b, h, m, d), rand(rng, b, h, m, d)
+    mask = np.zeros((b, h, m), bool)
+    for bi in range(b):
+        for hi in range(h):
+            n = max(1, int(m * frac))
+            idx = rng.choice(m, size=n, replace=False)
+            mask[bi, hi, idx] = True
+    mask = jnp.asarray(mask)
+    got = flash_decode_attend(q, k, v, mask, scale=SCALE)
+    want, _ = ref.attend_ref(q, k, v, mask, SCALE)
+    np.testing.assert_allclose(got, want, atol=1e-4)

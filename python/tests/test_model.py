@@ -1,0 +1,125 @@
+"""L2 model correctness: prefill/decode vs the full-sequence oracle,
+Lemma 4.1 invariances, variant limit cases, lane injection."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import ModelConfig
+
+CFG = ModelConfig(name="test", d_model=64, n_layers=2, n_heads=2, head_dim=16,
+                  d_ff=96, max_len=48, vocab_size=64)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = M.init_params(CFG, 0)
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, CFG.vocab_size, (2, 20)), jnp.int32)
+    ref_logits = M.train_forward(CFG, params, toks)
+    return params, toks, ref_logits
+
+
+def random_orthogonal(rng):
+    qs = []
+    for _ in range(CFG.n_layers * CFG.n_heads):
+        a = rng.standard_normal((CFG.head_dim, CFG.head_dim))
+        q, _ = np.linalg.qr(a)
+        qs.append(q)
+    return jnp.asarray(
+        np.stack(qs).reshape(CFG.n_layers, CFG.n_heads, CFG.head_dim, CFG.head_dim),
+        jnp.float32)
+
+
+def test_prefill_matches_oracle(setup):
+    params, toks, ref_logits = setup
+    proj = M.identity_proj(CFG)
+    plen = jnp.array([8, 5], jnp.int32)
+    _, _, _, logits_last = M.prefill(CFG, params, proj, toks[:, :8], plen)
+    np.testing.assert_allclose(logits_last[0], ref_logits[0, 7], atol=1e-4)
+    np.testing.assert_allclose(logits_last[1], ref_logits[1, 4], atol=1e-4)
+
+
+def test_stepwise_decode_matches_oracle(setup):
+    params, toks, ref_logits = setup
+    proj = M.identity_proj(CFG)
+    plen = jnp.array([8, 5], jnp.int32)
+    kc, vc, acc, _ = M.prefill(CFG, params, proj, toks[:, :8], plen)
+    cache_len = plen
+    for _ in range(5):
+        nxt = jnp.stack([toks[0, cache_len[0]], toks[1, cache_len[1]]])
+        logits, kc, vc, acc = M.decode_full(CFG, params, proj, kc, vc, acc, cache_len, nxt)
+        np.testing.assert_allclose(logits[0], ref_logits[0, cache_len[0]], atol=1e-4)
+        np.testing.assert_allclose(logits[1], ref_logits[1, cache_len[1]], atol=1e-4)
+        cache_len = cache_len + 1
+
+
+def test_lemma41_orthogonal_invariance(setup):
+    """Full attention logits are invariant to the orthogonal basis the
+    cache is stored in."""
+    params, toks, _ = setup
+    rng = np.random.default_rng(9)
+    plen = jnp.array([8, 8], jnp.int32)
+    outs = []
+    for proj in [M.identity_proj(CFG), random_orthogonal(rng)]:
+        kc, vc, acc, _ = M.prefill(CFG, params, proj, toks[:, :8], plen)
+        logits, *_ = M.decode_full(CFG, params, proj, kc, vc, acc, plen, toks[:, 8])
+        outs.append(np.asarray(logits))
+    np.testing.assert_allclose(outs[0], outs[1], atol=2e-3)
+
+
+def test_loki_limits(setup):
+    """d_mask=1, j=M reduces Loki to full attention; small j changes it."""
+    params, toks, _ = setup
+    proj = M.identity_proj(CFG)
+    plen = jnp.array([16, 16], jnp.int32)
+    kc, vc, acc, _ = M.prefill(CFG, params, proj, toks[:, :16], plen)
+    nxt = toks[:, 16]
+    ones = jnp.ones((CFG.n_layers, CFG.head_dim), jnp.float32)
+    full, *_ = M.decode_full(CFG, params, proj, kc, vc, acc, plen, nxt)
+    loki_all, *_ = M.decode_loki(CFG, params, proj, kc, vc, acc, plen, nxt,
+                                 ones, jnp.int32(CFG.max_len))
+    np.testing.assert_allclose(full, loki_all, atol=1e-4)
+    loki_k4, *_ = M.decode_loki(CFG, params, proj, kc, vc, acc, plen, nxt,
+                                ones, jnp.int32(4))
+    assert not np.allclose(full, loki_k4, atol=1e-3), "k=4 should differ from full"
+
+
+def test_h2o_and_pcaattn_run_finite(setup):
+    params, toks, _ = setup
+    proj = M.identity_proj(CFG)
+    plen = jnp.array([16, 12], jnp.int32)
+    kc, vc, acc, _ = M.prefill(CFG, params, proj, toks[:, :16], plen)
+    nxt = toks[:, 16]
+    h2o_logits, _, _, acc2 = M.decode_h2o(CFG, params, proj, kc, vc, acc, plen, nxt,
+                                          jnp.int32(8))
+    assert np.isfinite(np.asarray(h2o_logits)).all()
+    # H2O accumulators only grow.
+    assert float(jnp.sum(acc2)) >= float(jnp.sum(acc)) - 1e-4
+    dmask = jnp.zeros((CFG.n_layers, CFG.head_dim), jnp.float32).at[:, :4].set(1.0)
+    pca_logits, *_ = M.decode_pcaattn(CFG, params, proj, kc, vc, acc, plen, nxt, dmask)
+    assert np.isfinite(np.asarray(pca_logits)).all()
+
+
+def test_inject_lane(setup):
+    params, toks, _ = setup
+    proj = M.identity_proj(CFG)
+    plen = jnp.array([8, 8], jnp.int32)
+    kc, vc, acc, _ = M.prefill(CFG, params, proj, toks[:, :8], plen)
+    lane_plen = jnp.array([5], jnp.int32)
+    lkc, lvc, lacc, _ = M.prefill(CFG, params, proj, toks[:1, :5], lane_plen)
+    kc2, vc2, acc2 = M.inject_lane(kc, vc, acc, lkc, lvc, lacc, jnp.int32(1))
+    np.testing.assert_allclose(kc2[:, 1], lkc[:, 0], atol=1e-6)
+    np.testing.assert_allclose(kc2[:, 0], kc[:, 0], atol=1e-6)
+    np.testing.assert_allclose(acc2[:, 1], lacc[:, 0], atol=1e-6)
+    np.testing.assert_allclose(vc2[:, 0], vc[:, 0], atol=1e-6)
+
+
+def test_param_names_cover_all_params():
+    params = M.init_params(CFG, 0)
+    assert sorted(M.param_names(CFG)) == sorted(params.keys())
+    tup = M.params_to_tuple(CFG, params)
+    back = M.tuple_to_params(CFG, tup)
+    for n in params:
+        assert params[n] is back[n]

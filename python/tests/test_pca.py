@@ -1,0 +1,74 @@
+"""PCA calibration properties: orthogonality, variance recovery, Eq.-2
+rank metric, and Lemma 4.2's reconstruction-optimality claim."""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+
+from compile.pca import pca_basis, rank_at
+
+
+def aniso(rng, n, d, scales):
+    return (rng.standard_normal((n, d)) * scales).astype(np.float32)
+
+
+def test_basis_is_orthogonal_and_sorted():
+    rng = np.random.default_rng(0)
+    scales = 2.0 ** -np.arange(8)
+    x = aniso(rng, 2000, 8, scales)[None, None]  # [1,1,N,D]
+    proj, eig = pca_basis(x)
+    p = proj[0, 0]
+    np.testing.assert_allclose(p.T @ p, np.eye(8), atol=1e-4)
+    assert (np.diff(eig[0, 0]) <= 1e-6).all(), "eigenvalues must be descending"
+    np.testing.assert_allclose(eig[0, 0].sum(), 1.0, atol=1e-5)
+
+
+def test_rank_at_detects_subspace():
+    rng = np.random.default_rng(1)
+    scales = np.full(32, 1e-3)
+    scales[:3] = [3.0, 2.0, 1.0]
+    x = aniso(rng, 3000, 32, scales)[None, None]
+    _, eig = pca_basis(x)
+    assert rank_at(eig, 90.0)[0, 0] <= 3
+    assert rank_at(eig, 99.999)[0, 0] >= 3
+
+
+def test_rank_at_thresholds_exact():
+    eig = np.array([[[0.6, 0.3, 0.08, 0.02]]])
+    assert rank_at(eig, 50.0)[0, 0] == 1
+    assert rank_at(eig, 90.0)[0, 0] == 2
+    assert rank_at(eig, 100.0)[0, 0] == 4
+
+
+def test_lemma42_pca_minimizes_reconstruction():
+    """PCA's leading-d projection reconstructs keys at least as well as
+    random orthogonal d-dim projections (Lemma 4.2's optimality)."""
+    rng = np.random.default_rng(2)
+    d, dsub, n = 16, 4, 3000
+    scales = 1.0 / (1.0 + np.arange(d))
+    x = aniso(rng, n, d, scales)
+    proj, _ = pca_basis(x[None, None])
+    p = proj[0, 0]
+
+    def recon_err(basis):
+        b = basis[:, :dsub]
+        xr = (x @ b) @ b.T
+        return float(((x - xr) ** 2).sum())
+
+    err_pca = recon_err(p)
+    for trial in range(5):
+        q, _ = np.linalg.qr(rng.standard_normal((d, d)))
+        assert err_pca <= recon_err(q) + 1e-3, f"trial {trial}"
+
+
+@hypothesis.settings(deadline=None, max_examples=15)
+@hypothesis.given(d=st.sampled_from([4, 8, 16]), seed=st.integers(0, 2**16))
+def test_hypothesis_rotation_preserves_dots(d, seed):
+    """Lemma 4.1 at the numpy level: qᵀk == (qP)ᵀ(kP) for fitted P."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((500, d)).astype(np.float32)[None, None]
+    proj, _ = pca_basis(x)
+    p = proj[0, 0]
+    q = rng.standard_normal(d).astype(np.float32)
+    k = rng.standard_normal(d).astype(np.float32)
+    np.testing.assert_allclose(q @ k, (q @ p) @ (k @ p), rtol=1e-3, atol=1e-4)

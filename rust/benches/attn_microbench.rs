@@ -1,0 +1,14 @@
+//! `cargo bench --bench attn_microbench` — regenerates Figure 7's
+//! attention-time microbenchmark (vanilla vs Loki configurations at
+//! Llama2-13B shape) plus the (k_f, d_f) time sweep of Fig 7 (right).
+//!
+//! Equivalent to `repro-experiments fig7 fig7-tradeoff`; kept as a bench
+//! target so `make bench` covers every timing figure.
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick") || std::env::var("LOKI_QUICK").is_ok();
+    println!("# Fig 7 attention microbenchmark (quick={quick})");
+    loki::experiments::fig7_attn_time::run(quick)?;
+    loki::experiments::fig7_attn_time::run_tradeoff(quick)?;
+    Ok(())
+}

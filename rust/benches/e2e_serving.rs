@@ -1,0 +1,76 @@
+//! `cargo bench --bench e2e_serving` — end-to-end serving throughput and
+//! latency through the full stack (coordinator → runtime thread → compiled
+//! HLO), full attention vs Loki. Numbers feed Figure 6 (right)'s
+//! serving-stack contrast and EXPERIMENTS.md §E2E.
+
+use std::sync::mpsc::channel;
+
+use loki::coordinator::request::GenRequest;
+use loki::coordinator::sampler::SampleCfg;
+use loki::coordinator::{Engine, EngineConfig};
+use loki::data::workload::{Workload, WorkloadCfg};
+use loki::data::TaskSuite;
+use loki::model::ByteTokenizer;
+use loki::runtime::{DecodeVariant, RuntimeService};
+use loki::util::artifacts_dir;
+use loki::util::table::{fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick") || std::env::var("LOKI_QUICK").is_ok();
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping e2e_serving: run `make artifacts` first");
+        return Ok(());
+    }
+    let service = RuntimeService::start(artifacts_dir())?;
+    let suite = TaskSuite::load(&artifacts_dir())?;
+    let n = if quick { 8 } else { 24 };
+    let wl = Workload::generate(
+        &WorkloadCfg {
+            n_requests: n,
+            rate: 0.0,
+            burst_p: 0.0,
+            prompt_len: (48, 200),
+            gen_len: (12, 40),
+            seed: 3,
+        },
+        &suite.fillers,
+    );
+
+    let man = service.manifest.clone();
+    let mut table = Table::new(
+        "E2E serving: full vs Loki through the coordinator",
+        &["variant", "tok/s", "ttft p50 s", "e2e p95 s", "step p50 ms", "injections"],
+    );
+    for (label, variant) in [
+        ("full", DecodeVariant::Full),
+        ("loki .25/.25", DecodeVariant::loki_fractions(&man, 0.25, 0.25)),
+    ] {
+        let cfg = EngineConfig { variant, ..Default::default() };
+        let engine = Engine::new(&service, cfg.clone());
+        let (tx, rx) = Engine::channel(&cfg);
+        let tok = ByteTokenizer;
+        let (reply, _results) = channel();
+        for (i, item) in wl.items.iter().enumerate() {
+            tx.send(GenRequest {
+                id: i as u64,
+                prompt: tok.encode(&item.prompt),
+                max_new_tokens: item.max_new_tokens,
+                stop_token: None,
+                sampling: SampleCfg::greedy(),
+                reply: reply.clone(),
+            })?;
+        }
+        drop(tx);
+        let m = engine.run(rx)?;
+        table.row(vec![
+            label.to_string(),
+            fnum(m.throughput_tok_s(), 1),
+            fnum(m.ttft.percentile(50.0), 3),
+            fnum(m.e2e_latency.percentile(95.0), 3),
+            fnum(m.decode_step_time.percentile(50.0) * 1e3, 1),
+            format!("{}", m.injections),
+        ]);
+    }
+    table.emit("e2e_serving_bench");
+    Ok(())
+}

@@ -1,0 +1,10 @@
+//! `cargo bench --bench kernel_1d_vs_2d` — regenerates Figure 16
+//! (Appendix C): Loki's 2-D-parallel score kernel vs the SparQ-style
+//! 1-D kernel and the dense-copy baseline, across batch and cache sizes.
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick") || std::env::var("LOKI_QUICK").is_ok();
+    println!("# Fig 16 kernel comparison (quick={quick})");
+    loki::experiments::fig16_kernels::run(quick)?;
+    Ok(())
+}

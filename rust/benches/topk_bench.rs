@@ -1,0 +1,57 @@
+//! `cargo bench --bench topk_bench` — top-k selection-algorithm ablation.
+//!
+//! §6.4 of the paper observes PyTorch's top-k costs as much as the sparse
+//! matmuls and leaves a custom kernel as future work; this bench is that
+//! investigation: full sort vs bounded heap vs quickselect across cache
+//! sizes and k fractions (the decode-time selection shapes).
+
+use loki::linalg::topk::{top_k_indices, TopKAlgo};
+use loki::util::bench::{bench, BenchConfig};
+use loki::util::rng::Xoshiro256;
+use loki::util::table::{fnum, Table};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick") || std::env::var("LOKI_QUICK").is_ok();
+    let seqs: &[usize] = if quick { &[1024, 4096] } else { &[512, 1024, 2048, 4096, 8192] };
+    let kfs = [0.125, 0.25, 0.5];
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+
+    let mut table = Table::new(
+        "Top-k selection algorithms over decode score vectors (µs per lane)",
+        &["S", "k_f", "sort µs", "heap µs", "quickselect µs", "best"],
+    );
+    let mut rng = Xoshiro256::new(1);
+    for &s in seqs {
+        let scores = rng.normal_vec(s);
+        for &kf in &kfs {
+            let k = ((s as f64 * kf) as usize).max(1);
+            let t_sort = bench("sort", &cfg, || {
+                std::hint::black_box(top_k_indices(TopKAlgo::Sort, &scores, k));
+            })
+            .median_secs();
+            let t_heap = bench("heap", &cfg, || {
+                std::hint::black_box(top_k_indices(TopKAlgo::Heap, &scores, k));
+            })
+            .median_secs();
+            let t_qs = bench("quickselect", &cfg, || {
+                std::hint::black_box(top_k_indices(TopKAlgo::QuickSelect, &scores, k));
+            })
+            .median_secs();
+            let best = [("sort", t_sort), ("heap", t_heap), ("quickselect", t_qs)]
+                .iter()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap()
+                .0
+                .to_string();
+            table.row(vec![
+                format!("{s}"),
+                format!("{kf}"),
+                fnum(t_sort * 1e6, 1),
+                fnum(t_heap * 1e6, 1),
+                fnum(t_qs * 1e6, 1),
+                best,
+            ]);
+        }
+    }
+    table.emit("topk_bench");
+}

@@ -1,0 +1,122 @@
+//! Loader for the key/query/value sample dumps
+//! (`artifacts/keys_{profile}.npz`, `artifacts/family_{model}.npz`).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+use xla::{FromRawBytes, Literal};
+
+use crate::linalg::pca::{Pca, PcaBasis};
+
+/// `[L, H, N, D]` samples of one tensor kind for one model/corpus.
+pub struct KeyDump {
+    pub layers: usize,
+    pub heads: usize,
+    pub samples: usize,
+    pub dim: usize,
+    data: Vec<f32>,
+}
+
+impl KeyDump {
+    /// `kind` ∈ {k_pre, k_post, q_pre, q_post, v} for keys_{profile}.npz;
+    /// {k_pre, k_post} for family_{model}.npz.
+    pub fn load(path: &Path, kind: &str) -> Result<Self> {
+        let lits = Literal::read_npz_by_name(path, &(), &[kind])
+            .map_err(|e| anyhow!("loading {kind} from {}: {e}", path.display()))?;
+        let lit = &lits[0];
+        let shape = lit.array_shape().map_err(|e| anyhow!("{e}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        anyhow::ensure!(dims.len() == 4, "expected [L,H,N,D], got {dims:?}");
+        Ok(Self {
+            layers: dims[0],
+            heads: dims[1],
+            samples: dims[2],
+            dim: dims[3],
+            data: lit.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+        })
+    }
+
+    /// The `[N, D]` sample block for one (layer, head).
+    pub fn block(&self, layer: usize, head: usize) -> &[f32] {
+        let n = self.samples * self.dim;
+        let off = (layer * self.heads + head) * n;
+        &self.data[off..off + n]
+    }
+
+    /// Fit PCA for one (layer, head).
+    pub fn pca(&self, layer: usize, head: usize) -> PcaBasis {
+        Pca::fit(self.block(layer, head), self.samples, self.dim)
+    }
+
+    /// Fit PCA for every (layer, head); row-major `[layers][heads]`.
+    pub fn pca_all(&self) -> Vec<Vec<PcaBasis>> {
+        (0..self.layers)
+            .map(|l| (0..self.heads).map(|h| self.pca(l, h)).collect())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::artifacts_dir;
+
+    #[test]
+    fn loads_main_dump_and_fits() {
+        let p = artifacts_dir().join("keys_wiki.npz");
+        if !p.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let dump = KeyDump::load(&p, "k_post").unwrap();
+        assert!(dump.layers >= 1 && dump.heads >= 1);
+        assert!(dump.samples >= 128);
+        let basis = dump.pca(0, 0);
+        assert_eq!(basis.dim, dump.dim);
+        // Eigenvalues sum to ~1 and are descending.
+        let sum: f32 = basis.eigenvalues.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-3, "sum {sum}");
+        for w in basis.eigenvalues.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+    }
+
+    #[test]
+    fn rust_pca_matches_python_spectrum() {
+        // The python pipeline stored its own eigenvalues; recomputing from
+        // the dumped samples with the Jacobi solver should land close
+        // (the dump is a subsample of the calibration set, so tolerances
+        // are loose but shape-preserving).
+        let dir = artifacts_dir();
+        let kp = dir.join("keys_wiki.npz");
+        let pp = dir.join("pca_wiki_post.npz");
+        if !kp.exists() || !pp.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let dump = KeyDump::load(&kp, "k_post").unwrap();
+        let lits = Literal::read_npz_by_name(&pp, &(), &["eig"]).unwrap();
+        let py_eig = lits[0].to_vec::<f32>().unwrap();
+        let d = dump.dim;
+        // Compare Rank@90 per (layer, head) — the metric the paper uses.
+        let mut diffs = Vec::new();
+        for l in 0..dump.layers {
+            for h in 0..dump.heads {
+                let rust_rank = dump.pca(l, h).rank_at(90.0) as i64;
+                let off = (l * dump.heads + h) * d;
+                let mut cum = 0.0;
+                let mut py_rank = d as i64;
+                for (i, &e) in py_eig[off..off + d].iter().enumerate() {
+                    cum += e as f64;
+                    if cum >= 0.9 {
+                        py_rank = i as i64 + 1;
+                        break;
+                    }
+                }
+                diffs.push((rust_rank - py_rank).abs());
+            }
+        }
+        let max_diff = diffs.iter().max().copied().unwrap_or(0);
+        assert!(max_diff <= 6, "Rank@90 diverges between rust/python PCA: {max_diff}");
+    }
+}

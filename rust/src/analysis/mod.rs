@@ -1,0 +1,19 @@
+//! Dimensionality analysis (paper §3, Appendix A) and the theoretical
+//! cost model (Eq. 5 / Table 1).
+//!
+//! * [`keydump`] — loads the key/query/value samples exported per
+//!   calibration corpus and recomputes PCA with the Rust eigensolver
+//!   (cross-validated against the python spectra in tests).
+//! * [`rank`]    — Rank@v aggregation across layers/heads (Eq. 2),
+//!   eigen-spectra extraction, head×layer heatmaps.
+//! * [`speedup`] — the Eq.-5 closed-form speedup model and Table-1
+//!   budget accounting, validated against measured byte movement.
+
+pub mod keydump;
+pub mod rank;
+pub mod roofline;
+pub mod speedup;
+
+pub use keydump::KeyDump;
+pub use rank::{rank_table, RankStats};
+pub use speedup::{loki_speedup, memory_saving, SpeedupModel};

@@ -1,0 +1,96 @@
+//! Rank@v aggregation (Eq. 2) over (layer, head) PCA spectra.
+
+use crate::linalg::pca::PcaBasis;
+
+/// Per-layer rank statistics at a variance threshold.
+#[derive(Clone, Debug)]
+pub struct RankStats {
+    pub v_pct: f64,
+    /// `[layers]` mean rank across heads.
+    pub per_layer: Vec<f64>,
+    /// `[layers][heads]` raw ranks (the heatmap of App. Figs 10/11).
+    pub per_head: Vec<Vec<usize>>,
+    pub dim: usize,
+}
+
+impl RankStats {
+    /// Mean of the per-layer means (the Fig-1 scalar per model).
+    pub fn model_mean(&self) -> f64 {
+        if self.per_layer.is_empty() {
+            return 0.0;
+        }
+        self.per_layer.iter().sum::<f64>() / self.per_layer.len() as f64
+    }
+}
+
+/// Compute Rank@v for a `[layers][heads]` PCA grid.
+pub fn rank_table(bases: &[Vec<PcaBasis>], v_pct: f64) -> RankStats {
+    let per_head: Vec<Vec<usize>> = bases
+        .iter()
+        .map(|row| row.iter().map(|b| b.rank_at(v_pct)).collect())
+        .collect();
+    let per_layer = per_head
+        .iter()
+        .map(|row| {
+            if row.is_empty() {
+                0.0
+            } else {
+                row.iter().sum::<usize>() as f64 / row.len() as f64
+            }
+        })
+        .collect();
+    let dim = bases
+        .first()
+        .and_then(|r| r.first())
+        .map(|b| b.dim)
+        .unwrap_or(0);
+    RankStats { v_pct, per_layer, per_head, dim }
+}
+
+/// Eigen-spectrum (normalized eigenvalues) of one basis — App. Fig 9.
+pub fn spectrum(basis: &PcaBasis) -> Vec<f32> {
+    basis.eigenvalues.clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::pca::Pca;
+    use crate::util::rng::Xoshiro256;
+
+    fn basis_with_effective_rank(r: usize, d: usize, seed: u64) -> PcaBasis {
+        let mut rng = Xoshiro256::new(seed);
+        let n = 600;
+        let mut samples = vec![0.0f32; n * d];
+        for row in samples.chunks_exact_mut(d) {
+            for (j, x) in row.iter_mut().enumerate() {
+                let scale = if j < r { 1.0 } else { 0.01 };
+                *x = rng.normal_f32() * scale;
+            }
+        }
+        Pca::fit(&samples, n, d)
+    }
+
+    #[test]
+    fn aggregates_per_layer_means() {
+        let grid = vec![
+            vec![basis_with_effective_rank(2, 16, 1), basis_with_effective_rank(4, 16, 2)],
+            vec![basis_with_effective_rank(8, 16, 3), basis_with_effective_rank(8, 16, 4)],
+        ];
+        let stats = rank_table(&grid, 90.0);
+        assert_eq!(stats.per_head.len(), 2);
+        assert!(stats.per_layer[0] < stats.per_layer[1]);
+        let mm = stats.model_mean();
+        assert!(mm > 0.0 && mm < 16.0);
+        // Low-rank layers report low Rank@90.
+        assert!(stats.per_head[0][0] <= 4, "{:?}", stats.per_head);
+    }
+
+    #[test]
+    fn spectrum_is_normalized() {
+        let b = basis_with_effective_rank(3, 8, 9);
+        let s = spectrum(&b);
+        let sum: f32 = s.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,140 @@
+//! TPU roofline estimator for the L1 Pallas kernels (DESIGN.md §Perf).
+//!
+//! CPU-interpret execution gives no TPU timings, so the per-kernel TPU
+//! performance claim is *estimated* from first principles: VMEM footprint
+//! of the chosen BlockSpec, HBM bytes streamed per decode step, and MXU
+//! utilization of the score matvec. `repro-experiments` does not ship a
+//! TPU; this module makes the estimate explicit, testable and printed
+//! (`roofline` id) instead of a hand-waved paragraph.
+
+/// A TPU-generation model (defaults ≈ TPU v4: 275 TFLOP/s bf16 MXU,
+/// 1.2 TB/s HBM, 16 MiB VMEM per core).
+#[derive(Clone, Copy, Debug)]
+pub struct TpuModel {
+    pub mxu_flops: f64,
+    pub hbm_bytes_per_s: f64,
+    pub vmem_bytes: u64,
+}
+
+impl Default for TpuModel {
+    fn default() -> Self {
+        Self { mxu_flops: 275e12, hbm_bytes_per_s: 1.2e12, vmem_bytes: 16 << 20 }
+    }
+}
+
+/// The Loki decode-attention kernel plan for one layer.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelPlan {
+    pub lanes: usize,    // batch · heads
+    pub head_dim: usize, // D
+    pub live: usize,     // S
+    pub d_sub: usize,    // d_f · D
+    pub k_sel: usize,    // k_f · S
+    pub block_m: usize,  // sequence tile
+    pub bytes_per_elem: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct RooflineEstimate {
+    /// Peak VMEM held by one grid step (K-tile + query + partial scores).
+    pub vmem_per_step: u64,
+    /// HBM bytes streamed per decode step (score K̂ slice + gathered K/V).
+    pub hbm_bytes: u64,
+    pub flops: f64,
+    /// FLOPs / bytes — decode attention is far below the machine balance
+    /// point, i.e. bandwidth-bound.
+    pub arithmetic_intensity: f64,
+    /// Time bounds (s) under the model.
+    pub t_bandwidth: f64,
+    pub t_compute: f64,
+    /// Fraction of MXU peak achievable given the bandwidth bound.
+    pub mxu_utilization: f64,
+}
+
+impl KernelPlan {
+    pub fn paper_13b(batch: usize, live: usize, k_f: f64, d_f: f64) -> Self {
+        let d = 128;
+        Self {
+            lanes: batch * 40,
+            head_dim: d,
+            live,
+            d_sub: (d as f64 * d_f) as usize,
+            k_sel: (live as f64 * k_f) as usize,
+            block_m: 128,
+            bytes_per_elem: 2, // bf16 cache
+        }
+    }
+
+    pub fn estimate(&self, tpu: &TpuModel) -> RooflineEstimate {
+        let be = self.bytes_per_elem;
+        // One grid step holds: K̂ tile [block_m, d_sub] + q [D] + partial
+        // scores [block_m] (plus double-buffering ×2 on the tile).
+        let vmem_per_step = (2 * self.block_m * self.d_sub) as u64 * be
+            + self.head_dim as u64 * be
+            + self.block_m as u64 * 4;
+        // Streamed from HBM per decode step per lane:
+        //   scores: live × d_sub   (leading-slice reads) — skipped when the
+        //     plan is vanilla (d_sub = D, k = S): a fused vanilla kernel
+        //     reads K exactly once inside the attend stage (Eq. 5's 2DS).
+        //   attend: 2 × k_sel × D  (gathered K̂ and V rows)
+        let is_vanilla = self.d_sub == self.head_dim && self.k_sel == self.live;
+        let score_bytes = if is_vanilla { 0 } else { self.live * self.d_sub };
+        let hbm_bytes = self.lanes as u64
+            * (score_bytes as u64 + (2 * self.k_sel * self.head_dim) as u64)
+            * be;
+        let flops = self.lanes as f64
+            * (2.0 * self.live as f64 * self.d_sub as f64
+                + 4.0 * self.k_sel as f64 * self.head_dim as f64);
+        let ai = flops / hbm_bytes as f64;
+        let t_bw = hbm_bytes as f64 / tpu.hbm_bytes_per_s;
+        let t_c = flops / tpu.mxu_flops;
+        RooflineEstimate {
+            vmem_per_step,
+            hbm_bytes,
+            flops,
+            arithmetic_intensity: ai,
+            t_bandwidth: t_bw,
+            t_compute: t_c,
+            mxu_utilization: (t_c / t_bw.max(t_c)).min(1.0),
+        }
+    }
+
+    /// Vanilla attention plan at the same shape (for the speedup ratio).
+    pub fn vanilla(&self) -> Self {
+        Self { d_sub: self.head_dim, k_sel: self.live, ..*self }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vmem_fits_and_is_dominated_by_tile() {
+        let plan = KernelPlan::paper_13b(16, 3072, 0.25, 0.25);
+        let est = plan.estimate(&TpuModel::default());
+        assert!(est.vmem_per_step < TpuModel::default().vmem_bytes / 8,
+                "tile should be a small VMEM fraction: {}", est.vmem_per_step);
+    }
+
+    #[test]
+    fn decode_attention_is_bandwidth_bound() {
+        let plan = KernelPlan::paper_13b(16, 3072, 0.25, 0.25);
+        let est = plan.estimate(&TpuModel::default());
+        // Arithmetic intensity ≈ 2 FLOPs/byte — far under the v4 balance
+        // point (275e12 / 1.2e12 ≈ 229), so bandwidth-bound.
+        assert!(est.arithmetic_intensity < 8.0, "{}", est.arithmetic_intensity);
+        assert!(est.t_bandwidth > est.t_compute);
+        assert!(est.mxu_utilization < 0.05);
+    }
+
+    #[test]
+    fn estimated_speedup_matches_eq5() {
+        let loki = KernelPlan::paper_13b(16, 3072, 0.25, 0.25);
+        let vanilla = loki.vanilla();
+        let tpu = TpuModel::default();
+        let s = vanilla.estimate(&tpu).t_bandwidth / loki.estimate(&tpu).t_bandwidth;
+        let eq5 = 1.0 / (0.25 / 2.0 + 0.25);
+        assert!((s - eq5).abs() / eq5 < 0.05, "roofline speedup {s:.2} vs Eq.5 {eq5:.2}");
+    }
+}

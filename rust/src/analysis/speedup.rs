@@ -1,0 +1,108 @@
+//! Eq. 5 / Table 1: the paper's closed-form cost model for attention
+//! variants, and its validation hooks against measured byte movement.
+
+/// Closed-form per-step attention cost model (counts multiply-accumulate
+/// ops of the score + AV stages, plus Loki's extras). Mirrors §4.2.
+#[derive(Clone, Copy, Debug)]
+pub struct SpeedupModel {
+    /// Head dimension D.
+    pub d_full: usize,
+    /// Sequence/cache length S.
+    pub seq: usize,
+}
+
+impl SpeedupModel {
+    pub fn vanilla_cost(&self) -> f64 {
+        // O(2·D·S): q·Kᵀ plus a·V.
+        2.0 * self.d_full as f64 * self.seq as f64
+    }
+
+    pub fn loki_cost(&self, d_f: f64, k_f: f64) -> f64 {
+        let d = d_f * self.d_full as f64;
+        let k = k_f * self.seq as f64;
+        // Eq. 5 numerator terms: d·S (approx scores) + 2·D·k (exact part)
+        // + 2·D² (query/key rotations).
+        d * self.seq as f64
+            + 2.0 * self.d_full as f64 * k
+            + 2.0 * (self.d_full as f64).powi(2)
+    }
+
+    pub fn exact_topk_cost(&self, k_f: f64) -> f64 {
+        // Full scores + top-k AV: D·S + 2·D·k — no speedup on scores.
+        self.d_full as f64 * self.seq as f64
+            + 2.0 * self.d_full as f64 * k_f * self.seq as f64
+    }
+
+    pub fn h2o_cost(&self, k_f: f64) -> f64 {
+        // Attention over a k_f cache: 2·D·k.
+        2.0 * self.d_full as f64 * k_f * self.seq as f64
+    }
+
+    pub fn pcaattn_cost(&self, d_f: f64) -> f64 {
+        // d·S scores + D·S AV (values stay full-dimensional).
+        (d_f + 1.0) * self.d_full as f64 * self.seq as f64
+    }
+
+    /// Speedup of Loki over vanilla (Eq. 5).
+    pub fn loki_speedup(&self, d_f: f64, k_f: f64) -> f64 {
+        self.vanilla_cost() / self.loki_cost(d_f, k_f)
+    }
+
+    /// The S→∞ asymptote 1/(d_f/2 + k_f).
+    pub fn loki_speedup_asymptote(d_f: f64, k_f: f64) -> f64 {
+        1.0 / (d_f / 2.0 + k_f)
+    }
+}
+
+/// Convenience free function (Table 1 row for Loki).
+pub fn loki_speedup(d: usize, s: usize, d_f: f64, k_f: f64) -> f64 {
+    SpeedupModel { d_full: d, seq: s }.loki_speedup(d_f, k_f)
+}
+
+/// Table 1 memory column: H2O's KV-cache shrinks by 1/k_f; Loki and
+/// Exact-TopK keep the full cache.
+pub fn memory_saving(variant: &str, k_f: f64) -> f64 {
+    match variant {
+        "h2o" => 1.0 / k_f,
+        _ => 1.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_headline_speedup() {
+        // k_f = d_f = 0.25 → asymptotic 1/(0.125+0.25) ≈ 2.67× ("2.6x" in §5).
+        let a = SpeedupModel::loki_speedup_asymptote(0.25, 0.25);
+        assert!((a - 2.6667).abs() < 1e-3, "{a}");
+        // Same asymptote for (k_f=0.125, d_f=0.5): 1/(0.25+0.125) = 2.67.
+        let b = SpeedupModel::loki_speedup_asymptote(0.5, 0.125);
+        assert!((a - b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn finite_s_speedup_below_asymptote() {
+        let m = SpeedupModel { d_full: 128, seq: 4096 };
+        let s = m.loki_speedup(0.25, 0.25);
+        let a = SpeedupModel::loki_speedup_asymptote(0.25, 0.25);
+        assert!(s < a);
+        assert!(s > 0.8 * a, "finite-S {s} vs asymptote {a}");
+        // Longer context → closer to the asymptote.
+        let m2 = SpeedupModel { d_full: 128, seq: 65536 };
+        assert!(m2.loki_speedup(0.25, 0.25) > s);
+    }
+
+    #[test]
+    fn cost_model_orderings() {
+        let m = SpeedupModel { d_full: 128, seq: 3072 };
+        // Loki cheaper than vanilla and exact top-k at paper settings.
+        assert!(m.loki_cost(0.25, 0.25) < m.vanilla_cost());
+        assert!(m.loki_cost(0.25, 0.25) < m.exact_topk_cost(0.25));
+        // H2O (smaller cache) is the cheapest — its cost is memory, not compute.
+        assert!(m.h2o_cost(0.25) < m.loki_cost(0.25, 0.25));
+        assert_eq!(memory_saving("h2o", 0.25), 4.0);
+        assert_eq!(memory_saving("loki", 0.25), 1.0);
+    }
+}

@@ -1,0 +1,192 @@
+//! KV-cache container with the two append disciplines the paper compares.
+//!
+//! Figure 6 (right) shows >80% of HuggingFace decode time going to
+//! `torch.cat` KV-cache appends — each step reallocates a `[.., S+1, D]`
+//! tensor and copies the whole history. [`AppendPolicy::Realloc`] models
+//! that; [`AppendPolicy::InPlace`] is the preallocated write a serving
+//! system (vLLM-style, or our coordinator) does. Both are benchmarked by
+//! `repro-experiments fig6-append`.
+
+use super::AttnShape;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AppendPolicy {
+    /// Preallocated `[lanes, max_len, D]`; append writes D floats per lane.
+    InPlace,
+    /// HuggingFace-style: reallocate `[lanes, len+1, D]` and copy history.
+    Realloc,
+}
+
+/// One layer's K (or V) cache: row-major `[lanes, capacity, head_dim]`.
+pub struct KvCache {
+    pub shape: AttnShape,
+    policy: AppendPolicy,
+    /// Live slots per cache (all lanes advance together here; per-lane
+    /// raggedness lives in the coordinator, not the substrate).
+    len: usize,
+    capacity: usize,
+    data: Vec<f32>,
+    /// Cumulative bytes copied by appends (the Fig-6-right metric).
+    pub bytes_copied: u64,
+}
+
+impl KvCache {
+    pub fn new(shape: AttnShape, policy: AppendPolicy) -> Self {
+        let capacity = match policy {
+            AppendPolicy::InPlace => shape.max_len,
+            AppendPolicy::Realloc => 0, // grows per append
+        };
+        Self {
+            shape,
+            policy,
+            len: 0,
+            capacity,
+            data: vec![0.0; shape.lanes * capacity * shape.head_dim],
+            bytes_copied: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn policy(&self) -> AppendPolicy {
+        self.policy
+    }
+
+    /// Row-major `[lanes, len, head_dim]` view of the live region. With
+    /// `InPlace` the stride between lanes is `max_len × D` (use
+    /// [`Self::lane`]); with `Realloc` it is `len × D`.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn lane_stride(&self) -> usize {
+        self.capacity * self.shape.head_dim
+    }
+
+    /// The rows of one lane: `[len, head_dim]` (prefix of capacity rows).
+    pub fn lane(&self, lane: usize) -> &[f32] {
+        let s = self.lane_stride();
+        &self.data[lane * s..lane * s + self.len * self.shape.head_dim]
+    }
+
+    /// Append one `[lanes, head_dim]` batch of rows.
+    pub fn append(&mut self, rows: &[f32]) {
+        let d = self.shape.head_dim;
+        assert_eq!(rows.len(), self.shape.lanes * d, "append shape mismatch");
+        match self.policy {
+            AppendPolicy::InPlace => {
+                assert!(self.len < self.capacity, "cache full");
+                let stride = self.lane_stride();
+                for lane in 0..self.shape.lanes {
+                    let dst = lane * stride + self.len * d;
+                    self.data[dst..dst + d].copy_from_slice(&rows[lane * d..(lane + 1) * d]);
+                }
+                self.bytes_copied += (self.shape.lanes * d * 4) as u64;
+            }
+            AppendPolicy::Realloc => {
+                // torch.cat semantics: brand-new buffer, full history copy.
+                let new_cap = self.len + 1;
+                let mut new_data = vec![0.0f32; self.shape.lanes * new_cap * d];
+                let old_stride = self.capacity * d;
+                let new_stride = new_cap * d;
+                for lane in 0..self.shape.lanes {
+                    let src = &self.data[lane * old_stride..lane * old_stride + self.len * d];
+                    new_data[lane * new_stride..lane * new_stride + self.len * d]
+                        .copy_from_slice(src);
+                    new_data[lane * new_stride + self.len * d..lane * new_stride + new_cap * d]
+                        .copy_from_slice(&rows[lane * d..(lane + 1) * d]);
+                }
+                self.bytes_copied += (self.shape.lanes * new_cap * d * 4) as u64;
+                self.data = new_data;
+                self.capacity = new_cap;
+            }
+        }
+        self.len += 1;
+    }
+
+    /// Bulk-load a prefill prefix (counts as one copy, like a real prefill).
+    pub fn load_prefix(&mut self, rows: &[f32], len: usize) {
+        let d = self.shape.head_dim;
+        assert_eq!(rows.len(), self.shape.lanes * len * d);
+        if self.policy == AppendPolicy::Realloc {
+            self.capacity = len;
+            self.data = vec![0.0; self.shape.lanes * len * d];
+        }
+        assert!(len <= self.capacity.max(len));
+        let stride = self.lane_stride();
+        for lane in 0..self.shape.lanes {
+            let src = &rows[lane * len * d..(lane + 1) * len * d];
+            self.data[lane * stride..lane * stride + len * d].copy_from_slice(src);
+        }
+        self.bytes_copied += (rows.len() * 4) as u64;
+        self.len = len;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn shape() -> AttnShape {
+        AttnShape { lanes: 3, head_dim: 4, max_len: 8 }
+    }
+
+    #[test]
+    fn inplace_and_realloc_agree_on_contents() {
+        let mut rng = Xoshiro256::new(1);
+        let mut a = KvCache::new(shape(), AppendPolicy::InPlace);
+        let mut b = KvCache::new(shape(), AppendPolicy::Realloc);
+        for _ in 0..5 {
+            let rows = rng.normal_vec(3 * 4);
+            a.append(&rows);
+            b.append(&rows);
+        }
+        for lane in 0..3 {
+            assert_eq!(a.lane(lane), b.lane(lane));
+        }
+    }
+
+    #[test]
+    fn realloc_copies_quadratically_more() {
+        let mut a = KvCache::new(shape(), AppendPolicy::InPlace);
+        let mut b = KvCache::new(shape(), AppendPolicy::Realloc);
+        let rows = vec![1.0f32; 3 * 4];
+        for _ in 0..8 {
+            a.append(&rows);
+            b.append(&rows);
+        }
+        // InPlace: n·D·4 per step. Realloc: n steps of (len+1)·D·4 ≈ n²/2.
+        assert_eq!(a.bytes_copied, 8 * 3 * 4 * 4);
+        assert_eq!(b.bytes_copied, (1 + 2 + 3 + 4 + 5 + 6 + 7 + 8) * 3 * 4 * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "cache full")]
+    fn inplace_overflow_panics() {
+        let mut c = KvCache::new(shape(), AppendPolicy::InPlace);
+        let rows = vec![0.0f32; 3 * 4];
+        for _ in 0..9 {
+            c.append(&rows);
+        }
+    }
+
+    #[test]
+    fn load_prefix_then_append() {
+        let mut rng = Xoshiro256::new(2);
+        let prefix = rng.normal_vec(3 * 5 * 4);
+        let mut c = KvCache::new(shape(), AppendPolicy::InPlace);
+        c.load_prefix(&prefix, 5);
+        assert_eq!(c.len(), 5);
+        let rows = rng.normal_vec(3 * 4);
+        c.append(&rows);
+        assert_eq!(c.len(), 6);
+        assert_eq!(&c.lane(1)[5 * 4..6 * 4], &rows[4..8]);
+    }
+}

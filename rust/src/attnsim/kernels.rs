@@ -1,0 +1,548 @@
+//! Indexed attention kernels with explicit data-movement accounting.
+//!
+//! The paper's §4.3 point: PyTorch-style indexing (`K[:, idx, :d]`)
+//! materializes dense temporary copies of KV-cache subsets; Loki's Triton
+//! kernels index the cache in registers instead. We reproduce both
+//! disciplines on CPU:
+//!
+//! * `*_indexed` kernels read the cache **in place** — feature access is a
+//!   prefix slice (Loki: PCA orders components) or an arbitrary column
+//!   gather (SparQ), token access an index list; no temporaries.
+//! * `*_dense_copy` kernels first materialize the selected sub-matrix,
+//!   then run a dense matmul — the HuggingFace/PyTorch baseline.
+//!
+//! Every kernel returns a [`DataMovement`] tally so the Eq.-5 bandwidth
+//! model can be validated against what the implementation actually moved
+//! (`repro-experiments table1`).
+
+use super::AttnShape;
+use crate::linalg::softmax::{softmax_inplace, NEG_INF};
+
+/// Which feature (head-dim) subset a score kernel reads.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FeatureAccess {
+    /// All D components (vanilla / exact top-k scoring).
+    Full,
+    /// Leading `d` components — contiguous, Loki's PCA-ordered slice.
+    Prefix(usize),
+    /// Arbitrary component indices — SparQ's high-magnitude dims (strided
+    /// gather; same arithmetic as Prefix(len) but worse locality).
+    Gather(Vec<u16>),
+}
+
+impl FeatureAccess {
+    pub fn count(&self, full: usize) -> usize {
+        match self {
+            FeatureAccess::Full => full,
+            FeatureAccess::Prefix(d) => *d,
+            FeatureAccess::Gather(ix) => ix.len(),
+        }
+    }
+}
+
+/// Bytes moved by one kernel invocation (analytic tally, not hardware
+/// counters — on CPU the interesting quantity is "what a faithful GPU
+/// implementation would have to fetch from DRAM").
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DataMovement {
+    /// Bytes of KV-cache actually dereferenced.
+    pub cache_bytes_read: u64,
+    /// Bytes of dense temporaries materialized (0 for indexed kernels).
+    pub temp_bytes: u64,
+    /// Output bytes written.
+    pub out_bytes: u64,
+}
+
+impl DataMovement {
+    pub fn total(&self) -> u64 {
+        self.cache_bytes_read + 2 * self.temp_bytes + self.out_bytes
+    }
+
+    pub fn add(&mut self, o: DataMovement) {
+        self.cache_bytes_read += o.cache_bytes_read;
+        self.temp_bytes += o.temp_bytes;
+        self.out_bytes += o.out_bytes;
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Par {
+    Serial,
+    /// Threads split lanes only (SparQ-style m-parallelism).
+    Lanes1D,
+    /// Threads split (lane × sequence-block) tiles (Loki-style).
+    Tiles2D,
+}
+
+fn n_threads(requested: Option<usize>) -> usize {
+    requested
+        .or_else(|| std::env::var("LOKI_THREADS").ok().and_then(|v| v.parse().ok()))
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4))
+}
+
+#[inline]
+fn dot_prefix(a: &[f32], b: &[f32], d: usize) -> f32 {
+    let mut s = 0.0;
+    for i in 0..d {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[inline]
+fn dot_gather(a: &[f32], b: &[f32], idx: &[u16]) -> f32 {
+    let mut s = 0.0;
+    for &i in idx {
+        s += a[i as usize] * b[i as usize];
+    }
+    s
+}
+
+/// Per-(lane, seq-range) inner loop shared by all score kernels.
+fn score_range(
+    q: &[f32],
+    kc_lane: &[f32],
+    d_full: usize,
+    feat: &FeatureAccess,
+    scale: f32,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
+    match feat {
+        FeatureAccess::Full => {
+            for j in j0..j1 {
+                out[j - j0] = dot_prefix(q, &kc_lane[j * d_full..], d_full) * scale;
+            }
+        }
+        FeatureAccess::Prefix(d) => {
+            for j in j0..j1 {
+                out[j - j0] = dot_prefix(q, &kc_lane[j * d_full..], *d) * scale;
+            }
+        }
+        FeatureAccess::Gather(idx) => {
+            for j in j0..j1 {
+                out[j - j0] = dot_gather(q, &kc_lane[j * d_full..(j + 1) * d_full], idx) * scale;
+            }
+        }
+    }
+}
+
+/// Approximate/exact scores over the live cache, **no temporaries**.
+///
+/// q: `[lanes, D]`; kc: `[lanes, cap, D]` with `lane_stride = cap·D`;
+/// out: `[lanes, live]`. Returns the bytes a faithful implementation
+/// streams: `lanes · live · d_used · 4`.
+#[allow(clippy::too_many_arguments)]
+pub fn scores_indexed(
+    shape: AttnShape,
+    q: &[f32],
+    kc: &[f32],
+    lane_stride: usize,
+    live: usize,
+    feat: &FeatureAccess,
+    scale: f32,
+    par: Par,
+    threads: Option<usize>,
+    out: &mut [f32],
+) -> DataMovement {
+    let (lanes, d) = (shape.lanes, shape.head_dim);
+    assert_eq!(q.len(), lanes * d);
+    assert!(out.len() >= lanes * live);
+    let mv = DataMovement {
+        cache_bytes_read: (lanes * live * feat.count(d) * 4) as u64,
+        temp_bytes: 0,
+        out_bytes: (lanes * live * 4) as u64,
+    };
+    let t = n_threads(threads);
+    match par {
+        Par::Serial => {
+            for lane in 0..lanes {
+                score_range(
+                    &q[lane * d..(lane + 1) * d],
+                    &kc[lane * lane_stride..],
+                    d,
+                    feat,
+                    scale,
+                    0,
+                    live,
+                    &mut out[lane * live..(lane + 1) * live],
+                );
+            }
+        }
+        Par::Lanes1D => {
+            // SparQ-style: one thread per chunk of lanes. With lanes < t
+            // the surplus threads idle.
+            let t = t.min(lanes.max(1));
+            let lanes_per = lanes.div_ceil(t);
+            std::thread::scope(|scope| {
+                let mut rest = &mut out[..lanes * live];
+                let mut lane0 = 0;
+                while lane0 < lanes {
+                    let n = lanes_per.min(lanes - lane0);
+                    let (chunk, tail) = rest.split_at_mut(n * live);
+                    rest = tail;
+                    let l0 = lane0;
+                    scope.spawn(move || {
+                        for (li, lane) in (l0..l0 + n).enumerate() {
+                            score_range(
+                                &q[lane * d..(lane + 1) * d],
+                                &kc[lane * lane_stride..],
+                                d,
+                                feat,
+                                scale,
+                                0,
+                                live,
+                                &mut chunk[li * live..(li + 1) * live],
+                            );
+                        }
+                    });
+                    lane0 += n;
+                }
+            });
+        }
+        Par::Tiles2D => {
+            // Loki-style: tiles over (lane, seq block); sequence feeds all
+            // cores even at lanes = 1.
+            let want = t * 4;
+            let blocks = want.div_ceil(lanes.max(1)).max(1).min(live.max(1));
+            let bw = live.div_ceil(blocks).max(1);
+            struct SendPtr(usize);
+            let out_addr = SendPtr(out.as_mut_ptr() as usize);
+            let out_addr = &out_addr;
+            let total = lanes * blocks;
+            let next = std::sync::atomic::AtomicUsize::new(0);
+            let next = &next;
+            std::thread::scope(|scope| {
+                for _ in 0..t.min(total) {
+                    scope.spawn(move || loop {
+                        let w = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if w >= total {
+                            break;
+                        }
+                        let lane = w / blocks;
+                        let b = w % blocks;
+                        let j0 = b * bw;
+                        let j1 = ((b + 1) * bw).min(live);
+                        if j0 >= j1 {
+                            continue;
+                        }
+                        // SAFETY: (lane, j0..j1) ranges are disjoint.
+                        let dst = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                (out_addr.0 as *mut f32).add(lane * live + j0),
+                                j1 - j0,
+                            )
+                        };
+                        score_range(
+                            &q[lane * d..(lane + 1) * d],
+                            &kc[lane * lane_stride..],
+                            d,
+                            feat,
+                            scale,
+                            j0,
+                            j1,
+                            dst,
+                        );
+                    });
+                }
+            });
+        }
+    }
+    mv
+}
+
+/// PyTorch-baseline scoring: materialize the `[live, d_used]` sub-matrix
+/// per lane (`K[:, :live, feat]` → contiguous temp), then dense matmul.
+#[allow(clippy::too_many_arguments)]
+pub fn scores_dense_copy(
+    shape: AttnShape,
+    q: &[f32],
+    kc: &[f32],
+    lane_stride: usize,
+    live: usize,
+    feat: &FeatureAccess,
+    scale: f32,
+    out: &mut [f32],
+) -> DataMovement {
+    let (lanes, d) = (shape.lanes, shape.head_dim);
+    let du = feat.count(d);
+    let mut temp = vec![0.0f32; live * du];
+    let mut mv = DataMovement {
+        cache_bytes_read: (lanes * live * du * 4) as u64,
+        temp_bytes: (lanes * live * du * 4) as u64,
+        out_bytes: (lanes * live * 4) as u64,
+    };
+    let mut qbuf = vec![0.0f32; du];
+    for lane in 0..lanes {
+        let lane_k = &kc[lane * lane_stride..];
+        // Gather into dense temp (the copy PyTorch indexing would make).
+        for j in 0..live {
+            let row = &lane_k[j * d..(j + 1) * d];
+            match feat {
+                FeatureAccess::Full => temp[j * du..(j + 1) * du].copy_from_slice(&row[..du]),
+                FeatureAccess::Prefix(p) => {
+                    temp[j * du..(j + 1) * du].copy_from_slice(&row[..*p])
+                }
+                FeatureAccess::Gather(idx) => {
+                    for (t, &fi) in idx.iter().enumerate() {
+                        temp[j * du + t] = row[fi as usize];
+                    }
+                }
+            }
+        }
+        // The query must be gathered with the same feature set.
+        let qrow = &q[lane * d..(lane + 1) * d];
+        match feat {
+            FeatureAccess::Gather(idx) => {
+                for (t, &fi) in idx.iter().enumerate() {
+                    qbuf[t] = qrow[fi as usize];
+                }
+            }
+            _ => qbuf.copy_from_slice(&qrow[..du]),
+        }
+        let orow = &mut out[lane * live..(lane + 1) * live];
+        for j in 0..live {
+            orow[j] = dot_prefix(&qbuf, &temp[j * du..], du) * scale;
+        }
+    }
+    mv.out_bytes += 0;
+    mv
+}
+
+/// Exact attention over an index-selected token subset, reading the cache
+/// in place (Loki lines 7–9). Returns the context vectors `[lanes, D]`.
+#[allow(clippy::too_many_arguments)]
+pub fn attend_rows_indexed(
+    shape: AttnShape,
+    q: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    lane_stride: usize,
+    selected: &[Vec<u32>],
+    scale: f32,
+    threads: Option<usize>,
+    out: &mut [f32],
+) -> DataMovement {
+    let (lanes, d) = (shape.lanes, shape.head_dim);
+    assert_eq!(selected.len(), lanes);
+    assert_eq!(out.len(), lanes * d);
+    let total_sel: usize = selected.iter().map(|s| s.len()).sum();
+    let mv = DataMovement {
+        cache_bytes_read: (2 * total_sel * d * 4) as u64, // K and V rows
+        temp_bytes: 0,
+        out_bytes: (lanes * d * 4) as u64,
+    };
+    let t = n_threads(threads).min(lanes.max(1));
+    let lanes_per = lanes.div_ceil(t);
+    std::thread::scope(|scope| {
+        let mut rest = &mut out[..];
+        let mut lane0 = 0;
+        while lane0 < lanes {
+            let n = lanes_per.min(lanes - lane0);
+            let (chunk, tail) = rest.split_at_mut(n * d);
+            rest = tail;
+            let l0 = lane0;
+            scope.spawn(move || {
+                let mut scores: Vec<f32> = Vec::new();
+                for (li, lane) in (l0..l0 + n).enumerate() {
+                    let sel = &selected[lane];
+                    let qlane = &q[lane * d..(lane + 1) * d];
+                    let klane = &kc[lane * lane_stride..];
+                    let vlane = &vc[lane * lane_stride..];
+                    scores.clear();
+                    scores.extend(sel.iter().map(|&j| {
+                        dot_prefix(qlane, &klane[j as usize * d..], d) * scale
+                    }));
+                    softmax_inplace(&mut scores);
+                    let orow = &mut chunk[li * d..(li + 1) * d];
+                    orow.fill(0.0);
+                    for (p, &j) in scores.iter().zip(sel.iter()) {
+                        let vrow = &vlane[j as usize * d..(j as usize + 1) * d];
+                        for (o, &v) in orow.iter_mut().zip(vrow) {
+                            *o += p * v;
+                        }
+                    }
+                }
+            });
+            lane0 += n;
+        }
+    });
+    mv
+}
+
+/// PyTorch-baseline gather-attend: densify selected K and V rows first.
+#[allow(clippy::too_many_arguments)]
+pub fn attend_rows_dense_copy(
+    shape: AttnShape,
+    q: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    lane_stride: usize,
+    selected: &[Vec<u32>],
+    scale: f32,
+    out: &mut [f32],
+) -> DataMovement {
+    let (lanes, d) = (shape.lanes, shape.head_dim);
+    let total_sel: usize = selected.iter().map(|s| s.len()).sum();
+    let mut mv = DataMovement {
+        cache_bytes_read: (2 * total_sel * d * 4) as u64,
+        temp_bytes: (2 * total_sel * d * 4) as u64,
+        out_bytes: (lanes * d * 4) as u64,
+    };
+    let max_k = selected.iter().map(|s| s.len()).max().unwrap_or(0);
+    let mut kbuf = vec![0.0f32; max_k * d];
+    let mut vbuf = vec![0.0f32; max_k * d];
+    let mut scores = vec![0.0f32; max_k];
+    for lane in 0..lanes {
+        let sel = &selected[lane];
+        let klane = &kc[lane * lane_stride..];
+        let vlane = &vc[lane * lane_stride..];
+        for (t, &j) in sel.iter().enumerate() {
+            kbuf[t * d..(t + 1) * d].copy_from_slice(&klane[j as usize * d..(j as usize + 1) * d]);
+            vbuf[t * d..(t + 1) * d].copy_from_slice(&vlane[j as usize * d..(j as usize + 1) * d]);
+        }
+        let qlane = &q[lane * d..(lane + 1) * d];
+        for t in 0..sel.len() {
+            scores[t] = dot_prefix(qlane, &kbuf[t * d..], d) * scale;
+        }
+        softmax_inplace(&mut scores[..sel.len()]);
+        let orow = &mut out[lane * d..(lane + 1) * d];
+        orow.fill(0.0);
+        for t in 0..sel.len() {
+            let p = scores[t];
+            for (o, &v) in orow.iter_mut().zip(&vbuf[t * d..(t + 1) * d]) {
+                *o += p * v;
+            }
+        }
+    }
+    mv.temp_bytes += 0;
+    mv
+}
+
+/// Full attention over the live prefix (the vanilla baseline): exact
+/// scores + softmax + AV in place.
+#[allow(clippy::too_many_arguments)]
+pub fn full_attend(
+    shape: AttnShape,
+    q: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    lane_stride: usize,
+    live: usize,
+    scale: f32,
+    threads: Option<usize>,
+    out: &mut [f32],
+) -> DataMovement {
+    let all: Vec<Vec<u32>> = (0..shape.lanes).map(|_| (0..live as u32).collect()).collect();
+    let mut scores_mv = DataMovement {
+        cache_bytes_read: 0,
+        temp_bytes: 0,
+        out_bytes: 0,
+    };
+    let mv = attend_rows_indexed(shape, q, kc, vc, lane_stride, &all, scale, threads, out);
+    scores_mv.add(mv);
+    scores_mv
+}
+
+/// Mask helper: NEG_INF beyond `live` (used by variant code paths that
+/// score the padded cache region).
+pub fn mask_dead_slots(scores: &mut [f32], live: usize) {
+    for s in scores[live..].iter_mut() {
+        *s = NEG_INF;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn setup(lanes: usize, m: usize, d: usize, live: usize) -> (AttnShape, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let shape = AttnShape { lanes, head_dim: d, max_len: m };
+        let mut rng = Xoshiro256::new(42);
+        let q = rng.normal_vec(lanes * d);
+        let kc = rng.normal_vec(lanes * m * d);
+        let vc = rng.normal_vec(lanes * m * d);
+        let _ = live;
+        (shape, q, kc, vc)
+    }
+
+    #[test]
+    fn score_kernels_agree() {
+        let (shape, q, kc, _vc) = setup(3, 64, 16, 50);
+        let live = 50;
+        let stride = 64 * 16;
+        let scale = 0.25;
+        for feat in [
+            FeatureAccess::Full,
+            FeatureAccess::Prefix(4),
+            FeatureAccess::Gather(vec![0, 3, 7, 11]),
+        ] {
+            let mut a = vec![0.0; 3 * live];
+            let mut b = vec![0.0; 3 * live];
+            let mut c = vec![0.0; 3 * live];
+            let mut dcp = vec![0.0; 3 * live];
+            scores_indexed(shape, &q, &kc, stride, live, &feat, scale, Par::Serial, Some(1), &mut a);
+            scores_indexed(shape, &q, &kc, stride, live, &feat, scale, Par::Lanes1D, Some(4), &mut b);
+            scores_indexed(shape, &q, &kc, stride, live, &feat, scale, Par::Tiles2D, Some(4), &mut c);
+            scores_dense_copy(shape, &q, &kc, stride, live, &feat, scale, &mut dcp);
+            for i in 0..3 * live {
+                assert!((a[i] - b[i]).abs() < 1e-5, "{feat:?} 1d");
+                assert!((a[i] - c[i]).abs() < 1e-5, "{feat:?} 2d");
+                // Gather through dense copy differs only by float order.
+                assert!((a[i] - dcp[i]).abs() < 1e-4, "{feat:?} dense");
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_equals_gather_of_leading_dims() {
+        let (shape, q, kc, _) = setup(2, 32, 8, 20);
+        let stride = 32 * 8;
+        let mut a = vec![0.0; 2 * 20];
+        let mut b = vec![0.0; 2 * 20];
+        scores_indexed(shape, &q, &kc, stride, 20, &FeatureAccess::Prefix(3), 1.0, Par::Serial, Some(1), &mut a);
+        scores_indexed(shape, &q, &kc, stride, 20, &FeatureAccess::Gather(vec![0, 1, 2]), 1.0, Par::Serial, Some(1), &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn attend_kernels_agree_and_account_bytes() {
+        let (shape, q, kc, vc) = setup(4, 64, 16, 60);
+        let stride = 64 * 16;
+        let sel: Vec<Vec<u32>> = (0..4).map(|l| (0..15u32).map(|x| x * 4 + l as u32 % 4).collect()).collect();
+        let mut a = vec![0.0; 4 * 16];
+        let mut b = vec![0.0; 4 * 16];
+        let mva = attend_rows_indexed(shape, &q, &kc, &vc, stride, &sel, 0.25, Some(3), &mut a);
+        let mvb = attend_rows_dense_copy(shape, &q, &kc, &vc, stride, &sel, 0.25, &mut b);
+        for i in 0..a.len() {
+            assert!((a[i] - b[i]).abs() < 1e-4);
+        }
+        assert_eq!(mva.temp_bytes, 0);
+        assert_eq!(mvb.temp_bytes, (2 * 4 * 15 * 16 * 4) as u64);
+        assert_eq!(mva.cache_bytes_read, mvb.cache_bytes_read);
+    }
+
+    #[test]
+    fn full_attend_matches_selected_all() {
+        let (shape, q, kc, vc) = setup(2, 32, 8, 32);
+        let stride = 32 * 8;
+        let mut a = vec![0.0; 2 * 8];
+        let mut b = vec![0.0; 2 * 8];
+        full_attend(shape, &q, &kc, &vc, stride, 32, 0.3, Some(2), &mut a);
+        let all: Vec<Vec<u32>> = (0..2).map(|_| (0..32).collect()).collect();
+        attend_rows_indexed(shape, &q, &kc, &vc, stride, &all, 0.3, Some(1), &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn movement_scales_with_d_used() {
+        let (shape, q, kc, _) = setup(1, 128, 32, 128);
+        let stride = 128 * 32;
+        let mut out = vec![0.0; 128];
+        let full = scores_indexed(shape, &q, &kc, stride, 128, &FeatureAccess::Full, 1.0, Par::Serial, Some(1), &mut out);
+        let quarter = scores_indexed(shape, &q, &kc, stride, 128, &FeatureAccess::Prefix(8), 1.0, Par::Serial, Some(1), &mut out);
+        assert_eq!(full.cache_bytes_read, 4 * quarter.cache_bytes_read);
+    }
+}

@@ -1,0 +1,51 @@
+//! Pure-Rust decode-attention substrate at arbitrary model shapes.
+//!
+//! The compiled PJRT path (see [`crate::runtime`]) runs the small served
+//! model; the paper's *timing* studies, however, are at Llama2-13B shapes
+//! (H=40, D=128, S up to 3584, batch 16) which no CPU-compiled toy model
+//! reaches. This module reimplements every attention variant the paper
+//! evaluates as explicit CPU kernels with byte-movement accounting, so the
+//! Figure 6/7/16 experiments measure the *same effects* the paper measures
+//! (data movement, parallelism structure, cache-append cost) at the same
+//! tensor shapes:
+//!
+//! * [`kernels`] — indexed score / gather-attend kernels: feature-prefix
+//!   slicing (Loki), arbitrary column gather (SparQ), dense-copy baseline
+//!   (PyTorch-style), each serial / 1-D / 2-D threaded.
+//! * [`cache`]   — KV-cache with in-place ring append vs HuggingFace-style
+//!   reallocating append (Fig. 6 right).
+//! * [`variants`] — full / exact-topk / Loki / H2O / StreamingLLM /
+//!   SparQ / PCAAttn decode steps over the cache, with selected-index
+//!   reporting for the Jaccard agreement study (Fig. 6 left).
+
+pub mod cache;
+pub mod kernels;
+pub mod rope;
+pub mod variants;
+
+pub use cache::{AppendPolicy, KvCache};
+pub use kernels::{DataMovement, FeatureAccess};
+pub use variants::{AttnVariant, DecodeOutput, VariantParams};
+
+/// Shape of one attention layer's decode problem. `lanes` is batch·heads
+/// flattened: every lane owns `max_len × head_dim` rows of K and V.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AttnShape {
+    pub lanes: usize,
+    pub head_dim: usize,
+    pub max_len: usize,
+}
+
+impl AttnShape {
+    pub fn llama2_13b(batch: usize, max_len: usize) -> Self {
+        Self { lanes: batch * 40, head_dim: 128, max_len }
+    }
+
+    pub fn llama2_7b(batch: usize, max_len: usize) -> Self {
+        Self { lanes: batch * 32, head_dim: 128, max_len }
+    }
+
+    pub fn cache_floats(&self) -> usize {
+        self.lanes * self.max_len * self.head_dim
+    }
+}

@@ -1,0 +1,79 @@
+//! Rotary position embeddings (rotate-half form), matching
+//! `python/compile/model.py::apply_rope` exactly — pre-/post-rotary key
+//! analysis in Rust must agree with the python-calibrated bases.
+
+/// Apply RoPE in place to a `[head_dim]` vector at `position`.
+pub fn apply_rope(x: &mut [f32], position: usize, theta_base: f32) {
+    let d = x.len();
+    let half = d / 2;
+    debug_assert_eq!(half * 2, d, "head_dim must be even");
+    for i in 0..half {
+        let freq = theta_base.powf(-(i as f32) / half as f32);
+        let ang = position as f32 * freq;
+        let (sin, cos) = ang.sin_cos();
+        let x1 = x[i];
+        let x2 = x[i + half];
+        x[i] = x1 * cos - x2 * sin;
+        x[i + half] = x1 * sin + x2 * cos;
+    }
+}
+
+/// Apply RoPE to every `[head_dim]` row of a `[n, head_dim]` block where
+/// row `i` sits at sequence position `start + i`.
+pub fn apply_rope_rows(rows: &mut [f32], head_dim: usize, start: usize, theta_base: f32) {
+    for (i, row) in rows.chunks_exact_mut(head_dim).enumerate() {
+        apply_rope(row, start + i, theta_base);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn position_zero_is_identity() {
+        let mut x = vec![1.0, 2.0, 3.0, 4.0];
+        let orig = x.clone();
+        apply_rope(&mut x, 0, 10000.0);
+        assert_eq!(x, orig);
+    }
+
+    #[test]
+    fn preserves_norm() {
+        let mut x = vec![0.3, -1.2, 0.7, 2.0, -0.5, 0.1];
+        let n0: f32 = x.iter().map(|v| v * v).sum();
+        apply_rope(&mut x, 17, 10000.0);
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-5);
+    }
+
+    #[test]
+    fn relative_rotation_property() {
+        // RoPE makes dot(q_m, k_n) depend only on (m - n): check
+        // dot(rope(q, 5), rope(k, 3)) == dot(rope(q, 7), rope(k, 5)).
+        let q0 = vec![0.5, -0.25, 1.5, 0.75];
+        let k0 = vec![-1.0, 0.4, 0.2, 0.9];
+        let dot = |a: &[f32], b: &[f32]| -> f32 { a.iter().zip(b).map(|(x, y)| x * y).sum() };
+        let mut q1 = q0.clone();
+        let mut k1 = k0.clone();
+        apply_rope(&mut q1, 5, 10000.0);
+        apply_rope(&mut k1, 3, 10000.0);
+        let mut q2 = q0.clone();
+        let mut k2 = k0.clone();
+        apply_rope(&mut q2, 7, 10000.0);
+        apply_rope(&mut k2, 5, 10000.0);
+        assert!((dot(&q1, &k1) - dot(&q2, &k2)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rows_use_consecutive_positions() {
+        let mut block = vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0];
+        apply_rope_rows(&mut block, 4, 3, 10000.0);
+        let mut row0 = vec![1.0, 0.0, 0.0, 0.0];
+        let mut row1 = vec![1.0, 0.0, 0.0, 0.0];
+        apply_rope(&mut row0, 3, 10000.0);
+        apply_rope(&mut row1, 4, 10000.0);
+        assert_eq!(&block[..4], &row0[..]);
+        assert_eq!(&block[4..], &row1[..]);
+    }
+}

@@ -1,0 +1,93 @@
+//! `repro-experiments` — regenerate every table and figure of the paper.
+//!
+//!     repro-experiments <id> [--quick]
+//!
+//! ids: fig1 fig2 fig9 fig10 fig12 fig3 fig4 fig5 fig6-jaccard fig6-calib
+//!      fig6-append fig7 fig7-tradeoff fig15 fig16 table1 table2 table3
+//!      table5 | analysis | quality | timing | all
+//!
+//! Output: the paper-shaped table on stdout + results/<id>.{txt,json}.
+
+use anyhow::Result;
+
+use loki::experiments as ex;
+use loki::runtime::RuntimeStack;
+use loki::util::args::Args;
+use loki::util::artifacts_dir;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let quick = args.flag("quick") || std::env::var("LOKI_QUICK").is_ok();
+    let ids: Vec<String> = if args.positional.is_empty() {
+        eprintln!("usage: repro-experiments <id>|analysis|quality|timing|all [--quick]");
+        return Ok(());
+    } else {
+        args.positional.clone()
+    };
+
+    let expand = |id: &str| -> Vec<&'static str> {
+        match id {
+            "analysis" => vec!["fig1", "fig2", "fig9", "fig10", "fig12"],
+            "quality" => vec!["table2", "fig3", "fig4", "fig5", "fig6-calib", "fig15", "table5"],
+            "timing" => vec!["fig6-jaccard", "fig6-append", "fig7", "fig7-tradeoff", "fig16",
+                             "table1", "hlo-cost", "roofline"],
+            "all" => vec![
+                "fig1", "fig2", "fig9", "fig10", "fig12", "table1", "hlo-cost",
+                "roofline", "fig6-jaccard", "fig6-append", "fig16", "fig7",
+                "fig7-tradeoff", "table2", "fig3", "fig5", "fig4", "fig6-calib",
+                "fig15", "table5", "table3",
+            ],
+            other => vec![Box::leak(other.to_string().into_boxed_str())],
+        }
+    };
+
+    // The compiled runtime loads lazily (several quality experiments share it).
+    let mut stack: Option<RuntimeStack> = None;
+    let mut get_stack = || -> Result<&'static RuntimeStack> {
+        if stack.is_none() {
+            stack = Some(RuntimeStack::load(&artifacts_dir())?);
+        }
+        // SAFETY-free leak: the stack lives for the whole process.
+        Ok(Box::leak(Box::new(stack.take().unwrap())))
+    };
+    let mut leaked: Option<&'static RuntimeStack> = None;
+    let mut runtime = |leaked: &mut Option<&'static RuntimeStack>| -> Result<&'static RuntimeStack> {
+        if leaked.is_none() {
+            *leaked = Some(get_stack()?);
+        }
+        Ok(leaked.unwrap())
+    };
+
+    for group in &ids {
+        for id in expand(group) {
+            let t0 = std::time::Instant::now();
+            println!("\n##### {id} ################################################");
+            match id {
+                "fig1" => drop(ex::fig1_rank_models::run(90.0)?),
+                "fig2" => drop(ex::fig2_rank_layers::run_layers(90.0)?),
+                "fig9" => drop(ex::fig2_rank_layers::run_spectra()?),
+                "fig10" => drop(ex::fig2_rank_layers::run_heatmap(90.0)?),
+                "fig12" => drop(ex::fig2_rank_layers::run_qv(90.0)?),
+                "table1" => drop(ex::table1_speedup::run()?),
+                "hlo-cost" => drop(ex::hlo_cost::run()?),
+                "roofline" => drop(ex::roofline_report::run()?),
+                "fig6-jaccard" => drop(ex::fig6_jaccard::run(quick)?),
+                "fig6-append" => drop(ex::fig6_append::run(quick)?),
+                "fig7" => drop(ex::fig7_attn_time::run(quick)?),
+                "fig7-tradeoff" => drop(ex::fig7_attn_time::run_tradeoff(quick)?),
+                "fig16" => drop(ex::fig16_kernels::run(quick)?),
+                "table2" => drop(ex::table2_ppl::run(runtime(&mut leaked)?, quick)?),
+                "fig3" => drop(ex::fig3_quality_sweep::run(runtime(&mut leaked)?, quick, false)?),
+                "table3" => drop(ex::fig3_quality_sweep::run(runtime(&mut leaked)?, quick, true)?),
+                "fig4" => drop(ex::fig4_longbench::run(runtime(&mut leaked)?, quick)?),
+                "fig5" => drop(ex::fig5_downstream::run(runtime(&mut leaked)?, quick)?),
+                "fig6-calib" => drop(ex::fig6_calib::run(runtime(&mut leaked)?, quick)?),
+                "fig15" => drop(ex::fig15_variable_df::run(runtime(&mut leaked)?, quick)?),
+                "table5" => drop(ex::table5_pcaattn::run(runtime(&mut leaked)?, quick)?),
+                other => eprintln!("unknown experiment id: {other}"),
+            }
+            println!("[{id} took {:.1}s]", t0.elapsed().as_secs_f64());
+        }
+    }
+    Ok(())
+}

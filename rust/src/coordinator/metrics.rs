@@ -1,0 +1,96 @@
+//! Fleet-level engine metrics: throughput, latency distributions,
+//! scheduler activity. Rendered by `repro serve --report` and the
+//! e2e_serving bench.
+
+use std::time::Instant;
+
+use crate::linalg::stats::Summary;
+
+#[derive(Debug)]
+pub struct EngineMetrics {
+    started: Instant,
+    pub requests_in: u64,
+    pub requests_done: u64,
+    pub tokens_generated: u64,
+    pub prefills: u64,
+    pub decode_steps: u64,
+    pub injections: u64,
+    pub lane_resets: u64,
+    /// Seconds.
+    pub ttft: Summary,
+    pub e2e_latency: Summary,
+    pub queue_wait: Summary,
+    pub decode_step_time: Summary,
+}
+
+impl Default for EngineMetrics {
+    fn default() -> Self {
+        Self {
+            started: Instant::now(),
+            requests_in: 0,
+            requests_done: 0,
+            tokens_generated: 0,
+            prefills: 0,
+            decode_steps: 0,
+            injections: 0,
+            lane_resets: 0,
+            ttft: Summary::new(),
+            e2e_latency: Summary::new(),
+            queue_wait: Summary::new(),
+            decode_step_time: Summary::new(),
+        }
+    }
+}
+
+impl EngineMetrics {
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Generated tokens per second of wall time.
+    pub fn throughput_tok_s(&self) -> f64 {
+        let t = self.uptime_s();
+        if t > 0.0 {
+            self.tokens_generated as f64 / t
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests: {} in / {} done | tokens: {} ({:.1} tok/s)\n\
+             prefills: {} | decode steps: {} | injections: {} | lane resets: {}\n\
+             ttft_s:    {}\n\
+             e2e_s:     {}\n\
+             queue_s:   {}\n\
+             step_s:    {}",
+            self.requests_in,
+            self.requests_done,
+            self.tokens_generated,
+            self.throughput_tok_s(),
+            self.prefills,
+            self.decode_steps,
+            self.injections,
+            self.lane_resets,
+            self.ttft.display(),
+            self.e2e_latency.display(),
+            self.queue_wait.display(),
+            self.decode_step_time.display(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let mut m = EngineMetrics::default();
+        m.tokens_generated = 100;
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(m.throughput_tok_s() > 0.0);
+        assert!(m.report().contains("tokens: 100"));
+    }
+}

@@ -1,0 +1,27 @@
+//! L3 serving coordinator — the system the paper's method plugs into.
+//!
+//! A vLLM-style single-node inference engine built on the channel-fronted
+//! PJRT runtime:
+//!
+//! * [`request`] — request/response types and per-request latency records.
+//! * [`sampler`] — greedy / temperature / top-p sampling.
+//! * [`engine`]  — the continuous batcher: a persistent decode *gang* of
+//!   bucket-size lanes; finished lanes are refilled by prefilling the next
+//!   queued request as a batch-1 state and *injecting* it between decode
+//!   iterations (iteration-level scheduling à la Orca). Prefill-vs-decode
+//!   priority is a scheduler knob.
+//! * [`metrics`] — fleet counters + latency summaries.
+//!
+//! Loki enters as the engine's `DecodeVariant`: the scheduler chooses the
+//! attention graph (full / loki / h2o / pcaattn) per gang, making sparse
+//! attention a serving-config rather than a model fork.
+
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod sampler;
+
+pub use engine::{Engine, EngineConfig, SchedulerPolicy};
+pub use metrics::EngineMetrics;
+pub use request::{GenRequest, GenResult, RequestTiming};
+pub use sampler::{SampleCfg, Sampler};

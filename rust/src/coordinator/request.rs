@@ -1,0 +1,53 @@
+//! Request / response types for the serving engine.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+use super::sampler::SampleCfg;
+
+/// A generation request submitted to the engine.
+#[derive(Debug)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Stop generation when this byte is produced (e.g. b'\n').
+    pub stop_token: Option<i32>,
+    pub sampling: SampleCfg,
+    /// Where to deliver the result.
+    pub reply: Sender<GenResult>,
+}
+
+/// Timing of a single request through the engine.
+#[derive(Clone, Debug, Default)]
+pub struct RequestTiming {
+    pub queue_s: f64,
+    /// Time-to-first-token measured from submission.
+    pub ttft_s: f64,
+    pub total_s: f64,
+    pub decode_steps: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct GenResult {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub text: String,
+    pub finished_reason: FinishReason,
+    pub timing: RequestTiming,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    MaxTokens,
+    StopToken,
+    CacheFull,
+    EngineShutdown,
+}
+
+/// Internal: a request plus its admission timestamp.
+#[derive(Debug)]
+pub struct QueuedRequest {
+    pub req: GenRequest,
+    pub submitted: Instant,
+}

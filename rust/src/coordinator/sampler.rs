@@ -1,0 +1,133 @@
+//! Token sampling: greedy, temperature, nucleus (top-p).
+
+use crate::util::rng::Xoshiro256;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SampleCfg {
+    /// 0.0 → greedy argmax.
+    pub temperature: f32,
+    /// Nucleus mass; 1.0 disables the top-p cut.
+    pub top_p: f32,
+    pub seed: u64,
+}
+
+impl Default for SampleCfg {
+    fn default() -> Self {
+        Self { temperature: 0.0, top_p: 1.0, seed: 0 }
+    }
+}
+
+impl SampleCfg {
+    pub fn greedy() -> Self {
+        Self::default()
+    }
+
+    pub fn creative(seed: u64) -> Self {
+        Self { temperature: 0.8, top_p: 0.95, seed }
+    }
+}
+
+/// Stateful sampler (one per lane; deterministic given the seed).
+#[derive(Clone, Debug)]
+pub struct Sampler {
+    cfg: SampleCfg,
+    rng: Xoshiro256,
+}
+
+impl Sampler {
+    pub fn new(cfg: SampleCfg) -> Self {
+        Self { cfg, rng: Xoshiro256::new(cfg.seed ^ 0x5A17_AB1E) }
+    }
+
+    pub fn sample(&mut self, logits: &[f32]) -> usize {
+        if self.cfg.temperature <= 0.0 {
+            return crate::model::argmax(logits);
+        }
+        // Scale, softmax.
+        let inv_t = 1.0 / self.cfg.temperature;
+        let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut probs: Vec<(usize, f32)> = logits
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| (i, ((l - max) * inv_t).exp()))
+            .collect();
+        let sum: f32 = probs.iter().map(|(_, p)| p).sum();
+        for p in &mut probs {
+            p.1 /= sum;
+        }
+        // Nucleus cut.
+        if self.cfg.top_p < 1.0 {
+            probs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let mut cum = 0.0;
+            let mut keep = probs.len();
+            for (i, (_, p)) in probs.iter().enumerate() {
+                cum += p;
+                if cum >= self.cfg.top_p {
+                    keep = i + 1;
+                    break;
+                }
+            }
+            probs.truncate(keep);
+            let s: f32 = probs.iter().map(|(_, p)| p).sum();
+            for p in &mut probs {
+                p.1 /= s;
+            }
+        }
+        // Inverse-CDF draw.
+        let u = self.rng.uniform_f32();
+        let mut cum = 0.0;
+        for (i, p) in &probs {
+            cum += p;
+            if u <= cum {
+                return *i;
+            }
+        }
+        probs.last().map(|(i, _)| *i).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let mut s = Sampler::new(SampleCfg::greedy());
+        let logits = vec![0.1, 3.0, -2.0, 1.0];
+        for _ in 0..5 {
+            assert_eq!(s.sample(&logits), 1);
+        }
+    }
+
+    #[test]
+    fn temperature_sampling_covers_support() {
+        let mut s = Sampler::new(SampleCfg { temperature: 1.0, top_p: 1.0, seed: 1 });
+        let logits = vec![1.0, 1.0, 1.0, 1.0];
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            seen[s.sample(&logits)] = true;
+        }
+        assert!(seen.iter().all(|&x| x), "uniform logits should hit all tokens");
+    }
+
+    #[test]
+    fn top_p_excludes_tail() {
+        // One dominant token (p > 0.9) with top_p=0.5 → always chosen.
+        let mut s = Sampler::new(SampleCfg { temperature: 1.0, top_p: 0.5, seed: 2 });
+        let logits = vec![10.0, 0.0, 0.0, 0.0];
+        for _ in 0..50 {
+            assert_eq!(s.sample(&logits), 0);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = SampleCfg { temperature: 0.7, top_p: 0.9, seed: 42 };
+        let mut a = Sampler::new(cfg);
+        let mut b = Sampler::new(cfg);
+        let logits: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin()).collect();
+        for _ in 0..20 {
+            assert_eq!(a.sample(&logits), b.sample(&logits));
+        }
+    }
+}

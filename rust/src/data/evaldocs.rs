@@ -1,0 +1,50 @@
+//! Perplexity eval documents (`artifacts/eval_{profile}.npz`).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+use xla::{FromRawBytes, Literal};
+
+/// Token matrix `[n_docs, doc_len]` for one corpus profile.
+pub struct EvalDocs {
+    pub profile: String,
+    pub docs: Vec<Vec<i32>>,
+}
+
+impl EvalDocs {
+    pub fn load(artifacts: &Path, profile: &str) -> Result<Self> {
+        let path = artifacts.join(format!("eval_{profile}.npz"));
+        let lits = Literal::read_npz_by_name(&path, &(), &["tokens"])
+            .map_err(|e| anyhow!("loading {}: {e}", path.display()))?;
+        let lit = &lits[0];
+        let shape = lit.array_shape().map_err(|e| anyhow!("{e}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let flat = lit.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?;
+        let (n, len) = (dims[0], dims[1]);
+        let docs = (0..n).map(|i| flat[i * len..(i + 1) * len].to_vec()).collect();
+        Ok(Self { profile: profile.to_string(), docs })
+    }
+
+    pub fn doc_len(&self) -> usize {
+        self.docs.first().map(|d| d.len()).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::artifacts_dir;
+
+    #[test]
+    fn loads_eval_docs() {
+        let dir = artifacts_dir();
+        if !dir.join("eval_wiki.npz").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let docs = EvalDocs::load(&dir, "wiki").unwrap();
+        assert!(!docs.docs.is_empty());
+        assert!(docs.doc_len() >= 128);
+        assert!(docs.docs.iter().flatten().all(|&t| (0..256).contains(&t)));
+    }
+}

@@ -1,0 +1,17 @@
+//! Evaluation data: exported corpora/eval docs, task suites and serving
+//! workload generation.
+//!
+//! * [`tasks`]    — loads `artifacts/tasks.json` (facts, filler pool) and
+//!   builds the short-context suite (fact QA, copy, induction — the
+//!   LM-harness stand-ins) and the LongBench-analog long-context suite
+//!   (needle QA, multi-needle QA, few-shot patterns, code-ish completion).
+//! * [`evaldocs`] — perplexity documents exported by aot.py.
+//! * [`workload`] — Poisson/burst request traces for the serving benches.
+
+pub mod evaldocs;
+pub mod tasks;
+pub mod workload;
+
+pub use evaldocs::EvalDocs;
+pub use tasks::{LongTask, LongTaskKind, ShortTask, ShortTaskKind, TaskSuite};
+pub use workload::{Workload, WorkloadCfg};

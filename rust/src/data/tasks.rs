@@ -1,0 +1,409 @@
+//! Task suites standing in for the paper's LM-harness and LongBench
+//! evaluations, built from the corpus material the model was trained on
+//! (`artifacts/tasks.json`: facts, filler sentence pool).
+//!
+//! Short-context suite (Figs. 3/5, Tables 2–4 stand-ins):
+//! * **FactQA**       — "the code of <name> is" → multiple-choice over the
+//!   true value and 3 distractor values, scored by sequence log-prob
+//!   (the MMLU/ARC analog: knowledge retrieval).
+//! * **Copy**         — "repeat : w1 w2 w3 ; " → must echo w1 (direct
+//!   attention dependence — the Hellaswag-ish continuation analog).
+//! * **Induction**    — "a b a b a " → must produce b (in-context pattern,
+//!   the Winogrande-ish analog).
+//!
+//! Long-context suite (Fig. 4 stand-in), prompts padded with filler to a
+//! target length:
+//! * **NeedleQA**     — one fact sentence hidden in filler; query at the
+//!   end (Single-Doc QA).
+//! * **MultiNeedleQA**— several facts hidden; query one (Multi-Doc QA).
+//! * **FewShot**      — unseen pattern shown k times in-context (Few-shot
+//!   learning).
+//! * **CopyFar**      — copy drill whose source sits at the far start
+//!   (Code-completion-ish: long-range verbatim reuse).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::model::ByteTokenizer;
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256;
+
+#[derive(Clone, Debug)]
+pub struct Fact {
+    pub name: String,
+    pub value: String,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ShortTaskKind {
+    FactQA,
+    Copy,
+    Induction,
+}
+
+impl ShortTaskKind {
+    pub fn all() -> [ShortTaskKind; 3] {
+        [ShortTaskKind::FactQA, ShortTaskKind::Copy, ShortTaskKind::Induction]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShortTaskKind::FactQA => "fact_qa",
+            ShortTaskKind::Copy => "copy",
+            ShortTaskKind::Induction => "induction",
+        }
+    }
+}
+
+/// One multiple-choice item: prompt + candidate continuations, index of
+/// the correct one. Scored by total byte log-prob of each continuation.
+#[derive(Clone, Debug)]
+pub struct ShortTask {
+    pub kind: ShortTaskKind,
+    pub prompt: String,
+    pub choices: Vec<String>,
+    pub correct: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LongTaskKind {
+    NeedleQA,
+    MultiNeedleQA,
+    FewShot,
+    CopyFar,
+}
+
+impl LongTaskKind {
+    pub fn all() -> [LongTaskKind; 4] {
+        [
+            LongTaskKind::NeedleQA,
+            LongTaskKind::MultiNeedleQA,
+            LongTaskKind::FewShot,
+            LongTaskKind::CopyFar,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LongTaskKind::NeedleQA => "needle_qa",
+            LongTaskKind::MultiNeedleQA => "multi_needle_qa",
+            LongTaskKind::FewShot => "few_shot",
+            LongTaskKind::CopyFar => "copy_far",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LongTask {
+    pub kind: LongTaskKind,
+    pub prompt: String,
+    pub choices: Vec<String>,
+    pub correct: usize,
+}
+
+/// Loaded task source material + generators.
+pub struct TaskSuite {
+    pub facts: Vec<Fact>,
+    pub fillers: Vec<String>,
+    tokenizer: ByteTokenizer,
+}
+
+impl TaskSuite {
+    pub fn load(artifacts: &Path) -> Result<Self> {
+        let j = Json::parse_file(&artifacts.join("tasks.json")).context("tasks.json")?;
+        let facts = j
+            .req("facts")
+            .as_arr()
+            .context("facts")?
+            .iter()
+            .filter_map(|f| {
+                Some(Fact {
+                    name: f.get("name")?.as_str()?.to_string(),
+                    value: f.get("value")?.as_str()?.to_string(),
+                })
+            })
+            .collect::<Vec<_>>();
+        let fillers = j
+            .req("fillers")
+            .req("wiki")
+            .as_arr()
+            .context("fillers.wiki")?
+            .iter()
+            .filter_map(|s| s.as_str().map(|x| x.to_string()))
+            .collect::<Vec<_>>();
+        if facts.is_empty() || fillers.is_empty() {
+            anyhow::bail!("tasks.json has no facts/fillers");
+        }
+        Ok(Self { facts, fillers, tokenizer: ByteTokenizer })
+    }
+
+    pub fn tokenizer(&self) -> ByteTokenizer {
+        self.tokenizer
+    }
+
+    // -- short-context -------------------------------------------------------
+
+    pub fn short_tasks(&self, kind: ShortTaskKind, n: usize, seed: u64) -> Vec<ShortTask> {
+        let mut rng = Xoshiro256::new(seed ^ kind.name().len() as u64);
+        (0..n).map(|_| self.short_task(kind, &mut rng)).collect()
+    }
+
+    fn short_task(&self, kind: ShortTaskKind, rng: &mut Xoshiro256) -> ShortTask {
+        match kind {
+            ShortTaskKind::FactQA => {
+                let f = rng.choice(&self.facts);
+                let mut choices = vec![f.value.clone()];
+                while choices.len() < 4 {
+                    let d = &rng.choice(&self.facts).value;
+                    if !choices.contains(d) {
+                        choices.push(d.clone());
+                    }
+                }
+                rng.shuffle(&mut choices);
+                let correct = choices.iter().position(|c| *c == f.value).unwrap();
+                ShortTask {
+                    kind,
+                    prompt: format!("the code of {} is", f.name),
+                    choices: choices.iter().map(|c| format!(" {c}")).collect(),
+                    correct,
+                }
+            }
+            ShortTaskKind::Copy => {
+                // In-distribution: "repeat : w1 w2 w3 ; w1 w2 w3 ."
+                let words = self.sample_words(rng, 3);
+                let prompt = format!("repeat : {} ; ", words.join(" "));
+                self.choice_task(kind, prompt, &words[0], rng)
+            }
+            ShortTaskKind::Induction => {
+                let w = self.sample_words(rng, 2);
+                let (a, b) = (&w[0], &w[1]);
+                let reps = 3;
+                let mut prompt = String::new();
+                for _ in 0..reps {
+                    prompt.push_str(&format!("{a} {b} "));
+                }
+                prompt.push_str(a);
+                prompt.push(' ');
+                self.choice_task(kind, prompt, b, rng)
+            }
+        }
+    }
+
+    /// Build a 4-way choice task with `answer` + 3 distractor words.
+    fn choice_task(
+        &self,
+        kind: ShortTaskKind,
+        prompt: String,
+        answer: &str,
+        rng: &mut Xoshiro256,
+    ) -> ShortTask {
+        let mut choices = vec![answer.to_string()];
+        while choices.len() < 4 {
+            let w = self.sample_words(rng, 1).remove(0);
+            if !choices.contains(&w) {
+                choices.push(w);
+            }
+        }
+        rng.shuffle(&mut choices);
+        let correct = choices.iter().position(|c| c == answer).unwrap();
+        ShortTask { kind, prompt, choices, correct }
+    }
+
+    /// Words drawn from the filler pool (in-distribution vocabulary).
+    fn sample_words(&self, rng: &mut Xoshiro256, n: usize) -> Vec<String> {
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            let sent = rng.choice(&self.fillers);
+            let words: Vec<&str> =
+                sent.split_whitespace().filter(|w| w.len() > 2 && *w != ".").collect();
+            if let Some(w) = words.get(rng.below(words.len().max(1))) {
+                out.push(w.to_string());
+            }
+        }
+        out
+    }
+
+    // -- long-context --------------------------------------------------------
+
+    pub fn long_tasks(
+        &self,
+        kind: LongTaskKind,
+        n: usize,
+        target_len_bytes: usize,
+        seed: u64,
+    ) -> Vec<LongTask> {
+        let mut rng = Xoshiro256::new(seed ^ (target_len_bytes as u64) << 8);
+        (0..n).map(|_| self.long_task(kind, target_len_bytes, &mut rng)).collect()
+    }
+
+    fn filler_block(&self, rng: &mut Xoshiro256, bytes: usize) -> String {
+        let mut s = String::new();
+        while s.len() < bytes {
+            let f: &String = rng.choice(&self.fillers);
+            s.push_str(f);
+            s.push(' ');
+        }
+        s.truncate(bytes);
+        // Don't cut mid-word: trim back to last space.
+        if let Some(i) = s.rfind(' ') {
+            s.truncate(i + 1);
+        }
+        s
+    }
+
+    fn long_task(&self, kind: LongTaskKind, target: usize, rng: &mut Xoshiro256) -> LongTask {
+        match kind {
+            LongTaskKind::NeedleQA => {
+                let f = rng.choice(&self.facts).clone();
+                let needle = format!("the code of {} is {} . ", f.name, f.value);
+                let query = format!("the code of {} is", f.name);
+                let body = target.saturating_sub(needle.len() + query.len() + 2);
+                // Needle placed at a random depth.
+                let pre = body * rng.range(10, 80) / 100;
+                let prompt = format!(
+                    "{}{}{}{}",
+                    self.filler_block(rng, pre),
+                    needle,
+                    self.filler_block(rng, body - pre),
+                    query
+                );
+                self.fact_choices(kind, prompt, &f, rng)
+            }
+            LongTaskKind::MultiNeedleQA => {
+                let k = 4;
+                let mut fs: Vec<Fact> = (0..k).map(|_| rng.choice(&self.facts).clone()).collect();
+                fs.dedup_by(|a, b| a.name == b.name);
+                let ask = fs[rng.below(fs.len())].clone();
+                let query = format!("the code of {} is", ask.name);
+                let seg = target / (fs.len() + 1);
+                let mut prompt = String::new();
+                for f in &fs {
+                    prompt.push_str(&self.filler_block(rng, seg.saturating_sub(40)));
+                    prompt.push_str(&format!("the code of {} is {} . ", f.name, f.value));
+                }
+                prompt.push_str(&self.filler_block(rng, seg / 2));
+                prompt.push_str(&query);
+                self.fact_choices(kind, prompt, &ask, rng)
+            }
+            LongTaskKind::FewShot => {
+                // Unseen mapping demonstrated k times: "<x> maps to <y> ."
+                let words = self.sample_words(rng, 8);
+                let (x, y) = (&words[0], &words[1]);
+                let shots = 3;
+                let mut demo = String::new();
+                for _ in 0..shots {
+                    demo.push_str(&format!("{x} maps to {y} . "));
+                }
+                let body = target.saturating_sub(demo.len() * 2);
+                let prompt = format!(
+                    "{}{}{}{x} maps to",
+                    demo,
+                    self.filler_block(rng, body),
+                    demo
+                );
+                let mut t = self.choice_task(ShortTaskKind::Copy, prompt, y, rng);
+                t.choices = t.choices.iter().map(|c| format!(" {c}")).collect();
+                LongTask { kind, prompt: t.prompt, choices: t.choices, correct: t.correct }
+            }
+            LongTaskKind::CopyFar => {
+                let words = self.sample_words(rng, 4);
+                let head = format!("repeat : {} ; ", words.join(" "));
+                let body = target.saturating_sub(head.len() * 2);
+                let prompt = format!("{}{}{}", head, self.filler_block(rng, body), head.trim_end());
+                let mut t = self.choice_task(ShortTaskKind::Copy, prompt, &words[0], rng);
+                t.choices = t.choices.iter().map(|c| format!(" {c}")).collect();
+                LongTask { kind, prompt: t.prompt, choices: t.choices, correct: t.correct }
+            }
+        }
+    }
+
+    fn fact_choices(
+        &self,
+        kind: LongTaskKind,
+        prompt: String,
+        f: &Fact,
+        rng: &mut Xoshiro256,
+    ) -> LongTask {
+        let mut choices = vec![f.value.clone()];
+        while choices.len() < 4 {
+            let d = &rng.choice(&self.facts).value;
+            if !choices.contains(d) {
+                choices.push(d.clone());
+            }
+        }
+        rng.shuffle(&mut choices);
+        let correct = choices.iter().position(|c| *c == f.value).unwrap();
+        LongTask {
+            kind,
+            prompt,
+            choices: choices.iter().map(|c| format!(" {c}")).collect(),
+            correct,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::artifacts_dir;
+
+    fn suite() -> Option<TaskSuite> {
+        let dir = artifacts_dir();
+        if !dir.join("tasks.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(TaskSuite::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn short_tasks_are_well_formed() {
+        let Some(s) = suite() else { return };
+        for kind in ShortTaskKind::all() {
+            let tasks = s.short_tasks(kind, 20, 1);
+            assert_eq!(tasks.len(), 20);
+            for t in &tasks {
+                assert_eq!(t.choices.len(), 4);
+                assert!(t.correct < 4);
+                assert!(!t.prompt.is_empty());
+                // Choices must be distinct.
+                let mut c = t.choices.clone();
+                c.sort();
+                c.dedup();
+                assert_eq!(c.len(), 4, "{t:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn long_tasks_hit_target_length() {
+        let Some(s) = suite() else { return };
+        for kind in LongTaskKind::all() {
+            for t in s.long_tasks(kind, 5, 600, 2) {
+                assert!(
+                    (400..=700).contains(&t.prompt.len()),
+                    "{kind:?} prompt len {}",
+                    t.prompt.len()
+                );
+                // The correct answer string must actually appear in the
+                // prompt body for retrieval tasks.
+                if matches!(kind, LongTaskKind::NeedleQA | LongTaskKind::MultiNeedleQA) {
+                    let ans = t.choices[t.correct].trim();
+                    assert!(t.prompt.contains(ans), "{kind:?}: answer not in prompt");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let Some(s) = suite() else { return };
+        let a = s.short_tasks(ShortTaskKind::FactQA, 5, 7);
+        let b = s.short_tasks(ShortTaskKind::FactQA, 5, 7);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.correct, y.correct);
+        }
+    }
+}

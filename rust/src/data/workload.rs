@@ -1,0 +1,126 @@
+//! Serving workload traces: request streams with Poisson or bursty
+//! arrivals, prompt/generation length distributions. Drives the
+//! e2e_serving bench and `repro serve --trace`.
+
+use crate::util::rng::Xoshiro256;
+
+#[derive(Clone, Debug)]
+pub struct WorkloadCfg {
+    pub n_requests: usize,
+    /// Mean arrival rate (requests/second); 0 → all arrive at t=0.
+    pub rate: f64,
+    /// Burstiness: probability that a request arrives back-to-back with
+    /// the previous one instead of waiting an exponential gap.
+    pub burst_p: f64,
+    pub prompt_len: (usize, usize),
+    pub gen_len: (usize, usize),
+    pub seed: u64,
+}
+
+impl Default for WorkloadCfg {
+    fn default() -> Self {
+        Self {
+            n_requests: 32,
+            rate: 0.0,
+            burst_p: 0.0,
+            prompt_len: (32, 200),
+            gen_len: (16, 64),
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TraceItem {
+    /// Seconds after trace start.
+    pub arrival_s: f64,
+    pub prompt: String,
+    pub max_new_tokens: usize,
+}
+
+/// A generated request trace.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub items: Vec<TraceItem>,
+}
+
+impl Workload {
+    /// Build a trace using filler sentences as prompt material.
+    pub fn generate(cfg: &WorkloadCfg, fillers: &[String]) -> Self {
+        assert!(!fillers.is_empty());
+        let mut rng = Xoshiro256::new(cfg.seed ^ w0rkload_seed());
+        let mut t = 0.0f64;
+        let mut items = Vec::with_capacity(cfg.n_requests);
+        for _ in 0..cfg.n_requests {
+            if cfg.rate > 0.0 && rng.uniform() >= cfg.burst_p {
+                t += rng.exponential(cfg.rate);
+            }
+            let plen = rng.range(cfg.prompt_len.0, cfg.prompt_len.1 + 1);
+            let mut prompt = String::new();
+            while prompt.len() < plen {
+                let f: &String = rng.choice(fillers);
+                prompt.push_str(f);
+                prompt.push(' ');
+            }
+            prompt.truncate(plen);
+            items.push(TraceItem {
+                arrival_s: t,
+                prompt,
+                max_new_tokens: rng.range(cfg.gen_len.0, cfg.gen_len.1 + 1),
+            });
+        }
+        Self { items }
+    }
+
+    pub fn duration_s(&self) -> f64 {
+        self.items.last().map(|i| i.arrival_s).unwrap_or(0.0)
+    }
+}
+
+// Tiny helper so the seed constant reads as intent, not magic.
+#[allow(non_snake_case)]
+fn w0rkload_seed() -> u64 {
+    0x57AC_E0FD
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fillers() -> Vec<String> {
+        vec!["tor ven al ker .".to_string(), "pol gra tec his cen .".to_string()]
+    }
+
+    #[test]
+    fn arrivals_are_monotone() {
+        let cfg = WorkloadCfg { n_requests: 50, rate: 10.0, ..Default::default() };
+        let w = Workload::generate(&cfg, &fillers());
+        assert_eq!(w.items.len(), 50);
+        for pair in w.items.windows(2) {
+            assert!(pair[1].arrival_s >= pair[0].arrival_s);
+        }
+        assert!(w.duration_s() > 0.0);
+    }
+
+    #[test]
+    fn zero_rate_is_batch_arrival() {
+        let cfg = WorkloadCfg { n_requests: 10, rate: 0.0, ..Default::default() };
+        let w = Workload::generate(&cfg, &fillers());
+        assert!(w.items.iter().all(|i| i.arrival_s == 0.0));
+    }
+
+    #[test]
+    fn lengths_respect_bounds() {
+        let cfg = WorkloadCfg {
+            n_requests: 40,
+            prompt_len: (50, 60),
+            gen_len: (5, 8),
+            ..Default::default()
+        };
+        let w = Workload::generate(&cfg, &fillers());
+        for i in &w.items {
+            assert!(i.prompt.len() <= 60);
+            assert!((5..=8).contains(&i.max_new_tokens));
+        }
+    }
+}

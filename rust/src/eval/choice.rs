@@ -1,0 +1,76 @@
+//! Multiple-choice scoring by continuation log-prob (the LM-harness
+//! discipline): each choice's bytes are teacher-forced after the prompt
+//! and the summed log-prob decides the prediction.
+
+use anyhow::Result;
+
+use crate::model::log_prob;
+use crate::runtime::{DecodeRequest, RuntimeStack};
+
+use super::variant_spec::VariantSpec;
+
+#[derive(Clone, Debug)]
+pub struct ChoiceOutcome {
+    pub predicted: usize,
+    pub correct: usize,
+    pub logprobs: Vec<f64>,
+}
+
+impl ChoiceOutcome {
+    pub fn is_correct(&self) -> bool {
+        self.predicted == self.correct
+    }
+}
+
+/// Score one item: the prompt is prefilled once per lane (all lanes share
+/// the prompt), then each lane teacher-forces a different choice. Choices
+/// beyond the batch bucket are scored in extra passes.
+pub fn score_choices_batch(
+    stack: &RuntimeStack,
+    pca: &str,
+    variant: &VariantSpec,
+    prompt: &[i32],
+    choices: &[Vec<i32>],
+    correct: usize,
+) -> Result<ChoiceOutcome> {
+    let bucket = stack.manifest.pick_batch_bucket(choices.len());
+    let mut logprobs = vec![0.0f64; choices.len()];
+    // Clamp over-long prompts to the largest prefill bucket, keeping the
+    // tail (recency carries the queries for our tasks... except the
+    // needle may sit anywhere — clamping is reported by the caller).
+    let max_p = *stack.manifest.prefill_buckets.iter().max().unwrap();
+    let prompt = if prompt.len() > max_p { &prompt[prompt.len() - max_p..] } else { prompt };
+
+    for (chunk_i, chunk) in choices.chunks(bucket).enumerate() {
+        let prompts: Vec<Vec<i32>> = chunk.iter().map(|_| prompt.to_vec()).collect();
+        let (id, mut logits) = stack.prefill(pca, &prompts)?;
+        let max_len = chunk.iter().map(|c| c.len()).max().unwrap_or(0);
+        let lanes = stack.state_batch(id).unwrap_or(chunk.len());
+        for p in 0..max_len {
+            for (lane, choice) in chunk.iter().enumerate() {
+                if p < choice.len() {
+                    logprobs[chunk_i * bucket + lane] +=
+                        log_prob(&logits[lane], choice[p] as usize) as f64;
+                }
+            }
+            if p + 1 == max_len {
+                break;
+            }
+            let mut tokens: Vec<i32> = chunk
+                .iter()
+                .map(|c| if p < c.len() { c[p] } else { 0 })
+                .collect();
+            tokens.resize(lanes, 0);
+            let dv = variant.materialize(&stack.manifest, prompt.len() + p + 1);
+            logits = stack.decode(&DecodeRequest { state: id, variant: dv, tokens })?;
+        }
+        stack.free(id);
+    }
+    let predicted = logprobs
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    Ok(ChoiceOutcome { predicted, correct, logprobs })
+}

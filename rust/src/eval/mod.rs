@@ -1,0 +1,15 @@
+//! Quality evaluation through the compiled runtime: perplexity and
+//! multiple-choice accuracy under any decode variant.
+//!
+//! Both harnesses run *stepwise teacher-forced decode* so the sparse
+//! attention under test is exercised at every generation position —
+//! exactly how the paper evaluates Loki/H2O (the method applies during
+//! generation, not during prefill).
+
+pub mod choice;
+pub mod ppl;
+pub mod variant_spec;
+
+pub use choice::{score_choices_batch, ChoiceOutcome};
+pub use ppl::{perplexity, PplReport};
+pub use variant_spec::VariantSpec;

@@ -1,0 +1,86 @@
+//! Perplexity under a decode variant (Table 2 / Fig. 3 machinery).
+
+use anyhow::Result;
+
+use crate::model::log_prob;
+use crate::runtime::{DecodeRequest, RuntimeStack};
+
+use super::variant_spec::VariantSpec;
+
+#[derive(Clone, Debug)]
+pub struct PplReport {
+    pub variant: String,
+    pub pca: String,
+    pub n_docs: usize,
+    pub n_tokens: usize,
+    pub nll_sum: f64,
+    pub wall_s: f64,
+}
+
+impl PplReport {
+    pub fn perplexity(&self) -> f64 {
+        (self.nll_sum / self.n_tokens.max(1) as f64).exp()
+    }
+}
+
+/// Teacher-forced perplexity of `docs` (equal lengths) under `variant`.
+///
+/// Docs are packed into gangs of the largest batch bucket; each step feeds
+/// the true next byte and scores it against the previous step's logits.
+/// The first `seed_len` tokens are prefilled (full attention, matching the
+/// paper's setup where approximation applies to generation steps) and
+/// excluded from the NLL.
+pub fn perplexity(
+    stack: &RuntimeStack,
+    pca: &str,
+    variant: &VariantSpec,
+    docs: &[Vec<i32>],
+    seed_len: usize,
+    max_tokens_per_doc: usize,
+) -> Result<PplReport> {
+    let t0 = std::time::Instant::now();
+    let bucket = *stack.manifest.batch_buckets.iter().max().unwrap();
+    let mut nll_sum = 0.0f64;
+    let mut n_tokens = 0usize;
+
+    for gang_docs in docs.chunks(bucket) {
+        let lanes = gang_docs.len();
+        let doc_len = gang_docs
+            .iter()
+            .map(|d| d.len())
+            .min()
+            .unwrap_or(0)
+            .min(seed_len + max_tokens_per_doc)
+            .min(stack.manifest.model.max_len - 1);
+        if doc_len <= seed_len {
+            continue;
+        }
+        let prompts: Vec<Vec<i32>> = gang_docs.iter().map(|d| d[..seed_len].to_vec()).collect();
+        let (id, mut logits) = stack.prefill(pca, &prompts)?;
+        // Position p: logits predict byte at p; feed byte at p, get logits
+        // for p+1.
+        for p in seed_len..doc_len {
+            for (lane, doc) in gang_docs.iter().enumerate() {
+                nll_sum -= log_prob(&logits[lane], doc[p] as usize) as f64;
+                n_tokens += 1;
+            }
+            if p + 1 == doc_len {
+                break;
+            }
+            let mut tokens: Vec<i32> = gang_docs.iter().map(|d| d[p]).collect();
+            tokens.resize(stack.state_batch(id).unwrap_or(lanes), 0);
+            // Budgets are fractions of the *live* length, per the paper.
+            let dv = variant.materialize(&stack.manifest, p + 1);
+            logits = stack.decode(&DecodeRequest { state: id, variant: dv, tokens })?;
+        }
+        stack.free(id);
+    }
+    Ok(PplReport {
+        variant: variant.label(),
+        pca: pca.to_string(),
+        n_docs: docs.len(),
+        n_tokens,
+        nll_sum,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}

@@ -1,0 +1,101 @@
+//! Fraction-based variant specs for evaluation.
+//!
+//! The paper's budgets are *fractions of the live sequence*: at step S,
+//! Loki selects k = k_f·S tokens. The compiled graphs take the absolute
+//! budget `j_sel` as a runtime input, so the eval harnesses rebuild the
+//! `DecodeVariant` each step from the current cache length. (The serving
+//! engine, by contrast, deliberately uses a fixed budget — a production
+//! latency-SLO choice.)
+
+use crate::runtime::{DecodeVariant, Manifest};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum VariantSpec {
+    Full,
+    Loki { k_f: f64, d_f: f64 },
+    /// Exact-TopK = Loki ranking with the full basis.
+    TopK { k_f: f64 },
+    H2o { k_f: f64 },
+    PcaAttn { d_f: f64 },
+    /// Per-layer d_f (Fig. 15's variable policy), shared k_f.
+    LokiVariable { k_f: f64, d_per_layer: Vec<usize> },
+}
+
+impl VariantSpec {
+    pub fn label(&self) -> String {
+        match self {
+            VariantSpec::Full => "full".into(),
+            VariantSpec::Loki { k_f, d_f } => format!("loki k={k_f} d={d_f}"),
+            VariantSpec::TopK { k_f } => format!("exact-topk k={k_f}"),
+            VariantSpec::H2o { k_f } => format!("h2o k={k_f}"),
+            VariantSpec::PcaAttn { d_f } => format!("pcaattn d={d_f}"),
+            VariantSpec::LokiVariable { k_f, .. } => format!("loki-var k={k_f}"),
+        }
+    }
+
+    /// Build the concrete decode call for the current live length.
+    pub fn materialize(&self, man: &Manifest, live: usize) -> DecodeVariant {
+        let budget = |k_f: f64| ((live as f64 * k_f).ceil() as i32).max(1);
+        match self {
+            VariantSpec::Full => DecodeVariant::Full,
+            VariantSpec::Loki { k_f, d_f } => {
+                if let DecodeVariant::Loki { d_mask, .. } =
+                    DecodeVariant::loki_fractions(man, 1.0, *d_f)
+                {
+                    DecodeVariant::Loki { d_mask, j_sel: budget(*k_f) }
+                } else {
+                    unreachable!()
+                }
+            }
+            VariantSpec::TopK { k_f } => {
+                if let DecodeVariant::Loki { d_mask, .. } =
+                    DecodeVariant::loki_fractions(man, 1.0, 1.0)
+                {
+                    DecodeVariant::Loki { d_mask, j_sel: budget(*k_f) }
+                } else {
+                    unreachable!()
+                }
+            }
+            VariantSpec::H2o { k_f } => DecodeVariant::H2o { j_sel: budget(*k_f).max(2) },
+            VariantSpec::PcaAttn { d_f } => DecodeVariant::pcaattn_fraction(man, *d_f),
+            VariantSpec::LokiVariable { k_f, d_per_layer } => {
+                if let DecodeVariant::Loki { d_mask, .. } =
+                    DecodeVariant::loki_variable(man, 1.0, d_per_layer)
+                {
+                    DecodeVariant::Loki { d_mask, j_sel: budget(*k_f) }
+                } else {
+                    unreachable!()
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::artifacts_dir;
+
+    #[test]
+    fn budgets_scale_with_live_length() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        let spec = VariantSpec::Loki { k_f: 0.25, d_f: 0.25 };
+        let a = spec.materialize(&man, 100);
+        let b = spec.materialize(&man, 400);
+        match (a, b) {
+            (DecodeVariant::Loki { j_sel: ja, d_mask: da },
+             DecodeVariant::Loki { j_sel: jb, d_mask: db }) => {
+                assert_eq!(ja, 25);
+                assert_eq!(jb, 100);
+                assert_eq!(da, db);
+                let kept: f32 = da.iter().sum();
+                assert_eq!(kept as usize, man.model.n_layers * man.model.head_dim / 4);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+}

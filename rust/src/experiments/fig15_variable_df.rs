@@ -1,0 +1,87 @@
+//! Appendix B.2 / Figure 15: per-layer variable d_f policy — set each
+//! layer's component count from its explained-variance threshold and
+//! compare against the fixed-d_f policy at matched compression.
+
+use anyhow::Result;
+
+use crate::analysis::KeyDump;
+use crate::data::EvalDocs;
+use crate::eval::{perplexity, VariantSpec};
+use crate::runtime::RuntimeStack;
+use crate::util::artifacts_dir;
+use crate::util::json::{self, Json};
+use crate::util::table::{fnum, Table};
+
+pub fn run(stack: &RuntimeStack, quick: bool) -> Result<Json> {
+    let docs = EvalDocs::load(&artifacts_dir(), "wiki")?;
+    let docs: Vec<Vec<i32>> = docs.docs.into_iter().take(super::scale(quick, 8)).collect();
+    let max_tokens = if quick { 120 } else { 400 };
+    let man = stack.manifest.clone();
+    let d = man.model.head_dim;
+    let k_f = 0.25;
+
+    // Per-layer rank at several explained-variance thresholds (head-mean),
+    // computed from the post-rotary key dump.
+    let dump = KeyDump::load(&artifacts_dir().join("keys_wiki.npz"), "k_post")?;
+    let bases = dump.pca_all();
+
+    let mut table = Table::new(
+        "Fig 15: fixed vs variable per-layer d_f (k_f = 0.25)",
+        &["policy", "per-layer d", "compression d̄/D", "ppl", "Δ vs full"],
+    );
+    let full = perplexity(stack, &man.default_pca, &VariantSpec::Full, &docs, 16, max_tokens)?
+        .perplexity();
+    let mut rows = Vec::new();
+
+    // Fixed policies.
+    for d_f in [0.5, 0.25, 0.125] {
+        let spec = VariantSpec::Loki { k_f, d_f };
+        let ppl = perplexity(stack, &man.default_pca, &spec, &docs, 16, max_tokens)?.perplexity();
+        table.row(vec![
+            format!("fixed d_f={d_f}"),
+            format!("{}", (d as f64 * d_f) as usize),
+            fnum(d_f, 3),
+            fnum(ppl, 4),
+            fnum(ppl - full, 4),
+        ]);
+        rows.push(json::obj(vec![
+            ("policy", json::s(&format!("fixed_{d_f}"))),
+            ("compression", json::num(d_f)),
+            ("ppl", json::num(ppl)),
+        ]));
+    }
+    // Variable policies from explained-variance thresholds (paper: 0.5–0.8).
+    for v_pct in [50.0, 65.0, 80.0] {
+        let d_per_layer: Vec<usize> = bases
+            .iter()
+            .map(|row| {
+                let mean: f64 = row.iter().map(|b| b.rank_at(v_pct) as f64).sum::<f64>()
+                    / row.len() as f64;
+                (mean.round() as usize).clamp(1, d)
+            })
+            .collect();
+        let compression =
+            d_per_layer.iter().sum::<usize>() as f64 / (d_per_layer.len() * d) as f64;
+        let spec = VariantSpec::LokiVariable { k_f, d_per_layer: d_per_layer.clone() };
+        let ppl = perplexity(stack, &man.default_pca, &spec, &docs, 16, max_tokens)?.perplexity();
+        table.row(vec![
+            format!("var @{v_pct:.0}% evar"),
+            format!("{d_per_layer:?}"),
+            fnum(compression, 3),
+            fnum(ppl, 4),
+            fnum(ppl - full, 4),
+        ]);
+        rows.push(json::obj(vec![
+            ("policy", json::s(&format!("variable_{v_pct}"))),
+            ("compression", json::num(compression)),
+            ("ppl", json::num(ppl)),
+            ("d_per_layer", json::arr(d_per_layer.iter().map(|&x| json::num(x as f64)))),
+        ]));
+        println!("  variable @{v_pct}%: d={d_per_layer:?} ppl {ppl:.4}");
+    }
+    table.emit("fig15_variable_df");
+    let out = json::arr(rows);
+    super::write_json("fig15_variable_df", &out);
+    println!("(paper: variable d_f does not significantly beat fixed — same verdict expected)");
+    Ok(out)
+}

@@ -1,0 +1,64 @@
+//! Figure 1 (left): Rank@90 of attention keys across models.
+//!
+//! The paper shows that across Llama/Mistral/Mixtral-class models the
+//! mean Rank@90 sits far below the head dimension. Our model family
+//! (trained from scratch at different widths/depths) plays that role; the
+//! `loki-random` entry is our added *untrained control* — its keys should
+//! sit near full rank, evidencing that training induces the structure.
+
+use anyhow::Result;
+
+use crate::analysis::rank::rank_table;
+use crate::analysis::KeyDump;
+use crate::util::json::{self, Json};
+use crate::util::table::{fnum, Table};
+use crate::util::{artifacts_dir, json::Json as J};
+
+pub fn run(v_pct: f64) -> Result<Json> {
+    let dir = artifacts_dir();
+    let manifest = crate::runtime::Manifest::load(&dir)?;
+    let mut models: Vec<String> = manifest.family_models.clone();
+    models.insert(0, manifest.model.name.clone());
+
+    let mut table = Table::new(
+        &format!("Fig 1 (left): mean Rank@{v_pct:.0} across models (full dim = last column)"),
+        &["model", "pre-rotary", "post-rotary", "D", "pre/D", "post/D"],
+    );
+    let mut rows = Vec::new();
+    for name in &models {
+        // Main model's dump lives in keys_wiki.npz; family models in
+        // family_<name>.npz.
+        let path = if *name == manifest.model.name {
+            dir.join("keys_wiki.npz")
+        } else {
+            dir.join(format!("family_{name}.npz"))
+        };
+        if !path.exists() {
+            eprintln!("skipping {name}: {} missing", path.display());
+            continue;
+        }
+        let pre = KeyDump::load(&path, "k_pre")?;
+        let post = KeyDump::load(&path, "k_post")?;
+        let rp = rank_table(&pre.pca_all(), v_pct).model_mean();
+        let ro = rank_table(&post.pca_all(), v_pct).model_mean();
+        let d = pre.dim as f64;
+        table.row(vec![
+            name.clone(),
+            fnum(rp, 1),
+            fnum(ro, 1),
+            format!("{}", pre.dim),
+            fnum(rp / d, 2),
+            fnum(ro / d, 2),
+        ]);
+        rows.push(json::obj(vec![
+            ("model", json::s(name)),
+            ("rank_pre", json::num(rp)),
+            ("rank_post", json::num(ro)),
+            ("dim", json::num(d)),
+        ]));
+    }
+    table.emit("fig1_rank_models");
+    let out: J = json::arr(rows);
+    super::write_json("fig1_rank_models", &out);
+    Ok(out)
+}

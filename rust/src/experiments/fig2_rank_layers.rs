@@ -1,0 +1,163 @@
+//! Figures 2 / 8–13: layer-wise Rank@90, eigen-spectra, head×layer
+//! heatmaps, and query/value dimensionality — the full §3 + Appendix A
+//! analysis, recomputed with the Rust PCA over the exported key dumps.
+
+use anyhow::Result;
+
+use crate::analysis::rank::rank_table;
+use crate::analysis::KeyDump;
+use crate::util::artifacts_dir;
+use crate::util::json::{self, Json};
+use crate::util::table::{fnum, Table};
+
+/// Fig 2 / App Fig 8: per-layer Rank@v for pre/post-rotary keys × corpora.
+pub fn run_layers(v_pct: f64) -> Result<Json> {
+    let dir = artifacts_dir();
+    let profiles = ["wiki", "web", "book"];
+    let mut table = Table::new(
+        &format!("Fig 2: per-layer Rank@{v_pct:.0} (head-mean), pre/post rotary × corpus"),
+        &["layer", "wiki pre", "wiki post", "web pre", "web post", "book pre", "book post"],
+    );
+    let mut stats = Vec::new();
+    for prof in profiles {
+        let path = dir.join(format!("keys_{prof}.npz"));
+        let pre = KeyDump::load(&path, "k_pre")?;
+        let post = KeyDump::load(&path, "k_post")?;
+        stats.push((rank_table(&pre.pca_all(), v_pct), rank_table(&post.pca_all(), v_pct)));
+    }
+    let layers = stats[0].0.per_layer.len();
+    let mut rows = Vec::new();
+    for l in 0..layers {
+        let mut row = vec![format!("{l}")];
+        let mut obj = vec![("layer", json::num(l as f64))];
+        for (i, prof) in profiles.iter().enumerate() {
+            row.push(fnum(stats[i].0.per_layer[l], 1));
+            row.push(fnum(stats[i].1.per_layer[l], 1));
+            obj.push((Box::leak(format!("{prof}_pre").into_boxed_str()), json::num(stats[i].0.per_layer[l])));
+            obj.push((Box::leak(format!("{prof}_post").into_boxed_str()), json::num(stats[i].1.per_layer[l])));
+        }
+        table.row(row);
+        rows.push(json::obj(obj));
+    }
+    table.emit("fig2_rank_layers");
+    let out = json::arr(rows);
+    super::write_json("fig2_rank_layers", &out);
+
+    // Consistency check the paper emphasises: per-layer profiles agree
+    // across calibration corpora.
+    let mut max_spread = 0.0f64;
+    for l in 0..layers {
+        let vals: Vec<f64> = stats.iter().map(|(p, _)| p.per_layer[l]).collect();
+        let spread = vals.iter().cloned().fold(f64::MIN, f64::max)
+            - vals.iter().cloned().fold(f64::MAX, f64::min);
+        max_spread = max_spread.max(spread);
+    }
+    println!("max cross-corpus spread of per-layer rank: {max_spread:.1} (consistency claim)");
+    Ok(out)
+}
+
+/// App Fig 9: normalized eigen-spectra for a few (layer, head) pairs.
+pub fn run_spectra() -> Result<Json> {
+    let dir = artifacts_dir();
+    let dump = KeyDump::load(&dir.join("keys_wiki.npz"), "k_post")?;
+    let picks = [(0usize, 0usize), (dump.layers - 1, dump.heads - 1)];
+    let mut rows = Vec::new();
+    let mut table = Table::new(
+        "Fig 9: normalized eigenvalues (first 12 components)",
+        &["layer,head", "spectrum (λ1..λ12)", "Rank@90"],
+    );
+    for (l, h) in picks {
+        let basis = dump.pca(l, h);
+        let spec: Vec<String> =
+            basis.eigenvalues.iter().take(12).map(|e| format!("{e:.3}")).collect();
+        table.row(vec![
+            format!("L{l},H{h}"),
+            spec.join(" "),
+            format!("{}", basis.rank_at(90.0)),
+        ]);
+        rows.push(json::obj(vec![
+            ("layer", json::num(l as f64)),
+            ("head", json::num(h as f64)),
+            ("eigenvalues", json::arr(basis.eigenvalues.iter().map(|&e| json::num(e as f64)))),
+        ]));
+    }
+    table.emit("fig9_spectra");
+    let out = json::arr(rows);
+    super::write_json("fig9_spectra", &out);
+    Ok(out)
+}
+
+/// App Figs 10/11: head × layer Rank@90 heatmap (pre and post rotary).
+pub fn run_heatmap(v_pct: f64) -> Result<Json> {
+    let dir = artifacts_dir();
+    let mut objs = Vec::new();
+    for kind in ["k_pre", "k_post"] {
+        let dump = KeyDump::load(&dir.join("keys_wiki.npz"), kind)?;
+        let stats = rank_table(&dump.pca_all(), v_pct);
+        let mut headers = vec!["layer".to_string()];
+        headers.extend((0..dump.heads).map(|h| format!("head {h}")));
+        let mut table = Table::new(
+            &format!("Fig 10/11: Rank@{v_pct:.0} heatmap ({kind})"),
+            &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        );
+        for (l, row) in stats.per_head.iter().enumerate() {
+            let mut cells = vec![format!("{l}")];
+            cells.extend(row.iter().map(|r| format!("{r}")));
+            table.row(cells);
+        }
+        table.emit(&format!("fig10_heatmap_{kind}"));
+        objs.push(json::obj(vec![
+            ("kind", json::s(kind)),
+            (
+                "ranks",
+                json::arr(stats.per_head.iter().map(|row| {
+                    json::arr(row.iter().map(|&r| json::num(r as f64)))
+                })),
+            ),
+        ]));
+    }
+    let out = json::arr(objs);
+    super::write_json("fig10_heatmap", &out);
+    Ok(out)
+}
+
+/// App Figs 12/13: query and value dimensionality (queries low, values
+/// near-full — the asymmetry the paper reports).
+pub fn run_qv(v_pct: f64) -> Result<Json> {
+    let dir = artifacts_dir();
+    let mut table = Table::new(
+        &format!("Fig 12/13: Rank@{v_pct:.0} of Q and V per layer (wiki)"),
+        &["layer", "q_post", "v", "k_post (ref)"],
+    );
+    let q = KeyDump::load(&dir.join("keys_wiki.npz"), "q_post")?;
+    let v = KeyDump::load(&dir.join("keys_wiki.npz"), "v")?;
+    let k = KeyDump::load(&dir.join("keys_wiki.npz"), "k_post")?;
+    let rq = rank_table(&q.pca_all(), v_pct);
+    let rv = rank_table(&v.pca_all(), v_pct);
+    let rk = rank_table(&k.pca_all(), v_pct);
+    let mut rows = Vec::new();
+    for l in 0..rq.per_layer.len() {
+        table.row(vec![
+            format!("{l}"),
+            fnum(rq.per_layer[l], 1),
+            fnum(rv.per_layer[l], 1),
+            fnum(rk.per_layer[l], 1),
+        ]);
+        rows.push(json::obj(vec![
+            ("layer", json::num(l as f64)),
+            ("q", json::num(rq.per_layer[l])),
+            ("v", json::num(rv.per_layer[l])),
+            ("k", json::num(rk.per_layer[l])),
+        ]));
+    }
+    table.row(vec![
+        "mean".into(),
+        fnum(rq.model_mean(), 1),
+        fnum(rv.model_mean(), 1),
+        fnum(rk.model_mean(), 1),
+    ]);
+    table.emit("fig12_qv_ranks");
+    let out = json::arr(rows);
+    super::write_json("fig12_qv_ranks", &out);
+    Ok(out)
+}

@@ -1,0 +1,83 @@
+//! Figure 5: short-context downstream accuracy for Full / Exact-TopK /
+//! H2O / Loki at k_f = 0.25 (d_f = 0.25 for Loki), per task and averaged.
+
+use anyhow::Result;
+
+use crate::data::tasks::{ShortTaskKind, TaskSuite};
+use crate::eval::{score_choices_batch, VariantSpec};
+use crate::runtime::RuntimeStack;
+use crate::util::artifacts_dir;
+use crate::util::json::{self, Json};
+use crate::util::table::{fnum, Table};
+
+pub fn run(stack: &RuntimeStack, quick: bool) -> Result<Json> {
+    let suite = TaskSuite::load(&artifacts_dir())?;
+    let tok = suite.tokenizer();
+    let items = super::scale(quick, 24);
+    let pca = stack.manifest.default_pca.clone();
+
+    let specs = vec![
+        ("full", VariantSpec::Full),
+        ("exact-topk", VariantSpec::TopK { k_f: 0.25 }),
+        ("h2o", VariantSpec::H2o { k_f: 0.25 }),
+        ("loki", VariantSpec::Loki { k_f: 0.25, d_f: 0.25 }),
+    ];
+    let mut headers = vec!["task".to_string()];
+    headers.extend(specs.iter().map(|(n, _)| n.to_string()));
+    let mut table = Table::new(
+        "Fig 5: short-context tasks, k_f = 0.25 — accuracy (agreement-with-full)",
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let mut rows = Vec::new();
+    let mut sums = vec![0.0f64; specs.len()];
+    let mut agree_sums = vec![0.0f64; specs.len()];
+    for kind in ShortTaskKind::all() {
+        let tasks = suite.short_tasks(kind, items, 3);
+        let mut cells = vec![kind.name().to_string()];
+        let mut obj = vec![("task", json::s(kind.name()))];
+        let mut full_preds: Vec<usize> = Vec::new();
+        for (si, (name, spec)) in specs.iter().enumerate() {
+            let mut correct = 0usize;
+            let mut preds = Vec::with_capacity(tasks.len());
+            for t in &tasks {
+                let prompt = tok.encode(&t.prompt);
+                let choices: Vec<Vec<i32>> = t.choices.iter().map(|c| tok.encode(c)).collect();
+                let out = score_choices_batch(stack, &pca, spec, &prompt, &choices, t.correct)?;
+                if out.is_correct() {
+                    correct += 1;
+                }
+                preds.push(out.predicted);
+            }
+            let acc = correct as f64 / tasks.len() as f64;
+            // Behaviour-fidelity vs full attention (column per method).
+            if si == 0 {
+                full_preds = preds.clone();
+            }
+            let agree = preds.iter().zip(&full_preds).filter(|(a, b)| a == b).count()
+                as f64
+                / tasks.len() as f64;
+            sums[si] += acc;
+            agree_sums[si] += agree;
+            cells.push(format!("{} ({})", fnum(acc, 2), fnum(agree, 2)));
+            obj.push((Box::leak(name.to_string().into_boxed_str()) as &str, json::num(acc)));
+            obj.push((
+                Box::leak(format!("{name}_agree").into_boxed_str()) as &str,
+                json::num(agree),
+            ));
+        }
+        table.row(cells);
+        rows.push(json::obj(obj));
+        println!("  {} done", kind.name());
+    }
+    let mut mean = vec!["mean".to_string()];
+    for (s, a) in sums.iter().zip(&agree_sums) {
+        let n = ShortTaskKind::all().len() as f64;
+        mean.push(format!("{} ({})", fnum(s / n, 2), fnum(a / n, 2)));
+    }
+    table.row(mean);
+    table.emit("fig5_downstream");
+    let out = json::arr(rows);
+    super::write_json("fig5_downstream", &out);
+    println!("(paper: Loki ≈ full > H2O; exact-topk is Loki's upper bound)");
+    Ok(out)
+}

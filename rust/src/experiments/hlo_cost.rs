@@ -1,0 +1,47 @@
+//! `repro-experiments hlo-cost` — static op census / FLOP / traffic
+//! comparison of the compiled decode graphs (the L2 §Perf evidence).
+
+use anyhow::Result;
+
+use crate::runtime::hlo_inspect::analyze_file;
+use crate::util::artifacts_dir;
+use crate::util::json::{self, Json};
+use crate::util::table::{fnum, Table};
+
+pub fn run() -> Result<Json> {
+    let dir = artifacts_dir();
+    let graphs = ["decode_full_b8", "decode_loki_b8", "decode_h2o_b8",
+                  "decode_pcaattn_b8", "prefill_b8_p512", "inject_b8"];
+    let mut table = Table::new(
+        "HLO cost census per compiled graph",
+        &["graph", "instrs", "dots", "whiles", "est MFLOP", "result MB", "top opcodes"],
+    );
+    let mut rows = Vec::new();
+    for g in graphs {
+        let path = dir.join(format!("{g}.hlo.txt"));
+        if !path.exists() {
+            continue;
+        }
+        let r = analyze_file(&path)?;
+        let tops: Vec<String> = r.top_opcodes(4).iter().map(|(o, c)| format!("{o}:{c}")).collect();
+        table.row(vec![
+            g.to_string(),
+            format!("{}", r.instr_count),
+            format!("{}", r.dot_count),
+            format!("{}", r.while_count),
+            fnum(r.flops as f64 / 1e6, 1),
+            fnum(r.result_bytes as f64 / 1e6, 1),
+            tops.join(" "),
+        ]);
+        rows.push(json::obj(vec![
+            ("graph", json::s(g)),
+            ("instrs", json::num(r.instr_count as f64)),
+            ("dots", json::num(r.dot_count as f64)),
+            ("flops", json::num(r.flops as f64)),
+        ]));
+    }
+    table.emit("hlo_cost");
+    let out = json::arr(rows);
+    super::write_json("hlo_cost", &out);
+    Ok(out)
+}

@@ -1,0 +1,47 @@
+//! Experiment harnesses — one module per paper table/figure.
+//!
+//! Every harness prints the paper-shaped table and writes
+//! `results/<id>.{txt,json}`. Regenerate any of them with
+//! `repro-experiments <id>`; `repro-experiments all` runs the full
+//! evaluation section. See DESIGN.md §5 for the experiment index and
+//! EXPERIMENTS.md for recorded paper-vs-measured outcomes.
+
+pub mod fig1_rank_models;
+pub mod fig2_rank_layers;
+pub mod fig3_quality_sweep;
+pub mod fig4_longbench;
+pub mod fig5_downstream;
+pub mod fig6_append;
+pub mod fig6_calib;
+pub mod fig6_jaccard;
+pub mod fig7_attn_time;
+pub mod fig15_variable_df;
+pub mod fig16_kernels;
+pub mod hlo_cost;
+pub mod roofline_report;
+pub mod table1_speedup;
+pub mod table2_ppl;
+pub mod table5_pcaattn;
+
+use std::path::PathBuf;
+
+use crate::util::json::Json;
+
+/// Write `results/<id>.json`.
+pub fn write_json(id: &str, value: &Json) -> PathBuf {
+    let path = crate::util::results_dir().join(format!("{id}.json"));
+    if let Err(e) = std::fs::write(&path, value.to_string()) {
+        eprintln!("warn: could not write {}: {e}", path.display());
+    }
+    path
+}
+
+/// Quick-mode scaling: experiments honor `--quick` (or LOKI_QUICK=1) by
+/// shrinking item counts ~4x; useful for CI smoke runs.
+pub fn scale(quick: bool, n: usize) -> usize {
+    if quick {
+        (n / 4).max(2)
+    } else {
+        n
+    }
+}

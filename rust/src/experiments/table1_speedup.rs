@@ -1,0 +1,93 @@
+//! Table 1 / Eq. 5: theoretical speedups and memory savings per method,
+//! validated against the byte movement the substrate kernels actually
+//! perform.
+
+use anyhow::Result;
+
+use crate::analysis::speedup::{memory_saving, SpeedupModel};
+use crate::attnsim::variants::{decode_attend, AttnVariant, VariantParams};
+use crate::attnsim::AttnShape;
+use crate::util::json::{self, Json};
+use crate::util::rng::Xoshiro256;
+use crate::util::table::{fnum, Table};
+
+pub fn run() -> Result<Json> {
+    let d = 128usize;
+    let s = 3072usize;
+    let model = SpeedupModel { d_full: d, seq: s };
+
+    let mut table = Table::new(
+        &format!("Table 1: method budgets and modeled speedups (D={d}, S={s})"),
+        &["method", "k_f", "d_f", "speedup (Eq.5)", "asymptote", "mem saving", "bytes vs full (measured)"],
+    );
+
+    // Measure actual bytes moved by the substrate kernels.
+    let shape = AttnShape { lanes: 8, head_dim: d, max_len: s };
+    let mut rng = Xoshiro256::new(table1());
+    let q = rng.normal_vec(shape.lanes * d);
+    let kc = rng.normal_vec(shape.lanes * s * d);
+    let vc = rng.normal_vec(shape.lanes * s * d);
+    let stride = s * d;
+    let measure = |variant: &AttnVariant, k_f: f64, d_f: f64| -> f64 {
+        let params = VariantParams {
+            k_sel: (k_f * s as f64) as usize,
+            d_sub: (d_f * d as f64) as usize,
+            ..Default::default()
+        };
+        let mut h2o_state = vec![vec![0.5f32; s]; shape.lanes];
+        let h2o = matches!(variant, AttnVariant::H2O).then_some(&mut h2o_state);
+        let out = decode_attend(variant, shape, &q, &kc, &vc, stride, s, &params, h2o);
+        out.movement.cache_bytes_read as f64
+    };
+    let full_bytes = measure(&AttnVariant::Full, 1.0, 1.0);
+
+    let rows_spec = vec![
+        ("Exact Top-K", AttnVariant::ExactTopK, 0.25, 1.0, f64::NAN, f64::NAN),
+        ("H2O", AttnVariant::H2O, 0.25, 1.0, 1.0 / 0.25, 4.0),
+        ("Loki (A)", AttnVariant::Loki, 0.25, 0.25, SpeedupModel::loki_speedup_asymptote(0.25, 0.25), 1.0),
+        ("Loki (B)", AttnVariant::Loki, 0.125, 0.5, SpeedupModel::loki_speedup_asymptote(0.5, 0.125), 1.0),
+    ];
+    let mut rows = Vec::new();
+    for (name, variant, k_f, d_f, asym, _mem) in rows_spec {
+        let modeled = match variant {
+            AttnVariant::Loki => model.vanilla_cost() / model.loki_cost(d_f, k_f),
+            AttnVariant::ExactTopK => model.vanilla_cost() / model.exact_topk_cost(k_f),
+            AttnVariant::H2O => model.vanilla_cost() / model.h2o_cost(k_f),
+            _ => 1.0,
+        };
+        let bytes = measure(&variant, k_f, d_f);
+        let key = match variant {
+            AttnVariant::H2O => "h2o",
+            _ => "other",
+        };
+        table.row(vec![
+            name.to_string(),
+            fnum(k_f, 3),
+            if matches!(variant, AttnVariant::Loki) { fnum(d_f, 3) } else { "full".into() },
+            fnum(modeled, 2),
+            fnum(asym, 2),
+            fnum(memory_saving(key, k_f), 1),
+            fnum(bytes / full_bytes, 3),
+        ]);
+        rows.push(json::obj(vec![
+            ("method", json::s(name)),
+            ("k_f", json::num(k_f)),
+            ("d_f", json::num(d_f)),
+            ("speedup_modeled", json::num(modeled)),
+            ("bytes_frac_vs_full", json::num(bytes / full_bytes)),
+        ]));
+    }
+    table.emit("table1_speedup");
+    let out = json::arr(rows);
+    super::write_json("table1_speedup", &out);
+    println!(
+        "(Eq.5 check: Loki byte fraction should approach d_f/2 + k_f = {:.3} for (0.25, 0.25))",
+        0.25 / 2.0 + 0.25
+    );
+    Ok(out)
+}
+
+#[allow(non_snake_case)]
+fn table1() -> u64 {
+    0x7AB1E
+}

@@ -1,0 +1,68 @@
+//! Appendix E / Table 5: PCAAttn (softmax directly over reduced-dim
+//! scores, no top-k rescue) collapses while Exact-TopK and H2O hold —
+//! the negative result motivating Loki's two-stage design.
+
+use anyhow::Result;
+
+use crate::data::tasks::{ShortTaskKind, TaskSuite};
+use crate::data::EvalDocs;
+use crate::eval::{perplexity, score_choices_batch, VariantSpec};
+use crate::runtime::RuntimeStack;
+use crate::util::artifacts_dir;
+use crate::util::json::{self, Json};
+use crate::util::table::{fnum, Table};
+
+pub fn run(stack: &RuntimeStack, quick: bool) -> Result<Json> {
+    let docs = EvalDocs::load(&artifacts_dir(), "wiki")?;
+    let docs: Vec<Vec<i32>> = docs.docs.into_iter().take(super::scale(quick, 8)).collect();
+    let max_tokens = if quick { 120 } else { 400 };
+    let items = super::scale(quick, 16);
+    let suite = TaskSuite::load(&artifacts_dir())?;
+    let tok = suite.tokenizer();
+    let pca = stack.manifest.default_pca.clone();
+
+    let settings = vec![
+        ("Full Attention", VariantSpec::Full),
+        ("Exact TopK k=.5", VariantSpec::TopK { k_f: 0.5 }),
+        ("H2O k=.5", VariantSpec::H2o { k_f: 0.5 }),
+        ("PCAAttn d=.5", VariantSpec::PcaAttn { d_f: 0.5 }),
+        ("Exact TopK k=.25", VariantSpec::TopK { k_f: 0.25 }),
+        ("H2O k=.25", VariantSpec::H2o { k_f: 0.25 }),
+        ("PCAAttn d=.25", VariantSpec::PcaAttn { d_f: 0.25 }),
+    ];
+    let mut table = Table::new(
+        "Table 5: PCAAttn vs baselines (ppl + mean short-task accuracy)",
+        &["method", "ppl", "task acc"],
+    );
+    let mut rows = Vec::new();
+    for (name, spec) in settings {
+        let ppl = perplexity(stack, &pca, &spec, &docs, 16, max_tokens)?.perplexity();
+        let mut total = 0.0;
+        let mut n = 0;
+        for kind in ShortTaskKind::all() {
+            for t in suite.short_tasks(kind, items, 9) {
+                let prompt = tok.encode(&t.prompt);
+                let choices: Vec<Vec<i32>> = t.choices.iter().map(|c| tok.encode(c)).collect();
+                if score_choices_batch(stack, &pca, &spec, &prompt, &choices, t.correct)?
+                    .is_correct()
+                {
+                    total += 1.0;
+                }
+                n += 1;
+            }
+        }
+        let acc = total / n as f64;
+        table.row(vec![name.to_string(), fnum(ppl, 4), fnum(acc, 3)]);
+        rows.push(json::obj(vec![
+            ("method", json::s(name)),
+            ("ppl", json::num(ppl)),
+            ("acc", json::num(acc)),
+        ]));
+        println!("  {name}: ppl {ppl:.4} acc {acc:.3}");
+    }
+    table.emit("table5_pcaattn");
+    let out = json::arr(rows);
+    super::write_json("table5_pcaattn", &out);
+    println!("(paper: PCAAttn perplexity explodes (38→933 at d=.5/.25) — ours should blow up too)");
+    Ok(out)
+}

@@ -1,0 +1,37 @@
+//! # Loki: Low-rank Keys for Efficient Sparse Attention — reproduction
+//!
+//! Full-system reproduction of Singhania et al., NeurIPS 2024, as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — a serving coordinator (continuous batcher,
+//!   prefill/decode scheduler, KV-lane manager) with Loki sparse attention
+//!   as a first-class per-request attention variant, plus every substrate
+//!   the paper's evaluation needs (PCA/eigen analysis, pure-Rust attention
+//!   kernels at large-model shapes, synthetic corpora and task suites,
+//!   benchmark harnesses).
+//! * **L2/L1 (python/, build-time only)** — a llama-style JAX model whose
+//!   decode hot path runs Pallas kernels, AOT-lowered to HLO text that the
+//!   [`runtime`] module loads and executes via the PJRT CPU client.
+//!
+//! Start with [`runtime::Artifacts`] + [`model::ServedModel`] for the
+//! compiled path, or [`attnsim`] for the pure-Rust substrate. See
+//! `DESIGN.md` for the experiment index and `examples/` for runnable
+//! entry points.
+
+pub mod analysis;
+pub mod attnsim;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod linalg;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod util;
+
+/// Repo-relative default artifact directory (`make artifacts` output).
+pub const ARTIFACTS_DIR: &str = "artifacts";
+/// Repo-relative directory experiment harnesses write results into.
+pub const RESULTS_DIR: &str = "results";

@@ -1,0 +1,251 @@
+//! Matrix multiplication kernels, including the Appendix-C comparison pair.
+//!
+//! The paper's kernel contribution (Appendix C) is that SparQ's Triton
+//! kernels parallelize an `m×k · k×n` product only along `m` — which in
+//! decode attention is proportional to *batch·heads* and therefore tiny —
+//! while Loki's kernels add the `n` (sequence) dimension. We reproduce the
+//! pair as thread-parallel CPU kernels with identical inner loops:
+//!
+//! * [`matmul_threaded_1d`] — work split over rows of the output only
+//!   (SparQ-style). With `m < threads` most cores idle.
+//! * [`matmul_threaded_2d`] — work split over (row-block × col-block)
+//!   tiles (Loki-style): full parallelism even at batch size 1.
+//!
+//! Both handle arbitrary (non-power-of-2) `n`, the second SparQ defect
+//! the paper fixes. `cargo bench --bench kernel_1d_vs_2d` regenerates
+//! Figure 16 with these kernels.
+
+/// How a kernel distributes work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Parallelism {
+    Serial,
+    /// Split output rows across threads (SparQ-style "m-only").
+    Rows1D,
+    /// Split (row, column) tiles across threads (Loki-style).
+    Tiles2D,
+}
+
+/// `c[m,n] = a[m,k] · b[k,n]` — naive serial reference (tests oracle).
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        crow.fill(0.0);
+        for (l, &av) in arow.iter().enumerate() {
+            let brow = &b[l * n..(l + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// Cache-blocked serial matmul (the building block the threaded variants
+/// call per tile).
+pub fn matmul_blocked(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    const BK: usize = 64;
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    let mut l0 = 0;
+    while l0 < k {
+        let lend = (l0 + BK).min(k);
+        for i in 0..m {
+            let crow = &mut c[i * n..(i + 1) * n];
+            for l in l0..lend {
+                let av = a[i * k + l];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[l * n..(l + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+        l0 = lend;
+    }
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// SparQ-style kernel: parallelism only across output **rows**. When
+/// `m < threads` (decode attention at small batch), the surplus threads
+/// have nothing to do — reproducing the Figure-16 pathology.
+pub fn matmul_threaded_1d(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    let threads = threads.max(1).min(m.max(1));
+    if threads <= 1 || m == 0 {
+        return matmul_blocked(a, b, c, m, k, n);
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let mut rest = c;
+        let mut row0 = 0;
+        while row0 < m {
+            let rows = rows_per.min(m - row0);
+            let (chunk, tail) = rest.split_at_mut(rows * n);
+            rest = tail;
+            let a_chunk = &a[row0 * k..(row0 + rows) * k];
+            scope.spawn(move || {
+                matmul_blocked(a_chunk, b, chunk, rows, k, n);
+            });
+            row0 += rows;
+        }
+    });
+}
+
+/// Loki-style kernel: parallelism across **(row, column) tiles**, so the
+/// sequence dimension (`n`, the KV-cache length) feeds every core even at
+/// batch size 1. Handles ragged (non-power-of-2) `n` by construction.
+pub fn matmul_threaded_2d(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    let threads = threads.max(1);
+    if threads <= 1 {
+        return matmul_blocked(a, b, c, m, k, n);
+    }
+    // Choose a column-tile width so that m × col_tiles ≈ 4× threads
+    // (enough slack for load balancing without scheduling overhead).
+    let want_tiles = threads * 4;
+    let col_tiles = want_tiles.div_ceil(m.max(1)).max(1).min(n.max(1));
+    let tile_w = n.div_ceil(col_tiles).max(1);
+
+    // Tiles share no output bytes (each owns rows × [j0, j1) columns), but
+    // Rust can't see that through a single &mut: hand out raw sub-ranges.
+    struct SendPtr(*mut f32);
+    unsafe impl Send for SendPtr {}
+    let c_ptr = SendPtr(c.as_mut_ptr());
+    let c_addr = c_ptr.0 as usize;
+
+    let mut tiles: Vec<(usize, usize)> = Vec::new();
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + tile_w).min(n);
+        tiles.push((j0, j1));
+        j0 = j1;
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        let next_ref = &next;
+        let tiles_ref = &tiles;
+        for _ in 0..threads.min(tiles.len() * m) {
+            scope.spawn(move || {
+                loop {
+                    let t = next_ref.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    let total = tiles_ref.len() * m;
+                    if t >= total {
+                        break;
+                    }
+                    let i = t / tiles_ref.len();
+                    let (j0, j1) = tiles_ref[t % tiles_ref.len()];
+                    let arow = &a[i * k..(i + 1) * k];
+                    // SAFETY: tile (i, j0..j1) is written by exactly one task.
+                    let crow = unsafe {
+                        std::slice::from_raw_parts_mut((c_addr as *mut f32).add(i * n + j0), j1 - j0)
+                    };
+                    crow.fill(0.0);
+                    for (l, &av) in arow.iter().enumerate() {
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[l * n + j0..l * n + j1];
+                        for (cj, &bv) in crow.iter_mut().zip(brow) {
+                            *cj += av * bv;
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Dispatch helper used by benches and the attnsim kernels.
+pub fn matmul_with(
+    par: Parallelism,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: Option<usize>,
+) {
+    let t = threads.unwrap_or_else(default_threads);
+    match par {
+        Parallelism::Serial => matmul_blocked(a, b, c, m, k, n),
+        Parallelism::Rows1D => matmul_threaded_1d(a, b, c, m, k, n, t),
+        Parallelism::Tiles2D => matmul_threaded_2d(a, b, c, m, k, n, t),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn check_all_agree(m: usize, k: usize, n: usize) {
+        let mut rng = Xoshiro256::new((m * 31 + k * 7 + n) as u64);
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        let mut c0 = vec![0.0; m * n];
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        let mut c3 = vec![0.0; m * n];
+        matmul(&a, &b, &mut c0, m, k, n);
+        matmul_blocked(&a, &b, &mut c1, m, k, n);
+        matmul_threaded_1d(&a, &b, &mut c2, m, k, n, 4);
+        matmul_threaded_2d(&a, &b, &mut c3, m, k, n, 4);
+        for i in 0..m * n {
+            assert!((c0[i] - c1[i]).abs() < 1e-3, "blocked differs at {i}");
+            assert!((c0[i] - c2[i]).abs() < 1e-3, "1d differs at {i}");
+            assert!((c0[i] - c3[i]).abs() < 1e-3, "2d differs at {i}");
+        }
+    }
+
+    #[test]
+    fn variants_agree_square() {
+        check_all_agree(16, 16, 16);
+    }
+
+    #[test]
+    fn variants_agree_ragged() {
+        // Non-power-of-2 n is exactly the case SparQ's kernels couldn't
+        // handle (Appendix C); ours must.
+        check_all_agree(3, 64, 1023);
+        check_all_agree(1, 17, 513);
+        check_all_agree(40, 128, 999);
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        check_all_agree(1, 1, 1);
+        let mut c = vec![];
+        matmul(&[], &[], &mut c, 0, 4, 0);
+    }
+}

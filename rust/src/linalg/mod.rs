@@ -1,0 +1,17 @@
+//! Dense linear algebra substrates: blocked/threaded matmuls, a symmetric
+//! eigensolver (PCA), stable softmax, top-k selection and summary
+//! statistics. Everything operates on plain `&[f32]` row-major slices so
+//! the attention kernels in [`crate::attnsim`] can run zero-copy.
+
+pub mod matmul;
+pub mod parsim;
+pub mod pca;
+pub mod softmax;
+pub mod stats;
+pub mod topk;
+
+pub use matmul::{matmul, matmul_blocked, matmul_threaded_1d, matmul_threaded_2d, Parallelism};
+pub use pca::{Pca, PcaBasis};
+pub use softmax::{softmax_inplace, softmax_masked_inplace};
+pub use stats::{jaccard, mean, percentile, std_dev, Summary};
+pub use topk::{top_k_heap, top_k_indices, top_k_quickselect, top_k_sort, TopKAlgo};

@@ -1,0 +1,256 @@
+//! PCA via covariance + cyclic Jacobi eigendecomposition.
+//!
+//! Mirrors `python/compile/pca.py::pca_basis`; the pytest/rust test pair
+//! cross-validates the two implementations on the exported key dumps.
+//! D is a head dimension (≤ 128 here), so Jacobi — O(D³) per sweep with a
+//! handful of sweeps — is plenty fast and numerically robust for the
+//! symmetric PSD covariance matrices PCA produces.
+
+/// An eigendecomposition of a key-covariance matrix for one (layer, head).
+#[derive(Clone, Debug)]
+pub struct PcaBasis {
+    pub dim: usize,
+    /// Normalized eigenvalues, descending (sum = 1 unless all-zero input).
+    pub eigenvalues: Vec<f32>,
+    /// Row-major `dim × dim`; **columns** are the principal components,
+    /// matching numpy's `eigh` convention: `x_rotated = x · basis`.
+    pub basis: Vec<f32>,
+}
+
+impl PcaBasis {
+    /// Eq. 2 of the paper: smallest d whose leading eigenvalues explain
+    /// `v_pct`% of the variance.
+    pub fn rank_at(&self, v_pct: f64) -> usize {
+        let target = v_pct / 100.0 - 1e-12;
+        let mut cum = 0.0f64;
+        for (i, &e) in self.eigenvalues.iter().enumerate() {
+            cum += e as f64;
+            if cum >= target {
+                return i + 1;
+            }
+        }
+        self.dim
+    }
+
+    /// Rotate a row vector into PCA space: `y = x · basis`.
+    pub fn rotate(&self, x: &[f32], out: &mut [f32]) {
+        let d = self.dim;
+        assert_eq!(x.len(), d);
+        assert_eq!(out.len(), d);
+        for j in 0..d {
+            let mut s = 0.0;
+            for i in 0..d {
+                s += x[i] * self.basis[i * d + j];
+            }
+            out[j] = s;
+        }
+    }
+}
+
+/// PCA fitting over row-major samples.
+pub struct Pca;
+
+impl Pca {
+    /// Fit from `n` samples of dimension `d` (row-major `n × d`).
+    pub fn fit(samples: &[f32], n: usize, d: usize) -> PcaBasis {
+        assert_eq!(samples.len(), n * d);
+        assert!(n > 1, "need at least 2 samples");
+        // Mean.
+        let mut mean = vec![0.0f64; d];
+        for row in samples.chunks_exact(d) {
+            for (m, &x) in mean.iter_mut().zip(row) {
+                *m += x as f64;
+            }
+        }
+        for m in &mut mean {
+            *m /= n as f64;
+        }
+        // Covariance (f64 accumulation for stability).
+        let mut cov = vec![0.0f64; d * d];
+        for row in samples.chunks_exact(d) {
+            for i in 0..d {
+                let xi = row[i] as f64 - mean[i];
+                for j in i..d {
+                    cov[i * d + j] += xi * (row[j] as f64 - mean[j]);
+                }
+            }
+        }
+        let denom = (n - 1) as f64;
+        for i in 0..d {
+            for j in i..d {
+                let v = cov[i * d + j] / denom;
+                cov[i * d + j] = v;
+                cov[j * d + i] = v;
+            }
+        }
+        Self::eigh(&cov, d)
+    }
+
+    /// Symmetric eigendecomposition by cyclic Jacobi; returns descending
+    /// eigenvalues (normalized) and the orthogonal eigenvector matrix.
+    pub fn eigh(sym: &[f64], d: usize) -> PcaBasis {
+        assert_eq!(sym.len(), d * d);
+        let mut a = sym.to_vec();
+        let mut v = vec![0.0f64; d * d];
+        for i in 0..d {
+            v[i * d + i] = 1.0;
+        }
+        let max_sweeps = 64;
+        for _sweep in 0..max_sweeps {
+            // Off-diagonal Frobenius norm.
+            let mut off = 0.0f64;
+            for i in 0..d {
+                for j in (i + 1)..d {
+                    off += a[i * d + j] * a[i * d + j];
+                }
+            }
+            if off.sqrt() < 1e-12 {
+                break;
+            }
+            for p in 0..d {
+                for q in (p + 1)..d {
+                    let apq = a[p * d + q];
+                    if apq.abs() < 1e-300 {
+                        continue;
+                    }
+                    let app = a[p * d + p];
+                    let aqq = a[q * d + q];
+                    let theta = (aqq - app) / (2.0 * apq);
+                    let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                    let c = 1.0 / (t * t + 1.0).sqrt();
+                    let s = t * c;
+                    // Rotate rows/cols p and q of A.
+                    for i in 0..d {
+                        let aip = a[i * d + p];
+                        let aiq = a[i * d + q];
+                        a[i * d + p] = c * aip - s * aiq;
+                        a[i * d + q] = s * aip + c * aiq;
+                    }
+                    for j in 0..d {
+                        let apj = a[p * d + j];
+                        let aqj = a[q * d + j];
+                        a[p * d + j] = c * apj - s * aqj;
+                        a[q * d + j] = s * apj + c * aqj;
+                    }
+                    // Accumulate eigenvectors.
+                    for i in 0..d {
+                        let vip = v[i * d + p];
+                        let viq = v[i * d + q];
+                        v[i * d + p] = c * vip - s * viq;
+                        v[i * d + q] = s * vip + c * viq;
+                    }
+                }
+            }
+        }
+        // Extract, clamp, sort descending.
+        let mut order: Vec<usize> = (0..d).collect();
+        let eigs: Vec<f64> = (0..d).map(|i| a[i * d + i].max(0.0)).collect();
+        order.sort_by(|&i, &j| eigs[j].partial_cmp(&eigs[i]).unwrap());
+        let total: f64 = eigs.iter().sum();
+        let norm = if total > 0.0 { total } else { 1.0 };
+        let eigenvalues: Vec<f32> = order.iter().map(|&i| (eigs[i] / norm) as f32).collect();
+        let mut basis = vec![0.0f32; d * d];
+        for (newj, &oldj) in order.iter().enumerate() {
+            for i in 0..d {
+                basis[i * d + newj] = v[i * d + oldj] as f32;
+            }
+        }
+        PcaBasis { dim: d, eigenvalues, basis }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    /// Build samples with a known anisotropic spectrum: x = z · diag(s) · Qᵀ.
+    fn aniso_samples(n: usize, d: usize, scales: &[f32], seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256::new(seed);
+        let mut out = vec![0.0; n * d];
+        for row in out.chunks_exact_mut(d) {
+            for (j, x) in row.iter_mut().enumerate() {
+                *x = rng.normal_f32() * scales[j];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn recovers_axis_aligned_spectrum() {
+        let d = 8;
+        let scales: Vec<f32> = (0..d).map(|i| 2.0f32.powi(-(i as i32))).collect();
+        let samples = aniso_samples(4000, d, &scales, 1);
+        let basis = Pca::fit(&samples, 4000, d);
+        // Eigenvalues should be ~ scales² normalized, descending.
+        let mut expect: Vec<f32> = scales.iter().map(|s| s * s).collect();
+        let tot: f32 = expect.iter().sum();
+        for e in &mut expect {
+            *e /= tot;
+        }
+        for i in 0..d {
+            assert!(
+                (basis.eigenvalues[i] - expect[i]).abs() < 0.02,
+                "eig {i}: {} vs {}",
+                basis.eigenvalues[i],
+                expect[i]
+            );
+        }
+    }
+
+    #[test]
+    fn basis_is_orthogonal() {
+        let samples = aniso_samples(1000, 16, &[1.0; 16], 2);
+        let b = Pca::fit(&samples, 1000, 16);
+        let d = 16;
+        for i in 0..d {
+            for j in 0..d {
+                let mut dot = 0.0f64;
+                for k in 0..d {
+                    dot += (b.basis[k * d + i] * b.basis[k * d + j]) as f64;
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-4, "col {i}·col {j} = {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn rank_at_thresholds() {
+        let b = PcaBasis {
+            dim: 4,
+            eigenvalues: vec![0.6, 0.3, 0.08, 0.02],
+            basis: vec![0.0; 16],
+        };
+        assert_eq!(b.rank_at(50.0), 1);
+        assert_eq!(b.rank_at(90.0), 2);
+        assert_eq!(b.rank_at(99.0), 4);
+        assert_eq!(b.rank_at(100.0), 4);
+    }
+
+    #[test]
+    fn rotation_preserves_norm() {
+        let samples = aniso_samples(500, 12, &[1.0; 12], 3);
+        let b = Pca::fit(&samples, 500, 12);
+        let mut rng = Xoshiro256::new(4);
+        let x = rng.normal_vec(12);
+        let mut y = vec![0.0; 12];
+        b.rotate(&x, &mut y);
+        let nx: f32 = x.iter().map(|v| v * v).sum();
+        let ny: f32 = y.iter().map(|v| v * v).sum();
+        assert!((nx - ny).abs() / nx < 1e-4);
+    }
+
+    #[test]
+    fn low_rank_data_has_low_rank_at_90() {
+        // Samples confined to a 3-dim subspace of 32 dims.
+        let d = 32;
+        let mut scales = vec![0.001f32; d];
+        scales[0] = 3.0;
+        scales[1] = 2.0;
+        scales[2] = 1.0;
+        let samples = aniso_samples(2000, d, &scales, 5);
+        let b = Pca::fit(&samples, 2000, d);
+        assert!(b.rank_at(90.0) <= 3, "rank {}", b.rank_at(90.0));
+    }
+}

@@ -1,0 +1,107 @@
+//! Numerically stable softmax primitives for the attention substrate.
+
+pub const NEG_INF: f32 = -1e30;
+
+/// In-place stable softmax over a score slice.
+pub fn softmax_inplace(scores: &mut [f32]) {
+    if scores.is_empty() {
+        return;
+    }
+    let max = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - max).exp();
+        sum += *s;
+    }
+    if sum > 0.0 {
+        let inv = 1.0 / sum;
+        for s in scores.iter_mut() {
+            *s *= inv;
+        }
+    }
+}
+
+/// Softmax over only the positions where `mask` is true; masked-out
+/// entries are set to exactly 0 probability.
+pub fn softmax_masked_inplace(scores: &mut [f32], mask: &[bool]) {
+    assert_eq!(scores.len(), mask.len());
+    let mut max = f32::NEG_INFINITY;
+    for (s, &m) in scores.iter().zip(mask) {
+        if m && *s > max {
+            max = *s;
+        }
+    }
+    if max == f32::NEG_INFINITY {
+        scores.fill(0.0);
+        return;
+    }
+    let mut sum = 0.0f32;
+    for (s, &m) in scores.iter_mut().zip(mask) {
+        if m {
+            *s = (*s - max).exp();
+            sum += *s;
+        } else {
+            *s = 0.0;
+        }
+    }
+    if sum > 0.0 {
+        let inv = 1.0 / sum;
+        for s in scores.iter_mut() {
+            *s *= inv;
+        }
+    }
+}
+
+/// log-sum-exp of a slice (perplexity bookkeeping).
+pub fn log_sum_exp(xs: &[f32]) -> f32 {
+    let max = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    if max == f32::NEG_INFINITY {
+        return f32::NEG_INFINITY;
+    }
+    let sum: f32 = xs.iter().map(|x| (x - max).exp()).sum();
+    max + sum.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sums_to_one() {
+        let mut s = vec![1.0, 2.0, 3.0, -1.0];
+        softmax_inplace(&mut s);
+        let sum: f32 = s.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(s[2] > s[1] && s[1] > s[0] && s[0] > s[3]);
+    }
+
+    #[test]
+    fn stable_for_huge_scores() {
+        let mut s = vec![1e20, 1e20 + 1.0];
+        softmax_inplace(&mut s);
+        assert!(s.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn masked_zeroes_dead_slots() {
+        let mut s = vec![5.0, 1.0, 100.0, 2.0];
+        let mask = vec![true, true, false, true];
+        softmax_masked_inplace(&mut s, &mask);
+        assert_eq!(s[2], 0.0);
+        assert!((s.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn all_masked_is_zero() {
+        let mut s = vec![1.0, 2.0];
+        softmax_masked_inplace(&mut s, &[false, false]);
+        assert_eq!(s, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn lse_matches_naive() {
+        let xs = vec![0.5f32, -1.0, 2.0];
+        let naive = xs.iter().map(|x| x.exp()).sum::<f32>().ln();
+        assert!((log_sum_exp(&xs) - naive).abs() < 1e-5);
+    }
+}

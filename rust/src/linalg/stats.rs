@@ -1,0 +1,148 @@
+//! Summary statistics + set-similarity helpers used across the
+//! experiment harnesses (latency summaries, Jaccard top-k agreement).
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Percentile by linear interpolation on a copy (p in [0, 100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (rank - lo as f64)
+    }
+}
+
+/// Jaccard similarity |A∩B| / |A∪B| of two index sets (Fig. 6 left:
+/// agreement between Loki's approximate top-k and the exact top-k).
+pub fn jaccard(a: &[u32], b: &[u32]) -> f64 {
+    if a.is_empty() && b.is_empty() {
+        return 1.0;
+    }
+    let sa: std::collections::HashSet<u32> = a.iter().copied().collect();
+    let sb: std::collections::HashSet<u32> = b.iter().copied().collect();
+    let inter = sa.intersection(&sb).count();
+    let union = sa.union(&sb).count();
+    inter as f64 / union as f64
+}
+
+/// One-pass latency / value summary for metrics and bench output.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    values: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+    }
+
+    pub fn count(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        mean(&self.values)
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        std_dev(&self.values)
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        percentile(&self.values, p)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.values.iter().sum()
+    }
+
+    /// "mean ± std [p50 p95 p99]" display string (units up to caller).
+    pub fn display(&self) -> String {
+        format!(
+            "{:.3} ± {:.3} [p50 {:.3}, p95 {:.3}, p99 {:.3}] n={}",
+            self.mean(),
+            self.std_dev(),
+            self.percentile(50.0),
+            self.percentile(95.0),
+            self.percentile(99.0),
+            self.count()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = vec![0.0, 10.0];
+        assert!((percentile(&xs, 50.0) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 100.0), 10.0);
+    }
+
+    #[test]
+    fn jaccard_cases() {
+        assert_eq!(jaccard(&[1, 2, 3], &[1, 2, 3]), 1.0);
+        assert_eq!(jaccard(&[1, 2], &[3, 4]), 0.0);
+        assert!((jaccard(&[1, 2, 3], &[2, 3, 4]) - 0.5).abs() < 1e-12);
+        assert_eq!(jaccard(&[], &[]), 1.0);
+    }
+
+    #[test]
+    fn summary_roundtrip() {
+        let mut s = Summary::new();
+        for i in 0..100 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.count(), 100);
+        assert!((s.mean() - 49.5).abs() < 1e-9);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 99.0);
+        assert!((s.percentile(50.0) - 49.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,174 @@
+//! Top-k selection over score vectors.
+//!
+//! The paper observes (§6.4) that PyTorch's top-k is nearly as expensive
+//! as the sparse matmuls themselves and calls a custom kernel future work
+//! — so we implement three algorithms and ablate them
+//! (`cargo bench --bench topk_bench`): full sort O(S log S) — the paper's
+//! complexity model, binary heap O(S log k), and quickselect O(S) expected.
+
+/// Selection algorithm choice (ablation axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopKAlgo {
+    Sort,
+    Heap,
+    QuickSelect,
+}
+
+/// Dispatch. Returns the indices of the k largest scores (order
+/// unspecified; ties broken arbitrarily). k is clamped to len.
+pub fn top_k_indices(algo: TopKAlgo, scores: &[f32], k: usize) -> Vec<u32> {
+    match algo {
+        TopKAlgo::Sort => top_k_sort(scores, k),
+        TopKAlgo::Heap => top_k_heap(scores, k),
+        TopKAlgo::QuickSelect => top_k_quickselect(scores, k),
+    }
+}
+
+/// Full argsort then prefix — O(S log S).
+pub fn top_k_sort(scores: &[f32], k: usize) -> Vec<u32> {
+    let k = k.min(scores.len());
+    let mut idx: Vec<u32> = (0..scores.len() as u32).collect();
+    idx.sort_unstable_by(|&a, &b| {
+        scores[b as usize]
+            .partial_cmp(&scores[a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx.truncate(k);
+    idx
+}
+
+/// Min-heap of size k — O(S log k); wins when k ≪ S.
+pub fn top_k_heap(scores: &[f32], k: usize) -> Vec<u32> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let k = k.min(scores.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    // f32 isn't Ord; use the IEEE-754 total-order trick on bits.
+    fn key(x: f32) -> i32 {
+        let b = x.to_bits() as i32;
+        b ^ (((b >> 31) as u32) >> 1) as i32
+    }
+    let mut heap: BinaryHeap<Reverse<(i32, u32)>> = BinaryHeap::with_capacity(k + 1);
+    for (i, &s) in scores.iter().enumerate() {
+        let item = Reverse((key(s), i as u32));
+        if heap.len() < k {
+            heap.push(item);
+        } else if let Some(&Reverse((min_key, _))) = heap.peek() {
+            if key(s) > min_key {
+                heap.pop();
+                heap.push(item);
+            }
+        }
+    }
+    heap.into_iter().map(|Reverse((_, i))| i).collect()
+}
+
+/// Hoare-partition quickselect — O(S) expected, in-place on an index array.
+pub fn top_k_quickselect(scores: &[f32], k: usize) -> Vec<u32> {
+    let n = scores.len();
+    let k = k.min(n);
+    if k == 0 {
+        return Vec::new();
+    }
+    if k == n {
+        return (0..n as u32).collect();
+    }
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    let mut lo = 0usize;
+    let mut hi = n;
+    // Invariant: the k largest end up in idx[..k].
+    let mut rng_state = 0x9E3779B97F4A7C15u64 ^ (n as u64);
+    while hi - lo > 1 {
+        // Random-ish pivot to dodge adversarial patterns.
+        rng_state ^= rng_state << 13;
+        rng_state ^= rng_state >> 7;
+        rng_state ^= rng_state << 17;
+        let pivot_i = lo + (rng_state as usize) % (hi - lo);
+        let pivot = scores[idx[pivot_i] as usize];
+        // Partition: larger-than-pivot first.
+        let mut store = lo;
+        idx.swap(pivot_i, hi - 1);
+        for i in lo..hi - 1 {
+            if scores[idx[i] as usize] > pivot {
+                idx.swap(i, store);
+                store += 1;
+            }
+        }
+        idx.swap(store, hi - 1);
+        match store.cmp(&k) {
+            std::cmp::Ordering::Equal => break,
+            std::cmp::Ordering::Less => lo = store + 1,
+            std::cmp::Ordering::Greater => hi = store,
+        }
+        if lo >= k {
+            break;
+        }
+    }
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn as_sorted_set(v: &[u32]) -> Vec<u32> {
+        let mut v = v.to_vec();
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn algorithms_agree_on_random_inputs() {
+        let mut rng = Xoshiro256::new(11);
+        for trial in 0..50 {
+            let n = rng.range(1, 500);
+            let k = rng.range(0, n + 1);
+            let scores = rng.normal_vec(n);
+            let a = as_sorted_set(&top_k_sort(&scores, k));
+            let b = as_sorted_set(&top_k_heap(&scores, k));
+            let c = as_sorted_set(&top_k_quickselect(&scores, k));
+            // With ties possible, compare selected *values* not indices.
+            let vals = |ix: &[u32]| {
+                let mut v: Vec<f32> = ix.iter().map(|&i| scores[i as usize]).collect();
+                v.sort_by(|x, y| x.partial_cmp(y).unwrap());
+                v
+            };
+            assert_eq!(vals(&a), vals(&b), "trial {trial} heap");
+            assert_eq!(vals(&a), vals(&c), "trial {trial} quickselect");
+        }
+    }
+
+    #[test]
+    fn selects_the_actual_top() {
+        let scores = vec![0.1, 5.0, -2.0, 3.0, 3.0, 0.0];
+        for algo in [TopKAlgo::Sort, TopKAlgo::Heap, TopKAlgo::QuickSelect] {
+            let got = as_sorted_set(&top_k_indices(algo, &scores, 3));
+            // top-3 values are 5.0, 3.0, 3.0 at indices {1, 3, 4}
+            assert_eq!(got, vec![1, 3, 4], "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn k_edge_cases() {
+        let scores = vec![1.0, 2.0];
+        for algo in [TopKAlgo::Sort, TopKAlgo::Heap, TopKAlgo::QuickSelect] {
+            assert!(top_k_indices(algo, &scores, 0).is_empty());
+            assert_eq!(top_k_indices(algo, &scores, 5).len(), 2);
+        }
+    }
+
+    #[test]
+    fn handles_neg_inf_scores() {
+        let mut scores = vec![super::super::softmax::NEG_INF; 64];
+        scores[7] = 1.0;
+        scores[13] = 2.0;
+        for algo in [TopKAlgo::Sort, TopKAlgo::Heap, TopKAlgo::QuickSelect] {
+            let got = as_sorted_set(&top_k_indices(algo, &scores, 2));
+            assert_eq!(got, vec![7, 13], "{algo:?}");
+        }
+    }
+}

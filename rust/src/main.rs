@@ -1,0 +1,211 @@
+//! `repro` — the Loki serving CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   info                         — print manifest / model summary
+//!   generate --prompt "..."      — one-shot generation
+//!   serve --listen HOST:PORT     — JSON-lines TCP inference server
+//!   bench-serve                  — offline throughput run over a trace
+//!
+//! Attention variant flags (all subcommands): --variant full|loki|topk|
+//! h2o|pcaattn, --kf FRAC, --df FRAC, --pca NAME.
+
+use std::sync::mpsc::channel;
+
+use anyhow::{bail, Context, Result};
+
+use loki::coordinator::{Engine, EngineConfig, SchedulerPolicy};
+use loki::coordinator::request::GenRequest;
+use loki::coordinator::sampler::SampleCfg;
+use loki::data::workload::{Workload, WorkloadCfg};
+use loki::data::TaskSuite;
+use loki::model::ByteTokenizer;
+use loki::runtime::{DecodeVariant, RuntimeService};
+use loki::util::args::Args;
+use loki::util::artifacts_dir;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => info(),
+        "generate" => generate(&args),
+        "serve" => serve(&args),
+        "bench-serve" => bench_serve(&args),
+        _ => {
+            eprintln!(
+                "usage: repro <info|generate|serve|bench-serve> [options]\n\
+                 \n\
+                 common options:\n\
+                 \x20 --variant full|loki|topk|h2o|pcaattn   (default full)\n\
+                 \x20 --kf 0.25 --df 0.25                    Loki budgets\n\
+                 \x20 --pca wiki_pre                          calibration basis\n\
+                 \x20 --scheduler prefill-first|decode-first\n\
+                 generate: --prompt STR --max-tokens N --temperature T\n\
+                 serve:    --listen 127.0.0.1:7077\n\
+                 bench-serve: --requests N --rate R"
+            );
+            Ok(())
+        }
+    }
+}
+
+/// Parse the shared attention-variant flags.
+fn variant_from_args(args: &Args, svc: &RuntimeService) -> Result<DecodeVariant> {
+    let man = &svc.manifest;
+    let kf = args.f64_or("kf", 0.25);
+    let df = args.f64_or("df", 0.25);
+    Ok(match args.str_or("variant", "full").as_str() {
+        "full" => DecodeVariant::Full,
+        "loki" => DecodeVariant::loki_fractions(man, kf, df),
+        "topk" => DecodeVariant::exact_topk(man, kf),
+        "h2o" => DecodeVariant::h2o_fraction(man, kf),
+        "pcaattn" => DecodeVariant::pcaattn_fraction(man, df),
+        v => bail!("unknown --variant {v}"),
+    })
+}
+
+fn engine_config(args: &Args, svc: &RuntimeService) -> Result<EngineConfig> {
+    Ok(EngineConfig {
+        pca: args.str_or("pca", &svc.manifest.default_pca),
+        variant: variant_from_args(args, svc)?,
+        gang_batch: args.usize_or("batch", usize::MAX),
+        scheduler: match args.str_or("scheduler", "prefill-first").as_str() {
+            "decode-first" => SchedulerPolicy::DecodeFirst,
+            _ => SchedulerPolicy::PrefillFirst,
+        },
+        max_queue: args.usize_or("max-queue", 256),
+        lane_reset_frac: 0.75,
+        verbose: args.flag("verbose"),
+    })
+}
+
+fn info() -> Result<()> {
+    let svc = RuntimeService::start(artifacts_dir()).context("starting runtime")?;
+    let m = &svc.manifest;
+    println!("model: {} ({} params approx)", m.model.name, approx_params(m));
+    println!(
+        "  d_model={} layers={} heads={} head_dim={} d_ff={} vocab={} max_len={}",
+        m.model.d_model,
+        m.model.n_layers,
+        m.model.n_heads,
+        m.model.head_dim,
+        m.model.d_ff,
+        m.model.vocab_size,
+        m.model.max_len
+    );
+    println!("batch buckets: {:?} | prefill buckets: {:?}", m.batch_buckets, m.prefill_buckets);
+    println!("graphs ({}):", m.graphs.len());
+    for name in m.graphs.keys() {
+        println!("  {name}");
+    }
+    println!("pca calibrations: {:?} (default {})", m.pca.keys().collect::<Vec<_>>(), m.default_pca);
+    Ok(())
+}
+
+fn approx_params(m: &loki::runtime::Manifest) -> String {
+    let d = m.model.d_model;
+    let qkv = m.model.n_heads * m.model.head_dim;
+    let per_layer = 4 * d * qkv + 3 * d * m.model.d_ff + 2 * d;
+    let n = m.model.vocab_size * d * 2 + m.model.n_layers * per_layer + d;
+    if n > 1_000_000 {
+        format!("{:.1}M", n as f64 / 1e6)
+    } else {
+        format!("{:.0}K", n as f64 / 1e3)
+    }
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let prompt = args.str_or("prompt", "the code of ");
+    let max_tokens = args.usize_or("max-tokens", 48);
+    let svc = RuntimeService::start(artifacts_dir()).context("starting runtime")?;
+    let cfg = engine_config(args, &svc)?;
+    let engine = Engine::new(&svc, cfg.clone());
+    let (tx, rx) = Engine::channel(&cfg);
+    let (reply, result_rx) = channel();
+    let tok = ByteTokenizer;
+    tx.send(GenRequest {
+        id: 1,
+        prompt: tok.encode(&prompt),
+        max_new_tokens: max_tokens,
+        stop_token: Some(b'\n' as i32),
+        sampling: SampleCfg {
+            temperature: args.f64_or("temperature", 0.0) as f32,
+            top_p: 0.95,
+            seed: 1,
+        },
+        reply,
+    })
+    .ok();
+    drop(tx);
+    let metrics = engine.run(rx)?;
+    let res = result_rx.recv().context("no result")?;
+    println!("prompt:  {prompt}");
+    println!("output:  {}", res.text);
+    println!(
+        "({} tokens, {:?}, ttft {:.3}s, total {:.3}s)",
+        res.tokens.len(),
+        res.finished_reason,
+        res.timing.ttft_s,
+        res.timing.total_s
+    );
+    if args.flag("report") {
+        println!("\n{}", metrics.report());
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let listen = args.str_or("listen", "127.0.0.1:7077");
+    let svc = RuntimeService::start(artifacts_dir()).context("starting runtime")?;
+    let cfg = engine_config(args, &svc)?;
+    let engine = Engine::new(&svc, cfg.clone());
+    let (tx, rx) = Engine::channel(&cfg);
+    let server_tx = tx.clone();
+    let server =
+        std::thread::spawn(move || loki::server::serve(&listen, server_tx).expect("server"));
+    let metrics = engine.run(rx)?;
+    println!("{}", metrics.report());
+    let _ = server.join();
+    Ok(())
+}
+
+fn bench_serve(args: &Args) -> Result<()> {
+    let svc = RuntimeService::start(artifacts_dir()).context("starting runtime")?;
+    let cfg = engine_config(args, &svc)?;
+    let suite = TaskSuite::load(&artifacts_dir())?;
+    let wl = Workload::generate(
+        &WorkloadCfg {
+            n_requests: args.usize_or("requests", 24),
+            rate: args.f64_or("rate", 0.0),
+            ..Default::default()
+        },
+        &suite.fillers,
+    );
+    let engine = Engine::new(&svc, cfg.clone());
+    let (tx, rx) = Engine::channel(&cfg);
+    let tok = ByteTokenizer;
+    let (reply, results) = channel();
+    let submit = std::thread::spawn(move || {
+        let start = std::time::Instant::now();
+        for (i, item) in wl.items.iter().enumerate() {
+            let wait = item.arrival_s - start.elapsed().as_secs_f64();
+            if wait > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+            }
+            tx.send(GenRequest {
+                id: i as u64,
+                prompt: tok.encode(&item.prompt),
+                max_new_tokens: item.max_new_tokens,
+                stop_token: None,
+                sampling: SampleCfg::greedy(),
+                reply: reply.clone(),
+            })
+            .ok();
+        }
+    });
+    let metrics = engine.run(rx)?;
+    let _ = submit.join();
+    drop(results);
+    println!("{}", metrics.report());
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Model-facing helpers shared by the coordinator and the eval harnesses:
+//! the byte-level tokenizer (mirror of the python side) and logit math.
+
+pub mod tokenizer;
+
+pub use tokenizer::ByteTokenizer;
+
+use crate::linalg::softmax::log_sum_exp;
+
+/// Index of the highest logit.
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// log p(token) under the logits (softmax log-prob).
+pub fn log_prob(logits: &[f32], token: usize) -> f32 {
+    logits[token] - log_sum_exp(logits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_and_logprob() {
+        let logits = vec![0.0, 2.0, -1.0];
+        assert_eq!(argmax(&logits), 1);
+        let lp: f32 = (0..3).map(|t| log_prob(&logits, t).exp()).sum();
+        assert!((lp - 1.0).abs() < 1e-5);
+        assert!(log_prob(&logits, 1) > log_prob(&logits, 0));
+    }
+}

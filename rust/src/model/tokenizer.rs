@@ -1,0 +1,50 @@
+//! Byte-level tokenizer — the exact mirror of
+//! `python/compile/datagen.py::tokenize` (identity over UTF-8 bytes).
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn vocab_size(&self) -> usize {
+        256
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| b as i32).collect()
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens.iter().map(|&t| (t & 0xFF) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn decode_one(&self, token: i32) -> char {
+        ((token & 0xFF) as u8) as char
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_round_trip() {
+        let t = ByteTokenizer;
+        let s = "the code of zorvik is blue-42 .";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn utf8_multibyte_round_trip() {
+        let t = ByteTokenizer;
+        let s = "héllo 🎉";
+        assert_eq!(t.decode(&t.encode(s)), s);
+        assert_eq!(t.encode(s).len(), s.len()); // bytes, not chars
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        let t = ByteTokenizer;
+        assert!(t.encode("å").iter().all(|&x| (0..256).contains(&x)));
+    }
+}

@@ -1,0 +1,274 @@
+//! HLO-text static analyzer: op census, FLOP and memory-traffic estimates
+//! for the AOT graphs — the tool behind the L2 §Perf claims ("no
+//! recomputation, decode lowers to one dot per score stage") and the
+//! `repro-experiments hlo-cost` report.
+//!
+//! This is a lightweight line-oriented parser of the HLO text format
+//! (`name = type[shape] opcode(args), attrs`), not a full grammar: it
+//! extracts opcode, result shape and operand count, which is enough for
+//! cost accounting. Shapes like `f32[4,8,3,768,64]{...}` are parsed into
+//! element counts.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// One parsed HLO instruction.
+#[derive(Clone, Debug)]
+pub struct HloInstr {
+    pub name: String,
+    pub opcode: String,
+    /// Elements in the (first) result shape; tuples sum their leaves.
+    pub out_elems: u64,
+    /// Bytes of the result (f32/s32 = 4, f64 = 8, pred/s8 = 1, f16 = 2).
+    pub out_bytes: u64,
+}
+
+/// Census of a whole module.
+#[derive(Clone, Debug, Default)]
+pub struct HloReport {
+    pub module: String,
+    pub instr_count: usize,
+    pub by_opcode: BTreeMap<String, usize>,
+    /// FLOPs estimated for dot ops (2·M·N·K) and elementwise ops (1/elem).
+    pub flops: u64,
+    /// Sum of all instruction result bytes — an upper bound on intra-graph
+    /// traffic (XLA fusion eliminates much of it; relative comparisons
+    /// between graphs remain meaningful).
+    pub result_bytes: u64,
+    pub dot_count: usize,
+    pub while_count: usize,
+    pub param_bytes: u64,
+}
+
+fn elem_size(ty: &str) -> u64 {
+    match ty {
+        "f64" | "s64" | "u64" | "c64" => 8,
+        "f32" | "s32" | "u32" => 4,
+        "f16" | "bf16" | "s16" | "u16" => 2,
+        "pred" | "s8" | "u8" => 1,
+        _ => 4,
+    }
+}
+
+/// Parse every `ty[d0,d1,...]` occurrence in a shape string; returns
+/// (total elements, total bytes) across tuple leaves.
+fn parse_shape(s: &str) -> (u64, u64) {
+    let mut elems = 0u64;
+    let mut bytes = 0u64;
+    let b = s.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        // find a type token followed by '['
+        if b[i].is_ascii_alphabetic() {
+            let start = i;
+            while i < b.len() && (b[i].is_ascii_alphanumeric()) {
+                i += 1;
+            }
+            let ty = &s[start..i];
+            if i < b.len() && b[i] == b'[' {
+                let close = s[i..].find(']').map(|p| i + p);
+                if let Some(close) = close {
+                    let dims = &s[i + 1..close];
+                    let n: u64 = if dims.trim().is_empty() {
+                        1
+                    } else {
+                        dims.split(',')
+                            .map(|d| d.trim().parse::<u64>().unwrap_or(1))
+                            .product()
+                    };
+                    elems += n;
+                    bytes += n * elem_size(ty);
+                    i = close + 1;
+                    continue;
+                }
+            }
+        } else {
+            i += 1;
+        }
+    }
+    (elems, bytes)
+}
+
+/// Extract dot FLOPs as 2 · out_elems · K, resolving K (the contracted
+/// dimension) from the first operand's recorded shape; falls back to 64
+/// when the operand is unknown.
+fn dot_flops(
+    line: &str,
+    out_elems: u64,
+    last_dims: &BTreeMap<String, u64>,
+) -> u64 {
+    let k = line
+        .find('(')
+        .and_then(|p| {
+            let args = &line[p + 1..];
+            let end = args.find(')')?;
+            let first = args[..end].split(',').next()?.trim();
+            last_dims.get(first).copied()
+        })
+        .unwrap_or(64);
+    2 * out_elems * k
+}
+
+/// Parse HLO text into a report.
+pub fn analyze_text(text: &str) -> HloReport {
+    let mut rep = HloReport::default();
+    // name -> last dimension of its (first) result shape, for dot-K lookup.
+    let mut last_dims: BTreeMap<String, u64> = BTreeMap::new();
+    for line in text.lines() {
+        let t = line.trim_start();
+        if let Some(rest) = t.strip_prefix("HloModule ") {
+            rep.module = rest.split_whitespace().next().unwrap_or("?").to_string();
+            continue;
+        }
+        // Instruction lines: `[ROOT ]name = shape opcode(...)`.
+        let t = t.strip_prefix("ROOT ").unwrap_or(t);
+        let Some(eq) = t.find(" = ") else { continue };
+        let name = &t[..eq];
+        if name.contains(' ') {
+            continue;
+        }
+        let rhs = &t[eq + 3..];
+        // rhs = "f32[2,3]{1,0} add(x, y), ..." — shape then opcode. Tuple
+        // shapes contain spaces ("(f32[2], s32[2]) sort(...)"): find the
+        // matching close paren first.
+        let shape_end = if rhs.starts_with('(') {
+            let mut depth = 0usize;
+            let mut end = 0usize;
+            for (i, c) in rhs.char_indices() {
+                match c {
+                    '(' => depth += 1,
+                    ')' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            end = i + 1;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            end
+        } else {
+            match rhs.find(' ') {
+                Some(p) => p,
+                None => continue,
+            }
+        };
+        if shape_end == 0 || shape_end >= rhs.len() {
+            continue;
+        }
+        let shape = &rhs[..shape_end];
+        let after = rhs[shape_end..].trim_start();
+        let opcode: String = after
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '-' || *c == '.')
+            .collect();
+        if opcode.is_empty() {
+            continue;
+        }
+        let (out_elems, out_bytes) = parse_shape(shape);
+        // Record the last dim of non-tuple results for dot-K resolution.
+        if !shape.starts_with('(') {
+            if let Some(lb) = shape.find('[') {
+                if let Some(rb) = shape[lb..].find(']') {
+                    let dims = &shape[lb + 1..lb + rb];
+                    let last = dims.split(',').last().and_then(|d| d.trim().parse().ok());
+                    if let Some(last) = last {
+                        last_dims.insert(name.to_string(), last);
+                    }
+                }
+            }
+        }
+        rep.instr_count += 1;
+        *rep.by_opcode.entry(opcode.clone()).or_insert(0) += 1;
+        rep.result_bytes += out_bytes;
+        match opcode.as_str() {
+            "dot" => {
+                rep.dot_count += 1;
+                rep.flops += dot_flops(after, out_elems, &last_dims);
+            }
+            "while" => rep.while_count += 1,
+            "parameter" => rep.param_bytes += out_bytes,
+            "add" | "multiply" | "subtract" | "divide" | "exponential" | "maximum"
+            | "minimum" | "tanh" | "rsqrt" | "power" => {
+                rep.flops += out_elems;
+            }
+            _ => {}
+        }
+    }
+    rep
+}
+
+pub fn analyze_file(path: &Path) -> Result<HloReport> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    Ok(analyze_text(&text))
+}
+
+impl HloReport {
+    pub fn top_opcodes(&self, n: usize) -> Vec<(String, usize)> {
+        let mut v: Vec<(String, usize)> =
+            self.by_opcode.iter().map(|(k, c)| (k.clone(), *c)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1));
+        v.truncate(n);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::artifacts_dir;
+
+    #[test]
+    fn parses_shapes() {
+        assert_eq!(parse_shape("f32[2,3]{1,0}"), (6, 24));
+        assert_eq!(parse_shape("s32[]"), (1, 4));
+        let (e, b) = parse_shape("(f32[4,2]{1,0}, pred[8])");
+        assert_eq!(e, 16);
+        assert_eq!(b, 40);
+    }
+
+    #[test]
+    fn analyzes_synthetic_module() {
+        let src = "HloModule demo\n\nENTRY main {\n  \
+                   p0 = f32[4,8]{1,0} parameter(0)\n  \
+                   p1 = f32[8,2]{1,0} parameter(1)\n  \
+                   d = f32[4,2]{1,0} dot(p0, p1), lhs_contracting_dims={1}\n  \
+                   ROOT a = f32[4,2]{1,0} add(d, d)\n}\n";
+        let r = analyze_text(src);
+        assert_eq!(r.module, "demo");
+        assert_eq!(r.by_opcode["parameter"], 2);
+        assert_eq!(r.dot_count, 1);
+        // dot: 2 · out(8) · k(8) = 128; add: 8 elems.
+        assert_eq!(r.flops, 128 + 8);
+        assert_eq!(r.param_bytes, (32 + 16) * 4); // 48 f32 elems
+    }
+
+    #[test]
+    fn decode_graphs_have_expected_structure() {
+        let dir = artifacts_dir();
+        if !dir.join("decode_full_b1.hlo.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let full = analyze_file(&dir.join("decode_full_b1.hlo.txt")).unwrap();
+        let loki = analyze_file(&dir.join("decode_loki_b1.hlo.txt")).unwrap();
+        // One scoring dot per layer (+ QKV/out/mlp dots); Loki adds the
+        // approximate-score stage and sorts but must not balloon dots.
+        assert!(full.dot_count >= 4, "full dots {}", full.dot_count);
+        assert!(loki.dot_count >= full.dot_count);
+        assert!(loki.dot_count <= full.dot_count + 16, "loki recomputes? {} vs {}",
+                loki.dot_count, full.dot_count);
+        assert!(loki.by_opcode.contains_key("sort"), "loki graph needs a top-k sort");
+        // The coarse-grid perf fix (§Perf iteration 2): each Pallas call
+        // lowers to at most ONE single-trip while (pallas_call wrapper),
+        // not B·H·(M/block) grid iterations. 2 kernels × n_layers is the
+        // ceiling; the fine-grid lowering had 24× that trip count.
+        let b8 = analyze_file(&dir.join("decode_loki_b8.hlo.txt")).unwrap();
+        assert!(b8.while_count <= 8, "b8 while count exploded: {}", b8.while_count);
+        assert!(loki.while_count <= 8, "b1 while count exploded: {}", loki.while_count);
+    }
+}

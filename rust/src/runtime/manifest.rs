@@ -1,0 +1,208 @@
+//! Typed view of `artifacts/manifest.json` — the python↔rust contract.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// The served model's architecture (mirrors python configs.ModelConfig).
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub max_len: usize,
+    pub rope_theta: f64,
+}
+
+/// One lowered graph: HLO file + positional input/output names.
+#[derive(Clone, Debug)]
+pub struct GraphSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub version: u64,
+    pub model: ModelSpec,
+    pub param_names: Vec<String>,
+    pub batch_buckets: Vec<usize>,
+    pub prefill_buckets: Vec<usize>,
+    pub graphs: BTreeMap<String, GraphSpec>,
+    pub weights_file: String,
+    /// e.g. "wiki_pre" -> "pca_wiki_pre.npz"
+    pub pca: BTreeMap<String, String>,
+    pub default_pca: String,
+    pub calibration_datasets: Vec<String>,
+    pub family_models: Vec<String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let j = Json::parse_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let m = j.req("model");
+        let model = ModelSpec {
+            name: m.req("name").as_str().unwrap_or("?").to_string(),
+            vocab_size: m.req("vocab_size").as_usize().context("vocab_size")?,
+            d_model: m.req("d_model").as_usize().context("d_model")?,
+            n_layers: m.req("n_layers").as_usize().context("n_layers")?,
+            n_heads: m.req("n_heads").as_usize().context("n_heads")?,
+            head_dim: m.req("head_dim").as_usize().context("head_dim")?,
+            d_ff: m.req("d_ff").as_usize().context("d_ff")?,
+            max_len: m.req("max_len").as_usize().context("max_len")?,
+            rope_theta: m.req("rope_theta").as_f64().unwrap_or(10000.0),
+        };
+        let strings = |key: &str| -> Result<Vec<String>> {
+            Ok(j.req(key)
+                .as_arr()
+                .with_context(|| format!("{key} not an array"))?
+                .iter()
+                .filter_map(|x| x.as_str().map(|s| s.to_string()))
+                .collect())
+        };
+        let usizes = |key: &str| -> Result<Vec<usize>> {
+            Ok(j.req(key)
+                .as_arr()
+                .with_context(|| format!("{key} not an array"))?
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect())
+        };
+        let mut graphs = BTreeMap::new();
+        for (name, g) in j.req("graphs").as_obj().context("graphs")? {
+            let names = |key: &str| -> Vec<String> {
+                g.req(key)
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|x| x.as_str().map(|s| s.to_string()))
+                    .collect()
+            };
+            graphs.insert(
+                name.clone(),
+                GraphSpec {
+                    name: name.clone(),
+                    file: g.req("file").as_str().context("graph file")?.to_string(),
+                    inputs: names("inputs"),
+                    outputs: names("outputs"),
+                },
+            );
+        }
+        let mut pca = BTreeMap::new();
+        for (k, v) in j.req("pca").as_obj().context("pca")? {
+            if let Some(s) = v.as_str() {
+                pca.insert(k.clone(), s.to_string());
+            }
+        }
+        let man = Manifest {
+            dir: dir.to_path_buf(),
+            version: j.req("version").as_usize().unwrap_or(0) as u64,
+            model,
+            param_names: strings("param_names")?,
+            batch_buckets: usizes("batch_buckets")?,
+            prefill_buckets: usizes("prefill_buckets")?,
+            graphs,
+            weights_file: j.req("weights").as_str().context("weights")?.to_string(),
+            pca,
+            default_pca: j.req("default_pca").as_str().unwrap_or("wiki_pre").to_string(),
+            calibration_datasets: strings("calibration_datasets")?,
+            family_models: strings("family_models").unwrap_or_default(),
+        };
+        man.validate()?;
+        Ok(man)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.param_names.is_empty() {
+            bail!("manifest has no param_names");
+        }
+        for b in &self.batch_buckets {
+            for required in ["decode_full", "decode_loki", "decode_h2o", "decode_pcaattn"] {
+                let g = format!("{required}_b{b}");
+                if !self.graphs.contains_key(&g) {
+                    bail!("manifest missing graph {g}");
+                }
+            }
+        }
+        for (_, g) in &self.graphs {
+            if !self.dir.join(&g.file).exists() {
+                bail!("graph file missing: {}", g.file);
+            }
+        }
+        if !self.dir.join(&self.weights_file).exists() {
+            bail!("weights file missing: {}", self.weights_file);
+        }
+        Ok(())
+    }
+
+    /// Smallest batch bucket that can hold `n` lanes (or the largest one).
+    pub fn pick_batch_bucket(&self, n: usize) -> usize {
+        let mut buckets = self.batch_buckets.clone();
+        buckets.sort_unstable();
+        for &b in &buckets {
+            if b >= n {
+                return b;
+            }
+        }
+        *buckets.last().expect("no batch buckets")
+    }
+
+    /// Smallest prefill bucket that fits a prompt of `len` tokens.
+    pub fn pick_prefill_bucket(&self, len: usize) -> Option<usize> {
+        let mut buckets = self.prefill_buckets.clone();
+        buckets.sort_unstable();
+        buckets.into_iter().find(|&p| p >= len)
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&GraphSpec> {
+        self.graphs
+            .get(name)
+            .with_context(|| format!("graph {name} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::artifacts_dir;
+
+    #[test]
+    fn loads_real_manifest() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).expect("manifest should load");
+        assert!(m.model.n_layers >= 1);
+        assert_eq!(m.param_names.len(), 2 + 9 * m.model.n_layers + 1);
+        assert!(m.pca.contains_key(&m.default_pca));
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.pick_batch_bucket(1), 1);
+        assert_eq!(m.pick_batch_bucket(3), 8);
+        assert_eq!(m.pick_batch_bucket(100), 8);
+        assert_eq!(m.pick_prefill_bucket(10), Some(128));
+        assert_eq!(m.pick_prefill_bucket(200), Some(512));
+        assert_eq!(m.pick_prefill_bucket(100_000), None);
+    }
+}

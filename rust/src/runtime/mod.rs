@@ -1,0 +1,28 @@
+//! PJRT runtime: load AOT artifacts, compile HLO text, execute graphs.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based and therefore
+//! thread-confined. The runtime mirrors a single-accelerator serving
+//! system: one **runtime thread** owns the client, the compiled
+//! executables, the weight buffers and every KV-cache gang state (all
+//! device-resident `PjRtBuffer`s); the rest of the system talks to it
+//! through the `Send + Sync` [`service::RuntimeService`] handle. Decode
+//! steps feed the previous step's output buffers straight back in as
+//! inputs — the host only ever sees tokens, lengths and logits. (The
+//! vendored `xla` crate carries a one-line patch setting
+//! `ExecuteOptions::untuple_result = true`, without which PJRT returns a
+//! single fused tuple buffer that could not be fed back; see DESIGN.md.)
+//!
+//! Layering:
+//! * [`manifest`] — typed view of `artifacts/manifest.json` (the contract
+//!   aot.py writes: graph input/output orders, buckets, file names).
+//! * [`stack`]    — `RuntimeStack`, the thread-confined engine.
+//! * [`service`]  — channel-based handle + the runtime thread main loop.
+
+pub mod hlo_inspect;
+pub mod manifest;
+pub mod service;
+pub mod stack;
+
+pub use manifest::{GraphSpec, Manifest, ModelSpec};
+pub use service::{RuntimeHandle, RuntimeService};
+pub use stack::{DecodeRequest, DecodeVariant, RuntimeStack, StateId};

@@ -1,0 +1,182 @@
+//! Channel-based runtime service: the `Send + Sync` face of the
+//! thread-confined [`RuntimeStack`].
+//!
+//! [`RuntimeService::start`] spawns the runtime thread (which owns all
+//! PJRT state) and hands out cloneable [`RuntimeHandle`]s. Every call is a
+//! synchronous round-trip over an mpsc pair — mirroring the single-device
+//! execution discipline of a real serving node: the coordinator decides
+//! *what* to run next (prefill vs decode vs inject), the runtime thread
+//! runs exactly one graph at a time.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use super::manifest::Manifest;
+use super::stack::{DecodeRequest, RuntimeStack, RuntimeStats, StateId};
+
+enum Req {
+    Prefill {
+        pca: String,
+        prompts: Vec<Vec<i32>>,
+        reply: Sender<Result<(StateId, Vec<Vec<f32>>)>>,
+    },
+    Decode {
+        req: DecodeRequest,
+        reply: Sender<Result<Vec<Vec<f32>>>>,
+    },
+    Inject {
+        gang: StateId,
+        lane: StateId,
+        idx: usize,
+        reply: Sender<Result<()>>,
+    },
+    Free(StateId),
+    Warmup {
+        graphs: Vec<String>,
+        reply: Sender<Result<()>>,
+    },
+    Stats {
+        reply: Sender<RuntimeStats>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the runtime thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Sender<Req>,
+}
+
+// Sender<T> is Send but not Sync; wrap sends behind a clone-per-call
+// pattern: each method clones tx (cheap) — Sender is Send+Clone, and
+// RuntimeHandle is used per-thread after cloning.
+impl RuntimeHandle {
+    pub fn prefill(&self, pca: &str, prompts: Vec<Vec<i32>>) -> Result<(StateId, Vec<Vec<f32>>)> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::Prefill { pca: pca.to_string(), prompts, reply })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread dropped reply"))?
+    }
+
+    pub fn decode(&self, req: DecodeRequest) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::Decode { req, reply })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread dropped reply"))?
+    }
+
+    pub fn inject(&self, gang: StateId, lane: StateId, idx: usize) -> Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::Inject { gang, lane, idx, reply })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread dropped reply"))?
+    }
+
+    pub fn free(&self, id: StateId) {
+        let _ = self.tx.send(Req::Free(id));
+    }
+
+    /// Pre-compile graphs so first-request latency excludes compilation.
+    pub fn warmup(&self, graphs: Vec<String>) -> Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::Warmup { graphs, reply })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread dropped reply"))?
+    }
+
+    pub fn stats(&self) -> Result<RuntimeStats> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::Stats { reply })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread dropped reply"))
+    }
+}
+
+/// Owns the runtime thread; dropping shuts it down.
+pub struct RuntimeService {
+    tx: Sender<Req>,
+    pub manifest: Manifest,
+    join: Option<std::thread::JoinHandle<()>>,
+    /// Serializes handle creation (Sender clone) — keeps RuntimeService Sync.
+    _guard: Mutex<()>,
+}
+
+impl RuntimeService {
+    /// Spawn the runtime thread over the given artifacts directory.
+    pub fn start(dir: PathBuf) -> Result<Self> {
+        // Parse the manifest on the caller thread too (host-side data) so
+        // schedulers can make bucket decisions without a round-trip.
+        let manifest = Manifest::load(&dir)?;
+        let (tx, rx) = channel::<Req>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("loki-runtime".to_string())
+            .spawn(move || {
+                let stack = match RuntimeStack::load(&dir) {
+                    Ok(s) => {
+                        let _ = ready_tx.send(Ok(()));
+                        s
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                for req in rx {
+                    match req {
+                        Req::Prefill { pca, prompts, reply } => {
+                            let _ = reply.send(stack.prefill(&pca, &prompts));
+                        }
+                        Req::Decode { req, reply } => {
+                            let _ = reply.send(stack.decode(&req));
+                        }
+                        Req::Inject { gang, lane, idx, reply } => {
+                            let _ = reply.send(stack.inject(gang, lane, idx));
+                        }
+                        Req::Free(id) => stack.free(id),
+                        Req::Warmup { graphs, reply } => {
+                            let mut res = Ok(());
+                            for g in &graphs {
+                                if let Err(e) = stack.executable(g) {
+                                    res = Err(e);
+                                    break;
+                                }
+                            }
+                            let _ = reply.send(res);
+                        }
+                        Req::Stats { reply } => {
+                            let _ = reply.send(stack.stats.borrow().clone());
+                        }
+                        Req::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawn runtime thread");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("runtime thread died during load"))??;
+        Ok(Self { tx, manifest, join: Some(join), _guard: Mutex::new(()) })
+    }
+
+    pub fn handle(&self) -> RuntimeHandle {
+        let _g = self._guard.lock().unwrap();
+        RuntimeHandle { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for RuntimeService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Req::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}

@@ -1,0 +1,455 @@
+//! `RuntimeStack`: the thread-confined PJRT engine.
+//!
+//! Owns the CPU PJRT client, lazily-compiled executables, device-resident
+//! weight/PCA buffers and every live KV gang state. Decode steps feed the
+//! previous step's output buffers straight back as inputs (the vendored
+//! `xla` crate is patched to untuple execution results — see
+//! `vendor/xla/xla_rs/xla_rs.cc`, `options.untuple_result = true`), so the
+//! host only ever transfers tokens, lengths, Loki knobs and logits.
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::Manifest;
+
+pub type StateId = u64;
+
+/// Which decode graph to run and its runtime knobs. `d_mask` is the
+/// per-layer principal-component mask (length `n_layers × head_dim`,
+/// 1.0 for components used in approximate scoring); `j_sel` the number of
+/// tokens granted exact attention.
+#[derive(Clone, Debug)]
+pub enum DecodeVariant {
+    Full,
+    Loki { d_mask: Vec<f32>, j_sel: i32 },
+    H2o { j_sel: i32 },
+    PcaAttn { d_mask: Vec<f32> },
+}
+
+impl DecodeVariant {
+    pub fn graph_prefix(&self) -> &'static str {
+        match self {
+            DecodeVariant::Full => "decode_full",
+            DecodeVariant::Loki { .. } => "decode_loki",
+            DecodeVariant::H2o { .. } => "decode_h2o",
+            DecodeVariant::PcaAttn { .. } => "decode_pcaattn",
+        }
+    }
+
+    /// Uniform-`d_f` Loki config (the paper's main setting): keeps the
+    /// leading `d_f·D` components in every layer and selects `k_f·M` slots.
+    pub fn loki_fractions(man: &Manifest, k_f: f64, d_f: f64) -> Self {
+        let (l, d) = (man.model.n_layers, man.model.head_dim);
+        let d_keep = ((d as f64 * d_f).round() as usize).clamp(1, d);
+        let mut mask = vec![0.0f32; l * d];
+        for layer in 0..l {
+            for c in 0..d_keep {
+                mask[layer * d + c] = 1.0;
+            }
+        }
+        let j = ((man.model.max_len as f64 * k_f).round() as i32).max(1);
+        DecodeVariant::Loki { d_mask: mask, j_sel: j }
+    }
+
+    /// Exact-TopK baseline = Loki ranking with the full basis (Lemma 4.1).
+    pub fn exact_topk(man: &Manifest, k_f: f64) -> Self {
+        DecodeVariant::loki_fractions(man, k_f, 1.0)
+    }
+
+    /// Variable-d_f policy (App. B.2 / Fig. 15): per-layer component
+    /// counts, e.g. from per-layer explained-variance thresholds.
+    pub fn loki_variable(man: &Manifest, k_f: f64, d_per_layer: &[usize]) -> Self {
+        let (l, d) = (man.model.n_layers, man.model.head_dim);
+        assert_eq!(d_per_layer.len(), l);
+        let mut mask = vec![0.0f32; l * d];
+        for (layer, &dk) in d_per_layer.iter().enumerate() {
+            for c in 0..dk.clamp(1, d) {
+                mask[layer * d + c] = 1.0;
+            }
+        }
+        let j = ((man.model.max_len as f64 * k_f).round() as i32).max(1);
+        DecodeVariant::Loki { d_mask: mask, j_sel: j }
+    }
+
+    pub fn h2o_fraction(man: &Manifest, k_f: f64) -> Self {
+        DecodeVariant::H2o { j_sel: ((man.model.max_len as f64 * k_f).round() as i32).max(2) }
+    }
+
+    pub fn pcaattn_fraction(man: &Manifest, d_f: f64) -> Self {
+        if let DecodeVariant::Loki { d_mask, .. } = Self::loki_fractions(man, 1.0, d_f) {
+            DecodeVariant::PcaAttn { d_mask }
+        } else {
+            unreachable!()
+        }
+    }
+}
+
+/// A gang = one compiled batch's device-resident KV state.
+pub struct GangState {
+    pub batch: usize,
+    pub pca: String,
+    pub cache_len: Vec<i32>,
+    kc: PjRtBuffer,
+    vc: PjRtBuffer,
+    acc: PjRtBuffer,
+}
+
+/// One decode call (host side of the graph contract).
+#[derive(Clone, Debug)]
+pub struct DecodeRequest {
+    pub state: StateId,
+    pub variant: DecodeVariant,
+    pub tokens: Vec<i32>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    /// graph name -> (#executions, total seconds).
+    pub exec: HashMap<String, (u64, f64)>,
+    pub compile: HashMap<String, f64>,
+    pub host_bytes_in: u64,
+    pub host_bytes_out: u64,
+}
+
+impl RuntimeStats {
+    fn record_exec(&mut self, name: &str, secs: f64) {
+        let e = self.exec.entry(name.to_string()).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += secs;
+    }
+}
+
+pub struct RuntimeStack {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    exes: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    weights: Vec<PjRtBuffer>,
+    pca_proj: RefCell<HashMap<String, Rc<PjRtBuffer>>>,
+    states: RefCell<HashMap<StateId, GangState>>,
+    next_id: Cell<StateId>,
+    pub stats: RefCell<RuntimeStats>,
+}
+
+impl RuntimeStack {
+    /// Load artifacts: manifest + weights to device; graphs compile lazily.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
+        let names: Vec<&str> = manifest.param_names.iter().map(|s| s.as_str()).collect();
+        let weights = PjRtBuffer::read_npz_by_name(
+            dir.join(&manifest.weights_file),
+            &client,
+            &names,
+        )
+        .map_err(|e| anyhow!("loading weights: {e}"))?;
+        Ok(Self {
+            client,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+            weights,
+            pca_proj: RefCell::new(HashMap::new()),
+            states: RefCell::new(HashMap::new()),
+            next_id: Cell::new(1),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    /// Lazily compile a graph by manifest name.
+    pub fn executable(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.graph(name)?;
+        let path = self.manifest.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        let secs = t0.elapsed().as_secs_f64();
+        self.stats.borrow_mut().compile.insert(name.to_string(), secs);
+        let rc = Rc::new(exe);
+        self.exes.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// PCA projection buffer by calibration name (e.g. "wiki_pre").
+    pub fn pca_buffer(&self, name: &str) -> Result<Rc<PjRtBuffer>> {
+        if let Some(b) = self.pca_proj.borrow().get(name) {
+            return Ok(b.clone());
+        }
+        let file = self
+            .manifest
+            .pca
+            .get(name)
+            .with_context(|| format!("unknown PCA calibration {name:?}"))?;
+        let mut bufs = PjRtBuffer::read_npz_by_name(
+            self.manifest.dir.join(file),
+            &self.client,
+            &["proj"],
+        )
+        .map_err(|e| anyhow!("loading pca {name}: {e}"))?;
+        let rc = Rc::new(bufs.remove(0));
+        self.pca_proj.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Identity "PCA" (sanity baseline: Loki over the raw key space).
+    pub fn identity_pca(&self) -> Result<Rc<PjRtBuffer>> {
+        if let Some(b) = self.pca_proj.borrow().get("identity") {
+            return Ok(b.clone());
+        }
+        let m = &self.manifest.model;
+        let (l, h, d) = (m.n_layers, m.n_heads, m.head_dim);
+        let mut eye = vec![0.0f32; l * h * d * d];
+        for li in 0..l * h {
+            for i in 0..d {
+                eye[li * d * d + i * d + i] = 1.0;
+            }
+        }
+        let buf = self
+            .buf_f32(&eye, &[l, h, d, d])
+            .context("identity proj upload")?;
+        let rc = Rc::new(buf);
+        self.pca_proj.borrow_mut().insert("identity".to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.stats.borrow_mut().host_bytes_in += (data.len() * 4) as u64;
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("h2d f32: {e}"))
+    }
+
+    fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.stats.borrow_mut().host_bytes_in += (data.len() * 4) as u64;
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("h2d i32: {e}"))
+    }
+
+    fn to_host_f32(&self, buf: &PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf.to_literal_sync().map_err(|e| anyhow!("d2h: {e}"))?;
+        let v = lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e}"))?;
+        self.stats.borrow_mut().host_bytes_out += (v.len() * 4) as u64;
+        Ok(v)
+    }
+
+    fn run(&self, name: &str, args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>> {
+        let exe = self.executable(name)?;
+        let t0 = Instant::now();
+        let mut out = exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        self.stats
+            .borrow_mut()
+            .record_exec(name, t0.elapsed().as_secs_f64());
+        if out.is_empty() || out[0].is_empty() {
+            bail!("{name} produced no outputs");
+        }
+        Ok(out.remove(0))
+    }
+
+    /// Prefill a gang of prompts (≤ bucket size). Returns the new state id
+    /// and per-lane last-position logits (`[batch][vocab]`, padded lanes
+    /// hold garbage and should be ignored by the caller).
+    pub fn prefill(&self, pca: &str, prompts: &[Vec<i32>]) -> Result<(StateId, Vec<Vec<f32>>)> {
+        if prompts.is_empty() {
+            bail!("prefill with no prompts");
+        }
+        let man = &self.manifest;
+        let batch = man.pick_batch_bucket(prompts.len());
+        if prompts.len() > batch {
+            bail!("gang of {} exceeds largest bucket {batch}", prompts.len());
+        }
+        let longest = prompts.iter().map(|p| p.len()).max().unwrap_or(1);
+        let plen = man
+            .pick_prefill_bucket(longest)
+            .with_context(|| format!("prompt of {longest} tokens exceeds every prefill bucket"))?;
+        let graph = format!("prefill_b{batch}_p{plen}");
+
+        let mut tokens = vec![0i32; batch * plen];
+        let mut prompt_len = vec![0i32; batch];
+        for (lane, p) in prompts.iter().enumerate() {
+            tokens[lane * plen..lane * plen + p.len()].copy_from_slice(p);
+            prompt_len[lane] = p.len() as i32;
+        }
+        let proj = if pca == "identity" { self.identity_pca()? } else { self.pca_buffer(pca)? };
+        let tok_b = self.buf_i32(&tokens, &[batch, plen])?;
+        let len_b = self.buf_i32(&prompt_len, &[batch])?;
+        let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
+        args.push(&proj);
+        args.push(&tok_b);
+        args.push(&len_b);
+        let mut out = self.run(&graph, &args)?;
+        // Outputs: kc, vc, acc, logits_last.
+        if out.len() != 4 {
+            bail!("{graph}: expected 4 outputs, got {}", out.len());
+        }
+        let logits_buf = out.pop().unwrap();
+        let acc = out.pop().unwrap();
+        let vc = out.pop().unwrap();
+        let kc = out.pop().unwrap();
+        let flat = self.to_host_f32(&logits_buf)?;
+        let v = man.model.vocab_size;
+        let logits: Vec<Vec<f32>> = (0..batch).map(|b| flat[b * v..(b + 1) * v].to_vec()).collect();
+
+        let id = self.next_id.get();
+        self.next_id.set(id + 1);
+        self.states.borrow_mut().insert(
+            id,
+            GangState { batch, pca: pca.to_string(), cache_len: prompt_len, kc, vc, acc },
+        );
+        Ok((id, logits))
+    }
+
+    /// One decode step for a gang. `tokens` must have one entry per lane.
+    /// Returns `[batch][vocab]` logits; the gang's device state advances.
+    pub fn decode(&self, req: &DecodeRequest) -> Result<Vec<Vec<f32>>> {
+        let man = &self.manifest;
+        let mut states = self.states.borrow_mut();
+        let st = states
+            .get_mut(&req.state)
+            .with_context(|| format!("unknown state {}", req.state))?;
+        if req.tokens.len() != st.batch {
+            bail!("decode tokens {} != batch {}", req.tokens.len(), st.batch);
+        }
+        if st.cache_len.iter().any(|&l| l as usize >= man.model.max_len) {
+            bail!("KV cache full (max_len {})", man.model.max_len);
+        }
+        let graph = format!("{}_b{}", req.variant.graph_prefix(), st.batch);
+        let proj = if st.pca == "identity" {
+            self.identity_pca()?
+        } else {
+            self.pca_buffer(&st.pca)?
+        };
+        let len_b = self.buf_i32(&st.cache_len, &[st.batch])?;
+        let tok_b = self.buf_i32(&req.tokens, &[st.batch])?;
+        let (l, d) = (man.model.n_layers, man.model.head_dim);
+        // Variant extras (kept alive until after execute).
+        let mut extras: Vec<PjRtBuffer> = Vec::new();
+        match &req.variant {
+            DecodeVariant::Full => {}
+            DecodeVariant::Loki { d_mask, j_sel } => {
+                assert_eq!(d_mask.len(), l * d, "d_mask must be [L, D]");
+                extras.push(self.buf_f32(d_mask, &[l, d])?);
+                extras.push(self.buf_i32(&[*j_sel], &[])?);
+            }
+            DecodeVariant::H2o { j_sel } => {
+                extras.push(self.buf_i32(&[*j_sel], &[])?);
+            }
+            DecodeVariant::PcaAttn { d_mask } => {
+                assert_eq!(d_mask.len(), l * d, "d_mask must be [L, D]");
+                extras.push(self.buf_f32(d_mask, &[l, d])?);
+            }
+        }
+        let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
+        args.push(&proj);
+        args.push(&st.kc);
+        args.push(&st.vc);
+        args.push(&st.acc);
+        args.push(&len_b);
+        args.push(&tok_b);
+        for e in &extras {
+            args.push(e);
+        }
+        let mut out = self.run(&graph, &args)?;
+        if out.len() != 4 {
+            bail!("{graph}: expected 4 outputs, got {}", out.len());
+        }
+        // Outputs: logits, kc, vc, acc — swap the cache buffers in place.
+        st.acc = out.pop().unwrap();
+        st.vc = out.pop().unwrap();
+        st.kc = out.pop().unwrap();
+        let logits_buf = out.pop().unwrap();
+        for lane_len in st.cache_len.iter_mut() {
+            *lane_len += 1;
+        }
+        let flat = self.to_host_f32(&logits_buf)?;
+        let v = man.model.vocab_size;
+        Ok((0..st.batch).map(|b| flat[b * v..(b + 1) * v].to_vec()).collect())
+    }
+
+    /// Continuous batching: replace `gang` lane `idx` with the (batch-1)
+    /// state `lane`, which is consumed.
+    pub fn inject(&self, gang: StateId, lane: StateId, idx: usize) -> Result<()> {
+        let mut states = self.states.borrow_mut();
+        let lane_st = states
+            .remove(&lane)
+            .with_context(|| format!("unknown lane state {lane}"))?;
+        if lane_st.batch != 1 {
+            states.insert(lane, lane_st);
+            bail!("inject source must be a batch-1 state");
+        }
+        let gang_st = states
+            .get_mut(&gang)
+            .with_context(|| format!("unknown gang state {gang}"))?;
+        if idx >= gang_st.batch {
+            bail!("lane index {idx} out of range for batch {}", gang_st.batch);
+        }
+        if gang_st.pca != lane_st.pca {
+            bail!("PCA mismatch between gang ({}) and lane ({})", gang_st.pca, lane_st.pca);
+        }
+        let graph = format!("inject_b{}", gang_st.batch);
+        let idx_b = self.buf_i32(&[idx as i32], &[])?;
+        let args: Vec<&PjRtBuffer> = vec![
+            &gang_st.kc,
+            &gang_st.vc,
+            &gang_st.acc,
+            &lane_st.kc,
+            &lane_st.vc,
+            &lane_st.acc,
+            &idx_b,
+        ];
+        let mut out = self.run(&graph, &args)?;
+        if out.len() != 3 {
+            bail!("{graph}: expected 3 outputs, got {}", out.len());
+        }
+        gang_st.acc = out.pop().unwrap();
+        gang_st.vc = out.pop().unwrap();
+        gang_st.kc = out.pop().unwrap();
+        gang_st.cache_len[idx] = lane_st.cache_len[0];
+        Ok(())
+    }
+
+    pub fn free(&self, id: StateId) {
+        self.states.borrow_mut().remove(&id);
+    }
+
+    pub fn state_len(&self, id: StateId) -> Option<Vec<i32>> {
+        self.states.borrow().get(&id).map(|s| s.cache_len.clone())
+    }
+
+    pub fn state_batch(&self, id: StateId) -> Option<usize> {
+        self.states.borrow().get(&id).map(|s| s.batch)
+    }
+
+    pub fn live_states(&self) -> usize {
+        self.states.borrow().len()
+    }
+
+    /// Host copy of a PCA spectrum (`eig` array, `[L, H, D]` flattened).
+    pub fn pca_eigenvalues(&self, name: &str) -> Result<(Vec<f32>, Vec<usize>)> {
+        let file = self
+            .manifest
+            .pca
+            .get(name)
+            .with_context(|| format!("unknown PCA calibration {name:?}"))?;
+        let lits = Literal::read_npz_by_name(self.manifest.dir.join(file), &(), &["eig"])
+            .map_err(|e| anyhow!("loading eig {name}: {e}"))?;
+        let lit = &lits[0];
+        let shape = lit.array_shape().map_err(|e| anyhow!("{e}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        Ok((lit.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?, dims))
+    }
+}

@@ -1,0 +1,114 @@
+//! Minimal TCP JSON-lines inference server over the engine.
+//!
+//! Protocol: one JSON object per line.
+//!   → {"prompt": "...", "max_tokens": 32, "temperature": 0.0}
+//!   ← {"id": 1, "text": "...", "tokens": 32, "ttft_s": 0.01, "total_s": 0.2}
+//!
+//! `repro serve --listen 127.0.0.1:7077` starts it; `server::client_call`
+//! is a tiny blocking client used by tests and demos. Thread-per-
+//! connection: the engine's bounded queue provides backpressure.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, SyncSender};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::request::GenRequest;
+use crate::coordinator::sampler::SampleCfg;
+use crate::model::ByteTokenizer;
+use crate::util::json::{self, Json};
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Serve forever on `addr`, forwarding requests into the engine queue.
+pub fn serve(addr: &str, submit: SyncSender<GenRequest>) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    eprintln!("[server] listening on {addr}");
+    let submit = Arc::new(submit);
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("[server] accept error: {e}");
+                continue;
+            }
+        };
+        let submit = submit.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = handle_conn(stream, &submit) {
+                eprintln!("[server] connection error: {e}");
+            }
+        });
+    }
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, submit: &SyncSender<GenRequest>) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    let tok = ByteTokenizer;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match handle_line(&line, submit, &tok) {
+            Ok(j) => j,
+            Err(e) => json::obj(vec![("error", json::s(&e.to_string()))]),
+        };
+        writer.write_all(resp.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    eprintln!("[server] {peer:?} disconnected");
+    Ok(())
+}
+
+fn handle_line(line: &str, submit: &SyncSender<GenRequest>, tok: &ByteTokenizer) -> Result<Json> {
+    let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request JSON: {e}"))?;
+    let prompt = req
+        .get("prompt")
+        .and_then(|p| p.as_str())
+        .context("missing \"prompt\"")?;
+    let max_tokens = req.get("max_tokens").and_then(|x| x.as_usize()).unwrap_or(32);
+    let temperature = req.get("temperature").and_then(|x| x.as_f64()).unwrap_or(0.0) as f32;
+    let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    let (reply, rx) = channel();
+    submit
+        .send(GenRequest {
+            id,
+            prompt: tok.encode(prompt),
+            max_new_tokens: max_tokens,
+            stop_token: Some(b'\n' as i32),
+            sampling: SampleCfg { temperature, top_p: 0.95, seed: id },
+            reply,
+        })
+        .map_err(|_| anyhow::anyhow!("engine is down"))?;
+    let res = rx.recv().map_err(|_| anyhow::anyhow!("engine dropped request"))?;
+    Ok(json::obj(vec![
+        ("id", json::num(res.id as f64)),
+        ("text", json::s(&res.text)),
+        ("tokens", json::num(res.tokens.len() as f64)),
+        ("finish", json::s(&format!("{:?}", res.finished_reason))),
+        ("ttft_s", json::num(res.timing.ttft_s)),
+        ("total_s", json::num(res.timing.total_s)),
+    ]))
+}
+
+/// Blocking one-shot client (tests / demos).
+pub fn client_call<A: ToSocketAddrs>(addr: A, prompt: &str, max_tokens: usize) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req = json::obj(vec![
+        ("prompt", json::s(prompt)),
+        ("max_tokens", json::num(max_tokens as f64)),
+    ]);
+    stream.write_all(req.to_string().as_bytes())?;
+    stream.write_all(b"\n")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Json::parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+}

@@ -1,0 +1,197 @@
+//! Minimal owned f32 tensor for the pure-Rust substrates.
+//!
+//! Deliberately simple: contiguous row-major storage, shape checked ops,
+//! O(1) views by row range. The heavy lifting (matmuls, attention) lives
+//! in [`crate::linalg`] and [`crate::attnsim`] which operate on slices for
+//! zero-copy hot paths; `Tensor` is the container and bookkeeping layer.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    /// Standard-normal random tensor (testing / synthetic workloads).
+    pub fn randn(shape: &[usize], rng: &mut crate::util::rng::Xoshiro256) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: rng.normal_vec(n) }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reshape in place (must preserve element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Flat index of a multi-dimensional coordinate.
+    pub fn idx(&self, coords: &[usize]) -> usize {
+        debug_assert_eq!(coords.len(), self.shape.len());
+        let mut flat = 0;
+        for (c, s) in coords.iter().zip(&self.shape) {
+            debug_assert!(c < s, "coord {coords:?} out of bounds for {:?}", self.shape);
+            flat = flat * s + c;
+        }
+        flat
+    }
+
+    pub fn at(&self, coords: &[usize]) -> f32 {
+        self.data[self.idx(coords)]
+    }
+
+    pub fn set(&mut self, coords: &[usize], v: f32) {
+        let i = self.idx(coords);
+        self.data[i] = v;
+    }
+
+    /// Borrow row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.ndim(), 2);
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        assert_eq!(self.ndim(), 2);
+        let w = self.shape[1];
+        &mut self.data[i * w..(i + 1) * w]
+    }
+
+    /// Borrow the contiguous sub-block for a leading index of an N-D
+    /// tensor (e.g. `slab(l)` of `[L, B, H, M, D]` -> `[B, H, M, D]` data).
+    pub fn slab(&self, i: usize) -> &[f32] {
+        let inner: usize = self.shape[1..].iter().product();
+        &self.data[i * inner..(i + 1) * inner]
+    }
+
+    pub fn slab_mut(&mut self, i: usize) -> &mut [f32] {
+        let inner: usize = self.shape[1..].iter().product();
+        &mut self.data[i * inner..(i + 1) * inner]
+    }
+
+    // -- elementwise ---------------------------------------------------------
+
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Self {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+        self
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// Maximum absolute elementwise difference (test helper).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn indexing_row_major() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|x| x as f32).collect());
+        assert_eq!(t.at(&[0, 0]), 0.0);
+        assert_eq!(t.at(&[0, 2]), 2.0);
+        assert_eq!(t.at(&[1, 0]), 3.0);
+        assert_eq!(t.row(1), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn slab_views() {
+        let t = Tensor::from_vec(&[2, 2, 2], (0..8).map(|x| x as f32).collect());
+        assert_eq!(t.slab(1), &[4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn map_and_arith() {
+        let mut a = Tensor::full(&[4], 2.0);
+        let b = Tensor::full(&[4], 3.0);
+        a.add_assign(&b);
+        a.scale(2.0);
+        assert_eq!(a.data(), &[10.0; 4]);
+        let c = a.map(|x| x - 10.0);
+        assert_eq!(c.data(), &[0.0; 4]);
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let mut r1 = Xoshiro256::new(5);
+        let mut r2 = Xoshiro256::new(5);
+        assert_eq!(Tensor::randn(&[8], &mut r1), Tensor::randn(&[8], &mut r2));
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0; 3]);
+    }
+}

@@ -1,0 +1,140 @@
+//! Micro-benchmark harness (criterion is not in the offline crate set).
+//!
+//! Methodology: warmup runs until the timer stabilizes or `warmup_time`
+//! elapses, then fixed-count measurement batches; reports min / median /
+//! mean / p95 and median-absolute-deviation. Used by every `cargo bench`
+//! target and by the experiment harnesses that need wall-clock numbers
+//! (Figs. 6 right, 7, 16).
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 200,
+            target_time: Duration::from_millis(900),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Quick preset for slow end-to-end benches.
+    pub fn quick() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 30,
+            target_time: Duration::from_millis(600),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+    /// Median absolute deviation — robust spread estimate.
+    pub mad: Duration,
+}
+
+impl BenchResult {
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<42} {:>12} median  {:>12} mean  {:>12} p95  ({} iters, mad {})",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            fmt_dur(self.p95),
+            self.iters,
+            fmt_dur(self.mad),
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+/// Run `f` repeatedly, returning robust timing statistics. The closure
+/// should perform one complete operation; use `std::hint::black_box` on
+/// inputs/outputs to defeat const-folding.
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(cfg.max_iters);
+    let start = Instant::now();
+    while samples.len() < cfg.max_iters
+        && (samples.len() < cfg.min_iters || start.elapsed() < cfg.target_time)
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    summarize(name, &mut samples)
+}
+
+fn summarize(name: &str, samples: &mut [Duration]) -> BenchResult {
+    samples.sort_unstable();
+    let n = samples.len();
+    let median = samples[n / 2];
+    let mean = samples.iter().sum::<Duration>() / n as u32;
+    let p95 = samples[((n as f64 * 0.95) as usize).min(n - 1)];
+    let mut devs: Vec<i128> = samples
+        .iter()
+        .map(|s| (s.as_nanos() as i128 - median.as_nanos() as i128).abs())
+        .collect();
+    devs.sort_unstable();
+    let mad = Duration::from_nanos(devs[n / 2] as u64);
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        min: samples[0],
+        median,
+        mean,
+        p95,
+        mad,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let cfg = BenchConfig { warmup_iters: 1, min_iters: 5, max_iters: 20, target_time: Duration::from_millis(50) };
+        let r = bench("spin", &cfg, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.iters >= 5);
+        assert!(r.min <= r.median && r.median <= r.p95);
+    }
+}

@@ -1,0 +1,66 @@
+//! Self-contained utility substrates.
+//!
+//! The offline crate set has no `clap`/`serde`/`criterion`/`rand`, so this
+//! module provides the equivalents the rest of the crate builds on:
+//! deterministic PRNGs ([`rng`]), a JSON parser/writer ([`json`]), a CLI
+//! argument parser ([`args`]), a statistics-aware micro-benchmark harness
+//! ([`bench`]) and plain-text table rendering ([`table`]).
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod table;
+
+use std::path::{Path, PathBuf};
+
+/// Locate the repository root by walking up from the current directory
+/// until a `Cargo.toml` with the `loki` package is found. Lets binaries,
+/// tests and benches run from any working directory inside the repo.
+pub fn repo_root() -> PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        if dir.join("Cargo.toml").exists() && dir.join("artifacts").exists()
+            || dir.join("Cargo.toml").exists() && dir.join("python").exists()
+        {
+            return dir;
+        }
+        match dir.parent() {
+            Some(p) => dir = p.to_path_buf(),
+            None => return PathBuf::from("."),
+        }
+    }
+}
+
+/// `repo_root()/artifacts`, overridable with `LOKI_ARTIFACTS`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("LOKI_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    repo_root().join(crate::ARTIFACTS_DIR)
+}
+
+/// `repo_root()/results`, created on demand.
+pub fn results_dir() -> PathBuf {
+    let d = repo_root().join(crate::RESULTS_DIR);
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+/// Write a string to a file, creating parent directories.
+pub fn write_file(path: &Path, contents: &str) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, contents)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repo_root_contains_cargo_toml() {
+        assert!(repo_root().join("Cargo.toml").exists());
+    }
+}

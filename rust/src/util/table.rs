@@ -1,0 +1,121 @@
+//! Plain-text / markdown table rendering for experiment output.
+//!
+//! Every experiment harness prints a paper-shaped table via [`Table`] and
+//! also serializes it to `results/<id>.txt`; keeping the renderer in one
+//! place keeps the tables visually consistent.
+
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width mismatch in table {:?}",
+            self.title
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with box-drawing separators, padded columns.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| format!("+{}", "-".repeat(w + 2)))
+            .collect::<String>()
+            + "+";
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncol {
+                let pad = widths[i] - cells[i].chars().count();
+                line.push_str(&format!(" {}{} |", cells[i], " ".repeat(pad)));
+            }
+            line
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("## {}\n", self.title));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    /// Print to stdout and persist under `results/<id>.txt`.
+    pub fn emit(&self, id: &str) {
+        let text = self.render();
+        println!("{text}");
+        let path = super::results_dir().join(format!("{id}.txt"));
+        if let Err(e) = std::fs::write(&path, &text) {
+            eprintln!("warn: could not write {}: {e}", path.display());
+        }
+    }
+}
+
+/// Format a float with fixed decimals, `-` for NaN (missing cells).
+pub fn fnum(x: f64, decimals: usize) -> String {
+    if x.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{x:.decimals$}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["method", "ppl"]);
+        t.row(vec!["full".into(), "5.11".into()]);
+        t.row(vec!["loki (k=0.25,d=0.25)".into(), "5.20".into()]);
+        let r = t.render();
+        assert!(r.contains("| method"));
+        assert!(r.lines().all(|l| l.is_empty() || l.starts_with('+') || l.starts_with('|') || l.starts_with("##")));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn fnum_handles_nan() {
+        assert_eq!(fnum(f64::NAN, 2), "-");
+        assert_eq!(fnum(1.2345, 2), "1.23");
+    }
+}

@@ -1,0 +1,138 @@
+//! Integration tests over the analysis pipeline: key dumps → Rust PCA →
+//! paper §3 claims, plus the Eq.-5 model against substrate measurements.
+
+use loki::analysis::rank::rank_table;
+use loki::analysis::speedup::SpeedupModel;
+use loki::analysis::KeyDump;
+use loki::util::artifacts_dir;
+
+fn have(name: &str) -> bool {
+    let ok = artifacts_dir().join(name).exists();
+    if !ok {
+        eprintln!("skipping: artifacts/{name} missing (run `make artifacts`)");
+    }
+    ok
+}
+
+/// The paper's central observation, as an executable assertion: trained
+/// attention keys have Rank@90 well below the head dimension.
+#[test]
+fn trained_keys_are_low_rank() {
+    if !have("keys_wiki.npz") {
+        return;
+    }
+    let dump = KeyDump::load(&artifacts_dir().join("keys_wiki.npz"), "k_post").unwrap();
+    let stats = rank_table(&dump.pca_all(), 90.0);
+    let mean = stats.model_mean();
+    assert!(
+        mean < 0.75 * dump.dim as f64,
+        "post-rotary Rank@90 {mean:.1} not clearly below D={}",
+        dump.dim
+    );
+    let pre = KeyDump::load(&artifacts_dir().join("keys_wiki.npz"), "k_pre").unwrap();
+    let pre_mean = rank_table(&pre.pca_all(), 90.0).model_mean();
+    // Rotary embeddings increase dimensionality (paper finding 3).
+    assert!(
+        pre_mean < mean,
+        "pre-rotary rank {pre_mean:.1} should be below post-rotary {mean:.1}"
+    );
+}
+
+/// Cross-corpus consistency (paper finding 2): per-layer rank profiles
+/// computed from different calibration corpora agree closely.
+#[test]
+fn rank_profile_is_calibration_invariant() {
+    if !have("keys_wiki.npz") || !have("keys_web.npz") || !have("keys_book.npz") {
+        return;
+    }
+    let mut profiles = Vec::new();
+    for p in ["wiki", "web", "book"] {
+        let dump = KeyDump::load(&artifacts_dir().join(format!("keys_{p}.npz")), "k_post").unwrap();
+        profiles.push(rank_table(&dump.pca_all(), 90.0).per_layer);
+    }
+    for l in 0..profiles[0].len() {
+        let vals: Vec<f64> = profiles.iter().map(|p| p[l]).collect();
+        let spread = vals.iter().cloned().fold(f64::MIN, f64::max)
+            - vals.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(spread <= 8.0, "layer {l} cross-corpus spread {spread}");
+    }
+}
+
+/// The untrained control sits meaningfully above every trained model
+/// (our strengthening of the paper's claim).
+#[test]
+fn random_init_control_has_higher_rank() {
+    if !have("family_loki-random.npz") || !have("keys_wiki.npz") {
+        return;
+    }
+    let rand = KeyDump::load(&artifacts_dir().join("family_loki-random.npz"), "k_pre").unwrap();
+    let trained = KeyDump::load(&artifacts_dir().join("keys_wiki.npz"), "k_pre").unwrap();
+    let r_rand = rank_table(&rand.pca_all(), 90.0).model_mean();
+    let r_trained = rank_table(&trained.pca_all(), 90.0).model_mean();
+    assert!(
+        r_rand > 1.3 * r_trained,
+        "random {r_rand:.1} vs trained {r_trained:.1}: training should induce low rank"
+    );
+}
+
+/// Eq. 5 closed form vs the substrate's measured byte movement: the Loki
+/// byte fraction equals d_f/2 + k_f (+D/S rotation term) within 5%.
+#[test]
+fn eq5_matches_measured_bytes() {
+    use loki::attnsim::variants::{decode_attend, AttnVariant, VariantParams};
+    use loki::attnsim::AttnShape;
+    use loki::util::rng::Xoshiro256;
+
+    let d = 64;
+    let s = 1024;
+    let shape = AttnShape { lanes: 4, head_dim: d, max_len: s };
+    let mut rng = Xoshiro256::new(99);
+    let q = rng.normal_vec(shape.lanes * d);
+    let kc = rng.normal_vec(shape.lanes * s * d);
+    let vc = rng.normal_vec(shape.lanes * s * d);
+    let full = decode_attend(
+        &AttnVariant::Full,
+        shape,
+        &q,
+        &kc,
+        &vc,
+        s * d,
+        s,
+        &VariantParams::default(),
+        None,
+    );
+    for (k_f, d_f) in [(0.25, 0.25), (0.125, 0.5), (0.5, 0.125)] {
+        let p = VariantParams {
+            k_sel: (k_f * s as f64) as usize,
+            d_sub: (d_f * d as f64) as usize,
+            ..Default::default()
+        };
+        let loki = decode_attend(&AttnVariant::Loki, shape, &q, &kc, &vc, s * d, s, &p, None);
+        let measured =
+            loki.movement.cache_bytes_read as f64 / full.movement.cache_bytes_read as f64;
+        let predicted = d_f / 2.0 + k_f;
+        assert!(
+            (measured - predicted).abs() < 0.05 * predicted + 0.01,
+            "(k={k_f}, d={d_f}): measured {measured:.3} vs Eq.5 {predicted:.3}"
+        );
+        // And the speedup model is consistent with the same ratio.
+        let m = SpeedupModel { d_full: d, seq: s };
+        let cost_ratio = m.loki_cost(d_f, k_f) / m.vanilla_cost();
+        assert!((cost_ratio - predicted).abs() < 0.1, "cost model drifted: {cost_ratio}");
+    }
+}
+
+/// PCA spectra across q/k/v load and are normalized (guards the dump
+/// format against silent python-side changes).
+#[test]
+fn dump_tensors_all_load_with_unit_spectra() {
+    if !have("keys_wiki.npz") {
+        return;
+    }
+    for kind in ["k_pre", "k_post", "q_pre", "q_post", "v"] {
+        let dump = KeyDump::load(&artifacts_dir().join("keys_wiki.npz"), kind).unwrap();
+        let basis = dump.pca(0, 0);
+        let sum: f32 = basis.eigenvalues.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-3, "{kind}: eigensum {sum}");
+    }
+}

@@ -1,0 +1,176 @@
+//! Integration tests over the serving coordinator: continuous batching,
+//! scheduler policies, backpressure, stop conditions, server protocol.
+
+use std::sync::mpsc::channel;
+
+use loki::coordinator::request::{FinishReason, GenRequest};
+use loki::coordinator::sampler::SampleCfg;
+use loki::coordinator::{Engine, EngineConfig, SchedulerPolicy};
+use loki::model::ByteTokenizer;
+use loki::runtime::{DecodeVariant, RuntimeService};
+use loki::util::artifacts_dir;
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    ok
+}
+
+fn request(
+    id: u64,
+    prompt: &str,
+    max_new: usize,
+    reply: std::sync::mpsc::Sender<loki::coordinator::request::GenResult>,
+) -> GenRequest {
+    GenRequest {
+        id,
+        prompt: ByteTokenizer.encode(prompt),
+        max_new_tokens: max_new,
+        stop_token: None,
+        sampling: SampleCfg::greedy(),
+        reply,
+    }
+}
+
+#[test]
+fn engine_completes_more_requests_than_lanes() {
+    if !have_artifacts() {
+        return;
+    }
+    let service = RuntimeService::start(artifacts_dir()).unwrap();
+    let cfg = EngineConfig { verbose: false, ..Default::default() };
+    let engine = Engine::new(&service, cfg.clone());
+    let (tx, rx) = Engine::channel(&cfg);
+    let (reply, results) = channel();
+    // 12 requests through (at most) 8 lanes forces continuous batching.
+    for i in 0..12 {
+        tx.send(request(i, &format!("request number {i} says"), 6, reply.clone())).unwrap();
+    }
+    drop(tx);
+    drop(reply);
+    let metrics = engine.run(rx).unwrap();
+    let got: Vec<_> = results.try_iter().collect();
+    assert_eq!(got.len(), 12);
+    assert_eq!(metrics.requests_done, 12);
+    assert!(metrics.injections >= 4, "continuous batching should inject: {}", metrics.injections);
+    let mut ids: Vec<u64> = got.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..12).collect::<Vec<_>>());
+    for r in &got {
+        assert_eq!(r.tokens.len(), 6);
+        assert_eq!(r.finished_reason, FinishReason::MaxTokens);
+        assert!(r.timing.ttft_s <= r.timing.total_s);
+    }
+}
+
+#[test]
+fn decode_first_policy_also_drains() {
+    if !have_artifacts() {
+        return;
+    }
+    let service = RuntimeService::start(artifacts_dir()).unwrap();
+    let cfg = EngineConfig { scheduler: SchedulerPolicy::DecodeFirst, ..Default::default() };
+    let engine = Engine::new(&service, cfg.clone());
+    let (tx, rx) = Engine::channel(&cfg);
+    let (reply, results) = channel();
+    for i in 0..10 {
+        tx.send(request(i, "short prompt", 4, reply.clone())).unwrap();
+    }
+    drop(tx);
+    drop(reply);
+    let metrics = engine.run(rx).unwrap();
+    assert_eq!(metrics.requests_done, 10);
+    assert_eq!(results.try_iter().count(), 10);
+}
+
+#[test]
+fn stop_token_ends_generation_early() {
+    if !have_artifacts() {
+        return;
+    }
+    let service = RuntimeService::start(artifacts_dir()).unwrap();
+    let cfg = EngineConfig::default();
+    let engine = Engine::new(&service, cfg.clone());
+    let (tx, rx) = Engine::channel(&cfg);
+    let (reply, results) = channel();
+    // Space is the most common byte in the corpus: greedy decode will hit
+    // it quickly.
+    tx.send(GenRequest {
+        id: 1,
+        prompt: ByteTokenizer.encode("the code of aelmor is"),
+        max_new_tokens: 64,
+        stop_token: Some(b' ' as i32),
+        sampling: SampleCfg::greedy(),
+        reply,
+    })
+    .unwrap();
+    drop(tx);
+    engine.run(rx).unwrap();
+    let r = results.recv().unwrap();
+    if r.finished_reason == FinishReason::StopToken {
+        // The stop token itself is excluded from the output (vLLM-style).
+        assert!(r.tokens.len() < 64);
+        assert!(!r.tokens.contains(&(b' ' as i32)), "stop token leaked into output");
+    } else {
+        assert_eq!(r.tokens.len(), 64);
+    }
+}
+
+#[test]
+fn loki_variant_engine_output_is_plausible() {
+    if !have_artifacts() {
+        return;
+    }
+    let service = RuntimeService::start(artifacts_dir()).unwrap();
+    let man = service.manifest.clone();
+    let cfg = EngineConfig {
+        variant: DecodeVariant::loki_fractions(&man, 0.25, 0.25),
+        ..Default::default()
+    };
+    let engine = Engine::new(&service, cfg.clone());
+    let (tx, rx) = Engine::channel(&cfg);
+    let (reply, results) = channel();
+    tx.send(request(7, "repeat : tor ven kal ; ", 12, reply)).unwrap();
+    drop(tx);
+    engine.run(rx).unwrap();
+    let r = results.recv().unwrap();
+    assert_eq!(r.tokens.len(), 12);
+    assert!(r.text.bytes().all(|b| b.is_ascii()), "got {:?}", r.text);
+}
+
+#[test]
+fn server_round_trip_over_tcp() {
+    if !have_artifacts() {
+        return;
+    }
+    let service = RuntimeService::start(artifacts_dir()).unwrap();
+    let cfg = EngineConfig::default();
+    let engine = Engine::new(&service, cfg.clone());
+    let (tx, rx) = Engine::channel(&cfg);
+    // Pick an ephemeral port by binding first.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    drop(listener);
+    let addr_str = addr.to_string();
+    let server_tx = tx.clone();
+    std::thread::spawn(move || {
+        let _ = loki::server::serve(&addr_str, server_tx);
+    });
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    // The server thread keeps its queue sender alive for the lifetime of
+    // the listener, so the engine never observes channel closure: run it
+    // detached and assert on the client-visible response only (the
+    // harness exits with live daemon threads).
+    std::thread::spawn(move || {
+        let _ = engine.run(rx);
+    });
+
+    let resp = loki::server::client_call(addr, "the code of ", 8).expect("server call");
+    assert!(resp.get("text").and_then(|t| t.as_str()).is_some(), "{resp:?}");
+    assert_eq!(resp.get("tokens").and_then(|t| t.as_usize()), Some(8));
+    assert!(resp.get("error").is_none());
+    assert!(resp.get("total_s").and_then(|t| t.as_f64()).unwrap_or(-1.0) >= 0.0);
+    drop(tx);
+}

@@ -1,0 +1,257 @@
+//! Integration tests over the compiled-artifact runtime: prefill, decode
+//! variants, cross-variant consistency (Lemma 4.1 / exact-top-k limits),
+//! lane injection and the service thread.
+//!
+//! These tests require `make artifacts` to have run; they skip (with a
+//! note) when the artifacts are absent so `cargo test` stays usable in a
+//! fresh checkout.
+
+use loki::runtime::{DecodeRequest, DecodeVariant, RuntimeService, RuntimeStack};
+use loki::util::artifacts_dir;
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    ok
+}
+
+fn prompt(text: &str) -> Vec<i32> {
+    text.bytes().map(|b| b as i32).collect()
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+#[test]
+fn prefill_then_decode_full_runs() {
+    if !have_artifacts() {
+        return;
+    }
+    let stack = RuntimeStack::load(&artifacts_dir()).expect("load artifacts");
+    let man = stack.manifest.clone();
+    let (id, logits) = stack
+        .prefill("wiki_pre", &[prompt("the code of ")])
+        .expect("prefill");
+    assert_eq!(logits.len(), 1);
+    assert_eq!(logits[0].len(), man.model.vocab_size);
+    assert!(logits[0].iter().all(|x| x.is_finite()));
+
+    let out = stack
+        .decode(&DecodeRequest {
+            state: id,
+            variant: DecodeVariant::Full,
+            tokens: vec![b'a' as i32],
+        })
+        .expect("decode");
+    assert!(out[0].iter().all(|x| x.is_finite()));
+    assert_eq!(stack.state_len(id).unwrap()[0] as usize, "the code of ".len() + 1);
+    stack.free(id);
+    assert_eq!(stack.live_states(), 0);
+}
+
+#[test]
+fn loki_with_full_mask_and_budget_matches_full_attention() {
+    // DecodeVariant::Loki with d_mask = 1 and j_sel = max_len selects every
+    // live slot -> logits must match decode_full to float tolerance
+    // (Lemma 4.1: attention in the rotated basis is exact).
+    if !have_artifacts() {
+        return;
+    }
+    let stack = RuntimeStack::load(&artifacts_dir()).expect("load artifacts");
+    let man = stack.manifest.clone();
+    let p = prompt("repeat : torvenal keral ; torvenal");
+    let (a, _) = stack.prefill("wiki_pre", &[p.clone()]).unwrap();
+    let (b, _) = stack.prefill("wiki_pre", &[p]).unwrap();
+    let tok = vec![b' ' as i32];
+    let full = stack
+        .decode(&DecodeRequest { state: a, variant: DecodeVariant::Full, tokens: tok.clone() })
+        .unwrap();
+    let loki = stack
+        .decode(&DecodeRequest {
+            state: b,
+            variant: DecodeVariant::loki_fractions(&man, 1.0, 1.0),
+            tokens: tok,
+        })
+        .unwrap();
+    let max_diff = full[0]
+        .iter()
+        .zip(&loki[0])
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 2e-3, "loki(all) vs full logits diff {max_diff}");
+}
+
+#[test]
+fn different_pca_bases_give_identical_full_attention() {
+    // Lemma 4.1 again, stronger: FULL attention logits must be invariant
+    // to the (orthogonal) basis the cache is stored in.
+    if !have_artifacts() {
+        return;
+    }
+    let stack = RuntimeStack::load(&artifacts_dir()).expect("load artifacts");
+    let p = prompt("aelmorisse thalorn ondira");
+    let tok = vec![b'.' as i32];
+    let mut outs = Vec::new();
+    for pca in ["wiki_pre", "book_post", "identity"] {
+        let (id, _) = stack.prefill(pca, &[p.clone()]).unwrap();
+        let o = stack
+            .decode(&DecodeRequest { state: id, variant: DecodeVariant::Full, tokens: tok.clone() })
+            .unwrap();
+        outs.push(o[0].clone());
+        stack.free(id);
+    }
+    for other in &outs[1..] {
+        let d = outs[0]
+            .iter()
+            .zip(other)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(d < 2e-3, "basis-dependent full attention! diff {d}");
+    }
+}
+
+#[test]
+fn greedy_decode_recalls_trained_fact() {
+    // End-to-end quality smoke: the model was trained on fact sentences;
+    // greedy decoding after "the code of <name> is" should regenerate
+    // text (not collapse). We check it produces lowercase-ish bytes.
+    if !have_artifacts() {
+        return;
+    }
+    let stack = RuntimeStack::load(&artifacts_dir()).expect("load artifacts");
+    let (id, logits) = stack.prefill("wiki_pre", &[prompt("the code of ")]).unwrap();
+    let mut tok = argmax(&logits[0]) as i32;
+    let mut generated = Vec::new();
+    for _ in 0..12 {
+        generated.push(tok as u8);
+        let out = stack
+            .decode(&DecodeRequest { state: id, variant: DecodeVariant::Full, tokens: vec![tok] })
+            .unwrap();
+        tok = argmax(&out[0]) as i32;
+    }
+    let text = String::from_utf8_lossy(&generated).to_string();
+    assert!(
+        generated.iter().all(|&b| b.is_ascii()),
+        "non-ascii generation: {text:?}"
+    );
+    assert!(
+        generated.iter().any(|&b| b.is_ascii_lowercase()),
+        "degenerate generation: {text:?}"
+    );
+}
+
+#[test]
+fn variants_all_execute_at_paper_settings() {
+    if !have_artifacts() {
+        return;
+    }
+    let stack = RuntimeStack::load(&artifacts_dir()).expect("load artifacts");
+    let man = stack.manifest.clone();
+    let p = prompt("zapklik wubgo maxbiz netapp .");
+    let variants = vec![
+        DecodeVariant::Full,
+        DecodeVariant::loki_fractions(&man, 0.25, 0.25),
+        DecodeVariant::exact_topk(&man, 0.25),
+        DecodeVariant::h2o_fraction(&man, 0.25),
+        DecodeVariant::pcaattn_fraction(&man, 0.25),
+    ];
+    for v in variants {
+        let (id, _) = stack.prefill("wiki_pre", &[p.clone()]).unwrap();
+        let name = format!("{v:?}");
+        let out = stack
+            .decode(&DecodeRequest { state: id, variant: v, tokens: vec![b'x' as i32] })
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(
+            out[0].iter().all(|x| x.is_finite()),
+            "{name} produced non-finite logits"
+        );
+        stack.free(id);
+    }
+}
+
+#[test]
+fn batch_gang_and_lane_injection() {
+    if !have_artifacts() {
+        return;
+    }
+    let stack = RuntimeStack::load(&artifacts_dir()).expect("load artifacts");
+    // Gang of 3 -> bucket 8; decode advances all lanes.
+    let prompts: Vec<Vec<i32>> = ["alpha one", "beta two two", "gamma"]
+        .iter()
+        .map(|s| prompt(s))
+        .collect();
+    let (gang, logits) = stack.prefill("wiki_pre", &prompts).unwrap();
+    assert_eq!(stack.state_batch(gang), Some(8));
+    assert_eq!(logits.len(), 8);
+    let toks: Vec<i32> = vec![b'a' as i32; 8];
+    stack
+        .decode(&DecodeRequest { state: gang, variant: DecodeVariant::Full, tokens: toks })
+        .unwrap();
+    let lens = stack.state_len(gang).unwrap();
+    assert_eq!(lens[0] as usize, "alpha one".len() + 1);
+    assert_eq!(lens[2] as usize, "gamma".len() + 1);
+
+    // Prefill a fresh lane and inject it into slot 1.
+    let (lane, _) = stack.prefill("wiki_pre", &[prompt("replacement prompt")]).unwrap();
+    assert_eq!(stack.state_batch(lane), Some(1));
+    stack.inject(gang, lane, 1).unwrap();
+    let lens = stack.state_len(gang).unwrap();
+    assert_eq!(lens[1] as usize, "replacement prompt".len());
+    // Lane state is consumed.
+    assert_eq!(stack.live_states(), 1);
+    // Gang still decodes after injection.
+    let out = stack
+        .decode(&DecodeRequest {
+            state: gang,
+            variant: DecodeVariant::Full,
+            tokens: vec![b'b' as i32; 8],
+        })
+        .unwrap();
+    assert!(out.iter().flatten().all(|x| x.is_finite()));
+}
+
+#[test]
+fn service_thread_round_trip() {
+    if !have_artifacts() {
+        return;
+    }
+    let svc = RuntimeService::start(artifacts_dir()).expect("start service");
+    let man = svc.manifest.clone();
+    let h = svc.handle();
+    // Parallel clients hammer the service from multiple threads.
+    std::thread::scope(|s| {
+        for t in 0..3 {
+            let h = h.clone();
+            let man = man.clone();
+            s.spawn(move || {
+                let (id, _) = h
+                    .prefill("wiki_pre", vec![prompt(&format!("client {t} says hello"))])
+                    .expect("prefill");
+                for step in 0..4 {
+                    let out = h
+                        .decode(DecodeRequest {
+                            state: id,
+                            variant: if step % 2 == 0 {
+                                DecodeVariant::Full
+                            } else {
+                                DecodeVariant::loki_fractions(&man, 0.25, 0.25)
+                            },
+                            tokens: vec![b'.' as i32],
+                        })
+                        .expect("decode");
+                    assert!(out[0].iter().all(|x| x.is_finite()));
+                }
+                h.free(id);
+            });
+        }
+    });
+    let stats = h.stats().unwrap();
+    assert!(stats.exec.values().map(|(n, _)| n).sum::<u64>() >= 12);
+}

@@ -1,0 +1,253 @@
+//! Hand-rolled property tests over the pure-Rust substrates (proptest is
+//! not in the offline crate set; we drive randomized cases from our own
+//! deterministic PRNG — failures reproduce from the printed seed).
+
+use loki::attnsim::kernels::{scores_indexed, FeatureAccess, Par};
+use loki::attnsim::variants::{decode_attend, AttnVariant, VariantParams};
+use loki::attnsim::AttnShape;
+use loki::linalg::pca::Pca;
+use loki::linalg::softmax::softmax_masked_inplace;
+use loki::linalg::stats::jaccard;
+use loki::linalg::topk::{top_k_indices, TopKAlgo};
+use loki::util::rng::Xoshiro256;
+
+const TRIALS: usize = 40;
+
+/// Random shapes: score kernels agree across parallel structures and the
+/// dense-copy baseline, including ragged lengths.
+#[test]
+fn prop_score_kernels_agree_on_random_shapes() {
+    for trial in 0..TRIALS {
+        let mut rng = Xoshiro256::new(1000 + trial as u64);
+        let lanes = rng.range(1, 9);
+        let d = [8, 16, 32, 64][rng.below(4)];
+        let m = rng.range(4, 300);
+        let live = rng.range(1, m + 1);
+        let shape = AttnShape { lanes, head_dim: d, max_len: m };
+        let q = rng.normal_vec(lanes * d);
+        let kc = rng.normal_vec(lanes * m * d);
+        let stride = m * d;
+        let feat = match rng.below(3) {
+            0 => FeatureAccess::Full,
+            1 => FeatureAccess::Prefix(rng.range(1, d + 1)),
+            _ => {
+                let n = rng.range(1, d + 1);
+                let mut ix: Vec<u16> = (0..d as u16).collect();
+                rng.shuffle(&mut ix);
+                ix.truncate(n);
+                ix.sort_unstable();
+                FeatureAccess::Gather(ix)
+            }
+        };
+        let mut a = vec![0.0; lanes * live];
+        let mut b = vec![0.0; lanes * live];
+        scores_indexed(shape, &q, &kc, stride, live, &feat, 0.5, Par::Serial, Some(1), &mut a);
+        scores_indexed(shape, &q, &kc, stride, live, &feat, 0.5, Par::Tiles2D, Some(3), &mut b);
+        for i in 0..a.len() {
+            assert!(
+                (a[i] - b[i]).abs() < 1e-4,
+                "trial {trial} ({lanes},{d},{m},{live}) {feat:?}: {} vs {}",
+                a[i],
+                b[i]
+            );
+        }
+    }
+}
+
+/// Loki with d_sub = D must select exactly the exact-top-k set (ties
+/// aside) and produce identical context vectors.
+#[test]
+fn prop_loki_full_d_equals_exact_topk() {
+    for trial in 0..TRIALS {
+        let mut rng = Xoshiro256::new(2000 + trial as u64);
+        let lanes = rng.range(1, 5);
+        let d = 16;
+        let m = rng.range(16, 128);
+        let shape = AttnShape { lanes, head_dim: d, max_len: m };
+        let q = rng.normal_vec(lanes * d);
+        let kc = rng.normal_vec(lanes * m * d);
+        let vc = rng.normal_vec(lanes * m * d);
+        let k_sel = rng.range(1, m + 1);
+        let p = VariantParams { k_sel, d_sub: d, ..Default::default() };
+        let a = decode_attend(&AttnVariant::ExactTopK, shape, &q, &kc, &vc, m * d, m, &p, None);
+        let b = decode_attend(&AttnVariant::Loki, shape, &q, &kc, &vc, m * d, m, &p, None);
+        for (x, y) in a.context.iter().zip(&b.context) {
+            assert!((x - y).abs() < 1e-4, "trial {trial}");
+        }
+    }
+}
+
+/// Monotonicity: growing d_sub must not *decrease* top-k agreement with
+/// the exact ranking (on average over trials).
+#[test]
+fn prop_selection_agreement_improves_with_d() {
+    let mut total_low = 0.0;
+    let mut total_high = 0.0;
+    for trial in 0..TRIALS {
+        let mut rng = Xoshiro256::new(3000 + trial as u64);
+        let d = 32;
+        let m = 128;
+        let shape = AttnShape { lanes: 1, head_dim: d, max_len: m };
+        let q = rng.normal_vec(d);
+        // Anisotropic keys so leading dims carry more signal (PCA-like).
+        let mut kc = rng.normal_vec(m * d);
+        for row in kc.chunks_exact_mut(d) {
+            for (j, x) in row.iter_mut().enumerate() {
+                *x *= 1.0 / (1.0 + j as f32 * 0.2);
+            }
+        }
+        let vc = rng.normal_vec(m * d);
+        let k_sel = 16;
+        let exact = decode_attend(
+            &AttnVariant::ExactTopK,
+            shape,
+            &q,
+            &kc,
+            &vc,
+            m * d,
+            m,
+            &VariantParams { k_sel, d_sub: d, ..Default::default() },
+            None,
+        );
+        for (d_sub, total) in [(4usize, &mut total_low), (32, &mut total_high)] {
+            let loki = decode_attend(
+                &AttnVariant::Loki,
+                shape,
+                &q,
+                &kc,
+                &vc,
+                m * d,
+                m,
+                &VariantParams { k_sel, d_sub, ..Default::default() },
+                None,
+            );
+            *total += jaccard(&exact.selected[0], &loki.selected[0]);
+        }
+    }
+    assert!(
+        total_high >= total_low,
+        "agreement should improve with d: d=4 {total_low:.2} vs d=32 {total_high:.2}"
+    );
+    // d_sub = D means exact scores: the selection must match exactly.
+    assert!((total_high / TRIALS as f64) > 0.999, "full-d selection must be exact");
+}
+
+/// Top-k algorithms return value-identical selections on adversarial
+/// inputs: sorted, reversed, constant, NaN-free extremes.
+#[test]
+fn prop_topk_adversarial_inputs() {
+    let cases: Vec<Vec<f32>> = vec![
+        (0..500).map(|i| i as f32).collect(),
+        (0..500).rev().map(|i| i as f32).collect(),
+        vec![1.0; 300],
+        vec![f32::MIN, f32::MAX, 0.0, -0.0, 1e-38, -1e38],
+        (0..257).map(|i| if i % 2 == 0 { -1e30 } else { 1e30 }).collect(),
+    ];
+    for (ci, scores) in cases.iter().enumerate() {
+        for k in [0, 1, scores.len() / 2, scores.len()] {
+            let vals = |ix: &[u32]| {
+                let mut v: Vec<f32> = ix.iter().map(|&i| scores[i as usize]).collect();
+                v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                v
+            };
+            let a = vals(&top_k_indices(TopKAlgo::Sort, scores, k));
+            let b = vals(&top_k_indices(TopKAlgo::Heap, scores, k));
+            let c = vals(&top_k_indices(TopKAlgo::QuickSelect, scores, k));
+            assert_eq!(a, b, "case {ci} k {k} heap");
+            assert_eq!(a, c, "case {ci} k {k} quickselect");
+        }
+    }
+}
+
+/// PCA rotation must preserve pairwise dot products (Lemma 4.1 at the
+/// substrate level) for any fitted basis.
+#[test]
+fn prop_pca_rotation_preserves_dot_products() {
+    for trial in 0..TRIALS {
+        let mut rng = Xoshiro256::new(4000 + trial as u64);
+        let d = [4, 8, 16][rng.below(3)];
+        let n = rng.range(50, 400);
+        let samples = rng.normal_vec(n * d);
+        let basis = Pca::fit(&samples, n, d);
+        let x = rng.normal_vec(d);
+        let y = rng.normal_vec(d);
+        let mut xr = vec![0.0; d];
+        let mut yr = vec![0.0; d];
+        basis.rotate(&x, &mut xr);
+        basis.rotate(&y, &mut yr);
+        let dot = |a: &[f32], b: &[f32]| -> f32 { a.iter().zip(b).map(|(p, q)| p * q).sum() };
+        let raw = dot(&x, &y);
+        let rot = dot(&xr, &yr);
+        assert!(
+            (raw - rot).abs() < 1e-3 * (1.0 + raw.abs()),
+            "trial {trial} d {d}: {raw} vs {rot}"
+        );
+    }
+}
+
+/// H2O invariants under random decode sequences: selection size respects
+/// the budget, accumulators are monotone non-decreasing, and the newest
+/// token is always kept.
+#[test]
+fn prop_h2o_invariants() {
+    for trial in 0..20 {
+        let mut rng = Xoshiro256::new(5000 + trial as u64);
+        let d = 8;
+        let m = 96;
+        let lanes = 2;
+        let shape = AttnShape { lanes, head_dim: d, max_len: m };
+        let kc = rng.normal_vec(lanes * m * d);
+        let vc = rng.normal_vec(lanes * m * d);
+        let mut state = vec![vec![0.0f32; m]; lanes];
+        let k_sel = rng.range(4, 32);
+        let mut prev_sums = vec![0.0f32; lanes];
+        for live in (k_sel + 1..m).step_by(7) {
+            let q = rng.normal_vec(lanes * d);
+            let p = VariantParams { k_sel, ..Default::default() };
+            let out = decode_attend(
+                &AttnVariant::H2O,
+                shape,
+                &q,
+                &kc,
+                &vc,
+                m * d,
+                live,
+                &p,
+                Some(&mut state),
+            );
+            for lane in 0..lanes {
+                assert!(out.selected[lane].len() <= k_sel, "budget violated");
+                assert!(out.selected[lane].contains(&((live - 1) as u32)), "newest evicted");
+                let sum: f32 = state[lane].iter().sum();
+                assert!(sum >= prev_sums[lane] - 1e-4, "acc decreased");
+                prev_sums[lane] = sum;
+            }
+        }
+    }
+}
+
+/// Masked softmax: output is a probability distribution over the mask for
+/// random masks (including empty and singleton).
+#[test]
+fn prop_masked_softmax_is_distribution() {
+    for trial in 0..TRIALS {
+        let mut rng = Xoshiro256::new(6000 + trial as u64);
+        let n = rng.range(1, 200);
+        let mut scores = rng.normal_vec(n);
+        let mask: Vec<bool> = (0..n).map(|_| rng.uniform() < 0.6).collect();
+        softmax_masked_inplace(&mut scores, &mask);
+        let sum: f32 = scores.iter().sum();
+        let any = mask.iter().any(|&m| m);
+        if any {
+            assert!((sum - 1.0).abs() < 1e-4, "trial {trial}: sum {sum}");
+        } else {
+            assert_eq!(sum, 0.0);
+        }
+        for (s, &m) in scores.iter().zip(&mask) {
+            assert!(*s >= 0.0);
+            if !m {
+                assert_eq!(*s, 0.0);
+            }
+        }
+    }
+}
