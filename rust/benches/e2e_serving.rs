@@ -2,18 +2,47 @@
 //! latency through the full stack (coordinator → runtime thread → compiled
 //! HLO), full attention vs Loki. Numbers feed Figure 6 (right)'s
 //! serving-stack contrast and EXPERIMENTS.md §E2E.
+//!
+//! Scenario 2 drives a multi-tenant shared-system-prompt trace through
+//! the engine's KV-pool admission layer (prefix sharing on vs off) and
+//! reports peak resident pool bytes against the flat per-lane cache the
+//! pool replaced — the serving-level counterpart of
+//! `kvpool_bench::shared_prefix_residency`.
 
 use std::sync::mpsc::channel;
 
 use loki::coordinator::request::GenRequest;
 use loki::coordinator::sampler::SampleCfg;
-use loki::coordinator::{Engine, EngineConfig};
+use loki::coordinator::{Engine, EngineConfig, EngineMetrics, PoolConfig};
 use loki::data::workload::{Workload, WorkloadCfg};
 use loki::data::TaskSuite;
 use loki::model::ByteTokenizer;
 use loki::runtime::{DecodeVariant, RuntimeService};
 use loki::util::artifacts_dir;
 use loki::util::table::{fnum, Table};
+
+fn run_trace(
+    service: &RuntimeService,
+    cfg: EngineConfig,
+    wl: &Workload,
+) -> anyhow::Result<EngineMetrics> {
+    let engine = Engine::new(service, cfg.clone());
+    let (tx, rx) = Engine::channel(&cfg);
+    let tok = ByteTokenizer;
+    let (reply, _results) = channel();
+    for (i, item) in wl.items.iter().enumerate() {
+        tx.send(GenRequest {
+            id: i as u64,
+            prompt: tok.encode(&item.prompt),
+            max_new_tokens: item.max_new_tokens,
+            stop_token: None,
+            sampling: SampleCfg::greedy(),
+            reply: reply.clone(),
+        })?;
+    }
+    drop(tx);
+    engine.run(rx)
+}
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick") || std::env::var("LOKI_QUICK").is_ok();
@@ -31,6 +60,7 @@ fn main() -> anyhow::Result<()> {
             burst_p: 0.0,
             prompt_len: (48, 200),
             gen_len: (12, 40),
+            shared_prefix_len: 0,
             seed: 3,
         },
         &suite.fillers,
@@ -46,22 +76,7 @@ fn main() -> anyhow::Result<()> {
         ("loki .25/.25", DecodeVariant::loki_fractions(&man, 0.25, 0.25)),
     ] {
         let cfg = EngineConfig { variant, ..Default::default() };
-        let engine = Engine::new(&service, cfg.clone());
-        let (tx, rx) = Engine::channel(&cfg);
-        let tok = ByteTokenizer;
-        let (reply, _results) = channel();
-        for (i, item) in wl.items.iter().enumerate() {
-            tx.send(GenRequest {
-                id: i as u64,
-                prompt: tok.encode(&item.prompt),
-                max_new_tokens: item.max_new_tokens,
-                stop_token: None,
-                sampling: SampleCfg::greedy(),
-                reply: reply.clone(),
-            })?;
-        }
-        drop(tx);
-        let m = engine.run(rx)?;
+        let m = run_trace(&service, cfg, &wl)?;
         table.row(vec![
             label.to_string(),
             fnum(m.throughput_tok_s(), 1),
@@ -72,5 +87,52 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     table.emit("e2e_serving_bench");
+
+    // ---- Scenario 2: shared system prompt through pool admission ------
+    let shared_wl = Workload::generate(
+        &WorkloadCfg {
+            n_requests: if quick { 8 } else { 32 },
+            rate: 0.0,
+            burst_p: 0.0,
+            prompt_len: (16, 48),
+            gen_len: (8, 24),
+            shared_prefix_len: 96,
+            seed: 7,
+        },
+        &suite.fillers,
+    );
+    let mut table = Table::new(
+        "E2E serving: shared 96-byte system prompt, KV-pool residency",
+        &[
+            "prefix sharing",
+            "peak pool MB",
+            "flat cache MB",
+            "savings",
+            "shared blocks",
+            "blocked",
+        ],
+    );
+    for (label, sharing) in [("on", true), ("off", false)] {
+        let cfg = EngineConfig {
+            variant: DecodeVariant::loki_fractions(&man, 0.25, 0.25),
+            pool: PoolConfig { block_size: 16, num_blocks: 0, prefix_sharing: sharing },
+            ..Default::default()
+        };
+        let m = run_trace(&service, cfg, &shared_wl)?;
+        table.row(vec![
+            label.to_string(),
+            fnum(m.kv_resident_bytes_peak() as f64 / 1e6, 2),
+            fnum(m.kv_flat_bytes as f64 / 1e6, 2),
+            format!("{:.2}x", m.kv_savings_vs_flat()),
+            format!("{}", m.prefix_shared_blocks),
+            format!("{}", m.admission_blocked),
+        ]);
+    }
+    table.emit("e2e_serving_sharing");
+    println!(
+        "(peak pool bytes mirror granted blocks × per-block KV bytes; the\n\
+         flat baseline is the gang-wide [lanes, max_len, D] cache the\n\
+         lane_reset_frac era preallocated)"
+    );
     Ok(())
 }

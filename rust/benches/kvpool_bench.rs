@@ -1,0 +1,249 @@
+//! `cargo bench --bench kvpool_bench` — the paged KV-pool microbench.
+//!
+//! Three questions, all on the pure-Rust substrate (no compiled
+//! artifacts needed):
+//!
+//! 1. **Append cost** — paged append must price like `InPlace` (write one
+//!    row), not like `Realloc` (copy history), while allocating resident
+//!    bytes per *block* instead of per worst-case lane.
+//! 2. **Decode overhead** — Loki decode through block-table indirection
+//!    vs the flat cache at a serving shape (the indirection is pointer
+//!    math; it must stay within noise).
+//! 3. **Shared-prefix residency** — the acceptance scenario: a gang of
+//!    sequences sharing a long system prompt. Reports resident KV bytes
+//!    vs the flat `[lanes, max_len, D]` cache and asserts the ≥2×
+//!    reduction at gang width ≥ 4.
+
+use loki::attnsim::cache::{AppendPolicy, KvCache};
+use loki::attnsim::variants::{decode_attend, decode_attend_paged, AttnVariant, VariantParams};
+use loki::attnsim::AttnShape;
+use loki::kvpool::{TieredKvPool, TieredPoolCfg};
+use loki::util::bench::{bench, BenchConfig};
+use loki::util::rng::Xoshiro256;
+use loki::util::table::{fnum, Table};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick") || std::env::var("LOKI_QUICK").is_ok();
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+
+    append_bench(&cfg, quick);
+    decode_bench(&cfg, quick);
+    shared_prefix_residency(quick);
+}
+
+/// Paged vs InPlace vs Realloc append: per-step wall time and resident
+/// bytes after a partial fill (the regime serving actually runs in —
+/// nobody decodes to max_len).
+fn append_bench(cfg: &BenchConfig, quick: bool) {
+    let lanes = if quick { 16 } else { 40 }; // heads of one 13B layer
+    let d = 128;
+    let max_len = 4096;
+    let fill = 512; // live tokens when we measure
+    let shape = AttnShape { lanes, head_dim: d, max_len };
+    let mut rng = Xoshiro256::new(21);
+    let rows = rng.normal_vec(lanes * d);
+
+    let mut table = Table::new(
+        "kvpool: append cost and residency at 512/4096 tokens",
+        &["policy", "per-append", "resident MB", "vs in-place"],
+    );
+    let mut inplace_resident = 0u64;
+    for (name, policy) in [
+        ("in-place (flat prealloc)", AppendPolicy::InPlace),
+        ("realloc (HF torch.cat)", AppendPolicy::Realloc),
+        ("paged (kvpool, bs=16)", AppendPolicy::Paged { block_size: 16 }),
+    ] {
+        // Measure append at the fill point: refill a fresh cache per
+        // batch outside the timed region is too slow for Realloc, so time
+        // one append on a cache held at `fill` (append + truncate-by-
+        // rebuild for flat would distort; instead time a fresh fill of
+        // `step` appends and divide).
+        let step = if quick { 64 } else { 128 };
+        let r = bench(name, cfg, || {
+            let mut c = KvCache::new(shape, policy);
+            // Pre-fill without timing distortion is impossible inside the
+            // closure cheaply for Realloc; include it and report per-step
+            // time over the whole fill+steps run for an honest relative
+            // comparison (every policy pays the same row traffic).
+            for _ in 0..fill + step {
+                c.append(std::hint::black_box(&rows));
+            }
+            std::hint::black_box(c.len());
+        });
+        let mut c = KvCache::new(shape, policy);
+        for _ in 0..fill {
+            c.append(&rows);
+        }
+        let resident = c.resident_bytes();
+        if matches!(policy, AppendPolicy::InPlace) {
+            inplace_resident = resident;
+        }
+        println!("{}", r.summary());
+        table.row(vec![
+            name.to_string(),
+            format!("{:.2}µs", r.median_secs() * 1e6 / (fill + step) as f64),
+            fnum(resident as f64 / 1e6, 1),
+            if inplace_resident > 0 {
+                format!("{:.2}x", resident as f64 / inplace_resident as f64)
+            } else {
+                "-".to_string()
+            },
+        ]);
+    }
+    table.emit("kvpool_append");
+}
+
+/// Loki decode step: flat cache vs paged pool at the same shape. Also
+/// reports the tier traffic the pool modeled (hot passes, cold faults).
+fn decode_bench(cfg: &BenchConfig, quick: bool) {
+    let lanes = if quick { 4 } else { 8 };
+    let d = 128;
+    let live = if quick { 1024 } else { 2048 };
+    let d_hot = 32;
+    let shape = AttnShape { lanes, head_dim: d, max_len: live };
+    let stride = live * d;
+    let mut rng = Xoshiro256::new(22);
+    let kc = rng.normal_vec(lanes * live * d);
+    let vc = rng.normal_vec(lanes * live * d);
+    let q = rng.normal_vec(lanes * d);
+    let params = VariantParams { k_sel: live / 4, d_sub: d_hot, ..Default::default() };
+
+    let mut pool = TieredKvPool::new(TieredPoolCfg {
+        num_blocks: lanes * live.div_ceil(16) + 1,
+        block_size: 16,
+        head_dim: d,
+        d_hot,
+        cold_resident_blocks: 0,
+    });
+    let seqs: Vec<_> = (0..lanes)
+        .map(|lane| {
+            let s = pool.new_seq();
+            pool.load_prefix(
+                s,
+                &kc[lane * stride..lane * stride + live * d],
+                &vc[lane * stride..lane * stride + live * d],
+                live,
+            )
+            .unwrap();
+            s
+        })
+        .collect();
+
+    let mut table = Table::new(
+        "kvpool: Loki decode step, flat vs paged (same rows, same math)",
+        &["path", "median", "ctx checksum"],
+    );
+    let flat = bench("loki decode, flat cache", cfg, || {
+        let out = decode_attend(
+            &AttnVariant::Loki,
+            shape,
+            std::hint::black_box(&q),
+            &kc,
+            &vc,
+            stride,
+            live,
+            &params,
+            None,
+        );
+        std::hint::black_box(out.context);
+    });
+    println!("{}", flat.summary());
+    let paged = bench("loki decode, paged pool", cfg, || {
+        let out = decode_attend_paged(
+            &AttnVariant::Loki,
+            &mut pool,
+            &seqs,
+            std::hint::black_box(&q),
+            &params,
+            None,
+        );
+        std::hint::black_box(out.context);
+    });
+    println!("{}", paged.summary());
+    let a = decode_attend(&AttnVariant::Loki, shape, &q, &kc, &vc, stride, live, &params, None);
+    let b = decode_attend_paged(&AttnVariant::Loki, &mut pool, &seqs, &q, &params, None);
+    assert_eq!(a.context, b.context, "paged decode must stay bit-identical to flat");
+    let sum: f32 = b.context.iter().sum();
+    table.row(vec![
+        "flat".to_string(),
+        format!("{:.2}ms", flat.median_secs() * 1e3),
+        fnum(a.context.iter().sum::<f32>() as f64, 4),
+    ]);
+    table.row(vec![
+        "paged".to_string(),
+        format!("{:.2}ms", paged.median_secs() * 1e3),
+        fnum(sum as f64, 4),
+    ]);
+    table.emit("kvpool_decode");
+    let ts = pool.tier_stats;
+    println!(
+        "tier traffic: {} hot passes, {} cold-page gathers ({} faults, {:.1} MB faulted)",
+        ts.hot_hits,
+        ts.gather_hits + ts.gather_faults,
+        ts.gather_faults,
+        ts.bytes_faulted as f64 / 1e6
+    );
+}
+
+/// The acceptance scenario: gang of G sequences = shared 1024-token
+/// system prompt + 128 private tokens each, against a flat per-lane
+/// cache sized to max_len. Must show ≥2× resident-byte reduction at
+/// gang width ≥ 4 (it shows far more).
+fn shared_prefix_residency(quick: bool) {
+    let d = 128;
+    let d_hot = 32;
+    let (prefix, tail, max_len) = (1024usize, 128usize, 2048usize);
+    let mut rng = Xoshiro256::new(23);
+    let kp: Vec<f32> = rng.normal_vec(prefix * d);
+    let vp: Vec<f32> = rng.normal_vec(prefix * d);
+
+    let mut table = Table::new(
+        "kvpool: resident KV bytes, shared system prompt (1024 tok) + 128-tok tails",
+        &["gang", "paged MB", "flat(live) MB", "flat(max_len) MB", "savings vs flat"],
+    );
+    let gangs: &[usize] = if quick { &[4, 8] } else { &[4, 8, 16, 32] };
+    for &gang in gangs {
+        let mut pool = TieredKvPool::new(TieredPoolCfg {
+            num_blocks: (prefix + tail).div_ceil(16) * (gang + 1),
+            block_size: 16,
+            head_dim: d,
+            d_hot,
+            cold_resident_blocks: 0,
+        });
+        let base = pool.new_seq();
+        pool.load_prefix(base, &kp, &vp, prefix).unwrap();
+        for _ in 0..gang {
+            let s = pool.fork(base);
+            for _ in 0..tail {
+                let k = rng.normal_vec(d);
+                pool.append(s, &k, &k).unwrap();
+            }
+        }
+        pool.free_seq(base);
+        pool.check_invariants();
+
+        let paged = pool.resident_kv_bytes();
+        let live = prefix + tail;
+        let flat_live = (gang * live * 2 * d * 4) as u64;
+        let flat_max = pool.flat_equivalent_bytes(max_len);
+        let savings = flat_max as f64 / paged as f64;
+        if gang >= 4 {
+            assert!(
+                savings >= 2.0,
+                "acceptance: expected ≥2x resident-byte reduction at gang {gang}, got {savings:.2}x"
+            );
+        }
+        table.row(vec![
+            gang.to_string(),
+            fnum(paged as f64 / 1e6, 2),
+            fnum(flat_live as f64 / 1e6, 2),
+            fnum(flat_max as f64 / 1e6, 2),
+            format!("{savings:.1}x"),
+        ]);
+    }
+    table.emit("kvpool_sharing");
+    println!(
+        "(paged bytes = one copy of the shared prefix + per-seq tails + the\n\
+         d_hot/2D hot tier; the flat baseline pays gang × max_len regardless)"
+    );
+}

@@ -1,13 +1,19 @@
-//! KV-cache container with the two append disciplines the paper compares.
+//! KV-cache container with the three append disciplines the stack
+//! compares.
 //!
 //! Figure 6 (right) shows >80% of HuggingFace decode time going to
 //! `torch.cat` KV-cache appends — each step reallocates a `[.., S+1, D]`
 //! tensor and copies the whole history. [`AppendPolicy::Realloc`] models
 //! that; [`AppendPolicy::InPlace`] is the preallocated write a serving
-//! system (vLLM-style, or our coordinator) does. Both are benchmarked by
-//! `repro-experiments fig6-append`.
+//! system does; [`AppendPolicy::Paged`] keeps the in-place write cost but
+//! backs the cache with kvpool blocks allocated on demand, so resident
+//! bytes track the *live* sequence length instead of `max_len` (the
+//! discipline the serving engine's admission control assumes). The first
+//! two are benchmarked by `repro-experiments fig6-append`, the paged one
+//! by `cargo bench --bench kvpool_bench`.
 
 use super::AttnShape;
+use crate::kvpool::{BlockAllocator, BlockId};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AppendPolicy {
@@ -15,9 +21,24 @@ pub enum AppendPolicy {
     InPlace,
     /// HuggingFace-style: reallocate `[lanes, len+1, D]` and copy history.
     Realloc,
+    /// kvpool-backed: blocks of `block_size` token slots allocated on
+    /// demand from a free list; append writes D floats per lane, resident
+    /// bytes grow by whole blocks. Rows are addressed through the block
+    /// table ([`KvCache::row`]); there is no contiguous lane view.
+    Paged { block_size: usize },
 }
 
-/// One layer's K (or V) cache: row-major `[lanes, capacity, head_dim]`.
+/// Paged backend state: the gang-wide allocator and block table (all
+/// lanes advance together in the substrate cache, so one table serves
+/// every lane; per-sequence raggedness and sharing live in
+/// [`crate::kvpool::TieredKvPool`]).
+struct PagedGangStore {
+    allocator: BlockAllocator,
+    table: Vec<BlockId>,
+}
+
+/// One layer's K (or V) cache: row-major `[lanes, capacity, head_dim]`
+/// for the flat policies, block-table-indexed for `Paged`.
 pub struct KvCache {
     pub shape: AttnShape,
     policy: AppendPolicy,
@@ -26,24 +47,35 @@ pub struct KvCache {
     len: usize,
     capacity: usize,
     data: Vec<f32>,
+    paged: Option<PagedGangStore>,
     /// Cumulative bytes copied by appends (the Fig-6-right metric).
     pub bytes_copied: u64,
 }
 
 impl KvCache {
     pub fn new(shape: AttnShape, policy: AppendPolicy) -> Self {
-        let capacity = match policy {
-            AppendPolicy::InPlace => shape.max_len,
-            AppendPolicy::Realloc => 0, // grows per append
+        let (capacity, paged) = match policy {
+            AppendPolicy::InPlace => (shape.max_len, None),
+            AppendPolicy::Realloc => (0, None), // grows per append
+            AppendPolicy::Paged { block_size } => {
+                assert!(block_size > 0, "block_size must be positive");
+                let blocks = shape.max_len.div_ceil(block_size);
+                (
+                    shape.max_len,
+                    Some(PagedGangStore {
+                        allocator: BlockAllocator::new(blocks, block_size),
+                        table: Vec::new(),
+                    }),
+                )
+            }
         };
-        Self {
-            shape,
-            policy,
-            len: 0,
-            capacity,
-            data: vec![0.0; shape.lanes * capacity * shape.head_dim],
-            bytes_copied: 0,
-        }
+        let data = match policy {
+            // Only InPlace pays its full footprint up front; Realloc and
+            // Paged grow with the live length.
+            AppendPolicy::InPlace => vec![0.0; shape.lanes * capacity * shape.head_dim],
+            _ => Vec::new(),
+        };
+        Self { shape, policy, len: 0, capacity, data, paged, bytes_copied: 0 }
     }
 
     pub fn len(&self) -> usize {
@@ -58,9 +90,9 @@ impl KvCache {
         self.policy
     }
 
-    /// Row-major `[lanes, len, head_dim]` view of the live region. With
-    /// `InPlace` the stride between lanes is `max_len × D` (use
-    /// [`Self::lane`]); with `Realloc` it is `len × D`.
+    /// Raw storage. Flat policies: row-major `[lanes, capacity, head_dim]`
+    /// (see [`Self::lane`]). Paged: block arena `[blocks, lanes,
+    /// block_size, head_dim]` — address rows via [`Self::row`].
     pub fn data(&self) -> &[f32] {
         &self.data
     }
@@ -70,57 +102,155 @@ impl KvCache {
     }
 
     /// The rows of one lane: `[len, head_dim]` (prefix of capacity rows).
+    /// Flat policies only — a paged cache has no contiguous lane view.
     pub fn lane(&self, lane: usize) -> &[f32] {
+        assert!(
+            !matches!(self.policy, AppendPolicy::Paged { .. }),
+            "paged cache has no contiguous lane view; use row()/gather_lane_into()"
+        );
         let s = self.lane_stride();
         &self.data[lane * s..lane * s + self.len * self.shape.head_dim]
+    }
+
+    /// One `[head_dim]` row by (lane, position), valid for every policy.
+    pub fn row(&self, lane: usize, j: usize) -> &[f32] {
+        assert!(j < self.len, "row {j} beyond live length {}", self.len);
+        let d = self.shape.head_dim;
+        match self.policy {
+            AppendPolicy::Paged { block_size } => {
+                let st = self.paged.as_ref().expect("paged store");
+                let b = st.table[j / block_size] as usize;
+                let off = (b * self.shape.lanes + lane) * block_size * d + (j % block_size) * d;
+                &self.data[off..off + d]
+            }
+            _ => {
+                let s = self.lane_stride();
+                &self.data[lane * s + j * d..lane * s + (j + 1) * d]
+            }
+        }
+    }
+
+    /// Copy one lane's live rows (`[len, head_dim]`) into `out`, in
+    /// position order — the policy-agnostic way to read a lane.
+    pub fn gather_lane_into(&self, lane: usize, out: &mut [f32]) {
+        let d = self.shape.head_dim;
+        assert!(out.len() >= self.len * d, "output buffer too small");
+        for j in 0..self.len {
+            out[j * d..(j + 1) * d].copy_from_slice(self.row(lane, j));
+        }
+    }
+
+    /// The block table backing a paged cache (None for flat policies).
+    pub fn block_table(&self) -> Option<&[BlockId]> {
+        self.paged.as_ref().map(|s| s.table.as_slice())
+    }
+
+    /// Bytes of backing storage currently allocated — the quantity the
+    /// paged discipline optimizes (InPlace pays `lanes·max_len·D` up
+    /// front; Paged pays per allocated block).
+    pub fn resident_bytes(&self) -> u64 {
+        (self.data.len() * 4) as u64
     }
 
     /// Append one `[lanes, head_dim]` batch of rows.
     pub fn append(&mut self, rows: &[f32]) {
         let d = self.shape.head_dim;
-        assert_eq!(rows.len(), self.shape.lanes * d, "append shape mismatch");
+        let lanes = self.shape.lanes;
+        assert_eq!(rows.len(), lanes * d, "append shape mismatch");
         match self.policy {
             AppendPolicy::InPlace => {
                 assert!(self.len < self.capacity, "cache full");
                 let stride = self.lane_stride();
-                for lane in 0..self.shape.lanes {
+                for lane in 0..lanes {
                     let dst = lane * stride + self.len * d;
                     self.data[dst..dst + d].copy_from_slice(&rows[lane * d..(lane + 1) * d]);
                 }
-                self.bytes_copied += (self.shape.lanes * d * 4) as u64;
+                self.bytes_copied += (lanes * d * 4) as u64;
             }
             AppendPolicy::Realloc => {
                 // torch.cat semantics: brand-new buffer, full history copy.
                 let new_cap = self.len + 1;
-                let mut new_data = vec![0.0f32; self.shape.lanes * new_cap * d];
+                let mut new_data = vec![0.0f32; lanes * new_cap * d];
                 let old_stride = self.capacity * d;
                 let new_stride = new_cap * d;
-                for lane in 0..self.shape.lanes {
+                for lane in 0..lanes {
                     let src = &self.data[lane * old_stride..lane * old_stride + self.len * d];
                     new_data[lane * new_stride..lane * new_stride + self.len * d]
                         .copy_from_slice(src);
                     new_data[lane * new_stride + self.len * d..lane * new_stride + new_cap * d]
                         .copy_from_slice(&rows[lane * d..(lane + 1) * d]);
                 }
-                self.bytes_copied += (self.shape.lanes * new_cap * d * 4) as u64;
+                self.bytes_copied += (lanes * new_cap * d * 4) as u64;
                 self.data = new_data;
                 self.capacity = new_cap;
+            }
+            AppendPolicy::Paged { block_size } => {
+                assert!(self.len < self.capacity, "cache full");
+                let off = self.len % block_size;
+                let st = self.paged.as_mut().expect("paged store");
+                if off == 0 {
+                    // Block boundary: grant a fresh block and grow the
+                    // arena up to its footprint.
+                    let b = st.allocator.alloc().expect("allocator sized to capacity");
+                    st.table.push(b);
+                    let need = (b as usize + 1) * lanes * block_size * d;
+                    if self.data.len() < need {
+                        self.data.resize(need, 0.0);
+                    }
+                }
+                let b = st.table[self.len / block_size] as usize;
+                for lane in 0..lanes {
+                    let dst = (b * lanes + lane) * block_size * d + off * d;
+                    self.data[dst..dst + d].copy_from_slice(&rows[lane * d..(lane + 1) * d]);
+                }
+                self.bytes_copied += (lanes * d * 4) as u64;
             }
         }
         self.len += 1;
     }
 
-    /// Bulk-load a prefill prefix (counts as one copy, like a real prefill).
+    /// Bulk-load a prefill prefix (counts as one copy, like a real
+    /// prefill). `rows` is `[lanes, len, head_dim]` row-major. Overflowing
+    /// a bounded (InPlace/Paged) cache is a hard "cache full" error, the
+    /// same condition `append` enforces.
     pub fn load_prefix(&mut self, rows: &[f32], len: usize) {
         let d = self.shape.head_dim;
-        assert_eq!(rows.len(), self.shape.lanes * len * d);
-        if self.policy == AppendPolicy::Realloc {
-            self.capacity = len;
-            self.data = vec![0.0; self.shape.lanes * len * d];
+        let lanes = self.shape.lanes;
+        assert_eq!(rows.len(), lanes * len * d);
+        match self.policy {
+            AppendPolicy::Realloc => {
+                self.capacity = len;
+                self.data = vec![0.0; lanes * len * d];
+            }
+            AppendPolicy::InPlace => {
+                assert!(
+                    len <= self.capacity,
+                    "cache full: prefix of {len} rows exceeds capacity {}",
+                    self.capacity
+                );
+            }
+            AppendPolicy::Paged { .. } => {
+                assert!(
+                    len <= self.capacity,
+                    "cache full: prefix of {len} rows exceeds capacity {}",
+                    self.capacity
+                );
+                assert_eq!(self.len, 0, "paged load_prefix requires an empty cache");
+                // Route through append so block grants and byte accounting
+                // stay in one place (totals match the flat one-shot copy).
+                let mut batch = vec![0.0f32; lanes * d];
+                for j in 0..len {
+                    for lane in 0..lanes {
+                        batch[lane * d..(lane + 1) * d]
+                            .copy_from_slice(&rows[(lane * len + j) * d..(lane * len + j + 1) * d]);
+                    }
+                    self.append(&batch);
+                }
+                return;
+            }
         }
-        assert!(len <= self.capacity.max(len));
         let stride = self.lane_stride();
-        for lane in 0..self.shape.lanes {
+        for lane in 0..lanes {
             let src = &rows[lane * len * d..(lane + 1) * len * d];
             self.data[lane * stride..lane * stride + len * d].copy_from_slice(src);
         }
@@ -154,6 +284,34 @@ mod tests {
     }
 
     #[test]
+    fn paged_agrees_with_inplace_row_by_row() {
+        let mut rng = Xoshiro256::new(4);
+        // Generous max_len: the paged cache should only pay for live blocks.
+        let shape = AttnShape { lanes: 3, head_dim: 4, max_len: 64 };
+        let mut a = KvCache::new(shape, AppendPolicy::InPlace);
+        let mut b = KvCache::new(shape, AppendPolicy::Paged { block_size: 3 });
+        for _ in 0..7 {
+            let rows = rng.normal_vec(3 * 4);
+            a.append(&rows);
+            b.append(&rows);
+        }
+        for lane in 0..3 {
+            for j in 0..7 {
+                assert_eq!(a.row(lane, j), b.row(lane, j), "lane {lane} row {j}");
+            }
+            let mut gathered = vec![0.0; 7 * 4];
+            b.gather_lane_into(lane, &mut gathered);
+            assert_eq!(a.lane(lane), &gathered[..]);
+        }
+        // Same append cost as InPlace (no history copies)…
+        assert_eq!(a.bytes_copied, b.bytes_copied);
+        // …but resident bytes cover 3 blocks of 3 slots, not max_len.
+        assert_eq!(b.resident_bytes(), (3 * 3 * 3 * 4 * 4) as u64);
+        assert!(b.resident_bytes() < a.resident_bytes());
+        assert_eq!(b.block_table().unwrap().len(), 3);
+    }
+
+    #[test]
     fn realloc_copies_quadratically_more() {
         let mut a = KvCache::new(shape(), AppendPolicy::InPlace);
         let mut b = KvCache::new(shape(), AppendPolicy::Realloc);
@@ -178,6 +336,16 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "cache full")]
+    fn paged_overflow_panics() {
+        let mut c = KvCache::new(shape(), AppendPolicy::Paged { block_size: 4 });
+        let rows = vec![0.0f32; 3 * 4];
+        for _ in 0..9 {
+            c.append(&rows);
+        }
+    }
+
+    #[test]
     fn load_prefix_then_append() {
         let mut rng = Xoshiro256::new(2);
         let prefix = rng.normal_vec(3 * 5 * 4);
@@ -188,5 +356,33 @@ mod tests {
         c.append(&rows);
         assert_eq!(c.len(), 6);
         assert_eq!(&c.lane(1)[5 * 4..6 * 4], &rows[4..8]);
+    }
+
+    #[test]
+    fn paged_load_prefix_matches_flat() {
+        let mut rng = Xoshiro256::new(8);
+        let prefix = rng.normal_vec(3 * 5 * 4);
+        let mut a = KvCache::new(shape(), AppendPolicy::InPlace);
+        let mut b = KvCache::new(shape(), AppendPolicy::Paged { block_size: 2 });
+        a.load_prefix(&prefix, 5);
+        b.load_prefix(&prefix, 5);
+        assert_eq!(a.bytes_copied, b.bytes_copied, "prefill copy accounting must agree");
+        for lane in 0..3 {
+            for j in 0..5 {
+                assert_eq!(a.row(lane, j), b.row(lane, j));
+            }
+        }
+    }
+
+    /// Regression: the seed's capacity check was `len <= capacity.max(len)`
+    /// — always true — so an over-long prefill silently wrote out of the
+    /// live region. Overflow must be a hard "cache full" failure.
+    #[test]
+    #[should_panic(expected = "cache full")]
+    fn load_prefix_overflow_panics() {
+        let mut rng = Xoshiro256::new(3);
+        let prefix = rng.normal_vec(3 * 9 * 4); // 9 rows > max_len 8
+        let mut c = KvCache::new(shape(), AppendPolicy::InPlace);
+        c.load_prefix(&prefix, 9);
     }
 }

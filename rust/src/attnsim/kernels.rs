@@ -16,6 +16,7 @@
 //! (`repro-experiments table1`).
 
 use super::AttnShape;
+use crate::kvpool::{BlockId, PagedArena};
 use crate::linalg::softmax::{softmax_inplace, NEG_INF};
 
 /// Which feature (head-dim) subset a score kernel reads.
@@ -268,7 +269,7 @@ pub fn scores_dense_copy(
     let (lanes, d) = (shape.lanes, shape.head_dim);
     let du = feat.count(d);
     let mut temp = vec![0.0f32; live * du];
-    let mut mv = DataMovement {
+    let mv = DataMovement {
         cache_bytes_read: (lanes * live * du * 4) as u64,
         temp_bytes: (lanes * live * du * 4) as u64,
         out_bytes: (lanes * live * 4) as u64,
@@ -306,7 +307,6 @@ pub fn scores_dense_copy(
             orow[j] = dot_prefix(&qbuf, &temp[j * du..], du) * scale;
         }
     }
-    mv.out_bytes += 0;
     mv
 }
 
@@ -385,7 +385,7 @@ pub fn attend_rows_dense_copy(
 ) -> DataMovement {
     let (lanes, d) = (shape.lanes, shape.head_dim);
     let total_sel: usize = selected.iter().map(|s| s.len()).sum();
-    let mut mv = DataMovement {
+    let mv = DataMovement {
         cache_bytes_read: (2 * total_sel * d * 4) as u64,
         temp_bytes: (2 * total_sel * d * 4) as u64,
         out_bytes: (lanes * d * 4) as u64,
@@ -416,7 +416,6 @@ pub fn attend_rows_dense_copy(
             }
         }
     }
-    mv.temp_bytes += 0;
     mv
 }
 
@@ -443,6 +442,85 @@ pub fn full_attend(
     let mv = attend_rows_indexed(shape, q, kc, vc, lane_stride, &all, scale, threads, out);
     scores_mv.add(mv);
     scores_mv
+}
+
+/// Approximate/exact scores for **one sequence** whose KV lives in a
+/// paged arena behind a block table (the kvpool hot or cold tier),
+/// reading the pool in place — the paged sibling of [`scores_indexed`].
+///
+/// Bit-identical to the flat kernel: the per-row dot product runs the
+/// same operations in the same order over the same values, only the row
+/// *address* goes through the block table. `feat` is interpreted against
+/// `arena.width` (e.g. `Prefix(d_sub)` over a `d_hot`-wide hot tier).
+pub fn scores_paged_lane(
+    q: &[f32],
+    arena: &PagedArena<'_>,
+    table: &[BlockId],
+    live: usize,
+    feat: &FeatureAccess,
+    scale: f32,
+    out: &mut [f32],
+) -> DataMovement {
+    let du = feat.count(arena.width);
+    assert!(du <= arena.width, "feature subset wider than arena rows");
+    assert!(out.len() >= live);
+    match feat {
+        FeatureAccess::Full => {
+            for j in 0..live {
+                out[j] = dot_prefix(q, arena.row(table, j), arena.width) * scale;
+            }
+        }
+        FeatureAccess::Prefix(d) => {
+            for j in 0..live {
+                out[j] = dot_prefix(q, arena.row(table, j), *d) * scale;
+            }
+        }
+        FeatureAccess::Gather(idx) => {
+            for j in 0..live {
+                out[j] = dot_gather(q, arena.row(table, j), idx) * scale;
+            }
+        }
+    }
+    DataMovement {
+        cache_bytes_read: (live * du * 4) as u64,
+        temp_bytes: 0,
+        out_bytes: (live * 4) as u64,
+    }
+}
+
+/// Exact attention over an index-selected token subset of **one paged
+/// sequence**, gathering K/V rows through the block table — the paged
+/// sibling of [`attend_rows_indexed`] (whose per-lane math this mirrors
+/// operation for operation, so outputs are bit-identical).
+pub fn attend_rows_paged_lane(
+    q: &[f32],
+    k_arena: &PagedArena<'_>,
+    v_arena: &PagedArena<'_>,
+    table: &[BlockId],
+    selected: &[u32],
+    scale: f32,
+    out: &mut [f32],
+) -> DataMovement {
+    let d = k_arena.width;
+    assert_eq!(v_arena.width, d, "K and V arenas must agree on width");
+    assert_eq!(out.len(), d);
+    let mut scores: Vec<f32> = selected
+        .iter()
+        .map(|&j| dot_prefix(q, k_arena.row(table, j as usize), d) * scale)
+        .collect();
+    softmax_inplace(&mut scores);
+    out.fill(0.0);
+    for (p, &j) in scores.iter().zip(selected.iter()) {
+        let vrow = v_arena.row(table, j as usize);
+        for (o, &v) in out.iter_mut().zip(vrow) {
+            *o += p * v;
+        }
+    }
+    DataMovement {
+        cache_bytes_read: (2 * selected.len() * d * 4) as u64,
+        temp_bytes: 0,
+        out_bytes: (d * 4) as u64,
+    }
 }
 
 /// Mask helper: NEG_INF beyond `live` (used by variant code paths that
@@ -534,6 +612,50 @@ mod tests {
         let all: Vec<Vec<u32>> = (0..2).map(|_| (0..32).collect()).collect();
         attend_rows_indexed(shape, &q, &kc, &vc, stride, &all, 0.3, Some(1), &mut b);
         assert_eq!(a, b);
+    }
+
+    /// Copy one flat lane into a paged arena under a *permuted* block
+    /// table (so the indirection is actually exercised) and check the
+    /// paged kernels agree with the flat ones bit for bit.
+    #[test]
+    fn paged_kernels_match_flat_with_permuted_blocks() {
+        let (shape, q, kc, vc) = setup(1, 64, 16, 64);
+        let (d, live, bs) = (16usize, 50usize, 8usize);
+        let stride = 64 * d;
+        let nblocks = 64 / bs;
+        let table: Vec<BlockId> = vec![3, 7, 0, 5, 1, 2, 6, 4];
+        assert_eq!(table.len(), nblocks);
+        let mut k_arena_data = vec![0.0f32; nblocks * bs * d];
+        let mut v_arena_data = vec![0.0f32; nblocks * bs * d];
+        for j in 0..64 {
+            let b = table[j / bs] as usize;
+            let dst = (b * bs + j % bs) * d;
+            k_arena_data[dst..dst + d].copy_from_slice(&kc[j * d..(j + 1) * d]);
+            v_arena_data[dst..dst + d].copy_from_slice(&vc[j * d..(j + 1) * d]);
+        }
+        let k_arena = PagedArena { data: &k_arena_data, block_size: bs, width: d };
+        let v_arena = PagedArena { data: &v_arena_data, block_size: bs, width: d };
+
+        for feat in [FeatureAccess::Full, FeatureAccess::Prefix(5), FeatureAccess::Gather(vec![1, 4, 9])] {
+            let mut flat = vec![0.0; live];
+            let mut paged = vec![0.0; live];
+            let mv_flat = scores_indexed(
+                shape, &q, &kc, stride, live, &feat, 0.125, Par::Serial, Some(1), &mut flat,
+            );
+            let mv_paged =
+                scores_paged_lane(&q[..d], &k_arena, &table, live, &feat, 0.125, &mut paged);
+            assert_eq!(flat, paged, "{feat:?} scores must be bit-identical");
+            assert_eq!(mv_flat.cache_bytes_read, mv_paged.cache_bytes_read);
+        }
+
+        let sel: Vec<u32> = (0..live as u32).step_by(3).collect();
+        let mut flat_ctx = vec![0.0; d];
+        let mut paged_ctx = vec![0.0; d];
+        attend_rows_indexed(
+            shape, &q, &kc, &vc, stride, &[sel.clone()], 0.25, Some(1), &mut flat_ctx,
+        );
+        attend_rows_paged_lane(&q[..d], &k_arena, &v_arena, &table, &sel, 0.25, &mut paged_ctx);
+        assert_eq!(flat_ctx, paged_ctx, "paged attend must be bit-identical");
     }
 
     #[test]

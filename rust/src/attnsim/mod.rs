@@ -11,12 +11,17 @@
 //!
 //! * [`kernels`] — indexed score / gather-attend kernels: feature-prefix
 //!   slicing (Loki), arbitrary column gather (SparQ), dense-copy baseline
-//!   (PyTorch-style), each serial / 1-D / 2-D threaded.
+//!   (PyTorch-style), each serial / 1-D / 2-D threaded, plus block-table
+//!   paged siblings (`scores_paged_lane` / `attend_rows_paged_lane`) that
+//!   read a [`crate::kvpool`] arena bit-identically to the flat path.
 //! * [`cache`]   — KV-cache with in-place ring append vs HuggingFace-style
-//!   reallocating append (Fig. 6 right).
+//!   reallocating append (Fig. 6 right) vs kvpool-backed paged append.
 //! * [`variants`] — full / exact-topk / Loki / H2O / StreamingLLM /
 //!   SparQ / PCAAttn decode steps over the cache, with selected-index
-//!   reporting for the Jaccard agreement study (Fig. 6 left).
+//!   reporting for the Jaccard agreement study (Fig. 6 left); each also
+//!   runs over paged KV state (`variants::decode_attend_paged`), where
+//!   Loki ranks in the always-hot low-rank tier and gathers full-D pages
+//!   for only the selected slots.
 
 pub mod cache;
 pub mod kernels;

@@ -20,9 +20,11 @@
 //! exact attention in rotated space exact).
 
 use super::kernels::{
-    attend_rows_indexed, scores_indexed, DataMovement, FeatureAccess, Par,
+    attend_rows_indexed, attend_rows_paged_lane, scores_indexed, scores_paged_lane, DataMovement,
+    FeatureAccess, Par,
 };
 use super::AttnShape;
+use crate::kvpool::{PoolSeqId, TieredKvPool};
 use crate::linalg::softmax::softmax_masked_inplace;
 use crate::linalg::topk::{top_k_indices, TopKAlgo};
 
@@ -232,6 +234,205 @@ pub fn decode_attend(
     DecodeOutput { context, selected, movement }
 }
 
+/// Run one decode step of `variant` over **paged** KV state: one pool
+/// sequence per lane, scores ranked in the always-hot low-rank tier
+/// (Loki/PCAAttn) or the cold full-D tier (exact/SparQ), then full-D rows
+/// gathered through the block table for only the selected slots.
+///
+/// Guarantees bit-identical context vectors to [`decode_attend`] over a
+/// flat `InPlace` cache holding the same rows (the paged kernels run the
+/// same float operations in the same order; see
+/// `tests/kvpool_properties.rs`). Unlike the flat path, lanes may be
+/// ragged — each sequence attends over its own live length.
+///
+/// Residency side effects: hot-tier passes and cold-page gathers are
+/// tallied in `pool.tier_stats` (fault/demotion modeling lives in the
+/// pool, data movement in the returned [`DataMovement`]).
+pub fn decode_attend_paged(
+    variant: &AttnVariant,
+    pool: &mut TieredKvPool,
+    seqs: &[PoolSeqId],
+    q: &[f32],
+    params: &VariantParams,
+    mut h2o: Option<&mut H2oState>,
+) -> DecodeOutput {
+    let lanes = seqs.len();
+    let d = pool.head_dim();
+    assert_eq!(q.len(), lanes * d, "q must be [lanes, head_dim]");
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut movement = DataMovement::default();
+    let mut context = vec![0.0f32; lanes * d];
+    let mut selected: Vec<Vec<u32>> = Vec::with_capacity(lanes);
+
+    // SparQ's shared gather set — lane 0's top-|q| components, the same
+    // convention as the flat path — computed once, not per lane.
+    // Scattered dims cannot live in the PCA-prefix hot tier, so SparQ
+    // ranks against cold full-D pages.
+    let sparq_feat = matches!(variant, AttnVariant::SparQ).then(|| {
+        let du = params.d_sub.min(d);
+        let mags: Vec<f32> = (0..d).map(|i| q[i].abs()).collect();
+        let mut ix = top_k_indices(TopKAlgo::Sort, &mags, du);
+        ix.sort_unstable();
+        FeatureAccess::Gather(ix.iter().map(|&i| i as u16).collect())
+    });
+
+    for (lane, &seq) in seqs.iter().enumerate() {
+        let live = pool.len(seq);
+        let k_sel = params.k_sel.min(live);
+        let qlane = &q[lane * d..(lane + 1) * d];
+
+        let sel: Vec<u32> = match variant {
+            AttnVariant::Full | AttnVariant::PcaAttn => (0..live as u32).collect(),
+            AttnVariant::ExactTopK | AttnVariant::Loki | AttnVariant::SparQ => {
+                let mut scores = vec![0.0f32; live];
+                let hot_rank = matches!(variant, AttnVariant::Loki);
+                {
+                    let feat_local;
+                    let (arena, feat) = match variant {
+                        AttnVariant::ExactTopK => {
+                            feat_local = FeatureAccess::Full;
+                            (pool.cold_k_view(), &feat_local)
+                        }
+                        AttnVariant::Loki => {
+                            let d_sub = params.d_sub.min(d);
+                            assert!(
+                                d_sub <= pool.d_hot(),
+                                "Loki d_sub {} exceeds hot tier width {} — widen d_hot",
+                                d_sub,
+                                pool.d_hot()
+                            );
+                            feat_local = FeatureAccess::Prefix(d_sub);
+                            (pool.hot_view(), &feat_local)
+                        }
+                        AttnVariant::SparQ => {
+                            (pool.cold_k_view(), sparq_feat.as_ref().expect("precomputed"))
+                        }
+                        _ => unreachable!(),
+                    };
+                    let table = pool.blocks(seq);
+                    movement.add(scores_paged_lane(
+                        qlane, &arena, table, live, feat, scale, &mut scores,
+                    ));
+                }
+                if hot_rank {
+                    pool.account_hot_pass();
+                } else {
+                    // Cold-tier ranking genuinely touches every page.
+                    let all: Vec<u32> = (0..live as u32).collect();
+                    pool.account_gather(seq, &all);
+                }
+                top_k_indices(params.topk_algo, &scores, k_sel)
+            }
+            AttnVariant::H2O => {
+                let state = h2o.as_deref_mut().expect("H2O needs accumulator state");
+                let acc = &state[lane];
+                let recent_w = k_sel - k_sel / 2;
+                let hh_n = k_sel / 2;
+                let recent_start = live.saturating_sub(recent_w);
+                let mut sel: Vec<u32> = (recent_start as u32..live as u32).collect();
+                if hh_n > 0 && recent_start > 0 {
+                    let hh = top_k_indices(params.topk_algo, &acc[..recent_start], hh_n);
+                    sel.extend(hh);
+                }
+                sel.sort_unstable();
+                sel
+            }
+            AttnVariant::StreamingLlm => {
+                let window = k_sel.saturating_sub(params.sinks).max(1);
+                let start = live.saturating_sub(window);
+                let mut sel: Vec<u32> = (0..params.sinks.min(start) as u32).collect();
+                sel.extend(start as u32..live as u32);
+                sel
+            }
+        };
+
+        // Final attention: gather full-D pages for the selected slots only.
+        pool.account_gather(seq, &sel);
+        match variant {
+            AttnVariant::PcaAttn => {
+                let d_sub = params.d_sub.min(d);
+                assert!(d_sub <= pool.d_hot(), "PCAAttn d_sub exceeds hot tier width");
+                let mut scores = vec![0.0f32; live];
+                {
+                    let arena = pool.hot_view();
+                    let table = pool.blocks(seq);
+                    movement.add(scores_paged_lane(
+                        qlane,
+                        &arena,
+                        table,
+                        live,
+                        &FeatureAccess::Prefix(d_sub),
+                        scale,
+                        &mut scores,
+                    ));
+                }
+                pool.account_hot_pass();
+                let mask = vec![true; live];
+                softmax_masked_inplace(&mut scores, &mask);
+                let varena = pool.cold_v_view();
+                let table = pool.blocks(seq);
+                let orow = &mut context[lane * d..(lane + 1) * d];
+                for (j, &p) in scores.iter().enumerate() {
+                    if p == 0.0 {
+                        continue;
+                    }
+                    for (o, &v) in orow.iter_mut().zip(varena.row(table, j)) {
+                        *o += p * v;
+                    }
+                }
+                movement.cache_bytes_read += (live * d * 4) as u64; // V reads
+            }
+            _ => {
+                let karena = pool.cold_k_view();
+                let varena = pool.cold_v_view();
+                let table = pool.blocks(seq);
+                movement.add(attend_rows_paged_lane(
+                    qlane,
+                    &karena,
+                    &varena,
+                    table,
+                    &sel,
+                    scale,
+                    &mut context[lane * d..(lane + 1) * d],
+                ));
+            }
+        }
+
+        // H2O accumulator update, same math as the flat path but through
+        // the cold key arena.
+        if let AttnVariant::H2O = variant {
+            let mut probs: Vec<f32> = {
+                let karena = pool.cold_k_view();
+                let table = pool.blocks(seq);
+                sel.iter()
+                    .map(|&j| {
+                        let krow = karena.row(table, j as usize);
+                        let mut s = 0.0;
+                        for i in 0..d {
+                            s += qlane[i] * krow[i];
+                        }
+                        s * scale
+                    })
+                    .collect()
+            };
+            let mask = vec![true; probs.len()];
+            softmax_masked_inplace(&mut probs, &mask);
+            let state = h2o.as_deref_mut().expect("checked above");
+            let acc = &mut state[lane];
+            if acc.len() < live {
+                acc.resize(live, 0.0);
+            }
+            for (&j, &p) in sel.iter().zip(&probs) {
+                acc[j as usize] += p;
+            }
+        }
+
+        selected.push(sel);
+    }
+
+    DecodeOutput { context, selected, movement }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -312,6 +513,63 @@ mod tests {
         }
         assert!(sel.contains(&63));
         assert!(!sel.contains(&30), "middle token should be evicted");
+    }
+
+    /// Same rows, flat `[lanes, max_len, D]` layout vs paged pool with a
+    /// shared-prefix-capable block table: every variant must produce the
+    /// exact same bits (`==` on f32, no tolerance).
+    #[test]
+    fn paged_decode_matches_flat_bitwise() {
+        use crate::kvpool::{TieredKvPool, TieredPoolCfg};
+        let (shape, q, kc, vc) = setup(3, 64, 16);
+        let (d, live, stride) = (16usize, 64usize, 64 * 16usize);
+        let mut pool = TieredKvPool::new(TieredPoolCfg {
+            num_blocks: 64,
+            block_size: 8,
+            head_dim: d,
+            d_hot: 8,
+            cold_resident_blocks: 0,
+        });
+        let seqs: Vec<_> = (0..3)
+            .map(|lane| {
+                let s = pool.new_seq();
+                pool.load_prefix(
+                    s,
+                    &kc[lane * stride..lane * stride + live * d],
+                    &vc[lane * stride..lane * stride + live * d],
+                    live,
+                )
+                .unwrap();
+                s
+            })
+            .collect();
+        for (variant, p) in [
+            (AttnVariant::Full, VariantParams::default()),
+            (AttnVariant::ExactTopK, VariantParams { k_sel: 16, ..Default::default() }),
+            (AttnVariant::Loki, VariantParams { k_sel: 16, d_sub: 4, ..Default::default() }),
+            (AttnVariant::SparQ, VariantParams { k_sel: 16, d_sub: 4, ..Default::default() }),
+            (AttnVariant::StreamingLlm, VariantParams { k_sel: 12, ..Default::default() }),
+            (AttnVariant::PcaAttn, VariantParams { d_sub: 4, ..Default::default() }),
+        ] {
+            let a = decode_attend(&variant, shape, &q, &kc, &vc, stride, live, &p, None);
+            let b = decode_attend_paged(&variant, &mut pool, &seqs, &q, &p, None);
+            assert_eq!(a.context, b.context, "{variant:?} context must be bit-identical");
+            assert_eq!(a.selected, b.selected, "{variant:?} selection must agree");
+        }
+        // H2O carries accumulator state: run both paths from equal states
+        // and require the states to remain equal afterwards.
+        let p = VariantParams { k_sel: 8, ..Default::default() };
+        let mut state_flat: H2oState = vec![vec![0.0; live]; 3];
+        let mut state_paged: H2oState = vec![vec![0.0; live]; 3];
+        let a = decode_attend(
+            &AttnVariant::H2O, shape, &q, &kc, &vc, stride, live, &p, Some(&mut state_flat),
+        );
+        let b = decode_attend_paged(
+            &AttnVariant::H2O, &mut pool, &seqs, &q, &p, Some(&mut state_paged),
+        );
+        assert_eq!(a.context, b.context, "H2O context must be bit-identical");
+        assert_eq!(state_flat, state_paged, "H2O accumulators must stay in lockstep");
+        pool.check_invariants();
     }
 
     #[test]

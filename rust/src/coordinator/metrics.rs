@@ -1,6 +1,6 @@
 //! Fleet-level engine metrics: throughput, latency distributions,
-//! scheduler activity. Rendered by `repro serve --report` and the
-//! e2e_serving bench.
+//! scheduler activity, KV-pool occupancy. Rendered by `repro serve
+//! --report` and the e2e_serving bench.
 
 use std::time::Instant;
 
@@ -11,11 +11,29 @@ pub struct EngineMetrics {
     started: Instant,
     pub requests_in: u64,
     pub requests_done: u64,
+    /// Requests that can never fit the configured pool (failed fast with
+    /// `FinishReason::CacheFull` instead of queueing forever).
+    pub requests_rejected: u64,
     pub tokens_generated: u64,
     pub prefills: u64,
     pub decode_steps: u64,
     pub injections: u64,
+    /// Padding-lane re-blanks at the physical cache bound (busy lanes
+    /// never reset — admission keeps them within their reservations).
     pub lane_resets: u64,
+    /// Scheduler iterations where the head-of-line request had to wait
+    /// for pool blocks (eviction backpressure, the old lane-reset path).
+    pub admission_blocked: u64,
+    /// KV-pool sizing: total blocks and the KV bytes one block mirrors.
+    pub pool_blocks_total: u64,
+    pub pool_block_bytes: u64,
+    /// Peak simultaneously-granted blocks over the run.
+    pub pool_blocks_peak: u64,
+    /// Prompt blocks obtained by prefix sharing instead of allocation.
+    pub prefix_shared_blocks: u64,
+    /// What a flat `[gang, max_len]` K+V cache holds for the same gang —
+    /// the baseline the paged pool is measured against.
+    pub kv_flat_bytes: u64,
     /// Seconds.
     pub ttft: Summary,
     pub e2e_latency: Summary,
@@ -29,11 +47,18 @@ impl Default for EngineMetrics {
             started: Instant::now(),
             requests_in: 0,
             requests_done: 0,
+            requests_rejected: 0,
             tokens_generated: 0,
             prefills: 0,
             decode_steps: 0,
             injections: 0,
             lane_resets: 0,
+            admission_blocked: 0,
+            pool_blocks_total: 0,
+            pool_block_bytes: 0,
+            pool_blocks_peak: 0,
+            prefix_shared_blocks: 0,
+            kv_flat_bytes: 0,
             ttft: Summary::new(),
             e2e_latency: Summary::new(),
             queue_wait: Summary::new(),
@@ -57,22 +82,54 @@ impl EngineMetrics {
         }
     }
 
+    /// Record a scheduler-loop snapshot of the pool.
+    pub fn note_pool(&mut self, blocks_in_use: usize, shared_hits: u64) {
+        self.pool_blocks_peak = self.pool_blocks_peak.max(blocks_in_use as u64);
+        self.prefix_shared_blocks = shared_hits;
+    }
+
+    /// Peak KV bytes the paged pool actually had granted.
+    pub fn kv_resident_bytes_peak(&self) -> u64 {
+        self.pool_blocks_peak * self.pool_block_bytes
+    }
+
+    /// How many × smaller the paged peak is than the flat per-lane cache
+    /// (≥ 1.0 means the pool won; 0.0 when nothing ran).
+    pub fn kv_savings_vs_flat(&self) -> f64 {
+        let resident = self.kv_resident_bytes_peak();
+        if resident == 0 {
+            0.0
+        } else {
+            self.kv_flat_bytes as f64 / resident as f64
+        }
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "requests: {} in / {} done | tokens: {} ({:.1} tok/s)\n\
+            "requests: {} in / {} done / {} rejected | tokens: {} ({:.1} tok/s)\n\
              prefills: {} | decode steps: {} | injections: {} | lane resets: {}\n\
+             kv pool:   peak {}/{} blocks ({:.1} MB resident vs {:.1} MB flat, {:.2}x) | \
+             shared {} | blocked {}\n\
              ttft_s:    {}\n\
              e2e_s:     {}\n\
              queue_s:   {}\n\
              step_s:    {}",
             self.requests_in,
             self.requests_done,
+            self.requests_rejected,
             self.tokens_generated,
             self.throughput_tok_s(),
             self.prefills,
             self.decode_steps,
             self.injections,
             self.lane_resets,
+            self.pool_blocks_peak,
+            self.pool_blocks_total,
+            self.kv_resident_bytes_peak() as f64 / 1e6,
+            self.kv_flat_bytes as f64 / 1e6,
+            self.kv_savings_vs_flat(),
+            self.prefix_shared_blocks,
+            self.admission_blocked,
             self.ttft.display(),
             self.e2e_latency.display(),
             self.queue_wait.display(),
@@ -92,5 +149,20 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(20));
         assert!(m.throughput_tok_s() > 0.0);
         assert!(m.report().contains("tokens: 100"));
+    }
+
+    #[test]
+    fn pool_accounting() {
+        let mut m = EngineMetrics::default();
+        m.pool_blocks_total = 64;
+        m.pool_block_bytes = 1024;
+        m.kv_flat_bytes = 64 * 1024;
+        m.note_pool(10, 3);
+        m.note_pool(7, 5);
+        assert_eq!(m.pool_blocks_peak, 10, "peak keeps the maximum");
+        assert_eq!(m.prefix_shared_blocks, 5, "sharing tracks the latest");
+        assert_eq!(m.kv_resident_bytes_peak(), 10 * 1024);
+        assert!((m.kv_savings_vs_flat() - 6.4).abs() < 1e-9);
+        assert!(m.report().contains("peak 10/64 blocks"));
     }
 }

@@ -9,7 +9,10 @@
 //!   bucket-size lanes; finished lanes are refilled by prefilling the next
 //!   queued request as a batch-1 state and *injecting* it between decode
 //!   iterations (iteration-level scheduling à la Orca). Prefill-vs-decode
-//!   priority is a scheduler knob.
+//!   priority is a scheduler knob. KV memory is governed by a
+//!   [`crate::kvpool`] block allocator: requests are admitted only when
+//!   their block reservation can be granted (backpressure, not resets),
+//!   with full prompt blocks prefix-shared across identical prefixes.
 //! * [`metrics`] — fleet counters + latency summaries.
 //!
 //! Loki enters as the engine's `DecodeVariant`: the scheduler chooses the
@@ -21,7 +24,7 @@ pub mod metrics;
 pub mod request;
 pub mod sampler;
 
-pub use engine::{Engine, EngineConfig, SchedulerPolicy};
+pub use engine::{Engine, EngineConfig, PoolConfig, SchedulerPolicy};
 pub use metrics::EngineMetrics;
 pub use request::{GenRequest, GenResult, RequestTiming};
 pub use sampler::{SampleCfg, Sampler};

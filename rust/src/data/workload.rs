@@ -14,6 +14,12 @@ pub struct WorkloadCfg {
     pub burst_p: f64,
     pub prompt_len: (usize, usize),
     pub gen_len: (usize, usize),
+    /// Shared system-prompt bytes prepended *identically* to every
+    /// request (multi-tenant serving: one app prompt, many user turns).
+    /// The byte tokenizer maps equal text to equal tokens, so this is
+    /// exactly what the kvpool's content-addressed prefix sharing
+    /// deduplicates. 0 disables.
+    pub shared_prefix_len: usize,
     pub seed: u64,
 }
 
@@ -25,6 +31,7 @@ impl Default for WorkloadCfg {
             burst_p: 0.0,
             prompt_len: (32, 200),
             gen_len: (16, 64),
+            shared_prefix_len: 0,
             seed: 0,
         }
     }
@@ -45,10 +52,14 @@ pub struct Workload {
 }
 
 impl Workload {
-    /// Build a trace using filler sentences as prompt material.
+    /// Build a trace using filler sentences as prompt material. When
+    /// `shared_prefix_len > 0`, one system prompt of exactly that many
+    /// bytes is built first and prepended verbatim to every request on
+    /// top of the per-request (`prompt_len`-sized) user suffix.
     pub fn generate(cfg: &WorkloadCfg, fillers: &[String]) -> Self {
         assert!(!fillers.is_empty());
         let mut rng = Xoshiro256::new(cfg.seed ^ w0rkload_seed());
+        let shared = Self::filler_text(&mut rng, cfg.shared_prefix_len, fillers);
         let mut t = 0.0f64;
         let mut items = Vec::with_capacity(cfg.n_requests);
         for _ in 0..cfg.n_requests {
@@ -56,13 +67,8 @@ impl Workload {
                 t += rng.exponential(cfg.rate);
             }
             let plen = rng.range(cfg.prompt_len.0, cfg.prompt_len.1 + 1);
-            let mut prompt = String::new();
-            while prompt.len() < plen {
-                let f: &String = rng.choice(fillers);
-                prompt.push_str(f);
-                prompt.push(' ');
-            }
-            prompt.truncate(plen);
+            let mut prompt = shared.clone();
+            prompt.push_str(&Self::filler_text(&mut rng, plen, fillers));
             items.push(TraceItem {
                 arrival_s: t,
                 prompt,
@@ -70,6 +76,18 @@ impl Workload {
             });
         }
         Self { items }
+    }
+
+    /// Exactly `len` bytes of filler prose.
+    fn filler_text(rng: &mut Xoshiro256, len: usize, fillers: &[String]) -> String {
+        let mut text = String::new();
+        while text.len() < len {
+            let f: &String = rng.choice(fillers);
+            text.push_str(f);
+            text.push(' ');
+        }
+        text.truncate(len);
+        text
     }
 
     pub fn duration_s(&self) -> f64 {
@@ -107,6 +125,26 @@ mod tests {
         let cfg = WorkloadCfg { n_requests: 10, rate: 0.0, ..Default::default() };
         let w = Workload::generate(&cfg, &fillers());
         assert!(w.items.iter().all(|i| i.arrival_s == 0.0));
+    }
+
+    #[test]
+    fn shared_prefix_is_byte_identical_across_requests() {
+        let cfg = WorkloadCfg {
+            n_requests: 12,
+            shared_prefix_len: 64,
+            prompt_len: (10, 20),
+            ..Default::default()
+        };
+        let w = Workload::generate(&cfg, &fillers());
+        let prefix = &w.items[0].prompt[..64];
+        for i in &w.items {
+            assert_eq!(&i.prompt[..64], prefix, "system prompt must be verbatim-shared");
+            assert!(i.prompt.len() >= 64 + 10 && i.prompt.len() <= 64 + 20);
+        }
+        // Suffixes must still vary (they are the per-user part).
+        let distinct: std::collections::HashSet<&str> =
+            w.items.iter().map(|i| &i.prompt[64..]).collect();
+        assert!(distinct.len() > 1, "user suffixes should differ");
     }
 
     #[test]

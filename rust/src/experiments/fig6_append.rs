@@ -77,6 +77,9 @@ pub fn run(quick: bool) -> Result<Json> {
             let pname = match policy {
                 AppendPolicy::Realloc => "realloc (HF torch.cat)",
                 AppendPolicy::InPlace => "in-place (serving)",
+                // Paged append cost is in-place cost by construction; its
+                // residency story is benched by `cargo bench kvpool_bench`.
+                AppendPolicy::Paged { .. } => "paged (kvpool)",
             };
             table.row(vec![
                 pname.to_string(),

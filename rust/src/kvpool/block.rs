@@ -1,0 +1,209 @@
+//! Ref-counted KV block allocator with a LIFO free list.
+//!
+//! The pool's unit of accounting is a *block* of `block_size` token slots
+//! (vLLM calls these pages). Blocks are reference counted so sequences can
+//! share a common prefix: `alloc` hands out a block at refcount 1,
+//! `retain` adds a sharer, `release` drops one and returns the block to
+//! the free list when the count reaches zero. The allocator never touches
+//! the actual KV bytes — storage (flat arena, tiered store, or the
+//! device-resident cache the coordinator mirrors) is the caller's concern.
+
+use super::stats::PoolStats;
+
+pub type BlockId = u32;
+
+/// Error returned when the free list cannot grant a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolExhausted {
+    pub requested: usize,
+    pub free: usize,
+}
+
+impl std::fmt::Display for PoolExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "kv pool exhausted: requested {} blocks, {} free", self.requested, self.free)
+    }
+}
+
+impl std::error::Error for PoolExhausted {}
+
+pub struct BlockAllocator {
+    block_size: usize,
+    /// Per-block sharer count; 0 means the block is on the free list.
+    refcount: Vec<u32>,
+    /// LIFO free list (recently freed blocks are re-used first — they are
+    /// the ones most likely still warm in whatever tier backs them).
+    free: Vec<BlockId>,
+    pub stats: PoolStats,
+}
+
+impl BlockAllocator {
+    pub fn new(num_blocks: usize, block_size: usize) -> Self {
+        assert!(block_size > 0, "block_size must be positive");
+        // Reverse order so the first allocations come out 0, 1, 2, …
+        let free: Vec<BlockId> = (0..num_blocks as BlockId).rev().collect();
+        Self { block_size, refcount: vec![0; num_blocks], free, stats: PoolStats::default() }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.refcount.len()
+    }
+
+    pub fn num_free(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn blocks_in_use(&self) -> usize {
+        self.refcount.len() - self.free.len()
+    }
+
+    /// Number of token slots a sequence of `len` tokens occupies.
+    pub fn blocks_for(&self, len: usize) -> usize {
+        len.div_ceil(self.block_size)
+    }
+
+    pub fn can_grant(&self, n: usize) -> bool {
+        n <= self.free.len()
+    }
+
+    pub fn ref_count(&self, b: BlockId) -> u32 {
+        self.refcount[b as usize]
+    }
+
+    /// Take one block off the free list (refcount 0 → 1).
+    pub fn alloc(&mut self) -> Result<BlockId, PoolExhausted> {
+        match self.free.pop() {
+            Some(b) => {
+                debug_assert_eq!(self.refcount[b as usize], 0, "free-listed block has refs");
+                self.refcount[b as usize] = 1;
+                self.stats.allocs += 1;
+                self.stats.note_in_use(self.blocks_in_use());
+                Ok(b)
+            }
+            None => {
+                self.stats.failed_allocs += 1;
+                Err(PoolExhausted { requested: 1, free: 0 })
+            }
+        }
+    }
+
+    /// All-or-nothing batch allocation (admission control wants atomicity:
+    /// a sequence either gets every block it reserved or none).
+    pub fn alloc_many(&mut self, n: usize) -> Result<Vec<BlockId>, PoolExhausted> {
+        if !self.can_grant(n) {
+            self.stats.failed_allocs += 1;
+            return Err(PoolExhausted { requested: n, free: self.free.len() });
+        }
+        Ok((0..n).map(|_| self.alloc().expect("can_grant checked")).collect())
+    }
+
+    /// Add a sharer to a live block (prefix sharing / sequence fork).
+    pub fn retain(&mut self, b: BlockId) {
+        let rc = &mut self.refcount[b as usize];
+        assert!(*rc > 0, "retain of free block {b}");
+        *rc += 1;
+        self.stats.forks += 1;
+    }
+
+    /// Drop one sharer. Returns `true` when the block went back to the
+    /// free list (last reference). Panics on refcount underflow — a
+    /// double-free is a caller bug, not a recoverable condition.
+    pub fn release(&mut self, b: BlockId) -> bool {
+        let rc = &mut self.refcount[b as usize];
+        assert!(*rc > 0, "double free of block {b}");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(b);
+            self.stats.frees += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Structural invariants, used by the property tests: every block is
+    /// either on the free list (refcount 0) or referenced (refcount > 0),
+    /// and the free list holds no duplicates.
+    pub fn check_invariants(&self) {
+        let mut on_free = vec![false; self.refcount.len()];
+        for &b in &self.free {
+            assert!(!on_free[b as usize], "block {b} on free list twice");
+            on_free[b as usize] = true;
+            assert_eq!(self.refcount[b as usize], 0, "free block {b} has refs");
+        }
+        let live = self.refcount.iter().filter(|&&rc| rc > 0).count();
+        assert_eq!(
+            live + self.free.len(),
+            self.refcount.len(),
+            "block leak: {} live + {} free != {}",
+            live,
+            self.free.len(),
+            self.refcount.len()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let mut a = BlockAllocator::new(4, 16);
+        assert_eq!(a.num_free(), 4);
+        let b0 = a.alloc().unwrap();
+        let b1 = a.alloc().unwrap();
+        assert_eq!((b0, b1), (0, 1));
+        assert_eq!(a.blocks_in_use(), 2);
+        assert!(a.release(b0));
+        assert_eq!(a.num_free(), 3);
+        // LIFO: the freed block comes back first.
+        assert_eq!(a.alloc().unwrap(), b0);
+        a.check_invariants();
+    }
+
+    #[test]
+    fn retain_defers_free() {
+        let mut a = BlockAllocator::new(2, 8);
+        let b = a.alloc().unwrap();
+        a.retain(b);
+        assert_eq!(a.ref_count(b), 2);
+        assert!(!a.release(b));
+        assert!(a.release(b));
+        assert_eq!(a.num_free(), 2);
+        a.check_invariants();
+    }
+
+    #[test]
+    fn exhaustion_is_reported_not_fatal() {
+        let mut a = BlockAllocator::new(1, 8);
+        let _b = a.alloc().unwrap();
+        let err = a.alloc().unwrap_err();
+        assert_eq!(err.free, 0);
+        assert!(a.alloc_many(1).is_err());
+        assert_eq!(a.stats.failed_allocs, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut a = BlockAllocator::new(2, 8);
+        let b = a.alloc().unwrap();
+        a.release(b);
+        a.release(b);
+    }
+
+    #[test]
+    fn alloc_many_is_atomic() {
+        let mut a = BlockAllocator::new(3, 8);
+        assert!(a.alloc_many(4).is_err());
+        assert_eq!(a.num_free(), 3, "failed batch must not leak partial grants");
+        let got = a.alloc_many(3).unwrap();
+        assert_eq!(got.len(), 3);
+        a.check_invariants();
+    }
+}

@@ -1,0 +1,32 @@
+//! Paged KV-pool subsystem: the memory substrate under the serving engine.
+//!
+//! Replaces the flat preallocated `[lanes, max_len, D]` discipline (and
+//! the coordinator's old `lane_reset_frac` hygiene hack) with vLLM-style
+//! paged allocation:
+//!
+//! * [`block`] — ref-counted block allocator with a LIFO free list; the
+//!   unit of admission control and sharing.
+//! * [`table`] — per-sequence block tables plus content-addressed prefix
+//!   sharing (chain-hashed full prompt blocks, copy-on-write tails). The
+//!   coordinator uses a [`TableSet`] to mirror the device cache and admit
+//!   a request only when its blocks can actually be granted.
+//! * [`tiered`] — the data plane: hot low-rank K̂ tier (always resident,
+//!   Loki ranks here) + cold full-KV tier with LRU page residency; the
+//!   paged attention kernels in [`crate::attnsim`] read it through
+//!   [`PagedArena`] views.
+//! * [`stats`] — occupancy / eviction / sharing counters.
+//!
+//! The design target is the paper's serving story at scale: admission
+//! backpressure instead of silent lane resets, shared system prompts paid
+//! for once, and Loki's d_f·D ranking tier small enough to pin hot while
+//! full-D pages page in on demand (cf. Double Sparsity, Yang et al.).
+
+pub mod block;
+pub mod stats;
+pub mod table;
+pub mod tiered;
+
+pub use block::{BlockAllocator, BlockId, PoolExhausted};
+pub use stats::{PoolStats, TierStats};
+pub use table::{chain_hash, BlockTable, SeqId, TableSet};
+pub use tiered::{PagedArena, PoolSeqId, TieredKvPool, TieredPoolCfg};

@@ -1,0 +1,61 @@
+//! Pool occupancy / eviction / sharing counters.
+//!
+//! Two counter sets with different owners: [`PoolStats`] belongs to the
+//! block allocator (alloc/free/fork traffic and the free-list high-water
+//! mark), [`TierStats`] to the tiered store (hot-tier hits, cold-page
+//! faults, LRU demotions). Both are analytic tallies in the spirit of
+//! `attnsim::DataMovement`: on CPU everything is resident, but the
+//! counters measure what a faithful two-tier (HBM + host / CXL) backend
+//! would have to allocate and move.
+
+/// Allocator-side counters (owned by [`super::BlockAllocator`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Blocks handed out by `alloc` (fresh blocks, refcount 0 → 1).
+    pub allocs: u64,
+    /// Blocks returned to the free list (refcount → 0).
+    pub frees: u64,
+    /// Refcount increments (`retain`): prefix sharing and sequence forks.
+    pub forks: u64,
+    /// Copy-on-write block duplications (a shared block was written).
+    pub cow_copies: u64,
+    /// `alloc` calls that failed because the free list was empty.
+    pub failed_allocs: u64,
+    /// Peak simultaneous blocks-in-use over the pool's lifetime.
+    pub peak_blocks_in_use: u64,
+}
+
+impl PoolStats {
+    pub fn note_in_use(&mut self, in_use: usize) {
+        self.peak_blocks_in_use = self.peak_blocks_in_use.max(in_use as u64);
+    }
+}
+
+/// Tiered-store counters (owned by [`super::TieredKvPool`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TierStats {
+    /// Score passes answered entirely from the hot low-rank tier.
+    pub hot_hits: u64,
+    /// Cold pages gathered while not resident (had to be faulted in).
+    pub gather_faults: u64,
+    /// Cold pages gathered while already resident (LRU hit).
+    pub gather_hits: u64,
+    /// Resident cold pages pushed out by the LRU budget.
+    pub demotions: u64,
+    /// Bytes a two-tier backend would transfer for the faults above.
+    pub bytes_faulted: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracks_maximum() {
+        let mut s = PoolStats::default();
+        s.note_in_use(3);
+        s.note_in_use(7);
+        s.note_in_use(5);
+        assert_eq!(s.peak_blocks_in_use, 7);
+    }
+}

@@ -1,0 +1,388 @@
+//! Per-sequence block tables with copy-on-write prefix sharing.
+//!
+//! A [`BlockTable`] maps a sequence's token positions onto allocator
+//! blocks. [`TableSet`] manages one table per live sequence plus a
+//! content-addressed prefix index: every *full* block of prompt tokens is
+//! keyed by the chain hash of all tokens up to and including that block,
+//! so two requests with the same prompt prefix resolve to the same blocks
+//! (refcount++) instead of fresh allocations — vLLM-style automatic
+//! prefix caching, no request-side grouping API required. Tail blocks
+//! (partial prompt block + generated tokens) are always private, which is
+//! what makes the sharing copy-on-write: divergence after the common
+//! prefix lands in per-sequence blocks.
+//!
+//! `TableSet` is pure bookkeeping over token ids — the coordinator uses it
+//! to mirror the device cache for admission control. The data-plane
+//! sibling (which owns actual KV bytes) is [`super::TieredKvPool`].
+
+use std::collections::HashMap;
+
+use super::block::{BlockAllocator, BlockId, PoolExhausted};
+
+pub type SeqId = u64;
+
+/// One sequence's view of the pool: `blocks[i]` backs token positions
+/// `[i·bs, (i+1)·bs)`; `len` tokens are live.
+#[derive(Clone, Debug, Default)]
+pub struct BlockTable {
+    pub blocks: Vec<BlockId>,
+    pub len: usize,
+}
+
+/// Position-dependent content hash: identifies "these exact tokens as a
+/// prefix", not "this bag of tokens" — extending a chain with the next
+/// block's tokens yields the next key.
+pub fn chain_hash(prev: u64, tokens: &[i32]) -> u64 {
+    let mut h = prev ^ 0x9E37_79B9_7F4A_7C15;
+    for &t in tokens {
+        h ^= (t as u32 as u64).wrapping_mul(0x0100_0000_01B3);
+        h = h.rotate_left(27).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    }
+    h
+}
+
+pub struct TableSet {
+    block_size: usize,
+    sharing: bool,
+    tables: HashMap<SeqId, BlockTable>,
+    next: SeqId,
+    /// chain hash of a full prefix block → the block holding it.
+    prefix_map: HashMap<u64, BlockId>,
+    /// Reverse index for cleanup when a shared block is finally freed.
+    block_hash: HashMap<BlockId, u64>,
+    /// Blocks obtained by sharing instead of allocation (the savings).
+    pub shared_hits: u64,
+}
+
+impl TableSet {
+    pub fn new(block_size: usize, sharing: bool) -> Self {
+        assert!(block_size > 0);
+        Self {
+            block_size,
+            sharing,
+            tables: HashMap::new(),
+            next: 1,
+            prefix_map: HashMap::new(),
+            block_hash: HashMap::new(),
+            shared_hits: 0,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn live_seqs(&self) -> usize {
+        self.tables.len()
+    }
+
+    pub fn table(&self, seq: SeqId) -> Option<&BlockTable> {
+        self.tables.get(&seq)
+    }
+
+    /// Admit a sequence: reserve blocks for `reserve_total` token slots
+    /// (prompt now + decode growth later), sharing full prompt blocks by
+    /// content. All-or-nothing: on exhaustion every acquired block is
+    /// rolled back and the pool is untouched.
+    pub fn admit(
+        &mut self,
+        alloc: &mut BlockAllocator,
+        prompt: &[i32],
+        reserve_total: usize,
+    ) -> Result<SeqId, PoolExhausted> {
+        assert_eq!(self.block_size, alloc.block_size(), "table/allocator block size mismatch");
+        let bs = self.block_size;
+        let reserve_total = reserve_total.max(prompt.len()).max(1);
+        let total_blocks = reserve_total.div_ceil(bs);
+        let full = prompt.len() / bs; // shareable full prompt blocks
+
+        let mut blocks: Vec<BlockId> = Vec::with_capacity(total_blocks);
+        let mut chain = 0u64;
+        for i in 0..full {
+            chain = chain_hash(chain, &prompt[i * bs..(i + 1) * bs]);
+            let shared = if self.sharing { self.prefix_map.get(&chain).copied() } else { None };
+            match shared {
+                Some(b) => {
+                    alloc.retain(b);
+                    self.shared_hits += 1;
+                    blocks.push(b);
+                }
+                None => match alloc.alloc() {
+                    Ok(b) => {
+                        if self.sharing {
+                            self.prefix_map.insert(chain, b);
+                            self.block_hash.insert(b, chain);
+                        }
+                        blocks.push(b);
+                    }
+                    Err(e) => {
+                        self.rollback(alloc, &blocks);
+                        return Err(e);
+                    }
+                },
+            }
+        }
+        // Private tail: partial prompt block + reserved decode headroom.
+        for _ in full..total_blocks {
+            match alloc.alloc() {
+                Ok(b) => blocks.push(b),
+                Err(e) => {
+                    self.rollback(alloc, &blocks);
+                    return Err(e);
+                }
+            }
+        }
+        let id = self.next;
+        self.next += 1;
+        self.tables.insert(id, BlockTable { blocks, len: prompt.len() });
+        Ok(id)
+    }
+
+    /// Advance a sequence by one generated token (must stay within the
+    /// blocks reserved at admission — the engine's reservation guarantees
+    /// decode never allocates mid-flight, so it can never OOM mid-flight).
+    pub fn advance(&mut self, seq: SeqId) {
+        let bs = self.block_size;
+        let t = self.tables.get_mut(&seq).expect("advance of unknown seq");
+        assert!(
+            t.len < t.blocks.len() * bs,
+            "sequence {seq} outgrew its reservation ({} blocks)",
+            t.blocks.len()
+        );
+        t.len += 1;
+    }
+
+    /// Release every block a sequence holds.
+    pub fn free(&mut self, alloc: &mut BlockAllocator, seq: SeqId) {
+        let t = self.tables.remove(&seq).expect("free of unknown seq");
+        for b in t.blocks {
+            self.release_and_clean(alloc, b);
+        }
+    }
+
+    /// Fork: the child shares every full block of the parent (refcount++)
+    /// and gets a private copy-on-write tail block if the parent's length
+    /// is mid-block. Used by the property tests and by speculative /
+    /// beam-style serving extensions.
+    pub fn fork(
+        &mut self,
+        alloc: &mut BlockAllocator,
+        parent: SeqId,
+    ) -> Result<SeqId, PoolExhausted> {
+        let bs = self.block_size;
+        let (p_blocks, p_len) = {
+            let t = self.tables.get(&parent).expect("fork of unknown seq");
+            (t.blocks.clone(), t.len)
+        };
+        let full = p_len / bs;
+        let mut blocks: Vec<BlockId> = Vec::with_capacity(p_blocks.len());
+        for &b in p_blocks.iter().take(full) {
+            alloc.retain(b);
+            blocks.push(b);
+        }
+        if p_len % bs != 0 {
+            // CoW of the partial tail: a private block the child may write.
+            match alloc.alloc() {
+                Ok(b) => {
+                    alloc.stats.cow_copies += 1;
+                    blocks.push(b);
+                }
+                Err(e) => {
+                    self.rollback(alloc, &blocks);
+                    return Err(e);
+                }
+            }
+        }
+        let id = self.next;
+        self.next += 1;
+        self.tables.insert(id, BlockTable { blocks, len: p_len });
+        Ok(id)
+    }
+
+    /// How many full prompt blocks of `prompt` would be shared (not
+    /// freshly allocated) if it were admitted right now — an occupancy
+    /// probe for dashboards/tests. Note sharing does not change whether
+    /// a request *fits* a pool: shared blocks are live allocations, so a
+    /// grant always needs the request's total block count within
+    /// `num_blocks`.
+    pub fn shareable_full_blocks(&self, prompt: &[i32]) -> usize {
+        if !self.sharing {
+            return 0;
+        }
+        let bs = self.block_size;
+        let mut chain = 0u64;
+        let mut shared = 0;
+        for i in 0..prompt.len() / bs {
+            chain = chain_hash(chain, &prompt[i * bs..(i + 1) * bs]);
+            if self.prefix_map.contains_key(&chain) {
+                shared += 1;
+            }
+        }
+        shared
+    }
+
+    fn rollback(&mut self, alloc: &mut BlockAllocator, acquired: &[BlockId]) {
+        for &b in acquired.iter().rev() {
+            self.release_and_clean(alloc, b);
+        }
+    }
+
+    fn release_and_clean(&mut self, alloc: &mut BlockAllocator, b: BlockId) {
+        if alloc.release(b) {
+            if let Some(h) = self.block_hash.remove(&b) {
+                self.prefix_map.remove(&h);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(n: usize, base: i32) -> Vec<i32> {
+        (0..n as i32).map(|i| base + i).collect()
+    }
+
+    #[test]
+    fn identical_prompts_share_full_blocks() {
+        let mut alloc = BlockAllocator::new(32, 4);
+        let mut ts = TableSet::new(4, true);
+        let prompt = toks(10, 100); // 2 full blocks + 2-token tail
+        let a = ts.admit(&mut alloc, &prompt, 12).unwrap();
+        let before = alloc.blocks_in_use();
+        let b = ts.admit(&mut alloc, &prompt, 12).unwrap();
+        // Second admit shares the 2 full prompt blocks, allocates only the
+        // private tail block.
+        assert_eq!(alloc.blocks_in_use(), before + 1);
+        assert_eq!(ts.shared_hits, 2);
+        let (ta, tb) = (ts.table(a).unwrap().clone(), ts.table(b).unwrap().clone());
+        assert_eq!(ta.blocks[..2], tb.blocks[..2]);
+        assert_ne!(ta.blocks[2], tb.blocks[2]);
+        ts.free(&mut alloc, a);
+        ts.free(&mut alloc, b);
+        assert_eq!(alloc.blocks_in_use(), 0);
+        alloc.check_invariants();
+    }
+
+    #[test]
+    fn divergent_prompts_do_not_share() {
+        let mut alloc = BlockAllocator::new(32, 4);
+        let mut ts = TableSet::new(4, true);
+        let a = ts.admit(&mut alloc, &toks(8, 0), 8).unwrap();
+        let b = ts.admit(&mut alloc, &toks(8, 999), 8).unwrap();
+        assert_eq!(ts.shared_hits, 0);
+        ts.free(&mut alloc, a);
+        ts.free(&mut alloc, b);
+        alloc.check_invariants();
+    }
+
+    #[test]
+    fn sharing_disabled_allocates_fresh() {
+        let mut alloc = BlockAllocator::new(32, 4);
+        let mut ts = TableSet::new(4, false);
+        let prompt = toks(8, 7);
+        let _a = ts.admit(&mut alloc, &prompt, 8).unwrap();
+        let _b = ts.admit(&mut alloc, &prompt, 8).unwrap();
+        assert_eq!(ts.shared_hits, 0);
+        assert_eq!(alloc.blocks_in_use(), 4);
+    }
+
+    #[test]
+    fn admission_rolls_back_on_exhaustion() {
+        let mut alloc = BlockAllocator::new(3, 4);
+        let mut ts = TableSet::new(4, true);
+        // Needs 4 blocks; only 3 exist.
+        assert!(ts.admit(&mut alloc, &toks(13, 0), 16).is_err());
+        assert_eq!(alloc.blocks_in_use(), 0, "failed admit must roll back");
+        assert_eq!(ts.live_seqs(), 0);
+        alloc.check_invariants();
+    }
+
+    #[test]
+    fn advance_stays_within_reservation() {
+        let mut alloc = BlockAllocator::new(8, 4);
+        let mut ts = TableSet::new(4, true);
+        let s = ts.admit(&mut alloc, &toks(3, 0), 8).unwrap();
+        for _ in 0..5 {
+            ts.advance(s);
+        }
+        assert_eq!(ts.table(s).unwrap().len, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "outgrew its reservation")]
+    fn advance_past_reservation_panics() {
+        let mut alloc = BlockAllocator::new(8, 4);
+        let mut ts = TableSet::new(4, true);
+        let s = ts.admit(&mut alloc, &toks(3, 0), 4).unwrap();
+        for _ in 0..2 {
+            ts.advance(s);
+        }
+    }
+
+    #[test]
+    fn fork_shares_full_blocks_and_cows_tail() {
+        let mut alloc = BlockAllocator::new(16, 4);
+        let mut ts = TableSet::new(4, true);
+        let p = ts.admit(&mut alloc, &toks(6, 0), 6).unwrap();
+        let before = alloc.blocks_in_use();
+        let c = ts.fork(&mut alloc, p).unwrap();
+        assert_eq!(alloc.blocks_in_use(), before + 1, "only the tail is copied");
+        let (tp, tc) = (ts.table(p).unwrap().clone(), ts.table(c).unwrap().clone());
+        assert_eq!(tp.blocks[0], tc.blocks[0]);
+        assert_ne!(tp.blocks[1], tc.blocks[1]);
+        assert_eq!(alloc.ref_count(tp.blocks[0]), 2);
+        ts.free(&mut alloc, p);
+        assert_eq!(alloc.ref_count(tc.blocks[0]), 1, "parent free keeps shared block live");
+        ts.free(&mut alloc, c);
+        assert_eq!(alloc.blocks_in_use(), 0);
+        alloc.check_invariants();
+    }
+
+    #[test]
+    fn shared_block_reusable_after_full_free() {
+        let mut alloc = BlockAllocator::new(8, 4);
+        let mut ts = TableSet::new(4, true);
+        let prompt = toks(4, 50);
+        let a = ts.admit(&mut alloc, &prompt, 4).unwrap();
+        ts.free(&mut alloc, a);
+        assert_eq!(alloc.blocks_in_use(), 0);
+        // The hash entry must be gone: a fresh admit re-allocates (and the
+        // stale map must not hand out a freed block).
+        let b = ts.admit(&mut alloc, &prompt, 4).unwrap();
+        assert_eq!(alloc.blocks_in_use(), 1);
+        assert_eq!(alloc.ref_count(ts.table(b).unwrap().blocks[0]), 1);
+        ts.free(&mut alloc, b);
+        alloc.check_invariants();
+    }
+
+    #[test]
+    fn shareable_full_blocks_counts_resident_prefix() {
+        let mut alloc = BlockAllocator::new(16, 4);
+        let mut ts = TableSet::new(4, true);
+        let prompt = toks(10, 0); // 2 full blocks + tail
+        assert_eq!(ts.shareable_full_blocks(&prompt), 0, "nothing resident yet");
+        let a = ts.admit(&mut alloc, &prompt, 10).unwrap();
+        assert_eq!(ts.shareable_full_blocks(&prompt), 2);
+        // A prompt diverging in the second block shares only the first.
+        let mut other = prompt.clone();
+        other[5] = 999;
+        assert_eq!(ts.shareable_full_blocks(&other), 1);
+        ts.free(&mut alloc, a);
+        assert_eq!(ts.shareable_full_blocks(&prompt), 0, "freed blocks leave the index");
+        // Sharing disabled → never counts.
+        let ts_off = TableSet::new(4, false);
+        assert_eq!(ts_off.shareable_full_blocks(&prompt), 0);
+    }
+
+    #[test]
+    fn chain_hash_is_position_dependent() {
+        let a = chain_hash(0, &[1, 2, 3, 4]);
+        let b = chain_hash(0, &[1, 2, 4, 3]);
+        assert_ne!(a, b);
+        let c = chain_hash(a, &[5, 6, 7, 8]);
+        let d = chain_hash(b, &[5, 6, 7, 8]);
+        assert_ne!(c, d, "divergent prefixes must not reconverge");
+    }
+}

@@ -1,0 +1,491 @@
+//! Tiered paged KV storage: hot low-rank K̂ tier + cold full-KV tier.
+//!
+//! This is where Loki's low-rank keys pay off twice. The pool keeps two
+//! arenas, both indexed by the same block table:
+//!
+//! * **hot tier** — the leading `d_hot` components of every rotated key
+//!   K̂ (PCA orders components, so a prefix slice is the paper's d_f·D
+//!   budget). This tier is always resident: it is what Loki *ranks* with,
+//!   and it is `d_hot / (2·D)` the size of the full cache.
+//! * **cold tier** — full-D K and V pages, subject to an LRU residency
+//!   budget. Only the pages holding top-k *selected* slots are gathered,
+//!   so a faithful two-tier backend (GPU HBM + host memory, à la Double
+//!   Sparsity's offloading variant) moves `k_f` of the cache instead of
+//!   all of it. [`TieredKvPool::account_gather`] models the faults.
+//!
+//! On CPU both arenas are plain `Vec<f32>`s and "residency" is an analytic
+//! counter set (like `attnsim::DataMovement`): the numbers say what the
+//! tiering policy *would* transfer, while the math stays bit-identical to
+//! the flat cache — verified by `tests/kvpool_properties.rs`.
+//!
+//! Blocks are ref-counted ([`BlockAllocator`]), so [`TieredKvPool::fork`]
+//! shares every block of the parent copy-on-write: the first append a
+//! forked sequence makes into a shared tail block copies that block
+//! (hot + cold) before writing.
+
+use super::block::{BlockAllocator, BlockId, PoolExhausted};
+use super::stats::TierStats;
+use super::table::BlockTable;
+
+/// Sequence handle within a [`TieredKvPool`] (dense index, not recycled).
+pub type PoolSeqId = usize;
+
+/// Immutable view of one arena for the paged attention kernels: `data` is
+/// `[num_blocks, block_size, width]` row-major, a block table maps token
+/// positions to blocks.
+#[derive(Clone, Copy)]
+pub struct PagedArena<'a> {
+    pub data: &'a [f32],
+    pub block_size: usize,
+    pub width: usize,
+}
+
+impl<'a> PagedArena<'a> {
+    /// Row of token position `j` under `table` (one sequence's blocks).
+    #[inline]
+    pub fn row(&self, table: &[BlockId], j: usize) -> &'a [f32] {
+        let b = table[j / self.block_size] as usize;
+        let off = (b * self.block_size + j % self.block_size) * self.width;
+        &self.data[off..off + self.width]
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct TieredPoolCfg {
+    pub num_blocks: usize,
+    /// Token slots per block.
+    pub block_size: usize,
+    pub head_dim: usize,
+    /// Leading key components kept always-hot (Loki's d_f·D knob).
+    pub d_hot: usize,
+    /// LRU budget for resident cold pages; 0 = unbounded (everything
+    /// stays resident and only fault-on-first-touch is counted).
+    pub cold_resident_blocks: usize,
+}
+
+pub struct TieredKvPool {
+    cfg: TieredPoolCfg,
+    alloc: BlockAllocator,
+    /// `[num_blocks, block_size, d_hot]`, grown lazily per block.
+    hot_k: Vec<f32>,
+    /// `[num_blocks, block_size, head_dim]` each, grown lazily per block.
+    cold_k: Vec<f32>,
+    cold_v: Vec<f32>,
+    tables: Vec<Option<BlockTable>>,
+    resident: Vec<bool>,
+    last_touch: Vec<u64>,
+    resident_count: usize,
+    tick: u64,
+    pub tier_stats: TierStats,
+}
+
+impl TieredKvPool {
+    pub fn new(cfg: TieredPoolCfg) -> Self {
+        assert!(cfg.d_hot >= 1 && cfg.d_hot <= cfg.head_dim, "d_hot must be in [1, D]");
+        Self {
+            alloc: BlockAllocator::new(cfg.num_blocks, cfg.block_size),
+            hot_k: Vec::new(),
+            cold_k: Vec::new(),
+            cold_v: Vec::new(),
+            tables: Vec::new(),
+            resident: vec![false; cfg.num_blocks],
+            last_touch: vec![0; cfg.num_blocks],
+            resident_count: 0,
+            tick: 0,
+            tier_stats: TierStats::default(),
+            cfg,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.cfg.head_dim
+    }
+
+    pub fn d_hot(&self) -> usize {
+        self.cfg.d_hot
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.cfg.block_size
+    }
+
+    pub fn allocator(&self) -> &BlockAllocator {
+        &self.alloc
+    }
+
+    pub fn new_seq(&mut self) -> PoolSeqId {
+        self.tables.push(Some(BlockTable::default()));
+        self.tables.len() - 1
+    }
+
+    pub fn len(&self, seq: PoolSeqId) -> usize {
+        self.table_ref(seq).len
+    }
+
+    pub fn is_empty(&self, seq: PoolSeqId) -> bool {
+        self.len(seq) == 0
+    }
+
+    pub fn blocks(&self, seq: PoolSeqId) -> &[BlockId] {
+        &self.table_ref(seq).blocks
+    }
+
+    fn table_ref(&self, seq: PoolSeqId) -> &BlockTable {
+        self.tables[seq].as_ref().expect("freed sequence")
+    }
+
+    /// Append one token's K and V rows (`head_dim` floats each). The hot
+    /// tier receives the leading `d_hot` components of `k_row` — callers
+    /// on the Loki path pass *rotated* keys K̂, exactly as the flat cache
+    /// stores them.
+    pub fn append(
+        &mut self,
+        seq: PoolSeqId,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) -> Result<(), PoolExhausted> {
+        let (bs, d) = (self.cfg.block_size, self.cfg.head_dim);
+        assert_eq!(k_row.len(), d, "k_row must be head_dim floats");
+        assert_eq!(v_row.len(), d, "v_row must be head_dim floats");
+        let pos = self.table_ref(seq).len;
+        let bi = pos / bs;
+        if bi == self.table_ref(seq).blocks.len() {
+            let b = self.alloc.alloc()?;
+            self.ensure_block(b);
+            self.touch_write(b);
+            self.tables[seq].as_mut().expect("freed sequence").blocks.push(b);
+        } else {
+            let b = self.table_ref(seq).blocks[bi];
+            if self.alloc.ref_count(b) > 1 {
+                let fresh = self.cow_block(b)?;
+                self.tables[seq].as_mut().expect("freed sequence").blocks[bi] = fresh;
+            }
+        }
+        let b = self.table_ref(seq).blocks[bi] as usize;
+        let off = pos % bs;
+        let hot = (b * bs + off) * self.cfg.d_hot;
+        self.hot_k[hot..hot + self.cfg.d_hot].copy_from_slice(&k_row[..self.cfg.d_hot]);
+        let cold = (b * bs + off) * d;
+        self.cold_k[cold..cold + d].copy_from_slice(k_row);
+        self.cold_v[cold..cold + d].copy_from_slice(v_row);
+        self.touch_write(b as BlockId);
+        self.tables[seq].as_mut().expect("freed sequence").len = pos + 1;
+        Ok(())
+    }
+
+    /// Bulk-load a prefill prefix: `k`/`v` are `[len, head_dim]` row-major.
+    pub fn load_prefix(
+        &mut self,
+        seq: PoolSeqId,
+        k: &[f32],
+        v: &[f32],
+        len: usize,
+    ) -> Result<(), PoolExhausted> {
+        let d = self.cfg.head_dim;
+        assert_eq!(k.len(), len * d);
+        assert_eq!(v.len(), len * d);
+        for j in 0..len {
+            self.append(seq, &k[j * d..(j + 1) * d], &v[j * d..(j + 1) * d])?;
+        }
+        Ok(())
+    }
+
+    /// Fork a sequence copy-on-write: the child shares *every* block of
+    /// the parent (refcount++), including a partial tail — the first
+    /// divergent append copies that tail block. Never allocates.
+    pub fn fork(&mut self, parent: PoolSeqId) -> PoolSeqId {
+        let t = self.table_ref(parent).clone();
+        for &b in &t.blocks {
+            self.alloc.retain(b);
+        }
+        self.tables.push(Some(t));
+        self.tables.len() - 1
+    }
+
+    pub fn free_seq(&mut self, seq: PoolSeqId) {
+        let t = self.tables[seq].take().expect("double free of sequence");
+        for b in t.blocks {
+            if self.alloc.release(b) && self.resident[b as usize] {
+                self.resident[b as usize] = false;
+                self.resident_count -= 1;
+            }
+        }
+    }
+
+    /// Hot-tier arena (`width = d_hot`) — Loki's ranking reads.
+    pub fn hot_view(&self) -> PagedArena<'_> {
+        PagedArena { data: &self.hot_k, block_size: self.cfg.block_size, width: self.cfg.d_hot }
+    }
+
+    /// Cold full-D key arena.
+    pub fn cold_k_view(&self) -> PagedArena<'_> {
+        PagedArena { data: &self.cold_k, block_size: self.cfg.block_size, width: self.cfg.head_dim }
+    }
+
+    /// Cold full-D value arena.
+    pub fn cold_v_view(&self) -> PagedArena<'_> {
+        PagedArena { data: &self.cold_v, block_size: self.cfg.block_size, width: self.cfg.head_dim }
+    }
+
+    /// Record one score pass answered from the hot tier.
+    pub fn account_hot_pass(&mut self) {
+        self.tier_stats.hot_hits += 1;
+    }
+
+    /// Model the cold-tier gather for the selected slots of a sequence:
+    /// pages not resident fault in (counted, byte-tallied) and may demote
+    /// the least-recently-used resident page beyond the budget.
+    pub fn account_gather(&mut self, seq: PoolSeqId, slots: &[u32]) {
+        let bs = self.cfg.block_size;
+        let page_bytes = (2 * bs * self.cfg.head_dim * 4) as u64; // K + V
+        let mut touched: Vec<BlockId> = slots
+            .iter()
+            .map(|&j| self.table_ref(seq).blocks[j as usize / bs])
+            .collect();
+        touched.sort_unstable();
+        touched.dedup();
+        for b in touched {
+            let bi = b as usize;
+            if self.resident[bi] {
+                self.tier_stats.gather_hits += 1;
+            } else {
+                self.resident[bi] = true;
+                self.resident_count += 1;
+                self.tier_stats.gather_faults += 1;
+                self.tier_stats.bytes_faulted += page_bytes;
+            }
+            self.tick += 1;
+            self.last_touch[bi] = self.tick;
+        }
+        self.enforce_budget();
+    }
+
+    /// Bytes a two-tier backend would keep hot right now: the full hot
+    /// tier for every in-use block, plus the resident cold pages.
+    pub fn resident_kv_bytes(&self) -> u64 {
+        let bs = self.cfg.block_size;
+        let hot = (self.alloc.blocks_in_use() * bs * self.cfg.d_hot * 4) as u64;
+        let cold_blocks = if self.cfg.cold_resident_blocks == 0 {
+            self.alloc.blocks_in_use()
+        } else {
+            self.resident_count
+        };
+        hot + (cold_blocks * 2 * bs * self.cfg.head_dim * 4) as u64
+    }
+
+    /// What a flat `[seqs, max_len, D]` K+V cache would hold for the same
+    /// sequences (the `lane_reset_frac`-era baseline this pool replaces).
+    pub fn flat_equivalent_bytes(&self, max_len: usize) -> u64 {
+        let live = self.tables.iter().filter(|t| t.is_some()).count();
+        (live * max_len * self.cfg.head_dim * 2 * 4) as u64
+    }
+
+    pub fn check_invariants(&self) {
+        self.alloc.check_invariants();
+        let resident = self.resident.iter().filter(|&&r| r).count();
+        assert_eq!(resident, self.resident_count, "resident count drift");
+        for t in self.tables.iter().flatten() {
+            assert!(t.len <= t.blocks.len() * self.cfg.block_size, "table len beyond blocks");
+            for &b in &t.blocks {
+                assert!(self.alloc.ref_count(b) > 0, "table references freed block {b}");
+            }
+        }
+        if self.cfg.cold_resident_blocks > 0 {
+            assert!(
+                self.resident_count <= self.cfg.cold_resident_blocks,
+                "LRU budget exceeded: {} > {}",
+                self.resident_count,
+                self.cfg.cold_resident_blocks
+            );
+        }
+    }
+
+    fn ensure_block(&mut self, b: BlockId) {
+        let bs = self.cfg.block_size;
+        let need_hot = (b as usize + 1) * bs * self.cfg.d_hot;
+        if self.hot_k.len() < need_hot {
+            self.hot_k.resize(need_hot, 0.0);
+        }
+        let need_cold = (b as usize + 1) * bs * self.cfg.head_dim;
+        if self.cold_k.len() < need_cold {
+            self.cold_k.resize(need_cold, 0.0);
+            self.cold_v.resize(need_cold, 0.0);
+        }
+    }
+
+    /// Appends write the cold tier directly (a serving backend appends
+    /// into whatever tier holds the write head): mark resident, no fault.
+    fn touch_write(&mut self, b: BlockId) {
+        let bi = b as usize;
+        if !self.resident[bi] {
+            self.resident[bi] = true;
+            self.resident_count += 1;
+        }
+        self.tick += 1;
+        self.last_touch[bi] = self.tick;
+        self.enforce_budget();
+    }
+
+    fn enforce_budget(&mut self) {
+        let budget = self.cfg.cold_resident_blocks;
+        if budget == 0 {
+            return;
+        }
+        while self.resident_count > budget {
+            let victim = self
+                .resident
+                .iter()
+                .enumerate()
+                .filter(|(_, &r)| r)
+                .min_by_key(|&(i, _)| self.last_touch[i])
+                .map(|(i, _)| i)
+                .expect("resident_count > 0");
+            self.resident[victim] = false;
+            self.resident_count -= 1;
+            self.tier_stats.demotions += 1;
+        }
+    }
+
+    /// Copy a shared block (hot + cold arenas) into a fresh private one.
+    fn cow_block(&mut self, b: BlockId) -> Result<BlockId, PoolExhausted> {
+        let fresh = self.alloc.alloc()?;
+        self.ensure_block(fresh);
+        let bs = self.cfg.block_size;
+        let (src, dst) = (b as usize, fresh as usize);
+        let hw = bs * self.cfg.d_hot;
+        self.hot_k.copy_within(src * hw..(src + 1) * hw, dst * hw);
+        let cw = bs * self.cfg.head_dim;
+        self.cold_k.copy_within(src * cw..(src + 1) * cw, dst * cw);
+        self.cold_v.copy_within(src * cw..(src + 1) * cw, dst * cw);
+        self.alloc.release(b);
+        self.alloc.stats.cow_copies += 1;
+        self.touch_write(fresh);
+        Ok(fresh)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn pool(num_blocks: usize, bs: usize, d: usize, d_hot: usize) -> TieredKvPool {
+        TieredKvPool::new(TieredPoolCfg {
+            num_blocks,
+            block_size: bs,
+            head_dim: d,
+            d_hot,
+            cold_resident_blocks: 0,
+        })
+    }
+
+    #[test]
+    fn append_and_read_back_both_tiers() {
+        let mut p = pool(8, 4, 8, 2);
+        let s = p.new_seq();
+        let mut rng = Xoshiro256::new(11);
+        let mut ks = Vec::new();
+        for _ in 0..10 {
+            let k = rng.normal_vec(8);
+            let v = rng.normal_vec(8);
+            p.append(s, &k, &v).unwrap();
+            ks.push(k);
+        }
+        assert_eq!(p.len(s), 10);
+        assert_eq!(p.blocks(s).len(), 3);
+        let hot = p.hot_view();
+        let cold = p.cold_k_view();
+        let table = p.blocks(s);
+        for (j, k) in ks.iter().enumerate() {
+            assert_eq!(hot.row(table, j), &k[..2], "hot row {j}");
+            assert_eq!(cold.row(table, j), &k[..], "cold row {j}");
+        }
+        p.check_invariants();
+    }
+
+    #[test]
+    fn fork_shares_then_cow_on_divergence() {
+        let mut p = pool(8, 4, 4, 2);
+        let parent = p.new_seq();
+        let mut rng = Xoshiro256::new(5);
+        for _ in 0..6 {
+            let r = rng.normal_vec(4);
+            p.append(parent, &r, &r).unwrap();
+        }
+        let child = p.fork(parent);
+        assert_eq!(p.blocks(parent), p.blocks(child));
+        assert_eq!(p.allocator().blocks_in_use(), 2, "fork allocates nothing");
+
+        // Parent's view before divergence.
+        let before: Vec<f32> = (0..6).map(|j| p.cold_k_view().row(p.blocks(parent), j)[0]).collect();
+        let k = rng.normal_vec(4);
+        p.append(child, &k, &k).unwrap();
+        // Tail block (positions 4..) was copied for the child; full block
+        // stays shared.
+        assert_eq!(p.blocks(parent)[0], p.blocks(child)[0]);
+        assert_ne!(p.blocks(parent)[1], p.blocks(child)[1]);
+        assert_eq!(p.allocator().stats.cow_copies, 1);
+        let after: Vec<f32> = (0..6).map(|j| p.cold_k_view().row(p.blocks(parent), j)[0]).collect();
+        assert_eq!(before, after, "parent unchanged by child append");
+        // The child sees the shared prefix plus its own token.
+        assert_eq!(p.cold_k_view().row(p.blocks(child), 6), &k[..]);
+        assert_eq!(p.cold_k_view().row(p.blocks(child), 3), p.cold_k_view().row(p.blocks(parent), 3));
+        p.free_seq(parent);
+        p.free_seq(child);
+        assert_eq!(p.allocator().blocks_in_use(), 0);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn lru_budget_demotes_cold_pages() {
+        let mut p = TieredKvPool::new(TieredPoolCfg {
+            num_blocks: 8,
+            block_size: 2,
+            head_dim: 4,
+            d_hot: 2,
+            cold_resident_blocks: 2,
+        });
+        let s = p.new_seq();
+        let row = vec![1.0f32; 4];
+        for _ in 0..8 {
+            p.append(s, &row, &row).unwrap();
+        }
+        // 4 blocks written through a residency budget of 2.
+        assert!(p.tier_stats.demotions >= 2);
+        p.check_invariants();
+        // Gathering an old (demoted) slot faults its page back in.
+        let faults = p.tier_stats.gather_faults;
+        p.account_gather(s, &[0]);
+        assert_eq!(p.tier_stats.gather_faults, faults + 1);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn resident_bytes_shrink_with_sharing() {
+        let d = 8;
+        let mut p = pool(64, 4, d, 2);
+        let parent = p.new_seq();
+        let row = vec![0.5f32; d];
+        for _ in 0..32 {
+            p.append(parent, &row, &row).unwrap();
+        }
+        let solo = p.resident_kv_bytes();
+        for _ in 0..7 {
+            p.fork(parent);
+        }
+        // 8 sequences, one copy of the data.
+        assert_eq!(p.resident_kv_bytes(), solo);
+        assert!(p.flat_equivalent_bytes(32) >= 8 * solo / 2, "flat baseline scales with seqs");
+        p.check_invariants();
+    }
+
+    #[test]
+    fn exhaustion_surfaces_as_error() {
+        let mut p = pool(1, 2, 4, 2);
+        let s = p.new_seq();
+        let row = vec![0.0f32; 4];
+        p.append(s, &row, &row).unwrap();
+        p.append(s, &row, &row).unwrap();
+        assert!(p.append(s, &row, &row).is_err(), "third token needs a second block");
+    }
+}

@@ -24,6 +24,7 @@ pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod experiments;
+pub mod kvpool;
 pub mod linalg;
 pub mod model;
 pub mod runtime;

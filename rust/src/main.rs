@@ -13,7 +13,7 @@ use std::sync::mpsc::channel;
 
 use anyhow::{bail, Context, Result};
 
-use loki::coordinator::{Engine, EngineConfig, SchedulerPolicy};
+use loki::coordinator::{Engine, EngineConfig, PoolConfig, SchedulerPolicy};
 use loki::coordinator::request::GenRequest;
 use loki::coordinator::sampler::SampleCfg;
 use loki::data::workload::{Workload, WorkloadCfg};
@@ -40,9 +40,12 @@ fn main() -> Result<()> {
                  \x20 --kf 0.25 --df 0.25                    Loki budgets\n\
                  \x20 --pca wiki_pre                          calibration basis\n\
                  \x20 --scheduler prefill-first|decode-first\n\
+                 \x20 --block-size 16                         KV-pool page size (tokens)\n\
+                 \x20 --pool-blocks 0                         pool blocks (0 = worst-case)\n\
+                 \x20 --no-prefix-share                       disable prompt-block sharing\n\
                  generate: --prompt STR --max-tokens N --temperature T\n\
                  serve:    --listen 127.0.0.1:7077\n\
-                 bench-serve: --requests N --rate R"
+                 bench-serve: --requests N --rate R --shared-prefix BYTES"
             );
             Ok(())
         }
@@ -74,7 +77,11 @@ fn engine_config(args: &Args, svc: &RuntimeService) -> Result<EngineConfig> {
             _ => SchedulerPolicy::PrefillFirst,
         },
         max_queue: args.usize_or("max-queue", 256),
-        lane_reset_frac: 0.75,
+        pool: PoolConfig {
+            block_size: args.usize_or("block-size", 16),
+            num_blocks: args.usize_or("pool-blocks", 0),
+            prefix_sharing: !args.flag("no-prefix-share"),
+        },
         verbose: args.flag("verbose"),
     })
 }
@@ -177,6 +184,7 @@ fn bench_serve(args: &Args) -> Result<()> {
         &WorkloadCfg {
             n_requests: args.usize_or("requests", 24),
             rate: args.f64_or("rate", 0.0),
+            shared_prefix_len: args.usize_or("shared-prefix", 0),
             ..Default::default()
         },
         &suite.fillers,

@@ -1,0 +1,280 @@
+//! Property tests over the paged KV-pool subsystem (same hand-rolled
+//! deterministic-PRNG idiom as `substrate_properties.rs`: no proptest in
+//! the offline crate set; failures reproduce from the printed trial seed).
+//!
+//! Three invariant families:
+//! 1. allocator/table safety — random admit/fork/advance/free sequences
+//!    never double-free, leak, or underflow a shared block's refcount;
+//! 2. tiered-pool safety — random append/fork/free under an LRU budget
+//!    keeps residency accounting exact;
+//! 3. numerical equivalence — paged decode (through forked, copy-on-write
+//!    block tables) is **bit-identical** to the flat `InPlace` path for
+//!    every attention variant.
+
+use loki::attnsim::variants::{
+    decode_attend, decode_attend_paged, AttnVariant, H2oState, VariantParams,
+};
+use loki::attnsim::AttnShape;
+use loki::kvpool::{BlockAllocator, TableSet, TieredKvPool, TieredPoolCfg};
+use loki::util::rng::Xoshiro256;
+
+const TRIALS: usize = 30;
+
+/// Random admit / fork / advance / free traffic against the admission
+/// tables: the allocator must stay exact (no leak, no double free, no
+/// refcount underflow) and every failed admission must roll back fully.
+#[test]
+fn prop_allocator_traffic_never_leaks() {
+    for trial in 0..TRIALS {
+        let mut rng = Xoshiro256::new(9000 + trial as u64);
+        let bs = [2, 4, 8][rng.below(3)];
+        let num_blocks = rng.range(8, 48);
+        let mut alloc = BlockAllocator::new(num_blocks, bs);
+        let mut tables = TableSet::new(bs, rng.uniform() < 0.7);
+        let mut live: Vec<u64> = Vec::new();
+        for _ in 0..200 {
+            match rng.below(10) {
+                // Admit (common): small token alphabet so identical
+                // prefixes actually occur and sharing paths get exercised.
+                0..=4 => {
+                    let plen = rng.range(1, 3 * bs);
+                    let prompt: Vec<i32> = (0..plen).map(|_| rng.below(3) as i32).collect();
+                    let reserve = plen + rng.range(0, 2 * bs);
+                    let before = alloc.blocks_in_use();
+                    match tables.admit(&mut alloc, &prompt, reserve) {
+                        Ok(seq) => live.push(seq),
+                        Err(_) => {
+                            assert_eq!(
+                                alloc.blocks_in_use(),
+                                before,
+                                "trial {trial}: failed admit must roll back"
+                            );
+                        }
+                    }
+                }
+                5..=6 if !live.is_empty() => {
+                    let seq = live[rng.below(live.len())];
+                    if let Ok(child) = tables.fork(&mut alloc, seq) {
+                        live.push(child);
+                    }
+                }
+                7..=8 if !live.is_empty() => {
+                    let seq = live.swap_remove(rng.below(live.len()));
+                    tables.free(&mut alloc, seq);
+                }
+                _ if !live.is_empty() => {
+                    let seq = live[rng.below(live.len())];
+                    let t = tables.table(seq).unwrap();
+                    if t.len < t.blocks.len() * bs {
+                        tables.advance(seq);
+                    }
+                }
+                _ => {}
+            }
+            alloc.check_invariants();
+        }
+        // Drain: every block must come home.
+        for seq in live.drain(..) {
+            tables.free(&mut alloc, seq);
+        }
+        assert_eq!(alloc.blocks_in_use(), 0, "trial {trial}: blocks leaked");
+        assert_eq!(alloc.num_free(), num_blocks);
+        alloc.check_invariants();
+    }
+}
+
+/// Random append / fork / free traffic against the tiered data-plane
+/// pool, under a tight LRU budget: residency never exceeds the budget,
+/// tables never reference freed blocks, and full teardown returns every
+/// block.
+#[test]
+fn prop_tiered_pool_traffic_holds_invariants() {
+    for trial in 0..TRIALS {
+        let mut rng = Xoshiro256::new(11_000 + trial as u64);
+        let d = 8;
+        let cfg = TieredPoolCfg {
+            num_blocks: rng.range(8, 32),
+            block_size: [2, 4][rng.below(2)],
+            head_dim: d,
+            d_hot: rng.range(1, d + 1),
+            cold_resident_blocks: [0, 3][rng.below(2)],
+        };
+        let mut pool = TieredKvPool::new(cfg);
+        let mut live: Vec<usize> = vec![pool.new_seq()];
+        for _ in 0..150 {
+            match rng.below(8) {
+                0..=4 => {
+                    let seq = live[rng.below(live.len())];
+                    let row = rng.normal_vec(d);
+                    // Exhaustion is a legal outcome, not a panic.
+                    let _ = pool.append(seq, &row, &row);
+                }
+                5 => {
+                    let seq = live[rng.below(live.len())];
+                    live.push(pool.fork(seq));
+                }
+                6 if live.len() > 1 => {
+                    let seq = live.swap_remove(rng.below(live.len()));
+                    pool.free_seq(seq);
+                }
+                _ => {
+                    let seq = live[rng.below(live.len())];
+                    let len = pool.len(seq);
+                    if len > 0 {
+                        let slots: Vec<u32> =
+                            (0..rng.range(1, 5)).map(|_| rng.below(len) as u32).collect();
+                        pool.account_gather(seq, &slots);
+                    }
+                }
+            }
+            pool.check_invariants();
+        }
+        for seq in live.drain(..) {
+            pool.free_seq(seq);
+        }
+        assert_eq!(pool.allocator().blocks_in_use(), 0, "trial {trial}: blocks leaked");
+        pool.check_invariants();
+    }
+}
+
+/// The acceptance-criteria equivalence, through the sharing machinery:
+/// lanes are built in the pool by *forking* a common prefix and appending
+/// divergent tails (so the block tables share prefix blocks copy-on-write
+/// and tails were physically copied), while the flat caches hold the same
+/// logical rows contiguously. Every variant must produce bit-identical
+/// context vectors and selections (`==` on f32, no tolerance).
+#[test]
+fn prop_paged_decode_bit_identical_to_flat_under_cow_sharing() {
+    for trial in 0..10 {
+        let mut rng = Xoshiro256::new(13_000 + trial as u64);
+        let lanes = rng.range(1, 5);
+        let d = 16;
+        let d_hot = 8;
+        let prefix_len = rng.range(1, 40);
+        let tail_len = rng.range(1, 24);
+        let live = prefix_len + tail_len;
+        let shape = AttnShape { lanes, head_dim: d, max_len: live };
+        let stride = live * d;
+
+        // Shared prefix rows + per-lane tails.
+        let kp = rng.normal_vec(prefix_len * d);
+        let vp = rng.normal_vec(prefix_len * d);
+        let tails: Vec<(Vec<f32>, Vec<f32>)> = (0..lanes)
+            .map(|_| (rng.normal_vec(tail_len * d), rng.normal_vec(tail_len * d)))
+            .collect();
+
+        // Flat layout: [lanes, live, d].
+        let mut kc = vec![0.0f32; lanes * live * d];
+        let mut vc = vec![0.0f32; lanes * live * d];
+        for lane in 0..lanes {
+            kc[lane * stride..lane * stride + prefix_len * d].copy_from_slice(&kp);
+            vc[lane * stride..lane * stride + prefix_len * d].copy_from_slice(&vp);
+            kc[lane * stride + prefix_len * d..(lane + 1) * stride]
+                .copy_from_slice(&tails[lane].0);
+            vc[lane * stride + prefix_len * d..(lane + 1) * stride]
+                .copy_from_slice(&tails[lane].1);
+        }
+
+        // Paged layout: fork the prefix, append divergent tails (CoW).
+        let mut pool = TieredKvPool::new(TieredPoolCfg {
+            num_blocks: 4 * lanes * live, // generous
+            block_size: [3, 4, 8][rng.below(3)],
+            head_dim: d,
+            d_hot,
+            cold_resident_blocks: 0,
+        });
+        let base = pool.new_seq();
+        pool.load_prefix(base, &kp, &vp, prefix_len).unwrap();
+        let seqs: Vec<usize> = (0..lanes)
+            .map(|lane| {
+                let s = pool.fork(base);
+                for j in 0..tail_len {
+                    pool.append(
+                        s,
+                        &tails[lane].0[j * d..(j + 1) * d],
+                        &tails[lane].1[j * d..(j + 1) * d],
+                    )
+                    .unwrap();
+                }
+                s
+            })
+            .collect();
+        pool.free_seq(base);
+        pool.check_invariants();
+
+        let q = rng.normal_vec(lanes * d);
+        let k_sel = rng.range(1, live + 1);
+        let cases = [
+            (AttnVariant::Full, VariantParams::default()),
+            (AttnVariant::ExactTopK, VariantParams { k_sel, ..Default::default() }),
+            (AttnVariant::Loki, VariantParams { k_sel, d_sub: 4, ..Default::default() }),
+            (AttnVariant::SparQ, VariantParams { k_sel, d_sub: 6, ..Default::default() }),
+            (AttnVariant::StreamingLlm, VariantParams { k_sel, ..Default::default() }),
+            (AttnVariant::PcaAttn, VariantParams { d_sub: 8, ..Default::default() }),
+        ];
+        for (variant, p) in cases {
+            let a = decode_attend(&variant, shape, &q, &kc, &vc, stride, live, &p, None);
+            let b = decode_attend_paged(&variant, &mut pool, &seqs, &q, &p, None);
+            assert_eq!(
+                a.context, b.context,
+                "trial {trial} {variant:?}: paged context diverged from flat"
+            );
+            assert_eq!(a.selected, b.selected, "trial {trial} {variant:?}: selection diverged");
+        }
+        // H2O threads accumulator state; run both paths in lockstep twice.
+        let mut st_flat: H2oState = vec![vec![0.0; live]; lanes];
+        let mut st_paged: H2oState = vec![vec![0.0; live]; lanes];
+        let p = VariantParams { k_sel: k_sel.max(2), ..Default::default() };
+        for _ in 0..2 {
+            let a = decode_attend(
+                &AttnVariant::H2O, shape, &q, &kc, &vc, stride, live, &p, Some(&mut st_flat),
+            );
+            let b = decode_attend_paged(
+                &AttnVariant::H2O, &mut pool, &seqs, &q, &p, Some(&mut st_paged),
+            );
+            assert_eq!(a.context, b.context, "trial {trial} H2O: context diverged");
+            assert_eq!(st_flat, st_paged, "trial {trial} H2O: accumulators diverged");
+        }
+        for s in seqs {
+            pool.free_seq(s);
+        }
+        assert_eq!(pool.allocator().blocks_in_use(), 0, "trial {trial}: pool leaked");
+    }
+}
+
+/// Prefix sharing is real memory: admitting N identical prompts must cost
+/// the full-prefix blocks once plus one private tail block per sequence.
+#[test]
+fn prop_identical_prompts_cost_one_prefix() {
+    for trial in 0..TRIALS {
+        let mut rng = Xoshiro256::new(17_000 + trial as u64);
+        let bs = [4, 8][rng.below(2)];
+        let n_seqs = rng.range(2, 9);
+        let plen = rng.range(bs, 6 * bs);
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.below(256) as i32).collect();
+        let mut alloc = BlockAllocator::new(128, bs);
+        let mut tables = TableSet::new(bs, true);
+        let full = plen / bs;
+        let per_seq_blocks = plen.div_ceil(bs).max(1);
+        let mut seqs = Vec::new();
+        for _ in 0..n_seqs {
+            seqs.push(tables.admit(&mut alloc, &prompt, plen).unwrap());
+        }
+        let tail = per_seq_blocks - full;
+        assert_eq!(
+            alloc.blocks_in_use(),
+            full + n_seqs * tail,
+            "trial {trial}: {n_seqs} seqs × {plen} tokens (bs {bs})"
+        );
+        // Unshared baseline for the same traffic:
+        assert!(
+            tables.shared_hits as usize == (n_seqs - 1) * full,
+            "trial {trial}: every full prefix block after the first must be a shared hit"
+        );
+        for s in seqs {
+            tables.free(&mut alloc, s);
+        }
+        assert_eq!(alloc.blocks_in_use(), 0);
+        alloc.check_invariants();
+    }
+}
