@@ -86,6 +86,7 @@ fn main() -> anyhow::Result<()> {
             burst_p: args.f64_or("burst", 0.0),
             prompt_len: (48, 220),
             gen_len: (12, 48),
+            gen_len_dist: loki::data::workload::GenLenDist::Uniform,
             shared_prefix_len: args.usize_or("shared-prefix", 0),
             seed: 7,
         },

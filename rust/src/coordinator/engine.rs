@@ -9,15 +9,36 @@
 //! fork, which is exactly the deployment story the paper argues for.
 //!
 //! Memory: the engine mirrors the device-resident KV cache with a
-//! [`crate::kvpool`] block allocator + per-sequence block tables. A
-//! request is injected **only when the allocator can grant every block of
-//! its reservation** (prompt + decode budget); otherwise it waits in the
-//! queue — eviction backpressure at the scheduler, not silent lane resets.
+//! [`crate::kvpool`] block allocator + per-sequence block tables, under a
+//! configurable [`AdmissionPolicy`]:
+//!
+//! * [`AdmissionPolicy::ReserveFull`] — a request is injected **only when
+//!   the allocator can grant every block of its reservation** (prompt +
+//!   whole decode budget). Conservative: admitted work can never OOM
+//!   mid-flight, but long-tail `max_new_tokens` leaves most reserved
+//!   blocks unwritten and the gang under-occupied.
+//! * [`AdmissionPolicy::Speculative`] — admit on a partial reservation
+//!   (`reserve_frac` of the decode budget) and **grow** block tables on
+//!   demand at decode time, `headroom_blocks` at a time. When a grow
+//!   finds the pool empty, the engine **preempts** the youngest other
+//!   lane holding private blocks: its non-shared blocks return to the
+//!   allocator (shared prefixes survive via refcounts) and the request
+//!   is re-queued at the front with its generated tokens. Resumption
+//!   re-prefills `prompt ++ produced` — prefix recompute — and restores
+//!   the sampler state, so the resumed output is byte-identical to an
+//!   uncontended run. Loki makes this cheap: the hot low-rank K̂ tier is
+//!   a small fraction of the cache, and shared prompt blocks never left.
+//!
 //! Full prompt blocks are shared copy-on-write across requests with equal
 //! prefixes (content-addressed, vLLM-style), so gang-wide system prompts
 //! are paid for once in the pool accounting. This replaces the old
 //! `lane_reset_frac` hygiene hack; resets remain only for the physical
 //! edge case of a *padding* lane drifting into the cache bound.
+//!
+//! Execution goes through the [`DecodeBackend`] trait, so the whole state
+//! machine — admission, growth, preemption, resumption — runs unchanged
+//! over the PJRT runtime or the deterministic
+//! [`crate::runtime::SimRuntime`] test harness.
 //!
 //! Backpressure: submissions go through a bounded `SyncSender`; when the
 //! queue is full, callers block (admission control at the front door).
@@ -30,11 +51,18 @@ use anyhow::Result;
 
 use crate::kvpool::{BlockAllocator, SeqId, TableSet};
 use crate::model::ByteTokenizer;
-use crate::runtime::{DecodeRequest, DecodeVariant, RuntimeHandle, RuntimeService, StateId};
+use crate::runtime::{DecodeBackend, DecodeRequest, RuntimeService, StateId};
 
 use super::metrics::EngineMetrics;
 use super::request::{FinishReason, GenRequest, GenResult, QueuedRequest, RequestTiming};
 use super::sampler::Sampler;
+
+/// Token slots reserved beyond `prompt + decode budget`: one for the
+/// first token sampled from prefill logits (fed before any decode ran)
+/// and one guard slot at the stop-condition boundary. Changing this
+/// changes every admission decision — see the pinned regression test in
+/// `tests/engine_admission.rs`.
+pub const RESERVE_SLACK_TOKENS: usize = 2;
 
 /// Prefill-vs-decode priority (the classic serving trade-off: filling
 /// lanes fast boosts throughput; decoding first protects inter-token
@@ -45,6 +73,54 @@ pub enum SchedulerPolicy {
     PrefillFirst,
     /// At most one injection per decode iteration.
     DecodeFirst,
+}
+
+/// How much of a request's decode budget admission must secure up front
+/// (`repro serve --admission full|speculative --reserve-frac F
+/// --headroom-blocks N`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AdmissionPolicy {
+    /// Reserve `prompt + max_new + RESERVE_SLACK_TOKENS` slots at
+    /// admission; decode can never outgrow its grant.
+    ReserveFull,
+    /// Reserve `prompt + ceil(reserve_frac · max_new) + slack` and grow
+    /// on demand, preempting the youngest lane under pool pressure.
+    /// Caveat when the prefill bound is tighter than `max_len`: a lane
+    /// whose `prompt ++ produced` recompute no longer fits the prefill
+    /// bound cannot be preempted faithfully; under unresolvable pressure
+    /// it finishes early with `CacheFull` (delivering everything decoded
+    /// so far) rather than silently truncating its resume history.
+    Speculative {
+        /// Fraction of `max_new_tokens` secured at admission (clamped to
+        /// [0, 1]; 1.0 behaves like `ReserveFull` with a grow path).
+        reserve_frac: f64,
+        /// Blocks requested per grow — headroom beyond the immediately
+        /// needed block is opportunistic (partial grants are fine).
+        headroom_blocks: usize,
+    },
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        AdmissionPolicy::ReserveFull
+    }
+}
+
+/// Token slots a request reserves at admission under `policy`. The pure
+/// admission formula, exposed for tests and capacity planning.
+pub fn reserve_tokens(
+    policy: AdmissionPolicy,
+    prompt_len: usize,
+    max_new: usize,
+    max_len: usize,
+) -> usize {
+    let decode_budget = match policy {
+        AdmissionPolicy::ReserveFull => max_new,
+        AdmissionPolicy::Speculative { reserve_frac, .. } => {
+            (max_new as f64 * reserve_frac.clamp(0.0, 1.0)).ceil() as usize
+        }
+    };
+    (prompt_len + decode_budget + RESERVE_SLACK_TOKENS).min(max_len)
 }
 
 /// KV-pool sizing and sharing knobs (`repro serve --block-size
@@ -70,7 +146,7 @@ impl Default for PoolConfig {
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
     pub pca: String,
-    pub variant: DecodeVariant,
+    pub variant: crate::runtime::DecodeVariant,
     /// Desired gang width; clamped to the largest compiled bucket.
     pub gang_batch: usize,
     pub scheduler: SchedulerPolicy,
@@ -78,6 +154,8 @@ pub struct EngineConfig {
     pub max_queue: usize,
     /// KV-pool admission control (replaces the old `lane_reset_frac`).
     pub pool: PoolConfig,
+    /// Reservation policy: full-budget or speculative-with-preemption.
+    pub admission: AdmissionPolicy,
     pub verbose: bool,
 }
 
@@ -85,14 +163,33 @@ impl Default for EngineConfig {
     fn default() -> Self {
         Self {
             pca: "wiki_pre".to_string(),
-            variant: DecodeVariant::Full,
+            variant: crate::runtime::DecodeVariant::Full,
             gang_batch: usize::MAX,
             scheduler: SchedulerPolicy::PrefillFirst,
             max_queue: 256,
             pool: PoolConfig::default(),
+            admission: AdmissionPolicy::ReserveFull,
             verbose: false,
         }
     }
+}
+
+/// Runtime limits the scheduler needs, decoupled from `Manifest` so the
+/// engine can run over any [`DecodeBackend`] (notably the deterministic
+/// sim harness, which has no artifacts to read them from).
+#[derive(Clone, Copy, Debug)]
+pub struct EngineCaps {
+    /// Physical KV length bound per lane.
+    pub max_len: usize,
+    /// Largest prompt the prefill path accepts.
+    pub max_prompt: usize,
+    /// The *resolved* gang width the engine will run — callers pick a
+    /// width the backend can actually decode (`Engine::new` rounds the
+    /// requested width to a compiled batch bucket; re-clamping it here
+    /// would produce a non-bucket width the device graphs reject).
+    pub gang_batch: usize,
+    /// KV bytes one token occupies across all layers/heads (K + V, f32).
+    pub bytes_per_token: u64,
 }
 
 enum Lane {
@@ -102,25 +199,77 @@ enum Lane {
 
 struct BusyLane {
     req: QueuedRequest,
+    /// The (clamped) prompt actually prefilled — resumption re-prefills
+    /// exactly this plus `produced`, so it must be kept verbatim.
+    prompt: Vec<i32>,
     sampler: Sampler,
     produced: Vec<i32>,
     next_token: i32,
     ttft_s: Option<f64>,
+    /// Times this request was evicted mid-flight and re-queued.
+    preempted: u32,
+    /// Original admission tick — *kept* across preempt/resume cycles so
+    /// the youngest-victim policy measures true age; handing resumes a
+    /// fresh tick would make the most-recently-victimized lane the
+    /// preferred victim again (preemption thrash).
+    tick: u64,
+}
+
+/// Queue entries: fresh submissions and preempted requests awaiting
+/// re-admission (resumes carry their full generation state and re-enter
+/// at the queue front — FIFO age priority is what makes the preemption
+/// loop livelock-free).
+enum PendingItem {
+    Fresh(QueuedRequest),
+    Resume(Box<BusyLane>),
 }
 
 /// Outcome of a pool-admission attempt.
 enum Admit {
-    /// Blocks granted; the sequence owns its reservation.
-    Granted(SeqId),
+    /// Blocks granted; the sequence owns its reservation and the prefill
+    /// tokens were materialized (built lazily — Backpressure iterations
+    /// never clone token vectors).
+    Granted(SeqId, Vec<i32>),
     /// Not enough free blocks *right now* — wait for a completion.
     Backpressure,
     /// The request can never fit the configured pool; fail it fast.
     NeverFits,
 }
 
-/// The engine: owns the runtime service and the scheduling loop.
+/// Admission age of a lane (0 for free lanes — never a preemption
+/// candidate anyway).
+fn busy_tick(lane: &Lane) -> u64 {
+    match lane {
+        Lane::Busy(b) => b.tick,
+        Lane::Free => 0,
+    }
+}
+
+/// Evict a busy lane: free its pool blocks (shared prefixes survive via
+/// refcounts — `release` only returns a block at refcount zero) and
+/// requeue the request at the *front* of the queue with its accumulated
+/// state for byte-identical resumption by prefix recompute.
+fn preempt(
+    lane: usize,
+    lanes: &mut [Lane],
+    lane_seq: &mut [Option<SeqId>],
+    tables: &mut TableSet,
+    pool: &mut BlockAllocator,
+    pending: &mut VecDeque<PendingItem>,
+    metrics: &mut EngineMetrics,
+) {
+    let Some(seq) = lane_seq[lane].take() else { return };
+    tables.preempt_free(pool, seq);
+    metrics.preemptions += 1;
+    if let Lane::Busy(mut b) = std::mem::replace(&mut lanes[lane], Lane::Free) {
+        b.preempted += 1;
+        pending.push_front(PendingItem::Resume(b));
+    }
+}
+
+/// The engine: owns the decode backend and the scheduling loop.
 pub struct Engine {
-    handle: RuntimeHandle,
+    backend: Box<dyn DecodeBackend>,
     cfg: EngineConfig,
     max_len: usize,
     max_prompt: usize,
@@ -140,16 +289,29 @@ impl Engine {
     pub fn new(service: &RuntimeService, cfg: EngineConfig) -> Self {
         let man = &service.manifest;
         let largest = man.batch_buckets.iter().copied().max().unwrap_or(1);
-        let gang_batch = man.pick_batch_bucket(cfg.gang_batch.min(largest));
-        let max_prompt = man.prefill_buckets.iter().copied().max().unwrap_or(0);
         let m = &man.model;
-        let bytes_per_token = (m.n_layers * m.n_heads * m.head_dim * 2 * 4) as u64;
+        let caps = EngineCaps {
+            max_len: m.max_len,
+            max_prompt: man.prefill_buckets.iter().copied().max().unwrap_or(0),
+            gang_batch: man.pick_batch_bucket(cfg.gang_batch.min(largest)),
+            bytes_per_token: (m.n_layers * m.n_heads * m.head_dim * 2 * 4) as u64,
+        };
+        Self::with_backend(Box::new(service.handle()), caps, cfg)
+    }
+
+    /// Build an engine over an arbitrary backend — the deterministic
+    /// test-harness entrypoint (`SimRuntime` + explicit caps), also the
+    /// seam for future multi-backend serving. `caps.gang_batch` is used
+    /// as-is: it is the already-resolved width (a compiled bucket on the
+    /// PJRT path), not a request to be clamped further.
+    pub fn with_backend(backend: Box<dyn DecodeBackend>, caps: EngineCaps, cfg: EngineConfig) -> Self {
+        let gang_batch = caps.gang_batch.max(1);
         Self {
-            handle: service.handle(),
-            max_len: man.model.max_len,
-            max_prompt,
+            backend,
+            max_len: caps.max_len,
+            max_prompt: caps.max_prompt,
             gang_batch,
-            bytes_per_token,
+            bytes_per_token: caps.bytes_per_token,
             cfg,
             tokenizer: ByteTokenizer,
         }
@@ -159,9 +321,13 @@ impl Engine {
     /// Returns the fleet metrics.
     pub fn run(&self, rx: Receiver<GenRequest>) -> Result<EngineMetrics> {
         let mut metrics = EngineMetrics::default();
-        let mut pending: VecDeque<QueuedRequest> = VecDeque::new();
+        let mut pending: VecDeque<PendingItem> = VecDeque::new();
         let mut lanes: Vec<Lane> = (0..self.gang_batch).map(|_| Lane::Free).collect();
         let mut lane_len: Vec<usize> = vec![0; self.gang_batch];
+        // Admission age per lane (monotone tick): preemption always picks
+        // the *youngest* victim, protecting requests with sunk decode work.
+        let mut lane_tick: Vec<u64> = vec![0; self.gang_batch];
+        let mut admit_tick: u64 = 0;
         let mut gang: Option<StateId> = None;
         let mut rx_open = true;
 
@@ -186,7 +352,10 @@ impl Engine {
                 match rx.try_recv() {
                     Ok(req) => {
                         metrics.requests_in += 1;
-                        pending.push_back(QueuedRequest { req, submitted: Instant::now() });
+                        pending.push_back(PendingItem::Fresh(QueuedRequest {
+                            req,
+                            submitted: Instant::now(),
+                        }));
                     }
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => {
@@ -204,7 +373,10 @@ impl Engine {
                 match rx.recv() {
                     Ok(req) => {
                         metrics.requests_in += 1;
-                        pending.push_back(QueuedRequest { req, submitted: Instant::now() });
+                        pending.push_back(PendingItem::Fresh(QueuedRequest {
+                            req,
+                            submitted: Instant::now(),
+                        }));
                     }
                     Err(_) => break,
                 }
@@ -212,43 +384,43 @@ impl Engine {
 
             // ---- 2. bootstrap the gang with a batched prefill -------------
             if gang.is_none() && !pending.is_empty() {
-                let mut batch: Vec<(QueuedRequest, Vec<i32>, SeqId)> = Vec::new();
+                let mut batch: Vec<(PendingItem, Vec<i32>, SeqId)> = Vec::new();
                 while batch.len() < self.gang_batch {
                     let Some(front) = pending.front() else { break };
-                    let prompt = self.clamped_prompt(&front.req);
-                    match self.try_admit(&mut pool, &mut tables, &prompt, front.req.max_new_tokens)
-                    {
-                        Admit::Granted(seq) => {
-                            let q = pending.pop_front().unwrap();
-                            batch.push((q, prompt, seq));
+                    match self.try_admit(&mut pool, &mut tables, front) {
+                        Admit::Granted(seq, tokens) => {
+                            let item = pending.pop_front().unwrap();
+                            batch.push((item, tokens, seq));
                         }
                         Admit::Backpressure => {
                             metrics.admission_blocked += 1;
                             break;
                         }
                         Admit::NeverFits => {
-                            let q = pending.pop_front().unwrap();
-                            self.reject(q, &mut metrics);
+                            let item = pending.pop_front().unwrap();
+                            self.fail_item(item, &mut metrics);
                         }
                     }
                 }
                 if !batch.is_empty() {
                     let mut prompts: Vec<Vec<i32>> =
-                        batch.iter().map(|(_, p, _)| p.clone()).collect();
+                        batch.iter().map(|(_, t, _)| t.clone()).collect();
                     // Pad to the configured gang width so the persistent
                     // gang lands in the right batch bucket even under
                     // light load.
                     while prompts.len() < self.gang_batch {
                         prompts.push(vec![0]);
                     }
-                    let (id, logits) = self.handle.prefill(&self.cfg.pca, prompts)?;
+                    let (id, logits) = self.backend.prefill(&self.cfg.pca, prompts)?;
                     metrics.prefills += 1;
                     gang = Some(id);
                     let n = batch.len();
-                    for (lane, (q, prompt, seq)) in batch.into_iter().enumerate() {
-                        lane_len[lane] = prompt.len();
+                    for (lane, (item, tokens, seq)) in batch.into_iter().enumerate() {
+                        lane_len[lane] = tokens.len();
                         lane_seq[lane] = Some(seq);
-                        lanes[lane] = self.admit_lane(q, &logits[lane], &mut metrics);
+                        lanes[lane] =
+                            self.lane_for(item, tokens, &logits[lane], &mut admit_tick, &mut metrics);
+                        lane_tick[lane] = busy_tick(&lanes[lane]);
                     }
                     for lane in n..self.gang_batch {
                         lane_len[lane] = 1; // padding prompt [0]
@@ -274,29 +446,31 @@ impl Engine {
                     continue;
                 }
                 let front = pending.front().unwrap();
-                let prompt = self.clamped_prompt(&front.req);
-                match self.try_admit(&mut pool, &mut tables, &prompt, front.req.max_new_tokens) {
-                    Admit::Granted(seq) => {
-                        let q = pending.pop_front().unwrap();
+                match self.try_admit(&mut pool, &mut tables, front) {
+                    Admit::Granted(seq, tokens) => {
+                        let item = pending.pop_front().unwrap();
                         let (lane_id, logits) =
-                            self.handle.prefill(&self.cfg.pca, vec![prompt.clone()])?;
+                            self.backend.prefill(&self.cfg.pca, vec![tokens.clone()])?;
                         metrics.prefills += 1;
-                        self.handle.inject(gang_id, lane_id, lane)?;
+                        self.backend.inject(gang_id, lane_id, lane)?;
                         metrics.injections += 1;
-                        lane_len[lane] = prompt.len();
+                        lane_len[lane] = tokens.len();
                         lane_seq[lane] = Some(seq);
-                        lanes[lane] = self.admit_lane(q, &logits[0], &mut metrics);
+                        lanes[lane] =
+                            self.lane_for(item, tokens, &logits[0], &mut admit_tick, &mut metrics);
+                        lane_tick[lane] = busy_tick(&lanes[lane]);
                         injected += 1;
                     }
                     Admit::Backpressure => {
                         // Head-of-line request waits for blocks to free up;
-                        // completions (not resets) are what unblock it.
+                        // completions (and preempted-lane releases) are
+                        // what unblock it.
                         metrics.admission_blocked += 1;
                         break;
                     }
                     Admit::NeverFits => {
-                        let q = pending.pop_front().unwrap();
-                        self.reject(q, &mut metrics);
+                        let item = pending.pop_front().unwrap();
+                        self.fail_item(item, &mut metrics);
                     }
                 }
             }
@@ -312,8 +486,8 @@ impl Engine {
                     continue;
                 }
                 if lane_len[lane] + 1 >= self.max_len {
-                    let (blank, _) = self.handle.prefill(&self.cfg.pca, vec![vec![0]])?;
-                    self.handle.inject(gang_id, blank, lane)?;
+                    let (blank, _) = self.backend.prefill(&self.cfg.pca, vec![vec![0]])?;
+                    self.backend.inject(gang_id, blank, lane)?;
                     lane_len[lane] = 1;
                     metrics.lane_resets += 1;
                 }
@@ -331,7 +505,7 @@ impl Engine {
                 })
                 .collect();
             let t0 = Instant::now();
-            let logits = self.handle.decode(DecodeRequest {
+            let logits = self.backend.decode(DecodeRequest {
                 state: gang_id,
                 variant: self.cfg.variant.clone(),
                 tokens,
@@ -341,14 +515,32 @@ impl Engine {
             for len in lane_len.iter_mut() {
                 *len += 1;
             }
-            // Mirror the device-side append in the pool tables (stays
-            // within the admission reservation by construction).
+            // Mirror the device-side append in the pool tables. Under
+            // `ReserveFull` the reservation covers this by construction;
+            // under `Speculative` a lane at the edge of its grant grows
+            // first — possibly preempting the youngest other lane (whose
+            // just-decoded token is then recomputed on resume, before its
+            // sampler ever advances, keeping resumption byte-identical).
             for lane in 0..self.gang_batch {
-                if let (Lane::Busy(_), Some(seq)) = (&lanes[lane], lane_seq[lane]) {
+                let Some(seq) = lane_seq[lane] else { continue };
+                if tables.needs_grow(seq) {
+                    self.grow_or_preempt(
+                        lane,
+                        seq,
+                        &mut pool,
+                        &mut tables,
+                        &mut lanes,
+                        &mut lane_seq,
+                        &lane_tick,
+                        &mut pending,
+                        &mut metrics,
+                    );
+                }
+                if lane_seq[lane].is_some() {
                     tables.advance(seq);
                 }
             }
-            metrics.note_pool(pool.blocks_in_use(), tables.shared_hits);
+            metrics.note_pool(pool.blocks_in_use(), tables.written_blocks(), tables.shared_hits);
 
             // ---- 6. per-lane sampling + completion ------------------------
             for lane in 0..self.gang_batch {
@@ -395,36 +587,232 @@ impl Engine {
             }
         }
         if let Some(g) = gang {
-            self.handle.free(g);
+            self.backend.free(g);
         }
-        metrics.note_pool(pool.blocks_in_use(), tables.shared_hits);
+        metrics.note_pool(pool.blocks_in_use(), tables.written_blocks(), tables.shared_hits);
         Ok(metrics)
     }
 
-    /// Pool admission: grant the full reservation (prompt + generation
-    /// budget, rounded up to blocks) or don't touch the pool at all.
+    /// Prefill length + remaining decode budget for a queue item —
+    /// computed without materializing any token vector, so the scheduler
+    /// can evaluate (and re-evaluate, under backpressure) the head of
+    /// the queue every iteration for free.
+    fn plan_dims(&self, item: &PendingItem) -> (usize, usize) {
+        match item {
+            PendingItem::Fresh(q) => {
+                (q.req.prompt.len().min(self.prompt_budget(&q.req)), q.req.max_new_tokens)
+            }
+            PendingItem::Resume(b) => (
+                (b.prompt.len() + b.produced.len()).min(self.max_prompt),
+                b.req.req.max_new_tokens.saturating_sub(b.produced.len()),
+            ),
+        }
+    }
+
+    /// Materialize the prefill tokens for an item being admitted. Fresh
+    /// requests prefill their (clamped) prompt; resumed requests prefill
+    /// `prompt ++ produced` — the prefix recompute that restores their
+    /// KV state exactly. Must agree with [`Engine::plan_dims`] on length.
+    fn plan_tokens(&self, item: &PendingItem) -> Vec<i32> {
+        match item {
+            PendingItem::Fresh(q) => self.clamped_prompt(&q.req),
+            PendingItem::Resume(b) => {
+                let mut toks = b.prompt.clone();
+                toks.extend_from_slice(&b.produced);
+                // Defensive clamp for real prefill buckets — unreachable
+                // in practice because victim selection refuses to preempt
+                // a lane whose recompute would not fit `max_prompt`
+                // (truncation would break byte-identity).
+                if toks.len() > self.max_prompt {
+                    let cut = toks.len() - self.max_prompt;
+                    toks.drain(..cut);
+                }
+                toks
+            }
+        }
+    }
+
+    /// Pool admission: grant the policy's reservation or don't touch the
+    /// pool at all.
     fn try_admit(
         &self,
         pool: &mut BlockAllocator,
         tables: &mut TableSet,
-        prompt: &[i32],
-        max_new: usize,
+        item: &PendingItem,
     ) -> Admit {
-        let reserve = (prompt.len() + max_new + 2).min(self.max_len);
-        match tables.admit(pool, prompt, reserve) {
-            Ok(seq) => Admit::Granted(seq),
-            Err(_) => {
-                // Shared prefix blocks still occupy pool capacity (they
-                // are live allocations, merely refcounted), so a grant
-                // always needs the request's *total* block count to fit
-                // the pool. More than that can never be satisfied by
-                // waiting; anything else is unblocked by completions.
-                if pool.blocks_for(reserve) > pool.num_blocks() {
-                    Admit::NeverFits
-                } else {
-                    Admit::Backpressure
+        let (len, remaining) = self.plan_dims(item);
+        // Shared prefix blocks still occupy pool capacity (they are live
+        // allocations, merely refcounted), so a request whose *worst
+        // case* exceeds the whole pool can never be satisfied by waiting
+        // — or by preempting. The filter is identical for both policies,
+        // so `Speculative` never admits work `ReserveFull` would reject
+        // outright (this is what keeps their completed outputs aligned).
+        let full_need = reserve_tokens(AdmissionPolicy::ReserveFull, len, remaining, self.max_len);
+        if pool.blocks_for(full_need) > pool.num_blocks() {
+            return Admit::NeverFits;
+        }
+        let reserve = reserve_tokens(self.cfg.admission, len, remaining, self.max_len);
+        // Cheap lower bound before cloning tokens: even a fully-shared
+        // prompt leaves `total - full_prompt_blocks` fresh allocations
+        // (tails are always private), so fewer free blocks than that is
+        // a guaranteed Err — the common backpressure iteration costs no
+        // allocation at all.
+        let total_blocks = pool.blocks_for(reserve.max(len).max(1));
+        let shareable = if tables.sharing_enabled() { len / tables.block_size() } else { 0 };
+        if pool.num_free() < total_blocks.saturating_sub(shareable) {
+            return Admit::Backpressure;
+        }
+        let tokens = self.plan_tokens(item);
+        match tables.admit(pool, &tokens, reserve) {
+            Ok(seq) => Admit::Granted(seq, tokens),
+            Err(_) => Admit::Backpressure,
+        }
+    }
+
+    /// Prompt-token budget for a fresh request (prefill bucket bound and
+    /// room for the decode budget within `max_len`).
+    fn prompt_budget(&self, req: &GenRequest) -> usize {
+        self.max_prompt
+            .min(self.max_len.saturating_sub(req.max_new_tokens + RESERVE_SLACK_TOKENS))
+            .max(1)
+    }
+
+    /// Grow `seq`'s block table so its next advance fits, preempting the
+    /// youngest other lane when the pool has nothing free. Growth is
+    /// capped at the lane's full-reservation block count, so speculative
+    /// lanes never hold more than `ReserveFull` would have granted them —
+    /// which also guarantees a lane running *alone* always grows (its
+    /// worst case passed the admission NeverFits filter).
+    #[allow(clippy::too_many_arguments)]
+    fn grow_or_preempt(
+        &self,
+        lane: usize,
+        seq: SeqId,
+        pool: &mut BlockAllocator,
+        tables: &mut TableSet,
+        lanes: &mut [Lane],
+        lane_seq: &mut [Option<SeqId>],
+        lane_tick: &[u64],
+        pending: &mut VecDeque<PendingItem>,
+        metrics: &mut EngineMetrics,
+    ) {
+        let (cap_blocks, headroom) = {
+            let Lane::Busy(b) = &lanes[lane] else { return };
+            // Same formula as the admission NeverFits filter — the two
+            // must agree exactly or a lane could grow past what the
+            // filter certified as fitting the pool.
+            let full = reserve_tokens(
+                AdmissionPolicy::ReserveFull,
+                b.prompt.len(),
+                b.req.req.max_new_tokens,
+                self.max_len,
+            );
+            let headroom = match self.cfg.admission {
+                AdmissionPolicy::Speculative { headroom_blocks, .. } => headroom_blocks.max(1),
+                // Unreachable in practice — full reservations cover the
+                // decode budget — but single-block growth keeps the
+                // fallback local instead of panicking in `advance`.
+                AdmissionPolicy::ReserveFull => 1,
+            };
+            (pool.blocks_for(full), headroom)
+        };
+        loop {
+            let have = tables.table(seq).map_or(0, |t| t.blocks.len());
+            let want = headroom.min(cap_blocks.saturating_sub(have)).max(1);
+            match tables.grow(pool, seq, want) {
+                Ok(n) => {
+                    metrics.grow_events += 1;
+                    metrics.grown_blocks += n as u64;
+                    return;
+                }
+                Err(_) => {
+                    metrics.grow_stalls += 1;
+                    // Victim: the youngest other busy lane that (a) would
+                    // actually return blocks — a lane whose blocks are
+                    // all shared frees nothing — and (b) can be resumed
+                    // faithfully: its `prompt ++ produced` recompute must
+                    // fit the prefill bound, or resumption would have to
+                    // truncate history and silently diverge.
+                    let victim = (0..lanes.len())
+                        .filter(|&l| l != lane && self.resumable(&lanes[l]))
+                        .filter(|&l| {
+                            lane_seq[l].is_some_and(|s| tables.private_blocks(pool, s) > 0)
+                        })
+                        .max_by_key(|&l| lane_tick[l]);
+                    match victim {
+                        Some(v) => {
+                            preempt(v, lanes, lane_seq, tables, pool, pending, metrics);
+                            if self.cfg.verbose {
+                                eprintln!(
+                                    "[engine] preempted lane {v} to grow lane {lane} \
+                                     ({} free blocks after release)",
+                                    pool.num_free()
+                                );
+                            }
+                        }
+                        None => {
+                            let others_busy = (0..lanes.len())
+                                .any(|l| l != lane && matches!(lanes[l], Lane::Busy(_)));
+                            if others_busy && self.resumable(&lanes[lane]) {
+                                // Nothing preemptible frees blocks: yield
+                                // our own lane and wait at the queue
+                                // front for completions to free capacity.
+                                preempt(lane, lanes, lane_seq, tables, pool, pending, metrics);
+                            } else {
+                                // Alone and still starved (footprint
+                                // exceeds the pool — admission's
+                                // NeverFits filter makes that
+                                // unreachable) or past the faithful-
+                                // resume bound (only possible when
+                                // max_prompt < max_len): finish
+                                // explicitly instead of spinning or
+                                // silently diverging. The token fed to
+                                // this iteration's decode is real output
+                                // (it was stop-checked when sampled), so
+                                // deliver it exactly as the step-6
+                                // cache-bound path would have.
+                                if let Some(s) = lane_seq[lane].take() {
+                                    tables.free(pool, s);
+                                }
+                                if let Lane::Busy(mut b) =
+                                    std::mem::replace(&mut lanes[lane], Lane::Free)
+                                {
+                                    b.produced.push(b.next_token);
+                                    let reason =
+                                        if b.produced.len() >= b.req.req.max_new_tokens {
+                                            FinishReason::MaxTokens
+                                        } else {
+                                            FinishReason::CacheFull
+                                        };
+                                    self.complete(*b, reason, metrics);
+                                }
+                            }
+                            return;
+                        }
+                    }
                 }
             }
+        }
+    }
+
+    /// A lane is a legal preemption victim only if its resume recompute
+    /// (`prompt ++ produced`) fits the prefill bound — otherwise
+    /// `plan_tokens` would have to truncate history and the resumed
+    /// output would silently diverge from the uncontended run.
+    fn resumable(&self, lane: &Lane) -> bool {
+        match lane {
+            Lane::Busy(b) => b.prompt.len() + b.produced.len() <= self.max_prompt,
+            Lane::Free => false,
+        }
+    }
+
+    /// Fail the queue head when it can never be admitted: fresh requests
+    /// are rejected outright; resumed requests deliver the tokens they
+    /// already produced (their footprint grew past the pool mid-flight).
+    fn fail_item(&self, item: PendingItem, metrics: &mut EngineMetrics) {
+        match item {
+            PendingItem::Fresh(q) => self.reject(q, metrics),
+            PendingItem::Resume(b) => self.complete(*b, FinishReason::CacheFull, metrics),
         }
     }
 
@@ -447,10 +835,7 @@ impl Engine {
     }
 
     fn clamped_prompt(&self, req: &GenRequest) -> Vec<i32> {
-        let budget = self
-            .max_prompt
-            .min(self.max_len.saturating_sub(req.max_new_tokens + 2))
-            .max(1);
+        let budget = self.prompt_budget(req);
         if req.prompt.len() <= budget {
             req.prompt.clone()
         } else {
@@ -460,9 +845,53 @@ impl Engine {
         }
     }
 
+    /// Build the busy-lane record for an admitted queue item. Fresh
+    /// requests sample their first token from the prefill logits; resumed
+    /// requests already hold their next token and sampler state — the
+    /// prefill only reconstructed their KV prefix, so its logits are
+    /// deliberately unused (consuming them would double-advance the
+    /// sampler and break byte-identity).
+    fn lane_for(
+        &self,
+        item: PendingItem,
+        tokens: Vec<i32>,
+        logits: &[f32],
+        admit_tick: &mut u64,
+        metrics: &mut EngineMetrics,
+    ) -> Lane {
+        match item {
+            PendingItem::Fresh(q) => {
+                *admit_tick += 1;
+                self.admit_lane(q, tokens, logits, *admit_tick, metrics)
+            }
+            // Resumes keep their original admission tick: age is measured
+            // from first admission, so a victim does not become the
+            // youngest (i.e. next) victim merely by having been evicted.
+            PendingItem::Resume(b) => {
+                metrics.resumes += 1;
+                metrics.recomputed_tokens += tokens.len() as u64;
+                if self.cfg.verbose {
+                    eprintln!(
+                        "[engine] resumed #{} at {} produced tokens",
+                        b.req.req.id,
+                        b.produced.len()
+                    );
+                }
+                Lane::Busy(b)
+            }
+        }
+    }
+
     /// Sample the first generated token from prefill logits and build the
     /// busy-lane record.
-    fn admit_lane(&self, q: QueuedRequest, logits: &[f32], metrics: &mut EngineMetrics) -> Lane {
+    fn admit_lane(
+        &self,
+        q: QueuedRequest,
+        prompt: Vec<i32>,
+        logits: &[f32],
+        tick: u64,
+        metrics: &mut EngineMetrics,
+    ) -> Lane {
         metrics
             .queue_wait
             .push(q.submitted.elapsed().as_secs_f64());
@@ -470,10 +899,13 @@ impl Engine {
         let first = sampler.sample(logits) as i32;
         Lane::Busy(Box::new(BusyLane {
             req: q,
+            prompt,
             sampler,
             produced: Vec::new(),
             next_token: first,
             ttft_s: None,
+            preempted: 0,
+            tick,
         }))
     }
 
@@ -486,6 +918,7 @@ impl Engine {
             ttft_s: b.ttft_s.unwrap_or(total),
             total_s: total,
             decode_steps: b.produced.len(),
+            preemptions: b.preempted as usize,
         };
         let text = self.tokenizer.decode(&b.produced);
         let result = GenResult {
@@ -497,11 +930,12 @@ impl Engine {
         };
         if self.cfg.verbose {
             eprintln!(
-                "[engine] done #{} ({} tok, {:?}, {:.3}s)",
+                "[engine] done #{} ({} tok, {:?}, {:.3}s, {} preemptions)",
                 result.id,
                 result.tokens.len(),
                 reason,
-                result.timing.total_s
+                result.timing.total_s,
+                result.timing.preemptions
             );
         }
         let _ = b.req.req.reply.send(result);
@@ -524,5 +958,45 @@ mod tests {
         // Worst case: every lane full — admission can then never reject a
         // request the flat cache would have accepted.
         assert_eq!(auto, 8 * 16);
+    }
+
+    #[test]
+    fn default_admission_is_reserve_full() {
+        assert_eq!(EngineConfig::default().admission, AdmissionPolicy::ReserveFull);
+    }
+
+    #[test]
+    fn speculative_reserve_interpolates_between_prompt_and_full() {
+        let (p, m, cap) = (40usize, 100usize, 4096usize);
+        let full = reserve_tokens(AdmissionPolicy::ReserveFull, p, m, cap);
+        let none = reserve_tokens(
+            AdmissionPolicy::Speculative { reserve_frac: 0.0, headroom_blocks: 1 },
+            p,
+            m,
+            cap,
+        );
+        let all = reserve_tokens(
+            AdmissionPolicy::Speculative { reserve_frac: 1.0, headroom_blocks: 1 },
+            p,
+            m,
+            cap,
+        );
+        assert_eq!(none, p + RESERVE_SLACK_TOKENS);
+        assert_eq!(all, full);
+        let half = reserve_tokens(
+            AdmissionPolicy::Speculative { reserve_frac: 0.5, headroom_blocks: 1 },
+            p,
+            m,
+            cap,
+        );
+        assert!(none < half && half < full);
+        // Out-of-range fractions clamp instead of over/under-reserving.
+        let wild = reserve_tokens(
+            AdmissionPolicy::Speculative { reserve_frac: 7.5, headroom_blocks: 1 },
+            p,
+            m,
+            cap,
+        );
+        assert_eq!(wild, full);
     }
 }

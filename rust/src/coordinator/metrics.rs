@@ -24,6 +24,22 @@ pub struct EngineMetrics {
     /// Scheduler iterations where the head-of-line request had to wait
     /// for pool blocks (eviction backpressure, the old lane-reset path).
     pub admission_blocked: u64,
+    /// Mid-flight evictions under speculative admission: a lane's private
+    /// blocks were released and its request re-queued for resumption.
+    pub preemptions: u64,
+    /// Preempted requests re-admitted (prefix recompute + sampler-state
+    /// restore). `preemptions - resumes` requests are still queued or
+    /// were finished as `CacheFull` after shrinking pools.
+    pub resumes: u64,
+    /// Tokens re-prefilled by resume recomputes (the preemption tax:
+    /// prompt + produced tokens per resume).
+    pub recomputed_tokens: u64,
+    /// Successful speculative block-table growths and blocks they added.
+    pub grow_events: u64,
+    pub grown_blocks: u64,
+    /// Growth attempts that found the pool empty (each triggers a
+    /// preemption round or a yield).
+    pub grow_stalls: u64,
     /// KV-pool sizing: total blocks and the KV bytes one block mirrors.
     pub pool_blocks_total: u64,
     pub pool_block_bytes: u64,
@@ -34,6 +50,11 @@ pub struct EngineMetrics {
     /// What a flat `[gang, max_len]` K+V cache holds for the same gang —
     /// the baseline the paged pool is measured against.
     pub kv_flat_bytes: u64,
+    /// Per-iteration *written*-block fraction of the pool (blocks holding
+    /// real KV over total blocks; reserved-but-unwritten blocks do not
+    /// count). The utilization number speculative admission exists to
+    /// raise — its mean is the e2e acceptance metric vs `ReserveFull`.
+    pub pool_occupancy: Summary,
     /// Seconds.
     pub ttft: Summary,
     pub e2e_latency: Summary,
@@ -54,11 +75,18 @@ impl Default for EngineMetrics {
             injections: 0,
             lane_resets: 0,
             admission_blocked: 0,
+            preemptions: 0,
+            resumes: 0,
+            recomputed_tokens: 0,
+            grow_events: 0,
+            grown_blocks: 0,
+            grow_stalls: 0,
             pool_blocks_total: 0,
             pool_block_bytes: 0,
             pool_blocks_peak: 0,
             prefix_shared_blocks: 0,
             kv_flat_bytes: 0,
+            pool_occupancy: Summary::new(),
             ttft: Summary::new(),
             e2e_latency: Summary::new(),
             queue_wait: Summary::new(),
@@ -82,10 +110,26 @@ impl EngineMetrics {
         }
     }
 
-    /// Record a scheduler-loop snapshot of the pool.
-    pub fn note_pool(&mut self, blocks_in_use: usize, shared_hits: u64) {
+    /// Record a scheduler-loop snapshot of the pool: granted blocks (for
+    /// the peak), *written* blocks (for the occupancy series) and the
+    /// running prefix-sharing tally.
+    pub fn note_pool(&mut self, blocks_in_use: usize, written_blocks: usize, shared_hits: u64) {
         self.pool_blocks_peak = self.pool_blocks_peak.max(blocks_in_use as u64);
         self.prefix_shared_blocks = shared_hits;
+        if self.pool_blocks_total > 0 {
+            self.pool_occupancy
+                .push(written_blocks as f64 / self.pool_blocks_total as f64);
+        }
+    }
+
+    /// Mean written-block pool occupancy over the run (0.0 when nothing
+    /// was recorded).
+    pub fn mean_pool_occupancy(&self) -> f64 {
+        if self.pool_occupancy.count() == 0 {
+            0.0
+        } else {
+            self.pool_occupancy.mean()
+        }
     }
 
     /// Peak KV bytes the paged pool actually had granted.
@@ -110,6 +154,8 @@ impl EngineMetrics {
              prefills: {} | decode steps: {} | injections: {} | lane resets: {}\n\
              kv pool:   peak {}/{} blocks ({:.1} MB resident vs {:.1} MB flat, {:.2}x) | \
              shared {} | blocked {}\n\
+             admission: mean occupancy {:.1}% | preempts {} / resumes {} \
+             ({} tok recomputed) | grows {} (+{} blocks, {} stalls)\n\
              ttft_s:    {}\n\
              e2e_s:     {}\n\
              queue_s:   {}\n\
@@ -130,6 +176,13 @@ impl EngineMetrics {
             self.kv_savings_vs_flat(),
             self.prefix_shared_blocks,
             self.admission_blocked,
+            self.mean_pool_occupancy() * 100.0,
+            self.preemptions,
+            self.resumes,
+            self.recomputed_tokens,
+            self.grow_events,
+            self.grown_blocks,
+            self.grow_stalls,
             self.ttft.display(),
             self.e2e_latency.display(),
             self.queue_wait.display(),
@@ -157,12 +210,24 @@ mod tests {
         m.pool_blocks_total = 64;
         m.pool_block_bytes = 1024;
         m.kv_flat_bytes = 64 * 1024;
-        m.note_pool(10, 3);
-        m.note_pool(7, 5);
+        m.note_pool(10, 8, 3);
+        m.note_pool(7, 4, 5);
         assert_eq!(m.pool_blocks_peak, 10, "peak keeps the maximum");
         assert_eq!(m.prefix_shared_blocks, 5, "sharing tracks the latest");
         assert_eq!(m.kv_resident_bytes_peak(), 10 * 1024);
         assert!((m.kv_savings_vs_flat() - 6.4).abs() < 1e-9);
+        // Occupancy averages the *written* fraction: (8/64 + 4/64) / 2.
+        assert!((m.mean_pool_occupancy() - 6.0 / 64.0).abs() < 1e-12);
         assert!(m.report().contains("peak 10/64 blocks"));
+    }
+
+    #[test]
+    fn occupancy_is_zero_without_snapshots() {
+        let m = EngineMetrics::default();
+        assert_eq!(m.mean_pool_occupancy(), 0.0);
+        let mut m = EngineMetrics::default();
+        // No pool configured (total 0): snapshots are ignored, not NaN.
+        m.note_pool(3, 3, 0);
+        assert_eq!(m.mean_pool_occupancy(), 0.0);
     }
 }

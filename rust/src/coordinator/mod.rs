@@ -10,9 +10,13 @@
 //!   queued request as a batch-1 state and *injecting* it between decode
 //!   iterations (iteration-level scheduling à la Orca). Prefill-vs-decode
 //!   priority is a scheduler knob. KV memory is governed by a
-//!   [`crate::kvpool`] block allocator: requests are admitted only when
-//!   their block reservation can be granted (backpressure, not resets),
-//!   with full prompt blocks prefix-shared across identical prefixes.
+//!   [`crate::kvpool`] block allocator under a configurable
+//!   [`engine::AdmissionPolicy`]: `ReserveFull` admits only fully-backed
+//!   reservations (backpressure, not resets); `Speculative` admits on a
+//!   partial reservation, grows block tables at decode time and preempts
+//!   the youngest lane under pressure, resuming it byte-identically via
+//!   prefix recompute. Full prompt blocks are prefix-shared across
+//!   identical prefixes either way.
 //! * [`metrics`] — fleet counters + latency summaries.
 //!
 //! Loki enters as the engine's `DecodeVariant`: the scheduler chooses the
@@ -24,7 +28,10 @@ pub mod metrics;
 pub mod request;
 pub mod sampler;
 
-pub use engine::{Engine, EngineConfig, PoolConfig, SchedulerPolicy};
+pub use engine::{
+    reserve_tokens, AdmissionPolicy, Engine, EngineCaps, EngineConfig, PoolConfig,
+    SchedulerPolicy, RESERVE_SLACK_TOKENS,
+};
 pub use metrics::EngineMetrics;
 pub use request::{GenRequest, GenResult, RequestTiming};
 pub use sampler::{SampleCfg, Sampler};

@@ -26,6 +26,9 @@ pub struct RequestTiming {
     pub ttft_s: f64,
     pub total_s: f64,
     pub decode_steps: usize,
+    /// Times this request was preempted mid-flight and resumed by prefix
+    /// recompute (0 under `AdmissionPolicy::ReserveFull`).
+    pub preemptions: usize,
 }
 
 #[derive(Clone, Debug)]

@@ -4,6 +4,19 @@
 
 use crate::util::rng::Xoshiro256;
 
+/// Distribution of per-request `max_new_tokens`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GenLenDist {
+    /// Uniform over the configured `gen_len` range.
+    Uniform,
+    /// Exponential tail with the given mean, truncated to `[1, cap]`:
+    /// most requests ask for a short decode, a long tail runs far. This
+    /// is the regime where full-budget KV reservation wastes the pool —
+    /// the mean footprint is `mean` tokens but admission must price every
+    /// request at `cap`-ish — and where speculative admission pays off.
+    LongTail { mean: f64, cap: usize },
+}
+
 #[derive(Clone, Debug)]
 pub struct WorkloadCfg {
     pub n_requests: usize,
@@ -14,6 +27,9 @@ pub struct WorkloadCfg {
     pub burst_p: f64,
     pub prompt_len: (usize, usize),
     pub gen_len: (usize, usize),
+    /// How `max_new_tokens` is drawn; `Uniform` uses `gen_len`,
+    /// `LongTail` ignores it.
+    pub gen_len_dist: GenLenDist,
     /// Shared system-prompt bytes prepended *identically* to every
     /// request (multi-tenant serving: one app prompt, many user turns).
     /// The byte tokenizer maps equal text to equal tokens, so this is
@@ -31,6 +47,7 @@ impl Default for WorkloadCfg {
             burst_p: 0.0,
             prompt_len: (32, 200),
             gen_len: (16, 64),
+            gen_len_dist: GenLenDist::Uniform,
             shared_prefix_len: 0,
             seed: 0,
         }
@@ -69,11 +86,18 @@ impl Workload {
             let plen = rng.range(cfg.prompt_len.0, cfg.prompt_len.1 + 1);
             let mut prompt = shared.clone();
             prompt.push_str(&Self::filler_text(&mut rng, plen, fillers));
-            items.push(TraceItem {
-                arrival_s: t,
-                prompt,
-                max_new_tokens: rng.range(cfg.gen_len.0, cfg.gen_len.1 + 1),
-            });
+            let max_new_tokens = match cfg.gen_len_dist {
+                GenLenDist::Uniform => rng.range(cfg.gen_len.0, cfg.gen_len.1 + 1),
+                GenLenDist::LongTail { mean, cap } => {
+                    // Exponential with the configured mean (rate 1/mean),
+                    // rounded and truncated. With cap ≫ mean the
+                    // truncation bias is negligible — pinned by the
+                    // `long_tail_*` tests below.
+                    let draw = rng.exponential(1.0 / mean.max(1e-9));
+                    (draw.round() as usize).clamp(1, cap.max(1))
+                }
+            };
+            items.push(TraceItem { arrival_s: t, prompt, max_new_tokens });
         }
         Self { items }
     }
@@ -145,6 +169,61 @@ mod tests {
         let distinct: std::collections::HashSet<&str> =
             w.items.iter().map(|i| &i.prompt[64..]).collect();
         assert!(distinct.len() > 1, "user suffixes should differ");
+    }
+
+    #[test]
+    fn long_tail_is_deterministic_for_a_fixed_seed() {
+        let cfg = WorkloadCfg {
+            n_requests: 64,
+            gen_len_dist: GenLenDist::LongTail { mean: 24.0, cap: 256 },
+            seed: 41,
+            ..Default::default()
+        };
+        let a = Workload::generate(&cfg, &fillers());
+        let b = Workload::generate(&cfg, &fillers());
+        let lens_a: Vec<usize> = a.items.iter().map(|i| i.max_new_tokens).collect();
+        let lens_b: Vec<usize> = b.items.iter().map(|i| i.max_new_tokens).collect();
+        assert_eq!(lens_a, lens_b, "same seed must reproduce the same tail draws");
+        for (x, y) in a.items.iter().zip(&b.items) {
+            assert_eq!(x.prompt, y.prompt);
+        }
+        // A different seed draws a different trace.
+        let c = Workload::generate(&WorkloadCfg { seed: 42, ..cfg }, &fillers());
+        let lens_c: Vec<usize> = c.items.iter().map(|i| i.max_new_tokens).collect();
+        assert_ne!(lens_a, lens_c);
+    }
+
+    #[test]
+    fn long_tail_mean_and_bounds_hold() {
+        let mean = 32.0;
+        let cap = 512; // cap ≫ mean: truncation bias ≪ the tolerance
+        let cfg = WorkloadCfg {
+            n_requests: 4000,
+            prompt_len: (4, 8),
+            gen_len_dist: GenLenDist::LongTail { mean, cap },
+            seed: 9,
+            ..Default::default()
+        };
+        let w = Workload::generate(&cfg, &fillers());
+        let mut sum = 0usize;
+        let mut long = 0usize;
+        for i in &w.items {
+            assert!((1..=cap).contains(&i.max_new_tokens));
+            sum += i.max_new_tokens;
+            if i.max_new_tokens as f64 > 2.0 * mean {
+                long += 1;
+            }
+        }
+        let empirical = sum as f64 / w.items.len() as f64;
+        assert!(
+            (empirical - mean).abs() < 0.1 * mean,
+            "empirical mean {empirical:.2} strayed from configured {mean}"
+        );
+        // An exponential tail has mass beyond 2×mean (≈ e⁻² ≈ 13.5%) —
+        // the long-tail shape, not just the mean, is what stresses
+        // full-budget reservation.
+        let frac = long as f64 / w.items.len() as f64;
+        assert!((0.08..=0.20).contains(&frac), "P(len > 2·mean) = {frac:.3}");
     }
 
     #[test]

@@ -19,6 +19,12 @@ pub struct PoolStats {
     pub forks: u64,
     /// Copy-on-write block duplications (a shared block was written).
     pub cow_copies: u64,
+    /// Blocks granted *after* admission by [`super::TableSet::grow`] —
+    /// speculative reservations growing toward their true decode length.
+    pub grown_blocks: u64,
+    /// Sequences released by preemption ([`super::TableSet::preempt_free`])
+    /// rather than completion.
+    pub preempt_frees: u64,
     /// `alloc` calls that failed because the free list was empty.
     pub failed_allocs: u64,
     /// Peak simultaneous blocks-in-use over the pool's lifetime.

@@ -15,7 +15,7 @@
 //! to mirror the device cache for admission control. The data-plane
 //! sibling (which owns actual KV bytes) is [`super::TieredKvPool`].
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use super::block::{BlockAllocator, BlockId, PoolExhausted};
 
@@ -50,6 +50,10 @@ pub struct TableSet {
     prefix_map: HashMap<u64, BlockId>,
     /// Reverse index for cleanup when a shared block is finally freed.
     block_hash: HashMap<BlockId, u64>,
+    /// Live blocks holding at least one written token slot (maintained
+    /// incrementally on admit/advance/fork and pruned on physical free,
+    /// so the per-decode-iteration occupancy snapshot is O(1)).
+    written: HashSet<BlockId>,
     /// Blocks obtained by sharing instead of allocation (the savings).
     pub shared_hits: u64,
 }
@@ -64,12 +68,17 @@ impl TableSet {
             next: 1,
             prefix_map: HashMap::new(),
             block_hash: HashMap::new(),
+            written: HashSet::new(),
             shared_hits: 0,
         }
     }
 
     pub fn block_size(&self) -> usize {
         self.block_size
+    }
+
+    pub fn sharing_enabled(&self) -> bool {
+        self.sharing
     }
 
     pub fn live_seqs(&self) -> usize {
@@ -132,15 +141,90 @@ impl TableSet {
                 }
             }
         }
+        // Prompt slots are written at admission; the reserved decode tail
+        // is not (written-block accounting is what speculative admission
+        // optimizes, so the distinction matters).
+        let prompt_blocks = prompt.len().div_ceil(bs).min(blocks.len());
+        for &b in &blocks[..prompt_blocks] {
+            self.written.insert(b);
+        }
         let id = self.next;
         self.next += 1;
         self.tables.insert(id, BlockTable { blocks, len: prompt.len() });
         Ok(id)
     }
 
+    /// True when the next `advance` would step past the sequence's
+    /// currently granted blocks. Under `ReserveFull` admission this never
+    /// fires (the reservation covers the whole decode budget); under
+    /// speculative admission it is the signal to [`TableSet::grow`].
+    pub fn needs_grow(&self, seq: SeqId) -> bool {
+        let t = self.tables.get(&seq).expect("needs_grow of unknown seq");
+        t.len >= t.blocks.len() * self.block_size
+    }
+
+    /// Extend a live sequence's reservation by up to `want` blocks (at
+    /// least one attempted). Partial grants are fine — the caller asked
+    /// for headroom, not a budget — but a zero grant is an error: the
+    /// pool had nothing free and the caller must evict or preempt.
+    pub fn grow(
+        &mut self,
+        alloc: &mut BlockAllocator,
+        seq: SeqId,
+        want: usize,
+    ) -> Result<usize, PoolExhausted> {
+        let want = want.max(1);
+        let t = self.tables.get_mut(&seq).expect("grow of unknown seq");
+        let mut granted = 0usize;
+        while granted < want {
+            match alloc.alloc() {
+                Ok(b) => {
+                    t.blocks.push(b);
+                    granted += 1;
+                }
+                Err(e) => {
+                    if granted == 0 {
+                        return Err(e);
+                    }
+                    break;
+                }
+            }
+        }
+        alloc.stats.grown_blocks += granted as u64;
+        Ok(granted)
+    }
+
+    /// Blocks of a sequence held by no other table (refcount 1). These
+    /// are what preempting the sequence would actually return to the free
+    /// list — shared prefix blocks only drop a reference.
+    pub fn private_blocks(&self, alloc: &BlockAllocator, seq: SeqId) -> usize {
+        let t = self.tables.get(&seq).expect("private_blocks of unknown seq");
+        t.blocks.iter().filter(|&&b| alloc.ref_count(b) == 1).count()
+    }
+
+    /// Live blocks holding written token slots, counting each physical
+    /// block once (a prefix block shared by N sequences is one block of
+    /// real KV). The utilization numerator: blocks reserved but not yet
+    /// decoded into do not count. O(1) — the engine reads this every
+    /// decode iteration.
+    pub fn written_blocks(&self) -> usize {
+        self.written.len()
+    }
+
+    /// Release a preempted sequence's blocks. Behaviourally identical to
+    /// [`TableSet::free`] — `release` only returns a block to the free
+    /// list at refcount zero, so prefixes shared with co-resident
+    /// sequences survive the victim — but tallied separately so the
+    /// allocator stats distinguish eviction traffic from completions.
+    pub fn preempt_free(&mut self, alloc: &mut BlockAllocator, seq: SeqId) {
+        alloc.stats.preempt_frees += 1;
+        self.free(alloc, seq);
+    }
+
     /// Advance a sequence by one generated token (must stay within the
-    /// blocks reserved at admission — the engine's reservation guarantees
-    /// decode never allocates mid-flight, so it can never OOM mid-flight).
+    /// blocks currently granted — the engine either reserves the whole
+    /// decode budget at admission or `grow`s the table before advancing,
+    /// so an overrun here is a scheduler bug, not backpressure).
     pub fn advance(&mut self, seq: SeqId) {
         let bs = self.block_size;
         let t = self.tables.get_mut(&seq).expect("advance of unknown seq");
@@ -150,6 +234,9 @@ impl TableSet {
             t.blocks.len()
         );
         t.len += 1;
+        // The new token's slot makes its block written (no-op when the
+        // position stays within an already-written block).
+        self.written.insert(t.blocks[(t.len - 1) / bs]);
     }
 
     /// Release every block a sequence holds.
@@ -181,10 +268,13 @@ impl TableSet {
             blocks.push(b);
         }
         if p_len % bs != 0 {
-            // CoW of the partial tail: a private block the child may write.
+            // CoW of the partial tail: a private block the child may
+            // write; it conceptually holds a copy of the parent's written
+            // tail slots, so it counts as written from birth.
             match alloc.alloc() {
                 Ok(b) => {
                     alloc.stats.cow_copies += 1;
+                    self.written.insert(b);
                     blocks.push(b);
                 }
                 Err(e) => {
@@ -229,6 +319,7 @@ impl TableSet {
 
     fn release_and_clean(&mut self, alloc: &mut BlockAllocator, b: BlockId) {
         if alloc.release(b) {
+            self.written.remove(&b);
             if let Some(h) = self.block_hash.remove(&b) {
                 self.prefix_map.remove(&h);
             }
@@ -374,6 +465,75 @@ mod tests {
         // Sharing disabled → never counts.
         let ts_off = TableSet::new(4, false);
         assert_eq!(ts_off.shareable_full_blocks(&prompt), 0);
+    }
+
+    #[test]
+    fn grow_extends_reservation_and_partial_grants_count() {
+        let mut alloc = BlockAllocator::new(4, 4);
+        let mut ts = TableSet::new(4, true);
+        // 3 tokens, reserve 4 → 1 block; 3 blocks free.
+        let s = ts.admit(&mut alloc, &toks(3, 0), 4).unwrap();
+        ts.advance(s); // len 4 == 1 block × 4 slots
+        assert!(ts.needs_grow(s));
+        // Want 5, only 3 free → partial grant of 3.
+        assert_eq!(ts.grow(&mut alloc, s, 5).unwrap(), 3);
+        assert!(!ts.needs_grow(s));
+        assert_eq!(alloc.stats.grown_blocks, 3);
+        // Pool empty → zero grant is an error, not a silent no-op.
+        assert!(ts.grow(&mut alloc, s, 1).is_err());
+        for _ in 0..12 {
+            ts.advance(s);
+        }
+        assert_eq!(ts.table(s).unwrap().len, 16);
+        ts.free(&mut alloc, s);
+        assert_eq!(alloc.blocks_in_use(), 0);
+        alloc.check_invariants();
+    }
+
+    #[test]
+    fn preempt_free_spares_shared_prefix_blocks() {
+        let mut alloc = BlockAllocator::new(16, 4);
+        let mut ts = TableSet::new(4, true);
+        let prompt = toks(8, 0); // 2 full shareable blocks
+        let a = ts.admit(&mut alloc, &prompt, 10).unwrap();
+        let b = ts.admit(&mut alloc, &prompt, 10).unwrap();
+        let shared: Vec<_> = ts.table(a).unwrap().blocks[..2].to_vec();
+        assert_eq!(ts.private_blocks(&alloc, a), 1, "only the tail is private");
+        ts.preempt_free(&mut alloc, b);
+        assert_eq!(alloc.stats.preempt_frees, 1);
+        for &blk in &shared {
+            assert_eq!(alloc.ref_count(blk), 1, "survivor keeps the prefix");
+        }
+        // Survivor's table is fully intact and re-admission re-shares.
+        let c = ts.admit(&mut alloc, &prompt, 10).unwrap();
+        assert_eq!(ts.table(c).unwrap().blocks[..2], shared[..]);
+        ts.free(&mut alloc, a);
+        ts.free(&mut alloc, c);
+        assert_eq!(alloc.blocks_in_use(), 0);
+        alloc.check_invariants();
+    }
+
+    #[test]
+    fn written_blocks_ignores_unwritten_reservation() {
+        let mut alloc = BlockAllocator::new(32, 4);
+        let mut ts = TableSet::new(4, true);
+        // 5 prompt tokens, 16-slot reservation → 4 blocks granted, 2 written.
+        let s = ts.admit(&mut alloc, &toks(5, 0), 16).unwrap();
+        assert_eq!(alloc.blocks_in_use(), 4);
+        assert_eq!(ts.written_blocks(), 2);
+        // A second identical prompt shares its written prefix block.
+        let t = ts.admit(&mut alloc, &toks(5, 0), 16).unwrap();
+        assert_eq!(ts.written_blocks(), 3, "shared block counts once");
+        ts.advance(s);
+        ts.advance(s);
+        ts.advance(s); // len 8 → still 2 written blocks for s
+        assert_eq!(ts.written_blocks(), 3);
+        ts.advance(s); // len 9 → third block written
+        assert_eq!(ts.written_blocks(), 4);
+        ts.free(&mut alloc, s);
+        ts.free(&mut alloc, t);
+        assert_eq!(ts.written_blocks(), 0);
+        alloc.check_invariants();
     }
 
     #[test]

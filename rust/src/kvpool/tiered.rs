@@ -202,6 +202,31 @@ impl TieredKvPool {
         self.tables.len() - 1
     }
 
+    /// Truncate a sequence to `len` tokens, releasing whole blocks past
+    /// the new tail. This is preemption-to-prefix for the data plane:
+    /// keep the (typically shared) prefix resident and recompute the
+    /// evicted tail on resume — cheap under Loki, where the hot tier's
+    /// rotated keys K̂ are re-projected, not re-attended. The kept
+    /// partial tail block remains subject to normal copy-on-write on the
+    /// next append, and re-appending the evicted rows restores the cache
+    /// bit-identically (see `tests/kvpool_properties.rs`).
+    pub fn truncate(&mut self, seq: PoolSeqId, len: usize) {
+        let bs = self.cfg.block_size;
+        let dropped: Vec<BlockId> = {
+            let t = self.tables[seq].as_mut().expect("freed sequence");
+            assert!(len <= t.len, "truncate can only shrink ({len} > {})", t.len);
+            let keep = len.div_ceil(bs);
+            t.len = len;
+            t.blocks.drain(keep..).collect()
+        };
+        for b in dropped {
+            if self.alloc.release(b) && self.resident[b as usize] {
+                self.resident[b as usize] = false;
+                self.resident_count -= 1;
+            }
+        }
+    }
+
     pub fn free_seq(&mut self, seq: PoolSeqId) {
         let t = self.tables[seq].take().expect("double free of sequence");
         for b in t.blocks {
@@ -476,6 +501,37 @@ mod tests {
         // 8 sequences, one copy of the data.
         assert_eq!(p.resident_kv_bytes(), solo);
         assert!(p.flat_equivalent_bytes(32) >= 8 * solo / 2, "flat baseline scales with seqs");
+        p.check_invariants();
+    }
+
+    #[test]
+    fn truncate_releases_tail_blocks_and_reappend_is_bit_identical() {
+        let mut p = pool(16, 4, 8, 2);
+        let s = p.new_seq();
+        let mut rng = Xoshiro256::new(23);
+        let rows: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..11).map(|_| (rng.normal_vec(8), rng.normal_vec(8))).collect();
+        for (k, v) in &rows {
+            p.append(s, k, v).unwrap();
+        }
+        assert_eq!(p.blocks(s).len(), 3);
+        // Evict everything past token 6: the position-7..11 blocks go home.
+        p.truncate(s, 6);
+        assert_eq!(p.len(s), 6);
+        assert_eq!(p.blocks(s).len(), 2, "only whole tail blocks are released");
+        p.check_invariants();
+        // Recompute-on-restore: re-appending the same rows restores every
+        // row of both tiers bit-identically (== on f32, no tolerance).
+        for (k, v) in &rows[6..] {
+            p.append(s, k, v).unwrap();
+        }
+        for (j, (k, v)) in rows.iter().enumerate() {
+            assert_eq!(p.hot_view().row(p.blocks(s), j), &k[..2], "hot row {j}");
+            assert_eq!(p.cold_k_view().row(p.blocks(s), j), &k[..], "cold k row {j}");
+            assert_eq!(p.cold_v_view().row(p.blocks(s), j), &v[..], "cold v row {j}");
+        }
+        p.free_seq(s);
+        assert_eq!(p.allocator().blocks_in_use(), 0);
         p.check_invariants();
     }
 

@@ -13,7 +13,7 @@ use std::sync::mpsc::channel;
 
 use anyhow::{bail, Context, Result};
 
-use loki::coordinator::{Engine, EngineConfig, PoolConfig, SchedulerPolicy};
+use loki::coordinator::{AdmissionPolicy, Engine, EngineConfig, PoolConfig, SchedulerPolicy};
 use loki::coordinator::request::GenRequest;
 use loki::coordinator::sampler::SampleCfg;
 use loki::data::workload::{Workload, WorkloadCfg};
@@ -43,6 +43,9 @@ fn main() -> Result<()> {
                  \x20 --block-size 16                         KV-pool page size (tokens)\n\
                  \x20 --pool-blocks 0                         pool blocks (0 = worst-case)\n\
                  \x20 --no-prefix-share                       disable prompt-block sharing\n\
+                 \x20 --admission full|speculative            KV reservation policy\n\
+                 \x20 --reserve-frac 0.25                     speculative decode-budget fraction\n\
+                 \x20 --headroom-blocks 2                     blocks per speculative grow\n\
                  generate: --prompt STR --max-tokens N --temperature T\n\
                  serve:    --listen 127.0.0.1:7077\n\
                  bench-serve: --requests N --rate R --shared-prefix BYTES"
@@ -81,6 +84,14 @@ fn engine_config(args: &Args, svc: &RuntimeService) -> Result<EngineConfig> {
             block_size: args.usize_or("block-size", 16),
             num_blocks: args.usize_or("pool-blocks", 0),
             prefix_sharing: !args.flag("no-prefix-share"),
+        },
+        admission: match args.str_or("admission", "full").as_str() {
+            "speculative" | "spec" => AdmissionPolicy::Speculative {
+                reserve_frac: args.f64_or("reserve-frac", 0.25),
+                headroom_blocks: args.usize_or("headroom-blocks", 2),
+            },
+            "full" => AdmissionPolicy::ReserveFull,
+            other => bail!("unknown --admission {other} (full|speculative)"),
         },
         verbose: args.flag("verbose"),
     })
@@ -165,11 +176,15 @@ fn serve(args: &Args) -> Result<()> {
     let listen = args.str_or("listen", "127.0.0.1:7077");
     let svc = RuntimeService::start(artifacts_dir()).context("starting runtime")?;
     let cfg = engine_config(args, &svc)?;
+    // Protocol-level cap: asking for more decode than the cache can hold
+    // is a client error answered immediately, not a queue entry.
+    let server_cfg = loki::server::ServerCfg { max_tokens_cap: svc.manifest.model.max_len };
     let engine = Engine::new(&svc, cfg.clone());
     let (tx, rx) = Engine::channel(&cfg);
     let server_tx = tx.clone();
-    let server =
-        std::thread::spawn(move || loki::server::serve(&listen, server_tx).expect("server"));
+    let server = std::thread::spawn(move || {
+        loki::server::serve_cfg(&listen, server_tx, server_cfg).expect("server")
+    });
     let metrics = engine.run(rx)?;
     println!("{}", metrics.report());
     let _ = server.join();

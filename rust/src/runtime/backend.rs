@@ -1,0 +1,60 @@
+//! The decode-backend trait: what the serving engine needs from a
+//! runtime, abstracted away from PJRT.
+//!
+//! The coordinator schedules prefill / decode / inject over *some*
+//! executor. In production that is [`RuntimeHandle`] (the channel front of
+//! the thread-confined PJRT stack); in the deterministic test harness it
+//! is [`super::sim::SimRuntime`], a pure-function model whose logits
+//! depend only on a lane's token history. The engine is written against
+//! this trait, so admission, preemption and the scheduler state machine
+//! are testable hermetically — no compiled artifacts, no device.
+//!
+//! Contract the engine relies on (and the sim enforces):
+//! * `prefill` returns one logits row per prompt, and a state whose lane
+//!   order matches the prompt order;
+//! * `decode` appends exactly one token per lane and returns the next
+//!   logits row per lane;
+//! * `inject` replaces gang lane `idx` with the (batch-1) state `lane`,
+//!   consuming it;
+//! * logits are a pure function of the lane's token history — this is
+//!   what makes preempt-then-resume byte-identical: re-prefilling
+//!   `prompt ++ produced` reconstructs the exact decode distribution.
+
+use anyhow::Result;
+
+use super::service::RuntimeHandle;
+use super::stack::{DecodeRequest, StateId};
+
+/// Backend abstraction over prefill/decode/inject execution.
+pub trait DecodeBackend: Send {
+    /// Prefill a batch of prompts into a fresh state; returns the state
+    /// id and last-position logits per prompt.
+    fn prefill(&self, pca: &str, prompts: Vec<Vec<i32>>) -> Result<(StateId, Vec<Vec<f32>>)>;
+
+    /// Advance every lane of a state by one token; returns logits per lane.
+    fn decode(&self, req: DecodeRequest) -> Result<Vec<Vec<f32>>>;
+
+    /// Replace gang lane `idx` with the batch-1 state `lane`.
+    fn inject(&self, gang: StateId, lane: StateId, idx: usize) -> Result<()>;
+
+    /// Release a state (best-effort; used on engine shutdown).
+    fn free(&self, id: StateId);
+}
+
+impl DecodeBackend for RuntimeHandle {
+    fn prefill(&self, pca: &str, prompts: Vec<Vec<i32>>) -> Result<(StateId, Vec<Vec<f32>>)> {
+        RuntimeHandle::prefill(self, pca, prompts)
+    }
+
+    fn decode(&self, req: DecodeRequest) -> Result<Vec<Vec<f32>>> {
+        RuntimeHandle::decode(self, req)
+    }
+
+    fn inject(&self, gang: StateId, lane: StateId, idx: usize) -> Result<()> {
+        RuntimeHandle::inject(self, gang, lane, idx)
+    }
+
+    fn free(&self, id: StateId) {
+        RuntimeHandle::free(self, id)
+    }
+}

@@ -17,12 +17,22 @@
 //!   aot.py writes: graph input/output orders, buckets, file names).
 //! * [`stack`]    — `RuntimeStack`, the thread-confined engine.
 //! * [`service`]  — channel-based handle + the runtime thread main loop.
+//! * [`backend`]  — the [`backend::DecodeBackend`] trait the coordinator
+//!   schedules against (prefill / decode / inject), implemented by
+//!   [`RuntimeHandle`].
+//! * [`sim`]      — [`sim::SimRuntime`], a deterministic artifact-free
+//!   backend whose logits are a pure hash of each lane's token history;
+//!   the substrate of the hermetic engine/serving test harness.
 
+pub mod backend;
 pub mod hlo_inspect;
 pub mod manifest;
 pub mod service;
+pub mod sim;
 pub mod stack;
 
+pub use backend::DecodeBackend;
 pub use manifest::{GraphSpec, Manifest, ModelSpec};
 pub use service::{RuntimeHandle, RuntimeService};
+pub use sim::{SimCfg, SimRuntime};
 pub use stack::{DecodeRequest, DecodeVariant, RuntimeStack, StateId};

@@ -1,0 +1,248 @@
+//! Deterministic simulated runtime for hermetic engine/serving tests.
+//!
+//! [`SimRuntime`] implements [`DecodeBackend`] with no device, no
+//! artifacts and no floating-point model: each lane's logits are a pure
+//! hash of that lane's full token history (seeded by [`SimCfg::seed`]).
+//! Two consequences make it the right substrate for scheduler tests:
+//!
+//! 1. **Batch independence** — a lane's logits do not depend on which
+//!    other lanes share the gang, so scheduling decisions (injection
+//!    order, padding lanes, preemption) can never leak into outputs.
+//!    Any output divergence a test observes is a real engine bug.
+//! 2. **History purity** — re-prefilling `prompt ++ produced` after a
+//!    preemption reconstructs the exact decode distribution, which is
+//!    precisely the property the engine's preempt/resume state machine
+//!    claims (byte-identical resumption via prefix recompute).
+//!
+//! The sim is intentionally *not* a language model: logits are noise.
+//! Tests assert scheduling/memory invariants and bit-level determinism,
+//! never text quality.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::kvpool::chain_hash;
+
+use super::backend::DecodeBackend;
+use super::stack::{DecodeRequest, StateId};
+
+#[derive(Clone, Copy, Debug)]
+pub struct SimCfg {
+    /// Logit width — the simulated vocabulary. Keep ≤ 256 so greedy /
+    /// sampled ids stay valid bytes for `ByteTokenizer::decode`.
+    pub vocab: usize,
+    /// Folded into every logit hash: two sims with different seeds are
+    /// different "models".
+    pub seed: u64,
+}
+
+impl Default for SimCfg {
+    fn default() -> Self {
+        Self { vocab: 96, seed: 0x51D0_D00D }
+    }
+}
+
+/// A deterministic, thread-safe, device-free [`DecodeBackend`].
+pub struct SimRuntime {
+    cfg: SimCfg,
+    inner: Mutex<SimState>,
+}
+
+#[derive(Default)]
+struct SimState {
+    next: StateId,
+    /// State id → per-lane token histories (prompt + every decoded token).
+    states: HashMap<StateId, Vec<Vec<i32>>>,
+}
+
+impl SimRuntime {
+    pub fn new(cfg: SimCfg) -> Self {
+        assert!((2..=256).contains(&cfg.vocab), "sim vocab must be in 2..=256");
+        Self { cfg, inner: Mutex::new(SimState::default()) }
+    }
+
+    /// Logits for one lane — a pure function of (seed, history).
+    fn logits(&self, history: &[i32]) -> Vec<f32> {
+        let h = chain_hash(self.cfg.seed, history);
+        (0..self.cfg.vocab as u64).map(|v| unit_logit(h, v)).collect()
+    }
+}
+
+/// SplitMix-style finalizer → one f32 in [-4, 4).
+fn unit_logit(h: u64, v: u64) -> f32 {
+    let mut x = h ^ v.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    ((x >> 11) as f64 / (1u64 << 53) as f64 * 8.0 - 4.0) as f32
+}
+
+impl DecodeBackend for SimRuntime {
+    fn prefill(&self, _pca: &str, prompts: Vec<Vec<i32>>) -> Result<(StateId, Vec<Vec<f32>>)> {
+        ensure!(!prompts.is_empty(), "sim: empty prefill batch");
+        let logits = prompts.iter().map(|p| self.logits(p)).collect();
+        let mut st = self.inner.lock().unwrap();
+        st.next += 1;
+        let id = st.next;
+        st.states.insert(id, prompts);
+        Ok((id, logits))
+    }
+
+    fn decode(&self, req: DecodeRequest) -> Result<Vec<Vec<f32>>> {
+        let mut st = self.inner.lock().unwrap();
+        let lanes = st
+            .states
+            .get_mut(&req.state)
+            .ok_or_else(|| anyhow!("sim: decode of unknown state {}", req.state))?;
+        ensure!(
+            lanes.len() == req.tokens.len(),
+            "sim: token batch {} vs state lanes {}",
+            req.tokens.len(),
+            lanes.len()
+        );
+        for (lane, &tok) in lanes.iter_mut().zip(&req.tokens) {
+            lane.push(tok);
+        }
+        Ok(lanes.iter().map(|lane| self.logits(lane)).collect())
+    }
+
+    fn inject(&self, gang: StateId, lane: StateId, idx: usize) -> Result<()> {
+        let mut st = self.inner.lock().unwrap();
+        let mut src = st
+            .states
+            .remove(&lane)
+            .ok_or_else(|| anyhow!("sim: inject from unknown state {lane}"))?;
+        ensure!(!src.is_empty(), "sim: inject from empty state {lane}");
+        let history = src.swap_remove(0);
+        let dst = st
+            .states
+            .get_mut(&gang)
+            .ok_or_else(|| anyhow!("sim: inject into unknown gang {gang}"))?;
+        ensure!(idx < dst.len(), "sim: lane {idx} out of range for gang of {}", dst.len());
+        dst[idx] = history;
+        Ok(())
+    }
+
+    fn free(&self, id: StateId) {
+        if let Ok(mut st) = self.inner.lock() {
+            st.states.remove(&id);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim() -> SimRuntime {
+        SimRuntime::new(SimCfg { vocab: 32, seed: 7 })
+    }
+
+    fn greedy(logits: &[f32]) -> i32 {
+        crate::model::argmax(logits) as i32
+    }
+
+    #[test]
+    fn logits_are_a_pure_function_of_history() {
+        let s = sim();
+        let a = s.logits(&[1, 2, 3]);
+        let b = s.logits(&[1, 2, 3]);
+        assert_eq!(a, b);
+        assert_ne!(a, s.logits(&[1, 2, 4]), "history must matter");
+        assert_ne!(a, s.logits(&[3, 2, 1]), "order must matter");
+        let other = SimRuntime::new(SimCfg { vocab: 32, seed: 8 });
+        assert_ne!(a, other.logits(&[1, 2, 3]), "seed must matter");
+    }
+
+    #[test]
+    fn decode_is_batch_independent() {
+        // The same lane history produces the same logits whether it sits
+        // alone or beside other lanes — the property that makes engine
+        // scheduling invisible in outputs.
+        let s = sim();
+        let (solo, l_solo) = s.prefill("pca", vec![vec![5, 6]]).unwrap();
+        let (duo, l_duo) = s.prefill("pca", vec![vec![5, 6], vec![9, 9, 9]]).unwrap();
+        assert_eq!(l_solo[0], l_duo[0]);
+        let d_solo = s
+            .decode(DecodeRequest {
+                state: solo,
+                variant: crate::runtime::DecodeVariant::Full,
+                tokens: vec![11],
+            })
+            .unwrap();
+        let d_duo = s
+            .decode(DecodeRequest {
+                state: duo,
+                variant: crate::runtime::DecodeVariant::Full,
+                tokens: vec![11, 3],
+            })
+            .unwrap();
+        assert_eq!(d_solo[0], d_duo[0]);
+    }
+
+    #[test]
+    fn prefix_recompute_reconstructs_the_decode_distribution() {
+        // Decode a few greedy tokens, then "resume" from a fresh prefill
+        // of prompt ++ produced: the next logits must match bit-for-bit.
+        let s = sim();
+        let prompt = vec![2, 4, 8];
+        let (st, l0) = s.prefill("pca", vec![prompt.clone()]).unwrap();
+        let mut produced = Vec::new();
+        let mut next = greedy(&l0[0]);
+        for _ in 0..5 {
+            let l = s
+                .decode(DecodeRequest {
+                    state: st,
+                    variant: crate::runtime::DecodeVariant::Full,
+                    tokens: vec![next],
+                })
+                .unwrap();
+            produced.push(next);
+            next = greedy(&l[0]);
+        }
+        let mut resumed = prompt.clone();
+        resumed.extend_from_slice(&produced);
+        let (st2, _) = s.prefill("pca", vec![resumed]).unwrap();
+        let l_resume = s
+            .decode(DecodeRequest {
+                state: st2,
+                variant: crate::runtime::DecodeVariant::Full,
+                tokens: vec![next],
+            })
+            .unwrap();
+        let l_orig = s
+            .decode(DecodeRequest {
+                state: st,
+                variant: crate::runtime::DecodeVariant::Full,
+                tokens: vec![next],
+            })
+            .unwrap();
+        assert_eq!(l_orig[0], l_resume[0], "resume diverged from uncontended decode");
+    }
+
+    #[test]
+    fn inject_replaces_gang_lane_and_consumes_source() {
+        let s = sim();
+        let (gang, _) = s.prefill("pca", vec![vec![0], vec![0], vec![0]]).unwrap();
+        let (lane, _) = s.prefill("pca", vec![vec![7, 7]]).unwrap();
+        s.inject(gang, lane, 1).unwrap();
+        let l = s
+            .decode(DecodeRequest {
+                state: gang,
+                variant: crate::runtime::DecodeVariant::Full,
+                tokens: vec![1, 2, 3],
+            })
+            .unwrap();
+        assert_eq!(l[1], s.logits(&[7, 7, 2]));
+        assert!(s.decode(DecodeRequest {
+            state: lane,
+            variant: crate::runtime::DecodeVariant::Full,
+            tokens: vec![1],
+        })
+        .is_err(), "source state must be consumed");
+    }
+}

@@ -4,6 +4,11 @@
 //!   → {"prompt": "...", "max_tokens": 32, "temperature": 0.0}
 //!   ← {"id": 1, "text": "...", "tokens": 32, "ttft_s": 0.01, "total_s": 0.2}
 //!
+//! Malformed or invalid requests get a structured `{"error": "..."}`
+//! reply and the connection stays usable for the next line — client bugs
+//! must never wedge a connection, let alone the engine behind it
+//! (regression-tested in `rust/tests/server_protocol.rs`).
+//!
 //! `repro serve --listen 127.0.0.1:7077` starts it; `server::client_call`
 //! is a tiny blocking client used by tests and demos. Thread-per-
 //! connection: the engine's bounded queue provides backpressure.
@@ -14,7 +19,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, SyncSender};
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::request::GenRequest;
 use crate::coordinator::sampler::SampleCfg;
@@ -23,10 +28,42 @@ use crate::util::json::{self, Json};
 
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
-/// Serve forever on `addr`, forwarding requests into the engine queue.
+/// Request-validation limits. The default `max_tokens_cap` is a generous
+/// protocol bound; `repro serve` tightens it to the model's `max_len`
+/// (asking for more decode than the cache can hold is a client error,
+/// not a queue entry).
+#[derive(Clone, Copy, Debug)]
+pub struct ServerCfg {
+    pub max_tokens_cap: usize,
+}
+
+impl Default for ServerCfg {
+    fn default() -> Self {
+        Self { max_tokens_cap: 4096 }
+    }
+}
+
+/// Serve forever on `addr` with default limits.
 pub fn serve(addr: &str, submit: SyncSender<GenRequest>) -> Result<()> {
+    serve_cfg(addr, submit, ServerCfg::default())
+}
+
+/// Serve forever on `addr`, forwarding requests into the engine queue.
+pub fn serve_cfg(addr: &str, submit: SyncSender<GenRequest>, cfg: ServerCfg) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
-    eprintln!("[server] listening on {addr}");
+    serve_listener(listener, submit, cfg)
+}
+
+/// Serve forever on an already-bound listener. Tests bind port 0 first
+/// to learn the ephemeral address, then hand the listener over.
+pub fn serve_listener(
+    listener: TcpListener,
+    submit: SyncSender<GenRequest>,
+    cfg: ServerCfg,
+) -> Result<()> {
+    if let Ok(addr) = listener.local_addr() {
+        eprintln!("[server] listening on {addr}");
+    }
     let submit = Arc::new(submit);
     for stream in listener.incoming() {
         let stream = match stream {
@@ -38,7 +75,7 @@ pub fn serve(addr: &str, submit: SyncSender<GenRequest>) -> Result<()> {
         };
         let submit = submit.clone();
         std::thread::spawn(move || {
-            if let Err(e) = handle_conn(stream, &submit) {
+            if let Err(e) = handle_conn(stream, &submit, cfg) {
                 eprintln!("[server] connection error: {e}");
             }
         });
@@ -46,7 +83,7 @@ pub fn serve(addr: &str, submit: SyncSender<GenRequest>) -> Result<()> {
     Ok(())
 }
 
-fn handle_conn(stream: TcpStream, submit: &SyncSender<GenRequest>) -> Result<()> {
+fn handle_conn(stream: TcpStream, submit: &SyncSender<GenRequest>, cfg: ServerCfg) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -56,7 +93,9 @@ fn handle_conn(stream: TcpStream, submit: &SyncSender<GenRequest>) -> Result<()>
         if line.trim().is_empty() {
             continue;
         }
-        let resp = match handle_line(&line, submit, &tok) {
+        // Errors become structured replies; the read loop continues, so
+        // one bad line never poisons the connection.
+        let resp = match handle_line(&line, submit, &tok, cfg) {
             Ok(j) => j,
             Err(e) => json::obj(vec![("error", json::s(&e.to_string()))]),
         };
@@ -67,13 +106,29 @@ fn handle_conn(stream: TcpStream, submit: &SyncSender<GenRequest>) -> Result<()>
     Ok(())
 }
 
-fn handle_line(line: &str, submit: &SyncSender<GenRequest>, tok: &ByteTokenizer) -> Result<Json> {
+fn handle_line(
+    line: &str,
+    submit: &SyncSender<GenRequest>,
+    tok: &ByteTokenizer,
+    cfg: ServerCfg,
+) -> Result<Json> {
     let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request JSON: {e}"))?;
     let prompt = req
         .get("prompt")
         .and_then(|p| p.as_str())
         .context("missing \"prompt\"")?;
-    let max_tokens = req.get("max_tokens").and_then(|x| x.as_usize()).unwrap_or(32);
+    if prompt.is_empty() {
+        bail!("empty \"prompt\"");
+    }
+    let max_tokens = match req.get("max_tokens") {
+        None => 32,
+        Some(v) => v
+            .as_usize()
+            .context("\"max_tokens\" must be a non-negative integer")?,
+    };
+    if max_tokens == 0 || max_tokens > cfg.max_tokens_cap {
+        bail!("\"max_tokens\" must be in 1..={} (got {max_tokens})", cfg.max_tokens_cap);
+    }
     let temperature = req.get("temperature").and_then(|x| x.as_f64()).unwrap_or(0.0) as f32;
     let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
     let (reply, rx) = channel();
@@ -95,6 +150,7 @@ fn handle_line(line: &str, submit: &SyncSender<GenRequest>, tok: &ByteTokenizer)
         ("finish", json::s(&format!("{:?}", res.finished_reason))),
         ("ttft_s", json::num(res.timing.ttft_s)),
         ("total_s", json::num(res.timing.total_s)),
+        ("preemptions", json::num(res.timing.preemptions as f64)),
     ]))
 }
 

@@ -1,0 +1,305 @@
+//! Deterministic end-to-end tests of engine admission, speculative
+//! growth, preemption and resumption — over the [`SimRuntime`] harness,
+//! so they run hermetically (no compiled artifacts, no device).
+//!
+//! The sim's logits are a pure hash of each lane's token history, which
+//! turns "scheduling must not change outputs" into an exact, bit-level
+//! assertion: any divergence between an uncontended run and a
+//! preempt-heavy run is an engine bug, not noise.
+
+use std::sync::mpsc::channel;
+
+use loki::coordinator::request::{FinishReason, GenRequest, GenResult};
+use loki::coordinator::sampler::SampleCfg;
+use loki::coordinator::{
+    reserve_tokens, AdmissionPolicy, Engine, EngineCaps, EngineConfig, EngineMetrics,
+    PoolConfig, RESERVE_SLACK_TOKENS,
+};
+use loki::kvpool::BlockAllocator;
+use loki::runtime::{SimCfg, SimRuntime};
+
+const BS: usize = 8;
+
+fn caps(max_len: usize, gang: usize) -> EngineCaps {
+    EngineCaps { max_len, max_prompt: max_len, gang_batch: gang, bytes_per_token: 8 }
+}
+
+/// Distinct-per-request prompt material within the sim vocabulary.
+fn prompt(id: u64, len: usize) -> Vec<i32> {
+    (0..len).map(|i| ((id as usize * 31 + i * 7 + 3) % 96) as i32).collect()
+}
+
+struct Spec {
+    prompt: Vec<i32>,
+    max_new: usize,
+    sampling: SampleCfg,
+}
+
+/// Run `specs` through a sim-backed engine; results come back sorted by
+/// request id. Everything is submitted up front, so the scheduler's
+/// behaviour is a pure function of (cfg, caps, specs).
+fn run(cfg: &EngineConfig, caps: EngineCaps, specs: &[Spec]) -> (Vec<GenResult>, EngineMetrics) {
+    let engine =
+        Engine::with_backend(Box::new(SimRuntime::new(SimCfg::default())), caps, cfg.clone());
+    let (tx, rx) = Engine::channel(cfg);
+    let (reply, results) = channel();
+    for (i, s) in specs.iter().enumerate() {
+        tx.send(GenRequest {
+            id: i as u64,
+            prompt: s.prompt.clone(),
+            max_new_tokens: s.max_new,
+            stop_token: None,
+            sampling: s.sampling,
+            reply: reply.clone(),
+        })
+        .unwrap();
+    }
+    drop(tx);
+    drop(reply);
+    let metrics = engine.run(rx).unwrap();
+    let mut got: Vec<GenResult> = results.try_iter().collect();
+    got.sort_by_key(|r| r.id);
+    (got, metrics)
+}
+
+fn mixed_specs() -> Vec<Spec> {
+    vec![
+        Spec {
+            prompt: prompt(0, 24),
+            max_new: 40,
+            sampling: SampleCfg { temperature: 0.8, top_p: 0.9, seed: 100 },
+        },
+        Spec {
+            prompt: prompt(1, 30),
+            max_new: 48,
+            sampling: SampleCfg { temperature: 0.7, top_p: 0.95, seed: 101 },
+        },
+        Spec { prompt: prompt(2, 20), max_new: 32, sampling: SampleCfg::greedy() },
+        Spec {
+            prompt: prompt(3, 28),
+            max_new: 36,
+            sampling: SampleCfg { temperature: 1.0, top_p: 0.9, seed: 103 },
+        },
+    ]
+}
+
+fn assert_same_outputs(a: &[GenResult], b: &[GenResult]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.tokens, y.tokens, "request #{} tokens diverged", x.id);
+        assert_eq!(x.text, y.text, "request #{} text diverged", x.id);
+        assert_eq!(
+            x.finished_reason, y.finished_reason,
+            "request #{} finish reason diverged",
+            x.id
+        );
+    }
+}
+
+/// Satellite (a): a preempted-then-resumed request produces exactly the
+/// bytes it would have produced uncontended — through temperature
+/// sampling, so the sampler-state save/restore is exercised too.
+#[test]
+fn preempted_then_resumed_output_is_byte_identical() {
+    let specs = mixed_specs();
+    let uncontended = EngineConfig {
+        pool: PoolConfig { block_size: BS, num_blocks: 0, prefix_sharing: true },
+        ..Default::default()
+    };
+    let (base, base_m) = run(&uncontended, caps(512, 2), &specs);
+    assert_eq!(base_m.preemptions, 0, "worst-case pool must never preempt");
+    assert_eq!(base.len(), 4);
+    for r in &base {
+        assert_eq!(r.finished_reason, FinishReason::MaxTokens);
+    }
+
+    // 16 blocks cannot hold the two longest requests' full footprints
+    // (9 + 10 blocks) at once, so decode-time growth must preempt.
+    let contended = EngineConfig {
+        pool: PoolConfig { block_size: BS, num_blocks: 16, prefix_sharing: true },
+        admission: AdmissionPolicy::Speculative { reserve_frac: 0.2, headroom_blocks: 1 },
+        ..Default::default()
+    };
+    let (got, m) = run(&contended, caps(512, 2), &specs);
+    assert!(m.preemptions > 0, "scenario failed to force preemption: {}", m.report());
+    assert!(m.resumes > 0);
+    assert!(m.recomputed_tokens > 0, "resumes must pay prefix recompute");
+    assert_same_outputs(&base, &got);
+    let per_request: usize = got.iter().map(|r| r.timing.preemptions).sum();
+    assert_eq!(per_request as u64, m.preemptions, "per-request preemption tallies drift");
+}
+
+/// Satellite (b): pool sized so that admission fills it exactly and
+/// *every* decode-time growth must preempt someone — the engine must
+/// neither deadlock nor livelock, and still drain every request with
+/// uncontended-identical output.
+#[test]
+fn saturated_pool_preempts_without_deadlock_and_stays_exact() {
+    let specs: Vec<Spec> = (0..6)
+        .map(|i| Spec { prompt: prompt(i, 8), max_new: 24, sampling: SampleCfg::greedy() })
+        .collect();
+    let (base, _) = run(
+        &EngineConfig {
+            pool: PoolConfig { block_size: BS, num_blocks: 0, prefix_sharing: true },
+            ..Default::default()
+        },
+        caps(128, 4),
+        &specs,
+    );
+
+    // reserve_frac 0: each admission takes ceil((8+0+2)/8) = 2 blocks;
+    // four lanes × 2 = 8 = the whole pool. Every subsequent grow finds
+    // zero free blocks.
+    let cfg = EngineConfig {
+        pool: PoolConfig { block_size: BS, num_blocks: 8, prefix_sharing: true },
+        admission: AdmissionPolicy::Speculative { reserve_frac: 0.0, headroom_blocks: 1 },
+        ..Default::default()
+    };
+    let (got, m) = run(&cfg, caps(128, 4), &specs);
+    assert_eq!(m.requests_done, 6, "drain stalled: {}", m.report());
+    assert_eq!(m.requests_rejected, 0);
+    assert!(m.preemptions > 0, "saturated pool must preempt: {}", m.report());
+    assert!(m.grow_stalls > 0);
+    for r in &got {
+        assert_eq!(r.tokens.len(), 24);
+        assert_eq!(r.finished_reason, FinishReason::MaxTokens);
+    }
+    assert_same_outputs(&base, &got);
+}
+
+/// Satellite (c): `ReserveFull` behaves exactly as PR 1's engine — no
+/// preemptions, no growth, reproducible outputs, and impossible requests
+/// rejected up front (by both policies, identically).
+#[test]
+fn reserve_full_results_are_unchanged_and_reproducible() {
+    let specs = mixed_specs();
+    let cfg = EngineConfig {
+        pool: PoolConfig { block_size: BS, num_blocks: 0, prefix_sharing: true },
+        admission: AdmissionPolicy::ReserveFull,
+        ..Default::default()
+    };
+    let (a, ma) = run(&cfg, caps(512, 2), &specs);
+    let (b, mb) = run(&cfg, caps(512, 2), &specs);
+    assert_same_outputs(&a, &b);
+    for m in [&ma, &mb] {
+        assert_eq!(m.preemptions, 0);
+        assert_eq!(m.resumes, 0);
+        assert_eq!(m.grow_events, 0, "full reservation must never grow");
+        assert_eq!(m.grow_stalls, 0);
+        assert_eq!(m.requests_done, 4);
+    }
+}
+
+#[test]
+fn oversized_requests_are_rejected_by_both_policies() {
+    // 4 blocks of 8 slots; a 600-token decode budget clamps to max_len
+    // (256) and still needs 32 blocks — impossible, reject fast. A small
+    // sibling request must be unaffected.
+    for admission in [
+        AdmissionPolicy::ReserveFull,
+        AdmissionPolicy::Speculative { reserve_frac: 0.1, headroom_blocks: 2 },
+    ] {
+        let cfg = EngineConfig {
+            pool: PoolConfig { block_size: BS, num_blocks: 4, prefix_sharing: true },
+            admission,
+            ..Default::default()
+        };
+        let specs = vec![
+            Spec { prompt: prompt(0, 10), max_new: 600, sampling: SampleCfg::greedy() },
+            Spec { prompt: prompt(1, 10), max_new: 10, sampling: SampleCfg::greedy() },
+        ];
+        let (got, m) = run(&cfg, caps(256, 2), &specs);
+        assert_eq!(m.requests_rejected, 1, "{admission:?}");
+        assert_eq!(got[0].finished_reason, FinishReason::CacheFull);
+        assert!(got[0].tokens.is_empty(), "rejected request must not fabricate output");
+        assert_eq!(got[1].tokens.len(), 10, "{admission:?}: small sibling must complete");
+        assert_eq!(got[1].finished_reason, FinishReason::MaxTokens);
+    }
+}
+
+/// The e2e acceptance criterion, deterministically: on a long-tail
+/// workload through a constrained pool, `Speculative` sustains strictly
+/// higher mean written-block occupancy and needs no more decode
+/// iterations (≥ throughput at equal work), with zero output divergence
+/// from `ReserveFull`.
+#[test]
+fn speculative_beats_reserve_full_on_long_tail_with_zero_divergence() {
+    // Long-tail decode budgets: every 4th request runs 8× longer.
+    let specs: Vec<Spec> = (0..12)
+        .map(|i| Spec {
+            prompt: prompt(i, 16),
+            max_new: if i % 4 == 0 { 64 } else { 8 },
+            sampling: if i % 2 == 0 {
+                SampleCfg::greedy()
+            } else {
+                SampleCfg { temperature: 0.8, top_p: 0.9, seed: 200 + i }
+            },
+        })
+        .collect();
+    let pool = PoolConfig { block_size: BS, num_blocks: 24, prefix_sharing: true };
+    let full_cfg = EngineConfig {
+        pool,
+        admission: AdmissionPolicy::ReserveFull,
+        ..Default::default()
+    };
+    let spec_cfg = EngineConfig {
+        pool,
+        admission: AdmissionPolicy::Speculative { reserve_frac: 0.1, headroom_blocks: 1 },
+        ..Default::default()
+    };
+    let (full, mf) = run(&full_cfg, caps(256, 4), &specs);
+    let (spec, ms) = run(&spec_cfg, caps(256, 4), &specs);
+
+    assert_same_outputs(&full, &spec);
+    assert_eq!(mf.tokens_generated, ms.tokens_generated, "same work either way");
+    assert_eq!(mf.requests_done, 12);
+    assert_eq!(ms.requests_done, 12);
+    assert!(ms.preemptions > 0, "constrained pool must exercise preemption");
+    assert!(
+        ms.mean_pool_occupancy() > mf.mean_pool_occupancy(),
+        "speculative occupancy {:.4} must beat reserve-full {:.4}",
+        ms.mean_pool_occupancy(),
+        mf.mean_pool_occupancy()
+    );
+    assert!(
+        ms.decode_steps <= mf.decode_steps,
+        "speculative must not need more iterations ({} vs {})",
+        ms.decode_steps,
+        mf.decode_steps
+    );
+}
+
+/// Satellite: the reservation formula is pinned — the old magic `+ 2` is
+/// now `RESERVE_SLACK_TOKENS` and the exact block count for a known
+/// prompt/max_new/block_size triple must never drift silently.
+#[test]
+fn reservation_formula_is_pinned() {
+    assert_eq!(RESERVE_SLACK_TOKENS, 2);
+    // prompt 100, max_new 50, block_size 16: 100 + 50 + 2 = 152 tokens
+    // → exactly 10 blocks.
+    let r = reserve_tokens(AdmissionPolicy::ReserveFull, 100, 50, 1024);
+    assert_eq!(r, 152);
+    let alloc = BlockAllocator::new(64, 16);
+    assert_eq!(alloc.blocks_for(r), 10);
+    // Speculative at 0.25 reserves ceil(50·0.25) = 13 of the budget.
+    let s = reserve_tokens(
+        AdmissionPolicy::Speculative { reserve_frac: 0.25, headroom_blocks: 2 },
+        100,
+        50,
+        1024,
+    );
+    assert_eq!(s, 100 + 13 + 2);
+    assert_eq!(alloc.blocks_for(s), 8);
+    // Both clamp at the physical cache bound.
+    assert_eq!(reserve_tokens(AdmissionPolicy::ReserveFull, 100, 5000, 1024), 1024);
+    assert_eq!(
+        reserve_tokens(
+            AdmissionPolicy::Speculative { reserve_frac: 1.0, headroom_blocks: 2 },
+            100,
+            5000,
+            1024
+        ),
+        1024
+    );
+}

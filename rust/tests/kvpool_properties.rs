@@ -242,6 +242,146 @@ fn prop_paged_decode_bit_identical_to_flat_under_cow_sharing() {
     }
 }
 
+/// Preemption invariants over random admit / grow / advance / preempt
+/// traffic (the speculative-admission lifecycle): a victim's release
+/// never frees a block that another live sequence still references
+/// (shared prefixes survive), and the allocator's alloc/free bookkeeping
+/// balances exactly across admit/grow/preempt cycles.
+#[test]
+fn prop_preemption_spares_shared_blocks_and_balances_books() {
+    for trial in 0..TRIALS {
+        let mut rng = Xoshiro256::new(19_000 + trial as u64);
+        let bs = [4, 8][rng.below(2)];
+        let mut alloc = BlockAllocator::new(rng.range(16, 64), bs);
+        let mut tables = TableSet::new(bs, true);
+        let mut live: Vec<u64> = Vec::new();
+        for _ in 0..250 {
+            match rng.below(10) {
+                // Speculative-style admit: reserve only part of the
+                // budget. Tiny token alphabet so prefixes really share.
+                0..=3 => {
+                    let plen = rng.range(1, 4 * bs);
+                    let prompt: Vec<i32> = (0..plen).map(|_| rng.below(2) as i32).collect();
+                    let reserve = plen + rng.range(0, bs);
+                    if let Ok(seq) = tables.admit(&mut alloc, &prompt, reserve) {
+                        live.push(seq);
+                    }
+                }
+                // Decode-time growth (partial grants allowed).
+                4..=5 if !live.is_empty() => {
+                    let seq = live[rng.below(live.len())];
+                    let _ = tables.grow(&mut alloc, seq, rng.range(1, 4));
+                }
+                // Advance within the granted blocks.
+                6..=7 if !live.is_empty() => {
+                    let seq = live[rng.below(live.len())];
+                    if !tables.needs_grow(seq) {
+                        tables.advance(seq);
+                    }
+                }
+                // Preempt a random victim; every block some *other* live
+                // sequence references must survive with refcount ≥ 1.
+                _ if !live.is_empty() => {
+                    let victim = live.swap_remove(rng.below(live.len()));
+                    let safeguarded: Vec<u32> = live
+                        .iter()
+                        .flat_map(|&s| tables.table(s).unwrap().blocks.clone())
+                        .collect();
+                    tables.preempt_free(&mut alloc, victim);
+                    for &b in &safeguarded {
+                        assert!(
+                            alloc.ref_count(b) >= 1,
+                            "trial {trial}: preemption freed shared block {b}"
+                        );
+                    }
+                }
+                _ => {}
+            }
+            // Bookkeeping balance: fresh allocs minus completed frees is
+            // exactly the blocks currently referenced.
+            assert_eq!(
+                alloc.stats.allocs - alloc.stats.frees,
+                alloc.blocks_in_use() as u64,
+                "trial {trial}: alloc/free books diverged from in-use count"
+            );
+            alloc.check_invariants();
+        }
+        let preempts_before_drain = alloc.stats.preempt_frees;
+        for seq in live.drain(..) {
+            tables.free(&mut alloc, seq);
+        }
+        assert_eq!(alloc.blocks_in_use(), 0, "trial {trial}: blocks leaked");
+        assert_eq!(alloc.stats.allocs, alloc.stats.frees, "trial {trial}: books must close");
+        assert_eq!(
+            alloc.stats.preempt_frees, preempts_before_drain,
+            "trial {trial}: completion frees must not count as preemptions"
+        );
+        alloc.check_invariants();
+    }
+}
+
+/// Evict-then-recompute is lossless in the data plane: truncating a
+/// tiered sequence (preemption keeping only a prefix) and re-appending
+/// the same rows restores both tiers bit-identically, under random
+/// lengths, block sizes and truncation points — including through a
+/// copy-on-write fork sharing the prefix.
+#[test]
+fn prop_truncate_then_reappend_is_bit_identical() {
+    for trial in 0..TRIALS {
+        let mut rng = Xoshiro256::new(21_000 + trial as u64);
+        let d = 8;
+        let bs = [2, 3, 4][rng.below(3)];
+        let len = rng.range(2, 40);
+        let keep = rng.below(len); // 0 ⇒ evict everything
+        let mut pool = TieredKvPool::new(TieredPoolCfg {
+            num_blocks: 4 * len,
+            block_size: bs,
+            head_dim: d,
+            d_hot: rng.range(1, d + 1),
+            cold_resident_blocks: 0,
+        });
+        let s = pool.new_seq();
+        let rows: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..len).map(|_| (rng.normal_vec(d), rng.normal_vec(d))).collect();
+        for (k, v) in &rows {
+            pool.append(s, k, v).unwrap();
+        }
+        // A forked sibling pins the shared prefix: the victim's truncate
+        // must not disturb it, and re-appends must CoW, not clobber.
+        let sibling = pool.fork(s);
+        pool.truncate(s, keep);
+        assert_eq!(pool.len(s), keep, "trial {trial}");
+        pool.check_invariants();
+        for (k, v) in &rows[keep..] {
+            pool.append(s, k, v).unwrap();
+        }
+        for (j, (k, v)) in rows.iter().enumerate() {
+            let hot_w = pool.d_hot();
+            assert_eq!(
+                pool.hot_view().row(pool.blocks(s), j),
+                &k[..hot_w],
+                "trial {trial}: hot row {j} diverged after recompute"
+            );
+            assert_eq!(
+                pool.cold_k_view().row(pool.blocks(s), j),
+                &k[..],
+                "trial {trial}: cold K row {j}"
+            );
+            assert_eq!(
+                pool.cold_v_view().row(pool.blocks(s), j),
+                &v[..],
+                "trial {trial}: cold V row {j}"
+            );
+            // The sibling still reads the original, untouched data.
+            assert_eq!(pool.cold_k_view().row(pool.blocks(sibling), j), &k[..]);
+        }
+        pool.free_seq(s);
+        pool.free_seq(sibling);
+        assert_eq!(pool.allocator().blocks_in_use(), 0, "trial {trial}: pool leaked");
+        pool.check_invariants();
+    }
+}
+
 /// Prefix sharing is real memory: admitting N identical prompts must cost
 /// the full-prefix blocks once plus one private tail block per sequence.
 #[test]

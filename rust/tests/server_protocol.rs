@@ -1,0 +1,147 @@
+//! JSON-lines server regression tests over the deterministic sim-backed
+//! engine: malformed JSON, empty prompts and absurd `max_tokens` each get
+//! a structured `{"error": ...}` reply, and the connection stays usable
+//! for the next request. No artifacts required — the engine runs on
+//! [`SimRuntime`].
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+use loki::coordinator::{Engine, EngineCaps, EngineConfig};
+use loki::runtime::{SimCfg, SimRuntime};
+use loki::server::{serve_listener, ServerCfg};
+use loki::util::json::Json;
+
+const MAX_TOKENS_CAP: usize = 64;
+
+/// Boot a sim-backed engine + server on an ephemeral port. The threads
+/// are daemons: the engine never sees channel closure (the server holds
+/// a sender for the listener's lifetime) and the harness exits over them.
+fn start_server() -> SocketAddr {
+    let cfg = EngineConfig { gang_batch: 2, ..Default::default() };
+    let caps =
+        EngineCaps { max_len: 256, max_prompt: 256, gang_batch: 2, bytes_per_token: 8 };
+    let engine =
+        Engine::with_backend(Box::new(SimRuntime::new(SimCfg::default())), caps, cfg.clone());
+    let (tx, rx) = Engine::channel(&cfg);
+    std::thread::spawn(move || {
+        let _ = engine.run(rx);
+    });
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let _ = serve_listener(listener, tx, ServerCfg { max_tokens_cap: MAX_TOKENS_CAP });
+    });
+    addr
+}
+
+struct Conn {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Conn {
+    fn open(addr: SocketAddr) -> Self {
+        let stream = connect_with_retry(addr);
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .expect("read timeout");
+        let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+        Self { writer: stream, reader }
+    }
+
+    /// One protocol round-trip: write a line, read a line, parse it.
+    fn round_trip(&mut self, line: &str) -> Json {
+        self.writer.write_all(line.as_bytes()).expect("write");
+        self.writer.write_all(b"\n").expect("write newline");
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).expect("read reply");
+        assert!(!resp.is_empty(), "server closed the connection");
+        Json::parse(&resp).unwrap_or_else(|e| panic!("unparseable reply {resp:?}: {e}"))
+    }
+}
+
+fn connect_with_retry(addr: SocketAddr) -> TcpStream {
+    for _ in 0..50 {
+        if let Ok(s) = TcpStream::connect(addr) {
+            return s;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    panic!("server never came up on {addr}");
+}
+
+fn error_of(resp: &Json) -> String {
+    resp.get("error")
+        .and_then(|e| e.as_str())
+        .unwrap_or_else(|| panic!("expected an error reply, got {resp:?}"))
+        .to_string()
+}
+
+fn assert_ok_generation(resp: &Json, max_tokens: usize) {
+    assert!(resp.get("error").is_none(), "unexpected error: {resp:?}");
+    assert!(resp.get("text").and_then(|t| t.as_str()).is_some());
+    let tokens = resp.get("tokens").and_then(|t| t.as_usize()).expect("tokens field");
+    assert!(tokens <= max_tokens, "{tokens} > {max_tokens}");
+    let finish = resp.get("finish").and_then(|f| f.as_str()).expect("finish field");
+    assert!(
+        finish == "MaxTokens" || finish == "StopToken",
+        "unexpected finish reason {finish}"
+    );
+}
+
+#[test]
+fn malformed_json_gets_structured_error_and_connection_survives() {
+    let addr = start_server();
+    let mut conn = Conn::open(addr);
+    let resp = conn.round_trip("{this is not json");
+    assert!(error_of(&resp).contains("bad request JSON"));
+    // Same connection, next line: a valid request must still work.
+    let resp = conn.round_trip(r#"{"prompt": "hello there", "max_tokens": 4}"#);
+    assert_ok_generation(&resp, 4);
+}
+
+#[test]
+fn missing_and_empty_prompts_are_rejected_individually() {
+    let addr = start_server();
+    let mut conn = Conn::open(addr);
+    let resp = conn.round_trip(r#"{"max_tokens": 4}"#);
+    assert!(error_of(&resp).contains("prompt"));
+    let resp = conn.round_trip(r#"{"prompt": "", "max_tokens": 4}"#);
+    assert!(error_of(&resp).contains("empty"));
+    // The engine never saw either; the connection still serves.
+    let resp = conn.round_trip(r#"{"prompt": "ok then", "max_tokens": 3}"#);
+    assert_ok_generation(&resp, 3);
+}
+
+#[test]
+fn absurd_max_tokens_is_rejected_before_the_queue() {
+    let addr = start_server();
+    let mut conn = Conn::open(addr);
+    // Far beyond the cap: structured error, instantly (no queue entry).
+    let resp = conn.round_trip(r#"{"prompt": "hi", "max_tokens": 1000000000}"#);
+    let msg = error_of(&resp);
+    assert!(msg.contains("max_tokens"), "{msg}");
+    // Zero is as absurd as a billion.
+    let resp = conn.round_trip(r#"{"prompt": "hi", "max_tokens": 0}"#);
+    assert!(error_of(&resp).contains("max_tokens"));
+    // Non-integer types are a protocol error, not a default.
+    let resp = conn.round_trip(r#"{"prompt": "hi", "max_tokens": "lots"}"#);
+    assert!(error_of(&resp).contains("max_tokens"));
+    // The cap itself is inclusive and the connection is intact.
+    let resp = conn.round_trip(&format!(
+        r#"{{"prompt": "boundary", "max_tokens": {MAX_TOKENS_CAP}}}"#
+    ));
+    assert_ok_generation(&resp, MAX_TOKENS_CAP);
+}
+
+#[test]
+fn sequential_clients_share_one_engine() {
+    let addr = start_server();
+    for i in 0..3 {
+        let mut conn = Conn::open(addr);
+        let resp = conn.round_trip(&format!(r#"{{"prompt": "client {i}", "max_tokens": 2}}"#));
+        assert_ok_generation(&resp, 2);
+    }
+}
