@@ -9,7 +9,7 @@
 
 use std::sync::mpsc::channel;
 
-use loki::coordinator::request::GenRequest;
+use loki::coordinator::request::{GenRequest, Priority};
 use loki::coordinator::sampler::SampleCfg;
 use loki::coordinator::{Engine, EngineConfig};
 use loki::model::ByteTokenizer;
@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
         max_new_tokens: 40,
         stop_token: Some(b'\n' as i32),
         sampling: SampleCfg::greedy(),
+        priority: Priority::Interactive,
         reply,
     })?;
     drop(tx); // closing the queue lets engine.run() return when done

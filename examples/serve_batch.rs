@@ -9,7 +9,7 @@
 
 use std::sync::mpsc::channel;
 
-use loki::coordinator::request::GenRequest;
+use loki::coordinator::request::{GenRequest, Priority};
 use loki::coordinator::sampler::SampleCfg;
 use loki::coordinator::{Engine, EngineConfig, SchedulerPolicy};
 use loki::data::workload::{Workload, WorkloadCfg};
@@ -49,6 +49,7 @@ fn run_trace(
                 max_new_tokens: item.max_new_tokens,
                 stop_token: None,
                 sampling: SampleCfg::greedy(),
+                priority: Priority::Interactive,
                 reply: reply.clone(),
             })
             .expect("engine queue");
@@ -88,6 +89,7 @@ fn main() -> anyhow::Result<()> {
             gen_len: (12, 48),
             gen_len_dist: loki::data::workload::GenLenDist::Uniform,
             shared_prefix_len: args.usize_or("shared-prefix", 0),
+            batch_frac: 0.0,
             seed: 7,
         },
         &suite.fillers,

@@ -153,12 +153,16 @@ pub fn decode_attend(
                 .collect()
         }
         AttnVariant::StreamingLlm => {
-            let window = k_sel.saturating_sub(params.sinks).max(1);
+            // Budget invariant: sinks + window ≤ k_sel. Sinks are capped
+            // at k_sel − 1 so the window always keeps the newest token —
+            // uncapped, `sinks ≥ k_sel` plus the forced 1-token window
+            // would select k_sel + 1 slots and overrun the budget.
+            let sinks = params.sinks.min(k_sel.saturating_sub(1));
+            let window = k_sel.saturating_sub(sinks).max(1);
             let start = live.saturating_sub(window);
             (0..lanes)
                 .map(|_| {
-                    let mut sel: Vec<u32> =
-                        (0..params.sinks.min(start) as u32).collect();
+                    let mut sel: Vec<u32> = (0..sinks.min(start) as u32).collect();
                     sel.extend(start as u32..live as u32);
                     sel
                 })
@@ -285,7 +289,15 @@ pub fn decode_attend_paged(
             AttnVariant::Full | AttnVariant::PcaAttn => (0..live as u32).collect(),
             AttnVariant::ExactTopK | AttnVariant::Loki | AttnVariant::SparQ => {
                 let mut scores = vec![0.0f32; live];
-                let hot_rank = matches!(variant, AttnVariant::Loki);
+                // Loki clamps d_sub to head_dim exactly like the flat
+                // path; when the clamped width still exceeds the hot
+                // tier it ranks against the cold full-D rotated keys (a
+                // prefix of the same rows), so flat and paged can never
+                // disagree on the effective d_sub — the paged path just
+                // loses the hot-tier locality win and accounts the pass
+                // as a cold gather.
+                let hot_rank = matches!(variant, AttnVariant::Loki)
+                    && params.d_sub.min(d) <= pool.d_hot();
                 {
                     let feat_local;
                     let (arena, feat) = match variant {
@@ -295,14 +307,12 @@ pub fn decode_attend_paged(
                         }
                         AttnVariant::Loki => {
                             let d_sub = params.d_sub.min(d);
-                            assert!(
-                                d_sub <= pool.d_hot(),
-                                "Loki d_sub {} exceeds hot tier width {} — widen d_hot",
-                                d_sub,
-                                pool.d_hot()
-                            );
                             feat_local = FeatureAccess::Prefix(d_sub);
-                            (pool.hot_view(), &feat_local)
+                            if d_sub <= pool.d_hot() {
+                                (pool.hot_view(), &feat_local)
+                            } else {
+                                (pool.cold_k_view(), &feat_local)
+                            }
                         }
                         AttnVariant::SparQ => {
                             (pool.cold_k_view(), sparq_feat.as_ref().expect("precomputed"))
@@ -338,9 +348,12 @@ pub fn decode_attend_paged(
                 sel
             }
             AttnVariant::StreamingLlm => {
-                let window = k_sel.saturating_sub(params.sinks).max(1);
+                // Same budget cap as the flat path: sinks + window ≤ k_sel
+                // with the newest token always in the window.
+                let sinks = params.sinks.min(k_sel.saturating_sub(1));
+                let window = k_sel.saturating_sub(sinks).max(1);
                 let start = live.saturating_sub(window);
-                let mut sel: Vec<u32> = (0..params.sinks.min(start) as u32).collect();
+                let mut sel: Vec<u32> = (0..sinks.min(start) as u32).collect();
                 sel.extend(start as u32..live as u32);
                 sel
             }
@@ -350,11 +363,15 @@ pub fn decode_attend_paged(
         pool.account_gather(seq, &sel);
         match variant {
             AttnVariant::PcaAttn => {
+                // Same clamp/fallback contract as the Loki ranking pass:
+                // clamp to head_dim, serve from the hot tier when it is
+                // wide enough, fall back to the cold full-D keys (bit-
+                // identical prefix) otherwise.
                 let d_sub = params.d_sub.min(d);
-                assert!(d_sub <= pool.d_hot(), "PCAAttn d_sub exceeds hot tier width");
+                let from_hot = d_sub <= pool.d_hot();
                 let mut scores = vec![0.0f32; live];
                 {
-                    let arena = pool.hot_view();
+                    let arena = if from_hot { pool.hot_view() } else { pool.cold_k_view() };
                     let table = pool.blocks(seq);
                     movement.add(scores_paged_lane(
                         qlane,
@@ -366,7 +383,12 @@ pub fn decode_attend_paged(
                         &mut scores,
                     ));
                 }
-                pool.account_hot_pass();
+                if from_hot {
+                    pool.account_hot_pass();
+                } else {
+                    let all: Vec<u32> = (0..live as u32).collect();
+                    pool.account_gather(seq, &all);
+                }
                 let mask = vec![true; live];
                 softmax_masked_inplace(&mut scores, &mask);
                 let varena = pool.cold_v_view();
@@ -570,6 +592,199 @@ mod tests {
         assert_eq!(a.context, b.context, "H2O context must be bit-identical");
         assert_eq!(state_flat, state_paged, "H2O accumulators must stay in lockstep");
         pool.check_invariants();
+    }
+
+    #[test]
+    fn streaming_budget_holds_when_sinks_exceed_k_sel() {
+        use crate::kvpool::{TieredKvPool, TieredPoolCfg};
+        let (shape, q, kc, vc) = setup(1, 64, 8);
+        let stride = 64 * 8;
+        // sinks ≥ k_sel used to select sinks + 1 > k_sel slots.
+        for (k_sel, sinks) in [(6usize, 16usize), (4, 4), (1, 9), (12, 64)] {
+            let p = VariantParams { k_sel, sinks, ..Default::default() };
+            let out =
+                decode_attend(&AttnVariant::StreamingLlm, shape.clone(), &q, &kc, &vc, stride, 64, &p, None);
+            let sel = &out.selected[0];
+            assert!(
+                sel.len() <= k_sel,
+                "k_sel={k_sel} sinks={sinks}: selected {} > budget",
+                sel.len()
+            );
+            assert!(sel.contains(&63), "newest token must stay in the window");
+            // Paged path must enforce the identical cap.
+            let mut pool = TieredKvPool::new(TieredPoolCfg {
+                num_blocks: 16,
+                block_size: 8,
+                head_dim: 8,
+                d_hot: 4,
+                cold_resident_blocks: 0,
+            });
+            let s = pool.new_seq();
+            pool.load_prefix(s, &kc[..64 * 8], &vc[..64 * 8], 64).unwrap();
+            let paged = decode_attend_paged(&AttnVariant::StreamingLlm, &mut pool, &[s], &q, &p, None);
+            assert_eq!(out.selected, paged.selected, "flat/paged selection must agree");
+            assert_eq!(out.context, paged.context, "flat/paged context must be bit-identical");
+        }
+    }
+
+    /// Satellite: flat Loki/PCAAttn clamp `d_sub.min(d)` while the paged
+    /// path used to assert `d_sub <= d_hot` — the two must agree (and be
+    /// bit-identical) at and beyond the hot-tier boundary.
+    #[test]
+    fn d_sub_clamp_agrees_between_flat_and_paged_at_boundaries() {
+        use crate::kvpool::{TieredKvPool, TieredPoolCfg};
+        let (shape, q, kc, vc) = setup(2, 32, 16);
+        let (d, live, stride) = (16usize, 32usize, 32 * 16usize);
+        let d_hot = 8usize;
+        let mut pool = TieredKvPool::new(TieredPoolCfg {
+            num_blocks: 32,
+            block_size: 4,
+            head_dim: d,
+            d_hot,
+            cold_resident_blocks: 0,
+        });
+        let seqs: Vec<_> = (0..2)
+            .map(|lane| {
+                let s = pool.new_seq();
+                pool.load_prefix(
+                    s,
+                    &kc[lane * stride..lane * stride + live * d],
+                    &vc[lane * stride..lane * stride + live * d],
+                    live,
+                )
+                .unwrap();
+                s
+            })
+            .collect();
+        // Below, at, just past the hot tier, full width, and over-wide
+        // (clamps to d): every case must stay in bit-lockstep.
+        for d_sub in [4usize, d_hot, d_hot + 1, d, 100] {
+            for variant in [AttnVariant::Loki, AttnVariant::PcaAttn] {
+                let p = VariantParams { k_sel: 8, d_sub, ..Default::default() };
+                let a = decode_attend(&variant, shape.clone(), &q, &kc, &vc, stride, live, &p, None);
+                let b = decode_attend_paged(&variant, &mut pool, &seqs, &q, &p, None);
+                assert_eq!(a.selected, b.selected, "{variant:?} d_sub={d_sub} selection");
+                assert_eq!(a.context, b.context, "{variant:?} d_sub={d_sub} context bits");
+            }
+        }
+        pool.check_invariants();
+    }
+
+    /// Satellite: multi-step H2O lockstep. The single-step bitwise test
+    /// cannot catch accumulator drift that only appears once `live`
+    /// grows between steps; this drives appends between decode steps and
+    /// requires flat and paged selections, contexts and accumulators to
+    /// stay identical throughout.
+    #[test]
+    fn h2o_flat_and_paged_stay_in_lockstep_as_sequences_grow() {
+        use crate::kvpool::{TieredKvPool, TieredPoolCfg};
+        let (lanes, d, max_len) = (2usize, 8usize, 64usize);
+        let stride = max_len * d;
+        let mut rng = Xoshiro256::new(99);
+        let mut kc = vec![0.0f32; lanes * stride];
+        let mut vc = vec![0.0f32; lanes * stride];
+        let mut pool = TieredKvPool::new(TieredPoolCfg {
+            num_blocks: 64,
+            block_size: 4,
+            head_dim: d,
+            d_hot: 4,
+            cold_resident_blocks: 0,
+        });
+        let seqs: Vec<_> = (0..lanes).map(|_| pool.new_seq()).collect();
+        let mut live = 0usize;
+        let mut append = |kc: &mut Vec<f32>, vc: &mut Vec<f32>, pool: &mut TieredKvPool, live: usize, rng: &mut Xoshiro256| {
+            for lane in 0..lanes {
+                let k = rng.normal_vec(d);
+                let v = rng.normal_vec(d);
+                kc[lane * stride + live * d..lane * stride + (live + 1) * d].copy_from_slice(&k);
+                vc[lane * stride + live * d..lane * stride + (live + 1) * d].copy_from_slice(&v);
+                pool.append(seqs[lane], &k, &v).unwrap();
+            }
+        };
+        for _ in 0..12 {
+            append(&mut kc, &mut vc, &mut pool, live, &mut rng);
+            live += 1;
+        }
+        let shape = AttnShape { lanes, head_dim: d, max_len };
+        let p = VariantParams { k_sel: 6, ..Default::default() };
+        let mut flat_state: H2oState = vec![vec![0.0; live]; lanes];
+        let mut paged_state: H2oState = vec![vec![0.0; live]; lanes];
+        for step in 0..8 {
+            let q = rng.normal_vec(lanes * d);
+            let a = decode_attend(
+                &AttnVariant::H2O, shape.clone(), &q, &kc, &vc, stride, live, &p,
+                Some(&mut flat_state),
+            );
+            let b = decode_attend_paged(
+                &AttnVariant::H2O, &mut pool, &seqs, &q, &p, Some(&mut paged_state),
+            );
+            assert_eq!(a.selected, b.selected, "step {step}: selections diverged");
+            assert_eq!(a.context, b.context, "step {step}: context bits diverged");
+            assert_eq!(flat_state, paged_state, "step {step}: accumulators diverged");
+            append(&mut kc, &mut vc, &mut pool, live, &mut rng);
+            live += 1;
+        }
+        pool.check_invariants();
+    }
+
+    /// Satellite: H2O across a partial preemption. Truncating the paged
+    /// sequence and re-appending the evicted rows (the engine's
+    /// preempt-then-resume cycle at the data plane) must leave every
+    /// subsequent H2O step bit-identical to an uninterrupted twin pool
+    /// carrying the same accumulator.
+    #[test]
+    fn h2o_preempt_then_resume_stays_bitwise_identical() {
+        use crate::kvpool::{TieredKvPool, TieredPoolCfg};
+        let d = 8usize;
+        let cfg = TieredPoolCfg {
+            num_blocks: 32,
+            block_size: 4,
+            head_dim: d,
+            d_hot: 4,
+            cold_resident_blocks: 0,
+        };
+        let mut rng = Xoshiro256::new(123);
+        let rows: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..20).map(|_| (rng.normal_vec(d), rng.normal_vec(d))).collect();
+        let queries: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(d)).collect();
+        let mut base = TieredKvPool::new(cfg);
+        let mut vict = TieredKvPool::new(cfg);
+        let (sb, sv) = (base.new_seq(), vict.new_seq());
+        for (k, v) in &rows[..14] {
+            base.append(sb, k, v).unwrap();
+            vict.append(sv, k, v).unwrap();
+        }
+        let p = VariantParams { k_sel: 6, ..Default::default() };
+        let mut st_base: H2oState = vec![vec![0.0; 14]];
+        let mut st_vict: H2oState = vec![vec![0.0; 14]];
+        // A few joint steps so the accumulators carry real history.
+        for q in &queries[..3] {
+            let a = decode_attend_paged(&AttnVariant::H2O, &mut base, &[sb], q, &p, Some(&mut st_base));
+            let b = decode_attend_paged(&AttnVariant::H2O, &mut vict, &[sv], q, &p, Some(&mut st_vict));
+            assert_eq!(a.context, b.context);
+        }
+        // Partial preemption on the victim: drop 2 tail blocks, then
+        // resume by recomputing (re-appending) only the evicted rows.
+        let kept = vict.truncate_tail_blocks(sv, 2);
+        assert_eq!(kept, 8, "two 4-slot tail blocks evicted");
+        for (k, v) in &rows[kept..14] {
+            vict.append(sv, k, v).unwrap();
+        }
+        // Keep generating: both caches also grow with fresh appends.
+        let mut live = 14;
+        for (i, q) in queries[3..].iter().enumerate() {
+            let a = decode_attend_paged(&AttnVariant::H2O, &mut base, &[sb], q, &p, Some(&mut st_base));
+            let b = decode_attend_paged(&AttnVariant::H2O, &mut vict, &[sv], q, &p, Some(&mut st_vict));
+            assert_eq!(a.selected, b.selected, "post-resume step {i}: selections diverged");
+            assert_eq!(a.context, b.context, "post-resume step {i}: context bits diverged");
+            assert_eq!(st_base, st_vict, "post-resume step {i}: accumulators diverged");
+            let (k, v) = &rows[live];
+            base.append(sb, k, v).unwrap();
+            vict.append(sv, k, v).unwrap();
+            live += 1;
+        }
+        base.check_invariants();
+        vict.check_invariants();
     }
 
     #[test]

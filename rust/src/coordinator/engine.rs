@@ -29,6 +29,30 @@
 //!   uncontended run. Loki makes this cheap: the hot low-rank K̂ tier is
 //!   a small fraction of the cache, and shared prompt blocks never left.
 //!
+//! Preemption itself is a policy surface:
+//!
+//! * [`VictimPolicy`] picks *who* is evicted. `YoungestFirst` is the
+//!   single-class default; `PriorityAware` turns the engine into a
+//!   multi-class scheduler — requests carry a
+//!   [`Priority`](super::request::Priority) class (`Interactive` /
+//!   `Batch`), victims are scored by (class, recompute cost, age), a
+//!   grower never evicts strictly-higher-priority work, and the pending
+//!   queue is kept class-banded so interactive traffic is admitted ahead
+//!   of queued batch work.
+//! * [`PreemptMode`] picks *how much* is evicted. `Full` releases the
+//!   victim's whole table; `Partial` frees only the tail blocks the
+//!   grower needs ([`TableSet::truncate_tail`]) and leaves the prefix
+//!   granted, so the resume recomputes just the truncated suffix —
+//!   byte-identical outputs, strictly fewer recomputed tokens, paid for
+//!   with pool capacity parked on queued work. (The deterministic sim
+//!   backend still re-prefills the full history to rebuild its state;
+//!   the pool tables and the recompute counters model what a block-
+//!   table-aware device cache — where the kept prefix never left —
+//!   would actually recompute.) Kept prefixes are second-tier victims:
+//!   when no busy lane can be preempted, the engine reclaims them from
+//!   the queue before giving up, so a lone grower can never be starved
+//!   by parked blocks.
+//!
 //! Full prompt blocks are shared copy-on-write across requests with equal
 //! prefixes (content-addressed, vLLM-style), so gang-wide system prompts
 //! are paid for once in the pool accounting. This replaces the old
@@ -43,6 +67,7 @@
 //! Backpressure: submissions go through a bounded `SyncSender`; when the
 //! queue is full, callers block (admission control at the front door).
 
+use std::cmp::Reverse;
 use std::collections::VecDeque;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
 use std::time::Instant;
@@ -54,7 +79,9 @@ use crate::model::ByteTokenizer;
 use crate::runtime::{DecodeBackend, DecodeRequest, RuntimeService, StateId};
 
 use super::metrics::EngineMetrics;
-use super::request::{FinishReason, GenRequest, GenResult, QueuedRequest, RequestTiming};
+use super::request::{
+    FinishReason, GenRequest, GenResult, Priority, QueuedRequest, RequestTiming,
+};
 use super::sampler::Sampler;
 
 /// Token slots reserved beyond `prompt + decode budget`: one for the
@@ -104,6 +131,43 @@ impl Default for AdmissionPolicy {
     fn default() -> Self {
         AdmissionPolicy::ReserveFull
     }
+}
+
+/// How `grow_or_preempt` picks its victim when the pool runs dry
+/// (`repro serve --victim-policy youngest|priority`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum VictimPolicy {
+    /// The youngest other eligible lane (highest admission tick) — the
+    /// single-class default; PR 2's admission tests pin this behavior.
+    #[default]
+    YoungestFirst,
+    /// Multi-class scheduling. Victims are scored by (priority class,
+    /// recompute cost, age): `Batch` lanes are evicted before
+    /// `Interactive` ones, then the cheapest resume, then the youngest;
+    /// a grower never evicts a lane of strictly higher priority (it
+    /// yields its own lane instead). The pending queue is kept
+    /// class-banded — `Interactive` ahead of `Batch`, resumes at the
+    /// front of their band — so latency-sensitive work is also
+    /// *admitted* first, not merely preempted last.
+    PriorityAware,
+}
+
+/// How much of a victim's KV a preemption releases
+/// (`repro serve --preempt full|partial`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PreemptMode {
+    /// Release the victim's entire block table (PR 2 behavior): the
+    /// resume recomputes the whole `prompt ++ produced` history.
+    #[default]
+    Full,
+    /// Release only the tail blocks the grower needs
+    /// ([`TableSet::truncate_tail`]): the victim keeps its prefix blocks
+    /// granted while queued and resumes by recomputing just the
+    /// truncated suffix — byte-identical outputs, strictly fewer
+    /// recomputed tokens, at the cost of pool capacity held by
+    /// preempted work (reclaimed as second-tier victims under
+    /// unresolvable pressure).
+    Partial,
 }
 
 /// Token slots a request reserves at admission under `policy`. The pure
@@ -156,6 +220,11 @@ pub struct EngineConfig {
     pub pool: PoolConfig,
     /// Reservation policy: full-budget or speculative-with-preemption.
     pub admission: AdmissionPolicy,
+    /// Who gets preempted under pool pressure (and, under
+    /// `PriorityAware`, how the pending queue is ordered).
+    pub victim_policy: VictimPolicy,
+    /// How much of a victim's KV a preemption releases.
+    pub preempt: PreemptMode,
     pub verbose: bool,
 }
 
@@ -169,6 +238,8 @@ impl Default for EngineConfig {
             max_queue: 256,
             pool: PoolConfig::default(),
             admission: AdmissionPolicy::ReserveFull,
+            victim_policy: VictimPolicy::YoungestFirst,
+            preempt: PreemptMode::Full,
             verbose: false,
         }
     }
@@ -206,6 +277,9 @@ struct BusyLane {
     produced: Vec<i32>,
     next_token: i32,
     ttft_s: Option<f64>,
+    /// Decode iteration at which the first token was emitted — the
+    /// deterministic TTFT the multi-class tests compare across classes.
+    ttft_step: Option<u64>,
     /// Times this request was evicted mid-flight and re-queued.
     preempted: u32,
     /// Original admission tick — *kept* across preempt/resume cycles so
@@ -215,13 +289,44 @@ struct BusyLane {
     tick: u64,
 }
 
+/// Prefix blocks a partially-preempted sequence kept granted in the pool
+/// while it waits in the queue: `seq` is still a live table and resume
+/// recomputes only `history_len - len` tokens.
+#[derive(Clone, Copy, Debug)]
+struct KeptPrefix {
+    seq: SeqId,
+    /// Token positions the kept blocks cover.
+    len: usize,
+}
+
 /// Queue entries: fresh submissions and preempted requests awaiting
-/// re-admission (resumes carry their full generation state and re-enter
-/// at the queue front — FIFO age priority is what makes the preemption
-/// loop livelock-free).
+/// re-admission. Resumes carry their full generation state (plus any
+/// kept prefix under partial preemption) and re-enter at the front of
+/// the queue — or, under `VictimPolicy::PriorityAware`, at the front of
+/// their class band — which is what makes the preemption loop
+/// livelock-free within a class.
 enum PendingItem {
     Fresh(QueuedRequest),
-    Resume(Box<BusyLane>),
+    Resume {
+        lane: Box<BusyLane>,
+        kept: Option<KeptPrefix>,
+    },
+}
+
+/// Importance class of a queue entry (class-banded queue ordering).
+fn item_priority(item: &PendingItem) -> Priority {
+    match item {
+        PendingItem::Fresh(q) => q.req.priority,
+        PendingItem::Resume { lane, .. } => lane.req.req.priority,
+    }
+}
+
+/// Importance class of a lane's occupant (`None` for free lanes).
+fn lane_priority(lane: &Lane) -> Option<Priority> {
+    match lane {
+        Lane::Busy(b) => Some(b.req.req.priority),
+        Lane::Free => None,
+    }
 }
 
 /// Outcome of a pool-admission attempt.
@@ -242,28 +347,6 @@ fn busy_tick(lane: &Lane) -> u64 {
     match lane {
         Lane::Busy(b) => b.tick,
         Lane::Free => 0,
-    }
-}
-
-/// Evict a busy lane: free its pool blocks (shared prefixes survive via
-/// refcounts — `release` only returns a block at refcount zero) and
-/// requeue the request at the *front* of the queue with its accumulated
-/// state for byte-identical resumption by prefix recompute.
-fn preempt(
-    lane: usize,
-    lanes: &mut [Lane],
-    lane_seq: &mut [Option<SeqId>],
-    tables: &mut TableSet,
-    pool: &mut BlockAllocator,
-    pending: &mut VecDeque<PendingItem>,
-    metrics: &mut EngineMetrics,
-) {
-    let Some(seq) = lane_seq[lane].take() else { return };
-    tables.preempt_free(pool, seq);
-    metrics.preemptions += 1;
-    if let Lane::Busy(mut b) = std::mem::replace(&mut lanes[lane], Lane::Free) {
-        b.preempted += 1;
-        pending.push_front(PendingItem::Resume(b));
     }
 }
 
@@ -317,6 +400,198 @@ impl Engine {
         }
     }
 
+    /// Single queue-insertion rule for both entry kinds, so the two band
+    /// comparators can never drift apart. Under `YoungestFirst` the queue
+    /// is a plain deque (back for fresh work, front for resumes — the
+    /// FIFO age priority that keeps the preemption loop livelock-free).
+    /// Under `PriorityAware` the queue is class-banded: fresh work lands
+    /// at the *back* of its band (after every same-or-higher-priority
+    /// entry), resumes at the *front* of it — so a preempted `Batch`
+    /// request never jumps ahead of waiting `Interactive` work, and
+    /// within a band resumes still precede fresh submissions.
+    fn enqueue(&self, pending: &mut VecDeque<PendingItem>, item: PendingItem, front_of_band: bool) {
+        match self.cfg.victim_policy {
+            VictimPolicy::YoungestFirst => {
+                if front_of_band {
+                    pending.push_front(item);
+                } else {
+                    pending.push_back(item);
+                }
+            }
+            VictimPolicy::PriorityAware => {
+                let c = item_priority(&item);
+                let pos = pending
+                    .iter()
+                    .position(|it| {
+                        let p = item_priority(it);
+                        if front_of_band {
+                            p >= c
+                        } else {
+                            p > c
+                        }
+                    })
+                    .unwrap_or(pending.len());
+                pending.insert(pos, item);
+            }
+        }
+    }
+
+    fn enqueue_fresh(&self, pending: &mut VecDeque<PendingItem>, q: QueuedRequest) {
+        self.enqueue(pending, PendingItem::Fresh(q), false);
+    }
+
+    fn requeue_resume(
+        &self,
+        pending: &mut VecDeque<PendingItem>,
+        lane: Box<BusyLane>,
+        kept: Option<KeptPrefix>,
+    ) {
+        self.enqueue(pending, PendingItem::Resume { lane, kept }, true);
+    }
+
+    /// Evict a busy lane. Under [`PreemptMode::Full`] every pool block
+    /// the victim holds is released (shared prefixes survive via
+    /// refcounts — `release` only returns a block at refcount zero);
+    /// under [`PreemptMode::Partial`] only the `need_blocks` tail blocks
+    /// the grower asked for are freed ([`TableSet::truncate_tail`]) and
+    /// the kept prefix rides along in the queue for a cheaper resume.
+    /// Either way the request re-enters the pending queue with its
+    /// accumulated state for byte-identical resumption by prefix (or
+    /// suffix) recompute.
+    #[allow(clippy::too_many_arguments)]
+    fn preempt(
+        &self,
+        lane: usize,
+        need_blocks: usize,
+        lanes: &mut [Lane],
+        lane_seq: &mut [Option<SeqId>],
+        tables: &mut TableSet,
+        pool: &mut BlockAllocator,
+        pending: &mut VecDeque<PendingItem>,
+        metrics: &mut EngineMetrics,
+    ) {
+        let Some(seq) = lane_seq[lane].take() else { return };
+        let Lane::Busy(mut b) = std::mem::replace(&mut lanes[lane], Lane::Free) else {
+            // Unreachable — preemption targets busy lanes — but a seq
+            // must never leak if it ever fires.
+            tables.preempt_free(pool, seq);
+            return;
+        };
+        // What the resume will re-prefill. The table's mirror length can
+        // sit one position past this: the step-5 pass advances the mirror
+        // for the in-flight token *before* section 6 would have delivered
+        // it into `produced` — a preempted lane skips that delivery and
+        // recomputes the token instead, so the kept prefix must be
+        // clamped to the replay or `resume_extend` would see a kept
+        // position the replay cannot cover.
+        let replay = b.prompt.len() + b.produced.len();
+        let kept = match self.cfg.preempt {
+            PreemptMode::Full => {
+                tables.preempt_free(pool, seq);
+                None
+            }
+            PreemptMode::Partial => {
+                let out = tables.truncate_tail(pool, seq, need_blocks);
+                if out.freed == 0 || out.kept_len == 0 || replay == 0 {
+                    // Nothing came free (fully-shared tail) or nothing
+                    // was worth keeping: degrade to a whole-sequence
+                    // release so the grow loop is guaranteed progress.
+                    tables.preempt_free(pool, seq);
+                    None
+                } else {
+                    tables.clamp_len(seq, replay);
+                    pool.stats.preempt_frees += 1;
+                    metrics.partial_preemptions += 1;
+                    Some(KeptPrefix { seq, len: out.kept_len.min(replay) })
+                }
+            }
+        };
+        metrics.preemptions += 1;
+        b.preempted += 1;
+        metrics.per_class[b.req.req.priority.index()].preemptions += 1;
+        self.requeue_resume(pending, b, kept);
+    }
+
+    /// Victim choice when a grow finds the pool dry, over the lanes that
+    /// (a) would actually return blocks — a lane whose blocks are all
+    /// shared frees nothing — and (b) can be resumed faithfully (their
+    /// `prompt ++ produced` recompute fits the prefill bound).
+    fn select_victim(
+        &self,
+        grower: usize,
+        lanes: &[Lane],
+        lane_seq: &[Option<SeqId>],
+        lane_tick: &[u64],
+        tables: &TableSet,
+        pool: &BlockAllocator,
+    ) -> Option<usize> {
+        let candidates = (0..lanes.len()).filter(|&l| {
+            l != grower
+                && self.resumable(&lanes[l])
+                && lane_seq[l].is_some_and(|s| tables.private_blocks(pool, s) > 0)
+        });
+        match self.cfg.victim_policy {
+            VictimPolicy::YoungestFirst => candidates.max_by_key(|&l| lane_tick[l]),
+            VictimPolicy::PriorityAware => {
+                let own = lane_priority(&lanes[grower]).unwrap_or(Priority::Batch);
+                candidates
+                    // Never evict strictly-higher-priority work; the
+                    // grower yields its own lane instead (the caller's
+                    // no-victim path).
+                    .filter(|&l| lane_priority(&lanes[l]).is_some_and(|p| p >= own))
+                    .max_by_key(|&l| {
+                        let Lane::Busy(b) = &lanes[l] else {
+                            unreachable!("candidates are busy lanes")
+                        };
+                        // Score: lowest class first (Batch > Interactive
+                        // in the Ord), then the cheapest recompute, then
+                        // the youngest admission.
+                        let cost = b.prompt.len() + b.produced.len();
+                        (b.req.req.priority, Reverse(cost), lane_tick[l])
+                    })
+            }
+        }
+    }
+
+    /// Second-tier victims: prefixes kept in the pool by queued
+    /// (already-preempted) requests. Reclaiming one only raises that
+    /// request's recompute on resume — never its output — so this runs
+    /// before a grower gives up or yields. Walks from the back of the
+    /// queue (lowest band first) in two passes: first only prefixes
+    /// holding private (refcount-1) blocks, which actually return
+    /// capacity; then, only if nothing came free, the rest — entries
+    /// whose blocks are shared free nothing *individually*, but
+    /// releasing all sharers does, so the fallback pass keeps the
+    /// lone-grower guarantee intact. Returns whether a block came free.
+    fn reclaim_queued_kept(
+        &self,
+        pending: &mut VecDeque<PendingItem>,
+        tables: &mut TableSet,
+        pool: &mut BlockAllocator,
+        metrics: &mut EngineMetrics,
+    ) -> bool {
+        let before = pool.num_free();
+        for productive_only in [true, false] {
+            for item in pending.iter_mut().rev() {
+                let PendingItem::Resume { kept, .. } = item else { continue };
+                let Some(k) = *kept else { continue };
+                if productive_only && tables.private_blocks(pool, k.seq) == 0 {
+                    continue;
+                }
+                *kept = None;
+                tables.preempt_free(pool, k.seq);
+                metrics.kept_reclaims += 1;
+                if pool.num_free() > before {
+                    return true;
+                }
+            }
+            if pool.num_free() > before {
+                break;
+            }
+        }
+        pool.num_free() > before
+    }
+
     /// Run until the submission channel closes and all work drains.
     /// Returns the fleet metrics.
     pub fn run(&self, rx: Receiver<GenRequest>) -> Result<EngineMetrics> {
@@ -352,10 +627,14 @@ impl Engine {
                 match rx.try_recv() {
                     Ok(req) => {
                         metrics.requests_in += 1;
-                        pending.push_back(PendingItem::Fresh(QueuedRequest {
-                            req,
-                            submitted: Instant::now(),
-                        }));
+                        self.enqueue_fresh(
+                            &mut pending,
+                            QueuedRequest {
+                                req,
+                                submitted: Instant::now(),
+                                submitted_step: metrics.decode_steps,
+                            },
+                        );
                     }
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => {
@@ -373,10 +652,14 @@ impl Engine {
                 match rx.recv() {
                     Ok(req) => {
                         metrics.requests_in += 1;
-                        pending.push_back(PendingItem::Fresh(QueuedRequest {
-                            req,
-                            submitted: Instant::now(),
-                        }));
+                        self.enqueue_fresh(
+                            &mut pending,
+                            QueuedRequest {
+                                req,
+                                submitted: Instant::now(),
+                                submitted_step: metrics.decode_steps,
+                            },
+                        );
                     }
                     Err(_) => break,
                 }
@@ -394,11 +677,24 @@ impl Engine {
                         }
                         Admit::Backpressure => {
                             metrics.admission_blocked += 1;
+                            // Standstill guard: with nothing running and
+                            // nothing admitted this round, the only
+                            // reclaimable capacity is prefixes kept by
+                            // queued preempted requests — without this,
+                            // parked kept blocks could backpressure the
+                            // queue head forever.
+                            if batch.is_empty()
+                                && !lanes.iter().any(|l| matches!(l, Lane::Busy(_)))
+                            {
+                                self.reclaim_queued_kept(
+                                    &mut pending, &mut tables, &mut pool, &mut metrics,
+                                );
+                            }
                             break;
                         }
                         Admit::NeverFits => {
                             let item = pending.pop_front().unwrap();
-                            self.fail_item(item, &mut metrics);
+                            self.fail_item(item, &mut pool, &mut tables, &mut metrics);
                         }
                     }
                 }
@@ -464,13 +760,21 @@ impl Engine {
                     Admit::Backpressure => {
                         // Head-of-line request waits for blocks to free up;
                         // completions (and preempted-lane releases) are
-                        // what unblock it.
+                        // what unblock it. If *nothing* is running, the
+                        // only blocks that can ever free are prefixes
+                        // kept by queued preempted requests — reclaim
+                        // them rather than spinning forever.
                         metrics.admission_blocked += 1;
+                        if !lanes.iter().any(|l| matches!(l, Lane::Busy(_))) {
+                            self.reclaim_queued_kept(
+                                &mut pending, &mut tables, &mut pool, &mut metrics,
+                            );
+                        }
                         break;
                     }
                     Admit::NeverFits => {
                         let item = pending.pop_front().unwrap();
-                        self.fail_item(item, &mut metrics);
+                        self.fail_item(item, &mut pool, &mut tables, &mut metrics);
                     }
                 }
             }
@@ -552,8 +856,15 @@ impl Engine {
                     metrics.tokens_generated += 1;
                     if b.ttft_s.is_none() {
                         let t = b.req.submitted.elapsed().as_secs_f64();
+                        // Steps since the request entered the queue — a
+                        // deterministic, uptime-independent TTFT.
+                        let steps = metrics.decode_steps.saturating_sub(b.req.submitted_step);
                         b.ttft_s = Some(t);
+                        b.ttft_step = Some(steps);
                         metrics.ttft.push(t);
+                        let class = &mut metrics.per_class[b.req.req.priority.index()];
+                        class.ttft.push(t);
+                        class.ttft_steps.push(steps as f64);
                     }
                     // The admission-sampled token is only stop-checked
                     // here (it was drawn from prefill logits before any
@@ -602,7 +913,7 @@ impl Engine {
             PendingItem::Fresh(q) => {
                 (q.req.prompt.len().min(self.prompt_budget(&q.req)), q.req.max_new_tokens)
             }
-            PendingItem::Resume(b) => (
+            PendingItem::Resume { lane: b, .. } => (
                 (b.prompt.len() + b.produced.len()).min(self.max_prompt),
                 b.req.req.max_new_tokens.saturating_sub(b.produced.len()),
             ),
@@ -616,7 +927,7 @@ impl Engine {
     fn plan_tokens(&self, item: &PendingItem) -> Vec<i32> {
         match item {
             PendingItem::Fresh(q) => self.clamped_prompt(&q.req),
-            PendingItem::Resume(b) => {
+            PendingItem::Resume { lane: b, .. } => {
                 let mut toks = b.prompt.clone();
                 toks.extend_from_slice(&b.produced);
                 // Defensive clamp for real prefill buckets — unreachable
@@ -652,12 +963,27 @@ impl Engine {
             return Admit::NeverFits;
         }
         let reserve = reserve_tokens(self.cfg.admission, len, remaining, self.max_len);
+        let total_blocks = pool.blocks_for(reserve.max(len).max(1));
+        // A partially-preempted resume still owns its kept prefix blocks:
+        // re-extend that table to the reservation instead of admitting a
+        // fresh sequence (the kept blocks never left the pool, so only
+        // the difference must be free).
+        if let PendingItem::Resume { kept: Some(k), .. } = item {
+            let kept_blocks = tables.table(k.seq).map_or(0, |t| t.blocks.len());
+            if pool.num_free() < total_blocks.saturating_sub(kept_blocks) {
+                return Admit::Backpressure;
+            }
+            let tokens = self.plan_tokens(item);
+            return match tables.resume_extend(pool, k.seq, tokens.len(), total_blocks) {
+                Ok(()) => Admit::Granted(k.seq, tokens),
+                Err(_) => Admit::Backpressure,
+            };
+        }
         // Cheap lower bound before cloning tokens: even a fully-shared
         // prompt leaves `total - full_prompt_blocks` fresh allocations
         // (tails are always private), so fewer free blocks than that is
         // a guaranteed Err — the common backpressure iteration costs no
         // allocation at all.
-        let total_blocks = pool.blocks_for(reserve.max(len).max(1));
         let shareable = if tables.sharing_enabled() { len / tables.block_size() } else { 0 };
         if pool.num_free() < total_blocks.saturating_sub(shareable) {
             return Admit::Backpressure;
@@ -727,21 +1053,13 @@ impl Engine {
                 }
                 Err(_) => {
                     metrics.grow_stalls += 1;
-                    // Victim: the youngest other busy lane that (a) would
-                    // actually return blocks — a lane whose blocks are
-                    // all shared frees nothing — and (b) can be resumed
-                    // faithfully: its `prompt ++ produced` recompute must
-                    // fit the prefill bound, or resumption would have to
-                    // truncate history and silently diverge.
-                    let victim = (0..lanes.len())
-                        .filter(|&l| l != lane && self.resumable(&lanes[l]))
-                        .filter(|&l| {
-                            lane_seq[l].is_some_and(|s| tables.private_blocks(pool, s) > 0)
-                        })
-                        .max_by_key(|&l| lane_tick[l]);
+                    let victim =
+                        self.select_victim(lane, lanes, lane_seq, lane_tick, tables, pool);
                     match victim {
                         Some(v) => {
-                            preempt(v, lanes, lane_seq, tables, pool, pending, metrics);
+                            self.preempt(
+                                v, want, lanes, lane_seq, tables, pool, pending, metrics,
+                            );
                             if self.cfg.verbose {
                                 eprintln!(
                                     "[engine] preempted lane {v} to grow lane {lane} \
@@ -751,13 +1069,23 @@ impl Engine {
                             }
                         }
                         None => {
+                            // Before yielding or giving up, reclaim
+                            // prefixes kept in the pool by queued
+                            // partially-preempted requests — the only
+                            // cost is their recompute on resume.
+                            if self.reclaim_queued_kept(pending, tables, pool, metrics) {
+                                continue;
+                            }
                             let others_busy = (0..lanes.len())
                                 .any(|l| l != lane && matches!(lanes[l], Lane::Busy(_)));
                             if others_busy && self.resumable(&lanes[lane]) {
                                 // Nothing preemptible frees blocks: yield
                                 // our own lane and wait at the queue
                                 // front for completions to free capacity.
-                                preempt(lane, lanes, lane_seq, tables, pool, pending, metrics);
+                                self.preempt(
+                                    lane, want, lanes, lane_seq, tables, pool, pending,
+                                    metrics,
+                                );
                             } else {
                                 // Alone and still starved (footprint
                                 // exceeds the pool — admission's
@@ -808,11 +1136,23 @@ impl Engine {
 
     /// Fail the queue head when it can never be admitted: fresh requests
     /// are rejected outright; resumed requests deliver the tokens they
-    /// already produced (their footprint grew past the pool mid-flight).
-    fn fail_item(&self, item: PendingItem, metrics: &mut EngineMetrics) {
+    /// already produced (their footprint grew past the pool mid-flight),
+    /// returning any kept prefix blocks to the pool.
+    fn fail_item(
+        &self,
+        item: PendingItem,
+        pool: &mut BlockAllocator,
+        tables: &mut TableSet,
+        metrics: &mut EngineMetrics,
+    ) {
         match item {
             PendingItem::Fresh(q) => self.reject(q, metrics),
-            PendingItem::Resume(b) => self.complete(*b, FinishReason::CacheFull, metrics),
+            PendingItem::Resume { lane, kept } => {
+                if let Some(k) = kept {
+                    tables.free(pool, k.seq);
+                }
+                self.complete(*lane, FinishReason::CacheFull, metrics);
+            }
         }
     }
 
@@ -867,14 +1207,20 @@ impl Engine {
             // Resumes keep their original admission tick: age is measured
             // from first admission, so a victim does not become the
             // youngest (i.e. next) victim merely by having been evicted.
-            PendingItem::Resume(b) => {
+            PendingItem::Resume { lane: b, kept } => {
                 metrics.resumes += 1;
-                metrics.recomputed_tokens += tokens.len() as u64;
+                // A kept prefix never left the pool, so only the
+                // truncated suffix counts as recompute (the tally a
+                // block-table-aware cache would pay).
+                let kept_len = kept.map_or(0, |k| k.len.min(tokens.len()));
+                metrics.recomputed_tokens += (tokens.len() - kept_len) as u64;
+                metrics.recompute_saved_tokens += kept_len as u64;
                 if self.cfg.verbose {
                     eprintln!(
-                        "[engine] resumed #{} at {} produced tokens",
+                        "[engine] resumed #{} at {} produced tokens ({} kept)",
                         b.req.req.id,
-                        b.produced.len()
+                        b.produced.len(),
+                        kept_len
                     );
                 }
                 Lane::Busy(b)
@@ -904,6 +1250,7 @@ impl Engine {
             produced: Vec::new(),
             next_token: first,
             ttft_s: None,
+            ttft_step: None,
             preempted: 0,
             tick,
         }))
@@ -913,9 +1260,13 @@ impl Engine {
         metrics.requests_done += 1;
         let total = b.req.submitted.elapsed().as_secs_f64();
         metrics.e2e_latency.push(total);
+        let class = &mut metrics.per_class[b.req.req.priority.index()];
+        class.done += 1;
+        class.e2e.push(total);
         let timing = RequestTiming {
             queue_s: 0.0,
             ttft_s: b.ttft_s.unwrap_or(total),
+            ttft_steps: b.ttft_step.unwrap_or(0),
             total_s: total,
             decode_steps: b.produced.len(),
             preemptions: b.preempted as usize,
@@ -963,6 +1314,29 @@ mod tests {
     #[test]
     fn default_admission_is_reserve_full() {
         assert_eq!(EngineConfig::default().admission, AdmissionPolicy::ReserveFull);
+    }
+
+    #[test]
+    fn default_preemption_policy_is_pr2_behavior() {
+        // Youngest-first whole-sequence preemption is the pinned default:
+        // every PR 2 admission test runs unchanged under it.
+        let cfg = EngineConfig::default();
+        assert_eq!(cfg.victim_policy, VictimPolicy::YoungestFirst);
+        assert_eq!(cfg.preempt, PreemptMode::Full);
+        assert_eq!(VictimPolicy::default(), VictimPolicy::YoungestFirst);
+        assert_eq!(PreemptMode::default(), PreemptMode::Full);
+    }
+
+    #[test]
+    fn priority_orders_interactive_before_batch() {
+        use super::Priority;
+        // The victim scorer relies on this Ord: "greater" means "evict
+        // first", and the class-banded queue puts smaller classes ahead.
+        assert!(Priority::Interactive < Priority::Batch);
+        assert_eq!(Priority::default(), Priority::Interactive);
+        assert_eq!(Priority::parse("batch"), Some(Priority::Batch));
+        assert_eq!(Priority::parse("Interactive"), Some(Priority::Interactive));
+        assert_eq!(Priority::parse("urgent"), None);
     }
 
     #[test]

@@ -6,6 +6,36 @@ use std::time::Instant;
 
 use crate::linalg::stats::Summary;
 
+use super::request::{Priority, PRIORITY_CLASSES};
+
+/// Latency and scheduler activity for one priority class — the
+/// multi-class SLO view (`per_class[Priority::Interactive.index()]` vs
+/// `per_class[Priority::Batch.index()]`).
+#[derive(Debug)]
+pub struct ClassMetrics {
+    pub done: u64,
+    /// Mid-flight evictions of lanes in this class.
+    pub preemptions: u64,
+    /// Seconds to first token.
+    pub ttft: Summary,
+    /// Decode iterations to first token — the wall-clock-free TTFT the
+    /// deterministic scheduler tests compare across classes.
+    pub ttft_steps: Summary,
+    pub e2e: Summary,
+}
+
+impl ClassMetrics {
+    fn new() -> Self {
+        Self {
+            done: 0,
+            preemptions: 0,
+            ttft: Summary::new(),
+            ttft_steps: Summary::new(),
+            e2e: Summary::new(),
+        }
+    }
+}
+
 #[derive(Debug)]
 pub struct EngineMetrics {
     started: Instant,
@@ -27,13 +57,23 @@ pub struct EngineMetrics {
     /// Mid-flight evictions under speculative admission: a lane's private
     /// blocks were released and its request re-queued for resumption.
     pub preemptions: u64,
+    /// Preemptions that kept a prefix in the pool (`PreemptMode::Partial`
+    /// with at least one tail block actually freed).
+    pub partial_preemptions: u64,
+    /// Kept prefixes reclaimed from *queued* requests under unresolvable
+    /// pressure (second-tier victims; their resume pays full recompute).
+    pub kept_reclaims: u64,
     /// Preempted requests re-admitted (prefix recompute + sampler-state
     /// restore). `preemptions - resumes` requests are still queued or
     /// were finished as `CacheFull` after shrinking pools.
     pub resumes: u64,
     /// Tokens re-prefilled by resume recomputes (the preemption tax:
-    /// prompt + produced tokens per resume).
+    /// prompt + produced tokens per full resume, only the truncated
+    /// suffix for a kept-prefix resume).
     pub recomputed_tokens: u64,
+    /// Tokens whose KV survived preemption in kept prefix blocks —
+    /// recompute that partial preemption avoided.
+    pub recompute_saved_tokens: u64,
     /// Successful speculative block-table growths and blocks they added.
     pub grow_events: u64,
     pub grown_blocks: u64,
@@ -60,6 +100,9 @@ pub struct EngineMetrics {
     pub e2e_latency: Summary,
     pub queue_wait: Summary,
     pub decode_step_time: Summary,
+    /// Per-priority-class latency/activity, indexed by
+    /// [`Priority::index`].
+    pub per_class: [ClassMetrics; PRIORITY_CLASSES],
 }
 
 impl Default for EngineMetrics {
@@ -76,8 +119,11 @@ impl Default for EngineMetrics {
             lane_resets: 0,
             admission_blocked: 0,
             preemptions: 0,
+            partial_preemptions: 0,
+            kept_reclaims: 0,
             resumes: 0,
             recomputed_tokens: 0,
+            recompute_saved_tokens: 0,
             grow_events: 0,
             grown_blocks: 0,
             grow_stalls: 0,
@@ -91,6 +137,7 @@ impl Default for EngineMetrics {
             e2e_latency: Summary::new(),
             queue_wait: Summary::new(),
             decode_step_time: Summary::new(),
+            per_class: [ClassMetrics::new(), ClassMetrics::new()],
         }
     }
 }
@@ -132,6 +179,11 @@ impl EngineMetrics {
         }
     }
 
+    /// Per-class view (`metrics.class(Priority::Interactive).ttft…`).
+    pub fn class(&self, p: Priority) -> &ClassMetrics {
+        &self.per_class[p.index()]
+    }
+
     /// Peak KV bytes the paged pool actually had granted.
     pub fn kv_resident_bytes_peak(&self) -> u64 {
         self.pool_blocks_peak * self.pool_block_bytes
@@ -149,13 +201,13 @@ impl EngineMetrics {
     }
 
     pub fn report(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests: {} in / {} done / {} rejected | tokens: {} ({:.1} tok/s)\n\
              prefills: {} | decode steps: {} | injections: {} | lane resets: {}\n\
              kv pool:   peak {}/{} blocks ({:.1} MB resident vs {:.1} MB flat, {:.2}x) | \
              shared {} | blocked {}\n\
-             admission: mean occupancy {:.1}% | preempts {} / resumes {} \
-             ({} tok recomputed) | grows {} (+{} blocks, {} stalls)\n\
+             admission: mean occupancy {:.1}% | preempts {} ({} partial, {} kept-reclaims) \
+             / resumes {} ({} tok recomputed, {} saved) | grows {} (+{} blocks, {} stalls)\n\
              ttft_s:    {}\n\
              e2e_s:     {}\n\
              queue_s:   {}\n\
@@ -178,8 +230,11 @@ impl EngineMetrics {
             self.admission_blocked,
             self.mean_pool_occupancy() * 100.0,
             self.preemptions,
+            self.partial_preemptions,
+            self.kept_reclaims,
             self.resumes,
             self.recomputed_tokens,
+            self.recompute_saved_tokens,
             self.grow_events,
             self.grown_blocks,
             self.grow_stalls,
@@ -187,7 +242,26 @@ impl EngineMetrics {
             self.e2e_latency.display(),
             self.queue_wait.display(),
             self.decode_step_time.display(),
-        )
+        );
+        for (p, c) in [Priority::Interactive, Priority::Batch]
+            .into_iter()
+            .zip(&self.per_class)
+        {
+            if c.done == 0 && c.ttft.count() == 0 {
+                continue;
+            }
+            s.push_str(&format!(
+                "\nclass {:<11} done {} | preempts {} | ttft mean {:.4}s \
+                 ({:.1} steps) | e2e mean {:.4}s",
+                p.name(),
+                c.done,
+                c.preemptions,
+                c.ttft.mean(),
+                c.ttft_steps.mean(),
+                c.e2e.mean(),
+            ));
+        }
+        s
     }
 }
 

@@ -30,8 +30,8 @@ pub mod sampler;
 
 pub use engine::{
     reserve_tokens, AdmissionPolicy, Engine, EngineCaps, EngineConfig, PoolConfig,
-    SchedulerPolicy, RESERVE_SLACK_TOKENS,
+    PreemptMode, SchedulerPolicy, VictimPolicy, RESERVE_SLACK_TOKENS,
 };
-pub use metrics::EngineMetrics;
-pub use request::{GenRequest, GenResult, RequestTiming};
+pub use metrics::{ClassMetrics, EngineMetrics};
+pub use request::{GenRequest, GenResult, Priority, RequestTiming};
 pub use sampler::{SampleCfg, Sampler};

@@ -5,6 +5,49 @@ use std::time::Instant;
 
 use super::sampler::SampleCfg;
 
+/// Request importance class, the scheduling signal behind the engine's
+/// priority-aware victim policy: under KV-pool pressure, `Batch` lanes
+/// are preempted before `Interactive` ones, and (under
+/// [`super::engine::VictimPolicy::PriorityAware`]) `Interactive`
+/// submissions are admitted ahead of queued `Batch` work. Ordering is
+/// deliberate: `Interactive < Batch` so "greater" means "evict first".
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Latency-sensitive traffic (chat turns, autocomplete). The default:
+    /// an unannotated request is never the preferred eviction victim.
+    #[default]
+    Interactive,
+    /// Throughput traffic (offline eval, summarization jobs): evicted
+    /// first under memory pressure, admitted behind interactive work.
+    Batch,
+}
+
+/// Number of priority classes (sizes per-class metric arrays).
+pub const PRIORITY_CLASSES: usize = 2;
+
+impl Priority {
+    /// Dense index for per-class metric arrays.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Parse the wire/CLI spelling (`"interactive"` / `"batch"`).
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s.to_ascii_lowercase().as_str() {
+            "interactive" => Some(Priority::Interactive),
+            "batch" => Some(Priority::Batch),
+            _ => None,
+        }
+    }
+}
+
 /// A generation request submitted to the engine.
 #[derive(Debug)]
 pub struct GenRequest {
@@ -14,6 +57,8 @@ pub struct GenRequest {
     /// Stop generation when this byte is produced (e.g. b'\n').
     pub stop_token: Option<i32>,
     pub sampling: SampleCfg,
+    /// Importance class for the scheduler's victim/admission policies.
+    pub priority: Priority,
     /// Where to deliver the result.
     pub reply: Sender<GenResult>,
 }
@@ -24,6 +69,10 @@ pub struct RequestTiming {
     pub queue_s: f64,
     /// Time-to-first-token measured from submission.
     pub ttft_s: f64,
+    /// Engine decode iterations elapsed when the first token was emitted —
+    /// the deterministic (wall-clock-free) TTFT used by the scheduler
+    /// tests to compare classes.
+    pub ttft_steps: u64,
     pub total_s: f64,
     pub decode_steps: usize,
     /// Times this request was preempted mid-flight and resumed by prefix
@@ -53,4 +102,9 @@ pub enum FinishReason {
 pub struct QueuedRequest {
     pub req: GenRequest,
     pub submitted: Instant,
+    /// Engine decode-step counter when the request entered the queue —
+    /// `ttft_steps` is measured relative to this, so the step-based TTFT
+    /// is scheduling latency (queue wait + admission) even for traces
+    /// that arrive mid-run, not an absolute uptime counter.
+    pub submitted_step: u64,
 }

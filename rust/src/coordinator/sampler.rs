@@ -43,21 +43,39 @@ impl Sampler {
         if self.cfg.temperature <= 0.0 {
             return crate::model::argmax(logits);
         }
-        // Scale, softmax.
+        // Scale, softmax. `f32::max` skips NaN operands, so `max` is the
+        // largest *well-defined* logit; if none exists (all -inf / NaN)
+        // there is no distribution to draw from — fall back to argmax
+        // (deterministic, NaN-comparisons-false) instead of propagating
+        // NaN probabilities into a silent token-0 draw.
         let inv_t = 1.0 / self.cfg.temperature;
         let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        if !max.is_finite() {
+            return crate::model::argmax(logits);
+        }
+        // NaN logits exp to NaN: sanitize to zero mass so a single bad
+        // entry cannot poison the cumulative draw below.
         let mut probs: Vec<(usize, f32)> = logits
             .iter()
             .enumerate()
-            .map(|(i, &l)| (i, ((l - max) * inv_t).exp()))
+            .map(|(i, &l)| {
+                let e = ((l - max) * inv_t).exp();
+                (i, if e.is_finite() { e } else { 0.0 })
+            })
             .collect();
         let sum: f32 = probs.iter().map(|(_, p)| p).sum();
+        // Some finite logit equals `max`, so sum >= 1 — but keep the guard:
+        // a zero/non-finite normalizer must never divide through.
+        if !(sum.is_finite() && sum > 0.0) {
+            return crate::model::argmax(logits);
+        }
         for p in &mut probs {
             p.1 /= sum;
         }
-        // Nucleus cut.
+        // Nucleus cut. `total_cmp` gives a NaN-safe total order (the
+        // masses are already sanitized, but a sort must never panic).
         if self.cfg.top_p < 1.0 {
-            probs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            probs.sort_by(|a, b| b.1.total_cmp(&a.1));
             let mut cum = 0.0;
             let mut keep = probs.len();
             for (i, (_, p)) in probs.iter().enumerate() {
@@ -69,6 +87,11 @@ impl Sampler {
             }
             probs.truncate(keep);
             let s: f32 = probs.iter().map(|(_, p)| p).sum();
+            if !(s.is_finite() && s > 0.0) {
+                // Degenerate nucleus (can only happen with adversarial
+                // masses): the head of the sorted list is the mode.
+                return probs.first().map(|(i, _)| *i).unwrap_or(0);
+            }
             for p in &mut probs {
                 p.1 /= s;
             }
@@ -117,6 +140,38 @@ mod tests {
         let logits = vec![10.0, 0.0, 0.0, 0.0];
         for _ in 0..50 {
             assert_eq!(s.sample(&logits), 0);
+        }
+    }
+
+    #[test]
+    fn degenerate_all_neg_inf_logits_fall_back_to_argmax() {
+        // All -inf: softmax would be 0/0 → NaN probabilities → the old
+        // code silently drew token 0 from a poisoned CDF. The fallback
+        // must be the explicit argmax and identical on every call.
+        let mut s = Sampler::new(SampleCfg { temperature: 0.9, top_p: 0.9, seed: 3 });
+        let logits = vec![f32::NEG_INFINITY; 8];
+        let expect = crate::model::argmax(&logits);
+        for _ in 0..10 {
+            assert_eq!(s.sample(&logits), expect);
+        }
+    }
+
+    #[test]
+    fn nan_logits_never_panic_and_never_win() {
+        // partial_cmp(..).unwrap() used to panic on any NaN logit; now
+        // NaN mass is sanitized to zero and the sort is total-ordered.
+        let mut s = Sampler::new(SampleCfg { temperature: 1.0, top_p: 0.9, seed: 4 });
+        let logits = vec![1.0, f32::NAN, 3.0, f32::NAN, 0.5];
+        for _ in 0..50 {
+            let tok = s.sample(&logits);
+            assert!(tok < logits.len());
+            assert!(!logits[tok].is_nan(), "NaN logit {tok} must carry zero mass");
+        }
+        // All-NaN is the fully degenerate case: deterministic fallback.
+        let all_nan = vec![f32::NAN; 4];
+        let expect = crate::model::argmax(&all_nan);
+        for _ in 0..5 {
+            assert_eq!(s.sample(&all_nan), expect);
         }
     }
 

@@ -1,7 +1,8 @@
 //! Serving workload traces: request streams with Poisson or bursty
-//! arrivals, prompt/generation length distributions. Drives the
-//! e2e_serving bench and `repro serve --trace`.
+//! arrivals, prompt/generation length distributions and mixed priority
+//! classes. Drives the e2e_serving bench and `repro serve --trace`.
 
+use crate::coordinator::request::Priority;
 use crate::util::rng::Xoshiro256;
 
 /// Distribution of per-request `max_new_tokens`.
@@ -36,6 +37,12 @@ pub struct WorkloadCfg {
     /// exactly what the kvpool's content-addressed prefix sharing
     /// deduplicates. 0 disables.
     pub shared_prefix_len: usize,
+    /// Probability a request is `Priority::Batch` (0 → all interactive,
+    /// the single-class traces every earlier scenario used; 1 → all
+    /// batch). Drawn per request, deterministic for a fixed seed — the
+    /// mixed-priority contention scenarios behind the priority-aware
+    /// victim policy.
+    pub batch_frac: f64,
     pub seed: u64,
 }
 
@@ -49,6 +56,7 @@ impl Default for WorkloadCfg {
             gen_len: (16, 64),
             gen_len_dist: GenLenDist::Uniform,
             shared_prefix_len: 0,
+            batch_frac: 0.0,
             seed: 0,
         }
     }
@@ -60,6 +68,8 @@ pub struct TraceItem {
     pub arrival_s: f64,
     pub prompt: String,
     pub max_new_tokens: usize,
+    /// Importance class for the engine's multi-class scheduler.
+    pub priority: Priority,
 }
 
 /// A generated request trace.
@@ -76,6 +86,10 @@ impl Workload {
     pub fn generate(cfg: &WorkloadCfg, fillers: &[String]) -> Self {
         assert!(!fillers.is_empty());
         let mut rng = Xoshiro256::new(cfg.seed ^ w0rkload_seed());
+        // Separate stream for class draws: annotating a trace with
+        // priorities must not perturb its arrivals, prompts or lengths
+        // (the contended scenarios compare against single-class twins).
+        let mut class_rng = Xoshiro256::new(cfg.seed ^ 0xC1A5_5BAD);
         let shared = Self::filler_text(&mut rng, cfg.shared_prefix_len, fillers);
         let mut t = 0.0f64;
         let mut items = Vec::with_capacity(cfg.n_requests);
@@ -97,7 +111,12 @@ impl Workload {
                     (draw.round() as usize).clamp(1, cap.max(1))
                 }
             };
-            items.push(TraceItem { arrival_s: t, prompt, max_new_tokens });
+            let priority = if class_rng.uniform() < cfg.batch_frac {
+                Priority::Batch
+            } else {
+                Priority::Interactive
+            };
+            items.push(TraceItem { arrival_s: t, prompt, max_new_tokens, priority });
         }
         Self { items }
     }
@@ -224,6 +243,38 @@ mod tests {
         // full-budget reservation.
         let frac = long as f64 / w.items.len() as f64;
         assert!((0.08..=0.20).contains(&frac), "P(len > 2·mean) = {frac:.3}");
+    }
+
+    #[test]
+    fn batch_frac_mixes_classes_deterministically() {
+        let base = WorkloadCfg { n_requests: 64, seed: 13, ..Default::default() };
+        // Default is the single-class trace every earlier scenario used.
+        let w0 = Workload::generate(&base, &fillers());
+        assert!(w0.items.iter().all(|i| i.priority == Priority::Interactive));
+        let w1 = Workload::generate(
+            &WorkloadCfg { batch_frac: 1.0, ..base.clone() },
+            &fillers(),
+        );
+        assert!(w1.items.iter().all(|i| i.priority == Priority::Batch));
+        let cfg = WorkloadCfg { batch_frac: 0.5, ..base.clone() };
+        let wa = Workload::generate(&cfg, &fillers());
+        let wb = Workload::generate(&cfg, &fillers());
+        let classes: Vec<Priority> = wa.items.iter().map(|i| i.priority).collect();
+        assert_eq!(
+            classes,
+            wb.items.iter().map(|i| i.priority).collect::<Vec<_>>(),
+            "same seed must draw the same classes"
+        );
+        let batch = classes.iter().filter(|&&p| p == Priority::Batch).count();
+        assert!(
+            (16..=48).contains(&batch),
+            "half-and-half mix badly skewed: {batch}/64 batch"
+        );
+        // The class draw must not perturb the rest of the trace.
+        for (a, b) in w0.items.iter().zip(&wa.items) {
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.max_new_tokens, b.max_new_tokens);
+        }
     }
 
     #[test]

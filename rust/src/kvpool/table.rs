@@ -29,6 +29,18 @@ pub struct BlockTable {
     pub len: usize,
 }
 
+/// What a [`TableSet::truncate_tail`] actually did: blocks physically
+/// returned to the free list vs the prefix the sequence kept.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TruncateOutcome {
+    /// Blocks returned to the allocator's free list (refcount hit zero).
+    pub freed: usize,
+    /// Blocks the sequence still holds.
+    pub kept_blocks: usize,
+    /// Token positions still covered by the kept blocks.
+    pub kept_len: usize,
+}
+
 /// Position-dependent content hash: identifies "these exact tokens as a
 /// prefix", not "this bag of tokens" — extending a chain with the next
 /// block's tokens yields the next key.
@@ -209,6 +221,93 @@ impl TableSet {
     /// decode iteration.
     pub fn written_blocks(&self) -> usize {
         self.written.len()
+    }
+
+    /// Partial preemption: drop whole blocks from the *tail* of a live
+    /// sequence until `need_free` blocks have physically returned to the
+    /// free list (a dropped shared block only decrements its refcount and
+    /// frees nothing, so the walk keeps going past it). The kept prefix —
+    /// typically the shared prompt blocks plus the oldest decode blocks —
+    /// stays granted to `seq`, which remains a live table; `len` shrinks
+    /// to the kept block capacity and written-block accounting follows
+    /// the physical frees. Returns what actually happened so the caller
+    /// can fall back to a full release when nothing came free.
+    pub fn truncate_tail(
+        &mut self,
+        alloc: &mut BlockAllocator,
+        seq: SeqId,
+        need_free: usize,
+    ) -> TruncateOutcome {
+        let bs = self.block_size;
+        let need_free = need_free.max(1);
+        let mut freed = 0usize;
+        loop {
+            let Some(t) = self.tables.get_mut(&seq) else { break };
+            if freed >= need_free || t.blocks.is_empty() {
+                break;
+            }
+            let b = t.blocks.pop().expect("checked non-empty");
+            if self.release_and_clean(alloc, b) {
+                freed += 1;
+            }
+        }
+        let t = self.tables.get_mut(&seq).expect("truncate_tail of unknown seq");
+        t.len = t.len.min(t.blocks.len() * bs);
+        TruncateOutcome { freed, kept_blocks: t.blocks.len(), kept_len: t.len }
+    }
+
+    /// Shrink a live sequence's logical length without releasing blocks.
+    /// Partial preemption uses this to drop a position the mirror already
+    /// advanced for an in-flight token that was never delivered: the
+    /// resume replays history only up to `len`, and
+    /// [`TableSet::resume_extend`] asserts the replay covers every kept
+    /// position.
+    pub fn clamp_len(&mut self, seq: SeqId, len: usize) {
+        let t = self.tables.get_mut(&seq).expect("clamp_len of unknown seq");
+        t.len = t.len.min(len);
+    }
+
+    /// Re-admission of a sequence that kept a truncated prefix across a
+    /// partial preemption: grow its table back to `total_blocks`, then
+    /// mark the resume re-prefill — `new_len` tokens, covering the kept
+    /// prefix plus the recomputed suffix — as written. All-or-nothing:
+    /// on exhaustion every newly acquired block is rolled back and the
+    /// kept prefix is untouched, so the caller can simply retry later.
+    pub fn resume_extend(
+        &mut self,
+        alloc: &mut BlockAllocator,
+        seq: SeqId,
+        new_len: usize,
+        total_blocks: usize,
+    ) -> Result<(), PoolExhausted> {
+        let bs = self.block_size;
+        let total_blocks = total_blocks.max(new_len.div_ceil(bs)).max(1);
+        let have = {
+            let t = self.tables.get(&seq).expect("resume_extend of unknown seq");
+            assert!(new_len >= t.len, "resume must not shrink a kept prefix");
+            t.blocks.len()
+        };
+        let mut acquired: Vec<BlockId> = Vec::new();
+        for _ in have..total_blocks {
+            match alloc.alloc() {
+                Ok(b) => acquired.push(b),
+                Err(e) => {
+                    self.rollback(alloc, &acquired);
+                    return Err(e);
+                }
+            }
+        }
+        let to_mark: Vec<BlockId> = {
+            let t = self.tables.get_mut(&seq).expect("checked above");
+            t.blocks.extend_from_slice(&acquired);
+            t.len = new_len;
+            let written_blocks = new_len.div_ceil(bs).min(t.blocks.len());
+            t.blocks[..written_blocks].to_vec()
+        };
+        for b in to_mark {
+            self.written.insert(b);
+        }
+        Ok(())
     }
 
     /// Release a preempted sequence's blocks. Behaviourally identical to
@@ -533,6 +632,89 @@ mod tests {
         ts.free(&mut alloc, s);
         ts.free(&mut alloc, t);
         assert_eq!(ts.written_blocks(), 0);
+        alloc.check_invariants();
+    }
+
+    #[test]
+    fn truncate_tail_frees_only_what_is_needed_and_keeps_the_prefix() {
+        let mut alloc = BlockAllocator::new(16, 4);
+        let mut ts = TableSet::new(4, true);
+        // 6 prompt tokens + 18-slot reservation → 5 blocks.
+        let s = ts.admit(&mut alloc, &toks(6, 0), 20).unwrap();
+        for _ in 0..10 {
+            ts.advance(s); // len 16 → 4 written blocks
+        }
+        assert_eq!(ts.written_blocks(), 4);
+        let out = ts.truncate_tail(&mut alloc, s, 2);
+        assert_eq!(out.freed, 2, "exactly the needed blocks return");
+        assert_eq!(out.kept_blocks, 3);
+        assert_eq!(out.kept_len, 12, "len shrinks to the kept capacity");
+        assert_eq!(ts.table(s).unwrap().len, 12);
+        assert_eq!(ts.written_blocks(), 3, "freed blocks leave the written set");
+        assert_eq!(alloc.num_free(), 16 - 3);
+        ts.free(&mut alloc, s);
+        assert_eq!(alloc.blocks_in_use(), 0);
+        alloc.check_invariants();
+    }
+
+    #[test]
+    fn truncate_tail_walks_past_shared_blocks_without_freeing_them() {
+        let mut alloc = BlockAllocator::new(16, 4);
+        let mut ts = TableSet::new(4, true);
+        let prompt = toks(8, 0); // 2 full shareable blocks
+        let a = ts.admit(&mut alloc, &prompt, 9).unwrap(); // + 1 private tail
+        let b = ts.admit(&mut alloc, &prompt, 9).unwrap();
+        // Asking for 2 frees from a drops its private tail (1 free) and
+        // then walks into the shared prompt blocks: refcounts drop but
+        // the survivor keeps them live.
+        let out = ts.truncate_tail(&mut alloc, a, 2);
+        assert_eq!(out.freed, 1, "shared blocks free nothing");
+        assert_eq!(out.kept_blocks, 0, "the walk consumed the whole table");
+        let tb = ts.table(b).unwrap().clone();
+        assert!(tb.blocks.iter().all(|&blk| alloc.ref_count(blk) >= 1));
+        ts.free(&mut alloc, a); // empty table, still removable
+        ts.free(&mut alloc, b);
+        assert_eq!(alloc.blocks_in_use(), 0);
+        alloc.check_invariants();
+    }
+
+    #[test]
+    fn resume_extend_regrows_and_marks_the_recomputed_suffix_written() {
+        let mut alloc = BlockAllocator::new(16, 4);
+        let mut ts = TableSet::new(4, true);
+        let s = ts.admit(&mut alloc, &toks(6, 0), 20).unwrap(); // 5 blocks
+        for _ in 0..10 {
+            ts.advance(s);
+        }
+        let out = ts.truncate_tail(&mut alloc, s, 2);
+        assert_eq!((out.kept_blocks, out.kept_len), (3, 12));
+        // Resume at 16 live tokens with a 6-block reservation.
+        ts.resume_extend(&mut alloc, s, 16, 6).unwrap();
+        let t = ts.table(s).unwrap();
+        assert_eq!(t.blocks.len(), 6);
+        assert_eq!(t.len, 16);
+        assert_eq!(ts.written_blocks(), 4, "re-prefilled slots count as written");
+        for _ in 0..8 {
+            ts.advance(s); // the regrown reservation is usable
+        }
+        assert_eq!(ts.table(s).unwrap().len, 24);
+        ts.free(&mut alloc, s);
+        assert_eq!(alloc.blocks_in_use(), 0);
+        alloc.check_invariants();
+    }
+
+    #[test]
+    fn resume_extend_rolls_back_on_exhaustion() {
+        let mut alloc = BlockAllocator::new(4, 4);
+        let mut ts = TableSet::new(4, true);
+        let s = ts.admit(&mut alloc, &toks(6, 0), 8).unwrap(); // 2 blocks
+        let in_use = alloc.blocks_in_use();
+        // Wants 6 blocks total, only 2 more exist → all-or-nothing error.
+        assert!(ts.resume_extend(&mut alloc, s, 8, 6).is_err());
+        assert_eq!(alloc.blocks_in_use(), in_use, "failed extend must roll back");
+        assert_eq!(ts.table(s).unwrap().blocks.len(), 2);
+        assert_eq!(ts.table(s).unwrap().len, 6, "kept prefix untouched");
+        ts.free(&mut alloc, s);
         alloc.check_invariants();
     }
 

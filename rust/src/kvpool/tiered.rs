@@ -227,6 +227,38 @@ impl TieredKvPool {
         }
     }
 
+    /// Data-plane twin of the coordinator's partial preemption
+    /// (`TableSet::truncate_tail`): release whole blocks from the tail
+    /// until `need_free` have physically returned to the free list
+    /// (shared blocks only drop a reference), keeping the prefix — hot
+    /// low-rank rows included — resident for the resume. Returns the new
+    /// live length; re-appending the evicted rows restores both tiers
+    /// bit-identically (see [`TieredKvPool::truncate`]).
+    pub fn truncate_tail_blocks(&mut self, seq: PoolSeqId, need_free: usize) -> usize {
+        let bs = self.cfg.block_size;
+        let need_free = need_free.max(1);
+        let mut freed = 0usize;
+        while freed < need_free {
+            let b = {
+                let t = self.tables[seq].as_mut().expect("freed sequence");
+                match t.blocks.pop() {
+                    Some(b) => b,
+                    None => break,
+                }
+            };
+            if self.alloc.release(b) {
+                freed += 1;
+                if self.resident[b as usize] {
+                    self.resident[b as usize] = false;
+                    self.resident_count -= 1;
+                }
+            }
+        }
+        let t = self.tables[seq].as_mut().expect("freed sequence");
+        t.len = t.len.min(t.blocks.len() * bs);
+        t.len
+    }
+
     pub fn free_seq(&mut self, seq: PoolSeqId) {
         let t = self.tables[seq].take().expect("double free of sequence");
         for b in t.blocks {
@@ -531,6 +563,61 @@ mod tests {
             assert_eq!(p.cold_v_view().row(p.blocks(s), j), &v[..], "cold v row {j}");
         }
         p.free_seq(s);
+        assert_eq!(p.allocator().blocks_in_use(), 0);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn truncate_tail_blocks_frees_the_minimum_and_resume_is_bit_identical() {
+        let mut p = pool(16, 4, 8, 2);
+        let s = p.new_seq();
+        let mut rng = Xoshiro256::new(31);
+        let rows: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..14).map(|_| (rng.normal_vec(8), rng.normal_vec(8))).collect();
+        for (k, v) in &rows {
+            p.append(s, k, v).unwrap();
+        }
+        assert_eq!(p.blocks(s).len(), 4);
+        let free_before = p.allocator().num_free();
+        // Need 2 blocks back: exactly the two tail blocks go, the first
+        // two (8 tokens of prefix) stay hot-resident for the resume.
+        let kept = p.truncate_tail_blocks(s, 2);
+        assert_eq!(kept, 8);
+        assert_eq!(p.blocks(s).len(), 2);
+        assert_eq!(p.allocator().num_free(), free_before + 2);
+        p.check_invariants();
+        // Partial-preemption resume: recompute only rows 8.. — every row
+        // of both tiers must match the uninterrupted cache bit-for-bit.
+        for (k, v) in &rows[kept..] {
+            p.append(s, k, v).unwrap();
+        }
+        for (j, (k, v)) in rows.iter().enumerate() {
+            assert_eq!(p.hot_view().row(p.blocks(s), j), &k[..2], "hot row {j}");
+            assert_eq!(p.cold_k_view().row(p.blocks(s), j), &k[..], "cold k row {j}");
+            assert_eq!(p.cold_v_view().row(p.blocks(s), j), &v[..], "cold v row {j}");
+        }
+        p.free_seq(s);
+        assert_eq!(p.allocator().blocks_in_use(), 0);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn truncate_tail_blocks_spares_shared_blocks_for_the_survivor() {
+        let mut p = pool(16, 4, 4, 2);
+        let parent = p.new_seq();
+        let row = vec![1.0f32; 4];
+        for _ in 0..8 {
+            p.append(parent, &row, &row).unwrap();
+        }
+        let child = p.fork(parent); // shares both blocks
+        // The child's blocks are all shared: walking its tail frees
+        // nothing, refcounts drop, the parent's rows stay intact.
+        let kept = p.truncate_tail_blocks(child, 1);
+        assert_eq!(kept, 0, "fully-shared tail yields no free blocks");
+        assert_eq!(p.allocator().blocks_in_use(), 2);
+        assert_eq!(p.len(parent), 8);
+        p.free_seq(parent);
+        p.free_seq(child);
         assert_eq!(p.allocator().blocks_in_use(), 0);
         p.check_invariants();
     }

@@ -13,8 +13,11 @@ use std::sync::mpsc::channel;
 
 use anyhow::{bail, Context, Result};
 
-use loki::coordinator::{AdmissionPolicy, Engine, EngineConfig, PoolConfig, SchedulerPolicy};
-use loki::coordinator::request::GenRequest;
+use loki::coordinator::{
+    AdmissionPolicy, Engine, EngineConfig, PoolConfig, PreemptMode, SchedulerPolicy,
+    VictimPolicy,
+};
+use loki::coordinator::request::{GenRequest, Priority};
 use loki::coordinator::sampler::SampleCfg;
 use loki::data::workload::{Workload, WorkloadCfg};
 use loki::data::TaskSuite;
@@ -46,9 +49,11 @@ fn main() -> Result<()> {
                  \x20 --admission full|speculative            KV reservation policy\n\
                  \x20 --reserve-frac 0.25                     speculative decode-budget fraction\n\
                  \x20 --headroom-blocks 2                     blocks per speculative grow\n\
-                 generate: --prompt STR --max-tokens N --temperature T\n\
+                 \x20 --victim-policy youngest|priority        preemption victim selection\n\
+                 \x20 --preempt full|partial                  whole-sequence vs tail-block eviction\n\
+                 generate: --prompt STR --max-tokens N --temperature T --priority interactive|batch\n\
                  serve:    --listen 127.0.0.1:7077\n\
-                 bench-serve: --requests N --rate R --shared-prefix BYTES"
+                 bench-serve: --requests N --rate R --shared-prefix BYTES --batch-frac F"
             );
             Ok(())
         }
@@ -92,6 +97,16 @@ fn engine_config(args: &Args, svc: &RuntimeService) -> Result<EngineConfig> {
             },
             "full" => AdmissionPolicy::ReserveFull,
             other => bail!("unknown --admission {other} (full|speculative)"),
+        },
+        victim_policy: match args.str_or("victim-policy", "youngest").as_str() {
+            "youngest" | "youngest-first" => VictimPolicy::YoungestFirst,
+            "priority" | "priority-aware" => VictimPolicy::PriorityAware,
+            other => bail!("unknown --victim-policy {other} (youngest|priority)"),
+        },
+        preempt: match args.str_or("preempt", "full").as_str() {
+            "full" => PreemptMode::Full,
+            "partial" => PreemptMode::Partial,
+            other => bail!("unknown --preempt {other} (full|partial)"),
         },
         verbose: args.flag("verbose"),
     })
@@ -141,6 +156,10 @@ fn generate(args: &Args) -> Result<()> {
     let (tx, rx) = Engine::channel(&cfg);
     let (reply, result_rx) = channel();
     let tok = ByteTokenizer;
+    let priority = match Priority::parse(&args.str_or("priority", "interactive")) {
+        Some(p) => p,
+        None => bail!("unknown --priority (interactive|batch)"),
+    };
     tx.send(GenRequest {
         id: 1,
         prompt: tok.encode(&prompt),
@@ -151,6 +170,7 @@ fn generate(args: &Args) -> Result<()> {
             top_p: 0.95,
             seed: 1,
         },
+        priority,
         reply,
     })
     .ok();
@@ -200,6 +220,7 @@ fn bench_serve(args: &Args) -> Result<()> {
             n_requests: args.usize_or("requests", 24),
             rate: args.f64_or("rate", 0.0),
             shared_prefix_len: args.usize_or("shared-prefix", 0),
+            batch_frac: args.f64_or("batch-frac", 0.0),
             ..Default::default()
         },
         &suite.fillers,
@@ -221,6 +242,7 @@ fn bench_serve(args: &Args) -> Result<()> {
                 max_new_tokens: item.max_new_tokens,
                 stop_token: None,
                 sampling: SampleCfg::greedy(),
+                priority: item.priority,
                 reply: reply.clone(),
             })
             .ok();

@@ -1,8 +1,14 @@
 //! Minimal TCP JSON-lines inference server over the engine.
 //!
 //! Protocol: one JSON object per line.
-//!   → {"prompt": "...", "max_tokens": 32, "temperature": 0.0}
+//!   → {"prompt": "...", "max_tokens": 32, "temperature": 0.0,
+//!      "priority": "interactive"}
 //!   ← {"id": 1, "text": "...", "tokens": 32, "ttft_s": 0.01, "total_s": 0.2}
+//!
+//! `"priority"` is optional (`"interactive"` | `"batch"`, default
+//! interactive) and feeds the engine's multi-class scheduler: under the
+//! priority-aware victim policy, batch requests are admitted behind and
+//! preempted before interactive ones. Unknown values are a client error.
 //!
 //! Malformed or invalid requests get a structured `{"error": "..."}`
 //! reply and the connection stays usable for the next line — client bugs
@@ -21,7 +27,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::request::GenRequest;
+use crate::coordinator::request::{GenRequest, Priority};
 use crate::coordinator::sampler::SampleCfg;
 use crate::model::ByteTokenizer;
 use crate::util::json::{self, Json};
@@ -130,6 +136,17 @@ fn handle_line(
         bail!("\"max_tokens\" must be in 1..={} (got {max_tokens})", cfg.max_tokens_cap);
     }
     let temperature = req.get("temperature").and_then(|x| x.as_f64()).unwrap_or(0.0) as f32;
+    // Optional importance class; an unknown value is a client error (a
+    // typo silently demoted to the default would be an SLO bug).
+    let priority = match req.get("priority") {
+        None => Priority::Interactive,
+        Some(v) => {
+            let s = v.as_str().context("\"priority\" must be a string")?;
+            Priority::parse(s).with_context(|| {
+                format!("unknown \"priority\" {s:?} (expected \"interactive\" or \"batch\")")
+            })?
+        }
+    };
     let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
     let (reply, rx) = channel();
     submit
@@ -139,6 +156,7 @@ fn handle_line(
             max_new_tokens: max_tokens,
             stop_token: Some(b'\n' as i32),
             sampling: SampleCfg { temperature, top_p: 0.95, seed: id },
+            priority,
             reply,
         })
         .map_err(|_| anyhow::anyhow!("engine is down"))?;
@@ -148,6 +166,7 @@ fn handle_line(
         ("text", json::s(&res.text)),
         ("tokens", json::num(res.tokens.len() as f64)),
         ("finish", json::s(&format!("{:?}", res.finished_reason))),
+        ("priority", json::s(priority.name())),
         ("ttft_s", json::num(res.timing.ttft_s)),
         ("total_s", json::num(res.timing.total_s)),
         ("preemptions", json::num(res.timing.preemptions as f64)),

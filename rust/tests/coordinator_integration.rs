@@ -3,7 +3,7 @@
 
 use std::sync::mpsc::channel;
 
-use loki::coordinator::request::{FinishReason, GenRequest};
+use loki::coordinator::request::{FinishReason, GenRequest, Priority};
 use loki::coordinator::sampler::SampleCfg;
 use loki::coordinator::{Engine, EngineConfig, SchedulerPolicy};
 use loki::model::ByteTokenizer;
@@ -30,6 +30,7 @@ fn request(
         max_new_tokens: max_new,
         stop_token: None,
         sampling: SampleCfg::greedy(),
+        priority: Priority::Interactive,
         reply,
     }
 }
@@ -103,6 +104,7 @@ fn stop_token_ends_generation_early() {
         max_new_tokens: 64,
         stop_token: Some(b' ' as i32),
         sampling: SampleCfg::greedy(),
+        priority: Priority::Interactive,
         reply,
     })
     .unwrap();

@@ -9,11 +9,11 @@
 
 use std::sync::mpsc::channel;
 
-use loki::coordinator::request::{FinishReason, GenRequest, GenResult};
+use loki::coordinator::request::{FinishReason, GenRequest, GenResult, Priority};
 use loki::coordinator::sampler::SampleCfg;
 use loki::coordinator::{
     reserve_tokens, AdmissionPolicy, Engine, EngineCaps, EngineConfig, EngineMetrics,
-    PoolConfig, RESERVE_SLACK_TOKENS,
+    PoolConfig, PreemptMode, VictimPolicy, RESERVE_SLACK_TOKENS,
 };
 use loki::kvpool::BlockAllocator;
 use loki::runtime::{SimCfg, SimRuntime};
@@ -33,6 +33,7 @@ struct Spec {
     prompt: Vec<i32>,
     max_new: usize,
     sampling: SampleCfg,
+    priority: Priority,
 }
 
 /// Run `specs` through a sim-backed engine; results come back sorted by
@@ -50,6 +51,7 @@ fn run(cfg: &EngineConfig, caps: EngineCaps, specs: &[Spec]) -> (Vec<GenResult>,
             max_new_tokens: s.max_new,
             stop_token: None,
             sampling: s.sampling,
+            priority: s.priority,
             reply: reply.clone(),
         })
         .unwrap();
@@ -68,17 +70,25 @@ fn mixed_specs() -> Vec<Spec> {
             prompt: prompt(0, 24),
             max_new: 40,
             sampling: SampleCfg { temperature: 0.8, top_p: 0.9, seed: 100 },
+            priority: Priority::Interactive,
         },
         Spec {
             prompt: prompt(1, 30),
             max_new: 48,
             sampling: SampleCfg { temperature: 0.7, top_p: 0.95, seed: 101 },
+            priority: Priority::Interactive,
         },
-        Spec { prompt: prompt(2, 20), max_new: 32, sampling: SampleCfg::greedy() },
+        Spec {
+            prompt: prompt(2, 20),
+            max_new: 32,
+            sampling: SampleCfg::greedy(),
+            priority: Priority::Interactive,
+        },
         Spec {
             prompt: prompt(3, 28),
             max_new: 36,
             sampling: SampleCfg { temperature: 1.0, top_p: 0.9, seed: 103 },
+            priority: Priority::Interactive,
         },
     ]
 }
@@ -137,7 +147,12 @@ fn preempted_then_resumed_output_is_byte_identical() {
 #[test]
 fn saturated_pool_preempts_without_deadlock_and_stays_exact() {
     let specs: Vec<Spec> = (0..6)
-        .map(|i| Spec { prompt: prompt(i, 8), max_new: 24, sampling: SampleCfg::greedy() })
+        .map(|i| Spec {
+            prompt: prompt(i, 8),
+            max_new: 24,
+            sampling: SampleCfg::greedy(),
+            priority: Priority::Interactive,
+        })
         .collect();
     let (base, _) = run(
         &EngineConfig {
@@ -206,8 +221,18 @@ fn oversized_requests_are_rejected_by_both_policies() {
             ..Default::default()
         };
         let specs = vec![
-            Spec { prompt: prompt(0, 10), max_new: 600, sampling: SampleCfg::greedy() },
-            Spec { prompt: prompt(1, 10), max_new: 10, sampling: SampleCfg::greedy() },
+            Spec {
+                prompt: prompt(0, 10),
+                max_new: 600,
+                sampling: SampleCfg::greedy(),
+                priority: Priority::Interactive,
+            },
+            Spec {
+                prompt: prompt(1, 10),
+                max_new: 10,
+                sampling: SampleCfg::greedy(),
+                priority: Priority::Interactive,
+            },
         ];
         let (got, m) = run(&cfg, caps(256, 2), &specs);
         assert_eq!(m.requests_rejected, 1, "{admission:?}");
@@ -235,6 +260,7 @@ fn speculative_beats_reserve_full_on_long_tail_with_zero_divergence() {
             } else {
                 SampleCfg { temperature: 0.8, top_p: 0.9, seed: 200 + i }
             },
+            priority: Priority::Interactive,
         })
         .collect();
     let pool = PoolConfig { block_size: BS, num_blocks: 24, prefix_sharing: true };
@@ -268,6 +294,139 @@ fn speculative_beats_reserve_full_on_long_tail_with_zero_divergence() {
         ms.decode_steps,
         mf.decode_steps
     );
+}
+
+/// A contended mixed-priority long-tail workload: interactive requests
+/// are short decodes with small distinct prompts; batch requests are
+/// long decodes behind a *shared* 64-token system prompt (8 shared
+/// blocks at `BS = 8`), submitted interleaved so plain FIFO would admit
+/// batch work first. The shared prefix matters twice: it is what full
+/// preemption re-prefills on every resume but partial preemption keeps
+/// resident, and its blocks free nothing when released (refcounts), so
+/// both modes pay eviction in comparable tail-block units.
+fn mixed_priority_specs() -> Vec<Spec> {
+    let shared: Vec<i32> = (0..64).map(|i| ((i * 5 + 1) % 96) as i32).collect();
+    (0..12)
+        .map(|i| {
+            let batch = i % 2 == 0;
+            let prompt = if batch {
+                let mut p = shared.clone();
+                p.extend(prompt(i, 8));
+                p
+            } else {
+                prompt(i, 16)
+            };
+            Spec {
+                prompt,
+                max_new: if batch { 48 } else { 8 },
+                sampling: if i % 3 == 0 {
+                    SampleCfg { temperature: 0.8, top_p: 0.9, seed: 300 + i }
+                } else {
+                    SampleCfg::greedy()
+                },
+                priority: if batch { Priority::Batch } else { Priority::Interactive },
+            }
+        })
+        .collect()
+}
+
+/// The PR 3 acceptance criterion, deterministically: under a contended
+/// mixed-priority long-tail workload with the priority-aware victim
+/// policy, (a) partial preemption recomputes strictly fewer tokens than
+/// whole-sequence preemption, (b) `Interactive` gets strictly lower mean
+/// TTFT than `Batch` (measured in decode steps — wall-clock-free), and
+/// (c) every completed output is byte-identical to an uncontended run.
+#[test]
+fn priority_aware_partial_preemption_on_contended_mixed_long_tail() {
+    let specs = mixed_priority_specs();
+
+    // Uncontended baseline: worst-case pool, nothing can preempt.
+    let base_cfg = EngineConfig {
+        pool: PoolConfig { block_size: BS, num_blocks: 0, prefix_sharing: true },
+        ..Default::default()
+    };
+    let (base, bm) = run(&base_cfg, caps(256, 4), &specs);
+    assert_eq!(bm.preemptions, 0, "worst-case pool must never preempt");
+    assert_eq!(bm.requests_done, 12);
+
+    // Contended twins differing only in how much a preemption evicts.
+    // A batch request's full footprint is 72 + 48 + 2 = 122 tokens → 16
+    // blocks, of which 8 are the shared prompt: four batch lanes need
+    // 8 + 4·8 = 40 blocks at peak, so a 32-block pool forces decode-time
+    // growth to preempt (while any single request still fits: 16 ≤ 32).
+    let contended = |preempt| EngineConfig {
+        pool: PoolConfig { block_size: BS, num_blocks: 32, prefix_sharing: true },
+        admission: AdmissionPolicy::Speculative { reserve_frac: 0.1, headroom_blocks: 1 },
+        victim_policy: VictimPolicy::PriorityAware,
+        preempt,
+        ..Default::default()
+    };
+    let (full, mf) = run(&contended(PreemptMode::Full), caps(256, 4), &specs);
+    let (part, mp) = run(&contended(PreemptMode::Partial), caps(256, 4), &specs);
+
+    // (c) Scheduling must be invisible in outputs, under both modes.
+    assert_same_outputs(&base, &full);
+    assert_same_outputs(&base, &part);
+    for (label, m) in [("full", &mf), ("partial", &mp)] {
+        assert_eq!(m.requests_done, 12, "{label}: drain stalled: {}", m.report());
+        assert_eq!(m.requests_rejected, 0, "{label}");
+        assert!(m.preemptions > 0, "{label}: scenario failed to force preemption");
+        assert!(m.resumes > 0, "{label}");
+    }
+
+    // (a) Partial preemption pays strictly less recompute.
+    assert!(mp.partial_preemptions > 0, "no preemption kept a prefix: {}", mp.report());
+    assert!(mp.recompute_saved_tokens > 0);
+    assert!(
+        mp.recomputed_tokens < mf.recomputed_tokens,
+        "partial mode must recompute strictly fewer tokens ({} vs {})",
+        mp.recomputed_tokens,
+        mf.recomputed_tokens
+    );
+
+    // (b) The multi-class scheduler protects interactive latency. TTFT
+    // is compared in decode steps, which the sim makes deterministic.
+    for (label, m) in [("full", &mf), ("partial", &mp)] {
+        let int = m.class(Priority::Interactive);
+        let bat = m.class(Priority::Batch);
+        assert_eq!((int.done, bat.done), (6, 6), "{label}");
+        assert!(
+            int.ttft_steps.mean() < bat.ttft_steps.mean(),
+            "{label}: interactive mean TTFT {:.1} steps must beat batch {:.1}",
+            int.ttft_steps.mean(),
+            bat.ttft_steps.mean()
+        );
+        // Victim scoring points at batch lanes first.
+        assert!(
+            bat.preemptions >= int.preemptions,
+            "{label}: batch must absorb at least as many preemptions"
+        );
+    }
+}
+
+/// `PreemptMode::Partial` is orthogonal to the victim policy: under the
+/// default youngest-first scan it must still keep prefixes, still save
+/// recompute, and still be invisible in outputs.
+#[test]
+fn partial_preemption_under_youngest_first_is_byte_identical() {
+    let specs = mixed_specs();
+    let uncontended = EngineConfig {
+        pool: PoolConfig { block_size: BS, num_blocks: 0, prefix_sharing: true },
+        ..Default::default()
+    };
+    let (base, _) = run(&uncontended, caps(512, 2), &specs);
+
+    let contended = EngineConfig {
+        pool: PoolConfig { block_size: BS, num_blocks: 16, prefix_sharing: true },
+        admission: AdmissionPolicy::Speculative { reserve_frac: 0.2, headroom_blocks: 1 },
+        preempt: PreemptMode::Partial,
+        ..Default::default()
+    };
+    let (got, m) = run(&contended, caps(512, 2), &specs);
+    assert!(m.preemptions > 0, "scenario failed to force preemption: {}", m.report());
+    assert!(m.partial_preemptions > 0, "no preemption kept a prefix: {}", m.report());
+    assert!(m.recompute_saved_tokens > 0, "kept prefixes must save recompute");
+    assert_same_outputs(&base, &got);
 }
 
 /// Satellite: the reservation formula is pinned — the old magic `+ 2` is

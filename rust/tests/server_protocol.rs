@@ -137,6 +137,32 @@ fn absurd_max_tokens_is_rejected_before_the_queue() {
 }
 
 #[test]
+fn priority_field_is_validated_and_echoed() {
+    let addr = start_server();
+    let mut conn = Conn::open(addr);
+    // Valid classes round-trip and are echoed back.
+    for class in ["interactive", "batch"] {
+        let resp = conn.round_trip(&format!(
+            r#"{{"prompt": "hello", "max_tokens": 3, "priority": "{class}"}}"#
+        ));
+        assert_ok_generation(&resp, 3);
+        assert_eq!(resp.get("priority").and_then(|p| p.as_str()), Some(class));
+    }
+    // Omitted → the interactive default (never the eviction-first class).
+    let resp = conn.round_trip(r#"{"prompt": "hello", "max_tokens": 3}"#);
+    assert_ok_generation(&resp, 3);
+    assert_eq!(resp.get("priority").and_then(|p| p.as_str()), Some("interactive"));
+    // A typo must be a client error, not a silent class demotion.
+    let resp = conn.round_trip(r#"{"prompt": "hi", "max_tokens": 3, "priority": "urgent"}"#);
+    assert!(error_of(&resp).contains("priority"));
+    // Wrong type is a protocol error too, and the connection survives.
+    let resp = conn.round_trip(r#"{"prompt": "hi", "max_tokens": 3, "priority": 7}"#);
+    assert!(error_of(&resp).contains("priority"));
+    let resp = conn.round_trip(r#"{"prompt": "still alive", "max_tokens": 3}"#);
+    assert_ok_generation(&resp, 3);
+}
+
+#[test]
 fn sequential_clients_share_one_engine() {
     let addr = start_server();
     for i in 0..3 {
