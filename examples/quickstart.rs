@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
         stop_token: Some(b'\n' as i32),
         sampling: SampleCfg::greedy(),
         priority: Priority::Interactive,
+        slo_ms: None,
         reply,
     })?;
     drop(tx); // closing the queue lets engine.run() return when done

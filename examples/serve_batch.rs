@@ -50,6 +50,7 @@ fn run_trace(
                 stop_token: None,
                 sampling: SampleCfg::greedy(),
                 priority: Priority::Interactive,
+                slo_ms: None,
                 reply: reply.clone(),
             })
             .expect("engine queue");
@@ -90,6 +91,8 @@ fn main() -> anyhow::Result<()> {
             gen_len_dist: loki::data::workload::GenLenDist::Uniform,
             shared_prefix_len: args.usize_or("shared-prefix", 0),
             batch_frac: 0.0,
+            slo_ms_interactive: None,
+            slo_ms_batch: None,
             seed: 7,
         },
         &suite.fillers,

@@ -8,19 +8,28 @@
 //! reports peak resident pool bytes against the flat per-lane cache the
 //! pool replaced — the serving-level counterpart of
 //! `kvpool_bench::shared_prefix_residency`.
+//!
+//! Scenario 5 (first, artifact-free over [`SimRuntime`]) floods the
+//! deadline-aware scheduler with interactive traffic over a parked batch
+//! backlog, with and without cross-class aging; `--smoke-json PATH`
+//! writes its deterministic numbers as JSON and exits — the bounded e2e
+//! smoke CI runs on every push.
 
 use std::sync::mpsc::channel;
 
 use loki::coordinator::request::{GenRequest, Priority};
 use loki::coordinator::sampler::SampleCfg;
 use loki::coordinator::{
-    AdmissionPolicy, Engine, EngineConfig, EngineMetrics, PoolConfig, PreemptMode, VictimPolicy,
+    AdmissionPolicy, Engine, EngineCaps, EngineConfig, EngineMetrics, PoolConfig, PreemptMode,
+    VictimPolicy,
 };
 use loki::data::workload::{GenLenDist, Workload, WorkloadCfg};
 use loki::data::TaskSuite;
 use loki::model::ByteTokenizer;
-use loki::runtime::{DecodeVariant, RuntimeService};
+use loki::runtime::{DecodeVariant, RuntimeService, SimCfg, SimRuntime};
+use loki::util::args::Args;
 use loki::util::artifacts_dir;
+use loki::util::json;
 use loki::util::table::{fnum, Table};
 
 fn run_trace(
@@ -40,6 +49,7 @@ fn run_trace(
             stop_token: None,
             sampling: SampleCfg::greedy(),
             priority: item.priority,
+            slo_ms: item.slo_ms,
             reply: reply.clone(),
         })?;
     }
@@ -47,10 +57,148 @@ fn run_trace(
     engine.run(rx)
 }
 
+/// Scenario 5: a sustained interactive flood arrives on top of a parked
+/// batch backlog, under the deadline-aware scheduler with and without
+/// cross-class aging. Runs over the deterministic [`SimRuntime`] — no
+/// artifacts, wall-clock-free step accounting — so it doubles as the CI
+/// e2e smoke (`--smoke-json PATH` writes the numbers as JSON). The
+/// deterministic acceptance twin lives in
+/// `rust/tests/engine_admission.rs`.
+fn flood_over_backlog(quick: bool) -> anyhow::Result<Vec<(String, EngineMetrics)>> {
+    const AGING_STEPS: u64 = 32;
+    let caps = EngineCaps { max_len: 256, max_prompt: 256, gang_batch: 4, bytes_per_token: 8 };
+    let sim_prompt = |id: u64, len: usize| -> Vec<i32> {
+        (0..len).map(|i| ((id as usize * 31 + i * 7 + 3) % 96) as i32).collect()
+    };
+    let (n_batch, n_flood) = if quick { (4usize, 24usize) } else { (6, 48) };
+    let mut runs = Vec::new();
+    for (label, aging) in [("off", None), ("on", Some(AGING_STEPS))] {
+        let cfg = EngineConfig {
+            gang_batch: caps.gang_batch,
+            victim_policy: VictimPolicy::DeadlineAware,
+            aging_steps: aging,
+            ..Default::default()
+        };
+        let backend = Box::new(SimRuntime::new(SimCfg::default()));
+        let engine = Engine::with_backend(backend, caps, cfg.clone());
+        let (tx, rx) = Engine::channel(&cfg);
+        let (reply, _results) = channel();
+        // The backlog is queued first: plain FIFO would admit it ahead
+        // of the flood; the deadline scheduler must not — and aging must
+        // still bound how long it parks.
+        let mut id = 0u64;
+        for _ in 0..n_batch {
+            tx.send(GenRequest {
+                id,
+                prompt: sim_prompt(id, 24),
+                max_new_tokens: 48,
+                stop_token: None,
+                sampling: SampleCfg::greedy(),
+                priority: Priority::Batch,
+                slo_ms: None,
+                reply: reply.clone(),
+            })?;
+            id += 1;
+        }
+        for _ in 0..n_flood {
+            tx.send(GenRequest {
+                id,
+                prompt: sim_prompt(id, 12),
+                max_new_tokens: 8,
+                stop_token: None,
+                sampling: SampleCfg::greedy(),
+                priority: Priority::Interactive,
+                slo_ms: Some(250.0),
+                reply: reply.clone(),
+            })?;
+            id += 1;
+        }
+        drop(tx);
+        drop(reply);
+        runs.push((label.to_string(), engine.run(rx)?));
+    }
+    Ok(runs)
+}
+
+fn emit_flood_table(runs: &[(String, EngineMetrics)]) {
+    let mut table = Table::new(
+        "E2E serving: interactive flood over a batch backlog, deadline-aware ± aging",
+        &[
+            "aging",
+            "tok/s",
+            "batch max wait (steps)",
+            "promotions",
+            "int ttft steps",
+            "batch ttft steps",
+            "int deadline hit %",
+        ],
+    );
+    for (label, m) in runs {
+        let int = m.class(Priority::Interactive);
+        let bat = m.class(Priority::Batch);
+        table.row(vec![
+            label.clone(),
+            fnum(m.throughput_tok_s(), 1),
+            format!("{}", bat.max_wait_steps),
+            format!("{}", m.aging_promotions),
+            fnum(int.ttft_steps.mean(), 1),
+            fnum(bat.ttft_steps.mean(), 1),
+            fnum(int.deadline_hit_rate() * 100.0, 1),
+        ]);
+    }
+    table.emit("e2e_serving_deadline");
+    println!(
+        "(batch max wait is in deterministic decode steps; with aging on\n\
+         it must stay within the aging bound plus one lane-drain, with\n\
+         aging off the backlog parks until the flood drains)"
+    );
+}
+
+/// Serialize the scenario-5 runs for the CI artifact: one object per
+/// run. The step-based fields (`decode_steps`, `aging_promotions`,
+/// `batch_max_wait_steps`, the ttft-step means, `requests_done`) are
+/// deterministic across runs; `tok_s` and `int_deadline_hit_rate` are
+/// wall-clock-derived and informational only — don't diff them across
+/// builds.
+fn flood_json(runs: &[(String, EngineMetrics)]) -> json::Json {
+    let mut items = Vec::new();
+    for (label, m) in runs {
+        let int = m.class(Priority::Interactive);
+        let bat = m.class(Priority::Batch);
+        items.push(json::obj(vec![
+            ("aging", json::s(label)),
+            ("requests_done", json::num(m.requests_done as f64)),
+            ("decode_steps", json::num(m.decode_steps as f64)),
+            ("aging_promotions", json::num(m.aging_promotions as f64)),
+            ("batch_max_wait_steps", json::num(bat.max_wait_steps as f64)),
+            ("int_ttft_steps_mean", json::num(int.ttft_steps.mean())),
+            ("batch_ttft_steps_mean", json::num(bat.ttft_steps.mean())),
+            ("int_deadline_hit_rate", json::num(int.deadline_hit_rate())),
+            ("tok_s", json::num(m.throughput_tok_s())),
+        ]));
+    }
+    json::obj(vec![
+        ("scenario", json::s("interactive_flood_over_batch_backlog")),
+        ("runs", json::arr(items)),
+    ])
+}
+
 fn main() -> anyhow::Result<()> {
-    let quick = std::env::args().any(|a| a == "--quick") || std::env::var("LOKI_QUICK").is_ok();
+    let args = Args::from_env();
+    let quick = args.flag("quick") || std::env::var("LOKI_QUICK").is_ok();
+
+    // ---- Scenario 5 runs first: artifact-free (SimRuntime), so it also
+    // works in CI and as the `--smoke-json` e2e smoke gate.
+    let flood_runs = flood_over_backlog(quick)?;
+    emit_flood_table(&flood_runs);
+    if let Some(path) = args.get("smoke-json") {
+        std::fs::write(path, flood_json(&flood_runs).to_string() + "\n")?;
+        println!("smoke metrics written to {path}");
+        return Ok(());
+    }
+
     if !artifacts_dir().join("manifest.json").exists() {
-        eprintln!("skipping e2e_serving: run `make artifacts` first");
+        eprintln!("skipping compiled-artifact scenarios: run `make artifacts` first");
         return Ok(());
     }
     let service = RuntimeService::start(artifacts_dir())?;
@@ -66,6 +214,8 @@ fn main() -> anyhow::Result<()> {
             gen_len_dist: GenLenDist::Uniform,
             shared_prefix_len: 0,
             batch_frac: 0.0,
+            slo_ms_interactive: None,
+            slo_ms_batch: None,
             seed: 3,
         },
         &suite.fillers,
@@ -104,6 +254,8 @@ fn main() -> anyhow::Result<()> {
             gen_len_dist: GenLenDist::Uniform,
             shared_prefix_len: 96,
             batch_frac: 0.0,
+            slo_ms_interactive: None,
+            slo_ms_batch: None,
             seed: 7,
         },
         &suite.fillers,
@@ -163,6 +315,8 @@ fn main() -> anyhow::Result<()> {
             gen_len_dist: GenLenDist::LongTail { mean: 24.0, cap: tail_cap },
             shared_prefix_len: 0,
             batch_frac: 0.0,
+            slo_ms_interactive: None,
+            slo_ms_batch: None,
             seed: 11,
         },
         &suite.fillers,
@@ -218,6 +372,8 @@ fn main() -> anyhow::Result<()> {
             gen_len_dist: GenLenDist::LongTail { mean: 24.0, cap: tail_cap },
             shared_prefix_len: 0,
             batch_frac: 0.5,
+            slo_ms_interactive: None,
+            slo_ms_batch: None,
             seed: 17,
         },
         &suite.fillers,

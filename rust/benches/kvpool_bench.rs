@@ -230,7 +230,8 @@ fn shared_prefix_residency(quick: bool) {
         if gang >= 4 {
             assert!(
                 savings >= 2.0,
-                "acceptance: expected ≥2x resident-byte reduction at gang {gang}, got {savings:.2}x"
+                "acceptance: expected ≥2x resident-byte reduction at gang {gang}, \
+                 got {savings:.2}x"
             );
         }
         table.row(vec![

@@ -536,7 +536,12 @@ mod tests {
     use super::*;
     use crate::util::rng::Xoshiro256;
 
-    fn setup(lanes: usize, m: usize, d: usize, live: usize) -> (AttnShape, Vec<f32>, Vec<f32>, Vec<f32>) {
+    fn setup(
+        lanes: usize,
+        m: usize,
+        d: usize,
+        live: usize,
+    ) -> (AttnShape, Vec<f32>, Vec<f32>, Vec<f32>) {
         let shape = AttnShape { lanes, head_dim: d, max_len: m };
         let mut rng = Xoshiro256::new(42);
         let q = rng.normal_vec(lanes * d);
@@ -561,9 +566,42 @@ mod tests {
             let mut b = vec![0.0; 3 * live];
             let mut c = vec![0.0; 3 * live];
             let mut dcp = vec![0.0; 3 * live];
-            scores_indexed(shape, &q, &kc, stride, live, &feat, scale, Par::Serial, Some(1), &mut a);
-            scores_indexed(shape, &q, &kc, stride, live, &feat, scale, Par::Lanes1D, Some(4), &mut b);
-            scores_indexed(shape, &q, &kc, stride, live, &feat, scale, Par::Tiles2D, Some(4), &mut c);
+            scores_indexed(
+                shape,
+                &q,
+                &kc,
+                stride,
+                live,
+                &feat,
+                scale,
+                Par::Serial,
+                Some(1),
+                &mut a,
+            );
+            scores_indexed(
+                shape,
+                &q,
+                &kc,
+                stride,
+                live,
+                &feat,
+                scale,
+                Par::Lanes1D,
+                Some(4),
+                &mut b,
+            );
+            scores_indexed(
+                shape,
+                &q,
+                &kc,
+                stride,
+                live,
+                &feat,
+                scale,
+                Par::Tiles2D,
+                Some(4),
+                &mut c,
+            );
             scores_dense_copy(shape, &q, &kc, stride, live, &feat, scale, &mut dcp);
             for i in 0..3 * live {
                 assert!((a[i] - b[i]).abs() < 1e-5, "{feat:?} 1d");
@@ -580,8 +618,10 @@ mod tests {
         let stride = 32 * 8;
         let mut a = vec![0.0; 2 * 20];
         let mut b = vec![0.0; 2 * 20];
-        scores_indexed(shape, &q, &kc, stride, 20, &FeatureAccess::Prefix(3), 1.0, Par::Serial, Some(1), &mut a);
-        scores_indexed(shape, &q, &kc, stride, 20, &FeatureAccess::Gather(vec![0, 1, 2]), 1.0, Par::Serial, Some(1), &mut b);
+        let prefix = FeatureAccess::Prefix(3);
+        scores_indexed(shape, &q, &kc, stride, 20, &prefix, 1.0, Par::Serial, Some(1), &mut a);
+        let gather = FeatureAccess::Gather(vec![0, 1, 2]);
+        scores_indexed(shape, &q, &kc, stride, 20, &gather, 1.0, Par::Serial, Some(1), &mut b);
         assert_eq!(a, b);
     }
 
@@ -589,7 +629,8 @@ mod tests {
     fn attend_kernels_agree_and_account_bytes() {
         let (shape, q, kc, vc) = setup(4, 64, 16, 60);
         let stride = 64 * 16;
-        let sel: Vec<Vec<u32>> = (0..4).map(|l| (0..15u32).map(|x| x * 4 + l as u32 % 4).collect()).collect();
+        let sel: Vec<Vec<u32>> =
+            (0..4).map(|l| (0..15u32).map(|x| x * 4 + l as u32 % 4).collect()).collect();
         let mut a = vec![0.0; 4 * 16];
         let mut b = vec![0.0; 4 * 16];
         let mva = attend_rows_indexed(shape, &q, &kc, &vc, stride, &sel, 0.25, Some(3), &mut a);
@@ -636,7 +677,9 @@ mod tests {
         let k_arena = PagedArena { data: &k_arena_data, block_size: bs, width: d };
         let v_arena = PagedArena { data: &v_arena_data, block_size: bs, width: d };
 
-        for feat in [FeatureAccess::Full, FeatureAccess::Prefix(5), FeatureAccess::Gather(vec![1, 4, 9])] {
+        let feats =
+            [FeatureAccess::Full, FeatureAccess::Prefix(5), FeatureAccess::Gather(vec![1, 4, 9])];
+        for feat in feats {
             let mut flat = vec![0.0; live];
             let mut paged = vec![0.0; live];
             let mv_flat = scores_indexed(
@@ -663,8 +706,30 @@ mod tests {
         let (shape, q, kc, _) = setup(1, 128, 32, 128);
         let stride = 128 * 32;
         let mut out = vec![0.0; 128];
-        let full = scores_indexed(shape, &q, &kc, stride, 128, &FeatureAccess::Full, 1.0, Par::Serial, Some(1), &mut out);
-        let quarter = scores_indexed(shape, &q, &kc, stride, 128, &FeatureAccess::Prefix(8), 1.0, Par::Serial, Some(1), &mut out);
+        let full = scores_indexed(
+            shape,
+            &q,
+            &kc,
+            stride,
+            128,
+            &FeatureAccess::Full,
+            1.0,
+            Par::Serial,
+            Some(1),
+            &mut out,
+        );
+        let quarter = scores_indexed(
+            shape,
+            &q,
+            &kc,
+            stride,
+            128,
+            &FeatureAccess::Prefix(8),
+            1.0,
+            Par::Serial,
+            Some(1),
+            &mut out,
+        );
         assert_eq!(full.cache_bytes_read, 4 * quarter.cache_bytes_read);
     }
 }

@@ -463,7 +463,10 @@ mod tests {
     fn setup(lanes: usize, m: usize, d: usize) -> (AttnShape, Vec<f32>, Vec<f32>, Vec<f32>) {
         let shape = AttnShape { lanes, head_dim: d, max_len: m };
         let mut rng = Xoshiro256::new(7);
-        (shape.clone(), rng.normal_vec(lanes * d), rng.normal_vec(lanes * m * d), rng.normal_vec(lanes * m * d))
+        let q = rng.normal_vec(lanes * d);
+        let k = rng.normal_vec(lanes * m * d);
+        let v = rng.normal_vec(lanes * m * d);
+        (shape.clone(), q, k, v)
     }
 
     #[test]
@@ -473,7 +476,8 @@ mod tests {
         let p_full = VariantParams::default();
         let p_topk = VariantParams { k_sel: 32, ..Default::default() };
         let a = decode_attend(&AttnVariant::Full, shape, &q, &kc, &vc, stride, 32, &p_full, None);
-        let b = decode_attend(&AttnVariant::ExactTopK, shape, &q, &kc, &vc, stride, 32, &p_topk, None);
+        let b =
+            decode_attend(&AttnVariant::ExactTopK, shape, &q, &kc, &vc, stride, 32, &p_topk, None);
         for (x, y) in a.context.iter().zip(&b.context) {
             assert!((x - y).abs() < 1e-4);
         }
@@ -501,7 +505,8 @@ mod tests {
         let stride = 128 * 32;
         let exact = VariantParams { k_sel: 32, ..Default::default() };
         let loki = VariantParams { k_sel: 32, d_sub: 8, ..Default::default() };
-        let a = decode_attend(&AttnVariant::ExactTopK, shape, &q, &kc, &vc, stride, 128, &exact, None);
+        let a =
+            decode_attend(&AttnVariant::ExactTopK, shape, &q, &kc, &vc, stride, 128, &exact, None);
         let b = decode_attend(&AttnVariant::Loki, shape, &q, &kc, &vc, stride, 128, &loki, None);
         assert!(b.movement.cache_bytes_read < a.movement.cache_bytes_read);
     }
@@ -514,7 +519,8 @@ mod tests {
         // Give slot 3 a huge accumulated mass: must be kept as heavy hitter.
         state[0][3] = 100.0;
         let p = VariantParams { k_sel: 8, ..Default::default() };
-        let out = decode_attend(&AttnVariant::H2O, shape, &q, &kc, &vc, stride, 64, &p, Some(&mut state));
+        let out =
+            decode_attend(&AttnVariant::H2O, shape, &q, &kc, &vc, stride, 64, &p, Some(&mut state));
         assert!(out.selected[0].contains(&3));
         assert_eq!(out.selected[0].len(), 8);
         // Recent window must include the newest slot.
@@ -528,7 +534,8 @@ mod tests {
         let (shape, q, kc, vc) = setup(1, 64, 8);
         let stride = 64 * 8;
         let p = VariantParams { k_sel: 12, sinks: 4, ..Default::default() };
-        let out = decode_attend(&AttnVariant::StreamingLlm, shape, &q, &kc, &vc, stride, 64, &p, None);
+        let out =
+            decode_attend(&AttnVariant::StreamingLlm, shape, &q, &kc, &vc, stride, 64, &p, None);
         let sel = &out.selected[0];
         for s in 0..4u32 {
             assert!(sel.contains(&s), "sink {s} missing");
@@ -602,8 +609,17 @@ mod tests {
         // sinks ≥ k_sel used to select sinks + 1 > k_sel slots.
         for (k_sel, sinks) in [(6usize, 16usize), (4, 4), (1, 9), (12, 64)] {
             let p = VariantParams { k_sel, sinks, ..Default::default() };
-            let out =
-                decode_attend(&AttnVariant::StreamingLlm, shape.clone(), &q, &kc, &vc, stride, 64, &p, None);
+            let out = decode_attend(
+                &AttnVariant::StreamingLlm,
+                shape.clone(),
+                &q,
+                &kc,
+                &vc,
+                stride,
+                64,
+                &p,
+                None,
+            );
             let sel = &out.selected[0];
             assert!(
                 sel.len() <= k_sel,
@@ -621,7 +637,8 @@ mod tests {
             });
             let s = pool.new_seq();
             pool.load_prefix(s, &kc[..64 * 8], &vc[..64 * 8], 64).unwrap();
-            let paged = decode_attend_paged(&AttnVariant::StreamingLlm, &mut pool, &[s], &q, &p, None);
+            let paged =
+                decode_attend_paged(&AttnVariant::StreamingLlm, &mut pool, &[s], &q, &p, None);
             assert_eq!(out.selected, paged.selected, "flat/paged selection must agree");
             assert_eq!(out.context, paged.context, "flat/paged context must be bit-identical");
         }
@@ -661,7 +678,8 @@ mod tests {
         for d_sub in [4usize, d_hot, d_hot + 1, d, 100] {
             for variant in [AttnVariant::Loki, AttnVariant::PcaAttn] {
                 let p = VariantParams { k_sel: 8, d_sub, ..Default::default() };
-                let a = decode_attend(&variant, shape.clone(), &q, &kc, &vc, stride, live, &p, None);
+                let a =
+                    decode_attend(&variant, shape.clone(), &q, &kc, &vc, stride, live, &p, None);
                 let b = decode_attend_paged(&variant, &mut pool, &seqs, &q, &p, None);
                 assert_eq!(a.selected, b.selected, "{variant:?} d_sub={d_sub} selection");
                 assert_eq!(a.context, b.context, "{variant:?} d_sub={d_sub} context bits");
@@ -692,7 +710,11 @@ mod tests {
         });
         let seqs: Vec<_> = (0..lanes).map(|_| pool.new_seq()).collect();
         let mut live = 0usize;
-        let mut append = |kc: &mut Vec<f32>, vc: &mut Vec<f32>, pool: &mut TieredKvPool, live: usize, rng: &mut Xoshiro256| {
+        let mut append = |kc: &mut Vec<f32>,
+                          vc: &mut Vec<f32>,
+                          pool: &mut TieredKvPool,
+                          live: usize,
+                          rng: &mut Xoshiro256| {
             for lane in 0..lanes {
                 let k = rng.normal_vec(d);
                 let v = rng.normal_vec(d);
@@ -759,8 +781,10 @@ mod tests {
         let mut st_vict: H2oState = vec![vec![0.0; 14]];
         // A few joint steps so the accumulators carry real history.
         for q in &queries[..3] {
-            let a = decode_attend_paged(&AttnVariant::H2O, &mut base, &[sb], q, &p, Some(&mut st_base));
-            let b = decode_attend_paged(&AttnVariant::H2O, &mut vict, &[sv], q, &p, Some(&mut st_vict));
+            let a =
+                decode_attend_paged(&AttnVariant::H2O, &mut base, &[sb], q, &p, Some(&mut st_base));
+            let b =
+                decode_attend_paged(&AttnVariant::H2O, &mut vict, &[sv], q, &p, Some(&mut st_vict));
             assert_eq!(a.context, b.context);
         }
         // Partial preemption on the victim: drop 2 tail blocks, then
@@ -773,8 +797,10 @@ mod tests {
         // Keep generating: both caches also grow with fresh appends.
         let mut live = 14;
         for (i, q) in queries[3..].iter().enumerate() {
-            let a = decode_attend_paged(&AttnVariant::H2O, &mut base, &[sb], q, &p, Some(&mut st_base));
-            let b = decode_attend_paged(&AttnVariant::H2O, &mut vict, &[sv], q, &p, Some(&mut st_vict));
+            let a =
+                decode_attend_paged(&AttnVariant::H2O, &mut base, &[sb], q, &p, Some(&mut st_base));
+            let b =
+                decode_attend_paged(&AttnVariant::H2O, &mut vict, &[sv], q, &p, Some(&mut st_vict));
             assert_eq!(a.selected, b.selected, "post-resume step {i}: selections diverged");
             assert_eq!(a.context, b.context, "post-resume step {i}: context bits diverged");
             assert_eq!(st_base, st_vict, "post-resume step {i}: accumulators diverged");

@@ -51,7 +51,8 @@ fn main() -> Result<()> {
         Ok(Box::leak(Box::new(stack.take().unwrap())))
     };
     let mut leaked: Option<&'static RuntimeStack> = None;
-    let mut runtime = |leaked: &mut Option<&'static RuntimeStack>| -> Result<&'static RuntimeStack> {
+    type StackRef = &'static RuntimeStack;
+    let mut runtime = |leaked: &mut Option<StackRef>| -> Result<StackRef> {
         if leaked.is_none() {
             *leaked = Some(get_stack()?);
         }

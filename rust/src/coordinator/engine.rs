@@ -38,7 +38,13 @@
 //!   `Batch`), victims are scored by (class, recompute cost, age), a
 //!   grower never evicts strictly-higher-priority work, and the pending
 //!   queue is kept class-banded so interactive traffic is admitted ahead
-//!   of queued batch work.
+//!   of queued batch work. `DeadlineAware` adds arrival-stamped SLO
+//!   deadlines (`GenRequest::slo_ms`) — the pending queue is re-ordered
+//!   earliest-effective-deadline-first every scheduling round — and
+//!   cross-class aging ([`EngineConfig::aging_steps`]): a batch request
+//!   that has waited the configured number of decode steps is promoted
+//!   ahead of later interactive work, bounding batch starvation under a
+//!   sustained interactive flood.
 //! * [`PreemptMode`] picks *how much* is evicted. `Full` releases the
 //!   victim's whole table; `Partial` frees only the tail blocks the
 //!   grower needs ([`TableSet::truncate_tail`]) and leaves the prefix
@@ -133,8 +139,9 @@ impl Default for AdmissionPolicy {
     }
 }
 
-/// How `grow_or_preempt` picks its victim when the pool runs dry
-/// (`repro serve --victim-policy youngest|priority`).
+/// How `grow_or_preempt` picks its victim when the pool runs dry — and,
+/// for the multi-class policies, how the pending queue is ordered
+/// (`repro serve --victim-policy youngest|priority|deadline`).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum VictimPolicy {
     /// The youngest other eligible lane (highest admission tick) — the
@@ -148,8 +155,34 @@ pub enum VictimPolicy {
     /// yields its own lane instead). The pending queue is kept
     /// class-banded — `Interactive` ahead of `Batch`, resumes at the
     /// front of their band — so latency-sensitive work is also
-    /// *admitted* first, not merely preempted last.
+    /// *admitted* first, not merely preempted last. Under
+    /// [`PreemptMode::Partial`] the recompute-cost term is the *planned
+    /// truncation depth* ([`TableSet::planned_truncation`]) — the tokens
+    /// the resume would actually recompute — not the full-history proxy.
     PriorityAware,
+    /// Everything `PriorityAware` does, plus deadlines and aging:
+    ///
+    /// * **Admission** re-orders the pending queue every scheduling
+    ///   round by *earliest effective deadline*: interactive work (and
+    ///   batch work promoted by aging) ahead of batch, SLO'd requests by
+    ///   their arrival-stamped deadline within the band, deadline-less
+    ///   ones FIFO behind them; preempted resumes and aged requests are
+    ///   overdue by definition, so their effective deadline is their
+    ///   arrival instant (earliest in the band).
+    /// * **Cross-class aging** ([`EngineConfig::aging_steps`]) promotes
+    ///   a `Batch` request to interactive-equivalent scheduling once it
+    ///   has waited that many decode steps, bounding batch starvation
+    ///   under a sustained interactive flood: a batch request submitted
+    ///   at step `s` is schedulable ahead of all later interactive work
+    ///   from step `s + aging_steps`, so its wait is at most
+    ///   `aging_steps` plus one lane-drain (the longest running decode)
+    ///   — deterministic in decode steps, pinned by
+    ///   `tests/engine_admission.rs`.
+    /// * **Victim scoring** adds an SLO-slack term: among equal-class
+    ///   candidates the lane with the *most* remaining deadline slack
+    ///   (deadline-less lanes count as infinite) is evicted first, then
+    ///   the cheapest planned recompute, then the youngest.
+    DeadlineAware,
 }
 
 /// How much of a victim's KV a preemption releases
@@ -220,11 +253,19 @@ pub struct EngineConfig {
     pub pool: PoolConfig,
     /// Reservation policy: full-budget or speculative-with-preemption.
     pub admission: AdmissionPolicy,
-    /// Who gets preempted under pool pressure (and, under
-    /// `PriorityAware`, how the pending queue is ordered).
+    /// Who gets preempted under pool pressure (and, under the
+    /// multi-class policies, how the pending queue is ordered).
     pub victim_policy: VictimPolicy,
     /// How much of a victim's KV a preemption releases.
     pub preempt: PreemptMode,
+    /// Cross-class aging bound in decode steps (`repro serve
+    /// --aging-steps N`; `None` disables). Only consulted by
+    /// [`VictimPolicy::DeadlineAware`]: a queued `Batch` request that
+    /// has waited this many decode steps is promoted to
+    /// interactive-equivalent scheduling, which bounds its remaining
+    /// wait by one lane-drain. `None` pins the PR 3 behavior where
+    /// batch starvation under sustained interactive load is unbounded.
+    pub aging_steps: Option<u64>,
     pub verbose: bool,
 }
 
@@ -240,6 +281,7 @@ impl Default for EngineConfig {
             admission: AdmissionPolicy::ReserveFull,
             victim_policy: VictimPolicy::YoungestFirst,
             preempt: PreemptMode::Full,
+            aging_steps: None,
             verbose: false,
         }
     }
@@ -280,6 +322,9 @@ struct BusyLane {
     /// Decode iteration at which the first token was emitted — the
     /// deterministic TTFT the multi-class tests compare across classes.
     ttft_step: Option<u64>,
+    /// Whether the first token beat the request's SLO deadline (`None`
+    /// until the first token, or forever when no SLO was set).
+    deadline_hit: Option<bool>,
     /// Times this request was evicted mid-flight and re-queued.
     preempted: u32,
     /// Original admission tick — *kept* across preempt/resume cycles so
@@ -315,9 +360,50 @@ enum PendingItem {
 
 /// Importance class of a queue entry (class-banded queue ordering).
 fn item_priority(item: &PendingItem) -> Priority {
+    item_queued(item).req.priority
+}
+
+/// The queued-request record behind either entry kind.
+fn item_queued(item: &PendingItem) -> &QueuedRequest {
     match item {
-        PendingItem::Fresh(q) => q.req.priority,
-        PendingItem::Resume { lane, .. } => lane.req.req.priority,
+        PendingItem::Fresh(q) => q,
+        PendingItem::Resume { lane, .. } => &lane.req,
+    }
+}
+
+/// Mutable twin of [`item_queued`] (aging promotion flips `aged`).
+fn item_queued_mut(item: &mut PendingItem) -> &mut QueuedRequest {
+    match item {
+        PendingItem::Fresh(q) => q,
+        PendingItem::Resume { lane, .. } => &mut lane.req,
+    }
+}
+
+/// Effective-deadline ordering key under [`VictimPolicy::DeadlineAware`]
+/// — smaller schedules first. Fields: effective band (interactive or
+/// aging-promoted batch before batch), urgency (overdue/deadlined before
+/// deadline-less), effective deadline (resumes and aged requests are
+/// overdue, so theirs is their arrival instant; deadline-less entries
+/// fall back to arrival for FIFO), and the deterministic submission-step
+/// tiebreak.
+fn effective_deadline_key(item: &PendingItem) -> (u8, u8, Instant, u64) {
+    let overdue = matches!(item, PendingItem::Resume { .. });
+    let q = item_queued(item);
+    let band = if q.req.priority == Priority::Interactive || q.aged { 0 } else { 1 };
+    match (overdue || q.aged, q.deadline) {
+        (true, _) => (band, 0, q.submitted, q.submitted_step),
+        (false, Some(d)) => (band, 0, d, q.submitted_step),
+        (false, None) => (band, 1, q.submitted, q.submitted_step),
+    }
+}
+
+/// Microseconds of SLO slack a running lane still has (deadline-less
+/// lanes have infinite slack — they are the preferred victims among
+/// equals).
+fn slack_micros(deadline: Option<Instant>, now: Instant) -> u128 {
+    match deadline {
+        None => u128::MAX,
+        Some(d) => d.saturating_duration_since(now).as_micros(),
     }
 }
 
@@ -387,7 +473,11 @@ impl Engine {
     /// seam for future multi-backend serving. `caps.gang_batch` is used
     /// as-is: it is the already-resolved width (a compiled bucket on the
     /// PJRT path), not a request to be clamped further.
-    pub fn with_backend(backend: Box<dyn DecodeBackend>, caps: EngineCaps, cfg: EngineConfig) -> Self {
+    pub fn with_backend(
+        backend: Box<dyn DecodeBackend>,
+        caps: EngineCaps,
+        cfg: EngineConfig,
+    ) -> Self {
         let gang_batch = caps.gang_batch.max(1);
         Self {
             backend,
@@ -404,11 +494,13 @@ impl Engine {
     /// comparators can never drift apart. Under `YoungestFirst` the queue
     /// is a plain deque (back for fresh work, front for resumes — the
     /// FIFO age priority that keeps the preemption loop livelock-free).
-    /// Under `PriorityAware` the queue is class-banded: fresh work lands
-    /// at the *back* of its band (after every same-or-higher-priority
-    /// entry), resumes at the *front* of it — so a preempted `Batch`
-    /// request never jumps ahead of waiting `Interactive` work, and
-    /// within a band resumes still precede fresh submissions.
+    /// Under `PriorityAware` (and `DeadlineAware`, whose dynamic pick
+    /// starts from the same static order) the queue is class-banded:
+    /// fresh work lands at the *back* of its band (after every
+    /// same-or-higher-priority entry), resumes at the *front* of it — so
+    /// a preempted `Batch` request never jumps ahead of waiting
+    /// `Interactive` work, and within a band resumes still precede fresh
+    /// submissions.
     fn enqueue(&self, pending: &mut VecDeque<PendingItem>, item: PendingItem, front_of_band: bool) {
         match self.cfg.victim_policy {
             VictimPolicy::YoungestFirst => {
@@ -418,7 +510,7 @@ impl Engine {
                     pending.push_back(item);
                 }
             }
-            VictimPolicy::PriorityAware => {
+            VictimPolicy::PriorityAware | VictimPolicy::DeadlineAware => {
                 let c = item_priority(&item);
                 let pos = pending
                     .iter()
@@ -433,6 +525,58 @@ impl Engine {
                     .unwrap_or(pending.len());
                 pending.insert(pos, item);
             }
+        }
+    }
+
+    /// Cross-class aging pass, run **once per scheduler iteration**
+    /// (decode steps only advance once per iteration, so scanning more
+    /// often can never promote anything new): queued `Batch` work that
+    /// has waited [`EngineConfig::aging_steps`] decode steps is
+    /// promoted, sticky and counted once. Promotion is measured in
+    /// decode steps — wall-clock-free — which is what makes the
+    /// starvation bound provable: from the promoting step onward the
+    /// aged request outranks every unaged and later-arrived entry, so it
+    /// takes the very next admitted slot. Other policies: no-op.
+    fn age_pending(
+        &self,
+        pending: &mut VecDeque<PendingItem>,
+        now_step: u64,
+        metrics: &mut EngineMetrics,
+    ) {
+        if self.cfg.victim_policy != VictimPolicy::DeadlineAware {
+            return;
+        }
+        let Some(bound) = self.cfg.aging_steps else { return };
+        for item in pending.iter_mut() {
+            let q = item_queued_mut(item);
+            if q.req.priority == Priority::Batch
+                && !q.aged
+                && now_step.saturating_sub(q.submitted_step) >= bound
+            {
+                q.aged = true;
+                metrics.aging_promotions += 1;
+            }
+        }
+    }
+
+    /// The `DeadlineAware` head pick, run before every head-of-line
+    /// admission attempt: rotate the earliest-effective-deadline entry
+    /// to the queue front (the deadline ordering is dynamic — aging and
+    /// resumes change it between admissions — so the static band order
+    /// alone is not enough). Other policies: no-op.
+    fn schedule_head(&self, pending: &mut VecDeque<PendingItem>) {
+        if self.cfg.victim_policy != VictimPolicy::DeadlineAware || pending.len() < 2 {
+            return;
+        }
+        let best = pending
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, it)| effective_deadline_key(it))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        if best != 0 {
+            let item = pending.remove(best).expect("index in range");
+            pending.push_front(item);
         }
     }
 
@@ -512,13 +656,49 @@ impl Engine {
         self.requeue_resume(pending, b, kept);
     }
 
+    /// Tokens a resume would recompute if this lane were preempted right
+    /// now for `need_blocks` blocks — the recompute-cost term of the
+    /// multi-class victim scores. Under [`PreemptMode::Full`] that is the
+    /// whole `prompt ++ produced` replay; under [`PreemptMode::Partial`]
+    /// it is the *planned truncation depth*: the dry-run twin of the
+    /// eviction [`Engine::preempt`] would actually perform, including its
+    /// degrade-to-full conditions (nothing frees, nothing kept, nothing
+    /// to replay), so candidates are priced by what preempting them
+    /// would really cost — not by the full-history proxy that overcharged
+    /// long-running lanes with cheap tails.
+    fn victim_cost(
+        &self,
+        b: &BusyLane,
+        seq: SeqId,
+        need_blocks: usize,
+        tables: &TableSet,
+        pool: &BlockAllocator,
+    ) -> usize {
+        let replay = b.prompt.len() + b.produced.len();
+        match self.cfg.preempt {
+            PreemptMode::Full => replay,
+            PreemptMode::Partial => {
+                let plan = tables.planned_truncation(pool, seq, need_blocks);
+                if plan.freed == 0 || plan.kept_len == 0 || replay == 0 {
+                    replay
+                } else {
+                    replay - plan.kept_len.min(replay)
+                }
+            }
+        }
+    }
+
     /// Victim choice when a grow finds the pool dry, over the lanes that
     /// (a) would actually return blocks — a lane whose blocks are all
     /// shared frees nothing — and (b) can be resumed faithfully (their
     /// `prompt ++ produced` recompute fits the prefill bound).
+    /// `need_blocks` is what the grower is asking for — partial-mode
+    /// scoring prices each candidate by the tail it would actually lose.
+    #[allow(clippy::too_many_arguments)]
     fn select_victim(
         &self,
         grower: usize,
+        need_blocks: usize,
         lanes: &[Lane],
         lane_seq: &[Option<SeqId>],
         lane_tick: &[u64],
@@ -532,8 +712,10 @@ impl Engine {
         });
         match self.cfg.victim_policy {
             VictimPolicy::YoungestFirst => candidates.max_by_key(|&l| lane_tick[l]),
-            VictimPolicy::PriorityAware => {
+            VictimPolicy::PriorityAware | VictimPolicy::DeadlineAware => {
                 let own = lane_priority(&lanes[grower]).unwrap_or(Priority::Batch);
+                let deadline_aware = self.cfg.victim_policy == VictimPolicy::DeadlineAware;
+                let now = Instant::now();
                 candidates
                     // Never evict strictly-higher-priority work; the
                     // grower yields its own lane instead (the caller's
@@ -543,11 +725,18 @@ impl Engine {
                         let Lane::Busy(b) = &lanes[l] else {
                             unreachable!("candidates are busy lanes")
                         };
+                        let seq = lane_seq[l].expect("candidates hold live seqs");
                         // Score: lowest class first (Batch > Interactive
-                        // in the Ord), then the cheapest recompute, then
-                        // the youngest admission.
-                        let cost = b.prompt.len() + b.produced.len();
-                        (b.req.req.priority, Reverse(cost), lane_tick[l])
+                        // in the Ord), then — deadline-aware only — the
+                        // most SLO slack, then the cheapest planned
+                        // recompute, then the youngest admission.
+                        let slack = if deadline_aware {
+                            slack_micros(b.req.deadline, now)
+                        } else {
+                            u128::MAX
+                        };
+                        let cost = self.victim_cost(b, seq, need_blocks, tables, pool);
+                        (b.req.req.priority, slack, Reverse(cost), lane_tick[l])
                     })
             }
         }
@@ -629,11 +818,7 @@ impl Engine {
                         metrics.requests_in += 1;
                         self.enqueue_fresh(
                             &mut pending,
-                            QueuedRequest {
-                                req,
-                                submitted: Instant::now(),
-                                submitted_step: metrics.decode_steps,
-                            },
+                            QueuedRequest::stamp(req, metrics.decode_steps),
                         );
                     }
                     Err(TryRecvError::Empty) => break,
@@ -654,21 +839,22 @@ impl Engine {
                         metrics.requests_in += 1;
                         self.enqueue_fresh(
                             &mut pending,
-                            QueuedRequest {
-                                req,
-                                submitted: Instant::now(),
-                                submitted_step: metrics.decode_steps,
-                            },
+                            QueuedRequest::stamp(req, metrics.decode_steps),
                         );
                     }
                     Err(_) => break,
                 }
             }
+            // Cross-class aging: once per iteration (decode_steps is
+            // constant until section 5, so this is exactly as often as
+            // promotions can change).
+            self.age_pending(&mut pending, metrics.decode_steps, &mut metrics);
 
             // ---- 2. bootstrap the gang with a batched prefill -------------
             if gang.is_none() && !pending.is_empty() {
                 let mut batch: Vec<(PendingItem, Vec<i32>, SeqId)> = Vec::new();
                 while batch.len() < self.gang_batch {
+                    self.schedule_head(&mut pending);
                     let Some(front) = pending.front() else { break };
                     match self.try_admit(&mut pool, &mut tables, front) {
                         Admit::Granted(seq, tokens) => {
@@ -714,8 +900,13 @@ impl Engine {
                     for (lane, (item, tokens, seq)) in batch.into_iter().enumerate() {
                         lane_len[lane] = tokens.len();
                         lane_seq[lane] = Some(seq);
-                        lanes[lane] =
-                            self.lane_for(item, tokens, &logits[lane], &mut admit_tick, &mut metrics);
+                        lanes[lane] = self.lane_for(
+                            item,
+                            tokens,
+                            &logits[lane],
+                            &mut admit_tick,
+                            &mut metrics,
+                        );
                         lane_tick[lane] = busy_tick(&lanes[lane]);
                     }
                     for lane in n..self.gang_batch {
@@ -741,6 +932,7 @@ impl Engine {
                 if matches!(lanes[lane], Lane::Busy(_)) {
                     continue;
                 }
+                self.schedule_head(&mut pending);
                 let front = pending.front().unwrap();
                 match self.try_admit(&mut pool, &mut tables, front) {
                     Admit::Granted(seq, tokens) => {
@@ -865,6 +1057,19 @@ impl Engine {
                         let class = &mut metrics.per_class[b.req.req.priority.index()];
                         class.ttft.push(t);
                         class.ttft_steps.push(steps as f64);
+                        // Max wait is tracked per *original* class even
+                        // when aging promoted the request — the bound it
+                        // observes is the batch-starvation bound.
+                        class.max_wait_steps = class.max_wait_steps.max(steps);
+                        if let Some(d) = b.req.deadline {
+                            let hit = Instant::now() <= d;
+                            b.deadline_hit = Some(hit);
+                            if hit {
+                                class.deadline_hits += 1;
+                            } else {
+                                class.deadline_misses += 1;
+                            }
+                        }
                     }
                     // The admission-sampled token is only stop-checked
                     // here (it was drawn from prefill logits before any
@@ -1054,7 +1259,7 @@ impl Engine {
                 Err(_) => {
                     metrics.grow_stalls += 1;
                     let victim =
-                        self.select_victim(lane, lanes, lane_seq, lane_tick, tables, pool);
+                        self.select_victim(lane, want, lanes, lane_seq, lane_tick, tables, pool);
                     match victim {
                         Some(v) => {
                             self.preempt(
@@ -1251,6 +1456,7 @@ impl Engine {
             next_token: first,
             ttft_s: None,
             ttft_step: None,
+            deadline_hit: None,
             preempted: 0,
             tick,
         }))
@@ -1270,6 +1476,7 @@ impl Engine {
             total_s: total,
             decode_steps: b.produced.len(),
             preemptions: b.preempted as usize,
+            deadline_hit: b.deadline_hit,
         };
         let text = self.tokenizer.decode(&b.produced);
         let result = GenResult {
@@ -1323,8 +1530,54 @@ mod tests {
         let cfg = EngineConfig::default();
         assert_eq!(cfg.victim_policy, VictimPolicy::YoungestFirst);
         assert_eq!(cfg.preempt, PreemptMode::Full);
+        assert_eq!(cfg.aging_steps, None, "no aging unless asked — PR 3 pinned");
         assert_eq!(VictimPolicy::default(), VictimPolicy::YoungestFirst);
         assert_eq!(PreemptMode::default(), PreemptMode::Full);
+    }
+
+    #[test]
+    fn effective_deadline_keys_band_and_order() {
+        use super::super::sampler::SampleCfg;
+        use std::sync::mpsc::channel;
+
+        let mk = |priority, slo_ms: Option<f64>, step: u64| {
+            let (reply, _rx) = channel();
+            let q = QueuedRequest::stamp(
+                GenRequest {
+                    id: 0,
+                    prompt: vec![1],
+                    max_new_tokens: 1,
+                    stop_token: None,
+                    sampling: SampleCfg::greedy(),
+                    priority,
+                    slo_ms,
+                    reply,
+                },
+                step,
+            );
+            PendingItem::Fresh(q)
+        };
+        // Interactive before batch, regardless of deadlines.
+        let int_none = mk(Priority::Interactive, None, 5);
+        let bat_slo = mk(Priority::Batch, Some(1.0), 0);
+        assert!(effective_deadline_key(&int_none) < effective_deadline_key(&bat_slo));
+        // Within a band, an SLO'd entry precedes a deadline-less one...
+        let int_slo = mk(Priority::Interactive, Some(60_000.0), 9);
+        assert!(effective_deadline_key(&int_slo) < effective_deadline_key(&int_none));
+        // ...and earlier deadlines precede later ones.
+        let int_tight = mk(Priority::Interactive, Some(10.0), 9);
+        assert!(effective_deadline_key(&int_tight) < effective_deadline_key(&int_slo));
+        // An aged batch request is overdue: effectively interactive with
+        // an arrival-time deadline, outranking every unaged entry above.
+        let mut bat_aged = mk(Priority::Batch, None, 0);
+        item_queued_mut(&mut bat_aged).aged = true;
+        for other in [&int_none, &int_slo, &int_tight, &bat_slo] {
+            assert!(effective_deadline_key(&bat_aged) < effective_deadline_key(other));
+        }
+        // Invalid SLOs never stamp a deadline.
+        for bad in [Some(0.0), Some(-5.0), Some(f64::NAN), Some(f64::INFINITY)] {
+            assert!(item_queued(&mk(Priority::Interactive, bad, 0)).deadline.is_none());
+        }
     }
 
     #[test]

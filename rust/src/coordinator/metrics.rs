@@ -16,6 +16,17 @@ pub struct ClassMetrics {
     pub done: u64,
     /// Mid-flight evictions of lanes in this class.
     pub preemptions: u64,
+    /// SLO'd requests whose first token beat / missed their
+    /// arrival-stamped deadline (requests without `slo_ms` count in
+    /// neither; rejected requests never reach a first token and are
+    /// reported under `requests_rejected` instead).
+    pub deadline_hits: u64,
+    pub deadline_misses: u64,
+    /// Largest observed decode-step wait to first token — the observable
+    /// behind the cross-class aging starvation bound (for `Batch` under
+    /// `DeadlineAware` + aging it must stay within `aging_steps` plus
+    /// one lane-drain).
+    pub max_wait_steps: u64,
     /// Seconds to first token.
     pub ttft: Summary,
     /// Decode iterations to first token — the wall-clock-free TTFT the
@@ -29,9 +40,23 @@ impl ClassMetrics {
         Self {
             done: 0,
             preemptions: 0,
+            deadline_hits: 0,
+            deadline_misses: 0,
+            max_wait_steps: 0,
             ttft: Summary::new(),
             ttft_steps: Summary::new(),
             e2e: Summary::new(),
+        }
+    }
+
+    /// Fraction of SLO'd first tokens that beat their deadline (1.0 when
+    /// the class saw no SLO'd requests — nothing was violated).
+    pub fn deadline_hit_rate(&self) -> f64 {
+        let total = self.deadline_hits + self.deadline_misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.deadline_hits as f64 / total as f64
         }
     }
 }
@@ -63,6 +88,10 @@ pub struct EngineMetrics {
     /// Kept prefixes reclaimed from *queued* requests under unresolvable
     /// pressure (second-tier victims; their resume pays full recompute).
     pub kept_reclaims: u64,
+    /// Queued `Batch` requests promoted to interactive-equivalent
+    /// scheduling by cross-class aging (`DeadlineAware` + `aging_steps`;
+    /// each request is counted at most once).
+    pub aging_promotions: u64,
     /// Preempted requests re-admitted (prefix recompute + sampler-state
     /// restore). `preemptions - resumes` requests are still queued or
     /// were finished as `CacheFull` after shrinking pools.
@@ -121,6 +150,7 @@ impl Default for EngineMetrics {
             preemptions: 0,
             partial_preemptions: 0,
             kept_reclaims: 0,
+            aging_promotions: 0,
             resumes: 0,
             recomputed_tokens: 0,
             recompute_saved_tokens: 0,
@@ -207,7 +237,8 @@ impl EngineMetrics {
              kv pool:   peak {}/{} blocks ({:.1} MB resident vs {:.1} MB flat, {:.2}x) | \
              shared {} | blocked {}\n\
              admission: mean occupancy {:.1}% | preempts {} ({} partial, {} kept-reclaims) \
-             / resumes {} ({} tok recomputed, {} saved) | grows {} (+{} blocks, {} stalls)\n\
+             / resumes {} ({} tok recomputed, {} saved) | grows {} (+{} blocks, {} stalls) \
+             | aging promotions {}\n\
              ttft_s:    {}\n\
              e2e_s:     {}\n\
              queue_s:   {}\n\
@@ -238,6 +269,7 @@ impl EngineMetrics {
             self.grow_events,
             self.grown_blocks,
             self.grow_stalls,
+            self.aging_promotions,
             self.ttft.display(),
             self.e2e_latency.display(),
             self.queue_wait.display(),
@@ -252,13 +284,18 @@ impl EngineMetrics {
             }
             s.push_str(&format!(
                 "\nclass {:<11} done {} | preempts {} | ttft mean {:.4}s \
-                 ({:.1} steps) | e2e mean {:.4}s",
+                 ({:.1} steps, max wait {}) | e2e mean {:.4}s | \
+                 deadline hits {}/{} ({:.0}%)",
                 p.name(),
                 c.done,
                 c.preemptions,
                 c.ttft.mean(),
                 c.ttft_steps.mean(),
+                c.max_wait_steps,
                 c.e2e.mean(),
+                c.deadline_hits,
+                c.deadline_hits + c.deadline_misses,
+                c.deadline_hit_rate() * 100.0,
             ));
         }
         s
@@ -266,6 +303,9 @@ impl EngineMetrics {
 }
 
 #[cfg(test)]
+// `EngineMetrics` keeps a private `started` stamp, so tests build it via
+// `default()` and then set the counters they need.
+#[allow(clippy::field_reassign_with_default)]
 mod tests {
     use super::*;
 
@@ -293,6 +333,24 @@ mod tests {
         // Occupancy averages the *written* fraction: (8/64 + 4/64) / 2.
         assert!((m.mean_pool_occupancy() - 6.0 / 64.0).abs() < 1e-12);
         assert!(m.report().contains("peak 10/64 blocks"));
+    }
+
+    #[test]
+    fn deadline_hit_rate_counts_only_slod_requests() {
+        let mut c = ClassMetrics::new();
+        assert_eq!(c.deadline_hit_rate(), 1.0, "no SLOs → nothing violated");
+        c.deadline_hits = 3;
+        c.deadline_misses = 1;
+        assert!((c.deadline_hit_rate() - 0.75).abs() < 1e-12);
+        let mut m = EngineMetrics::default();
+        m.per_class[Priority::Batch.index()].deadline_misses = 2;
+        m.per_class[Priority::Batch.index()].max_wait_steps = 41;
+        m.per_class[Priority::Batch.index()].done = 2;
+        m.aging_promotions = 5;
+        let report = m.report();
+        assert!(report.contains("aging promotions 5"), "{report}");
+        assert!(report.contains("max wait 41"), "{report}");
+        assert!(report.contains("deadline hits 0/2 (0%)"), "{report}");
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Request / response types for the serving engine.
 
 use std::sync::mpsc::Sender;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::sampler::SampleCfg;
 
@@ -59,6 +59,14 @@ pub struct GenRequest {
     pub sampling: SampleCfg,
     /// Importance class for the scheduler's victim/admission policies.
     pub priority: Priority,
+    /// Optional time-to-first-token SLO in milliseconds. The engine
+    /// stamps an absolute deadline (`arrival + slo_ms`) at submission;
+    /// under [`super::engine::VictimPolicy::DeadlineAware`] the pending
+    /// queue is ordered earliest-effective-deadline-first and victim
+    /// scoring protects the least slack. Always observable: completion
+    /// reports whether the first token beat the deadline
+    /// ([`RequestTiming::deadline_hit`]), SLO'd or not scheduled by it.
+    pub slo_ms: Option<f64>,
     /// Where to deliver the result.
     pub reply: Sender<GenResult>,
 }
@@ -78,6 +86,9 @@ pub struct RequestTiming {
     /// Times this request was preempted mid-flight and resumed by prefix
     /// recompute (0 under `AdmissionPolicy::ReserveFull`).
     pub preemptions: usize,
+    /// Whether the first token beat the request's SLO deadline (`None`
+    /// when no `slo_ms` was set, or the request never emitted a token).
+    pub deadline_hit: Option<bool>,
 }
 
 #[derive(Clone, Debug)]
@@ -107,4 +118,26 @@ pub struct QueuedRequest {
     /// is scheduling latency (queue wait + admission) even for traces
     /// that arrive mid-run, not an absolute uptime counter.
     pub submitted_step: u64,
+    /// Absolute SLO deadline, arrival-stamped (`submitted + slo_ms`).
+    /// `None` when the request carries no SLO.
+    pub deadline: Option<Instant>,
+    /// Cross-class aging already promoted this `Batch` request to
+    /// interactive-equivalent scheduling (sticky: once a request has
+    /// waited out the aging bound it never demotes, and the promotion is
+    /// counted exactly once in the metrics).
+    pub aged: bool,
+}
+
+impl QueuedRequest {
+    /// Stamp a freshly submitted request: deadline is arrival-relative,
+    /// so a request queued behind a backlog keeps the SLO its client
+    /// measured from, not from whenever the scheduler first saw it idle.
+    pub fn stamp(req: GenRequest, submitted_step: u64) -> Self {
+        let submitted = Instant::now();
+        let deadline = req
+            .slo_ms
+            .filter(|ms| ms.is_finite() && *ms > 0.0)
+            .map(|ms| submitted + Duration::from_secs_f64(ms / 1000.0));
+        Self { req, submitted, submitted_step, deadline, aged: false }
+    }
 }

@@ -43,6 +43,15 @@ pub struct WorkloadCfg {
     /// mixed-priority contention scenarios behind the priority-aware
     /// victim policy.
     pub batch_frac: f64,
+    /// Optional TTFT SLO (milliseconds) stamped on every `Interactive`
+    /// request — the arrival-relative deadline the engine's
+    /// `DeadlineAware` policy schedules by and the deadline-hit metrics
+    /// grade against. `None` (the default) emits the SLO-less traces
+    /// every earlier scenario used.
+    pub slo_ms_interactive: Option<f64>,
+    /// Same, for `Batch` requests (throughput jobs usually run without
+    /// one — aging, not a deadline, is what bounds their wait).
+    pub slo_ms_batch: Option<f64>,
     pub seed: u64,
 }
 
@@ -57,6 +66,8 @@ impl Default for WorkloadCfg {
             gen_len_dist: GenLenDist::Uniform,
             shared_prefix_len: 0,
             batch_frac: 0.0,
+            slo_ms_interactive: None,
+            slo_ms_batch: None,
             seed: 0,
         }
     }
@@ -70,6 +81,9 @@ pub struct TraceItem {
     pub max_new_tokens: usize,
     /// Importance class for the engine's multi-class scheduler.
     pub priority: Priority,
+    /// Per-class TTFT SLO from the workload config (`None` → no
+    /// deadline; the engine stamps `arrival + slo_ms` at submission).
+    pub slo_ms: Option<f64>,
 }
 
 /// A generated request trace.
@@ -116,7 +130,11 @@ impl Workload {
             } else {
                 Priority::Interactive
             };
-            items.push(TraceItem { arrival_s: t, prompt, max_new_tokens, priority });
+            let slo_ms = match priority {
+                Priority::Interactive => cfg.slo_ms_interactive,
+                Priority::Batch => cfg.slo_ms_batch,
+            };
+            items.push(TraceItem { arrival_s: t, prompt, max_new_tokens, priority, slo_ms });
         }
         Self { items }
     }
@@ -274,6 +292,32 @@ mod tests {
         for (a, b) in w0.items.iter().zip(&wa.items) {
             assert_eq!(a.prompt, b.prompt);
             assert_eq!(a.max_new_tokens, b.max_new_tokens);
+        }
+    }
+
+    #[test]
+    fn slo_annotation_is_per_class_and_does_not_perturb_the_trace() {
+        let base = WorkloadCfg { n_requests: 32, batch_frac: 0.5, seed: 21, ..Default::default() };
+        let plain = Workload::generate(&base, &fillers());
+        assert!(plain.items.iter().all(|i| i.slo_ms.is_none()), "default is SLO-less");
+        let slod = Workload::generate(
+            &WorkloadCfg {
+                slo_ms_interactive: Some(250.0),
+                slo_ms_batch: Some(60_000.0),
+                ..base.clone()
+            },
+            &fillers(),
+        );
+        for (a, b) in plain.items.iter().zip(&slod.items) {
+            // Annotation must ride along, never reshuffle the trace.
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.max_new_tokens, b.max_new_tokens);
+            assert_eq!(a.priority, b.priority);
+            let want = match b.priority {
+                Priority::Interactive => Some(250.0),
+                Priority::Batch => Some(60_000.0),
+            };
+            assert_eq!(b.slo_ms, want);
         }
     }
 

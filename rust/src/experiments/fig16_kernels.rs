@@ -20,7 +20,9 @@ use anyhow::Result;
 
 use crate::attnsim::kernels::{scores_dense_copy, scores_indexed, FeatureAccess, Par};
 use crate::attnsim::AttnShape;
-use crate::linalg::parsim::{calibrate_mac_rate, makespan, score_units_1d, score_units_2d, ParSimCfg};
+use crate::linalg::parsim::{
+    calibrate_mac_rate, makespan, score_units_1d, score_units_2d, ParSimCfg,
+};
 use crate::util::bench::{bench, BenchConfig};
 use crate::util::json::{self, Json};
 use crate::util::rng::Xoshiro256;
@@ -50,7 +52,16 @@ pub fn run(quick: bool) -> Result<Json> {
 
     let mut table = Table::new(
         "Fig 16: QKᵀ scoring — simulated grid time (ms) + measured copy overhead",
-        &["batch", "S", "2-D ms (sim)", "1-D ms (sim)", "1-D/2-D", "indexed ms (real)", "dense-copy ms (real)", "dense/indexed"],
+        &[
+            "batch",
+            "S",
+            "2-D ms (sim)",
+            "1-D ms (sim)",
+            "1-D/2-D",
+            "indexed ms (real)",
+            "dense-copy ms (real)",
+            "dense/indexed",
+        ],
     );
     let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
     let mut rows = Vec::new();

@@ -33,8 +33,10 @@ pub fn run_layers(v_pct: f64) -> Result<Json> {
         for (i, prof) in profiles.iter().enumerate() {
             row.push(fnum(stats[i].0.per_layer[l], 1));
             row.push(fnum(stats[i].1.per_layer[l], 1));
-            obj.push((Box::leak(format!("{prof}_pre").into_boxed_str()), json::num(stats[i].0.per_layer[l])));
-            obj.push((Box::leak(format!("{prof}_post").into_boxed_str()), json::num(stats[i].1.per_layer[l])));
+            let pre_key = Box::leak(format!("{prof}_pre").into_boxed_str());
+            obj.push((pre_key, json::num(stats[i].0.per_layer[l])));
+            let post_key = Box::leak(format!("{prof}_post").into_boxed_str());
+            obj.push((post_key, json::num(stats[i].1.per_layer[l])));
         }
         table.row(row);
         rows.push(json::obj(obj));

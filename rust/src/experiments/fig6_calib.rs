@@ -20,7 +20,8 @@ pub fn run(stack: &RuntimeStack, quick: bool) -> Result<Json> {
     let full = perplexity(stack, "wiki_post", &VariantSpec::Full, &docs, 16, max_tokens)?
         .perplexity();
     let mut table = Table::new(
-        "Fig 6 (middle): Loki ppl by calibration corpus (k_f=0.25, d_f=0.25; full ppl shown for reference)",
+        "Fig 6 (middle): Loki ppl by calibration corpus (k_f=0.25, d_f=0.25; \
+         full ppl shown for reference)",
         &["calibration", "pre-rotary ppl", "post-rotary ppl"],
     );
     let mut rows = Vec::new();

@@ -13,7 +13,16 @@ pub fn run() -> Result<Json> {
     let tpu = TpuModel::default();
     let mut table = Table::new(
         "TPU-v4 roofline estimates, Llama2-13B decode attention (batch 16)",
-        &["config", "S", "VMEM/step KiB", "HBM MB/step", "AI flop/B", "t_bw µs", "t_mxu µs", "speedup vs vanilla"],
+        &[
+            "config",
+            "S",
+            "VMEM/step KiB",
+            "HBM MB/step",
+            "AI flop/B",
+            "t_bw µs",
+            "t_mxu µs",
+            "speedup vs vanilla",
+        ],
     );
     let mut rows = Vec::new();
     for s in [2048usize, 3072, 4096] {

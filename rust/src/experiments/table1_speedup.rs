@@ -18,7 +18,15 @@ pub fn run() -> Result<Json> {
 
     let mut table = Table::new(
         &format!("Table 1: method budgets and modeled speedups (D={d}, S={s})"),
-        &["method", "k_f", "d_f", "speedup (Eq.5)", "asymptote", "mem saving", "bytes vs full (measured)"],
+        &[
+            "method",
+            "k_f",
+            "d_f",
+            "speedup (Eq.5)",
+            "asymptote",
+            "mem saving",
+            "bytes vs full (measured)",
+        ],
     );
 
     // Measure actual bytes moved by the substrate kernels.
@@ -44,8 +52,22 @@ pub fn run() -> Result<Json> {
     let rows_spec = vec![
         ("Exact Top-K", AttnVariant::ExactTopK, 0.25, 1.0, f64::NAN, f64::NAN),
         ("H2O", AttnVariant::H2O, 0.25, 1.0, 1.0 / 0.25, 4.0),
-        ("Loki (A)", AttnVariant::Loki, 0.25, 0.25, SpeedupModel::loki_speedup_asymptote(0.25, 0.25), 1.0),
-        ("Loki (B)", AttnVariant::Loki, 0.125, 0.5, SpeedupModel::loki_speedup_asymptote(0.5, 0.125), 1.0),
+        (
+            "Loki (A)",
+            AttnVariant::Loki,
+            0.25,
+            0.25,
+            SpeedupModel::loki_speedup_asymptote(0.25, 0.25),
+            1.0,
+        ),
+        (
+            "Loki (B)",
+            AttnVariant::Loki,
+            0.125,
+            0.5,
+            SpeedupModel::loki_speedup_asymptote(0.5, 0.125),
+            1.0,
+        ),
     ];
     let mut rows = Vec::new();
     for (name, variant, k_f, d_f, asym, _mem) in rows_spec {

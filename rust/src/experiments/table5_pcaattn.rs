@@ -63,6 +63,8 @@ pub fn run(stack: &RuntimeStack, quick: bool) -> Result<Json> {
     table.emit("table5_pcaattn");
     let out = json::arr(rows);
     super::write_json("table5_pcaattn", &out);
-    println!("(paper: PCAAttn perplexity explodes (38→933 at d=.5/.25) — ours should blow up too)");
+    println!(
+        "(paper: PCAAttn perplexity explodes (38→933 at d=.5/.25) — ours should blow up too)"
+    );
     Ok(out)
 }

@@ -256,6 +256,38 @@ impl TableSet {
         TruncateOutcome { freed, kept_blocks: t.blocks.len(), kept_len: t.len }
     }
 
+    /// Dry-run twin of [`TableSet::truncate_tail`]: what *would* a
+    /// partial preemption of `seq` for `need_free` blocks free and keep,
+    /// without touching the table or the allocator? The victim scorers
+    /// use this to price candidates by their **planned truncation
+    /// depth** — the tokens the resume would actually recompute — instead
+    /// of the full-history proxy, which overcharges long-running lanes
+    /// whose tail is cheap. The chain hash is position-dependent, so a
+    /// block never appears twice in one table and the walk's refcount
+    /// reads match what the destructive walk would observe.
+    pub fn planned_truncation(
+        &self,
+        alloc: &BlockAllocator,
+        seq: SeqId,
+        need_free: usize,
+    ) -> TruncateOutcome {
+        let t = self.tables.get(&seq).expect("planned_truncation of unknown seq");
+        let need_free = need_free.max(1);
+        let mut freed = 0usize;
+        let mut kept = t.blocks.len();
+        while kept > 0 && freed < need_free {
+            if alloc.ref_count(t.blocks[kept - 1]) == 1 {
+                freed += 1;
+            }
+            kept -= 1;
+        }
+        TruncateOutcome {
+            freed,
+            kept_blocks: kept,
+            kept_len: t.len.min(kept * self.block_size),
+        }
+    }
+
     /// Shrink a live sequence's logical length without releasing blocks.
     /// Partial preemption uses this to drop a position the mirror already
     /// advanced for an in-flight token that was never delivered: the
@@ -715,6 +747,43 @@ mod tests {
         assert_eq!(ts.table(s).unwrap().blocks.len(), 2);
         assert_eq!(ts.table(s).unwrap().len, 6, "kept prefix untouched");
         ts.free(&mut alloc, s);
+        alloc.check_invariants();
+    }
+
+    #[test]
+    fn planned_truncation_matches_truncate_tail() {
+        // The dry run must agree with the destructive walk on every
+        // (private tail, shared prefix, need) combination the victim
+        // scorer can see — otherwise tail-cost scoring prices a
+        // preemption the actual eviction won't perform.
+        for need in 1..=5 {
+            let mut alloc = BlockAllocator::new(16, 4);
+            let mut ts = TableSet::new(4, true);
+            let prompt = toks(8, 0); // 2 full shareable blocks
+            let a = ts.admit(&mut alloc, &prompt, 18).unwrap(); // 5 blocks
+            let _b = ts.admit(&mut alloc, &prompt, 9).unwrap(); // shares 2
+            for _ in 0..8 {
+                ts.advance(a); // len 16 → tail blocks written
+            }
+            let planned = ts.planned_truncation(&alloc, a, need);
+            let actual = ts.truncate_tail(&mut alloc, a, need);
+            assert_eq!(planned, actual, "dry run diverged at need={need}");
+        }
+    }
+
+    #[test]
+    fn planned_truncation_leaves_state_untouched() {
+        let mut alloc = BlockAllocator::new(8, 4);
+        let mut ts = TableSet::new(4, true);
+        let s = ts.admit(&mut alloc, &toks(6, 0), 12).unwrap();
+        let in_use = alloc.blocks_in_use();
+        let before = ts.table(s).unwrap().clone();
+        let out = ts.planned_truncation(&alloc, s, 2);
+        assert!(out.freed > 0);
+        assert_eq!(alloc.blocks_in_use(), in_use, "dry run must not free");
+        let after = ts.table(s).unwrap();
+        assert_eq!(before.blocks, after.blocks);
+        assert_eq!(before.len, after.len);
         alloc.check_invariants();
     }
 

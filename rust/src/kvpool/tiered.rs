@@ -474,7 +474,8 @@ mod tests {
         assert_eq!(p.allocator().blocks_in_use(), 2, "fork allocates nothing");
 
         // Parent's view before divergence.
-        let before: Vec<f32> = (0..6).map(|j| p.cold_k_view().row(p.blocks(parent), j)[0]).collect();
+        let before: Vec<f32> =
+            (0..6).map(|j| p.cold_k_view().row(p.blocks(parent), j)[0]).collect();
         let k = rng.normal_vec(4);
         p.append(child, &k, &k).unwrap();
         // Tail block (positions 4..) was copied for the child; full block
@@ -486,7 +487,10 @@ mod tests {
         assert_eq!(before, after, "parent unchanged by child append");
         // The child sees the shared prefix plus its own token.
         assert_eq!(p.cold_k_view().row(p.blocks(child), 6), &k[..]);
-        assert_eq!(p.cold_k_view().row(p.blocks(child), 3), p.cold_k_view().row(p.blocks(parent), 3));
+        assert_eq!(
+            p.cold_k_view().row(p.blocks(child), 3),
+            p.cold_k_view().row(p.blocks(parent), 3)
+        );
         p.free_seq(parent);
         p.free_seq(child);
         assert_eq!(p.allocator().blocks_in_use(), 0);

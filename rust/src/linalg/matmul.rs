@@ -167,7 +167,8 @@ pub fn matmul_threaded_2d(
                     let arow = &a[i * k..(i + 1) * k];
                     // SAFETY: tile (i, j0..j1) is written by exactly one task.
                     let crow = unsafe {
-                        std::slice::from_raw_parts_mut((c_addr as *mut f32).add(i * n + j0), j1 - j0)
+                        let base = (c_addr as *mut f32).add(i * n + j0);
+                        std::slice::from_raw_parts_mut(base, j1 - j0)
                     };
                     crow.fill(0.0);
                     for (l, &av) in arow.iter().enumerate() {

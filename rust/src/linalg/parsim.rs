@@ -47,7 +47,8 @@ pub fn makespan(units: &[f64], cfg: &ParSimCfg) -> f64 {
     // Min-heap of worker finish times.
     use std::cmp::Reverse;
     use std::collections::BinaryHeap;
-    let mut heap: BinaryHeap<Reverse<u64>> = (0..cfg.workers.max(1)).map(|_| Reverse(0u64)).collect();
+    let mut heap: BinaryHeap<Reverse<u64>> =
+        (0..cfg.workers.max(1)).map(|_| Reverse(0u64)).collect();
     // Work in nanoseconds to keep ordering integral.
     let to_ns =
         |macs: f64| -> u64 { ((macs / cfg.mac_per_sec + cfg.unit_overhead_s) * 1e9) as u64 };

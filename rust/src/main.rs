@@ -49,11 +49,16 @@ fn main() -> Result<()> {
                  \x20 --admission full|speculative            KV reservation policy\n\
                  \x20 --reserve-frac 0.25                     speculative decode-budget fraction\n\
                  \x20 --headroom-blocks 2                     blocks per speculative grow\n\
-                 \x20 --victim-policy youngest|priority        preemption victim selection\n\
-                 \x20 --preempt full|partial                  whole-sequence vs tail-block eviction\n\
-                 generate: --prompt STR --max-tokens N --temperature T --priority interactive|batch\n\
+                 \x20 --victim-policy youngest|priority|deadline\n\
+                 \x20                                         preemption victim selection\n\
+                 \x20 --preempt full|partial                  whole vs tail-block eviction\n\
+                 \x20 --aging-steps N                         cross-class aging bound in decode\n\
+                 \x20                                         steps (deadline policy; 0 = off)\n\
+                 generate: --prompt STR --max-tokens N --temperature T\n\
+                 \x20         --priority interactive|batch --slo-ms MS\n\
                  serve:    --listen 127.0.0.1:7077\n\
-                 bench-serve: --requests N --rate R --shared-prefix BYTES --batch-frac F"
+                 bench-serve: --requests N --rate R --shared-prefix BYTES --batch-frac F\n\
+                 \x20            --slo-ms MS (interactive SLO) --batch-slo-ms MS"
             );
             Ok(())
         }
@@ -101,15 +106,44 @@ fn engine_config(args: &Args, svc: &RuntimeService) -> Result<EngineConfig> {
         victim_policy: match args.str_or("victim-policy", "youngest").as_str() {
             "youngest" | "youngest-first" => VictimPolicy::YoungestFirst,
             "priority" | "priority-aware" => VictimPolicy::PriorityAware,
-            other => bail!("unknown --victim-policy {other} (youngest|priority)"),
+            "deadline" | "deadline-aware" => VictimPolicy::DeadlineAware,
+            other => bail!("unknown --victim-policy {other} (youngest|priority|deadline)"),
         },
         preempt: match args.str_or("preempt", "full").as_str() {
             "full" => PreemptMode::Full,
             "partial" => PreemptMode::Partial,
             other => bail!("unknown --preempt {other} (full|partial)"),
         },
+        aging_steps: match args.usize_or("aging-steps", 0) {
+            0 => None,
+            n => Some(n as u64),
+        },
         verbose: args.flag("verbose"),
     })
+}
+
+/// Optional `--slo-ms`-style flag: absent → no deadline; present → must
+/// pass [`loki::server::validate_slo_ms`], the same rule the server
+/// applies to the JSON `"slo_ms"` field (positive, finite, ≤ the
+/// default cap) — the CLI must never accept a deadline the protocol
+/// would reject.
+fn slo_ms_arg(args: &Args, name: &str) -> Result<Option<f64>> {
+    // A bare `--slo-ms` (no value — the parser files it as a flag) must
+    // be an error, not a silently-undeadlined request.
+    if args.flag(name) {
+        bail!("--{name} needs a value in milliseconds");
+    }
+    match args.get(name) {
+        None => Ok(None),
+        Some(raw) => {
+            let ms: f64 = raw
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got {raw:?}"))?;
+            loki::server::validate_slo_ms(ms, loki::server::DEFAULT_SLO_MS_CAP)
+                .map_err(|e| anyhow::anyhow!("--{name}: {e}"))?;
+            Ok(Some(ms))
+        }
+    }
 }
 
 fn info() -> Result<()> {
@@ -131,7 +165,8 @@ fn info() -> Result<()> {
     for name in m.graphs.keys() {
         println!("  {name}");
     }
-    println!("pca calibrations: {:?} (default {})", m.pca.keys().collect::<Vec<_>>(), m.default_pca);
+    let pca_names: Vec<_> = m.pca.keys().collect();
+    println!("pca calibrations: {pca_names:?} (default {})", m.default_pca);
     Ok(())
 }
 
@@ -160,6 +195,7 @@ fn generate(args: &Args) -> Result<()> {
         Some(p) => p,
         None => bail!("unknown --priority (interactive|batch)"),
     };
+    let slo_ms = slo_ms_arg(args, "slo-ms")?;
     tx.send(GenRequest {
         id: 1,
         prompt: tok.encode(&prompt),
@@ -171,6 +207,7 @@ fn generate(args: &Args) -> Result<()> {
             seed: 1,
         },
         priority,
+        slo_ms,
         reply,
     })
     .ok();
@@ -198,7 +235,10 @@ fn serve(args: &Args) -> Result<()> {
     let cfg = engine_config(args, &svc)?;
     // Protocol-level cap: asking for more decode than the cache can hold
     // is a client error answered immediately, not a queue entry.
-    let server_cfg = loki::server::ServerCfg { max_tokens_cap: svc.manifest.model.max_len };
+    let server_cfg = loki::server::ServerCfg {
+        max_tokens_cap: svc.manifest.model.max_len,
+        ..Default::default()
+    };
     let engine = Engine::new(&svc, cfg.clone());
     let (tx, rx) = Engine::channel(&cfg);
     let server_tx = tx.clone();
@@ -221,6 +261,8 @@ fn bench_serve(args: &Args) -> Result<()> {
             rate: args.f64_or("rate", 0.0),
             shared_prefix_len: args.usize_or("shared-prefix", 0),
             batch_frac: args.f64_or("batch-frac", 0.0),
+            slo_ms_interactive: slo_ms_arg(args, "slo-ms")?,
+            slo_ms_batch: slo_ms_arg(args, "batch-slo-ms")?,
             ..Default::default()
         },
         &suite.fillers,
@@ -243,6 +285,7 @@ fn bench_serve(args: &Args) -> Result<()> {
                 stop_token: None,
                 sampling: SampleCfg::greedy(),
                 priority: item.priority,
+                slo_ms: item.slo_ms,
                 reply: reply.clone(),
             })
             .ok();

@@ -2,13 +2,21 @@
 //!
 //! Protocol: one JSON object per line.
 //!   → {"prompt": "...", "max_tokens": 32, "temperature": 0.0,
-//!      "priority": "interactive"}
+//!      "priority": "interactive", "slo_ms": 250}
 //!   ← {"id": 1, "text": "...", "tokens": 32, "ttft_s": 0.01, "total_s": 0.2}
 //!
 //! `"priority"` is optional (`"interactive"` | `"batch"`, default
 //! interactive) and feeds the engine's multi-class scheduler: under the
 //! priority-aware victim policy, batch requests are admitted behind and
 //! preempted before interactive ones. Unknown values are a client error.
+//!
+//! `"slo_ms"` is an optional time-to-first-token SLO in milliseconds,
+//! arrival-stamped into an absolute deadline the engine's deadline-aware
+//! policy schedules by. It must be a finite number in
+//! `(0, slo_ms_cap]` — a negative, zero, non-finite or absurdly large
+//! value is a client error, not a silent default. Valid values are
+//! echoed back along with `"deadline_hit"` (did the first token beat the
+//! deadline).
 //!
 //! Malformed or invalid requests get a structured `{"error": "..."}`
 //! reply and the connection stays usable for the next line — client bugs
@@ -41,11 +49,33 @@ static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 #[derive(Clone, Copy, Debug)]
 pub struct ServerCfg {
     pub max_tokens_cap: usize,
+    /// Largest accepted `"slo_ms"`. A deadline further out than this is
+    /// almost certainly a client unit bug (seconds vs milliseconds, or a
+    /// sentinel) — reject it rather than schedule around nonsense.
+    pub slo_ms_cap: f64,
+}
+
+/// 24 hours — far beyond any serving SLO, tight enough to catch unit
+/// mix-ups.
+pub const DEFAULT_SLO_MS_CAP: f64 = 86_400_000.0;
+
+/// The single SLO validation rule, shared by the JSON protocol and the
+/// CLI flags (`--slo-ms`/`--batch-slo-ms`): positive, finite, at most
+/// `cap` milliseconds. Everything else is a client error — scheduling
+/// by a mistyped deadline would be an SLO bug twice over.
+pub fn validate_slo_ms(ms: f64, cap: f64) -> Result<()> {
+    if !ms.is_finite() || ms <= 0.0 {
+        bail!("\"slo_ms\" must be a positive number of milliseconds (got {ms})");
+    }
+    if ms > cap {
+        bail!("\"slo_ms\" must be at most {cap} (got {ms})");
+    }
+    Ok(())
 }
 
 impl Default for ServerCfg {
     fn default() -> Self {
-        Self { max_tokens_cap: 4096 }
+        Self { max_tokens_cap: 4096, slo_ms_cap: DEFAULT_SLO_MS_CAP }
     }
 }
 
@@ -147,6 +177,15 @@ fn handle_line(
             })?
         }
     };
+    // Optional TTFT SLO; a value outside (0, cap] is a client error.
+    let slo_ms = match req.get("slo_ms") {
+        None => None,
+        Some(v) => {
+            let ms = v.as_f64().context("\"slo_ms\" must be a number (milliseconds)")?;
+            validate_slo_ms(ms, cfg.slo_ms_cap)?;
+            Some(ms)
+        }
+    };
     let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
     let (reply, rx) = channel();
     submit
@@ -157,11 +196,12 @@ fn handle_line(
             stop_token: Some(b'\n' as i32),
             sampling: SampleCfg { temperature, top_p: 0.95, seed: id },
             priority,
+            slo_ms,
             reply,
         })
         .map_err(|_| anyhow::anyhow!("engine is down"))?;
     let res = rx.recv().map_err(|_| anyhow::anyhow!("engine dropped request"))?;
-    Ok(json::obj(vec![
+    let mut fields = vec![
         ("id", json::num(res.id as f64)),
         ("text", json::s(&res.text)),
         ("tokens", json::num(res.tokens.len() as f64)),
@@ -170,7 +210,15 @@ fn handle_line(
         ("ttft_s", json::num(res.timing.ttft_s)),
         ("total_s", json::num(res.timing.total_s)),
         ("preemptions", json::num(res.timing.preemptions as f64)),
-    ]))
+    ];
+    if let Some(ms) = slo_ms {
+        fields.push(("slo_ms", json::num(ms)));
+        fields.push((
+            "deadline_hit",
+            res.timing.deadline_hit.map_or(Json::Null, Json::Bool),
+        ));
+    }
+    Ok(json::obj(fields))
 }
 
 /// Blocking one-shot client (tests / demos).

@@ -73,7 +73,9 @@ impl Args {
             None => default.to_vec(),
             Some(v) => v
                 .split(',')
-                .map(|x| x.trim().parse().unwrap_or_else(|_| panic!("bad float in --{name}: {x:?}")))
+                .map(|x| {
+                    x.trim().parse().unwrap_or_else(|_| panic!("bad float in --{name}: {x:?}"))
+                })
                 .collect(),
         }
     }

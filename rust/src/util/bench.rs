@@ -130,7 +130,12 @@ mod tests {
 
     #[test]
     fn bench_reports_sane_stats() {
-        let cfg = BenchConfig { warmup_iters: 1, min_iters: 5, max_iters: 20, target_time: Duration::from_millis(50) };
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 20,
+            target_time: Duration::from_millis(50),
+        };
         let r = bench("spin", &cfg, || {
             std::hint::black_box((0..1000).sum::<u64>());
         });

@@ -103,7 +103,9 @@ mod tests {
         t.row(vec!["loki (k=0.25,d=0.25)".into(), "5.20".into()]);
         let r = t.render();
         assert!(r.contains("| method"));
-        assert!(r.lines().all(|l| l.is_empty() || l.starts_with('+') || l.starts_with('|') || l.starts_with("##")));
+        assert!(r.lines().all(|l| {
+            l.is_empty() || l.starts_with('+') || l.starts_with('|') || l.starts_with("##")
+        }));
     }
 
     #[test]

@@ -31,6 +31,7 @@ fn request(
         stop_token: None,
         sampling: SampleCfg::greedy(),
         priority: Priority::Interactive,
+        slo_ms: None,
         reply,
     }
 }
@@ -105,6 +106,7 @@ fn stop_token_ends_generation_early() {
         stop_token: Some(b' ' as i32),
         sampling: SampleCfg::greedy(),
         priority: Priority::Interactive,
+        slo_ms: None,
         reply,
     })
     .unwrap();

@@ -31,7 +31,8 @@ fn start_server() -> SocketAddr {
     let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
     let addr = listener.local_addr().unwrap();
     std::thread::spawn(move || {
-        let _ = serve_listener(listener, tx, ServerCfg { max_tokens_cap: MAX_TOKENS_CAP });
+        let cfg = ServerCfg { max_tokens_cap: MAX_TOKENS_CAP, ..Default::default() };
+        let _ = serve_listener(listener, tx, cfg);
     });
     addr
 }
@@ -158,6 +159,37 @@ fn priority_field_is_validated_and_echoed() {
     // Wrong type is a protocol error too, and the connection survives.
     let resp = conn.round_trip(r#"{"prompt": "hi", "max_tokens": 3, "priority": 7}"#);
     assert!(error_of(&resp).contains("priority"));
+    let resp = conn.round_trip(r#"{"prompt": "still alive", "max_tokens": 3}"#);
+    assert_ok_generation(&resp, 3);
+}
+
+#[test]
+fn slo_ms_is_validated_and_echoed_with_a_deadline_grade() {
+    let addr = start_server();
+    let mut conn = Conn::open(addr);
+    // A generous valid SLO round-trips: echoed back with a boolean
+    // deadline grade (the sim engine answers in microseconds, so a
+    // 60-second budget always grades as hit).
+    let resp = conn.round_trip(r#"{"prompt": "hello", "max_tokens": 3, "slo_ms": 60000}"#);
+    assert_ok_generation(&resp, 3);
+    assert_eq!(resp.get("slo_ms").and_then(|v| v.as_f64()), Some(60000.0));
+    assert_eq!(resp.get("deadline_hit").and_then(|v| v.as_bool()), Some(true));
+    // Omitted → no deadline fields at all (absence, not null noise).
+    let resp = conn.round_trip(r#"{"prompt": "hello", "max_tokens": 3}"#);
+    assert_ok_generation(&resp, 3);
+    assert!(resp.get("slo_ms").is_none());
+    assert!(resp.get("deadline_hit").is_none());
+    // Negative, zero and absurd values are client errors — a mistyped
+    // deadline must never silently schedule.
+    for bad in ["-250", "0", "1e12"] {
+        let resp = conn.round_trip(&format!(
+            r#"{{"prompt": "hi", "max_tokens": 3, "slo_ms": {bad}}}"#
+        ));
+        assert!(error_of(&resp).contains("slo_ms"), "{bad} must be rejected");
+    }
+    // Wrong type is a protocol error too, and the connection survives.
+    let resp = conn.round_trip(r#"{"prompt": "hi", "max_tokens": 3, "slo_ms": "fast"}"#);
+    assert!(error_of(&resp).contains("slo_ms"));
     let resp = conn.round_trip(r#"{"prompt": "still alive", "max_tokens": 3}"#);
     assert_ok_generation(&resp, 3);
 }
