@@ -93,6 +93,7 @@ fn main() -> anyhow::Result<()> {
             batch_frac: 0.0,
             slo_ms_interactive: None,
             slo_ms_batch: None,
+            slo_jitter_frac: 0.0,
             seed: 7,
         },
         &suite.fillers,

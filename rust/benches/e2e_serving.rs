@@ -11,17 +11,21 @@
 //!
 //! Scenario 5 (first, artifact-free over [`SimRuntime`]) floods the
 //! deadline-aware scheduler with interactive traffic over a parked batch
-//! backlog, with and without cross-class aging; `--smoke-json PATH`
-//! writes its deterministic numbers as JSON and exits — the bounded e2e
-//! smoke CI runs on every push.
+//! backlog, with and without cross-class aging. Scenario 6 (also
+//! artifact-free, on the deterministic steps clock) floods an
+//! undersized gang with more SLO'd traffic than it can serve in budget
+//! and compares predictive shedding against queueing-to-die: goodput,
+//! wasted work and replay-graded shed errors. `--smoke-json PATH`
+//! writes both scenarios' deterministic numbers as one JSON document
+//! and exits — the bounded e2e smoke CI runs on every push.
 
 use std::sync::mpsc::channel;
 
-use loki::coordinator::request::{GenRequest, Priority};
+use loki::coordinator::request::{FinishReason, GenRequest, GenResult, Priority};
 use loki::coordinator::sampler::SampleCfg;
 use loki::coordinator::{
-    AdmissionPolicy, Engine, EngineCaps, EngineConfig, EngineMetrics, PoolConfig, PreemptMode,
-    VictimPolicy,
+    AdmissionPolicy, Engine, EngineCaps, EngineClock, EngineConfig, EngineMetrics, PoolConfig,
+    PreemptMode, ShedPolicy, VictimPolicy,
 };
 use loki::data::workload::{GenLenDist, Workload, WorkloadCfg};
 use loki::data::TaskSuite;
@@ -31,6 +35,13 @@ use loki::util::args::Args;
 use loki::util::artifacts_dir;
 use loki::util::json;
 use loki::util::table::{fnum, Table};
+
+/// Distinct-per-request prompt material within the sim vocabulary —
+/// the same formula the deterministic engine tests use, so traces stay
+/// comparable across harnesses.
+fn sim_prompt(id: u64, len: usize) -> Vec<i32> {
+    (0..len).map(|i| ((id as usize * 31 + i * 7 + 3) % 96) as i32).collect()
+}
 
 fn run_trace(
     service: &RuntimeService,
@@ -67,9 +78,6 @@ fn run_trace(
 fn flood_over_backlog(quick: bool) -> anyhow::Result<Vec<(String, EngineMetrics)>> {
     const AGING_STEPS: u64 = 32;
     let caps = EngineCaps { max_len: 256, max_prompt: 256, gang_batch: 4, bytes_per_token: 8 };
-    let sim_prompt = |id: u64, len: usize| -> Vec<i32> {
-        (0..len).map(|i| ((id as usize * 31 + i * 7 + 3) % 96) as i32).collect()
-    };
     let (n_batch, n_flood) = if quick { (4usize, 24usize) } else { (6, 48) };
     let mut runs = Vec::new();
     for (label, aging) in [("off", None), ("on", Some(AGING_STEPS))] {
@@ -154,6 +162,140 @@ fn emit_flood_table(runs: &[(String, EngineMetrics)]) {
     );
 }
 
+/// Scenario 6: an overload flood — far more SLO'd interactive traffic
+/// than the gang can serve in budget — under predictive admission, shed
+/// vs no-shed. Runs on the deterministic steps clock
+/// ([`EngineClock::Steps`]), so every reported number (sheds, goodput,
+/// wasted work, deadline grades) is bit-reproducible; the acceptance
+/// twin with the strict assertions lives in
+/// `rust/tests/engine_admission.rs`. Shed *errors* are graded by
+/// replay: a shed id whose `Off` twin hit its deadline was reachable —
+/// the count every run here must keep at zero.
+fn overload_shed(quick: bool) -> anyhow::Result<Vec<(String, EngineMetrics)>> {
+    const GANG: usize = 4;
+    const TOKENS: usize = 6;
+    const SLO_MS: f64 = 25.0; // steps-domain ms: waves 0..4 are reachable
+    let caps = EngineCaps { max_len: 256, max_prompt: 256, gang_batch: GANG, bytes_per_token: 8 };
+    let n = if quick { 32 } else { 64 };
+    let run = |shed: ShedPolicy| -> anyhow::Result<(Vec<GenResult>, EngineMetrics)> {
+        let cfg = EngineConfig {
+            gang_batch: GANG,
+            victim_policy: VictimPolicy::DeadlineAware,
+            shed,
+            clock: EngineClock::Steps { step_ms: 1.0, prefill_ms_per_token: 0.0 },
+            ..Default::default()
+        };
+        let backend = Box::new(SimRuntime::new(SimCfg::default()));
+        let engine = Engine::with_backend(backend, caps, cfg.clone());
+        let (tx, rx) = Engine::channel(&cfg);
+        let (reply, results) = channel();
+        for id in 0..n as u64 {
+            tx.send(GenRequest {
+                id,
+                prompt: sim_prompt(id, 12),
+                max_new_tokens: TOKENS,
+                stop_token: None,
+                sampling: SampleCfg::greedy(),
+                priority: Priority::Interactive,
+                slo_ms: Some(SLO_MS),
+                reply: reply.clone(),
+            })?;
+        }
+        drop(tx);
+        drop(reply);
+        let metrics = engine.run(rx)?;
+        let mut got: Vec<GenResult> = results.try_iter().collect();
+        got.sort_by_key(|r| r.id);
+        Ok((got, metrics))
+    };
+    let (off_results, off_metrics) = run(ShedPolicy::Off)?;
+    let mut runs = vec![("off".to_string(), off_results, off_metrics)];
+    for (label, policy) in [
+        ("strict", ShedPolicy::Strict),
+        ("hedged .5", ShedPolicy::Hedged { margin_frac: 0.5 }),
+    ] {
+        let (results, metrics) = run(policy)?;
+        runs.push((label.to_string(), results, metrics));
+    }
+    // Replay grading: a shed whose Off twin hit its deadline was a shed
+    // error. (All scenario-6 traffic is interactive, so errors land in
+    // that class's counter.)
+    let off_hit: Vec<bool> = runs[0]
+        .1
+        .iter()
+        .map(|r| r.timing.deadline_hit == Some(true))
+        .collect();
+    for (_, results, metrics) in runs.iter_mut().skip(1) {
+        let errors = results
+            .iter()
+            .filter(|r| r.finished_reason == FinishReason::Shed)
+            .filter(|r| off_hit.get(r.id as usize).copied().unwrap_or(false))
+            .count() as u64;
+        metrics.per_class[Priority::Interactive.index()].shed_errors = errors;
+    }
+    Ok(runs.into_iter().map(|(label, _, m)| (label, m)).collect())
+}
+
+fn emit_shed_table(runs: &[(String, EngineMetrics)]) {
+    let mut table = Table::new(
+        "E2E serving: overload flood, predictive admission (shed vs no-shed)",
+        &[
+            "shed policy",
+            "done",
+            "shed",
+            "shed errors",
+            "goodput tok/step",
+            "wasted tok",
+            "decode steps",
+            "deadline hits",
+        ],
+    );
+    for (label, m) in runs {
+        let int = m.class(Priority::Interactive);
+        table.row(vec![
+            label.clone(),
+            format!("{}", m.requests_done),
+            format!("{}", m.requests_shed),
+            format!("{}", m.shed_errors()),
+            fnum(m.goodput(), 3),
+            format!("{}", m.wasted_work_tokens()),
+            format!("{}", m.decode_steps),
+            format!("{}/{}", int.deadline_hits, int.deadline_hits + int.deadline_misses),
+        ]);
+    }
+    table.emit("e2e_serving_shed");
+    println!(
+        "(steps-clock run: every column is deterministic. shedding drops\n\
+         provably-doomed requests at admission, so goodput — deadline-hit\n\
+         tokens per decode step — rises and wasted work falls; shed errors\n\
+         are graded by replaying the trace under shed=off)"
+    );
+}
+
+/// Serialize the scenario-6 runs for the CI artifact: under the steps
+/// clock every field here is deterministic across builds.
+fn shed_json(runs: &[(String, EngineMetrics)]) -> json::Json {
+    let mut items = Vec::new();
+    for (label, m) in runs {
+        let int = m.class(Priority::Interactive);
+        items.push(json::obj(vec![
+            ("shed_policy", json::s(label)),
+            ("requests_done", json::num(m.requests_done as f64)),
+            ("requests_shed", json::num(m.requests_shed as f64)),
+            ("shed_errors", json::num(m.shed_errors() as f64)),
+            ("goodput_tok_per_step", json::num(m.goodput())),
+            ("wasted_work_tokens", json::num(m.wasted_work_tokens() as f64)),
+            ("decode_steps", json::num(m.decode_steps as f64)),
+            ("deadline_hits", json::num(int.deadline_hits as f64)),
+            ("deadline_misses", json::num(int.deadline_misses as f64)),
+        ]));
+    }
+    json::obj(vec![
+        ("scenario", json::s("overload_flood_predictive_shedding")),
+        ("runs", json::arr(items)),
+    ])
+}
+
 /// Serialize the scenario-5 runs for the CI artifact: one object per
 /// run. The step-based fields (`decode_steps`, `aging_promotions`,
 /// `batch_max_wait_steps`, the ttft-step means, `requests_done`) are
@@ -187,12 +329,18 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let quick = args.flag("quick") || std::env::var("LOKI_QUICK").is_ok();
 
-    // ---- Scenario 5 runs first: artifact-free (SimRuntime), so it also
-    // works in CI and as the `--smoke-json` e2e smoke gate.
+    // ---- Scenarios 5 and 6 run first: artifact-free (SimRuntime), so
+    // they also work in CI and as the `--smoke-json` e2e smoke gate.
     let flood_runs = flood_over_backlog(quick)?;
     emit_flood_table(&flood_runs);
+    let shed_runs = overload_shed(quick)?;
+    emit_shed_table(&shed_runs);
     if let Some(path) = args.get("smoke-json") {
-        std::fs::write(path, flood_json(&flood_runs).to_string() + "\n")?;
+        let doc = json::obj(vec![(
+            "scenarios",
+            json::arr(vec![flood_json(&flood_runs), shed_json(&shed_runs)]),
+        )]);
+        std::fs::write(path, doc.to_string() + "\n")?;
         println!("smoke metrics written to {path}");
         return Ok(());
     }
@@ -216,6 +364,7 @@ fn main() -> anyhow::Result<()> {
             batch_frac: 0.0,
             slo_ms_interactive: None,
             slo_ms_batch: None,
+            slo_jitter_frac: 0.0,
             seed: 3,
         },
         &suite.fillers,
@@ -256,6 +405,7 @@ fn main() -> anyhow::Result<()> {
             batch_frac: 0.0,
             slo_ms_interactive: None,
             slo_ms_batch: None,
+            slo_jitter_frac: 0.0,
             seed: 7,
         },
         &suite.fillers,
@@ -317,6 +467,7 @@ fn main() -> anyhow::Result<()> {
             batch_frac: 0.0,
             slo_ms_interactive: None,
             slo_ms_batch: None,
+            slo_jitter_frac: 0.0,
             seed: 11,
         },
         &suite.fillers,
@@ -374,6 +525,7 @@ fn main() -> anyhow::Result<()> {
             batch_frac: 0.5,
             slo_ms_interactive: None,
             slo_ms_batch: None,
+            slo_jitter_frac: 0.0,
             seed: 17,
         },
         &suite.fillers,

@@ -72,6 +72,19 @@
 //!
 //! Backpressure: submissions go through a bounded `SyncSender`; when the
 //! queue is full, callers block (admission control at the front door).
+//!
+//! Overload: queueing discipline alone cannot save a request whose TTFT
+//! deadline is already unreachable — it can only make it die in a
+//! better-ordered line, wasting the prefill and decode steps it consumes
+//! on the way. [`EngineConfig::shed`] adds **predictive admission**: an
+//! online service-rate estimator ([`super::predictor`]) prices every
+//! queued SLO'd request's TTFT against the lanes ahead of it each
+//! scheduling round, and [`ShedPolicy::Strict`] /
+//! [`ShedPolicy::Hedged`] reject provably-doomed requests at admission
+//! with a structured shed reply (predicted TTFT + retry hint) instead
+//! of queueing them to die. `Off` (default) pins PR 4 bit-identically;
+//! [`EngineClock::Steps`] is the deterministic decode-steps twin that
+//! keeps the `SimRuntime` overload tests wall-clock-free.
 
 use std::cmp::Reverse;
 use std::collections::VecDeque;
@@ -85,8 +98,9 @@ use crate::model::ByteTokenizer;
 use crate::runtime::{DecodeBackend, DecodeRequest, RuntimeService, StateId};
 
 use super::metrics::EngineMetrics;
+use super::predictor::{EngineClock, ServiceRateEstimator, ShedPolicy};
 use super::request::{
-    FinishReason, GenRequest, GenResult, Priority, QueuedRequest, RequestTiming,
+    FinishReason, GenRequest, GenResult, Priority, QueuedRequest, RequestTiming, ShedInfo,
 };
 use super::sampler::Sampler;
 
@@ -266,6 +280,20 @@ pub struct EngineConfig {
     /// wait by one lane-drain. `None` pins the PR 3 behavior where
     /// batch starvation under sustained interactive load is unbounded.
     pub aging_steps: Option<u64>,
+    /// Predictive early load shedding (`repro serve --shed-policy
+    /// off|strict|hedged --shed-margin F`): every scheduling round the
+    /// engine predicts each queued SLO'd request's TTFT from the lanes
+    /// ahead of it (online service-rate estimator — EWMA decode-step
+    /// cost + prompt-length-proportional prefill cost) and rejects
+    /// requests whose prediction misses their deadline by the policy's
+    /// margin, with a structured shed reply instead of queueing them to
+    /// die. `Off` (default) pins PR 4 bit-identically.
+    pub shed: ShedPolicy,
+    /// Clock the predictor and deadline grader run on: `Wall` (serving
+    /// default) or the deterministic decode-steps twin
+    /// ([`EngineClock::Steps`]) the `SimRuntime` tests use to keep shed
+    /// decisions, deadline grades and goodput wall-clock-free.
+    pub clock: EngineClock,
     pub verbose: bool,
 }
 
@@ -282,6 +310,8 @@ impl Default for EngineConfig {
             victim_policy: VictimPolicy::YoungestFirst,
             preempt: PreemptMode::Full,
             aging_steps: None,
+            shed: ShedPolicy::Off,
+            clock: EngineClock::Wall,
             verbose: false,
         }
     }
@@ -806,6 +836,10 @@ impl Engine {
         let mut pool = BlockAllocator::new(num_blocks, bs);
         let mut tables = TableSet::new(bs, self.cfg.pool.prefix_sharing);
         let mut lane_seq: Vec<Option<SeqId>> = vec![None; self.gang_batch];
+        // Online service-rate estimator behind predictive shedding:
+        // fed by every timed prefill/decode below; fixed-rate under the
+        // deterministic steps clock.
+        let mut est = ServiceRateEstimator::new(self.cfg.clock);
         metrics.pool_blocks_total = num_blocks as u64;
         metrics.pool_block_bytes = bs as u64 * self.bytes_per_token;
         metrics.kv_flat_bytes = (self.gang_batch * self.max_len) as u64 * self.bytes_per_token;
@@ -849,6 +883,10 @@ impl Engine {
             // constant until section 5, so this is exactly as often as
             // promotions can change).
             self.age_pending(&mut pending, metrics.decode_steps, &mut metrics);
+            // Predictive admission: shed queued SLO'd requests whose
+            // predicted TTFT provably misses their deadline, before any
+            // prefill or pool capacity is spent on them.
+            self.shed_doomed(&mut pending, &lanes, &est, &mut metrics);
 
             // ---- 2. bootstrap the gang with a batched prefill -------------
             if gang.is_none() && !pending.is_empty() {
@@ -893,7 +931,15 @@ impl Engine {
                     while prompts.len() < self.gang_batch {
                         prompts.push(vec![0]);
                     }
+                    // Estimator attribution counts every token actually
+                    // prefilled — padding lanes included — or a padded
+                    // near-fixed bucket cost charged to a few real
+                    // tokens would inflate the per-token rate and make
+                    // `Strict` shed reachable requests.
+                    let prefill_tokens: usize = prompts.iter().map(|p| p.len()).sum();
+                    let t0 = Instant::now();
                     let (id, logits) = self.backend.prefill(&self.cfg.pca, prompts)?;
+                    est.observe_prefill(prefill_tokens, t0.elapsed().as_secs_f64());
                     metrics.prefills += 1;
                     gang = Some(id);
                     let n = batch.len();
@@ -937,8 +983,10 @@ impl Engine {
                 match self.try_admit(&mut pool, &mut tables, front) {
                     Admit::Granted(seq, tokens) => {
                         let item = pending.pop_front().unwrap();
+                        let t0 = Instant::now();
                         let (lane_id, logits) =
                             self.backend.prefill(&self.cfg.pca, vec![tokens.clone()])?;
+                        est.observe_prefill(tokens.len(), t0.elapsed().as_secs_f64());
                         metrics.prefills += 1;
                         self.backend.inject(gang_id, lane_id, lane)?;
                         metrics.injections += 1;
@@ -1007,7 +1055,9 @@ impl Engine {
                 tokens,
             })?;
             metrics.decode_steps += 1;
-            metrics.decode_step_time.push(t0.elapsed().as_secs_f64());
+            let step_s = t0.elapsed().as_secs_f64();
+            metrics.decode_step_time.push(step_s);
+            est.observe_step(step_s);
             for len in lane_len.iter_mut() {
                 *len += 1;
             }
@@ -1046,8 +1096,22 @@ impl Engine {
                         Lane::Free => continue,
                     };
                     metrics.tokens_generated += 1;
+                    // First-token bookkeeping fires exactly once per
+                    // request: `ttft_s` survives preempt→resume inside
+                    // the requeued lane record, so a request preempted
+                    // *after* its first emission is never re-graded when
+                    // the resume recomputes that token, and one preempted
+                    // *before* it is graded at its one real delivery.
                     if b.ttft_s.is_none() {
-                        let t = b.req.submitted.elapsed().as_secs_f64();
+                        // Stamp the emission instant once; TTFT, the
+                        // deadline grade and the echoed reply all derive
+                        // from this same stamp. (Previously the grade
+                        // took a second `Instant::now()` after the
+                        // bookkeeping above it, so a token produced
+                        // before the deadline could still be graded a
+                        // miss under scheduler jitter.)
+                        let emitted = Instant::now();
+                        let t = emitted.saturating_duration_since(b.req.submitted).as_secs_f64();
                         // Steps since the request entered the queue — a
                         // deterministic, uptime-independent TTFT.
                         let steps = metrics.decode_steps.saturating_sub(b.req.submitted_step);
@@ -1061,8 +1125,19 @@ impl Engine {
                         // when aging promoted the request — the bound it
                         // observes is the batch-starvation bound.
                         class.max_wait_steps = class.max_wait_steps.max(steps);
-                        if let Some(d) = b.req.deadline {
-                            let hit = Instant::now() <= d;
+                        if let Some(deadline) = b.req.deadline {
+                            // The clock grades in the same domain the
+                            // shed predictor prices (steps twin: decode
+                            // steps plus the virtual prompt-
+                            // proportional prefill cost) — see
+                            // [`EngineClock::deadline_hit`].
+                            let hit = self.cfg.clock.deadline_hit(
+                                emitted,
+                                deadline,
+                                steps,
+                                b.prompt.len(),
+                                b.req.req.slo_ms.unwrap_or(f64::INFINITY),
+                            );
                             b.deadline_hit = Some(hit);
                             if hit {
                                 class.deadline_hits += 1;
@@ -1371,10 +1446,147 @@ impl Engine {
             tokens: Vec::new(),
             text: String::new(),
             finished_reason: FinishReason::CacheFull,
+            shed: None,
             timing: RequestTiming { total_s: total, ..Default::default() },
         };
         if self.cfg.verbose {
             eprintln!("[engine] rejected #{} (exceeds pool capacity)", result.id);
+        }
+        let _ = q.req.reply.send(result);
+    }
+
+    /// Predictive admission with early load shedding, run once per
+    /// scheduling round. The pending queue is replayed against the
+    /// lanes ahead of it in scheduled order: each busy lane frees in
+    /// `max_new − produced` decode steps (its occupancy upper bound —
+    /// exact when decode lengths are deterministic, conservative under
+    /// stop-token early exits), each queued entry then takes the
+    /// earliest-free lane and holds it for its remaining decode budget,
+    /// and the entry's first token lands one decode step after its
+    /// slot opens. The estimator converts that step count (plus the
+    /// prompt-length-proportional prefill cost and the time already
+    /// waited) into milliseconds; a **fresh SLO'd** request whose
+    /// prediction exceeds its deadline by the policy margin is removed
+    /// and answered with a structured shed reply — resumes (sunk decode
+    /// work) and deadline-less requests are never shed, but they do
+    /// occupy lanes in the replay. With no evidence yet (cold wall
+    /// estimator) nothing is shed: rejecting work on a guess would be
+    /// an SLO bug, not load shedding.
+    ///
+    /// The model deliberately ignores pool contention: preemption churn
+    /// only delays first tokens further, so ignoring it keeps the
+    /// prediction optimistic — a shed stays provable, never premature
+    /// (`Hedged` exists for the regimes where the *occupancy* bound is
+    /// the loose side).
+    fn shed_doomed(
+        &self,
+        pending: &mut VecDeque<PendingItem>,
+        lanes: &[Lane],
+        est: &ServiceRateEstimator,
+        metrics: &mut EngineMetrics,
+    ) {
+        let Some(margin) = self.cfg.shed.margin_frac() else { return };
+        if pending.is_empty() {
+            return;
+        }
+        // Nothing sheddable queued (the common case for deadline-less
+        // or resume-only traffic): skip the whole replay — allocations,
+        // the deadline sort and the wall-clock read included.
+        let any_sheddable = pending
+            .iter()
+            .any(|it| matches!(it, PendingItem::Fresh(q) if q.deadline.is_some()));
+        if !any_sheddable {
+            return;
+        }
+        let Some(step_ms) = est.step_ms() else { return };
+        // Decode steps until each lane can take an injection.
+        let mut free_in: Vec<u64> = lanes
+            .iter()
+            .map(|l| match l {
+                Lane::Busy(b) => {
+                    b.req.req.max_new_tokens.saturating_sub(b.produced.len()) as u64
+                }
+                Lane::Free => 0,
+            })
+            .collect();
+        // Predict in the order the queue will actually be served: the
+        // deadline policy re-orders dynamically, the others serve the
+        // static band order as-is.
+        let mut order: Vec<usize> = (0..pending.len()).collect();
+        if self.cfg.victim_policy == VictimPolicy::DeadlineAware {
+            order.sort_by_key(|&i| effective_deadline_key(&pending[i]));
+        }
+        let now = Instant::now();
+        let now_step = metrics.decode_steps;
+        let mut doomed: Vec<(usize, f64)> = Vec::new();
+        for &i in &order {
+            let item = &pending[i];
+            let (len, remaining) = self.plan_dims(item);
+            let slot = free_in
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, f)| **f)
+                .map(|(l, _)| l)
+                .unwrap_or(0);
+            let wait = free_in[slot];
+            let q = item_queued(item);
+            let sheddable = matches!(item, PendingItem::Fresh(_)) && q.deadline.is_some();
+            let mut shed = false;
+            if sheddable {
+                if let Some(slo_ms) = q.req.slo_ms {
+                    // Milliseconds already burned in the queue, in the
+                    // configured clock's domain — the same conversion
+                    // the grader applies at emission.
+                    let waited_ms =
+                        self.cfg.clock.waited_ms(now, q.submitted, now_step, q.submitted_step);
+                    let predicted_ttft_ms =
+                        waited_ms + est.prefill_ms(len) + (wait + 1) as f64 * step_ms;
+                    if predicted_ttft_ms > slo_ms * (1.0 + margin) {
+                        doomed.push((i, predicted_ttft_ms));
+                        shed = true;
+                    }
+                }
+            }
+            if !shed {
+                // The entry will occupy its lane for its remaining
+                // decode budget; shed entries consume nothing, which is
+                // exactly what makes room for the work behind them.
+                free_in[slot] = wait + remaining.max(1) as u64;
+            }
+        }
+        // Remove back-to-front so earlier queue indices stay valid.
+        doomed.sort_by_key(|&(i, _)| Reverse(i));
+        for (i, predicted_ttft_ms) in doomed {
+            let Some(item) = pending.remove(i) else { continue };
+            let PendingItem::Fresh(q) = item else {
+                unreachable!("only fresh SLO'd entries are marked doomed")
+            };
+            self.shed(q, predicted_ttft_ms, metrics);
+        }
+    }
+
+    /// Answer a shed request: a structured reply carrying the doomed
+    /// prediction and a retry hint, no tokens, no prefill ever spent.
+    fn shed(&self, q: QueuedRequest, predicted_ttft_ms: f64, metrics: &mut EngineMetrics) {
+        metrics.requests_shed += 1;
+        metrics.per_class[q.req.priority.index()].requests_shed += 1;
+        let slo_ms = q.req.slo_ms.unwrap_or(0.0);
+        let retry_after_ms = (predicted_ttft_ms - slo_ms).max(0.0);
+        let total = q.submitted.elapsed().as_secs_f64();
+        let result = GenResult {
+            id: q.req.id,
+            tokens: Vec::new(),
+            text: String::new(),
+            finished_reason: FinishReason::Shed,
+            shed: Some(ShedInfo { predicted_ttft_ms, retry_after_ms }),
+            timing: RequestTiming { total_s: total, ..Default::default() },
+        };
+        if self.cfg.verbose {
+            eprintln!(
+                "[engine] shed #{} (predicted ttft {predicted_ttft_ms:.1} ms vs slo \
+                 {slo_ms:.1} ms; retry after {retry_after_ms:.1} ms)",
+                result.id
+            );
         }
         let _ = q.req.reply.send(result);
     }
@@ -1469,6 +1681,13 @@ impl Engine {
         let class = &mut metrics.per_class[b.req.req.priority.index()];
         class.done += 1;
         class.e2e.push(total);
+        // Goodput accounting: tokens of a deadline-missing request are
+        // work the SLO never got value from; a hit — or no deadline at
+        // all — makes every delivered token goodput.
+        match b.deadline_hit {
+            Some(false) => class.deadline_missed_tokens += b.produced.len() as u64,
+            _ => class.deadline_hit_tokens += b.produced.len() as u64,
+        }
         let timing = RequestTiming {
             queue_s: 0.0,
             ttft_s: b.ttft_s.unwrap_or(total),
@@ -1484,6 +1703,7 @@ impl Engine {
             tokens: b.produced,
             text,
             finished_reason: reason,
+            shed: None,
             timing,
         };
         if self.cfg.verbose {
@@ -1531,6 +1751,8 @@ mod tests {
         assert_eq!(cfg.victim_policy, VictimPolicy::YoungestFirst);
         assert_eq!(cfg.preempt, PreemptMode::Full);
         assert_eq!(cfg.aging_steps, None, "no aging unless asked — PR 3 pinned");
+        assert_eq!(cfg.shed, ShedPolicy::Off, "no shedding unless asked — PR 4 pinned");
+        assert_eq!(cfg.clock, EngineClock::Wall, "wall grading unless a test asks");
         assert_eq!(VictimPolicy::default(), VictimPolicy::YoungestFirst);
         assert_eq!(PreemptMode::default(), PreemptMode::Full);
     }

@@ -22,6 +22,22 @@ pub struct ClassMetrics {
     /// reported under `requests_rejected` instead).
     pub deadline_hits: u64,
     pub deadline_misses: u64,
+    /// Requests rejected at admission by predictive load shedding
+    /// (they count in neither `done` nor the deadline grades — no
+    /// first token was ever attempted).
+    pub requests_shed: u64,
+    /// Sheds whose deadline was actually reachable. The engine cannot
+    /// observe the counterfactual online, so this stays 0 until a
+    /// replay harness (e2e_serving scenario 6, the deterministic
+    /// acceptance test) grades each shed id against a `ShedPolicy::Off`
+    /// twin of the same trace and fills it in.
+    pub shed_errors: u64,
+    /// Tokens delivered by requests that beat their deadline — or had
+    /// none to violate. The numerator of [`EngineMetrics::goodput`].
+    pub deadline_hit_tokens: u64,
+    /// Tokens delivered by requests whose first token missed its
+    /// deadline: decode work that produced no SLO-compliant value.
+    pub deadline_missed_tokens: u64,
     /// Largest observed decode-step wait to first token — the observable
     /// behind the cross-class aging starvation bound (for `Batch` under
     /// `DeadlineAware` + aging it must stay within `aging_steps` plus
@@ -42,6 +58,10 @@ impl ClassMetrics {
             preemptions: 0,
             deadline_hits: 0,
             deadline_misses: 0,
+            requests_shed: 0,
+            shed_errors: 0,
+            deadline_hit_tokens: 0,
+            deadline_missed_tokens: 0,
             max_wait_steps: 0,
             ttft: Summary::new(),
             ttft_steps: Summary::new(),
@@ -69,6 +89,10 @@ pub struct EngineMetrics {
     /// Requests that can never fit the configured pool (failed fast with
     /// `FinishReason::CacheFull` instead of queueing forever).
     pub requests_rejected: u64,
+    /// Requests rejected at admission by predictive load shedding (the
+    /// sum of the per-class `requests_shed` counters — kept engine-wide
+    /// too so the overload scenarios read in one line).
+    pub requests_shed: u64,
     pub tokens_generated: u64,
     pub prefills: u64,
     pub decode_steps: u64,
@@ -141,6 +165,7 @@ impl Default for EngineMetrics {
             requests_in: 0,
             requests_done: 0,
             requests_rejected: 0,
+            requests_shed: 0,
             tokens_generated: 0,
             prefills: 0,
             decode_steps: 0,
@@ -214,6 +239,36 @@ impl EngineMetrics {
         &self.per_class[p.index()]
     }
 
+    /// **Goodput**: deadline-hit tokens per decode step — tokens whose
+    /// requests beat their TTFT deadline (or carried none to violate)
+    /// divided by the decode iterations the whole run spent. The number
+    /// predictive shedding exists to raise: decode steps burned on
+    /// doomed requests inflate the denominator without adding to the
+    /// numerator. 0.0 when nothing decoded (never NaN).
+    pub fn goodput(&self) -> f64 {
+        if self.decode_steps == 0 {
+            return 0.0;
+        }
+        let good: u64 = self.per_class.iter().map(|c| c.deadline_hit_tokens).sum();
+        good as f64 / self.decode_steps as f64
+    }
+
+    /// Decode and recompute work that produced no SLO-compliant value:
+    /// tokens delivered by requests that missed their deadline, plus
+    /// every token re-prefilled by preemption resumes. The quantity
+    /// scenario 6 pins strictly lower under `ShedPolicy::Strict`.
+    pub fn wasted_work_tokens(&self) -> u64 {
+        let missed: u64 = self.per_class.iter().map(|c| c.deadline_missed_tokens).sum();
+        missed + self.recomputed_tokens
+    }
+
+    /// Replay-graded shed errors across classes (0 until a Sim replay
+    /// harness fills the per-class counters — see
+    /// [`ClassMetrics::shed_errors`]).
+    pub fn shed_errors(&self) -> u64 {
+        self.per_class.iter().map(|c| c.shed_errors).sum()
+    }
+
     /// Peak KV bytes the paged pool actually had granted.
     pub fn kv_resident_bytes_peak(&self) -> u64 {
         self.pool_blocks_peak * self.pool_block_bytes
@@ -232,13 +287,15 @@ impl EngineMetrics {
 
     pub fn report(&self) -> String {
         let mut s = format!(
-            "requests: {} in / {} done / {} rejected | tokens: {} ({:.1} tok/s)\n\
+            "requests: {} in / {} done / {} rejected / {} shed | tokens: {} ({:.1} tok/s)\n\
              prefills: {} | decode steps: {} | injections: {} | lane resets: {}\n\
              kv pool:   peak {}/{} blocks ({:.1} MB resident vs {:.1} MB flat, {:.2}x) | \
              shared {} | blocked {}\n\
              admission: mean occupancy {:.1}% | preempts {} ({} partial, {} kept-reclaims) \
              / resumes {} ({} tok recomputed, {} saved) | grows {} (+{} blocks, {} stalls) \
              | aging promotions {}\n\
+             goodput:   {:.3} tok/step (deadline-hit tokens) | wasted {} tok \
+             (missed-deadline + recompute) | shed errors {}\n\
              ttft_s:    {}\n\
              e2e_s:     {}\n\
              queue_s:   {}\n\
@@ -246,6 +303,7 @@ impl EngineMetrics {
             self.requests_in,
             self.requests_done,
             self.requests_rejected,
+            self.requests_shed,
             self.tokens_generated,
             self.throughput_tok_s(),
             self.prefills,
@@ -270,6 +328,9 @@ impl EngineMetrics {
             self.grown_blocks,
             self.grow_stalls,
             self.aging_promotions,
+            self.goodput(),
+            self.wasted_work_tokens(),
+            self.shed_errors(),
             self.ttft.display(),
             self.e2e_latency.display(),
             self.queue_wait.display(),
@@ -279,13 +340,13 @@ impl EngineMetrics {
             .into_iter()
             .zip(&self.per_class)
         {
-            if c.done == 0 && c.ttft.count() == 0 {
+            if c.done == 0 && c.ttft.count() == 0 && c.requests_shed == 0 {
                 continue;
             }
             s.push_str(&format!(
                 "\nclass {:<11} done {} | preempts {} | ttft mean {:.4}s \
                  ({:.1} steps, max wait {}) | e2e mean {:.4}s | \
-                 deadline hits {}/{} ({:.0}%)",
+                 deadline hits {}/{} ({:.0}%) | shed {}",
                 p.name(),
                 c.done,
                 c.preemptions,
@@ -296,6 +357,7 @@ impl EngineMetrics {
                 c.deadline_hits,
                 c.deadline_hits + c.deadline_misses,
                 c.deadline_hit_rate() * 100.0,
+                c.requests_shed,
             ));
         }
         s
@@ -351,6 +413,76 @@ mod tests {
         assert!(report.contains("aging promotions 5"), "{report}");
         assert!(report.contains("max wait 41"), "{report}");
         assert!(report.contains("deadline hits 0/2 (0%)"), "{report}");
+    }
+
+    #[test]
+    fn goodput_counts_only_deadline_hit_tokens_per_step() {
+        let mut m = EngineMetrics::default();
+        // Nothing decoded: goodput is 0.0, never NaN.
+        assert_eq!(m.goodput(), 0.0);
+        assert_eq!(m.wasted_work_tokens(), 0);
+        m.decode_steps = 40;
+        let int = Priority::Interactive.index();
+        let bat = Priority::Batch.index();
+        m.per_class[int].deadline_hit_tokens = 24;
+        m.per_class[bat].deadline_hit_tokens = 6;
+        m.per_class[int].deadline_missed_tokens = 10;
+        m.recomputed_tokens = 5;
+        assert!((m.goodput() - 30.0 / 40.0).abs() < 1e-12);
+        assert_eq!(m.wasted_work_tokens(), 15, "missed tokens + resume recompute");
+    }
+
+    #[test]
+    fn goodput_with_zero_slod_requests_counts_all_delivered_tokens() {
+        // No request carried an SLO: nothing was violated, so every
+        // delivered token is goodput and the hit rate stays 1.0 —
+        // ShedPolicy::Off on an SLO-less trace scores the same as PR 4.
+        let mut m = EngineMetrics::default();
+        m.decode_steps = 16;
+        m.per_class[Priority::Interactive.index()].deadline_hit_tokens = 16;
+        assert_eq!(m.class(Priority::Interactive).deadline_hit_rate(), 1.0);
+        assert!((m.goodput() - 1.0).abs() < 1e-12);
+        assert_eq!(m.wasted_work_tokens(), 0);
+    }
+
+    #[test]
+    fn all_shed_class_grades_nothing_and_contributes_no_goodput() {
+        // Every request of a class shed at admission: no first token
+        // was attempted, so the deadline grades stay empty (hit rate
+        // 1.0 — nothing violated), goodput numerator stays 0, and the
+        // class still shows up in the report via its shed count.
+        let mut m = EngineMetrics::default();
+        m.decode_steps = 8;
+        let c = &mut m.per_class[Priority::Batch.index()];
+        c.requests_shed = 7;
+        assert_eq!(c.done, 0);
+        assert_eq!(c.deadline_hit_rate(), 1.0);
+        m.requests_shed = 7;
+        assert_eq!(m.goodput(), 0.0);
+        assert_eq!(m.shed_errors(), 0, "no replay grading → no claimed errors");
+        let report = m.report();
+        assert!(report.contains("7 shed"), "{report}");
+        assert!(report.contains("class batch"), "all-shed class must not vanish: {report}");
+        assert!(report.contains("shed 7"), "{report}");
+    }
+
+    #[test]
+    fn shed_then_retry_counts_one_shed_and_one_completion() {
+        // A client sheds once, retries with a fresh request, and the
+        // retry completes in budget: the class carries both the shed
+        // and the hit, and only the retry's tokens enter goodput.
+        let mut m = EngineMetrics::default();
+        m.decode_steps = 10;
+        let c = &mut m.per_class[Priority::Interactive.index()];
+        c.requests_shed = 1;
+        c.done = 1;
+        c.deadline_hits = 1;
+        c.deadline_hit_tokens = 8;
+        m.requests_shed = 1;
+        m.requests_done = 1;
+        assert_eq!(m.class(Priority::Interactive).deadline_hit_rate(), 1.0);
+        assert!((m.goodput() - 0.8).abs() < 1e-12);
+        assert_eq!(m.wasted_work_tokens(), 0, "the shed itself burned no decode work");
     }
 
     #[test]

@@ -18,6 +18,12 @@
 //!   prefix recompute. Full prompt blocks are prefix-shared across
 //!   identical prefixes either way.
 //! * [`metrics`] — fleet counters + latency summaries.
+//! * [`predictor`] — the online service-rate estimator (EWMA decode-step
+//!   cost + prompt-proportional prefill cost) behind predictive
+//!   admission: under an [`engine::EngineConfig::shed`] policy, queued
+//!   SLO'd requests whose predicted TTFT provably misses their deadline
+//!   are shed at admission with a structured reply instead of queueing
+//!   to die.
 //!
 //! Loki enters as the engine's `DecodeVariant`: the scheduler chooses the
 //! attention graph (full / loki / h2o / pcaattn) per gang, making sparse
@@ -25,6 +31,7 @@
 
 pub mod engine;
 pub mod metrics;
+pub mod predictor;
 pub mod request;
 pub mod sampler;
 
@@ -33,5 +40,6 @@ pub use engine::{
     PreemptMode, SchedulerPolicy, VictimPolicy, RESERVE_SLACK_TOKENS,
 };
 pub use metrics::{ClassMetrics, EngineMetrics};
-pub use request::{GenRequest, GenResult, Priority, RequestTiming};
+pub use predictor::{EngineClock, ServiceRateEstimator, ShedPolicy, EWMA_ALPHA};
+pub use request::{GenRequest, GenResult, Priority, RequestTiming, ShedInfo};
 pub use sampler::{SampleCfg, Sampler};

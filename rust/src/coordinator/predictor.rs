@@ -1,0 +1,346 @@
+//! Predictive admission: the online service-rate estimator behind
+//! [`ShedPolicy`] early load shedding.
+//!
+//! Loki's win is cutting compute per decoded token; that win is
+//! squandered when the engine spends prefill and decode cycles on
+//! requests whose TTFT deadline is already unreachable. The estimator
+//! tracks two rates online:
+//!
+//! * **decode-step cost** — an EWMA over measured decode-iteration wall
+//!   time (one observation per gang step), and
+//! * **prefill cost** — a prompt-length-proportional model: an EWMA over
+//!   measured seconds *per prefilled token*.
+//!
+//! Every scheduling round the engine replays the pending queue against
+//! the lanes ahead of it (earliest-lane-free simulation, see
+//! `Engine::shed_doomed`) and converts each queued request's predicted
+//! first-token step into milliseconds through these rates. A request
+//! whose predicted TTFT misses its deadline by the policy's margin is
+//! rejected *at admission* with a structured shed reply instead of
+//! queueing to die.
+//!
+//! Determinism: wall-clock EWMAs would make scheduler tests flaky, so
+//! [`EngineClock::Steps`] is the deterministic decode-steps twin — one
+//! decode step costs exactly `step_ms` virtual milliseconds and prefill
+//! costs `prefill_ms_per_token` per token. Under the steps clock the
+//! estimator ignores wall-time observations entirely and deadline
+//! grading happens in the same steps domain, so a `SimRuntime` trace
+//! sheds, grades and reports identically on every run.
+
+use std::time::Instant;
+
+/// EWMA smoothing factor for both online rates. One fifth of each new
+/// observation: noisy individual steps cannot whipsaw admission, but a
+/// genuine regime change (bigger gang, longer contexts) converges in a
+/// few dozen steps.
+pub const EWMA_ALPHA: f64 = 0.2;
+
+/// Early load shedding policy (`repro serve --shed-policy
+/// off|strict|hedged --shed-margin F`). Applied on top of the pending
+/// queue every scheduling round; designed for
+/// [`super::engine::VictimPolicy::DeadlineAware`], where the queue order
+/// being predicted is also the order being served.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum ShedPolicy {
+    /// No prediction, no shedding — pins PR 4 behavior bit-identically.
+    #[default]
+    Off,
+    /// Shed an SLO'd request the moment its predicted TTFT exceeds its
+    /// deadline. Exact (zero shed errors) when decode lengths are
+    /// deterministic; with stop-token early exits the occupancy model
+    /// is an upper bound, so `Strict` can over-shed borderline work —
+    /// that is what `Hedged` is for.
+    Strict,
+    /// Shed only when the predicted TTFT exceeds the deadline by more
+    /// than `margin_frac` of the deadline (e.g. 0.5 → only requests
+    /// predicted ≥ 1.5× over budget are shed). The margin absorbs
+    /// model error from early-stopping lanes and preemption churn.
+    Hedged {
+        /// Fractional slack on top of the deadline before a shed fires
+        /// (clamped to ≥ 0; 0 behaves like `Strict`).
+        margin_frac: f64,
+    },
+}
+
+impl ShedPolicy {
+    /// The policy's shed margin: `None` disables shedding entirely,
+    /// `Some(m)` sheds when `predicted > deadline · (1 + m)`.
+    pub fn margin_frac(&self) -> Option<f64> {
+        match *self {
+            ShedPolicy::Off => None,
+            ShedPolicy::Strict => Some(0.0),
+            ShedPolicy::Hedged { margin_frac } => Some(margin_frac.max(0.0)),
+        }
+    }
+
+    /// Parse the CLI spelling (`"off"` / `"strict"` / `"hedged"`, the
+    /// margin rides on a separate flag).
+    pub fn parse(s: &str, margin_frac: f64) -> Option<ShedPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" => Some(ShedPolicy::Off),
+            "strict" => Some(ShedPolicy::Strict),
+            "hedged" => Some(ShedPolicy::Hedged { margin_frac }),
+            _ => None,
+        }
+    }
+}
+
+/// Which clock the predictor and the deadline grader run on.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum EngineClock {
+    /// Real time: rates are EWMA-estimated from measured step/prefill
+    /// wall time, deadlines are graded against the emission `Instant`.
+    /// The serving default.
+    #[default]
+    Wall,
+    /// The deterministic decode-steps twin for `SimRuntime` tests: one
+    /// decode step costs exactly `step_ms` virtual milliseconds and
+    /// prefill costs `prefill_ms_per_token` per prompt token; a
+    /// request's elapsed time is `(now_step - submitted_step) ·
+    /// step_ms` and its first token is graded `hit` iff `ttft_steps ·
+    /// step_ms + prefill_ms_per_token · prompt_len ≤ slo_ms` — the
+    /// grader charges exactly what the predictor prices, so a `Strict`
+    /// shed can never disagree with the grade it preempted. No wall
+    /// clock anywhere — shed decisions, deadline grades and goodput
+    /// are bit-reproducible.
+    Steps {
+        /// Virtual milliseconds one decode step costs.
+        step_ms: f64,
+        /// Virtual milliseconds one prefilled prompt token costs.
+        prefill_ms_per_token: f64,
+    },
+}
+
+impl EngineClock {
+    /// Milliseconds a queued request has already waited, in this
+    /// clock's domain. The *same* conversion the grader uses — both
+    /// sides of the shed decision must price time identically, or a
+    /// `Strict` shed could disagree with the grade it preempted.
+    pub fn waited_ms(
+        &self,
+        now: Instant,
+        submitted: Instant,
+        now_step: u64,
+        submitted_step: u64,
+    ) -> f64 {
+        match *self {
+            EngineClock::Wall => now.saturating_duration_since(submitted).as_secs_f64() * 1e3,
+            EngineClock::Steps { step_ms, .. } => {
+                now_step.saturating_sub(submitted_step) as f64 * step_ms
+            }
+        }
+    }
+
+    /// Grade a first token against its deadline. `Wall` compares the
+    /// emission instant to the arrival-stamped deadline; `Steps` prices
+    /// the emission in the virtual domain — decode steps *plus* the
+    /// prompt-proportional prefill cost, exactly what the predictor
+    /// charges, so the zero-shed-error invariant is structural rather
+    /// than comment-enforced.
+    pub fn deadline_hit(
+        &self,
+        emitted: Instant,
+        deadline: Instant,
+        ttft_steps: u64,
+        prompt_tokens: usize,
+        slo_ms: f64,
+    ) -> bool {
+        match *self {
+            EngineClock::Wall => emitted <= deadline,
+            EngineClock::Steps { step_ms, prefill_ms_per_token } => {
+                let virtual_ms =
+                    ttft_steps as f64 * step_ms + prefill_ms_per_token * prompt_tokens as f64;
+                virtual_ms <= slo_ms
+            }
+        }
+    }
+}
+
+/// Online service-rate estimator: decode-step and per-prefill-token
+/// cost, EWMA-smoothed under [`EngineClock::Wall`], fixed under the
+/// deterministic [`EngineClock::Steps`] twin.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceRateEstimator {
+    clock: EngineClock,
+    /// EWMA of decode-iteration seconds (`None` until the first step).
+    step_ewma_s: Option<f64>,
+    /// EWMA of prefill seconds per prompt token (`None` until the
+    /// first prefill).
+    prefill_tok_ewma_s: Option<f64>,
+}
+
+impl ServiceRateEstimator {
+    pub fn new(clock: EngineClock) -> Self {
+        Self { clock, step_ewma_s: None, prefill_tok_ewma_s: None }
+    }
+
+    /// Fold one measured decode-iteration duration into the step EWMA.
+    /// A no-op under the steps clock (its rate is fixed by config) and
+    /// for non-finite or negative observations.
+    pub fn observe_step(&mut self, seconds: f64) {
+        if matches!(self.clock, EngineClock::Steps { .. }) {
+            return;
+        }
+        if !seconds.is_finite() || seconds < 0.0 {
+            return;
+        }
+        self.step_ewma_s = Some(match self.step_ewma_s {
+            None => seconds,
+            Some(e) => EWMA_ALPHA * seconds + (1.0 - EWMA_ALPHA) * e,
+        });
+    }
+
+    /// Fold one measured prefill (of `tokens` prompt tokens) into the
+    /// per-token prefill EWMA. Same guards as [`Self::observe_step`].
+    pub fn observe_prefill(&mut self, tokens: usize, seconds: f64) {
+        if matches!(self.clock, EngineClock::Steps { .. }) {
+            return;
+        }
+        if !seconds.is_finite() || seconds < 0.0 || tokens == 0 {
+            return;
+        }
+        let per_tok = seconds / tokens as f64;
+        self.prefill_tok_ewma_s = Some(match self.prefill_tok_ewma_s {
+            None => per_tok,
+            Some(e) => EWMA_ALPHA * per_tok + (1.0 - EWMA_ALPHA) * e,
+        });
+    }
+
+    /// Estimated milliseconds per decode step. `None` means the
+    /// estimator has no evidence yet — the shed pass must never reject
+    /// work on a guess, so `None` disables shedding for the round.
+    pub fn step_ms(&self) -> Option<f64> {
+        match self.clock {
+            EngineClock::Steps { step_ms, .. } => Some(step_ms),
+            EngineClock::Wall => self.step_ewma_s.map(|s| s * 1e3),
+        }
+    }
+
+    /// Prompt-length-proportional prefill cost in milliseconds. Zero
+    /// until the first wall observation (under-predicting TTFT only
+    /// makes shedding more conservative, never wrong).
+    pub fn prefill_ms(&self, tokens: usize) -> f64 {
+        match self.clock {
+            EngineClock::Steps { prefill_ms_per_token, .. } => {
+                prefill_ms_per_token * tokens as f64
+            }
+            EngineClock::Wall => self.prefill_tok_ewma_s.unwrap_or(0.0) * 1e3 * tokens as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_converges_to_a_constant_rate() {
+        let mut est = ServiceRateEstimator::new(EngineClock::Wall);
+        assert_eq!(est.step_ms(), None, "no evidence → no estimate");
+        for _ in 0..64 {
+            est.observe_step(0.004);
+        }
+        let ms = est.step_ms().expect("warm after observations");
+        assert!((ms - 4.0).abs() < 1e-9, "constant input must converge exactly: {ms}");
+        // A regime change is tracked: after enough 8 ms steps the
+        // estimate has moved most of the way there.
+        for _ in 0..32 {
+            est.observe_step(0.008);
+        }
+        let ms = est.step_ms().unwrap();
+        assert!(ms > 7.9 && ms <= 8.0, "EWMA must track the new rate: {ms}");
+    }
+
+    #[test]
+    fn ewma_weights_recent_observations() {
+        let mut est = ServiceRateEstimator::new(EngineClock::Wall);
+        est.observe_step(0.010);
+        est.observe_step(0.002);
+        // 0.2·2 ms + 0.8·10 ms = 8.4 ms.
+        let ms = est.step_ms().unwrap();
+        assert!((ms - 8.4).abs() < 1e-9, "{ms}");
+    }
+
+    #[test]
+    fn degenerate_observations_are_ignored() {
+        let mut est = ServiceRateEstimator::new(EngineClock::Wall);
+        est.observe_step(f64::NAN);
+        est.observe_step(f64::INFINITY);
+        est.observe_step(-1.0);
+        assert_eq!(est.step_ms(), None, "poison must never warm the estimator");
+        est.observe_prefill(0, 1.0);
+        est.observe_prefill(8, f64::NAN);
+        assert_eq!(est.prefill_ms(100), 0.0);
+        est.observe_step(0.004);
+        est.observe_step(f64::NAN);
+        assert!((est.step_ms().unwrap() - 4.0).abs() < 1e-12, "NaN must not perturb");
+    }
+
+    #[test]
+    fn prefill_cost_is_prompt_length_proportional() {
+        let mut est = ServiceRateEstimator::new(EngineClock::Wall);
+        assert_eq!(est.prefill_ms(1000), 0.0, "cold model under-predicts, never guesses");
+        // 128 tokens in 6.4 ms → 0.05 ms/token.
+        est.observe_prefill(128, 0.0064);
+        assert!((est.prefill_ms(100) - 5.0).abs() < 1e-9);
+        assert!((est.prefill_ms(200) - 10.0).abs() < 1e-9, "cost must scale with length");
+    }
+
+    #[test]
+    fn steps_twin_is_fixed_and_ignores_wall_observations() {
+        let clock = EngineClock::Steps { step_ms: 2.5, prefill_ms_per_token: 0.125 };
+        let mut est = ServiceRateEstimator::new(clock);
+        assert_eq!(est.step_ms(), Some(2.5), "steps twin is warm from construction");
+        assert!((est.prefill_ms(16) - 2.0).abs() < 1e-12);
+        // Wall noise must not leak into the deterministic twin.
+        est.observe_step(123.456);
+        est.observe_prefill(8, 99.0);
+        assert_eq!(est.step_ms(), Some(2.5));
+        assert!((est.prefill_ms(16) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clock_domains_price_time_consistently() {
+        use std::time::Duration;
+        let steps = EngineClock::Steps { step_ms: 2.0, prefill_ms_per_token: 0.5 };
+        let t0 = Instant::now();
+        // Steps domain ignores wall instants entirely: waited is a pure
+        // function of the step delta.
+        assert_eq!(steps.waited_ms(t0, t0, 7, 3), 8.0);
+        assert_eq!(steps.waited_ms(t0, t0, 3, 7), 0.0, "pre-submission clamps to 0");
+        // Grading charges steps *and* the prompt-proportional prefill:
+        // 4 steps · 2 ms + 8 tokens · 0.5 ms = 12 ms.
+        assert!(steps.deadline_hit(t0, t0, 4, 8, 12.0), "boundary is inclusive");
+        assert!(!steps.deadline_hit(t0, t0, 4, 8, 11.9));
+        // Wall domain compares instants and ignores the step fields.
+        let wall = EngineClock::Wall;
+        let deadline = t0 + Duration::from_millis(50);
+        assert!(wall.deadline_hit(t0, deadline, u64::MAX, usize::MAX, 0.0));
+        assert!(!wall.deadline_hit(deadline + Duration::from_millis(1), deadline, 0, 0, 0.0));
+        let waited = wall.waited_ms(t0 + Duration::from_millis(25), t0, 0, 0);
+        assert!((waited - 25.0).abs() < 1.0, "wall waited ≈ 25 ms, got {waited}");
+    }
+
+    #[test]
+    fn shed_policy_margins() {
+        assert_eq!(ShedPolicy::Off.margin_frac(), None);
+        assert_eq!(ShedPolicy::Strict.margin_frac(), Some(0.0));
+        assert_eq!(ShedPolicy::Hedged { margin_frac: 0.5 }.margin_frac(), Some(0.5));
+        // A negative margin clamps to Strict semantics instead of
+        // shedding work that was predicted to *make* its deadline.
+        assert_eq!(ShedPolicy::Hedged { margin_frac: -3.0 }.margin_frac(), Some(0.0));
+        assert_eq!(ShedPolicy::default(), ShedPolicy::Off, "PR 4 pinned");
+        assert_eq!(EngineClock::default(), EngineClock::Wall);
+    }
+
+    #[test]
+    fn shed_policy_parses_cli_spellings() {
+        assert_eq!(ShedPolicy::parse("off", 0.0), Some(ShedPolicy::Off));
+        assert_eq!(ShedPolicy::parse("Strict", 0.0), Some(ShedPolicy::Strict));
+        assert_eq!(
+            ShedPolicy::parse("hedged", 0.25),
+            Some(ShedPolicy::Hedged { margin_frac: 0.25 })
+        );
+        assert_eq!(ShedPolicy::parse("aggressive", 0.0), None);
+    }
+}

@@ -97,7 +97,25 @@ pub struct GenResult {
     pub tokens: Vec<i32>,
     pub text: String,
     pub finished_reason: FinishReason,
+    /// Present exactly when `finished_reason == FinishReason::Shed`:
+    /// the prediction that doomed the request and a retry hint.
+    pub shed: Option<ShedInfo>,
     pub timing: RequestTiming,
+}
+
+/// Why predictive admission rejected a request, echoed to the client in
+/// the structured JSON shed reply.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShedInfo {
+    /// Predicted time-to-first-token (milliseconds from arrival) at the
+    /// moment of shedding — provably past the deadline under the
+    /// configured [`super::engine::EngineConfig::shed`] margin.
+    pub predicted_ttft_ms: f64,
+    /// How many milliseconds of backlog stand between the prediction
+    /// and the deadline (`predicted_ttft_ms − slo_ms`, floored at 0):
+    /// a client retrying after roughly this long sees a queue that has
+    /// drained enough for an identical request to be admittable.
+    pub retry_after_ms: f64,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -106,6 +124,10 @@ pub enum FinishReason {
     StopToken,
     CacheFull,
     EngineShutdown,
+    /// Rejected at admission by predictive load shedding: the engine's
+    /// service-rate estimator proved the TTFT deadline unreachable
+    /// given the lanes ahead, so no prefill or decode was spent on it.
+    Shed,
 }
 
 /// Internal: a request plus its admission timestamp.

@@ -52,6 +52,18 @@ pub struct WorkloadCfg {
     /// Same, for `Batch` requests (throughput jobs usually run without
     /// one — aging, not a deadline, is what bounds their wait).
     pub slo_ms_batch: Option<f64>,
+    /// Uniform per-request jitter on the stamped SLO: each SLO'd
+    /// request draws its budget from `slo_ms · [1 − j, 1 + j]`, so a
+    /// trace carries a *spread* of deadlines rather than one value —
+    /// what exercises earliest-deadline ordering and the shed
+    /// predictor's per-request margins. Drawn from a dedicated RNG
+    /// stream (one draw per request, SLO'd or not), so enabling jitter
+    /// never perturbs arrivals, prompts, lengths or classes, and the
+    /// draw at index `i` is the same whichever class lands there.
+    /// Clamped to `[0, 0.9]` (a jitter of 1 could stamp a zero budget,
+    /// which the protocol rejects). 0 (the default) pins every earlier
+    /// trace byte-identically.
+    pub slo_jitter_frac: f64,
     pub seed: u64,
 }
 
@@ -68,6 +80,7 @@ impl Default for WorkloadCfg {
             batch_frac: 0.0,
             slo_ms_interactive: None,
             slo_ms_batch: None,
+            slo_jitter_frac: 0.0,
             seed: 0,
         }
     }
@@ -104,6 +117,10 @@ impl Workload {
         // priorities must not perturb its arrivals, prompts or lengths
         // (the contended scenarios compare against single-class twins).
         let mut class_rng = Xoshiro256::new(cfg.seed ^ 0xC1A5_5BAD);
+        // And a third stream for SLO jitter, same reasoning: deadline
+        // spread must ride along without reshuffling the trace.
+        let mut slo_rng = Xoshiro256::new(cfg.seed ^ 0x510_D1CE);
+        let jitter = cfg.slo_jitter_frac.clamp(0.0, 0.9);
         let shared = Self::filler_text(&mut rng, cfg.shared_prefix_len, fillers);
         let mut t = 0.0f64;
         let mut items = Vec::with_capacity(cfg.n_requests);
@@ -130,10 +147,15 @@ impl Workload {
             } else {
                 Priority::Interactive
             };
+            // One jitter draw per request regardless of class or SLO
+            // presence, so the stream stays index-aligned across
+            // configs that differ only in class mix or SLO settings.
+            let jitter_draw = 1.0 + jitter * (2.0 * slo_rng.uniform() - 1.0);
             let slo_ms = match priority {
                 Priority::Interactive => cfg.slo_ms_interactive,
                 Priority::Batch => cfg.slo_ms_batch,
-            };
+            }
+            .map(|ms| if jitter > 0.0 { ms * jitter_draw } else { ms });
             items.push(TraceItem { arrival_s: t, prompt, max_new_tokens, priority, slo_ms });
         }
         Self { items }
@@ -318,6 +340,52 @@ mod tests {
                 Priority::Batch => Some(60_000.0),
             };
             assert_eq!(b.slo_ms, want);
+        }
+    }
+
+    #[test]
+    fn slo_jitter_spreads_deadlines_without_perturbing_the_trace() {
+        let base = WorkloadCfg {
+            n_requests: 48,
+            batch_frac: 0.25,
+            slo_ms_interactive: Some(200.0),
+            slo_ms_batch: Some(40_000.0),
+            seed: 33,
+            ..Default::default()
+        };
+        let plain = Workload::generate(&base, &fillers());
+        let jittered = Workload::generate(
+            &WorkloadCfg { slo_jitter_frac: 0.5, ..base.clone() },
+            &fillers(),
+        );
+        let mut distinct = std::collections::HashSet::new();
+        for (a, b) in plain.items.iter().zip(&jittered.items) {
+            // Jitter rides along: everything else byte-identical.
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.max_new_tokens, b.max_new_tokens);
+            assert_eq!(a.priority, b.priority);
+            assert_eq!(a.arrival_s, b.arrival_s);
+            let (base_ms, got) = (a.slo_ms.unwrap(), b.slo_ms.unwrap());
+            assert!(
+                got >= base_ms * 0.5 - 1e-9 && got <= base_ms * 1.5 + 1e-9,
+                "jittered SLO {got} outside ±50% of {base_ms}"
+            );
+            assert!(got > 0.0, "jitter must never stamp a non-positive budget");
+            distinct.insert(got.to_bits());
+        }
+        assert!(distinct.len() > 1, "a 0.5 jitter must actually spread deadlines");
+        // Deterministic: the same seed redraws the same jitter.
+        let again = Workload::generate(
+            &WorkloadCfg { slo_jitter_frac: 0.5, ..base.clone() },
+            &fillers(),
+        );
+        for (a, b) in jittered.items.iter().zip(&again.items) {
+            assert_eq!(a.slo_ms, b.slo_ms);
+        }
+        // Default (0) pins the un-jittered stamping byte-identically.
+        let zero = Workload::generate(&base, &fillers());
+        for (a, b) in plain.items.iter().zip(&zero.items) {
+            assert_eq!(a.slo_ms, b.slo_ms);
         }
     }
 

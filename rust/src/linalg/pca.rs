@@ -104,7 +104,11 @@ impl Pca {
                     off += a[i * d + j] * a[i * d + j];
                 }
             }
-            if off.sqrt() < 1e-12 {
+            // Converged — or poisoned: a NaN covariance (NaN keys
+            // reaching calibration) can never converge, so bail to the
+            // sanitization below instead of burning every sweep on it.
+            let off_norm = off.sqrt();
+            if off_norm.is_nan() || off_norm < 1e-12 {
                 break;
             }
             for p in 0..d {
@@ -142,10 +146,24 @@ impl Pca {
                 }
             }
         }
-        // Extract, clamp, sort descending.
+        // Extract, sanitize, clamp, sort descending. A degenerate
+        // covariance (e.g. NaN keys reaching calibration) surfaces here
+        // as NaN diagonal entries: sanitize them to 0 *before*
+        // normalization — mirroring the sampler's degenerate-logit
+        // guard — and sort with `total_cmp`, which NaN can never panic
+        // (the old `partial_cmp().unwrap()` aborted the whole fit).
         let mut order: Vec<usize> = (0..d).collect();
-        let eigs: Vec<f64> = (0..d).map(|i| a[i * d + i].max(0.0)).collect();
-        order.sort_by(|&i, &j| eigs[j].partial_cmp(&eigs[i]).unwrap());
+        let eigs: Vec<f64> = (0..d)
+            .map(|i| {
+                let v = a[i * d + i];
+                if v.is_nan() {
+                    0.0
+                } else {
+                    v.max(0.0)
+                }
+            })
+            .collect();
+        order.sort_by(|&i, &j| eigs[j].total_cmp(&eigs[i]));
         let total: f64 = eigs.iter().sum();
         let norm = if total > 0.0 { total } else { 1.0 };
         let eigenvalues: Vec<f32> = order.iter().map(|&i| (eigs[i] / norm) as f32).collect();
@@ -239,6 +257,54 @@ mod tests {
         let nx: f32 = x.iter().map(|v| v * v).sum();
         let ny: f32 = y.iter().map(|v| v * v).sum();
         assert!((nx - ny).abs() / nx < 1e-4);
+    }
+
+    #[test]
+    fn nan_covariance_is_sanitized_not_a_panic() {
+        // Fully poisoned: every entry NaN. The old
+        // `partial_cmp().unwrap()` sort panicked here; now the fit
+        // degrades to an all-zero (finite, normalized-by-1) spectrum.
+        let d = 6;
+        let sym = vec![f64::NAN; d * d];
+        let b = Pca::eigh(&sym, d);
+        assert_eq!(b.eigenvalues.len(), d);
+        for (i, &e) in b.eigenvalues.iter().enumerate() {
+            assert!(e.is_finite(), "eig {i} must be finite, got {e}");
+            assert_eq!(e, 0.0, "NaN eigenvalues sanitize to 0");
+        }
+        // Downstream consumers keep working on the degenerate basis.
+        assert_eq!(b.rank_at(90.0), d);
+
+        // Partially poisoned: one NaN entry in an otherwise valid
+        // diagonal matrix. No panic, finite spectrum, still descending.
+        let mut sym = vec![0.0f64; d * d];
+        for i in 0..d {
+            sym[i * d + i] = (d - i) as f64;
+        }
+        sym[1] = f64::NAN; // (0, 1)
+        sym[d] = f64::NAN; // (1, 0)
+        let b = Pca::eigh(&sym, d);
+        for w in b.eigenvalues.windows(2) {
+            assert!(w[0].is_finite() && w[1].is_finite());
+            assert!(w[0] >= w[1], "spectrum must stay descending: {:?}", b.eigenvalues);
+        }
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic_the_fit() {
+        // A single NaN key row poisons the whole covariance (every
+        // accumulation touches it) — exactly the calibration-input
+        // failure the satellite names. The fit must survive.
+        let d = 8;
+        let n = 64;
+        let mut samples = aniso_samples(n, d, &[1.0; 8], 11);
+        samples[3 * d + 2] = f32::NAN;
+        let b = Pca::fit(&samples, n, d);
+        assert_eq!(b.eigenvalues.len(), d);
+        for &e in &b.eigenvalues {
+            assert!(e.is_finite(), "fit on NaN input must sanitize, got {e}");
+        }
+        assert!(b.rank_at(90.0) >= 1);
     }
 
     #[test]

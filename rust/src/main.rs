@@ -14,8 +14,8 @@ use std::sync::mpsc::channel;
 use anyhow::{bail, Context, Result};
 
 use loki::coordinator::{
-    AdmissionPolicy, Engine, EngineConfig, PoolConfig, PreemptMode, SchedulerPolicy,
-    VictimPolicy,
+    AdmissionPolicy, Engine, EngineClock, EngineConfig, PoolConfig, PreemptMode,
+    SchedulerPolicy, ShedPolicy, VictimPolicy,
 };
 use loki::coordinator::request::{GenRequest, Priority};
 use loki::coordinator::sampler::SampleCfg;
@@ -54,11 +54,15 @@ fn main() -> Result<()> {
                  \x20 --preempt full|partial                  whole vs tail-block eviction\n\
                  \x20 --aging-steps N                         cross-class aging bound in decode\n\
                  \x20                                         steps (deadline policy; 0 = off)\n\
+                 \x20 --shed-policy off|strict|hedged         predictive early load shedding\n\
+                 \x20 --shed-margin 0.1                       (hedged) shed only past this\n\
+                 \x20                                         fraction over the deadline\n\
                  generate: --prompt STR --max-tokens N --temperature T\n\
                  \x20         --priority interactive|batch --slo-ms MS\n\
                  serve:    --listen 127.0.0.1:7077\n\
                  bench-serve: --requests N --rate R --shared-prefix BYTES --batch-frac F\n\
-                 \x20            --slo-ms MS (interactive SLO) --batch-slo-ms MS"
+                 \x20            --slo-ms MS (interactive SLO) --batch-slo-ms MS\n\
+                 \x20            --slo-jitter F (per-request SLO jitter fraction)"
             );
             Ok(())
         }
@@ -118,6 +122,17 @@ fn engine_config(args: &Args, svc: &RuntimeService) -> Result<EngineConfig> {
             0 => None,
             n => Some(n as u64),
         },
+        shed: {
+            let spelled = args.str_or("shed-policy", "off");
+            let margin = args.f64_or("shed-margin", 0.1);
+            match ShedPolicy::parse(&spelled, margin) {
+                Some(p) => p,
+                None => bail!("unknown --shed-policy {spelled} (off|strict|hedged)"),
+            }
+        },
+        // Serving always runs on the wall clock; the deterministic
+        // decode-steps twin is a test/bench harness knob.
+        clock: EngineClock::Wall,
         verbose: args.flag("verbose"),
     })
 }
@@ -263,6 +278,7 @@ fn bench_serve(args: &Args) -> Result<()> {
             batch_frac: args.f64_or("batch-frac", 0.0),
             slo_ms_interactive: slo_ms_arg(args, "slo-ms")?,
             slo_ms_batch: slo_ms_arg(args, "batch-slo-ms")?,
+            slo_jitter_frac: args.f64_or("slo-jitter", 0.0),
             ..Default::default()
         },
         &suite.fillers,

@@ -18,6 +18,17 @@
 //! echoed back along with `"deadline_hit"` (did the first token beat the
 //! deadline).
 //!
+//! Under a shed policy (`serve --shed-policy strict|hedged`), an SLO'd
+//! request whose predicted TTFT provably misses its deadline is answered
+//! with a structured **shed reply** instead of queueing to die:
+//!   ← {"id": 7, "shed": true, "predicted_ttft_ms": 812.0,
+//!      "retry_after_ms": 562.0, "slo_ms": 250, "priority": "interactive"}
+//! `predicted_ttft_ms` is the engine's service-rate prediction at the
+//! moment of shedding; `retry_after_ms` is how far past the deadline it
+//! sat — a hint for client backoff. A shed is not an `"error"`: the
+//! request was well-formed, the engine just refused to burn compute on
+//! a deadline it proved unreachable.
+//!
 //! Malformed or invalid requests get a structured `{"error": "..."}`
 //! reply and the connection stays usable for the next line — client bugs
 //! must never wedge a connection, let alone the engine behind it
@@ -201,6 +212,23 @@ fn handle_line(
         })
         .map_err(|_| anyhow::anyhow!("engine is down"))?;
     let res = rx.recv().map_err(|_| anyhow::anyhow!("engine dropped request"))?;
+    if let Some(shed) = res.shed {
+        // Predictive admission refused the request: a structured shed
+        // reply (not an error — the request was valid, its deadline was
+        // just provably unreachable) with the prediction and a backoff
+        // hint. No generation fields: nothing was generated.
+        let mut fields = vec![
+            ("id", json::num(res.id as f64)),
+            ("shed", Json::Bool(true)),
+            ("predicted_ttft_ms", json::num(shed.predicted_ttft_ms)),
+            ("retry_after_ms", json::num(shed.retry_after_ms)),
+            ("priority", json::s(priority.name())),
+        ];
+        if let Some(ms) = slo_ms {
+            fields.push(("slo_ms", json::num(ms)));
+        }
+        return Ok(json::obj(fields));
+    }
     let mut fields = vec![
         ("id", json::num(res.id as f64)),
         ("text", json::s(&res.text)),

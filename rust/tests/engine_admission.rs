@@ -12,8 +12,8 @@ use std::sync::mpsc::channel;
 use loki::coordinator::request::{FinishReason, GenRequest, GenResult, Priority};
 use loki::coordinator::sampler::SampleCfg;
 use loki::coordinator::{
-    reserve_tokens, AdmissionPolicy, Engine, EngineCaps, EngineConfig, EngineMetrics,
-    PoolConfig, PreemptMode, VictimPolicy, RESERVE_SLACK_TOKENS,
+    reserve_tokens, AdmissionPolicy, Engine, EngineCaps, EngineClock, EngineConfig,
+    EngineMetrics, PoolConfig, PreemptMode, ShedPolicy, VictimPolicy, RESERVE_SLACK_TOKENS,
 };
 use loki::kvpool::BlockAllocator;
 use loki::runtime::{SimCfg, SimRuntime};
@@ -689,6 +689,371 @@ fn partial_victim_scoring_uses_planned_truncation_depth() {
     );
     assert_eq!(got[0].timing.preemptions, 0);
     assert_same_outputs(&base, &got);
+}
+
+/// The overload flood every shed test drives: `n` identical-budget
+/// interactive requests, all submitted at once, each decoding exactly
+/// `TOKENS` tokens (no stop token — decode lengths are deterministic,
+/// which is what makes the predictor's occupancy model *exact* here).
+/// On 2 lanes, the request at queue position `k` reaches its first
+/// token at decode step `(k / 2) · TOKENS + 1`, so with an SLO of
+/// `SLO_MS` steps-domain milliseconds (step_ms = 1), exactly the first
+/// `2 · (⌊(SLO_MS − 1) / TOKENS⌋ + 1)` requests are reachable.
+const FLOOD_TOKENS: usize = 6;
+const FLOOD_SLO_MS: f64 = 13.0; // waves 0, 1, 2 reachable (ttft 1, 7, 13)
+const FLOOD_N: usize = 24;
+
+fn flood_specs() -> Vec<Spec> {
+    (0..FLOOD_N as u64)
+        .map(|i| Spec {
+            prompt: prompt(i, 8),
+            max_new: FLOOD_TOKENS,
+            sampling: SampleCfg::greedy(),
+            priority: Priority::Interactive,
+            slo_ms: Some(FLOOD_SLO_MS),
+        })
+        .collect()
+}
+
+fn flood_cfg(shed: ShedPolicy) -> EngineConfig {
+    EngineConfig {
+        pool: PoolConfig { block_size: BS, num_blocks: 0, prefix_sharing: true },
+        victim_policy: VictimPolicy::DeadlineAware,
+        shed,
+        // The deterministic decode-steps twin: 1 virtual ms per decode
+        // step, free prefill — predictions, deadline grades, goodput
+        // and wasted work are all bit-reproducible.
+        clock: EngineClock::Steps { step_ms: 1.0, prefill_ms_per_token: 0.0 },
+        ..Default::default()
+    }
+}
+
+/// The PR 5 acceptance criterion, deterministically: under an overload
+/// flood (12 waves of SLO'd work on 2 lanes, only 3 waves reachable),
+/// `ShedPolicy::Strict` sheds exactly the doomed requests at admission
+/// — zero shed errors, graded by replaying the same trace under `Off`
+/// — and thereby wins strictly on goodput (deadline-hit tokens per
+/// decode step) and strictly on wasted work. Completed outputs are
+/// byte-identical across `Off`, `Strict` and the PR 2 default config:
+/// shedding changes *which* requests run, never what they produce.
+#[test]
+fn strict_shedding_beats_off_on_overload_flood() {
+    let specs = flood_specs();
+    let (off, mo) = run(&flood_cfg(ShedPolicy::Off), caps(256, 2), &specs);
+    let (strict, ms) = run(&flood_cfg(ShedPolicy::Strict), caps(256, 2), &specs);
+
+    // Off pins PR 4: nothing shed, everything runs (and mostly dies).
+    assert_eq!(mo.requests_shed, 0);
+    assert_eq!(mo.requests_done, FLOOD_N as u64);
+    let int_off = mo.class(Priority::Interactive);
+    assert!(
+        int_off.deadline_misses > 0,
+        "the flood must actually overload the gang: {}",
+        mo.report()
+    );
+    // ...and byte-identically matches the PR 2 default policy (same
+    // FIFO order here: equal-SLO deadlines tie-break by submission).
+    let base_cfg = EngineConfig {
+        pool: PoolConfig { block_size: BS, num_blocks: 0, prefix_sharing: true },
+        ..Default::default()
+    };
+    let (base, _) = run(&base_cfg, caps(256, 2), &specs);
+    assert_same_outputs(&base, &off);
+
+    // Strict sheds every doomed request up front and completes the rest.
+    assert!(ms.requests_shed > 0, "overload must trigger shedding: {}", ms.report());
+    assert_eq!(
+        ms.requests_done + ms.requests_shed,
+        FLOOD_N as u64,
+        "every request is either completed or shed: {}",
+        ms.report()
+    );
+    assert_eq!(
+        ms.class(Priority::Interactive).requests_shed,
+        ms.requests_shed,
+        "sheds are tallied per class"
+    );
+
+    // Shed replies are structured: prediction + retry hint, no tokens.
+    let mut shed_ids = Vec::new();
+    for r in &strict {
+        if r.finished_reason == FinishReason::Shed {
+            shed_ids.push(r.id);
+            assert!(r.tokens.is_empty(), "#{}: a shed request must not fabricate output", r.id);
+            let info = r.shed.expect("shed reply carries ShedInfo");
+            assert!(
+                info.predicted_ttft_ms > FLOOD_SLO_MS,
+                "#{}: shed prediction {} must exceed the deadline",
+                r.id,
+                info.predicted_ttft_ms
+            );
+            assert!(
+                (info.retry_after_ms - (info.predicted_ttft_ms - FLOOD_SLO_MS)).abs() < 1e-9,
+                "#{}: retry hint must be the predicted overshoot",
+                r.id
+            );
+        } else {
+            assert!(r.shed.is_none(), "completed requests carry no shed info");
+        }
+    }
+    assert_eq!(shed_ids.len() as u64, ms.requests_shed);
+
+    // Zero shed errors: every shed id provably missed in the Off replay.
+    for &id in &shed_ids {
+        assert_eq!(
+            off[id as usize].timing.deadline_hit,
+            Some(false),
+            "#{id} was shed but its Off twin hit the deadline — a shed error"
+        );
+    }
+    // And nothing reachable was shed: every Off-run hit also completed
+    // (and hit) under Strict.
+    for r in &off {
+        if r.timing.deadline_hit == Some(true) {
+            let twin = &strict[r.id as usize];
+            assert_eq!(
+                twin.finished_reason, r.finished_reason,
+                "#{}: a reachable request must complete under Strict",
+                r.id
+            );
+            assert_eq!(twin.tokens, r.tokens, "#{}: outputs must not diverge", r.id);
+            assert_eq!(twin.timing.deadline_hit, Some(true));
+        }
+    }
+
+    // The headline: strictly higher goodput, strictly lower waste.
+    assert!(
+        ms.goodput() > mo.goodput(),
+        "strict goodput {:.3} must strictly beat off {:.3}",
+        ms.goodput(),
+        mo.goodput()
+    );
+    assert!(
+        ms.wasted_work_tokens() < mo.wasted_work_tokens(),
+        "strict wasted {} must be strictly below off {}",
+        ms.wasted_work_tokens(),
+        mo.wasted_work_tokens()
+    );
+    // Shedding never costs a deadline hit: the same requests that hit
+    // under Off hit under Strict, and nothing Strict ran missed.
+    let int_strict = ms.class(Priority::Interactive);
+    assert_eq!(int_strict.deadline_hits, int_off.deadline_hits);
+    assert_eq!(int_strict.deadline_misses, 0, "{}", ms.report());
+    assert!(ms.decode_steps < mo.decode_steps, "doomed decode steps must disappear");
+
+    // Deterministic steps-domain twin: an identical rerun reproduces
+    // every shed decision, grade and metric bit-for-bit.
+    let (strict2, ms2) = run(&flood_cfg(ShedPolicy::Strict), caps(256, 2), &specs);
+    assert_same_outputs(&strict, &strict2);
+    for (a, b) in strict.iter().zip(&strict2) {
+        assert_eq!(a.shed, b.shed, "#{}: shed predictions must be deterministic", a.id);
+        assert_eq!(a.timing.deadline_hit, b.timing.deadline_hit);
+    }
+    assert_eq!(ms.requests_shed, ms2.requests_shed);
+    assert_eq!(ms.decode_steps, ms2.decode_steps);
+    assert_eq!(ms.goodput().to_bits(), ms2.goodput().to_bits());
+}
+
+/// `Hedged { margin_frac }` sheds only requests predicted past the
+/// deadline *by the margin*: on the same flood, the first doomed wave
+/// (predicted 19 ms vs a 13 ms SLO — within 1.5×) is given the benefit
+/// of the doubt and runs to a graded miss, while everything beyond the
+/// margin is still shed. Goodput lands strictly between Off and Strict.
+#[test]
+fn hedged_shedding_spares_borderline_requests() {
+    let specs = flood_specs();
+    let (off, mo) = run(&flood_cfg(ShedPolicy::Off), caps(256, 2), &specs);
+    let (strict, ms) = run(&flood_cfg(ShedPolicy::Strict), caps(256, 2), &specs);
+    let (hedged, mh) =
+        run(&flood_cfg(ShedPolicy::Hedged { margin_frac: 0.5 }), caps(256, 2), &specs);
+
+    assert!(mh.requests_shed > 0, "the deep tail is past any margin: {}", mh.report());
+    assert!(
+        mh.requests_shed < ms.requests_shed,
+        "the margin must spare borderline work ({} vs strict {})",
+        mh.requests_shed,
+        ms.requests_shed
+    );
+    assert_eq!(mh.requests_done + mh.requests_shed, FLOOD_N as u64);
+    // The spared borderline requests run — and miss, which is exactly
+    // the waste the margin buys as insurance against model error.
+    let int = mh.class(Priority::Interactive);
+    assert!(int.deadline_misses > 0, "spared borderline work grades as misses");
+    assert!(mh.wasted_work_tokens() > ms.wasted_work_tokens());
+    assert!(mh.wasted_work_tokens() < mo.wasted_work_tokens());
+    assert!(mh.goodput() > mo.goodput(), "hedged still beats queueing-to-die");
+    assert!(mh.goodput() <= ms.goodput(), "but pays for its insurance");
+    // Whatever ran produced exactly the Off-twin bytes.
+    for r in &hedged {
+        if r.finished_reason != FinishReason::Shed {
+            assert_eq!(r.tokens, off[r.id as usize].tokens, "#{} diverged", r.id);
+        } else {
+            assert_eq!(
+                strict[r.id as usize].finished_reason,
+                FinishReason::Shed,
+                "#{}: anything hedged sheds, strict must shed too",
+                r.id
+            );
+        }
+    }
+}
+
+/// Satellite regression: first-token metrics are recorded exactly once
+/// across preempt→resume. Lane B is admitted and immediately preempted
+/// by lane A's growth *in the same scheduling iteration* — before
+/// section 6 ever delivered B's first token — then resumed after A
+/// completes. The proof that the preemption landed before the first
+/// emission is `recomputed_tokens == 8`: B's resume re-prefilled its
+/// prompt only, nothing produced. TTFT/deadline/max-wait bookkeeping
+/// must fire once per request (at the real delivery), and outputs stay
+/// byte-identical to the uncontended twin.
+#[test]
+fn first_token_metrics_recorded_once_across_preempt_resume() {
+    let clock = EngineClock::Steps { step_ms: 1.0, prefill_ms_per_token: 0.0 };
+    let specs = vec![
+        // A: long decode; its speculative growth is the preemptor.
+        Spec {
+            prompt: prompt(0, 8),
+            max_new: 16,
+            sampling: SampleCfg::greedy(),
+            priority: Priority::Interactive,
+            slo_ms: None,
+        },
+        // C: finishes at decode step 8, freeing the lane B enters at
+        // the exact iteration A's block table runs out.
+        Spec {
+            prompt: prompt(1, 8),
+            max_new: 8,
+            sampling: SampleCfg::greedy(),
+            priority: Priority::Interactive,
+            slo_ms: None,
+        },
+        // B: the victim — youngest at preemption time, SLO'd so the
+        // deadline grade count is observable (steps clock: its eventual
+        // ttft is far below 1000 virtual ms → exactly one hit).
+        Spec {
+            prompt: prompt(2, 8),
+            max_new: 4,
+            sampling: SampleCfg::greedy(),
+            priority: Priority::Interactive,
+            slo_ms: Some(1000.0),
+        },
+    ];
+    let base_cfg = EngineConfig {
+        pool: PoolConfig { block_size: BS, num_blocks: 0, prefix_sharing: true },
+        clock,
+        ..Default::default()
+    };
+    let (base, bm) = run(&base_cfg, caps(256, 2), &specs);
+    assert_eq!(bm.preemptions, 0, "worst-case pool must never preempt");
+
+    // 4 blocks: bootstrap (A: 2, C: 2) fills the pool; C's completion
+    // frees 2, B takes them, and A's first grow finds nothing free.
+    let contended = EngineConfig {
+        pool: PoolConfig { block_size: BS, num_blocks: 4, prefix_sharing: true },
+        admission: AdmissionPolicy::Speculative { reserve_frac: 0.0, headroom_blocks: 1 },
+        clock,
+        ..Default::default()
+    };
+    let (got, m) = run(&contended, caps(256, 2), &specs);
+    assert_eq!(m.requests_done, 3, "drain stalled: {}", m.report());
+    assert_eq!(m.preemptions, 1, "scenario must preempt exactly once: {}", m.report());
+    assert_eq!(m.resumes, 1);
+    assert_eq!(
+        m.recomputed_tokens, 8,
+        "resume must replay the prompt only — the preemption landed before \
+         B's first token: {}",
+        m.report()
+    );
+    assert_eq!(got[2].timing.preemptions, 1, "B carries its preemption count");
+    assert_same_outputs(&base, &got);
+
+    // Single-recording: one TTFT sample per request, fleet-wide and
+    // per-class, and exactly one deadline grade for the one SLO'd
+    // request — a double-graded resume would show up in every one of
+    // these counters.
+    assert_eq!(m.ttft.count(), 3, "{}", m.report());
+    let int = m.class(Priority::Interactive);
+    assert_eq!(int.ttft.count(), 3);
+    assert_eq!(int.ttft_steps.count(), 3);
+    assert_eq!(
+        int.deadline_hits + int.deadline_misses,
+        1,
+        "B must be graded exactly once: {}",
+        m.report()
+    );
+    assert_eq!(int.deadline_hits, 1);
+    assert_eq!(got[2].timing.deadline_hit, Some(true));
+    // B's delivered first token came after the preemption detour, so
+    // its step-TTFT must exceed A's un-preempted first token.
+    assert!(got[2].timing.ttft_steps > got[0].timing.ttft_steps);
+    // max_wait tracks the worst first-token wait — B's detour.
+    assert_eq!(int.max_wait_steps, got[2].timing.ttft_steps);
+}
+
+/// Satellite regression for the clock-grading fix: under the
+/// deterministic steps clock the deadline grade is a pure function of
+/// the recorded `ttft_steps` — the same stamp the reply echoes — so a
+/// token produced in budget can never be graded a miss by a later
+/// wall-clock read, and goodput/wasted-work accounting follows the
+/// grade exactly.
+#[test]
+fn steps_clock_grades_deadlines_from_the_emission_stamp() {
+    const STEP_MS: f64 = 1.0;
+    const SLO: f64 = 5.0;
+    let specs: Vec<Spec> = (0..2)
+        .map(|i| Spec {
+            prompt: prompt(i, 8),
+            max_new: 10,
+            sampling: SampleCfg::greedy(),
+            priority: Priority::Interactive,
+            slo_ms: Some(SLO),
+        })
+        .collect();
+    let cfg = EngineConfig {
+        pool: PoolConfig { block_size: BS, num_blocks: 0, prefix_sharing: true },
+        clock: EngineClock::Steps { step_ms: STEP_MS, prefill_ms_per_token: 0.0 },
+        ..Default::default()
+    };
+    // One lane: request 0 emits at step 1 (hit), request 1 waits the
+    // full 10-step drain and emits at step 11 (miss).
+    let (got, m) = run(&cfg, caps(256, 1), &specs);
+    assert_eq!(m.requests_done, 2);
+    for r in &got {
+        let want = r.timing.ttft_steps as f64 * STEP_MS <= SLO;
+        assert_eq!(
+            r.timing.deadline_hit,
+            Some(want),
+            "#{}: grade must match the emission stamp (ttft {} steps, slo {SLO})",
+            r.id,
+            r.timing.ttft_steps
+        );
+    }
+    assert_eq!(got[0].timing.deadline_hit, Some(true));
+    assert_eq!(got[1].timing.deadline_hit, Some(false));
+    let int = m.class(Priority::Interactive);
+    assert_eq!((int.deadline_hits, int.deadline_misses), (1, 1));
+    // Goodput follows the grades: 10 hit tokens over 20 decode steps,
+    // 10 missed tokens wasted.
+    assert_eq!(m.decode_steps, 20, "{}", m.report());
+    assert!((m.goodput() - 0.5).abs() < 1e-12, "goodput {}", m.goodput());
+    assert_eq!(m.wasted_work_tokens(), 10);
+
+    // The virtual prefill cost is charged by the grader exactly as the
+    // predictor prices it: 0.5 ms per prompt token puts request 0's
+    // 8-token prompt right on the boundary (1·1.0 + 8·0.5 = 5 ≤ 5 —
+    // still a hit), and request 1 further past it (11 + 4 = 15 > 5).
+    // Charging prefill on the predictor side only would let `Strict`
+    // shed requests this grader calls hits.
+    let cfg = EngineConfig {
+        clock: EngineClock::Steps { step_ms: STEP_MS, prefill_ms_per_token: 0.5 },
+        ..cfg
+    };
+    let (got, m) = run(&cfg, caps(256, 1), &specs);
+    assert_eq!(got[0].timing.deadline_hit, Some(true), "boundary: 1 + 8·0.5 = 5 ≤ 5");
+    assert_eq!(got[1].timing.deadline_hit, Some(false));
+    let int = m.class(Priority::Interactive);
+    assert_eq!((int.deadline_hits, int.deadline_misses), (1, 1));
 }
 
 /// Satellite: the reservation formula is pinned — the old magic `+ 2` is

@@ -8,7 +8,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::time::Duration;
 
-use loki::coordinator::{Engine, EngineCaps, EngineConfig};
+use loki::coordinator::{Engine, EngineCaps, EngineClock, EngineConfig, ShedPolicy};
 use loki::runtime::{SimCfg, SimRuntime};
 use loki::server::{serve_listener, ServerCfg};
 use loki::util::json::Json;
@@ -19,7 +19,10 @@ const MAX_TOKENS_CAP: usize = 64;
 /// are daemons: the engine never sees channel closure (the server holds
 /// a sender for the listener's lifetime) and the harness exits over them.
 fn start_server() -> SocketAddr {
-    let cfg = EngineConfig { gang_batch: 2, ..Default::default() };
+    start_server_with(EngineConfig { gang_batch: 2, ..Default::default() })
+}
+
+fn start_server_with(cfg: EngineConfig) -> SocketAddr {
     let caps =
         EngineCaps { max_len: 256, max_prompt: 256, gang_batch: 2, bytes_per_token: 8 };
     let engine =
@@ -191,6 +194,46 @@ fn slo_ms_is_validated_and_echoed_with_a_deadline_grade() {
     let resp = conn.round_trip(r#"{"prompt": "hi", "max_tokens": 3, "slo_ms": "fast"}"#);
     assert!(error_of(&resp).contains("slo_ms"));
     let resp = conn.round_trip(r#"{"prompt": "still alive", "max_tokens": 3}"#);
+    assert_ok_generation(&resp, 3);
+}
+
+#[test]
+fn doomed_slo_gets_a_structured_shed_reply_and_connection_survives() {
+    // Strict shedding on the deterministic steps clock, with one decode
+    // step priced at 1000 virtual ms: any first token costs ≥ 1000 ms,
+    // so a 500 ms SLO is provably unreachable *even on an idle engine*
+    // — the shed decision is race-free (no queue depth required).
+    let addr = start_server_with(EngineConfig {
+        gang_batch: 2,
+        shed: ShedPolicy::Strict,
+        clock: EngineClock::Steps { step_ms: 1000.0, prefill_ms_per_token: 0.0 },
+        ..Default::default()
+    });
+    let mut conn = Conn::open(addr);
+    let resp = conn.round_trip(r#"{"prompt": "urgent", "max_tokens": 3, "slo_ms": 500}"#);
+    assert!(resp.get("error").is_none(), "a shed is not an error: {resp:?}");
+    assert_eq!(resp.get("shed").and_then(|v| v.as_bool()), Some(true), "{resp:?}");
+    let predicted = resp
+        .get("predicted_ttft_ms")
+        .and_then(|v| v.as_f64())
+        .expect("shed reply carries the prediction");
+    assert!(predicted >= 1000.0, "one decode step costs 1000 virtual ms: {predicted}");
+    let retry = resp
+        .get("retry_after_ms")
+        .and_then(|v| v.as_f64())
+        .expect("shed reply carries the retry hint");
+    assert!((retry - (predicted - 500.0)).abs() < 1e-9, "{resp:?}");
+    assert_eq!(resp.get("slo_ms").and_then(|v| v.as_f64()), Some(500.0), "SLO echoed");
+    assert!(resp.get("text").is_none(), "nothing was generated: {resp:?}");
+    assert!(resp.get("tokens").is_none());
+    // A generous SLO on the same connection is served normally — with
+    // its steps-domain deadline grade.
+    let resp = conn.round_trip(r#"{"prompt": "patient", "max_tokens": 3, "slo_ms": 60000}"#);
+    assert_ok_generation(&resp, 3);
+    assert!(resp.get("shed").is_none(), "served requests carry no shed fields");
+    assert_eq!(resp.get("deadline_hit").and_then(|v| v.as_bool()), Some(true));
+    // And an SLO-less request is never shed, whatever the policy.
+    let resp = conn.round_trip(r#"{"prompt": "whenever", "max_tokens": 3}"#);
     assert_ok_generation(&resp, 3);
 }
 
