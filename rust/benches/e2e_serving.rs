@@ -335,6 +335,31 @@ fn main() -> anyhow::Result<()> {
     emit_flood_table(&flood_runs);
     let shed_runs = overload_shed(quick)?;
     emit_shed_table(&shed_runs);
+    // `--trace-out PATH`: dump the strict-shedding scenario-6 run's
+    // flight recorder. That run is on the deterministic steps clock, so
+    // the JSONL bytes are identical across builds and CI gates on its
+    // conservation invariants via `repro trace-check`.
+    if args.flag("trace-out") {
+        anyhow::bail!("--trace-out needs a file path");
+    }
+    if let Some(raw) = args.get("trace-out") {
+        let m = shed_runs
+            .iter()
+            .find(|(label, _)| label.as_str() == "strict")
+            .map(|(_, m)| m)
+            .expect("scenario 6 always includes a strict-shedding pass");
+        let path = std::path::PathBuf::from(raw);
+        loki::obs::export::write_jsonl(&m.trace, &path)?;
+        let chrome = loki::obs::export::chrome_sibling(&path);
+        loki::obs::export::write_chrome(&m.trace, &chrome)?;
+        println!(
+            "trace written to {} (+ {}): {} events, {} dropped",
+            path.display(),
+            chrome.display(),
+            m.trace.len(),
+            m.trace.dropped()
+        );
+    }
     if let Some(path) = args.get("smoke-json") {
         let doc = json::obj(vec![(
             "scenarios",

@@ -41,6 +41,34 @@ pub struct AttnShape {
     pub max_len: usize,
 }
 
+/// Analytic bytes the attention *score path* moves for one decode step
+/// over a context of `ctx_len` tokens, given the variant's cost
+/// parameters from `DecodeVariant::score_cost_params()`.
+///
+/// `bytes_per_token` is the full K+V footprint of one token across all
+/// layers/heads; the ranking scan reads only keys (half of it), scaled
+/// by `d_frac` — the kept component fraction (Loki's low-rank scan) —
+/// while the exact-attention gather reads K+V for the `j_sel` selected
+/// tokens (every token when `j_sel` is `None`). This is the same
+/// movement model the [`kernels::DataMovement`] counters measure
+/// empirically; here it is closed-form so the engine can stamp it on
+/// every `SchedRound` trace event without running a kernel.
+pub fn score_path_bytes(
+    ctx_len: usize,
+    bytes_per_token: u64,
+    d_frac: f64,
+    j_sel: Option<usize>,
+) -> u64 {
+    let l = ctx_len as f64;
+    let half = bytes_per_token as f64 / 2.0;
+    let scan = l * half * d_frac;
+    let gather = match j_sel {
+        Some(j) => j.min(ctx_len) as f64 * bytes_per_token as f64,
+        None => l * half, // exact attend: V read for every token
+    };
+    (scan + gather).round() as u64
+}
+
 impl AttnShape {
     pub fn llama2_13b(batch: usize, max_len: usize) -> Self {
         Self { lanes: batch * 40, head_dim: 128, max_len }

@@ -95,6 +95,7 @@ use anyhow::Result;
 
 use crate::kvpool::{BlockAllocator, SeqId, TableSet};
 use crate::model::ByteTokenizer;
+use crate::obs::{EventKind, FinishCode, StatsHub};
 use crate::runtime::{DecodeBackend, DecodeRequest, RuntimeService, StateId};
 
 use super::metrics::EngineMetrics;
@@ -457,6 +458,19 @@ enum Admit {
     NeverFits,
 }
 
+/// Map the engine's [`FinishReason`] onto the trace layer's plain-data
+/// [`FinishCode`] (`obs` is a leaf module — it cannot name coordinator
+/// types, so the engine translates at the emission site).
+fn finish_code(r: FinishReason) -> FinishCode {
+    match r {
+        FinishReason::MaxTokens => FinishCode::MaxTokens,
+        FinishReason::StopToken => FinishCode::StopToken,
+        FinishReason::CacheFull => FinishCode::CacheFull,
+        FinishReason::EngineShutdown => FinishCode::EngineShutdown,
+        FinishReason::Shed => FinishCode::Shed,
+    }
+}
+
 /// Admission age of a lane (0 for free lanes — never a preemption
 /// candidate anyway).
 fn busy_tick(lane: &Lane) -> u64 {
@@ -477,6 +491,9 @@ pub struct Engine {
     /// converts pool blocks into the bytes the device cache would hold.
     bytes_per_token: u64,
     tokenizer: ByteTokenizer,
+    /// Live-metrics publication slot (`"stats"` server command); `None`
+    /// outside serving — publishing is skipped entirely then.
+    stats: Option<StatsHub>,
 }
 
 impl Engine {
@@ -517,6 +534,30 @@ impl Engine {
             bytes_per_token: caps.bytes_per_token,
             cfg,
             tokenizer: ByteTokenizer,
+            stats: None,
+        }
+    }
+
+    /// Attach a [`StatsHub`]: the engine publishes a fresh
+    /// [`crate::obs::StatsSnapshot`] into it every scheduling round, so a
+    /// server thread can answer `"stats"` queries mid-flight without
+    /// touching engine state.
+    pub fn with_stats_hub(mut self, hub: StatsHub) -> Self {
+        self.stats = Some(hub);
+        self
+    }
+
+    /// Publish a snapshot into the stats hub, if one is attached.
+    fn publish_stats(
+        &self,
+        metrics: &EngineMetrics,
+        queue_depth: usize,
+        busy_lanes: usize,
+        pool_in_use: usize,
+    ) {
+        let Some(hub) = &self.stats else { return };
+        if let Ok(mut slot) = hub.lock() {
+            *slot = Some(metrics.snapshot(queue_depth, busy_lanes, pool_in_use));
         }
     }
 
@@ -659,6 +700,7 @@ impl Engine {
         // clamped to the replay or `resume_extend` would see a kept
         // position the replay cannot cover.
         let replay = b.prompt.len() + b.produced.len();
+        let free_before = pool.num_free();
         let kept = match self.cfg.preempt {
             PreemptMode::Full => {
                 tables.preempt_free(pool, seq);
@@ -683,6 +725,21 @@ impl Engine {
         metrics.preemptions += 1;
         b.preempted += 1;
         metrics.per_class[b.req.req.priority.index()].preemptions += 1;
+        let freed_blocks = pool.num_free().saturating_sub(free_before) as u32;
+        let id = b.req.req.id;
+        match &kept {
+            Some(k) => metrics.record(EventKind::PreemptPartial {
+                id,
+                lane: lane as u32,
+                freed_blocks,
+                kept_len: k.len as u32,
+            }),
+            None => metrics.record(EventKind::PreemptFull {
+                id,
+                lane: lane as u32,
+                freed_blocks,
+            }),
+        }
         self.requeue_resume(pending, b, kept);
     }
 
@@ -815,6 +872,13 @@ impl Engine {
     /// Returns the fleet metrics.
     pub fn run(&self, rx: Receiver<GenRequest>) -> Result<EngineMetrics> {
         let mut metrics = EngineMetrics::default();
+        // Trace timestamps route through the engine clock: wall time in
+        // serving, decode-step-derived (bit-deterministic) under `Steps`.
+        metrics.clock = self.cfg.clock;
+        // Analytic score-path cost of the configured attention variant —
+        // turns Loki's reduced-data-movement claim into a per-round
+        // observable on every `SchedRound` event.
+        let (score_d_frac, score_j_sel) = self.cfg.variant.score_cost_params();
         let mut pending: VecDeque<PendingItem> = VecDeque::new();
         let mut lanes: Vec<Lane> = (0..self.gang_batch).map(|_| Lane::Free).collect();
         let mut lane_len: Vec<usize> = vec![0; self.gang_batch];
@@ -843,6 +907,9 @@ impl Engine {
         metrics.pool_blocks_total = num_blocks as u64;
         metrics.pool_block_bytes = bs as u64 * self.bytes_per_token;
         metrics.kv_flat_bytes = (self.gang_batch * self.max_len) as u64 * self.bytes_per_token;
+        // Seed the stats hub before the first round so a `"stats"` query
+        // racing engine startup sees an (empty) snapshot, not an error.
+        self.publish_stats(&metrics, 0, 0, 0);
 
         loop {
             // ---- 1. admit into the queue ----------------------------------
@@ -850,6 +917,12 @@ impl Engine {
                 match rx.try_recv() {
                     Ok(req) => {
                         metrics.requests_in += 1;
+                        metrics.record(EventKind::RequestAdmitted {
+                            id: req.id,
+                            class: req.priority.index() as u8,
+                            prompt_len: req.prompt.len() as u32,
+                            max_new: req.max_new_tokens as u32,
+                        });
                         self.enqueue_fresh(
                             &mut pending,
                             QueuedRequest::stamp(req, metrics.decode_steps),
@@ -871,6 +944,12 @@ impl Engine {
                 match rx.recv() {
                     Ok(req) => {
                         metrics.requests_in += 1;
+                        metrics.record(EventKind::RequestAdmitted {
+                            id: req.id,
+                            class: req.priority.index() as u8,
+                            prompt_len: req.prompt.len() as u32,
+                            max_new: req.max_new_tokens as u32,
+                        });
                         self.enqueue_fresh(
                             &mut pending,
                             QueuedRequest::stamp(req, metrics.decode_steps),
@@ -937,6 +1016,13 @@ impl Engine {
                     // tokens would inflate the per-token rate and make
                     // `Strict` shed reachable requests.
                     let prefill_tokens: usize = prompts.iter().map(|p| p.len()).sum();
+                    for (lane, (item, tokens, _)) in batch.iter().enumerate() {
+                        metrics.record(EventKind::PrefillStart {
+                            id: item_queued(item).req.id,
+                            lane: lane as u32,
+                            tokens: tokens.len() as u32,
+                        });
+                    }
                     let t0 = Instant::now();
                     let (id, logits) = self.backend.prefill(&self.cfg.pca, prompts)?;
                     est.observe_prefill(prefill_tokens, t0.elapsed().as_secs_f64());
@@ -944,12 +1030,18 @@ impl Engine {
                     gang = Some(id);
                     let n = batch.len();
                     for (lane, (item, tokens, seq)) in batch.into_iter().enumerate() {
+                        metrics.record(EventKind::PrefillEnd {
+                            id: item_queued(&item).req.id,
+                            lane: lane as u32,
+                            tokens: tokens.len() as u32,
+                        });
                         lane_len[lane] = tokens.len();
                         lane_seq[lane] = Some(seq);
                         lanes[lane] = self.lane_for(
                             item,
                             tokens,
                             &logits[lane],
+                            lane,
                             &mut admit_tick,
                             &mut metrics,
                         );
@@ -983,6 +1075,12 @@ impl Engine {
                 match self.try_admit(&mut pool, &mut tables, front) {
                     Admit::Granted(seq, tokens) => {
                         let item = pending.pop_front().unwrap();
+                        let id = item_queued(&item).req.id;
+                        metrics.record(EventKind::PrefillStart {
+                            id,
+                            lane: lane as u32,
+                            tokens: tokens.len() as u32,
+                        });
                         let t0 = Instant::now();
                         let (lane_id, logits) =
                             self.backend.prefill(&self.cfg.pca, vec![tokens.clone()])?;
@@ -990,10 +1088,21 @@ impl Engine {
                         metrics.prefills += 1;
                         self.backend.inject(gang_id, lane_id, lane)?;
                         metrics.injections += 1;
+                        metrics.record(EventKind::PrefillEnd {
+                            id,
+                            lane: lane as u32,
+                            tokens: tokens.len() as u32,
+                        });
                         lane_len[lane] = tokens.len();
                         lane_seq[lane] = Some(seq);
-                        lanes[lane] =
-                            self.lane_for(item, tokens, &logits[0], &mut admit_tick, &mut metrics);
+                        lanes[lane] = self.lane_for(
+                            item,
+                            tokens,
+                            &logits[0],
+                            lane,
+                            &mut admit_tick,
+                            &mut metrics,
+                        );
                         lane_tick[lane] = busy_tick(&lanes[lane]);
                         injected += 1;
                     }
@@ -1087,6 +1196,38 @@ impl Engine {
                 }
             }
             metrics.note_pool(pool.blocks_in_use(), tables.written_blocks(), tables.shared_hits);
+            // Scheduler-round trace event: lane occupancy, queue depth,
+            // free pool and the per-step attention score-path bytes —
+            // moved (under the configured variant) vs exact-attention.
+            let mut busy_now = 0u32;
+            let mut score_moved = 0u64;
+            let mut score_exact = 0u64;
+            for lane in 0..self.gang_batch {
+                if !matches!(lanes[lane], Lane::Busy(_)) {
+                    continue;
+                }
+                busy_now += 1;
+                score_moved += crate::attnsim::score_path_bytes(
+                    lane_len[lane],
+                    self.bytes_per_token,
+                    score_d_frac,
+                    score_j_sel,
+                );
+                score_exact += lane_len[lane] as u64 * self.bytes_per_token;
+            }
+            metrics.record(EventKind::SchedRound {
+                busy_lanes: busy_now,
+                queue_depth: pending.len() as u32,
+                free_blocks: pool.num_free() as u32,
+                score_bytes_moved: score_moved,
+                score_bytes_exact: score_exact,
+            });
+            // Drain the kvpool's event side-channel into the recorder —
+            // the engine stamps the clock, keeping `kvpool` a leaf.
+            for pe in tables.events.drain() {
+                metrics.record(EventKind::Pool(pe));
+            }
+            self.publish_stats(&metrics, pending.len(), busy_now as usize, pool.blocks_in_use());
 
             // ---- 6. per-lane sampling + completion ------------------------
             for lane in 0..self.gang_batch {
@@ -1145,6 +1286,8 @@ impl Engine {
                                 class.deadline_misses += 1;
                             }
                         }
+                        let id = b.req.req.id;
+                        metrics.record(EventKind::FirstToken { id, ttft_steps: steps });
                     }
                     // The admission-sampled token is only stop-checked
                     // here (it was drawn from prefill logits before any
@@ -1181,6 +1324,12 @@ impl Engine {
             self.backend.free(g);
         }
         metrics.note_pool(pool.blocks_in_use(), tables.written_blocks(), tables.shared_hits);
+        // Final drain: pool events emitted after the last decode round
+        // (terminal frees, drain-path truncations) must still land.
+        for pe in tables.events.drain() {
+            metrics.record(EventKind::Pool(pe));
+        }
+        self.publish_stats(&metrics, pending.len(), 0, pool.blocks_in_use());
         Ok(metrics)
     }
 
@@ -1440,6 +1589,7 @@ impl Engine {
     /// pool (clearer than queueing it forever behind backpressure).
     fn reject(&self, q: QueuedRequest, metrics: &mut EngineMetrics) {
         metrics.requests_rejected += 1;
+        metrics.record(EventKind::RequestRejected { id: q.req.id });
         let total = q.submitted.elapsed().as_secs_f64();
         let result = GenResult {
             id: q.req.id,
@@ -1570,6 +1720,11 @@ impl Engine {
     fn shed(&self, q: QueuedRequest, predicted_ttft_ms: f64, metrics: &mut EngineMetrics) {
         metrics.requests_shed += 1;
         metrics.per_class[q.req.priority.index()].requests_shed += 1;
+        metrics.record(EventKind::RequestShed {
+            id: q.req.id,
+            class: q.req.priority.index() as u8,
+            predicted_ttft_ms,
+        });
         let slo_ms = q.req.slo_ms.unwrap_or(0.0);
         let retry_after_ms = (predicted_ttft_ms - slo_ms).max(0.0);
         let total = q.submitted.elapsed().as_secs_f64();
@@ -1613,6 +1768,7 @@ impl Engine {
         item: PendingItem,
         tokens: Vec<i32>,
         logits: &[f32],
+        lane_idx: usize,
         admit_tick: &mut u64,
         metrics: &mut EngineMetrics,
     ) -> Lane {
@@ -1632,6 +1788,12 @@ impl Engine {
                 let kept_len = kept.map_or(0, |k| k.len.min(tokens.len()));
                 metrics.recomputed_tokens += (tokens.len() - kept_len) as u64;
                 metrics.recompute_saved_tokens += kept_len as u64;
+                metrics.record(EventKind::Resume {
+                    id: b.req.req.id,
+                    lane: lane_idx as u32,
+                    recomputed_tokens: (tokens.len() - kept_len) as u32,
+                    kept_tokens: kept_len as u32,
+                });
                 if self.cfg.verbose {
                     eprintln!(
                         "[engine] resumed #{} at {} produced tokens ({} kept)",
@@ -1675,6 +1837,11 @@ impl Engine {
     }
 
     fn complete(&self, b: BusyLane, reason: FinishReason, metrics: &mut EngineMetrics) {
+        metrics.record(EventKind::Finish {
+            id: b.req.req.id,
+            reason: finish_code(reason),
+            tokens: b.produced.len() as u32,
+        });
         metrics.requests_done += 1;
         let total = b.req.submitted.elapsed().as_secs_f64();
         metrics.e2e_latency.push(total);

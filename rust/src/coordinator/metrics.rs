@@ -1,11 +1,27 @@
 //! Fleet-level engine metrics: throughput, latency distributions,
 //! scheduler activity, KV-pool occupancy. Rendered by `repro serve
 //! --report` and the e2e_serving bench.
+//!
+//! Latency series are `obs::StreamingHist` — constant-memory
+//! log-bucketed histograms whose mean/sum are bit-identical to the old
+//! `Vec`-backed `Summary` (same push-order accumulation) and whose
+//! percentiles are within one log bucket (~19%) of exact. A serving
+//! process that runs for days no longer grows its metrics without
+//! bound; the experiment harnesses keep exact `Summary` where order
+//! statistics must be precise.
+//!
+//! `EngineMetrics` also owns the flight recorder: `record(kind)` stamps
+//! a trace event with the engine-clock timestamp (`decode_steps ×
+//! step_ms` under `EngineClock::Steps`, wall elapsed under `Wall`), so
+//! traces from the deterministic twin are bit-identical across runs.
 
 use std::time::Instant;
 
-use crate::linalg::stats::Summary;
+use crate::obs::{
+    ClassSnap, EventKind, FlightRecorder, HistSnap, StatsSnapshot, StreamingHist,
+};
 
+use super::predictor::EngineClock;
 use super::request::{Priority, PRIORITY_CLASSES};
 
 /// Latency and scheduler activity for one priority class — the
@@ -44,11 +60,11 @@ pub struct ClassMetrics {
     /// one lane-drain).
     pub max_wait_steps: u64,
     /// Seconds to first token.
-    pub ttft: Summary,
+    pub ttft: StreamingHist,
     /// Decode iterations to first token — the wall-clock-free TTFT the
     /// deterministic scheduler tests compare across classes.
-    pub ttft_steps: Summary,
-    pub e2e: Summary,
+    pub ttft_steps: StreamingHist,
+    pub e2e: StreamingHist,
 }
 
 impl ClassMetrics {
@@ -63,9 +79,9 @@ impl ClassMetrics {
             deadline_hit_tokens: 0,
             deadline_missed_tokens: 0,
             max_wait_steps: 0,
-            ttft: Summary::new(),
-            ttft_steps: Summary::new(),
-            e2e: Summary::new(),
+            ttft: StreamingHist::new(),
+            ttft_steps: StreamingHist::new(),
+            e2e: StreamingHist::new(),
         }
     }
 
@@ -84,6 +100,16 @@ impl ClassMetrics {
 #[derive(Debug)]
 pub struct EngineMetrics {
     started: Instant,
+    /// Which clock timestamps and elapsed-time metrics route through.
+    /// Set by `Engine::run` from its config; `Wall` by default. Under
+    /// `Steps` both `uptime_s` and trace timestamps derive from
+    /// `decode_steps`, so the deterministic twin reports deterministic
+    /// throughput and bit-identical traces.
+    pub clock: EngineClock,
+    /// Default-on flight recorder (bounded ring; see `obs::recorder`).
+    /// Passive unless exported: with export off, engine outputs are
+    /// byte-identical to a build without it.
+    pub trace: FlightRecorder,
     pub requests_in: u64,
     pub requests_done: u64,
     /// Requests that can never fit the configured pool (failed fast with
@@ -147,12 +173,12 @@ pub struct EngineMetrics {
     /// real KV over total blocks; reserved-but-unwritten blocks do not
     /// count). The utilization number speculative admission exists to
     /// raise — its mean is the e2e acceptance metric vs `ReserveFull`.
-    pub pool_occupancy: Summary,
+    pub pool_occupancy: StreamingHist,
     /// Seconds.
-    pub ttft: Summary,
-    pub e2e_latency: Summary,
-    pub queue_wait: Summary,
-    pub decode_step_time: Summary,
+    pub ttft: StreamingHist,
+    pub e2e_latency: StreamingHist,
+    pub queue_wait: StreamingHist,
+    pub decode_step_time: StreamingHist,
     /// Per-priority-class latency/activity, indexed by
     /// [`Priority::index`].
     pub per_class: [ClassMetrics; PRIORITY_CLASSES],
@@ -162,6 +188,8 @@ impl Default for EngineMetrics {
     fn default() -> Self {
         Self {
             started: Instant::now(),
+            clock: EngineClock::Wall,
+            trace: FlightRecorder::default(),
             requests_in: 0,
             requests_done: 0,
             requests_rejected: 0,
@@ -187,22 +215,46 @@ impl Default for EngineMetrics {
             pool_blocks_peak: 0,
             prefix_shared_blocks: 0,
             kv_flat_bytes: 0,
-            pool_occupancy: Summary::new(),
-            ttft: Summary::new(),
-            e2e_latency: Summary::new(),
-            queue_wait: Summary::new(),
-            decode_step_time: Summary::new(),
+            pool_occupancy: StreamingHist::new(),
+            ttft: StreamingHist::new(),
+            e2e_latency: StreamingHist::new(),
+            queue_wait: StreamingHist::new(),
+            decode_step_time: StreamingHist::new(),
             per_class: [ClassMetrics::new(), ClassMetrics::new()],
         }
     }
 }
 
 impl EngineMetrics {
+    /// Elapsed engine time in seconds, routed through the engine clock:
+    /// wall elapsed under `Wall`, `decode_steps × step_ms` under
+    /// `Steps`. The deterministic twin used to leak wall time here and
+    /// report nondeterministic throughput; now two identical Steps runs
+    /// report identical uptime and tok/s.
     pub fn uptime_s(&self) -> f64 {
-        self.started.elapsed().as_secs_f64()
+        match self.clock {
+            EngineClock::Wall => self.started.elapsed().as_secs_f64(),
+            EngineClock::Steps { step_ms, .. } => self.decode_steps as f64 * step_ms / 1e3,
+        }
     }
 
-    /// Generated tokens per second of wall time.
+    /// Milliseconds on the engine clock, for trace timestamps.
+    fn now_ms(&self) -> f64 {
+        match self.clock {
+            EngineClock::Wall => self.started.elapsed().as_secs_f64() * 1e3,
+            EngineClock::Steps { step_ms, .. } => self.decode_steps as f64 * step_ms,
+        }
+    }
+
+    /// Record a flight-recorder event stamped with the engine clock and
+    /// the current decode-step counter.
+    pub fn record(&mut self, kind: EventKind) {
+        let ts_ms = self.now_ms();
+        let step = self.decode_steps;
+        self.trace.record(ts_ms, step, kind);
+    }
+
+    /// Generated tokens per second of uptime (clock-routed).
     pub fn throughput_tok_s(&self) -> f64 {
         let t = self.uptime_s();
         if t > 0.0 {
@@ -282,6 +334,56 @@ impl EngineMetrics {
             0.0
         } else {
             self.kv_flat_bytes as f64 / resident as f64
+        }
+    }
+
+    /// Flat snapshot for the live `"stats"` exposition. The engine
+    /// calls this once per scheduling round with its instantaneous
+    /// queue/lane/pool state and publishes the result into a
+    /// `StatsHub`.
+    pub fn snapshot(
+        &self,
+        queue_depth: usize,
+        busy_lanes: usize,
+        pool_blocks_in_use: usize,
+    ) -> StatsSnapshot {
+        let mut classes = [ClassSnap::default(); 2];
+        for (i, c) in self.per_class.iter().enumerate() {
+            classes[i] = ClassSnap {
+                done: c.done,
+                preemptions: c.preemptions,
+                shed: c.requests_shed,
+                deadline_hits: c.deadline_hits,
+                deadline_misses: c.deadline_misses,
+                ttft: HistSnap::of(&c.ttft),
+            };
+        }
+        StatsSnapshot {
+            uptime_s: self.uptime_s(),
+            throughput_tok_s: self.throughput_tok_s(),
+            requests_in: self.requests_in,
+            requests_done: self.requests_done,
+            requests_rejected: self.requests_rejected,
+            requests_shed: self.requests_shed,
+            tokens_generated: self.tokens_generated,
+            prefills: self.prefills,
+            decode_steps: self.decode_steps,
+            preemptions: self.preemptions,
+            resumes: self.resumes,
+            queue_depth: queue_depth as u64,
+            busy_lanes: busy_lanes as u64,
+            pool_blocks_total: self.pool_blocks_total,
+            pool_blocks_in_use: pool_blocks_in_use as u64,
+            pool_blocks_peak: self.pool_blocks_peak,
+            goodput_tok_per_step: self.goodput(),
+            wasted_work_tokens: self.wasted_work_tokens(),
+            ttft: HistSnap::of(&self.ttft),
+            e2e: HistSnap::of(&self.e2e_latency),
+            queue_wait: HistSnap::of(&self.queue_wait),
+            decode_step: HistSnap::of(&self.decode_step_time),
+            trace_recorded: self.trace.recorded(),
+            trace_dropped: self.trace.dropped(),
+            classes,
         }
     }
 
@@ -483,6 +585,126 @@ mod tests {
         assert_eq!(m.class(Priority::Interactive).deadline_hit_rate(), 1.0);
         assert!((m.goodput() - 0.8).abs() < 1e-12);
         assert_eq!(m.wasted_work_tokens(), 0, "the shed itself burned no decode work");
+    }
+
+    #[test]
+    fn uptime_routes_through_steps_clock() {
+        let mut m = EngineMetrics::default();
+        m.clock = EngineClock::Steps { step_ms: 2.5, prefill_ms_per_token: 0.0 };
+        m.decode_steps = 400;
+        m.tokens_generated = 800;
+        // 400 steps × 2.5 ms = 1.0 s — exact, regardless of wall time.
+        assert_eq!(m.uptime_s(), 1.0);
+        assert_eq!(m.throughput_tok_s(), 800.0);
+        // And the pin: the same state always reports the same numbers
+        // (the old wall-clock leak made this nondeterministic).
+        let again = (m.uptime_s(), m.throughput_tok_s());
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert_eq!((m.uptime_s(), m.throughput_tok_s()), again);
+    }
+
+    #[test]
+    fn report_renders_synthetic_state() {
+        // Snapshot-test the rendered lines, not just the arithmetic:
+        // build a synthetic metrics state under the Steps clock (so
+        // tok/s is deterministic) and pin every line's shape.
+        let mut m = EngineMetrics::default();
+        m.clock = EngineClock::Steps { step_ms: 10.0, prefill_ms_per_token: 0.0 };
+        m.requests_in = 5;
+        m.requests_done = 3;
+        m.requests_rejected = 1;
+        m.requests_shed = 1;
+        m.tokens_generated = 24;
+        m.prefills = 4;
+        m.decode_steps = 12;
+        m.injections = 4;
+        m.lane_resets = 1;
+        m.admission_blocked = 2;
+        m.preemptions = 2;
+        m.partial_preemptions = 1;
+        m.kept_reclaims = 1;
+        m.aging_promotions = 1;
+        m.resumes = 2;
+        m.recomputed_tokens = 6;
+        m.recompute_saved_tokens = 4;
+        m.grow_events = 3;
+        m.grown_blocks = 5;
+        m.grow_stalls = 1;
+        m.pool_blocks_total = 64;
+        m.pool_block_bytes = 1_000_000;
+        m.kv_flat_bytes = 128_000_000;
+        m.note_pool(32, 32, 7);
+        for v in [0.1, 0.2, 0.3] {
+            m.ttft.push(v);
+            m.e2e_latency.push(v * 2.0);
+            m.queue_wait.push(v / 2.0);
+            m.decode_step_time.push(0.01);
+        }
+        let c = &mut m.per_class[Priority::Interactive.index()];
+        c.done = 3;
+        c.preemptions = 2;
+        c.deadline_hits = 2;
+        c.deadline_misses = 1;
+        c.deadline_hit_tokens = 18;
+        c.deadline_missed_tokens = 6;
+        c.max_wait_steps = 9;
+        c.ttft.push(0.2);
+        c.ttft_steps.push(4.0);
+        c.e2e.push(0.4);
+        c.requests_shed = 1;
+        let report = m.report();
+        let expected = "requests: 5 in / 3 done / 1 rejected / 1 shed | tokens: 24 (200.0 tok/s)\n\
+             prefills: 4 | decode steps: 12 | injections: 4 | lane resets: 1\n\
+             kv pool:   peak 32/64 blocks (32.0 MB resident vs 128.0 MB flat, 4.00x) | shared 7 | blocked 2\n\
+             admission: mean occupancy 50.0% | preempts 2 (1 partial, 1 kept-reclaims) / resumes 2 (6 tok recomputed, 4 saved) | grows 3 (+5 blocks, 1 stalls) | aging promotions 1";
+        assert!(report.starts_with(expected), "report drifted:\n{report}");
+        assert!(
+            report.contains("goodput:   1.500 tok/step (deadline-hit tokens) | wasted 12 tok (missed-deadline + recompute) | shed errors 0"),
+            "{report}"
+        );
+        assert!(report.contains("ttft_s:    0.200 ± 0.100 [p50 "), "{report}");
+        assert!(
+            report.contains("class interactive done 3 | preempts 2 | ttft mean 0.2000s (4.0 steps, max wait 9) | e2e mean 0.4000s | deadline hits 2/3 (67%) | shed 1"),
+            "{report}"
+        );
+        // Batch saw nothing: its class line is suppressed.
+        assert!(!report.contains("class batch"), "{report}");
+    }
+
+    #[test]
+    fn snapshot_carries_live_and_aggregate_state() {
+        let mut m = EngineMetrics::default();
+        m.clock = EngineClock::Steps { step_ms: 1.0, prefill_ms_per_token: 0.0 };
+        m.requests_in = 4;
+        m.requests_done = 2;
+        m.decode_steps = 100;
+        m.tokens_generated = 50;
+        m.pool_blocks_total = 32;
+        m.ttft.push(0.25);
+        m.per_class[Priority::Batch.index()].done = 1;
+        let s = m.snapshot(3, 2, 17);
+        assert_eq!(s.queue_depth, 3);
+        assert_eq!(s.busy_lanes, 2);
+        assert_eq!(s.pool_blocks_in_use, 17);
+        assert_eq!(s.requests_in, 4);
+        assert_eq!(s.uptime_s, 0.1);
+        assert_eq!(s.throughput_tok_s, 500.0);
+        assert_eq!(s.ttft.count, 1);
+        assert_eq!(s.classes[Priority::Batch.index()].done, 1);
+        // Renders without panicking and round-trips as JSON.
+        assert!(s.prometheus().contains("loki_requests_total 4"));
+        assert!(s.to_json().to_string().contains("\"requests_in\":4"));
+    }
+
+    #[test]
+    fn record_stamps_steps_clock_timestamps() {
+        let mut m = EngineMetrics::default();
+        m.clock = EngineClock::Steps { step_ms: 2.0, prefill_ms_per_token: 0.0 };
+        m.decode_steps = 5;
+        m.record(EventKind::RequestRejected { id: 1 });
+        let ev = m.trace.iter().next().unwrap();
+        assert_eq!(ev.ts_ms, 10.0);
+        assert_eq!(ev.step, 5);
     }
 
     #[test]

@@ -17,6 +17,8 @@
 
 use std::collections::{HashMap, HashSet};
 
+use crate::obs::{PoolEvent, PoolEventLog};
+
 use super::block::{BlockAllocator, BlockId, PoolExhausted};
 
 pub type SeqId = u64;
@@ -68,6 +70,10 @@ pub struct TableSet {
     written: HashSet<BlockId>,
     /// Blocks obtained by sharing instead of allocation (the savings).
     pub shared_hits: u64,
+    /// Bounded trace side-channel: lifecycle events pushed here are
+    /// drained by the engine into the flight recorder each round (the
+    /// tables have no clock, so the engine stamps timestamps).
+    pub events: PoolEventLog,
 }
 
 impl TableSet {
@@ -82,6 +88,7 @@ impl TableSet {
             block_hash: HashMap::new(),
             written: HashSet::new(),
             shared_hits: 0,
+            events: PoolEventLog::default(),
         }
     }
 
@@ -118,6 +125,7 @@ impl TableSet {
         let full = prompt.len() / bs; // shareable full prompt blocks
 
         let mut blocks: Vec<BlockId> = Vec::with_capacity(total_blocks);
+        let mut shared_now = 0u32;
         let mut chain = 0u64;
         for i in 0..full {
             chain = chain_hash(chain, &prompt[i * bs..(i + 1) * bs]);
@@ -126,6 +134,7 @@ impl TableSet {
                 Some(b) => {
                     alloc.retain(b);
                     self.shared_hits += 1;
+                    shared_now += 1;
                     blocks.push(b);
                 }
                 None => match alloc.alloc() {
@@ -162,6 +171,11 @@ impl TableSet {
         }
         let id = self.next;
         self.next += 1;
+        self.events.push(PoolEvent::Alloc {
+            seq: id,
+            blocks: blocks.len() as u32,
+            shared: shared_now,
+        });
         self.tables.insert(id, BlockTable { blocks, len: prompt.len() });
         Ok(id)
     }
@@ -203,6 +217,7 @@ impl TableSet {
             }
         }
         alloc.stats.grown_blocks += granted as u64;
+        self.events.push(PoolEvent::Grow { seq, blocks: granted as u32 });
         Ok(granted)
     }
 
@@ -253,7 +268,14 @@ impl TableSet {
         }
         let t = self.tables.get_mut(&seq).expect("truncate_tail of unknown seq");
         t.len = t.len.min(t.blocks.len() * bs);
-        TruncateOutcome { freed, kept_blocks: t.blocks.len(), kept_len: t.len }
+        let out = TruncateOutcome { freed, kept_blocks: t.blocks.len(), kept_len: t.len };
+        self.events.push(PoolEvent::Truncate {
+            seq,
+            freed: out.freed as u32,
+            kept_blocks: out.kept_blocks as u32,
+            kept_len: out.kept_len as u32,
+        });
+        out
     }
 
     /// Dry-run twin of [`TableSet::truncate_tail`]: what *would* a
@@ -329,6 +351,7 @@ impl TableSet {
                 }
             }
         }
+        self.events.push(PoolEvent::Grow { seq, blocks: acquired.len() as u32 });
         let to_mark: Vec<BlockId> = {
             let t = self.tables.get_mut(&seq).expect("checked above");
             t.blocks.extend_from_slice(&acquired);
@@ -373,6 +396,7 @@ impl TableSet {
     /// Release every block a sequence holds.
     pub fn free(&mut self, alloc: &mut BlockAllocator, seq: SeqId) {
         let t = self.tables.remove(&seq).expect("free of unknown seq");
+        self.events.push(PoolEvent::Free { seq, blocks: t.blocks.len() as u32 });
         for b in t.blocks {
             self.release_and_clean(alloc, b);
         }
@@ -416,6 +440,13 @@ impl TableSet {
         }
         let id = self.next;
         self.next += 1;
+        // A fork is an admission by another name: full blocks are shared,
+        // only a CoW tail (if any) is a fresh allocation.
+        self.events.push(PoolEvent::Alloc {
+            seq: id,
+            blocks: blocks.len() as u32,
+            shared: full.min(blocks.len()) as u32,
+        });
         self.tables.insert(id, BlockTable { blocks, len: p_len });
         Ok(id)
     }
@@ -785,6 +816,34 @@ mod tests {
         assert_eq!(before.blocks, after.blocks);
         assert_eq!(before.len, after.len);
         alloc.check_invariants();
+    }
+
+    #[test]
+    fn lifecycle_emits_pool_events() {
+        let mut alloc = BlockAllocator::new(16, 4);
+        let mut ts = TableSet::new(4, true);
+        let s = ts.admit(&mut alloc, &toks(6, 0), 20).unwrap(); // 5 blocks
+        for _ in 0..10 {
+            ts.advance(s);
+        }
+        ts.truncate_tail(&mut alloc, s, 2); // keeps 3 blocks / len 12
+        ts.resume_extend(&mut alloc, s, 16, 6).unwrap(); // re-acquires 3
+        ts.free(&mut alloc, s);
+        let evs: Vec<_> = ts.events.drain().collect();
+        assert_eq!(evs[0], PoolEvent::Alloc { seq: s, blocks: 5, shared: 0 });
+        assert_eq!(
+            evs[1],
+            PoolEvent::Truncate { seq: s, freed: 2, kept_blocks: 3, kept_len: 12 }
+        );
+        assert_eq!(evs[2], PoolEvent::Grow { seq: s, blocks: 3 });
+        assert_eq!(evs[3], PoolEvent::Free { seq: s, blocks: 6 });
+        assert_eq!(evs.len(), 4);
+        // Sharing shows up in the admit event.
+        let prompt = toks(8, 0);
+        let _a = ts.admit(&mut alloc, &prompt, 9).unwrap();
+        let b = ts.admit(&mut alloc, &prompt, 9).unwrap();
+        let evs: Vec<_> = ts.events.drain().collect();
+        assert_eq!(evs[1], PoolEvent::Alloc { seq: b, blocks: 3, shared: 2 });
     }
 
     #[test]

@@ -23,6 +23,8 @@
 //! forked sequence makes into a shared tail block copies that block
 //! (hot + cold) before writing.
 
+use crate::obs::{PoolEvent, PoolEventLog};
+
 use super::block::{BlockAllocator, BlockId, PoolExhausted};
 use super::stats::TierStats;
 use super::table::BlockTable;
@@ -77,6 +79,9 @@ pub struct TieredKvPool {
     resident_count: usize,
     tick: u64,
     pub tier_stats: TierStats,
+    /// Bounded trace side-channel (faults/demotions); drained by
+    /// whoever owns the clock, same contract as `TableSet::events`.
+    pub events: PoolEventLog,
 }
 
 impl TieredKvPool {
@@ -93,6 +98,7 @@ impl TieredKvPool {
             resident_count: 0,
             tick: 0,
             tier_stats: TierStats::default(),
+            events: PoolEventLog::default(),
             cfg,
         }
     }
@@ -301,6 +307,7 @@ impl TieredKvPool {
             .collect();
         touched.sort_unstable();
         touched.dedup();
+        let mut faulted_pages = 0u32;
         for b in touched {
             let bi = b as usize;
             if self.resident[bi] {
@@ -310,9 +317,17 @@ impl TieredKvPool {
                 self.resident_count += 1;
                 self.tier_stats.gather_faults += 1;
                 self.tier_stats.bytes_faulted += page_bytes;
+                faulted_pages += 1;
             }
             self.tick += 1;
             self.last_touch[bi] = self.tick;
+        }
+        if faulted_pages > 0 {
+            self.events.push(PoolEvent::Fault {
+                seq: seq as u64,
+                pages: faulted_pages,
+                bytes: faulted_pages as u64 * page_bytes,
+            });
         }
         self.enforce_budget();
     }
@@ -388,6 +403,7 @@ impl TieredKvPool {
         if budget == 0 {
             return;
         }
+        let mut demoted = 0u32;
         while self.resident_count > budget {
             let victim = self
                 .resident
@@ -400,6 +416,10 @@ impl TieredKvPool {
             self.resident[victim] = false;
             self.resident_count -= 1;
             self.tier_stats.demotions += 1;
+            demoted += 1;
+        }
+        if demoted > 0 {
+            self.events.push(PoolEvent::Demotion { pages: demoted });
         }
     }
 
@@ -624,6 +644,38 @@ mod tests {
         p.free_seq(child);
         assert_eq!(p.allocator().blocks_in_use(), 0);
         p.check_invariants();
+    }
+
+    #[test]
+    fn gather_faults_and_demotions_emit_events() {
+        let mut p = TieredKvPool::new(TieredPoolCfg {
+            num_blocks: 8,
+            block_size: 2,
+            head_dim: 4,
+            d_hot: 2,
+            cold_resident_blocks: 2,
+        });
+        let s = p.new_seq();
+        let row = vec![1.0f32; 4];
+        for _ in 0..8 {
+            p.append(s, &row, &row).unwrap();
+        }
+        // Write-through past the budget demoted pages along the way.
+        assert!(p.events.drain().any(|e| matches!(e, PoolEvent::Demotion { .. })));
+        // Gathering a demoted slot emits one aggregated fault event.
+        p.account_gather(s, &[0]);
+        let evs: Vec<_> = p.events.drain().collect();
+        let fault = evs
+            .iter()
+            .find(|e| matches!(e, PoolEvent::Fault { .. }))
+            .expect("gather of a cold page must emit a fault event");
+        let PoolEvent::Fault { seq, pages, bytes } = *fault else { unreachable!() };
+        assert_eq!(seq, s as u64);
+        assert_eq!(pages, 1);
+        assert_eq!(bytes, 2 * 2 * 4 * 4); // K+V · block_size · head_dim · f32
+        // A resident re-gather emits nothing.
+        p.account_gather(s, &[0]);
+        assert!(p.events.is_empty());
     }
 
     #[test]

@@ -27,6 +27,7 @@ pub mod experiments;
 pub mod kvpool;
 pub mod linalg;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod server;
 pub mod tensor;

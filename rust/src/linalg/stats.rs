@@ -25,7 +25,10 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // `total_cmp`, not `partial_cmp().unwrap()`: a single NaN sample
+    // (same panic class as the `Pca::eigh` fix) must not abort a
+    // metrics render. IEEE total order sorts NaN above +inf.
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -123,6 +126,20 @@ mod tests {
         assert!((percentile(&xs, 50.0) - 5.0).abs() < 1e-12);
         assert_eq!(percentile(&xs, 0.0), 0.0);
         assert_eq!(percentile(&xs, 100.0), 10.0);
+    }
+
+    #[test]
+    fn percentile_survives_nan() {
+        // Regression: the old `partial_cmp().unwrap()` sort panicked on
+        // any NaN sample. Now NaN sorts last (IEEE total order) and
+        // finite quantiles stay meaningful.
+        let xs = vec![1.0, f64::NAN, 3.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        let mut s = Summary::new();
+        s.push(f64::NAN);
+        s.push(5.0);
+        let _ = s.display(); // must not panic
     }
 
     #[test]

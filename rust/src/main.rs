@@ -5,9 +5,16 @@
 //!   generate --prompt "..."      — one-shot generation
 //!   serve --listen HOST:PORT     — JSON-lines TCP inference server
 //!   bench-serve                  — offline throughput run over a trace
+//!   trace-check FILE.jsonl       — verify a flight-recorder trace's
+//!                                  conservation invariants
 //!
 //! Attention variant flags (all subcommands): --variant full|loki|topk|
 //! h2o|pcaattn, --kf FRAC, --df FRAC, --pca NAME.
+//!
+//! `--trace-out FILE.jsonl` (generate/serve/bench-serve) dumps the
+//! engine's flight recorder after the run: the JSONL event log plus a
+//! Chrome `trace_event` sibling (`FILE.chrome.json`) loadable in
+//! `chrome://tracing` / Perfetto.
 
 use std::sync::mpsc::channel;
 
@@ -34,9 +41,10 @@ fn main() -> Result<()> {
         "generate" => generate(&args),
         "serve" => serve(&args),
         "bench-serve" => bench_serve(&args),
+        "trace-check" => trace_check(&args),
         _ => {
             eprintln!(
-                "usage: repro <info|generate|serve|bench-serve> [options]\n\
+                "usage: repro <info|generate|serve|bench-serve|trace-check> [options]\n\
                  \n\
                  common options:\n\
                  \x20 --variant full|loki|topk|h2o|pcaattn   (default full)\n\
@@ -57,12 +65,17 @@ fn main() -> Result<()> {
                  \x20 --shed-policy off|strict|hedged         predictive early load shedding\n\
                  \x20 --shed-margin 0.1                       (hedged) shed only past this\n\
                  \x20                                         fraction over the deadline\n\
+                 \x20 --trace-out FILE.jsonl                  dump the flight recorder after\n\
+                 \x20                                         the run (+ FILE.chrome.json)\n\
                  generate: --prompt STR --max-tokens N --temperature T\n\
                  \x20         --priority interactive|batch --slo-ms MS\n\
-                 serve:    --listen 127.0.0.1:7077\n\
+                 serve:    --listen 127.0.0.1:7077   (scrape live metrics with a\n\
+                 \x20        {{\"stats\": true}} protocol line)\n\
                  bench-serve: --requests N --rate R --shared-prefix BYTES --batch-frac F\n\
                  \x20            --slo-ms MS (interactive SLO) --batch-slo-ms MS\n\
-                 \x20            --slo-jitter F (per-request SLO jitter fraction)"
+                 \x20            --slo-jitter F (per-request SLO jitter fraction)\n\
+                 trace-check: FILE.jsonl — exit non-zero if the trace violates\n\
+                 \x20            lifecycle conservation"
             );
             Ok(())
         }
@@ -161,6 +174,57 @@ fn slo_ms_arg(args: &Args, name: &str) -> Result<Option<f64>> {
     }
 }
 
+/// `--trace-out FILE.jsonl`: after the run, dump the engine's flight
+/// recorder as a JSONL event log plus a Chrome `trace_event` sibling.
+/// Absent flag → no files touched (tracing still ran in-memory).
+fn maybe_write_trace(args: &Args, metrics: &loki::coordinator::EngineMetrics) -> Result<()> {
+    if args.flag("trace-out") {
+        bail!("--trace-out needs a file path");
+    }
+    let Some(raw) = args.get("trace-out") else {
+        return Ok(());
+    };
+    let path = std::path::PathBuf::from(raw);
+    loki::obs::export::write_jsonl(&metrics.trace, &path)?;
+    let chrome = loki::obs::export::chrome_sibling(&path);
+    loki::obs::export::write_chrome(&metrics.trace, &chrome)?;
+    eprintln!(
+        "[trace] {} events ({} dropped) -> {} + {}",
+        metrics.trace.len(),
+        metrics.trace.dropped(),
+        path.display(),
+        chrome.display()
+    );
+    Ok(())
+}
+
+/// `repro trace-check FILE.jsonl` — parse a flight-recorder dump and
+/// verify its lifecycle conservation invariants (every admitted request
+/// reaches exactly one terminal; admitted = finished + shed + rejected +
+/// in-flight; no ring overwrites). Non-zero exit on violation, so CI
+/// can gate on it.
+fn trace_check(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .context("usage: repro trace-check FILE.jsonl")?;
+    let src = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+    let check = loki::obs::export::check_jsonl(&src)?;
+    println!(
+        "{path}: {} events | admitted {} = finished {} + shed {} + rejected {} + in-flight {}",
+        check.events, check.admitted, check.finished, check.shed, check.rejected, check.in_flight
+    );
+    if check.ok() {
+        println!("conservation: OK");
+        Ok(())
+    } else {
+        for v in &check.violations {
+            eprintln!("violation: {v}");
+        }
+        bail!("{} conservation violation(s)", check.violations.len());
+    }
+}
+
 fn info() -> Result<()> {
     let svc = RuntimeService::start(artifacts_dir()).context("starting runtime")?;
     let m = &svc.manifest;
@@ -241,6 +305,7 @@ fn generate(args: &Args) -> Result<()> {
     if args.flag("report") {
         println!("\n{}", metrics.report());
     }
+    maybe_write_trace(args, &metrics)?;
     Ok(())
 }
 
@@ -254,14 +319,20 @@ fn serve(args: &Args) -> Result<()> {
         max_tokens_cap: svc.manifest.model.max_len,
         ..Default::default()
     };
-    let engine = Engine::new(&svc, cfg.clone());
+    // Live metrics: the engine publishes a snapshot per scheduling
+    // round; the server answers `{"stats": true}` scrapes from it.
+    let hub = loki::obs::new_hub();
+    let engine = Engine::new(&svc, cfg.clone()).with_stats_hub(hub.clone());
     let (tx, rx) = Engine::channel(&cfg);
     let server_tx = tx.clone();
     let server = std::thread::spawn(move || {
-        loki::server::serve_cfg(&listen, server_tx, server_cfg).expect("server")
+        let listener = std::net::TcpListener::bind(&listen)
+            .unwrap_or_else(|e| panic!("bind {listen}: {e}"));
+        loki::server::serve_listener(listener, server_tx, server_cfg, Some(hub)).expect("server")
     });
     let metrics = engine.run(rx)?;
     println!("{}", metrics.report());
+    maybe_write_trace(args, &metrics)?;
     let _ = server.join();
     Ok(())
 }
@@ -311,5 +382,6 @@ fn bench_serve(args: &Args) -> Result<()> {
     let _ = submit.join();
     drop(results);
     println!("{}", metrics.report());
+    maybe_write_trace(args, &metrics)?;
     Ok(())
 }

@@ -1,0 +1,239 @@
+//! Structured trace events for the flight recorder.
+//!
+//! Every payload is plain-old-data (ids, counts, byte totals) so events
+//! are `Copy`, recording never allocates, and the JSONL/Chrome exporters
+//! can serialize without touching engine types. Request class is the
+//! priority index (`Priority::index()` — 0 interactive, 1 batch) and
+//! finish reasons are the `FinishCode` mirror of
+//! `coordinator::request::FinishReason`.
+
+/// Terminal outcome of a generation, mirrored from
+/// `coordinator::request::FinishReason` so `obs` stays a leaf module.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishCode {
+    MaxTokens,
+    StopToken,
+    CacheFull,
+    EngineShutdown,
+    Shed,
+}
+
+impl FinishCode {
+    pub fn name(self) -> &'static str {
+        match self {
+            FinishCode::MaxTokens => "max_tokens",
+            FinishCode::StopToken => "stop_token",
+            FinishCode::CacheFull => "cache_full",
+            FinishCode::EngineShutdown => "engine_shutdown",
+            FinishCode::Shed => "shed",
+        }
+    }
+}
+
+/// KV-pool lifecycle events, emitted by `kvpool::TableSet` /
+/// `kvpool::TieredKvPool` into a bounded `PoolEventLog` and drained by
+/// the engine into the flight recorder each scheduling round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolEvent {
+    /// A sequence was admitted with `blocks` physical blocks, `shared`
+    /// of which were prefix-cache hits (ref-count bumps, not copies).
+    Alloc { seq: u64, blocks: u32, shared: u32 },
+    /// A sequence released `blocks` table entries (physical frees
+    /// happen per-block as refcounts hit zero).
+    Free { seq: u64, blocks: u32 },
+    /// Mid-decode growth granted `blocks` new blocks (may be partial).
+    Grow { seq: u64, blocks: u32 },
+    /// Partial preemption truncated a tail: `freed` blocks returned,
+    /// `kept_blocks`/`kept_len` retained for cheap resume.
+    Truncate { seq: u64, freed: u32, kept_blocks: u32, kept_len: u32 },
+    /// Tiered pool gather touched `pages` non-resident pages, moving
+    /// `bytes` across the tier boundary (`TierStats::bytes_faulted`).
+    Fault { seq: u64, pages: u32, bytes: u64 },
+    /// Tier budget enforcement demoted `pages` hot pages to cold.
+    Demotion { pages: u32 },
+}
+
+impl PoolEvent {
+    pub fn name(self) -> &'static str {
+        match self {
+            PoolEvent::Alloc { .. } => "pool_alloc",
+            PoolEvent::Free { .. } => "pool_free",
+            PoolEvent::Grow { .. } => "pool_grow",
+            PoolEvent::Truncate { .. } => "pool_truncate",
+            PoolEvent::Fault { .. } => "pool_fault",
+            PoolEvent::Demotion { .. } => "tier_demotion",
+        }
+    }
+}
+
+/// What happened. Request lifecycle events carry the request id; the
+/// conservation invariants in `obs::export` are defined over them.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EventKind {
+    RequestAdmitted { id: u64, class: u8, prompt_len: u32, max_new: u32 },
+    RequestShed { id: u64, class: u8, predicted_ttft_ms: f64 },
+    RequestRejected { id: u64 },
+    PrefillStart { id: u64, lane: u32, tokens: u32 },
+    PrefillEnd { id: u64, lane: u32, tokens: u32 },
+    FirstToken { id: u64, ttft_steps: u64 },
+    PreemptFull { id: u64, lane: u32, freed_blocks: u32 },
+    PreemptPartial { id: u64, lane: u32, freed_blocks: u32, kept_len: u32 },
+    Resume { id: u64, lane: u32, recomputed_tokens: u32, kept_tokens: u32 },
+    Finish { id: u64, reason: FinishCode, tokens: u32 },
+    /// One per decode iteration: batch occupancy, backlog, pool
+    /// headroom, and the analytic score-path data movement of this step
+    /// (`attnsim::score_path_bytes` summed over busy lanes) against the
+    /// exact-attention baseline — the paper's reduced-data-movement
+    /// claim as a per-step observable.
+    SchedRound {
+        busy_lanes: u32,
+        queue_depth: u32,
+        free_blocks: u32,
+        score_bytes_moved: u64,
+        score_bytes_exact: u64,
+    },
+    Pool(PoolEvent),
+}
+
+impl EventKind {
+    /// Stable snake_case name used by the JSONL schema and the checker.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::RequestAdmitted { .. } => "request_admitted",
+            EventKind::RequestShed { .. } => "request_shed",
+            EventKind::RequestRejected { .. } => "request_rejected",
+            EventKind::PrefillStart { .. } => "prefill_start",
+            EventKind::PrefillEnd { .. } => "prefill_end",
+            EventKind::FirstToken { .. } => "first_token",
+            EventKind::PreemptFull { .. } => "preempt_full",
+            EventKind::PreemptPartial { .. } => "preempt_partial",
+            EventKind::Resume { .. } => "resume",
+            EventKind::Finish { .. } => "finish",
+            EventKind::SchedRound { .. } => "sched_round",
+            EventKind::Pool(p) => p.name(),
+        }
+    }
+
+    /// Request id for lifecycle events; `None` for engine/pool events.
+    pub fn request_id(&self) -> Option<u64> {
+        match *self {
+            EventKind::RequestAdmitted { id, .. }
+            | EventKind::RequestShed { id, .. }
+            | EventKind::RequestRejected { id }
+            | EventKind::PrefillStart { id, .. }
+            | EventKind::PrefillEnd { id, .. }
+            | EventKind::FirstToken { id, .. }
+            | EventKind::PreemptFull { id, .. }
+            | EventKind::PreemptPartial { id, .. }
+            | EventKind::Resume { id, .. }
+            | EventKind::Finish { id, .. } => Some(id),
+            EventKind::SchedRound { .. } | EventKind::Pool(_) => None,
+        }
+    }
+}
+
+/// A recorded event: monotone sequence number, clock timestamp
+/// (milliseconds — step-derived under `EngineClock::Steps`, wall
+/// elapsed under `Wall`), decode-step counter at record time, payload.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub seq: u64,
+    pub ts_ms: f64,
+    pub step: u64,
+    pub kind: EventKind,
+}
+
+/// Bounded side-channel for pool events. The KV tables have no clock
+/// and no recorder; they push here (preallocated, never reallocates)
+/// and the engine drains into the flight recorder, stamping timestamps.
+#[derive(Clone, Debug)]
+pub struct PoolEventLog {
+    buf: Vec<PoolEvent>,
+    cap: usize,
+    dropped: u64,
+}
+
+/// Events per scheduling round are bounded by gang size; 4096 between
+/// drains is generous.
+pub const POOL_EVENT_LOG_CAPACITY: usize = 4096;
+
+impl Default for PoolEventLog {
+    fn default() -> Self {
+        Self::with_capacity(POOL_EVENT_LOG_CAPACITY)
+    }
+}
+
+impl PoolEventLog {
+    pub fn with_capacity(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self { buf: Vec::with_capacity(cap), cap, dropped: 0 }
+    }
+
+    /// Record an event; silently counts drops past capacity (a full log
+    /// between drains means a drain cadence bug, not a reason to grow).
+    pub fn push(&mut self, ev: PoolEvent) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// Drain accumulated events in push order, keeping the allocation.
+    pub fn drain(&mut self) -> std::vec::Drain<'_, PoolEvent> {
+        self.buf.drain(..)
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_names_and_ids() {
+        let e = EventKind::RequestAdmitted { id: 7, class: 0, prompt_len: 3, max_new: 4 };
+        assert_eq!(e.name(), "request_admitted");
+        assert_eq!(e.request_id(), Some(7));
+        let s = EventKind::SchedRound {
+            busy_lanes: 1,
+            queue_depth: 0,
+            free_blocks: 9,
+            score_bytes_moved: 10,
+            score_bytes_exact: 20,
+        };
+        assert_eq!(s.name(), "sched_round");
+        assert_eq!(s.request_id(), None);
+        let p = EventKind::Pool(PoolEvent::Fault { seq: 1, pages: 2, bytes: 64 });
+        assert_eq!(p.name(), "pool_fault");
+        assert_eq!(p.request_id(), None);
+    }
+
+    #[test]
+    fn pool_log_bounded_and_drains_in_order() {
+        let mut log = PoolEventLog::with_capacity(2);
+        log.push(PoolEvent::Alloc { seq: 1, blocks: 2, shared: 0 });
+        log.push(PoolEvent::Free { seq: 1, blocks: 2 });
+        log.push(PoolEvent::Demotion { pages: 1 });
+        assert_eq!(log.len(), 2);
+        assert_eq!(log.dropped(), 1);
+        let evs: Vec<_> = log.drain().collect();
+        assert_eq!(evs[0], PoolEvent::Alloc { seq: 1, blocks: 2, shared: 0 });
+        assert_eq!(evs[1], PoolEvent::Free { seq: 1, blocks: 2 });
+        assert!(log.is_empty());
+        // Drain keeps capacity: the next push does not drop.
+        log.push(PoolEvent::Demotion { pages: 1 });
+        assert_eq!(log.dropped(), 1);
+    }
+}

@@ -1,0 +1,558 @@
+//! Trace export (JSONL + Chrome `trace_event`) and the conservation
+//! checker.
+//!
+//! JSONL schema: line 1 is a meta object
+//! `{"trace":"loki-flight-recorder","version":1,"events":…,
+//!   "recorded":…,"dropped":…}`, then one object per event with stable
+//! keys `seq`/`ts_ms`/`step`/`ev` plus the payload fields of that
+//! event kind (`obs::event`). Keys are emitted in sorted order by the
+//! writer, so identical traces serialize to identical bytes —
+//! `trace_hash` (FNV-1a over those bytes) is how the Steps-clock e2e
+//! fixture is pinned.
+//!
+//! The Chrome file (`chrome.load trace_event` JSON, open in
+//! `chrome://tracing` or Perfetto) renders one track per request
+//! (admission→terminal span, first-token/preempt/resume instants) and
+//! one per lane (prefill→finish/preempt residency spans).
+//!
+//! The **conservation checker** certifies a complete trace:
+//! * no ring drops (a truncated trace proves nothing),
+//! * every request id's first event is `request_admitted`, exactly one
+//!   terminal event (`finish`/`request_shed`/`request_rejected`)
+//!   arrives and nothing follows it,
+//! * at most one `first_token` per id, never more resumes than
+//!   preempts,
+//! * totals conserve: `admitted = finished + shed + rejected` (an id
+//!   still in flight is a violation for a drained engine run).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::event::{EventKind, PoolEvent, TraceEvent};
+use super::recorder::FlightRecorder;
+use crate::util::json::{self, Json};
+
+/// JSONL object for one event. Payload keys never collide with the
+/// envelope (`seq`/`ts_ms`/`step`/`ev`); pool sequence ids are
+/// `pool_seq`.
+pub fn event_json(ev: &TraceEvent) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("seq", json::num(ev.seq as f64)),
+        ("ts_ms", json::num(ev.ts_ms)),
+        ("step", json::num(ev.step as f64)),
+        ("ev", json::s(ev.kind.name())),
+    ];
+    match ev.kind {
+        EventKind::RequestAdmitted { id, class, prompt_len, max_new } => {
+            fields.push(("id", json::num(id as f64)));
+            fields.push(("class", json::num(class as f64)));
+            fields.push(("prompt_len", json::num(prompt_len as f64)));
+            fields.push(("max_new", json::num(max_new as f64)));
+        }
+        EventKind::RequestShed { id, class, predicted_ttft_ms } => {
+            fields.push(("id", json::num(id as f64)));
+            fields.push(("class", json::num(class as f64)));
+            fields.push(("predicted_ttft_ms", json::num(predicted_ttft_ms)));
+        }
+        EventKind::RequestRejected { id } => {
+            fields.push(("id", json::num(id as f64)));
+        }
+        EventKind::PrefillStart { id, lane, tokens } | EventKind::PrefillEnd { id, lane, tokens } => {
+            fields.push(("id", json::num(id as f64)));
+            fields.push(("lane", json::num(lane as f64)));
+            fields.push(("tokens", json::num(tokens as f64)));
+        }
+        EventKind::FirstToken { id, ttft_steps } => {
+            fields.push(("id", json::num(id as f64)));
+            fields.push(("ttft_steps", json::num(ttft_steps as f64)));
+        }
+        EventKind::PreemptFull { id, lane, freed_blocks } => {
+            fields.push(("id", json::num(id as f64)));
+            fields.push(("lane", json::num(lane as f64)));
+            fields.push(("freed_blocks", json::num(freed_blocks as f64)));
+        }
+        EventKind::PreemptPartial { id, lane, freed_blocks, kept_len } => {
+            fields.push(("id", json::num(id as f64)));
+            fields.push(("lane", json::num(lane as f64)));
+            fields.push(("freed_blocks", json::num(freed_blocks as f64)));
+            fields.push(("kept_len", json::num(kept_len as f64)));
+        }
+        EventKind::Resume { id, lane, recomputed_tokens, kept_tokens } => {
+            fields.push(("id", json::num(id as f64)));
+            fields.push(("lane", json::num(lane as f64)));
+            fields.push(("recomputed_tokens", json::num(recomputed_tokens as f64)));
+            fields.push(("kept_tokens", json::num(kept_tokens as f64)));
+        }
+        EventKind::Finish { id, reason, tokens } => {
+            fields.push(("id", json::num(id as f64)));
+            fields.push(("reason", json::s(reason.name())));
+            fields.push(("tokens", json::num(tokens as f64)));
+        }
+        EventKind::SchedRound {
+            busy_lanes,
+            queue_depth,
+            free_blocks,
+            score_bytes_moved,
+            score_bytes_exact,
+        } => {
+            fields.push(("busy_lanes", json::num(busy_lanes as f64)));
+            fields.push(("queue_depth", json::num(queue_depth as f64)));
+            fields.push(("free_blocks", json::num(free_blocks as f64)));
+            fields.push(("score_bytes_moved", json::num(score_bytes_moved as f64)));
+            fields.push(("score_bytes_exact", json::num(score_bytes_exact as f64)));
+        }
+        EventKind::Pool(p) => match p {
+            PoolEvent::Alloc { seq, blocks, shared } => {
+                fields.push(("pool_seq", json::num(seq as f64)));
+                fields.push(("blocks", json::num(blocks as f64)));
+                fields.push(("shared", json::num(shared as f64)));
+            }
+            PoolEvent::Free { seq, blocks } => {
+                fields.push(("pool_seq", json::num(seq as f64)));
+                fields.push(("blocks", json::num(blocks as f64)));
+            }
+            PoolEvent::Grow { seq, blocks } => {
+                fields.push(("pool_seq", json::num(seq as f64)));
+                fields.push(("blocks", json::num(blocks as f64)));
+            }
+            PoolEvent::Truncate { seq, freed, kept_blocks, kept_len } => {
+                fields.push(("pool_seq", json::num(seq as f64)));
+                fields.push(("freed", json::num(freed as f64)));
+                fields.push(("kept_blocks", json::num(kept_blocks as f64)));
+                fields.push(("kept_len", json::num(kept_len as f64)));
+            }
+            PoolEvent::Fault { seq, pages, bytes } => {
+                fields.push(("pool_seq", json::num(seq as f64)));
+                fields.push(("pages", json::num(pages as f64)));
+                fields.push(("bytes", json::num(bytes as f64)));
+            }
+            PoolEvent::Demotion { pages } => {
+                fields.push(("pages", json::num(pages as f64)));
+            }
+        },
+    }
+    json::obj(fields)
+}
+
+/// Serialize the recorder to JSONL (meta line + events, `\n`-separated,
+/// trailing newline). Byte-deterministic for a deterministic trace.
+pub fn trace_jsonl(rec: &FlightRecorder) -> String {
+    let meta = json::obj(vec![
+        ("trace", json::s("loki-flight-recorder")),
+        ("version", json::num(1.0)),
+        ("events", json::num(rec.len() as f64)),
+        ("recorded", json::num(rec.recorded() as f64)),
+        ("dropped", json::num(rec.dropped() as f64)),
+    ]);
+    let mut out = meta.to_string();
+    out.push('\n');
+    for ev in rec.iter() {
+        out.push_str(&event_json(ev).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// FNV-1a 64-bit over raw bytes — the fixture-pinning hash for
+/// deterministic Steps-clock traces.
+pub fn trace_hash(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Write the JSONL trace to `path`.
+pub fn write_jsonl(rec: &FlightRecorder, path: &Path) -> Result<()> {
+    std::fs::write(path, trace_jsonl(rec)).with_context(|| format!("write {}", path.display()))
+}
+
+/// Sibling path for the Chrome trace: `foo.jsonl` → `foo.chrome.json`.
+pub fn chrome_sibling(path: &Path) -> PathBuf {
+    let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("trace");
+    path.with_file_name(format!("{stem}.chrome.json"))
+}
+
+/// Chrome `trace_event` JSON: pid 1 = lane tracks (KV residency spans
+/// from prefill to finish/preempt), pid 2 = request tracks (admission →
+/// terminal span plus first-token / preempt / resume instants).
+pub fn chrome_trace(rec: &FlightRecorder) -> Json {
+    const PID_LANES: f64 = 1.0;
+    const PID_REQS: f64 = 2.0;
+    let us = |ms: f64| ms * 1000.0;
+    let mut events: Vec<Json> = vec![
+        json::obj(vec![
+            ("ph", json::s("M")),
+            ("name", json::s("process_name")),
+            ("pid", json::num(PID_LANES)),
+            ("args", json::obj(vec![("name", json::s("lanes"))])),
+        ]),
+        json::obj(vec![
+            ("ph", json::s("M")),
+            ("name", json::s("process_name")),
+            ("pid", json::num(PID_REQS)),
+            ("args", json::obj(vec![("name", json::s("requests"))])),
+        ]),
+    ];
+    let instant = |name: String, tid: f64, ts_ms: f64| {
+        json::obj(vec![
+            ("ph", json::s("i")),
+            ("s", json::s("t")),
+            ("name", json::s(&name)),
+            ("pid", json::num(PID_REQS)),
+            ("tid", json::num(tid)),
+            ("ts", json::num(us(ts_ms))),
+        ])
+    };
+    let span = |name: String, pid: f64, tid: f64, t0: f64, t1: f64, outcome: &str| {
+        json::obj(vec![
+            ("ph", json::s("X")),
+            ("name", json::s(&name)),
+            ("pid", json::num(pid)),
+            ("tid", json::num(tid)),
+            ("ts", json::num(us(t0))),
+            ("dur", json::num(us((t1 - t0).max(0.0)))),
+            ("args", json::obj(vec![("outcome", json::s(outcome))])),
+        ])
+    };
+    // id → admission timestamp; lane → (occupied-since, id); id → lane.
+    let mut admitted_at: HashMap<u64, f64> = HashMap::new();
+    let mut lane_busy: HashMap<u32, (f64, u64)> = HashMap::new();
+    let mut lane_of: HashMap<u64, u32> = HashMap::new();
+    let mut close_lane = |events: &mut Vec<Json>, lane: u32, ts: f64, outcome: &str| {
+        if let Some((t0, id)) = lane_busy.remove(&lane) {
+            events.push(span(format!("req {id}"), PID_LANES, lane as f64, t0, ts, outcome));
+        }
+    };
+    for ev in rec.iter() {
+        let ts = ev.ts_ms;
+        match ev.kind {
+            EventKind::RequestAdmitted { id, .. } => {
+                admitted_at.insert(id, ts);
+            }
+            EventKind::PrefillStart { id, lane, .. } => {
+                lane_busy.insert(lane, (ts, id));
+                lane_of.insert(id, lane);
+            }
+            EventKind::FirstToken { id, .. } => {
+                events.push(instant("first_token".into(), id as f64, ts));
+            }
+            EventKind::PreemptFull { id, lane, .. } => {
+                events.push(instant("preempt_full".into(), id as f64, ts));
+                close_lane(&mut events, lane, ts, "preempted");
+                lane_of.remove(&id);
+            }
+            EventKind::PreemptPartial { id, lane, .. } => {
+                events.push(instant("preempt_partial".into(), id as f64, ts));
+                close_lane(&mut events, lane, ts, "preempted");
+                lane_of.remove(&id);
+            }
+            EventKind::Resume { id, .. } => {
+                events.push(instant("resume".into(), id as f64, ts));
+            }
+            EventKind::Finish { id, reason, .. } => {
+                if let Some(t0) = admitted_at.remove(&id) {
+                    events.push(span(format!("req {id}"), PID_REQS, id as f64, t0, ts, reason.name()));
+                }
+                if let Some(lane) = lane_of.remove(&id) {
+                    close_lane(&mut events, lane, ts, "finished");
+                }
+            }
+            EventKind::RequestShed { id, .. } => {
+                if let Some(t0) = admitted_at.remove(&id) {
+                    events.push(span(format!("req {id}"), PID_REQS, id as f64, t0, ts, "shed"));
+                }
+            }
+            EventKind::RequestRejected { id } => {
+                if let Some(t0) = admitted_at.remove(&id) {
+                    events.push(span(format!("req {id}"), PID_REQS, id as f64, t0, ts, "rejected"));
+                }
+            }
+            _ => {}
+        }
+    }
+    json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", json::s("ms")),
+    ])
+}
+
+/// Write the Chrome trace next to the JSONL.
+pub fn write_chrome(rec: &FlightRecorder, path: &Path) -> Result<()> {
+    std::fs::write(path, chrome_trace(rec).to_string())
+        .with_context(|| format!("write {}", path.display()))
+}
+
+/// Checker result: lifecycle totals plus every invariant violation
+/// found (empty `violations` ⇒ the trace conserves).
+#[derive(Debug, Default)]
+pub struct TraceCheck {
+    pub events: usize,
+    pub admitted: u64,
+    pub finished: u64,
+    pub shed: u64,
+    pub rejected: u64,
+    pub in_flight: u64,
+    pub violations: Vec<String>,
+}
+
+impl TraceCheck {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+#[derive(Default)]
+struct IdState {
+    first_tokens: u32,
+    preempts: u32,
+    resumes: u32,
+    terminal: Option<&'static str>,
+}
+
+fn terminal_of(name: &str) -> Option<&'static str> {
+    match name {
+        "finish" => Some("finish"),
+        "request_shed" => Some("request_shed"),
+        "request_rejected" => Some("request_rejected"),
+        _ => None,
+    }
+}
+
+/// Core invariant check over `(event_name, request_id)` pairs in trace
+/// order. Shared by the in-memory and JSONL paths so both certify the
+/// same contract.
+fn check_stream<S, I>(items: I, dropped: u64) -> TraceCheck
+where
+    S: AsRef<str>,
+    I: IntoIterator<Item = (S, Option<u64>)>,
+{
+    let mut out = TraceCheck::default();
+    if dropped > 0 {
+        out.violations
+            .push(format!("{dropped} events lost to ring overwrite; trace is not conservable"));
+    }
+    let mut ids: HashMap<u64, IdState> = HashMap::new();
+    for (name, id) in items {
+        out.events += 1;
+        let name = name.as_ref();
+        let Some(id) = id else { continue };
+        if name == "request_admitted" {
+            if ids.insert(id, IdState::default()).is_some() {
+                out.violations.push(format!("id {id}: duplicate request_admitted"));
+            }
+            continue;
+        }
+        let Some(st) = ids.get_mut(&id) else {
+            out.violations.push(format!("id {id}: {name} before request_admitted"));
+            continue;
+        };
+        if let Some(t) = st.terminal {
+            out.violations.push(format!("id {id}: {name} after terminal {t}"));
+            continue;
+        }
+        match name {
+            "first_token" => {
+                st.first_tokens += 1;
+                if st.first_tokens > 1 {
+                    out.violations.push(format!("id {id}: more than one first_token"));
+                }
+            }
+            "preempt_full" | "preempt_partial" => st.preempts += 1,
+            "resume" => {
+                st.resumes += 1;
+                if st.resumes > st.preempts {
+                    out.violations.push(format!("id {id}: resume without matching preempt"));
+                }
+            }
+            _ => {}
+        }
+        if let Some(t) = terminal_of(name) {
+            st.terminal = Some(t);
+        }
+    }
+    out.admitted = ids.len() as u64;
+    for (id, st) in &ids {
+        match st.terminal {
+            Some("finish") => out.finished += 1,
+            Some("request_shed") => out.shed += 1,
+            Some("request_rejected") => out.rejected += 1,
+            _ => {
+                out.in_flight += 1;
+                out.violations.push(format!("id {id}: no terminal event"));
+            }
+        }
+    }
+    if out.admitted != out.finished + out.shed + out.rejected + out.in_flight {
+        out.violations.push(format!(
+            "conservation broken: admitted {} != finished {} + shed {} + rejected {} + in-flight {}",
+            out.admitted, out.finished, out.shed, out.rejected, out.in_flight
+        ));
+    }
+    out
+}
+
+/// Check a live recorder in memory.
+pub fn check_recorder(rec: &FlightRecorder) -> TraceCheck {
+    check_stream(
+        rec.iter().map(|e| (e.kind.name(), e.kind.request_id())),
+        rec.dropped(),
+    )
+}
+
+/// Check a serialized JSONL trace (meta line + events). Also verifies
+/// the meta line is present and event `seq` is strictly increasing.
+pub fn check_jsonl(src: &str) -> Result<TraceCheck> {
+    let mut lines = src.lines().filter(|l| !l.trim().is_empty());
+    let meta_line = lines.next().context("empty trace file")?;
+    let meta = Json::parse(meta_line).map_err(|e| anyhow::anyhow!("bad meta line: {e}"))?;
+    if meta.get("trace").and_then(|t| t.as_str()) != Some("loki-flight-recorder") {
+        anyhow::bail!("not a flight-recorder trace (missing meta line)");
+    }
+    let dropped = meta.get("dropped").and_then(|d| d.as_f64()).unwrap_or(0.0) as u64;
+    let mut items: Vec<(String, Option<u64>)> = Vec::new();
+    let mut last_seq: Option<u64> = None;
+    for (i, line) in lines.enumerate() {
+        let v = Json::parse(line).map_err(|e| anyhow::anyhow!("line {}: {e}", i + 2))?;
+        let name = v
+            .get("ev")
+            .and_then(|e| e.as_str())
+            .with_context(|| format!("line {}: missing \"ev\"", i + 2))?
+            .to_string();
+        let seq = v
+            .get("seq")
+            .and_then(|s| s.as_f64())
+            .with_context(|| format!("line {}: missing \"seq\"", i + 2))? as u64;
+        if let Some(prev) = last_seq {
+            if seq <= prev {
+                anyhow::bail!("line {}: seq {} not after {}", i + 2, seq, prev);
+            }
+        }
+        last_seq = Some(seq);
+        let id = v.get("id").and_then(|x| x.as_f64()).map(|x| x as u64);
+        items.push((name, id));
+    }
+    Ok(check_stream(items, dropped))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::FinishCode;
+
+    fn rec_with(evs: &[EventKind]) -> FlightRecorder {
+        let mut r = FlightRecorder::with_capacity(64);
+        for (i, k) in evs.iter().enumerate() {
+            r.record(i as f64, i as u64, *k);
+        }
+        r
+    }
+
+    fn admit(id: u64) -> EventKind {
+        EventKind::RequestAdmitted { id, class: 0, prompt_len: 4, max_new: 2 }
+    }
+
+    fn finish(id: u64) -> EventKind {
+        EventKind::Finish { id, reason: FinishCode::MaxTokens, tokens: 2 }
+    }
+
+    #[test]
+    fn clean_lifecycle_conserves() {
+        let r = rec_with(&[
+            admit(1),
+            admit(2),
+            EventKind::PrefillStart { id: 1, lane: 0, tokens: 4 },
+            EventKind::PrefillEnd { id: 1, lane: 0, tokens: 4 },
+            EventKind::FirstToken { id: 1, ttft_steps: 1 },
+            EventKind::PreemptPartial { id: 1, lane: 0, freed_blocks: 2, kept_len: 4 },
+            EventKind::Resume { id: 1, lane: 0, recomputed_tokens: 0, kept_tokens: 4 },
+            finish(1),
+            EventKind::RequestShed { id: 2, class: 0, predicted_ttft_ms: 99.0 },
+        ]);
+        let chk = check_recorder(&r);
+        assert!(chk.ok(), "{:?}", chk.violations);
+        assert_eq!((chk.admitted, chk.finished, chk.shed, chk.rejected), (2, 1, 1, 0));
+    }
+
+    #[test]
+    fn violations_are_caught() {
+        // Event before admit.
+        let chk = check_recorder(&rec_with(&[finish(5)]));
+        assert!(chk.violations.iter().any(|v| v.contains("before request_admitted")));
+        // Double terminal.
+        let chk = check_recorder(&rec_with(&[admit(1), finish(1), finish(1)]));
+        assert!(chk.violations.iter().any(|v| v.contains("after terminal")));
+        // No terminal.
+        let chk = check_recorder(&rec_with(&[admit(1)]));
+        assert!(chk.violations.iter().any(|v| v.contains("no terminal")));
+        assert_eq!(chk.in_flight, 1);
+        // Resume without preempt.
+        let chk = check_recorder(&rec_with(&[
+            admit(1),
+            EventKind::Resume { id: 1, lane: 0, recomputed_tokens: 1, kept_tokens: 0 },
+            finish(1),
+        ]));
+        assert!(chk.violations.iter().any(|v| v.contains("resume without")));
+        // Ring drops disqualify the trace.
+        let mut r = FlightRecorder::with_capacity(1);
+        r.record(0.0, 0, admit(1));
+        r.record(1.0, 0, finish(1));
+        assert!(!check_recorder(&r).ok());
+    }
+
+    #[test]
+    fn jsonl_roundtrip_matches_in_memory_check() {
+        let r = rec_with(&[admit(1), finish(1), admit(2), EventKind::RequestRejected { id: 2 }]);
+        let text = trace_jsonl(&r);
+        let from_text = check_jsonl(&text).unwrap();
+        let from_mem = check_recorder(&r);
+        assert!(from_text.ok() && from_mem.ok());
+        assert_eq!(from_text.admitted, from_mem.admitted);
+        assert_eq!(from_text.finished, from_mem.finished);
+        assert_eq!(from_text.rejected, from_mem.rejected);
+        // Serialization is deterministic: same recorder, same bytes.
+        assert_eq!(trace_hash(text.as_bytes()), trace_hash(trace_jsonl(&r).as_bytes()));
+    }
+
+    #[test]
+    fn jsonl_rejects_garbage() {
+        assert!(check_jsonl("").is_err());
+        assert!(check_jsonl("{\"not\":\"a trace\"}\n").is_err());
+    }
+
+    #[test]
+    fn chrome_trace_has_tracks() {
+        let r = rec_with(&[
+            admit(1),
+            EventKind::PrefillStart { id: 1, lane: 0, tokens: 4 },
+            EventKind::PrefillEnd { id: 1, lane: 0, tokens: 4 },
+            EventKind::FirstToken { id: 1, ttft_steps: 1 },
+            finish(1),
+        ]);
+        let j = chrome_trace(&r);
+        let evs = j.req("traceEvents").as_arr().unwrap();
+        // 2 process_name metas + lane span + request span + instant.
+        assert!(evs.len() >= 5, "{}", j.to_string());
+        let round = Json::parse(&j.to_string()).unwrap();
+        assert!(round.get("traceEvents").is_some());
+        assert!(evs.iter().any(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X")));
+    }
+
+    #[test]
+    fn chrome_sibling_path() {
+        assert_eq!(
+            chrome_sibling(Path::new("/tmp/e2e-trace.jsonl")),
+            PathBuf::from("/tmp/e2e-trace.chrome.json")
+        );
+    }
+
+    #[test]
+    fn fnv_hash_is_stable() {
+        assert_eq!(trace_hash(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(trace_hash(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

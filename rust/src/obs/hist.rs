@@ -1,0 +1,272 @@
+//! Streaming log-bucketed histogram: constant-memory percentiles for
+//! the engine's metrics hot paths.
+//!
+//! `linalg::stats::Summary` keeps every sample in a `Vec` — exact, but
+//! unbounded: a serving engine that runs for days grows its latency
+//! summaries without limit. `StreamingHist` replaces it in
+//! `EngineMetrics`/`ClassMetrics` with a fixed array of geometric
+//! buckets (`BUCKETS_PER_OCTAVE` per power of two, spanning
+//! `MIN_TRACKED..` up to ~1.8e10) plus exact running `count/sum/sumsq/
+//! min/max`. Consequences:
+//!
+//! * `mean()` and `sum()` are **bit-identical** to `Summary` — same
+//!   left-to-right f64 accumulation in push order. Deterministic bench
+//!   outputs that report means (e.g. the e2e smoke JSON) do not move.
+//! * `percentile(p)` is approximate: the geometric midpoint of the
+//!   bucket holding the rank-`p` sample, clamped to `[min, max]`. The
+//!   relative error is at most one bucket width (`2^(1/4)` ≈ 19%),
+//!   which is the resolution contract tested against exact `Summary`
+//!   percentiles in `rust/tests/obs_trace.rs`.
+//! * Non-positive, sub-`MIN_TRACKED`, and NaN samples land in a
+//!   dedicated underflow bucket; their percentile representative is
+//!   `min` (exact running min ignores NaN).
+//!
+//! The experiment harnesses keep using `Summary` where exact order
+//! statistics matter; this type is for long-lived serving metrics.
+
+/// Geometric bucket resolution: 4 buckets per octave → relative bucket
+/// width `2^(1/4)` ≈ 1.19.
+pub const BUCKETS_PER_OCTAVE: usize = 4;
+
+/// Smallest positively-tracked value; anything at or below it (and any
+/// NaN) counts in the underflow bucket. 1 ns when the unit is seconds.
+pub const MIN_TRACKED: f64 = 1e-9;
+
+/// 64 octaves above `MIN_TRACKED` ≈ 1.8e10 — wide enough for seconds,
+/// milliseconds, steps, and occupancy fractions alike.
+const OCTAVES: usize = 64;
+const NBUCKETS: usize = OCTAVES * BUCKETS_PER_OCTAVE;
+
+/// Bucket index for a value, or `None` for the underflow bucket.
+fn bucket_index(v: f64) -> Option<usize> {
+    // `!(v > MIN_TRACKED)` is deliberately NaN-inclusive.
+    if !(v > MIN_TRACKED) {
+        return None;
+    }
+    let idx = ((v / MIN_TRACKED).log2() * BUCKETS_PER_OCTAVE as f64).floor() as isize;
+    Some(idx.clamp(0, NBUCKETS as isize - 1) as usize)
+}
+
+/// Lower edge of bucket `i`.
+fn bucket_lo(i: usize) -> f64 {
+    MIN_TRACKED * 2f64.powf(i as f64 / BUCKETS_PER_OCTAVE as f64)
+}
+
+/// Constant-memory p50/p95/p99/max summary. API mirrors
+/// `linalg::stats::Summary` so metrics call sites swap types without
+/// churn.
+#[derive(Clone, Debug)]
+pub struct StreamingHist {
+    count: u64,
+    sum: f64,
+    sumsq: f64,
+    min: f64,
+    max: f64,
+    under: u64,
+    buckets: Vec<u64>,
+}
+
+impl Default for StreamingHist {
+    fn default() -> Self {
+        Self {
+            count: 0,
+            sum: 0.0,
+            sumsq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            under: 0,
+            buckets: vec![0; NBUCKETS],
+        }
+    }
+}
+
+impl StreamingHist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.sumsq += v * v;
+        // f64::min/max skip NaN operands, so a NaN sample cannot poison
+        // the exact extrema (it still counts toward `count`/underflow).
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        match bucket_index(v) {
+            None => self.under += 1,
+            Some(i) => self.buckets[i] += 1,
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.count as usize
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        if self.count < 2 {
+            return 0.0;
+        }
+        let n = self.count as f64;
+        let var = (self.sumsq - self.sum * self.sum / n) / (n - 1.0);
+        var.max(0.0).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Approximate percentile (p in [0, 100]): geometric midpoint of
+    /// the bucket holding the nearest-rank sample, clamped to the exact
+    /// `[min, max]` so p0/p100 and one-bucket histograms stay tight.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let p = p.clamp(0.0, 100.0);
+        if p <= 0.0 {
+            return self.min;
+        }
+        if p >= 100.0 {
+            return self.max;
+        }
+        let target = ((p / 100.0) * (self.count - 1) as f64).round() as u64;
+        let mut cum = self.under;
+        if target < cum {
+            return self.min;
+        }
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if target < cum {
+                let lo = bucket_lo(i);
+                let hi = bucket_lo(i + 1);
+                return (lo * hi).sqrt().clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Same rendering contract as `Summary::display`.
+    pub fn display(&self) -> String {
+        format!(
+            "{:.3} ± {:.3} [p50 {:.3}, p95 {:.3}, p99 {:.3}] n={}",
+            self.mean(),
+            self.std_dev(),
+            self.percentile(50.0),
+            self.percentile(95.0),
+            self.percentile(99.0),
+            self.count()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::stats::Summary;
+
+    #[test]
+    fn mean_sum_bit_identical_to_summary() {
+        let mut h = StreamingHist::new();
+        let mut s = Summary::new();
+        let mut x = 0.317f64;
+        for _ in 0..500 {
+            x = (x * 1.7 + 0.13) % 5.0;
+            h.push(x);
+            s.push(x);
+        }
+        // Same push order, same left-to-right accumulation: exact.
+        assert_eq!(h.sum(), s.sum());
+        assert_eq!(h.mean(), s.mean());
+        assert_eq!(h.count(), s.count());
+        assert_eq!(h.min(), s.min());
+        assert_eq!(h.max(), s.max());
+    }
+
+    #[test]
+    fn empty_hist_is_quiet() {
+        let h = StreamingHist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.std_dev(), 0.0);
+    }
+
+    #[test]
+    fn percentile_single_value_is_exact() {
+        let mut h = StreamingHist::new();
+        h.push(0.042);
+        for p in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            // min==max clamp collapses the bucket midpoint to the value.
+            assert_eq!(h.percentile(p), 0.042);
+        }
+    }
+
+    #[test]
+    fn percentile_within_one_bucket_of_exact() {
+        let mut h = StreamingHist::new();
+        let mut s = Summary::new();
+        let mut seed = 0x9e3779b97f4a7c15u64;
+        for _ in 0..2000 {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let u = (seed >> 11) as f64 / (1u64 << 53) as f64;
+            // Log-uniform over ~6 decades: stresses many buckets.
+            let v = 10f64.powf(-4.0 + 6.0 * u);
+            h.push(v);
+            s.push(v);
+        }
+        let width = 2f64.powf(1.0 / BUCKETS_PER_OCTAVE as f64);
+        for p in [50.0, 95.0, 99.0] {
+            let approx = h.percentile(p);
+            let exact = s.percentile(p);
+            let ratio = approx / exact;
+            assert!(
+                ratio < width * 1.01 && ratio > 1.0 / (width * 1.01),
+                "p{p}: approx {approx} vs exact {exact} (ratio {ratio})"
+            );
+        }
+        assert_eq!(h.percentile(0.0), s.min());
+        assert_eq!(h.percentile(100.0), s.max());
+    }
+
+    #[test]
+    fn underflow_and_nan_count_but_do_not_poison() {
+        let mut h = StreamingHist::new();
+        h.push(0.0);
+        h.push(-1.0);
+        h.push(f64::NAN);
+        h.push(2.0);
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.min(), -1.0);
+        assert_eq!(h.max(), 2.0);
+        // Underflow representative is the exact min.
+        assert_eq!(h.percentile(10.0), -1.0);
+        assert_eq!(h.percentile(100.0), 2.0);
+    }
+
+    #[test]
+    fn display_format_matches_summary_contract() {
+        let mut h = StreamingHist::new();
+        h.push(1.0);
+        h.push(1.0);
+        let d = h.display();
+        assert!(d.starts_with("1.000 ± 0.000 [p50 "), "{d}");
+        assert!(d.ends_with("n=2"), "{d}");
+    }
+}

@@ -1,0 +1,37 @@
+//! Observability: flight-recorder tracing, streaming histograms, and
+//! live metrics exposition for the serving engine.
+//!
+//! Loki's headline claim is a speedup from *reduced data movement* in
+//! the attention score path; end-of-run aggregates can't show where a
+//! request's TTFT went or what the KV pool did step by step. This
+//! module is the trace substrate:
+//!
+//! * [`recorder::FlightRecorder`] — bounded ring of structured
+//!   [`event::TraceEvent`]s, default-on inside `EngineMetrics`,
+//!   zero-allocation-per-event at steady state. Timestamps route
+//!   through `EngineClock`, so traces are bit-deterministic under
+//!   `SimRuntime`/`Steps` and wall-clocked in serving.
+//! * [`hist::StreamingHist`] — constant-memory log-bucketed
+//!   histograms replacing `Vec`-backed `Summary` in the metrics hot
+//!   paths (exact mean/sum, percentiles within one bucket width).
+//! * [`export`] — JSONL + Chrome `trace_event` writers
+//!   (`--trace-out`), the FNV-1a fixture hash, and the conservation
+//!   checker (`repro trace-check`) that certifies every admitted id
+//!   reaches exactly one terminal event.
+//! * [`snapshot`] — `StatsSnapshot`/`StatsHub` published by the engine
+//!   each scheduling round and served by the `"stats"` protocol
+//!   command as JSON + Prometheus text.
+//!
+//! `obs` is a leaf module: event payloads are plain-old-data, so
+//! `kvpool` and `coordinator` can emit events without cyclic coupling.
+
+pub mod event;
+pub mod export;
+pub mod hist;
+pub mod recorder;
+pub mod snapshot;
+
+pub use event::{EventKind, FinishCode, PoolEvent, PoolEventLog, TraceEvent};
+pub use hist::StreamingHist;
+pub use recorder::{FlightRecorder, DEFAULT_TRACE_CAPACITY};
+pub use snapshot::{new_hub, ClassSnap, HistSnap, StatsHub, StatsSnapshot};

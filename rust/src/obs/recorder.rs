@@ -1,0 +1,129 @@
+//! Flight recorder: a bounded ring buffer of `TraceEvent`s.
+//!
+//! Default-on and cheap enough to leave on: recording is one enum store
+//! into a `Vec` that grows lazily up to `DEFAULT_TRACE_CAPACITY` and
+//! then overwrites in ring order — **zero allocations per event at
+//! steady state**. When the ring wraps, the oldest events are lost and
+//! `dropped()` counts them; the conservation checker refuses to certify
+//! a truncated trace, so tests and CI size the buffer (or the run) to
+//! fit.
+
+use super::event::{EventKind, TraceEvent};
+
+/// Default ring capacity (events). At ~56 bytes/event this is ~1 MB
+/// fully grown — enough for the entire e2e scenario suite without a
+/// single drop.
+pub const DEFAULT_TRACE_CAPACITY: usize = 16_384;
+
+#[derive(Clone, Debug)]
+pub struct FlightRecorder {
+    buf: Vec<TraceEvent>,
+    cap: usize,
+    /// Next overwrite position once `buf.len() == cap`.
+    head: usize,
+    /// Total events ever recorded == next sequence number.
+    seq: u64,
+    dropped: u64,
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_TRACE_CAPACITY)
+    }
+}
+
+impl FlightRecorder {
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { buf: Vec::new(), cap: cap.max(1), head: 0, seq: 0, dropped: 0 }
+    }
+
+    /// Record one event. The caller supplies the timestamp so the clock
+    /// policy (Steps vs Wall) lives with the engine, not here.
+    pub fn record(&mut self, ts_ms: f64, step: u64, kind: EventKind) {
+        let ev = TraceEvent { seq: self.seq, ts_ms, step, kind };
+        self.seq += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Total events ever recorded, including overwritten ones.
+    pub fn recorded(&self) -> u64 {
+        self.seq
+    }
+
+    /// Events lost to ring overwrite.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Iterate surviving events in sequence order (oldest first).
+    pub fn iter(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.buf[self.head..].iter().chain(self.buf[..self.head].iter())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(id: u64) -> EventKind {
+        EventKind::RequestRejected { id }
+    }
+
+    #[test]
+    fn records_in_order_below_capacity() {
+        let mut r = FlightRecorder::with_capacity(8);
+        for i in 0..5 {
+            r.record(i as f64, i, ev(i));
+        }
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.recorded(), 5);
+        assert_eq!(r.dropped(), 0);
+        let seqs: Vec<u64> = r.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let mut r = FlightRecorder::with_capacity(4);
+        for i in 0..10 {
+            r.record(i as f64, i, ev(i));
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.recorded(), 10);
+        assert_eq!(r.dropped(), 6);
+        // Survivors are the last 4, still in sequence order.
+        let seqs: Vec<u64> = r.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+        for (e, want) in r.iter().zip([6u64, 7, 8, 9]) {
+            assert_eq!(e.kind, ev(want));
+        }
+    }
+
+    #[test]
+    fn capacity_floor_is_one() {
+        let mut r = FlightRecorder::with_capacity(0);
+        r.record(0.0, 0, ev(0));
+        r.record(1.0, 0, ev(1));
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.iter().next().unwrap().seq, 1);
+    }
+}

@@ -1,0 +1,256 @@
+//! Live metrics snapshot + exposition formats.
+//!
+//! The engine publishes a `StatsSnapshot` into a shared `StatsHub`
+//! (mutex-wrapped `Option`) once per scheduling round; the server's
+//! `"stats"` protocol command reads the latest one and renders it as
+//! JSON plus a Prometheus-style text exposition. The snapshot is a flat
+//! plain-old-data struct built by `EngineMetrics::snapshot`, so taking
+//! it never blocks the scheduler on I/O and readers never see a
+//! half-updated state.
+
+use std::sync::{Arc, Mutex};
+
+use super::hist::StreamingHist;
+use crate::util::json::{self, Json};
+
+/// Compact view of one histogram for exposition.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HistSnap {
+    pub count: u64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl HistSnap {
+    pub fn of(h: &StreamingHist) -> Self {
+        Self {
+            count: h.count() as u64,
+            mean: h.mean(),
+            p50: h.percentile(50.0),
+            p95: h.percentile(95.0),
+            p99: h.percentile(99.0),
+            max: if h.count() == 0 { 0.0 } else { h.max() },
+        }
+    }
+
+    fn to_json(self) -> Json {
+        json::obj(vec![
+            ("count", json::num(self.count as f64)),
+            ("mean", json::num(self.mean)),
+            ("p50", json::num(self.p50)),
+            ("p95", json::num(self.p95)),
+            ("p99", json::num(self.p99)),
+            ("max", json::num(self.max)),
+        ])
+    }
+}
+
+/// Per-class (interactive/batch) counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClassSnap {
+    pub done: u64,
+    pub preemptions: u64,
+    pub shed: u64,
+    pub deadline_hits: u64,
+    pub deadline_misses: u64,
+    pub ttft: HistSnap,
+}
+
+/// One engine-wide metrics snapshot, published per scheduling round.
+#[derive(Clone, Debug, Default)]
+pub struct StatsSnapshot {
+    pub uptime_s: f64,
+    pub throughput_tok_s: f64,
+    pub requests_in: u64,
+    pub requests_done: u64,
+    pub requests_rejected: u64,
+    pub requests_shed: u64,
+    pub tokens_generated: u64,
+    pub prefills: u64,
+    pub decode_steps: u64,
+    pub preemptions: u64,
+    pub resumes: u64,
+    pub queue_depth: u64,
+    pub busy_lanes: u64,
+    pub pool_blocks_total: u64,
+    pub pool_blocks_in_use: u64,
+    pub pool_blocks_peak: u64,
+    pub goodput_tok_per_step: f64,
+    pub wasted_work_tokens: u64,
+    pub ttft: HistSnap,
+    pub e2e: HistSnap,
+    pub queue_wait: HistSnap,
+    pub decode_step: HistSnap,
+    pub trace_recorded: u64,
+    pub trace_dropped: u64,
+    pub classes: [ClassSnap; 2],
+}
+
+/// Shared slot the engine writes and the server reads. `None` until the
+/// engine's first scheduling round.
+pub type StatsHub = Arc<Mutex<Option<StatsSnapshot>>>;
+
+pub fn new_hub() -> StatsHub {
+    Arc::new(Mutex::new(None))
+}
+
+const CLASS_NAMES: [&str; 2] = ["interactive", "batch"];
+
+impl StatsSnapshot {
+    /// Structured JSON form (the `"stats"` reply body).
+    pub fn to_json(&self) -> Json {
+        let classes = (0..2).map(|i| {
+            let c = &self.classes[i];
+            json::obj(vec![
+                ("class", json::s(CLASS_NAMES[i])),
+                ("done", json::num(c.done as f64)),
+                ("preemptions", json::num(c.preemptions as f64)),
+                ("shed", json::num(c.shed as f64)),
+                ("deadline_hits", json::num(c.deadline_hits as f64)),
+                ("deadline_misses", json::num(c.deadline_misses as f64)),
+                ("ttft_s", c.ttft.to_json()),
+            ])
+        });
+        json::obj(vec![
+            ("uptime_s", json::num(self.uptime_s)),
+            ("throughput_tok_s", json::num(self.throughput_tok_s)),
+            ("requests_in", json::num(self.requests_in as f64)),
+            ("requests_done", json::num(self.requests_done as f64)),
+            ("requests_rejected", json::num(self.requests_rejected as f64)),
+            ("requests_shed", json::num(self.requests_shed as f64)),
+            ("tokens_generated", json::num(self.tokens_generated as f64)),
+            ("prefills", json::num(self.prefills as f64)),
+            ("decode_steps", json::num(self.decode_steps as f64)),
+            ("preemptions", json::num(self.preemptions as f64)),
+            ("resumes", json::num(self.resumes as f64)),
+            ("queue_depth", json::num(self.queue_depth as f64)),
+            ("busy_lanes", json::num(self.busy_lanes as f64)),
+            ("pool_blocks_total", json::num(self.pool_blocks_total as f64)),
+            ("pool_blocks_in_use", json::num(self.pool_blocks_in_use as f64)),
+            ("pool_blocks_peak", json::num(self.pool_blocks_peak as f64)),
+            ("goodput_tok_per_step", json::num(self.goodput_tok_per_step)),
+            ("wasted_work_tokens", json::num(self.wasted_work_tokens as f64)),
+            ("ttft_s", self.ttft.to_json()),
+            ("e2e_s", self.e2e.to_json()),
+            ("queue_wait_s", self.queue_wait.to_json()),
+            ("decode_step_s", self.decode_step.to_json()),
+            ("trace_recorded", json::num(self.trace_recorded as f64)),
+            ("trace_dropped", json::num(self.trace_dropped as f64)),
+            ("classes", Json::Arr(classes.collect())),
+        ])
+    }
+
+    /// Prometheus text exposition (counters + gauges + summary
+    /// quantiles), scrapable via the `"stats"` command's `"prom"` field.
+    pub fn prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let mut counter = |name: &str, help: &str, v: f64| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        };
+        counter("loki_requests_total", "Requests admitted to the engine queue.", self.requests_in as f64);
+        counter("loki_requests_done_total", "Requests completed.", self.requests_done as f64);
+        counter("loki_requests_rejected_total", "Requests rejected (cache full).", self.requests_rejected as f64);
+        counter("loki_requests_shed_total", "Requests shed by predictive admission.", self.requests_shed as f64);
+        counter("loki_tokens_generated_total", "Decode tokens produced.", self.tokens_generated as f64);
+        counter("loki_prefills_total", "Prefill calls.", self.prefills as f64);
+        counter("loki_decode_steps_total", "Decode iterations.", self.decode_steps as f64);
+        counter("loki_preemptions_total", "Lane preemptions.", self.preemptions as f64);
+        counter("loki_resumes_total", "Preempted requests resumed.", self.resumes as f64);
+        counter("loki_wasted_work_tokens_total", "Missed-deadline plus recomputed tokens.", self.wasted_work_tokens as f64);
+        counter("loki_trace_events_total", "Flight-recorder events recorded.", self.trace_recorded as f64);
+        counter("loki_trace_dropped_total", "Flight-recorder events lost to ring overwrite.", self.trace_dropped as f64);
+        let mut gauge = |name: &str, help: &str, v: f64| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {v}");
+        };
+        gauge("loki_uptime_seconds", "Engine uptime (clock-routed: steps under the deterministic twin).", self.uptime_s);
+        gauge("loki_throughput_tokens_per_second", "Tokens per second of uptime.", self.throughput_tok_s);
+        gauge("loki_queue_depth", "Pending requests.", self.queue_depth as f64);
+        gauge("loki_busy_lanes", "Lanes currently decoding.", self.busy_lanes as f64);
+        gauge("loki_pool_blocks_in_use", "KV pool blocks in use.", self.pool_blocks_in_use as f64);
+        gauge("loki_pool_blocks_total", "KV pool capacity in blocks.", self.pool_blocks_total as f64);
+        gauge("loki_goodput_tokens_per_step", "Deadline-hit tokens per decode step.", self.goodput_tok_per_step);
+        let mut summary = |name: &str, help: &str, h: &HistSnap| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} summary");
+            let _ = writeln!(out, "{name}{{quantile=\"0.5\"}} {}", h.p50);
+            let _ = writeln!(out, "{name}{{quantile=\"0.95\"}} {}", h.p95);
+            let _ = writeln!(out, "{name}{{quantile=\"0.99\"}} {}", h.p99);
+            let _ = writeln!(out, "{name}_sum {}", h.mean * h.count as f64);
+            let _ = writeln!(out, "{name}_count {}", h.count);
+        };
+        summary("loki_ttft_seconds", "Time to first token.", &self.ttft);
+        summary("loki_e2e_seconds", "End-to-end request latency.", &self.e2e);
+        summary("loki_queue_wait_seconds", "Queue wait before admission to a lane.", &self.queue_wait);
+        summary("loki_decode_step_seconds", "Decode iteration duration.", &self.decode_step);
+        for (i, c) in self.classes.iter().enumerate() {
+            let cls = CLASS_NAMES[i];
+            let _ = writeln!(out, "loki_class_requests_done_total{{class=\"{cls}\"}} {}", c.done);
+            let _ = writeln!(out, "loki_class_preemptions_total{{class=\"{cls}\"}} {}", c.preemptions);
+            let _ = writeln!(out, "loki_class_requests_shed_total{{class=\"{cls}\"}} {}", c.shed);
+            let _ = writeln!(out, "loki_class_deadline_hits_total{{class=\"{cls}\"}} {}", c.deadline_hits);
+            let _ = writeln!(out, "loki_class_deadline_misses_total{{class=\"{cls}\"}} {}", c.deadline_misses);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> StatsSnapshot {
+        let mut h = StreamingHist::new();
+        h.push(0.1);
+        h.push(0.2);
+        StatsSnapshot {
+            uptime_s: 2.0,
+            throughput_tok_s: 8.0,
+            requests_in: 4,
+            requests_done: 3,
+            requests_shed: 1,
+            tokens_generated: 16,
+            decode_steps: 16,
+            ttft: HistSnap::of(&h),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn json_is_well_formed() {
+        let j = sample().to_json();
+        let round = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(round.req("requests_in").as_i64(), Some(4));
+        assert_eq!(round.req("ttft_s").req("count").as_i64(), Some(2));
+        assert_eq!(round.req("classes").as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn prometheus_has_core_families() {
+        let p = sample().prometheus();
+        for family in [
+            "loki_requests_total 4",
+            "loki_tokens_generated_total 16",
+            "# TYPE loki_ttft_seconds summary",
+            "loki_ttft_seconds{quantile=\"0.5\"}",
+            "loki_class_requests_done_total{class=\"interactive\"}",
+        ] {
+            assert!(p.contains(family), "missing {family:?} in:\n{p}");
+        }
+    }
+
+    #[test]
+    fn hub_starts_empty() {
+        let hub = new_hub();
+        assert!(hub.lock().unwrap().is_none());
+        *hub.lock().unwrap() = Some(sample());
+        assert_eq!(hub.lock().unwrap().as_ref().unwrap().requests_in, 4);
+    }
+}

@@ -62,6 +62,32 @@ impl DecodeVariant {
         DecodeVariant::loki_fractions(man, k_f, 1.0)
     }
 
+    /// Analytic score-path cost parameters for trace accounting:
+    /// `(d_frac, j_sel)` where `d_frac` is the kept fraction of key
+    /// components in the ranking pass (ones-fraction of `d_mask`; 1.0
+    /// for exact scoring) and `j_sel` the exact-attention token budget
+    /// (`None` when every token gets exact attention). Consumed by
+    /// [`crate::attnsim::score_path_bytes`] per scheduling round.
+    pub fn score_cost_params(&self) -> (f64, Option<usize>) {
+        let ones_frac = |m: &[f32]| {
+            if m.is_empty() {
+                1.0
+            } else {
+                m.iter().filter(|&&x| x != 0.0).count() as f64 / m.len() as f64
+            }
+        };
+        match self {
+            DecodeVariant::Full => (1.0, None),
+            DecodeVariant::Loki { d_mask, j_sel } => {
+                (ones_frac(d_mask), Some((*j_sel).max(0) as usize))
+            }
+            // H2O ranks by accumulated attention mass — no key reads in
+            // its ranking pass, so the score-scan fraction is zero.
+            DecodeVariant::H2o { j_sel } => (0.0, Some((*j_sel).max(0) as usize)),
+            DecodeVariant::PcaAttn { d_mask } => (ones_frac(d_mask), None),
+        }
+    }
+
     /// Variable-d_f policy (App. B.2 / Fig. 15): per-layer component
     /// counts, e.g. from per-layer explained-variance thresholds.
     pub fn loki_variable(man: &Manifest, k_f: f64, d_per_layer: &[usize]) -> Self {

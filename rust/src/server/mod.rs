@@ -29,6 +29,17 @@
 //! request was well-formed, the engine just refused to burn compute on
 //! a deadline it proved unreachable.
 //!
+//! A line of `{"stats": true}` is a **metrics scrape**, not a
+//! generation request: the reply carries the engine's latest
+//! per-scheduling-round [`crate::obs::StatsSnapshot`] twice — once as
+//! structured JSON under `"stats"` and once as a Prometheus text
+//! exposition under `"prom"`:
+//!   → {"stats": true}
+//!   ← {"stats": {"uptime_s": ..., "ttft_s": {...}, ...}, "prom": "..."}
+//! Before the engine's first round (or when the server was started
+//! without a stats hub) the scrape gets a structured `{"error": ...}`
+//! like any other client-visible condition.
+//!
 //! Malformed or invalid requests get a structured `{"error": "..."}`
 //! reply and the connection stays usable for the next line — client bugs
 //! must never wedge a connection, let alone the engine behind it
@@ -49,6 +60,7 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::request::{GenRequest, Priority};
 use crate::coordinator::sampler::SampleCfg;
 use crate::model::ByteTokenizer;
+use crate::obs::StatsHub;
 use crate::util::json::{self, Json};
 
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
@@ -98,15 +110,18 @@ pub fn serve(addr: &str, submit: SyncSender<GenRequest>) -> Result<()> {
 /// Serve forever on `addr`, forwarding requests into the engine queue.
 pub fn serve_cfg(addr: &str, submit: SyncSender<GenRequest>, cfg: ServerCfg) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
-    serve_listener(listener, submit, cfg)
+    serve_listener(listener, submit, cfg, None)
 }
 
 /// Serve forever on an already-bound listener. Tests bind port 0 first
 /// to learn the ephemeral address, then hand the listener over.
+/// `stats`, when given, backs the `{"stats": true}` scrape command with
+/// the engine's live snapshot hub.
 pub fn serve_listener(
     listener: TcpListener,
     submit: SyncSender<GenRequest>,
     cfg: ServerCfg,
+    stats: Option<StatsHub>,
 ) -> Result<()> {
     if let Ok(addr) = listener.local_addr() {
         eprintln!("[server] listening on {addr}");
@@ -121,8 +136,9 @@ pub fn serve_listener(
             }
         };
         let submit = submit.clone();
+        let stats = stats.clone();
         std::thread::spawn(move || {
-            if let Err(e) = handle_conn(stream, &submit, cfg) {
+            if let Err(e) = handle_conn(stream, &submit, cfg, stats.as_ref()) {
                 eprintln!("[server] connection error: {e}");
             }
         });
@@ -130,7 +146,12 @@ pub fn serve_listener(
     Ok(())
 }
 
-fn handle_conn(stream: TcpStream, submit: &SyncSender<GenRequest>, cfg: ServerCfg) -> Result<()> {
+fn handle_conn(
+    stream: TcpStream,
+    submit: &SyncSender<GenRequest>,
+    cfg: ServerCfg,
+    stats: Option<&StatsHub>,
+) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -142,7 +163,7 @@ fn handle_conn(stream: TcpStream, submit: &SyncSender<GenRequest>, cfg: ServerCf
         }
         // Errors become structured replies; the read loop continues, so
         // one bad line never poisons the connection.
-        let resp = match handle_line(&line, submit, &tok, cfg) {
+        let resp = match handle_line(&line, submit, &tok, cfg, stats) {
             Ok(j) => j,
             Err(e) => json::obj(vec![("error", json::s(&e.to_string()))]),
         };
@@ -153,13 +174,36 @@ fn handle_conn(stream: TcpStream, submit: &SyncSender<GenRequest>, cfg: ServerCf
     Ok(())
 }
 
+/// Render the `{"stats": true}` scrape reply from the hub's latest
+/// snapshot. A missing hub (server started without an engine-side
+/// publisher) and an empty one (engine hasn't completed a scheduling
+/// round yet) are distinct client-visible errors.
+fn stats_reply(stats: Option<&StatsHub>) -> Result<Json> {
+    let hub = stats.context("stats not enabled on this server")?;
+    let snap = hub
+        .lock()
+        .map_err(|_| anyhow::anyhow!("stats hub poisoned"))?
+        .clone()
+        .context("no stats yet: engine has not completed a scheduling round")?;
+    Ok(json::obj(vec![
+        ("stats", snap.to_json()),
+        ("prom", json::s(&snap.prometheus())),
+    ]))
+}
+
 fn handle_line(
     line: &str,
     submit: &SyncSender<GenRequest>,
     tok: &ByteTokenizer,
     cfg: ServerCfg,
+    stats: Option<&StatsHub>,
 ) -> Result<Json> {
     let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request JSON: {e}"))?;
+    // A stats scrape is not a generation request: no prompt, no queue
+    // entry, answered from the hub's latest published snapshot.
+    if req.get("stats").and_then(|v| v.as_bool()) == Some(true) {
+        return stats_reply(stats);
+    }
     let prompt = req
         .get("prompt")
         .and_then(|p| p.as_str())
@@ -257,6 +301,17 @@ pub fn client_call<A: ToSocketAddrs>(addr: A, prompt: &str, max_tokens: usize) -
         ("max_tokens", json::num(max_tokens as f64)),
     ]);
     stream.write_all(req.to_string().as_bytes())?;
+    stream.write_all(b"\n")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Json::parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+}
+
+/// Blocking one-shot stats scrape (tests / dashboards).
+pub fn client_stats<A: ToSocketAddrs>(addr: A) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(json::obj(vec![("stats", Json::Bool(true))]).to_string().as_bytes())?;
     stream.write_all(b"\n")?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();

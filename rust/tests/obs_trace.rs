@@ -1,0 +1,241 @@
+//! Flight-recorder acceptance tests over the deterministic sim engine:
+//! the trace a serving run leaves behind must *conserve* (every admitted
+//! request reaches exactly one terminal event, preempts pair with
+//! resumes, nothing is lost to ring overwrite) and, on the Steps clock,
+//! must be byte-identical across runs — the property that lets CI pin
+//! a scenario's JSONL dump with a content hash.
+//!
+//! The in-memory checker (`check_recorder`) and the JSONL checker
+//! (`check_jsonl`) are both exercised against the same run, so the
+//! serialized trace certifies exactly the contract the live one does.
+
+use std::sync::mpsc::channel;
+
+use loki::coordinator::request::{GenRequest, Priority};
+use loki::coordinator::sampler::SampleCfg;
+use loki::coordinator::{
+    AdmissionPolicy, Engine, EngineCaps, EngineClock, EngineConfig, EngineMetrics, PoolConfig,
+    ShedPolicy,
+};
+use loki::obs::export::{check_jsonl, check_recorder, trace_hash, trace_jsonl};
+use loki::obs::{EventKind, PoolEvent};
+use loki::runtime::{SimCfg, SimRuntime};
+
+const BS: usize = 8;
+
+fn caps(max_len: usize, gang: usize) -> EngineCaps {
+    EngineCaps { max_len, max_prompt: max_len, gang_batch: gang, bytes_per_token: 8 }
+}
+
+/// Distinct-per-request prompt material within the sim vocabulary.
+fn prompt(id: u64, len: usize) -> Vec<i32> {
+    (0..len).map(|i| ((id as usize * 31 + i * 7 + 3) % 96) as i32).collect()
+}
+
+struct Spec {
+    prompt: Vec<i32>,
+    max_new: usize,
+    sampling: SampleCfg,
+    priority: Priority,
+    slo_ms: Option<f64>,
+}
+
+/// Run `specs` through a sim-backed engine, everything submitted up
+/// front, so the run — and therefore its trace — is a pure function of
+/// (cfg, caps, specs).
+fn run(cfg: &EngineConfig, caps: EngineCaps, specs: &[Spec]) -> EngineMetrics {
+    let engine =
+        Engine::with_backend(Box::new(SimRuntime::new(SimCfg::default())), caps, cfg.clone());
+    let (tx, rx) = Engine::channel(cfg);
+    let (reply, _results) = channel();
+    for (i, s) in specs.iter().enumerate() {
+        tx.send(GenRequest {
+            id: i as u64,
+            prompt: s.prompt.clone(),
+            max_new_tokens: s.max_new,
+            stop_token: None,
+            sampling: s.sampling,
+            priority: s.priority,
+            slo_ms: s.slo_ms,
+            reply: reply.clone(),
+        })
+        .unwrap();
+    }
+    drop(tx);
+    drop(reply);
+    engine.run(rx).unwrap()
+}
+
+/// The preemption-forcing scenario from `engine_admission.rs`: 16
+/// blocks cannot hold the two longest requests' full footprints at
+/// once, so decode-time growth must preempt and resume — on the Steps
+/// clock, so every trace timestamp is deterministic.
+fn contended_cfg() -> EngineConfig {
+    EngineConfig {
+        pool: PoolConfig { block_size: BS, num_blocks: 16, prefix_sharing: true },
+        admission: AdmissionPolicy::Speculative { reserve_frac: 0.2, headroom_blocks: 1 },
+        clock: EngineClock::Steps { step_ms: 1.0, prefill_ms_per_token: 0.0 },
+        ..Default::default()
+    }
+}
+
+fn contended_specs() -> Vec<Spec> {
+    vec![
+        Spec {
+            prompt: prompt(0, 24),
+            max_new: 40,
+            sampling: SampleCfg { temperature: 0.8, top_p: 0.9, seed: 100 },
+            priority: Priority::Interactive,
+            slo_ms: None,
+        },
+        Spec {
+            prompt: prompt(1, 30),
+            max_new: 48,
+            sampling: SampleCfg { temperature: 0.7, top_p: 0.95, seed: 101 },
+            priority: Priority::Interactive,
+            slo_ms: None,
+        },
+        Spec {
+            prompt: prompt(2, 20),
+            max_new: 32,
+            sampling: SampleCfg::greedy(),
+            priority: Priority::Interactive,
+            slo_ms: None,
+        },
+        Spec {
+            prompt: prompt(3, 28),
+            max_new: 36,
+            sampling: SampleCfg { temperature: 1.0, top_p: 0.9, seed: 103 },
+            priority: Priority::Interactive,
+            slo_ms: None,
+        },
+    ]
+}
+
+#[test]
+fn preempt_heavy_trace_conserves_and_matches_metrics() {
+    let m = run(&contended_cfg(), caps(512, 2), &contended_specs());
+    assert!(m.preemptions > 0, "scenario failed to force preemption: {}", m.report());
+    assert!(m.resumes > 0, "{}", m.report());
+
+    let check = check_recorder(&m.trace);
+    assert!(check.ok(), "violations: {:?}", check.violations);
+    assert_eq!(check.events, m.trace.len());
+    assert_eq!(check.admitted, m.requests_in);
+    assert_eq!(check.finished, m.requests_done);
+    assert_eq!(check.shed, 0);
+    assert_eq!(check.rejected, 0);
+    assert_eq!(check.in_flight, 0);
+
+    // The recorder is default-on and bounded; this run fits the ring.
+    assert_eq!(m.trace.dropped(), 0);
+    assert_eq!(m.trace.recorded() as usize, m.trace.len());
+
+    // Structural spot-checks: the lifecycle events the metrics counters
+    // summarize are individually present in the trace.
+    let count = |pred: &dyn Fn(&EventKind) -> bool| -> u64 {
+        m.trace.iter().filter(|e| pred(&e.kind)).count() as u64
+    };
+    assert_eq!(
+        count(&|k| matches!(k, EventKind::PreemptFull { .. } | EventKind::PreemptPartial { .. })),
+        m.preemptions
+    );
+    assert_eq!(count(&|k| matches!(k, EventKind::Resume { .. })), m.resumes);
+    assert_eq!(count(&|k| matches!(k, EventKind::FirstToken { .. })), m.requests_done);
+    assert_eq!(count(&|k| matches!(k, EventKind::SchedRound { .. })), m.decode_steps);
+    assert!(
+        count(&|k| matches!(k, EventKind::Pool(PoolEvent::Alloc { .. }))) >= m.requests_in,
+        "every admission allocates pool blocks"
+    );
+    assert!(count(&|k| matches!(k, EventKind::Pool(PoolEvent::Free { .. }))) > 0);
+
+    // Score-path accounting: under the default Full variant the scan
+    // reads all keys and the gather reads all values, so bytes-moved
+    // equals the dense ceiling on every round with busy lanes.
+    let mut busy_rounds = 0u64;
+    for e in m.trace.iter() {
+        if let EventKind::SchedRound { busy_lanes, score_bytes_moved, score_bytes_exact, .. } =
+            e.kind
+        {
+            if busy_lanes > 0 {
+                busy_rounds += 1;
+                assert!(score_bytes_moved > 0);
+                assert_eq!(score_bytes_moved, score_bytes_exact, "Full moves the dense ceiling");
+            }
+        }
+    }
+    assert!(busy_rounds > 0);
+}
+
+#[test]
+fn trace_terminals_cover_finish_shed_and_reject() {
+    // Steps clock with a 1000-virtual-ms decode step: any first token
+    // costs ≥ 1000 ms, so a 500 ms SLO is provably doomed under strict
+    // shedding even on an idle engine. A 600-token decode budget against
+    // a 4-block pool is impossible — rejected at admission. A small
+    // deadline-less request finishes normally.
+    let cfg = EngineConfig {
+        pool: PoolConfig { block_size: BS, num_blocks: 4, prefix_sharing: true },
+        shed: ShedPolicy::Strict,
+        clock: EngineClock::Steps { step_ms: 1000.0, prefill_ms_per_token: 0.0 },
+        ..Default::default()
+    };
+    let specs = vec![
+        Spec {
+            prompt: prompt(0, 10),
+            max_new: 8,
+            sampling: SampleCfg::greedy(),
+            priority: Priority::Interactive,
+            slo_ms: None,
+        },
+        Spec {
+            prompt: prompt(1, 10),
+            max_new: 4,
+            sampling: SampleCfg::greedy(),
+            priority: Priority::Interactive,
+            slo_ms: Some(500.0),
+        },
+        Spec {
+            prompt: prompt(2, 10),
+            max_new: 600,
+            sampling: SampleCfg::greedy(),
+            priority: Priority::Interactive,
+            slo_ms: None,
+        },
+    ];
+    let m = run(&cfg, caps(256, 2), &specs);
+    assert!(m.requests_done >= 1, "{}", m.report());
+    assert!(m.requests_shed >= 1, "{}", m.report());
+    assert!(m.requests_rejected >= 1, "{}", m.report());
+
+    let check = check_recorder(&m.trace);
+    assert!(check.ok(), "violations: {:?}", check.violations);
+    assert_eq!(check.admitted, m.requests_in);
+    assert_eq!(check.finished, m.requests_done);
+    assert_eq!(check.shed, m.requests_shed);
+    assert_eq!(check.rejected, m.requests_rejected);
+    assert_eq!(check.in_flight, 0);
+    assert_eq!(check.admitted, check.finished + check.shed + check.rejected);
+}
+
+#[test]
+fn steps_clock_trace_is_byte_identical_across_runs() {
+    let a = run(&contended_cfg(), caps(512, 2), &contended_specs());
+    let b = run(&contended_cfg(), caps(512, 2), &contended_specs());
+    let ja = trace_jsonl(&a.trace);
+    let jb = trace_jsonl(&b.trace);
+    assert!(!ja.is_empty() && ja.lines().count() > 1);
+    assert_eq!(ja, jb, "Steps-clock trace must be bit-reproducible");
+    assert_eq!(trace_hash(ja.as_bytes()), trace_hash(jb.as_bytes()));
+
+    // The serialized form certifies the same contract as the live one.
+    let from_jsonl = check_jsonl(&ja).expect("well-formed JSONL");
+    let live = check_recorder(&a.trace);
+    assert!(from_jsonl.ok(), "violations: {:?}", from_jsonl.violations);
+    assert_eq!(from_jsonl.events, live.events);
+    assert_eq!(from_jsonl.admitted, live.admitted);
+    assert_eq!(from_jsonl.finished, live.finished);
+    assert_eq!(from_jsonl.shed, live.shed);
+    assert_eq!(from_jsonl.rejected, live.rejected);
+    assert_eq!(from_jsonl.in_flight, live.in_flight);
+}

@@ -9,8 +9,9 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::time::Duration;
 
 use loki::coordinator::{Engine, EngineCaps, EngineClock, EngineConfig, ShedPolicy};
+use loki::obs::new_hub;
 use loki::runtime::{SimCfg, SimRuntime};
-use loki::server::{serve_listener, ServerCfg};
+use loki::server::{client_stats, serve_listener, ServerCfg};
 use loki::util::json::Json;
 
 const MAX_TOKENS_CAP: usize = 64;
@@ -25,8 +26,10 @@ fn start_server() -> SocketAddr {
 fn start_server_with(cfg: EngineConfig) -> SocketAddr {
     let caps =
         EngineCaps { max_len: 256, max_prompt: 256, gang_batch: 2, bytes_per_token: 8 };
+    let hub = new_hub();
     let engine =
-        Engine::with_backend(Box::new(SimRuntime::new(SimCfg::default())), caps, cfg.clone());
+        Engine::with_backend(Box::new(SimRuntime::new(SimCfg::default())), caps, cfg.clone())
+            .with_stats_hub(hub.clone());
     let (tx, rx) = Engine::channel(&cfg);
     std::thread::spawn(move || {
         let _ = engine.run(rx);
@@ -35,7 +38,7 @@ fn start_server_with(cfg: EngineConfig) -> SocketAddr {
     let addr = listener.local_addr().unwrap();
     std::thread::spawn(move || {
         let cfg = ServerCfg { max_tokens_cap: MAX_TOKENS_CAP, ..Default::default() };
-        let _ = serve_listener(listener, tx, cfg);
+        let _ = serve_listener(listener, tx, cfg, Some(hub));
     });
     addr
 }
@@ -235,6 +238,43 @@ fn doomed_slo_gets_a_structured_shed_reply_and_connection_survives() {
     // And an SLO-less request is never shed, whatever the policy.
     let resp = conn.round_trip(r#"{"prompt": "whenever", "max_tokens": 3}"#);
     assert_ok_generation(&resp, 3);
+}
+
+#[test]
+fn stats_scrape_returns_live_snapshot_mid_flight() {
+    let addr = start_server();
+    let mut conn = Conn::open(addr);
+    // Drive the engine through two full requests: the per-round
+    // snapshot publish precedes the completion section within a round,
+    // so the *second* request's rounds are what make the first one's
+    // completion provably visible to the scrape.
+    let resp = conn.round_trip(r#"{"prompt": "warm up the counters", "max_tokens": 4}"#);
+    assert_ok_generation(&resp, 4);
+    let resp = conn.round_trip(r#"{"prompt": "make the first visible", "max_tokens": 4}"#);
+    assert_ok_generation(&resp, 4);
+    // Scrape on the SAME connection — the stats command shares the
+    // protocol with generation requests.
+    let resp = conn.round_trip(r#"{"stats": true}"#);
+    assert!(resp.get("error").is_none(), "scrape failed: {resp:?}");
+    let stats = resp.req("stats");
+    assert!(stats.req("requests_in").as_f64().unwrap() >= 2.0, "{stats:?}");
+    assert!(stats.req("requests_done").as_f64().unwrap() >= 1.0, "{stats:?}");
+    assert!(stats.req("tokens_generated").as_f64().unwrap() >= 1.0, "{stats:?}");
+    assert!(stats.req("trace_recorded").as_f64().unwrap() >= 1.0, "tracing is default-on");
+    assert_eq!(stats.req("classes").as_arr().unwrap().len(), 2);
+    let ttft = stats.req("ttft_s");
+    assert!(ttft.req("count").as_f64().unwrap() >= 1.0, "{ttft:?}");
+    assert!(ttft.req("p95").as_f64().unwrap() >= ttft.req("p50").as_f64().unwrap() - 1e-12);
+    // Prometheus exposition rides along in the same reply.
+    let prom = resp.req("prom").as_str().expect("prom text");
+    assert!(prom.contains("# TYPE loki_requests_total counter"), "{prom}");
+    assert!(prom.contains("loki_ttft_seconds{quantile=\"0.5\"}"), "{prom}");
+    // The connection still generates after a scrape.
+    let resp = conn.round_trip(r#"{"prompt": "still alive", "max_tokens": 2}"#);
+    assert_ok_generation(&resp, 2);
+    // And the one-shot client helper sees the same hub.
+    let scrape = client_stats(addr).expect("client_stats");
+    assert!(scrape.req("stats").req("requests_in").as_f64().unwrap() >= 1.0);
 }
 
 #[test]
