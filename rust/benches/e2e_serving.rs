@@ -15,9 +15,13 @@
 //! artifact-free, on the deterministic steps clock) floods an
 //! undersized gang with more SLO'd traffic than it can serve in budget
 //! and compares predictive shedding against queueing-to-die: goodput,
-//! wasted work and replay-graded shed errors. `--smoke-json PATH`
-//! writes both scenarios' deterministic numbers as one JSON document
-//! and exits — the bounded e2e smoke CI runs on every push.
+//! wasted work and replay-graded shed errors. Scenario 7 (artifact-free,
+//! steps clock with a nonzero per-token prefill charge) runs a mixed
+//! long-prompt + interactive trace with chunked prefill on vs off and
+//! reports the interactive TTFT win, the bounded long-prompt penalty
+//! and output equality. `--smoke-json PATH` writes all three scenarios'
+//! deterministic numbers as one JSON document and exits — the bounded
+//! e2e smoke CI runs on every push.
 
 use std::sync::mpsc::channel;
 
@@ -272,6 +276,155 @@ fn emit_shed_table(runs: &[(String, EngineMetrics)]) {
     );
 }
 
+/// Scenario 7: chunked prefill vs monolithic under a mixed gang — two
+/// long prompts sharing one bootstrap batch with six interactive
+/// requests, on the deterministic steps clock with a nonzero per-token
+/// prefill charge (`prefill_ms_per_token`), so TTFT-in-ms actually sees
+/// prefill cost. The whole mix fits the gang, so monolithically the
+/// long prompts' full prefill charge lands on the clock before *any*
+/// first token (batched prefill is all-or-nothing); with
+/// `prefill_chunk` set the long prefills advance one chunk per
+/// scheduling round and every interactive first token lands after a
+/// single short chunk. Interactive ttft_ms p99 must drop while
+/// completed token streams stay byte-identical and the long-prompt
+/// penalty stays bounded (one decode round per extra chunk). The strict
+/// assertions live in rust/tests/engine_admission.rs; this scenario
+/// reports the numbers and feeds the chunked trace to
+/// `repro trace-check`.
+fn chunked_prefill(quick: bool) -> anyhow::Result<Vec<(String, Vec<GenResult>, EngineMetrics)>> {
+    const GANG: usize = 8;
+    const CHUNK: usize = 32;
+    let caps = EngineCaps { max_len: 256, max_prompt: 256, gang_batch: GANG, bytes_per_token: 8 };
+    let (n_long, n_int) = (2usize, 6usize);
+    let long_new = if quick { 12 } else { 24 };
+    let mut runs: Vec<(String, Vec<GenResult>, EngineMetrics)> = Vec::new();
+    for (label, chunk) in [("monolithic", None), ("chunked 32", Some(CHUNK))] {
+        let cfg = EngineConfig {
+            gang_batch: GANG,
+            victim_policy: VictimPolicy::DeadlineAware,
+            clock: EngineClock::Steps { step_ms: 1.0, prefill_ms_per_token: 0.5 },
+            prefill_chunk: chunk,
+            ..Default::default()
+        };
+        let backend = Box::new(SimRuntime::new(SimCfg::default()));
+        let engine = Engine::with_backend(backend, caps, cfg.clone());
+        let (tx, rx) = Engine::channel(&cfg);
+        let (reply, results) = channel();
+        let mut id = 0u64;
+        // Everything below fits one bootstrap gang, so admission order
+        // is immaterial: the monolithic run prefills longs and
+        // interactives in a single batch whose combined charge precedes
+        // every first token. The batch SLO is loose — both modes hit it;
+        // the contrast this scenario measures is interactive TTFT.
+        for _ in 0..n_long {
+            tx.send(GenRequest {
+                id,
+                prompt: sim_prompt(id, 192),
+                max_new_tokens: long_new,
+                stop_token: None,
+                sampling: SampleCfg::greedy(),
+                priority: Priority::Batch,
+                slo_ms: Some(1000.0),
+                reply: reply.clone(),
+            })?;
+            id += 1;
+        }
+        for _ in 0..n_int {
+            tx.send(GenRequest {
+                id,
+                prompt: sim_prompt(id, 8),
+                max_new_tokens: 4,
+                stop_token: None,
+                sampling: SampleCfg::greedy(),
+                priority: Priority::Interactive,
+                slo_ms: Some(400.0),
+                reply: reply.clone(),
+            })?;
+            id += 1;
+        }
+        drop(tx);
+        drop(reply);
+        let metrics = engine.run(rx)?;
+        let mut got: Vec<GenResult> = results.try_iter().collect();
+        got.sort_by_key(|r| r.id);
+        runs.push((label.to_string(), got, metrics));
+    }
+    Ok(runs)
+}
+
+fn emit_chunked_table(runs: &[(String, Vec<GenResult>, EngineMetrics)]) {
+    let mut table = Table::new(
+        "E2E serving: chunked prefill vs monolithic, long prompts + interactive flood",
+        &[
+            "prefill",
+            "done",
+            "chunks",
+            "chunk tok",
+            "int ttft ms p99",
+            "long ttft ms mean",
+            "decode steps",
+            "stall p95 (rounds)",
+        ],
+    );
+    for (label, _, m) in runs {
+        let int = m.class(Priority::Interactive);
+        let long = m.class(Priority::Batch);
+        table.row(vec![
+            label.clone(),
+            format!("{}", m.requests_done),
+            format!("{}", m.prefill_chunks),
+            format!("{}", m.chunked_prefill_tokens),
+            fnum(int.ttft_ms.percentile(99.0), 1),
+            fnum(long.ttft_ms.mean(), 1),
+            format!("{}", m.decode_steps),
+            fnum(m.prefill_stall.percentile(95.0), 1),
+        ]);
+    }
+    table.emit("e2e_serving_chunked");
+    println!(
+        "(steps-clock run with prefill charged at 0.5 ms/token: chunking\n\
+         lets interactive first tokens land between a long prompt's\n\
+         chunks instead of behind its whole prefill charge; completed\n\
+         token streams are byte-identical across the two runs)"
+    );
+}
+
+/// Serialize the scenario-7 runs for the CI artifact. Everything here is
+/// deterministic under the steps clock; `outputs_match_monolithic`
+/// asserts stream equality against the monolithic run in-band so the
+/// smoke diff catches a divergence without shipping token dumps.
+fn chunked_json(runs: &[(String, Vec<GenResult>, EngineMetrics)]) -> json::Json {
+    let mono = &runs[0].1;
+    let mut items = Vec::new();
+    for (label, results, m) in runs {
+        let int = m.class(Priority::Interactive);
+        let long = m.class(Priority::Batch);
+        let outputs_match = results.len() == mono.len()
+            && results
+                .iter()
+                .zip(mono.iter())
+                .all(|(a, b)| a.id == b.id && a.tokens == b.tokens);
+        items.push(json::obj(vec![
+            ("prefill", json::s(label)),
+            ("requests_done", json::num(m.requests_done as f64)),
+            ("decode_steps", json::num(m.decode_steps as f64)),
+            ("prefills", json::num(m.prefills as f64)),
+            ("prefill_chunks", json::num(m.prefill_chunks as f64)),
+            ("chunked_prefill_tokens", json::num(m.chunked_prefill_tokens as f64)),
+            ("lane_reset_prefills", json::num(m.lane_reset_prefills as f64)),
+            ("int_ttft_ms_p99", json::num(int.ttft_ms.percentile(99.0))),
+            ("int_ttft_ms_mean", json::num(int.ttft_ms.mean())),
+            ("long_ttft_ms_mean", json::num(long.ttft_ms.mean())),
+            ("prefill_stall_p95_rounds", json::num(m.prefill_stall.percentile(95.0))),
+            ("outputs_match_monolithic", json::Json::Bool(outputs_match)),
+        ]));
+    }
+    json::obj(vec![
+        ("scenario", json::s("chunked_prefill_mixed_trace")),
+        ("runs", json::arr(items)),
+    ])
+}
+
 /// Serialize the scenario-6 runs for the CI artifact: under the steps
 /// clock every field here is deterministic across builds.
 fn shed_json(runs: &[(String, EngineMetrics)]) -> json::Json {
@@ -335,6 +488,8 @@ fn main() -> anyhow::Result<()> {
     emit_flood_table(&flood_runs);
     let shed_runs = overload_shed(quick)?;
     emit_shed_table(&shed_runs);
+    let chunked_runs = chunked_prefill(quick)?;
+    emit_chunked_table(&chunked_runs);
     // `--trace-out PATH`: dump the strict-shedding scenario-6 run's
     // flight recorder. That run is on the deterministic steps clock, so
     // the JSONL bytes are identical across builds and CI gates on its
@@ -360,10 +515,39 @@ fn main() -> anyhow::Result<()> {
             m.trace.dropped()
         );
     }
+    // `--trace-out-chunked PATH`: dump the scenario-7 chunked run's
+    // flight recorder — the trace that exercises the prefill_chunk
+    // lifecycle (admitted → N chunks → first token) the checker learned,
+    // so CI gates `repro trace-check` on it.
+    if args.flag("trace-out-chunked") {
+        anyhow::bail!("--trace-out-chunked needs a file path");
+    }
+    if let Some(raw) = args.get("trace-out-chunked") {
+        let m = chunked_runs
+            .iter()
+            .find(|(label, _, _)| label.starts_with("chunked"))
+            .map(|(_, _, m)| m)
+            .expect("scenario 7 always includes a chunked pass");
+        let path = std::path::PathBuf::from(raw);
+        loki::obs::export::write_jsonl(&m.trace, &path)?;
+        let chrome = loki::obs::export::chrome_sibling(&path);
+        loki::obs::export::write_chrome(&m.trace, &chrome)?;
+        println!(
+            "chunked trace written to {} (+ {}): {} events, {} dropped",
+            path.display(),
+            chrome.display(),
+            m.trace.len(),
+            m.trace.dropped()
+        );
+    }
     if let Some(path) = args.get("smoke-json") {
         let doc = json::obj(vec![(
             "scenarios",
-            json::arr(vec![flood_json(&flood_runs), shed_json(&shed_runs)]),
+            json::arr(vec![
+                flood_json(&flood_runs),
+                shed_json(&shed_runs),
+                chunked_json(&chunked_runs),
+            ]),
         )]);
         std::fs::write(path, doc.to_string() + "\n")?;
         println!("smoke metrics written to {path}");

@@ -295,6 +295,16 @@ pub struct EngineConfig {
     /// ([`EngineClock::Steps`]) the `SimRuntime` tests use to keep shed
     /// decisions, deadline grades and goodput wall-clock-free.
     pub clock: EngineClock,
+    /// Chunked prefill (`repro serve --prefill-chunk N`): split every
+    /// prefill into `N`-token chunks advanced one per scheduling round,
+    /// interleaved with decode steps of the running lanes — an admitted
+    /// request occupies a [`Lane::Prefilling`] slot and is injected into
+    /// the gang only when its last chunk lands. Bounds the head-of-line
+    /// blocking a long prompt inflicts on interactive first tokens, at
+    /// the cost of `ceil(len / N) − 1` extra rounds for the long prompt
+    /// itself. `None` (default) prefills monolithically, pinning the
+    /// prior behavior bit-identically.
+    pub prefill_chunk: Option<usize>,
     pub verbose: bool,
 }
 
@@ -313,6 +323,7 @@ impl Default for EngineConfig {
             aging_steps: None,
             shed: ShedPolicy::Off,
             clock: EngineClock::Wall,
+            prefill_chunk: None,
             verbose: false,
         }
     }
@@ -339,6 +350,34 @@ pub struct EngineCaps {
 enum Lane {
     Free,
     Busy(Box<BusyLane>),
+    /// Chunked-prefill mode only: the lane is reserved (pool blocks
+    /// granted, `lane_seq` live) but its request is still being
+    /// prefilled chunk-by-chunk into a batch-1 side state; the gang
+    /// lane at this index keeps advancing padding until injection.
+    Prefilling(Box<PrefillLane>),
+}
+
+/// In-flight chunked prefill occupying a lane slot
+/// ([`EngineConfig::prefill_chunk`]). Holds the queue item unopened —
+/// first-token sampling / resume restoration happen at injection, via
+/// the same [`Engine::lane_for`] path the monolithic prefill uses — so
+/// a mid-prefill preemption can requeue the item byte-identically.
+struct PrefillLane {
+    item: PendingItem,
+    /// Full token sequence to prefill (clamped prompt, or
+    /// `prompt ++ produced` for a resume).
+    tokens: Vec<i32>,
+    /// Tokens already materialized in `state` (`tokens[..done]`).
+    done: usize,
+    /// Batch-1 backend state holding the partial prefix; `None` until
+    /// the first chunk runs.
+    state: Option<StateId>,
+    /// Admission tick (assigned at admission, not injection, so victim
+    /// age ranks mid-prefill lanes as the youngest occupants).
+    tick: u64,
+    /// `decode_steps` when the first chunk ran — the prefill-stall
+    /// histogram measures decode interleaving from here to injection.
+    start_step: u64,
 }
 
 struct BusyLane {
@@ -442,7 +481,27 @@ fn slack_micros(deadline: Option<Instant>, now: Instant) -> u128 {
 fn lane_priority(lane: &Lane) -> Option<Priority> {
     match lane {
         Lane::Busy(b) => Some(b.req.req.priority),
+        Lane::Prefilling(p) => Some(item_queued(&p.item).req.priority),
         Lane::Free => None,
+    }
+}
+
+/// Whether a lane slot is occupied (decoding or mid-chunked-prefill) —
+/// the engine's idle/exit/refill checks all key off occupancy, while
+/// decode-only sections key off [`Lane::Busy`] specifically.
+fn lane_occupied(lane: &Lane) -> bool {
+    !matches!(lane, Lane::Free)
+}
+
+/// Admission tick for a queue item entering a lane: fresh work draws the
+/// next tick, resumes keep their original (see [`BusyLane::tick`]).
+fn assign_tick(item: &PendingItem, admit_tick: &mut u64) -> u64 {
+    match item {
+        PendingItem::Fresh(_) => {
+            *admit_tick += 1;
+            *admit_tick
+        }
+        PendingItem::Resume { lane, .. } => lane.tick,
     }
 }
 
@@ -476,6 +535,7 @@ fn finish_code(r: FinishReason) -> FinishCode {
 fn busy_tick(lane: &Lane) -> u64 {
     match lane {
         Lane::Busy(b) => b.tick,
+        Lane::Prefilling(p) => p.tick,
         Lane::Free => 0,
     }
 }
@@ -545,6 +605,21 @@ impl Engine {
     pub fn with_stats_hub(mut self, hub: StatsHub) -> Self {
         self.stats = Some(hub);
         self
+    }
+
+    /// Account one physical prefill of `tokens` *real* tokens: the
+    /// real-token counter feeds the report's prefill line, and under
+    /// [`EngineClock::Steps`] the virtual per-token prefill cost is
+    /// charged onto the engine clock (`EngineMetrics::prefill_charged_ms`
+    /// — folded into `now_ms`/`uptime_s`), so prefill work advances the
+    /// deterministic clock the same way the wall clock would move.
+    /// `prefill_ms_per_token == 0.0` (every pinned scenario) charges
+    /// nothing, keeping prior traces bit-identical.
+    fn charge_prefill(&self, metrics: &mut EngineMetrics, tokens: usize) {
+        metrics.prefill_tokens += tokens as u64;
+        if let EngineClock::Steps { prefill_ms_per_token, .. } = self.cfg.clock {
+            metrics.prefill_charged_ms += tokens as f64 * prefill_ms_per_token;
+        }
     }
 
     /// Publish a snapshot into the stats hub, if one is attached.
@@ -686,11 +761,46 @@ impl Engine {
         metrics: &mut EngineMetrics,
     ) {
         let Some(seq) = lane_seq[lane].take() else { return };
-        let Lane::Busy(mut b) = std::mem::replace(&mut lanes[lane], Lane::Free) else {
-            // Unreachable — preemption targets busy lanes — but a seq
-            // must never leak if it ever fires.
-            tables.preempt_free(pool, seq);
-            return;
+        let mut b = match std::mem::replace(&mut lanes[lane], Lane::Free) {
+            Lane::Busy(b) => b,
+            Lane::Prefilling(mut p) => {
+                // Mid-prefill eviction: the partial batch-1 state is
+                // worthless without the chunks behind it, so discard it
+                // and release the whole reservation; the item re-enters
+                // its band front *unopened* (a fresh request stays
+                // fresh — no first token was sampled, no Resume event —
+                // and re-admission reopens the trace episode with a new
+                // `prefill_start`). The chunks already run are the
+                // eviction's recompute cost; `select_victim` priced
+                // exactly that.
+                if let Some(s) = p.state.take() {
+                    self.backend.free(s);
+                }
+                let free_before = pool.num_free();
+                tables.preempt_free(pool, seq);
+                metrics.preemptions += 1;
+                if let PendingItem::Resume { lane: b, kept } = &mut p.item {
+                    b.preempted += 1;
+                    // The kept prefix was folded into `seq` at admission
+                    // (`resume_extend`) and just freed with it.
+                    *kept = None;
+                }
+                let q = item_queued(&p.item);
+                metrics.per_class[q.req.priority.index()].preemptions += 1;
+                metrics.record(EventKind::PreemptFull {
+                    id: q.req.id,
+                    lane: lane as u32,
+                    freed_blocks: pool.num_free().saturating_sub(free_before) as u32,
+                });
+                self.enqueue(pending, p.item, true);
+                return;
+            }
+            Lane::Free => {
+                // Unreachable — preemption targets occupied lanes — but
+                // a seq must never leak if it ever fires.
+                tables.preempt_free(pool, seq);
+                return;
+            }
         };
         // What the resume will re-prefill. The table's mirror length can
         // sit one position past this: the step-5 pass advances the mirror
@@ -809,21 +919,32 @@ impl Engine {
                     // no-victim path).
                     .filter(|&l| lane_priority(&lanes[l]).is_some_and(|p| p >= own))
                     .max_by_key(|&l| {
-                        let Lane::Busy(b) = &lanes[l] else {
-                            unreachable!("candidates are busy lanes")
-                        };
                         let seq = lane_seq[l].expect("candidates hold live seqs");
                         // Score: lowest class first (Batch > Interactive
                         // in the Ord), then — deadline-aware only — the
                         // most SLO slack, then the cheapest planned
                         // recompute, then the youngest admission.
+                        let (priority, deadline, cost) = match &lanes[l] {
+                            Lane::Busy(b) => (
+                                b.req.req.priority,
+                                b.req.deadline,
+                                self.victim_cost(b, seq, need_blocks, tables, pool),
+                            ),
+                            // Evicting a mid-prefill lane forfeits the
+                            // chunks already run — re-admission restarts
+                            // the prefill from token zero.
+                            Lane::Prefilling(p) => {
+                                let q = item_queued(&p.item);
+                                (q.req.priority, q.deadline, p.done)
+                            }
+                            Lane::Free => unreachable!("candidates are occupied lanes"),
+                        };
                         let slack = if deadline_aware {
-                            slack_micros(b.req.deadline, now)
+                            slack_micros(deadline, now)
                         } else {
                             u128::MAX
                         };
-                        let cost = self.victim_cost(b, seq, need_blocks, tables, pool);
-                        (b.req.req.priority, slack, Reverse(cost), lane_tick[l])
+                        (priority, slack, Reverse(cost), lane_tick[l])
                     })
             }
         }
@@ -925,7 +1046,7 @@ impl Engine {
                         });
                         self.enqueue_fresh(
                             &mut pending,
-                            QueuedRequest::stamp(req, metrics.decode_steps),
+                            QueuedRequest::stamp(req, metrics.decode_steps, metrics.now_ms()),
                         );
                     }
                     Err(TryRecvError::Empty) => break,
@@ -935,11 +1056,14 @@ impl Engine {
                     }
                 }
             }
-            let any_busy = lanes.iter().any(|l| matches!(l, Lane::Busy(_)));
-            if !rx_open && pending.is_empty() && !any_busy {
+            // Occupied = decoding *or* mid-chunked-prefill: a lane with
+            // chunks left must keep the loop turning (and must block
+            // the idle `recv` below from parking the engine on it).
+            let any_occupied = lanes.iter().any(lane_occupied);
+            if !rx_open && pending.is_empty() && !any_occupied {
                 break;
             }
-            if pending.is_empty() && !any_busy {
+            if pending.is_empty() && !any_occupied {
                 // Idle: block for the next submission.
                 match rx.recv() {
                     Ok(req) => {
@@ -952,7 +1076,7 @@ impl Engine {
                         });
                         self.enqueue_fresh(
                             &mut pending,
-                            QueuedRequest::stamp(req, metrics.decode_steps),
+                            QueuedRequest::stamp(req, metrics.decode_steps, metrics.now_ms()),
                         );
                     }
                     Err(_) => break,
@@ -968,6 +1092,20 @@ impl Engine {
             self.shed_doomed(&mut pending, &lanes, &est, &mut metrics);
 
             // ---- 2. bootstrap the gang with a batched prefill -------------
+            if gang.is_none() && !pending.is_empty() && self.cfg.prefill_chunk.is_some() {
+                // Chunked mode bootstraps the gang with pure padding so
+                // *every* admission — the first included — flows through
+                // the incremental chunk path in section 3b; nothing is
+                // ever prefilled monolithically. No real tokens: nothing
+                // to observe, bill, or charge.
+                let (id, _) =
+                    self.backend.prefill(&self.cfg.pca, vec![vec![0]; self.gang_batch])?;
+                gang = Some(id);
+                metrics.prefills += 1;
+                for len in lane_len.iter_mut() {
+                    *len = 1; // padding prompt [0]
+                }
+            }
             if gang.is_none() && !pending.is_empty() {
                 let mut batch: Vec<(PendingItem, Vec<i32>, SeqId)> = Vec::new();
                 while batch.len() < self.gang_batch {
@@ -1010,12 +1148,14 @@ impl Engine {
                     while prompts.len() < self.gang_batch {
                         prompts.push(vec![0]);
                     }
-                    // Estimator attribution counts every token actually
-                    // prefilled — padding lanes included — or a padded
-                    // near-fixed bucket cost charged to a few real
-                    // tokens would inflate the per-token rate and make
-                    // `Strict` shed reachable requests.
-                    let prefill_tokens: usize = prompts.iter().map(|p| p.len()).sum();
+                    // Estimator attribution counts only the *real*
+                    // prompt tokens of the admitted batch. Padding lanes
+                    // ride along in the padded bucket call, but crediting
+                    // their filler tokens diluted the per-token rate:
+                    // `prefill_ms(len)` then under-priced every future
+                    // prompt, and `Strict` admitted provably-doomed
+                    // requests instead of shedding them.
+                    let prefill_tokens: usize = batch.iter().map(|(_, t, _)| t.len()).sum();
                     for (lane, (item, tokens, _)) in batch.iter().enumerate() {
                         metrics.record(EventKind::PrefillStart {
                             id: item_queued(item).req.id,
@@ -1026,6 +1166,7 @@ impl Engine {
                     let t0 = Instant::now();
                     let (id, logits) = self.backend.prefill(&self.cfg.pca, prompts)?;
                     est.observe_prefill(prefill_tokens, t0.elapsed().as_secs_f64());
+                    self.charge_prefill(&mut metrics, prefill_tokens);
                     metrics.prefills += 1;
                     gang = Some(id);
                     let n = batch.len();
@@ -1037,12 +1178,13 @@ impl Engine {
                         });
                         lane_len[lane] = tokens.len();
                         lane_seq[lane] = Some(seq);
+                        let tick = assign_tick(&item, &mut admit_tick);
                         lanes[lane] = self.lane_for(
                             item,
                             tokens,
                             &logits[lane],
                             lane,
-                            &mut admit_tick,
+                            tick,
                             &mut metrics,
                         );
                         lane_tick[lane] = busy_tick(&lanes[lane]);
@@ -1067,7 +1209,7 @@ impl Engine {
                 if injected >= budget || pending.is_empty() {
                     break;
                 }
-                if matches!(lanes[lane], Lane::Busy(_)) {
+                if lane_occupied(&lanes[lane]) {
                     continue;
                 }
                 self.schedule_head(&mut pending);
@@ -1081,28 +1223,47 @@ impl Engine {
                             lane: lane as u32,
                             tokens: tokens.len() as u32,
                         });
-                        let t0 = Instant::now();
-                        let (lane_id, logits) =
-                            self.backend.prefill(&self.cfg.pca, vec![tokens.clone()])?;
-                        est.observe_prefill(tokens.len(), t0.elapsed().as_secs_f64());
-                        metrics.prefills += 1;
-                        self.backend.inject(gang_id, lane_id, lane)?;
-                        metrics.injections += 1;
-                        metrics.record(EventKind::PrefillEnd {
-                            id,
-                            lane: lane as u32,
-                            tokens: tokens.len() as u32,
-                        });
-                        lane_len[lane] = tokens.len();
                         lane_seq[lane] = Some(seq);
-                        lanes[lane] = self.lane_for(
-                            item,
-                            tokens,
-                            &logits[0],
-                            lane,
-                            &mut admit_tick,
-                            &mut metrics,
-                        );
+                        let tick = assign_tick(&item, &mut admit_tick);
+                        if self.cfg.prefill_chunk.is_some() {
+                            // Chunked mode: the lane slot (and its pool
+                            // reservation) is taken now, but the tokens
+                            // land chunk-by-chunk in section 3b; the
+                            // gang lane keeps its padding until the
+                            // last chunk injects. `lane_len` keeps
+                            // tracking that padding for hygiene.
+                            lanes[lane] = Lane::Prefilling(Box::new(PrefillLane {
+                                item,
+                                tokens,
+                                done: 0,
+                                state: None,
+                                tick,
+                                start_step: metrics.decode_steps,
+                            }));
+                        } else {
+                            let t0 = Instant::now();
+                            let (lane_id, logits) =
+                                self.backend.prefill(&self.cfg.pca, vec![tokens.clone()])?;
+                            est.observe_prefill(tokens.len(), t0.elapsed().as_secs_f64());
+                            self.charge_prefill(&mut metrics, tokens.len());
+                            metrics.prefills += 1;
+                            self.backend.inject(gang_id, lane_id, lane)?;
+                            metrics.injections += 1;
+                            metrics.record(EventKind::PrefillEnd {
+                                id,
+                                lane: lane as u32,
+                                tokens: tokens.len() as u32,
+                            });
+                            lane_len[lane] = tokens.len();
+                            lanes[lane] = self.lane_for(
+                                item,
+                                tokens,
+                                &logits[0],
+                                lane,
+                                tick,
+                                &mut metrics,
+                            );
+                        }
                         lane_tick[lane] = busy_tick(&lanes[lane]);
                         injected += 1;
                     }
@@ -1114,7 +1275,7 @@ impl Engine {
                         // kept by queued preempted requests — reclaim
                         // them rather than spinning forever.
                         metrics.admission_blocked += 1;
-                        if !lanes.iter().any(|l| matches!(l, Lane::Busy(_))) {
+                        if !lanes.iter().any(lane_occupied) {
                             self.reclaim_queued_kept(
                                 &mut pending, &mut tables, &mut pool, &mut metrics,
                             );
@@ -1128,21 +1289,108 @@ impl Engine {
                 }
             }
 
+            // ---- 3b. advance chunked prefills -----------------------------
+            // One chunk per mid-prefill lane per scheduling round, in
+            // lane order: a long prompt spreads its prefill across
+            // `ceil(len / chunk)` rounds while the busy lanes keep
+            // decoding in between — the head-of-line blocking bound
+            // chunked prefill exists for. The final chunk injects the
+            // finished batch-1 state and opens the lane via the same
+            // `lane_for` path as a monolithic prefill (first-token
+            // sampling for fresh work, sampler restore for resumes).
+            if let Some(chunk) = self.cfg.prefill_chunk {
+                let chunk = chunk.max(1);
+                for lane in 0..self.gang_batch {
+                    if !matches!(lanes[lane], Lane::Prefilling(_)) {
+                        continue;
+                    }
+                    let Lane::Prefilling(mut p) =
+                        std::mem::replace(&mut lanes[lane], Lane::Free)
+                    else {
+                        unreachable!("matched Prefilling above");
+                    };
+                    let total = p.tokens.len();
+                    let n = chunk.min(total - p.done);
+                    let id = item_queued(&p.item).req.id;
+                    let (state, logits) = if n == 0 {
+                        // Degenerate empty target (empty prompt admitted):
+                        // nothing to chunk — one plain prefill opens and
+                        // finishes the episode.
+                        let t0 = Instant::now();
+                        let (s, mut l) = self.backend.prefill(&self.cfg.pca, vec![Vec::new()])?;
+                        est.observe_prefill(total, t0.elapsed().as_secs_f64());
+                        (s, l.swap_remove(0))
+                    } else {
+                        let prior = p.state.take().unwrap_or(0);
+                        let t0 = Instant::now();
+                        let out = self
+                            .backend
+                            .prefill_extend(&self.cfg.pca, prior, &p.tokens, p.done, n)?;
+                        est.observe_prefill(n, t0.elapsed().as_secs_f64());
+                        self.charge_prefill(&mut metrics, n);
+                        p.done += n;
+                        metrics.prefill_chunks += 1;
+                        metrics.chunked_prefill_tokens += n as u64;
+                        metrics.per_class[item_queued(&p.item).req.priority.index()]
+                            .prefill_chunks += 1;
+                        metrics.record(EventKind::PrefillChunk {
+                            id,
+                            lane: lane as u32,
+                            done: p.done as u32,
+                            total: total as u32,
+                        });
+                        out
+                    };
+                    if p.done < total {
+                        p.state = Some(state);
+                        lanes[lane] = Lane::Prefilling(p);
+                        continue;
+                    }
+                    // Last chunk landed: inject and open the lane.
+                    self.backend.inject(gang_id, state, lane)?;
+                    metrics.injections += 1;
+                    metrics.prefills += 1;
+                    let stall = metrics.decode_steps.saturating_sub(p.start_step);
+                    metrics.prefill_stall.push(stall as f64);
+                    metrics.record(EventKind::PrefillEnd {
+                        id,
+                        lane: lane as u32,
+                        tokens: total as u32,
+                    });
+                    lane_len[lane] = total;
+                    let PrefillLane { item, tokens, tick, .. } = *p;
+                    lanes[lane] =
+                        self.lane_for(item, tokens, &logits, lane, tick, &mut metrics);
+                    lane_tick[lane] = busy_tick(&lanes[lane]);
+                }
+            }
+
             // ---- 4. padding-lane hygiene ----------------------------------
-            // Free lanes still advance with the gang. They hold no pool
+            // Non-busy lanes still advance with the gang (a mid-prefill
+            // lane's gang slot is padding too — its real tokens live in
+            // the batch-1 side state until injection). They hold no pool
             // blocks, but the *device* cache behind them is physically
             // bounded, so re-blank one exactly when the next step would
             // hit max_len (the old 0.75·max_len fraction heuristic is
             // gone; this fires once per max_len idle steps at most).
+            // The blank prefill is real backend work: it is observed by
+            // the estimator, billed to its own counter, charged to the
+            // steps clock, and traced — an unattributed prefill would
+            // make `prefills`-vs-trace reconciliation come up short.
             for lane in 0..self.gang_batch {
                 if matches!(lanes[lane], Lane::Busy(_)) {
                     continue;
                 }
                 if lane_len[lane] + 1 >= self.max_len {
+                    let t0 = Instant::now();
                     let (blank, _) = self.backend.prefill(&self.cfg.pca, vec![vec![0]])?;
+                    est.observe_prefill(1, t0.elapsed().as_secs_f64());
+                    self.charge_prefill(&mut metrics, 1);
                     self.backend.inject(gang_id, blank, lane)?;
                     lane_len[lane] = 1;
                     metrics.lane_resets += 1;
+                    metrics.lane_reset_prefills += 1;
+                    metrics.record(EventKind::LaneReset { lane: lane as u32 });
                 }
             }
 
@@ -1154,7 +1402,10 @@ impl Engine {
                 .iter()
                 .map(|l| match l {
                     Lane::Busy(b) => b.next_token,
-                    Lane::Free => 0,
+                    // Free and mid-prefill lanes feed padding; a
+                    // prefilling lane's real tokens live in its batch-1
+                    // side state, not the gang slot.
+                    Lane::Free | Lane::Prefilling(_) => 0,
                 })
                 .collect();
             let t0 = Instant::now();
@@ -1176,7 +1427,15 @@ impl Engine {
             // first — possibly preempting the youngest other lane (whose
             // just-decoded token is then recomputed on resume, before its
             // sampler ever advances, keeping resumption byte-identical).
+            // Mid-prefill lanes hold a live seq but did not decode this
+            // step (the gang slot advanced padding, their real state is
+            // batch-1 on the side), so their mirror neither advances nor
+            // grows — the admission reservation already covers their
+            // whole target sequence.
             for lane in 0..self.gang_batch {
+                if !matches!(lanes[lane], Lane::Busy(_)) {
+                    continue;
+                }
                 let Some(seq) = lane_seq[lane] else { continue };
                 if tables.needs_grow(seq) {
                     self.grow_or_preempt(
@@ -1234,7 +1493,7 @@ impl Engine {
                 let finished = {
                     let b = match &mut lanes[lane] {
                         Lane::Busy(b) => b,
-                        Lane::Free => continue,
+                        Lane::Free | Lane::Prefilling(_) => continue,
                     };
                     metrics.tokens_generated += 1;
                     // First-token bookkeeping fires exactly once per
@@ -1256,12 +1515,18 @@ impl Engine {
                         // Steps since the request entered the queue — a
                         // deterministic, uptime-independent TTFT.
                         let steps = metrics.decode_steps.saturating_sub(b.req.submitted_step);
+                        // Engine-clock milliseconds since enqueue: under
+                        // `Steps` this includes the virtual prefill
+                        // charge, so chunked-vs-monolithic TTFT is
+                        // comparable in one deterministic domain.
+                        let ms = (metrics.now_ms() - b.req.submitted_ms).max(0.0);
                         b.ttft_s = Some(t);
                         b.ttft_step = Some(steps);
                         metrics.ttft.push(t);
                         let class = &mut metrics.per_class[b.req.req.priority.index()];
                         class.ttft.push(t);
                         class.ttft_steps.push(steps as f64);
+                        class.ttft_ms.push(ms);
                         // Max wait is tracked per *original* class even
                         // when aging promoted the request — the bound it
                         // observes is the batch-starvation bound.
@@ -1505,8 +1770,11 @@ impl Engine {
                             if self.reclaim_queued_kept(pending, tables, pool, metrics) {
                                 continue;
                             }
+                            // Mid-prefill lanes count as occupied: they
+                            // will inject, decode and free capacity, so
+                            // yielding beats finishing early.
                             let others_busy = (0..lanes.len())
-                                .any(|l| l != lane && matches!(lanes[l], Lane::Busy(_)));
+                                .any(|l| l != lane && lane_occupied(&lanes[l]));
                             if others_busy && self.resumable(&lanes[lane]) {
                                 // Nothing preemptible frees blocks: yield
                                 // our own lane and wait at the queue
@@ -1559,6 +1827,10 @@ impl Engine {
     fn resumable(&self, lane: &Lane) -> bool {
         match lane {
             Lane::Busy(b) => b.prompt.len() + b.produced.len() <= self.max_prompt,
+            // A mid-prefill lane's recompute is exactly its target
+            // sequence, which already passed the prompt budget at
+            // admission — always faithfully restartable.
+            Lane::Prefilling(_) => true,
             Lane::Free => false,
         }
     }
@@ -1656,6 +1928,20 @@ impl Engine {
                 Lane::Busy(b) => {
                     b.req.req.max_new_tokens.saturating_sub(b.produced.len()) as u64
                 }
+                // A mid-prefill lane frees after its remaining chunk
+                // rounds (one per scheduling round, so decode steps are
+                // the right unit) plus its decode budget.
+                Lane::Prefilling(p) => {
+                    let chunk = self.cfg.prefill_chunk.unwrap_or(usize::MAX).max(1);
+                    let rounds = (p.tokens.len() - p.done).div_ceil(chunk) as u64;
+                    let remaining = match &p.item {
+                        PendingItem::Fresh(q) => q.req.max_new_tokens,
+                        PendingItem::Resume { lane: b, .. } => {
+                            b.req.req.max_new_tokens.saturating_sub(b.produced.len())
+                        }
+                    };
+                    rounds + remaining as u64
+                }
                 Lane::Free => 0,
             })
             .collect();
@@ -1689,8 +1975,12 @@ impl Engine {
                     // the grader applies at emission.
                     let waited_ms =
                         self.cfg.clock.waited_ms(now, q.submitted, now_step, q.submitted_step);
-                    let predicted_ttft_ms =
-                        waited_ms + est.prefill_ms(len) + (wait + 1) as f64 * step_ms;
+                    // Chunked prefill pays an extra decode round per
+                    // chunk after the first — `prefill_cost_ms` folds
+                    // that in; `None` is exactly `prefill_ms`.
+                    let predicted_ttft_ms = waited_ms
+                        + est.prefill_cost_ms(len, self.cfg.prefill_chunk)
+                        + (wait + 1) as f64 * step_ms;
                     if predicted_ttft_ms > slo_ms * (1.0 + margin) {
                         doomed.push((i, predicted_ttft_ms));
                         shed = true;
@@ -1762,21 +2052,20 @@ impl Engine {
     /// requests already hold their next token and sampler state — the
     /// prefill only reconstructed their KV prefix, so its logits are
     /// deliberately unused (consuming them would double-advance the
-    /// sampler and break byte-identity).
+    /// sampler and break byte-identity). `tick` comes from
+    /// [`assign_tick`] — drawn at admission, which is this call for the
+    /// monolithic path but an earlier round for a chunked prefill.
     fn lane_for(
         &self,
         item: PendingItem,
         tokens: Vec<i32>,
         logits: &[f32],
         lane_idx: usize,
-        admit_tick: &mut u64,
+        tick: u64,
         metrics: &mut EngineMetrics,
     ) -> Lane {
         match item {
-            PendingItem::Fresh(q) => {
-                *admit_tick += 1;
-                self.admit_lane(q, tokens, logits, *admit_tick, metrics)
-            }
+            PendingItem::Fresh(q) => self.admit_lane(q, tokens, logits, tick, metrics),
             // Resumes keep their original admission tick: age is measured
             // from first admission, so a victim does not become the
             // youngest (i.e. next) victim merely by having been evicted.
@@ -1943,6 +2232,7 @@ mod tests {
                     reply,
                 },
                 step,
+                0.0,
             );
             PendingItem::Fresh(q)
         };

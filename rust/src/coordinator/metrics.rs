@@ -64,6 +64,16 @@ pub struct ClassMetrics {
     /// Decode iterations to first token — the wall-clock-free TTFT the
     /// deterministic scheduler tests compare across classes.
     pub ttft_steps: StreamingHist,
+    /// Engine-clock milliseconds to first token, measured from the
+    /// submission stamp. Under `EngineClock::Steps` this is the
+    /// *charged* domain — decode steps plus the virtual prefill charge
+    /// (`prefill_charged_ms`) — so chunked-vs-monolithic TTFT
+    /// comparisons see the head-of-line blocking a monolithic prefill
+    /// imposes, which the raw `ttft_steps` counter cannot.
+    pub ttft_ms: StreamingHist,
+    /// Prefill chunks executed for this class's requests (0 unless the
+    /// engine runs with `prefill_chunk` set).
+    pub prefill_chunks: u64,
     pub e2e: StreamingHist,
 }
 
@@ -81,6 +91,8 @@ impl ClassMetrics {
             max_wait_steps: 0,
             ttft: StreamingHist::new(),
             ttft_steps: StreamingHist::new(),
+            ttft_ms: StreamingHist::new(),
+            prefill_chunks: 0,
             e2e: StreamingHist::new(),
         }
     }
@@ -121,6 +133,30 @@ pub struct EngineMetrics {
     pub requests_shed: u64,
     pub tokens_generated: u64,
     pub prefills: u64,
+    /// Real prompt tokens prefilled (padding lanes excluded) — the same
+    /// token count billed to the service-rate estimator, kept as a
+    /// counter so the padded-gang regression is observable.
+    pub prefill_tokens: u64,
+    /// Prefill chunks executed across all classes (0 under monolithic
+    /// prefill).
+    pub prefill_chunks: u64,
+    /// Prompt tokens prefilled through the chunked path specifically.
+    pub chunked_prefill_tokens: u64,
+    /// Blank re-prefills of padding lanes at the physical cache bound —
+    /// real backend work that used to be invisible to accounting (it
+    /// now also feeds the estimator and the flight recorder).
+    pub lane_reset_prefills: u64,
+    /// Per-completed-chunked-prefill stall: decode steps the gang ran
+    /// between a request's first chunk and its injection — how long the
+    /// chunked prefill was interleaved with (not blocking) decode.
+    pub prefill_stall: StreamingHist,
+    /// Virtual milliseconds of prefill work charged to the Steps clock
+    /// (`tokens × prefill_ms_per_token` per physical prefill). Folded
+    /// into `uptime_s`/`now_ms` so a monolithic prefill's head-of-line
+    /// blocking is visible in the charged time domain; 0.0 whenever
+    /// `prefill_ms_per_token` is 0.0 (every pinned scenario) and under
+    /// the wall clock (real time already includes prefill).
+    pub prefill_charged_ms: f64,
     pub decode_steps: u64,
     pub injections: u64,
     /// Padding-lane re-blanks at the physical cache bound (busy lanes
@@ -196,6 +232,12 @@ impl Default for EngineMetrics {
             requests_shed: 0,
             tokens_generated: 0,
             prefills: 0,
+            prefill_tokens: 0,
+            prefill_chunks: 0,
+            chunked_prefill_tokens: 0,
+            lane_reset_prefills: 0,
+            prefill_stall: StreamingHist::new(),
+            prefill_charged_ms: 0.0,
             decode_steps: 0,
             injections: 0,
             lane_resets: 0,
@@ -234,15 +276,22 @@ impl EngineMetrics {
     pub fn uptime_s(&self) -> f64 {
         match self.clock {
             EngineClock::Wall => self.started.elapsed().as_secs_f64(),
-            EngineClock::Steps { step_ms, .. } => self.decode_steps as f64 * step_ms / 1e3,
+            EngineClock::Steps { step_ms, .. } => {
+                (self.decode_steps as f64 * step_ms + self.prefill_charged_ms) / 1e3
+            }
         }
     }
 
-    /// Milliseconds on the engine clock, for trace timestamps.
-    fn now_ms(&self) -> f64 {
+    /// Milliseconds on the engine clock, for trace timestamps and the
+    /// charged-domain TTFT stamps. Under `Steps` this is decode steps
+    /// *plus* the virtual prefill charge, so time spent blocked behind
+    /// a monolithic prefill is visible even though no decode step ran.
+    pub fn now_ms(&self) -> f64 {
         match self.clock {
             EngineClock::Wall => self.started.elapsed().as_secs_f64() * 1e3,
-            EngineClock::Steps { step_ms, .. } => self.decode_steps as f64 * step_ms,
+            EngineClock::Steps { step_ms, .. } => {
+                self.decode_steps as f64 * step_ms + self.prefill_charged_ms
+            }
         }
     }
 
@@ -367,6 +416,8 @@ impl EngineMetrics {
             requests_shed: self.requests_shed,
             tokens_generated: self.tokens_generated,
             prefills: self.prefills,
+            prefill_chunks: self.prefill_chunks,
+            lane_reset_prefills: self.lane_reset_prefills,
             decode_steps: self.decode_steps,
             preemptions: self.preemptions,
             resumes: self.resumes,
@@ -396,6 +447,8 @@ impl EngineMetrics {
              admission: mean occupancy {:.1}% | preempts {} ({} partial, {} kept-reclaims) \
              / resumes {} ({} tok recomputed, {} saved) | grows {} (+{} blocks, {} stalls) \
              | aging promotions {}\n\
+             prefill:   {} tok real | chunks {} ({} tok chunked) | lane-reset prefills {} \
+             | stall_steps: {}\n\
              goodput:   {:.3} tok/step (deadline-hit tokens) | wasted {} tok \
              (missed-deadline + recompute) | shed errors {}\n\
              ttft_s:    {}\n\
@@ -430,6 +483,11 @@ impl EngineMetrics {
             self.grown_blocks,
             self.grow_stalls,
             self.aging_promotions,
+            self.prefill_tokens,
+            self.prefill_chunks,
+            self.chunked_prefill_tokens,
+            self.lane_reset_prefills,
+            self.prefill_stall.display(),
             self.goodput(),
             self.wasted_work_tokens(),
             self.shed_errors(),
@@ -448,7 +506,7 @@ impl EngineMetrics {
             s.push_str(&format!(
                 "\nclass {:<11} done {} | preempts {} | ttft mean {:.4}s \
                  ({:.1} steps, max wait {}) | e2e mean {:.4}s | \
-                 deadline hits {}/{} ({:.0}%) | shed {}",
+                 deadline hits {}/{} ({:.0}%) | shed {} | chunks {}",
                 p.name(),
                 c.done,
                 c.preemptions,
@@ -460,6 +518,7 @@ impl EngineMetrics {
                 c.deadline_hits + c.deadline_misses,
                 c.deadline_hit_rate() * 100.0,
                 c.requests_shed,
+                c.prefill_chunks,
             ));
         }
         s
@@ -705,6 +764,39 @@ mod tests {
         let ev = m.trace.iter().next().unwrap();
         assert_eq!(ev.ts_ms, 10.0);
         assert_eq!(ev.step, 5);
+    }
+
+    #[test]
+    fn prefill_charge_extends_the_steps_clock() {
+        let mut m = EngineMetrics::default();
+        m.clock = EngineClock::Steps { step_ms: 2.0, prefill_ms_per_token: 0.5 };
+        m.decode_steps = 10;
+        assert_eq!(m.now_ms(), 20.0);
+        assert_eq!(m.uptime_s(), 0.02);
+        // A 16-token prefill at 0.5 ms/tok advances the charged domain
+        // without consuming a decode step.
+        m.prefill_charged_ms += 8.0;
+        assert_eq!(m.now_ms(), 28.0);
+        assert!((m.uptime_s() - 0.028).abs() < 1e-15);
+        // Events recorded after the charge carry the charged stamp.
+        m.record(EventKind::RequestRejected { id: 1 });
+        assert_eq!(m.trace.iter().next().unwrap().ts_ms, 28.0);
+    }
+
+    #[test]
+    fn report_renders_prefill_accounting_line() {
+        let mut m = EngineMetrics::default();
+        m.prefill_tokens = 40;
+        m.prefill_chunks = 5;
+        m.chunked_prefill_tokens = 33;
+        m.lane_reset_prefills = 2;
+        let report = m.report();
+        assert!(
+            report.contains(
+                "prefill:   40 tok real | chunks 5 (33 tok chunked) | lane-reset prefills 2"
+            ),
+            "{report}"
+        );
     }
 
     #[test]

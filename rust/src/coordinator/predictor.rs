@@ -227,6 +227,27 @@ impl ServiceRateEstimator {
             EngineClock::Wall => self.prefill_tok_ewma_s.unwrap_or(0.0) * 1e3 * tokens as f64,
         }
     }
+
+    /// Admission-to-injection prefill cost for a prompt of `tokens`
+    /// under the engine's chunking config — the remaining-chunks signal
+    /// the shed replay prices in-flight and queued prefills with.
+    ///
+    /// Monolithic (`chunk == None`) is exactly [`Self::prefill_ms`]:
+    /// the PR 5 length-proportional model, bit-identical. Chunked
+    /// prefill does the same token work but spreads it over
+    /// `ceil(tokens / chunk)` scheduling rounds, and every round after
+    /// the first rides behind one decode step of the running gang, so
+    /// the extra interleaving delay is `(rounds − 1) · step_ms`.
+    pub fn prefill_cost_ms(&self, tokens: usize, chunk: Option<usize>) -> f64 {
+        let base = self.prefill_ms(tokens);
+        match chunk {
+            None | Some(0) => base,
+            Some(c) => {
+                let rounds = tokens.div_ceil(c).max(1);
+                base + (rounds - 1) as f64 * self.step_ms().unwrap_or(0.0)
+            }
+        }
+    }
 }
 
 #[cfg(test)]

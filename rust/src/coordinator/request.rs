@@ -140,6 +140,11 @@ pub struct QueuedRequest {
     /// is scheduling latency (queue wait + admission) even for traces
     /// that arrive mid-run, not an absolute uptime counter.
     pub submitted_step: u64,
+    /// Engine-clock milliseconds when the request entered the queue
+    /// (`EngineMetrics::now_ms`, which under `Steps` includes the
+    /// virtual prefill charge). First tokens are stamped against this
+    /// into the charged-domain `ClassMetrics::ttft_ms` histogram.
+    pub submitted_ms: f64,
     /// Absolute SLO deadline, arrival-stamped (`submitted + slo_ms`).
     /// `None` when the request carries no SLO.
     pub deadline: Option<Instant>,
@@ -154,12 +159,12 @@ impl QueuedRequest {
     /// Stamp a freshly submitted request: deadline is arrival-relative,
     /// so a request queued behind a backlog keeps the SLO its client
     /// measured from, not from whenever the scheduler first saw it idle.
-    pub fn stamp(req: GenRequest, submitted_step: u64) -> Self {
+    pub fn stamp(req: GenRequest, submitted_step: u64, submitted_ms: f64) -> Self {
         let submitted = Instant::now();
         let deadline = req
             .slo_ms
             .filter(|ms| ms.is_finite() && *ms > 0.0)
             .map(|ms| submitted + Duration::from_secs_f64(ms / 1000.0));
-        Self { req, submitted, submitted_step, deadline, aged: false }
+        Self { req, submitted, submitted_step, submitted_ms, deadline, aged: false }
     }
 }

@@ -5,6 +5,13 @@
 //! — so we implement three algorithms and ablate them
 //! (`cargo bench --bench topk_bench`): full sort O(S log S) — the paper's
 //! complexity model, binary heap O(S log k), and quickselect O(S) expected.
+//!
+//! All three rank by the same strict total order so the ablation compares
+//! identical selections: scores descend by IEEE-754 total order
+//! (`f32::total_cmp` semantics — positive NaN above +inf, negative NaN
+//! below −inf, −0.0 below +0.0) and exact ties break toward the lower
+//! index. Every algorithm therefore returns the same index *set* for any
+//! input, NaNs and duplicates included.
 
 /// Selection algorithm choice (ablation axis).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -14,8 +21,26 @@ pub enum TopKAlgo {
     QuickSelect,
 }
 
+/// IEEE-754 total-order key: `key(a) < key(b)` ⟺ `a.total_cmp(&b)` is
+/// `Less`. Shared by all three algorithms so they agree on NaN and ±0.0.
+#[inline]
+fn total_order_key(x: f32) -> i32 {
+    let b = x.to_bits() as i32;
+    b ^ (((b >> 31) as u32) >> 1) as i32
+}
+
+/// Strict total rank for index `i`: higher is better. Score descends by
+/// total order; equal scores break toward the lower index (`!i` descends
+/// as `i` ascends). Distinct for distinct indices, so partitioning and
+/// heap replacement never see an equal pair.
+#[inline]
+fn rank(scores: &[f32], i: u32) -> i64 {
+    ((total_order_key(scores[i as usize]) as i64) << 32) | (!i as i64 & 0xFFFF_FFFF)
+}
+
 /// Dispatch. Returns the indices of the k largest scores (order
-/// unspecified; ties broken arbitrarily). k is clamped to len.
+/// unspecified; exact ties broken toward the lower index, identically
+/// across algorithms). k is clamped to len.
 pub fn top_k_indices(algo: TopKAlgo, scores: &[f32], k: usize) -> Vec<u32> {
     match algo {
         TopKAlgo::Sort => top_k_sort(scores, k),
@@ -28,11 +53,7 @@ pub fn top_k_indices(algo: TopKAlgo, scores: &[f32], k: usize) -> Vec<u32> {
 pub fn top_k_sort(scores: &[f32], k: usize) -> Vec<u32> {
     let k = k.min(scores.len());
     let mut idx: Vec<u32> = (0..scores.len() as u32).collect();
-    idx.sort_unstable_by(|&a, &b| {
-        scores[b as usize]
-            .partial_cmp(&scores[a as usize])
-            .unwrap_or(std::cmp::Ordering::Equal)
-    });
+    idx.sort_unstable_by_key(|&i| std::cmp::Reverse(rank(scores, i)));
     idx.truncate(k);
     idx
 }
@@ -45,20 +66,17 @@ pub fn top_k_heap(scores: &[f32], k: usize) -> Vec<u32> {
     if k == 0 {
         return Vec::new();
     }
-    // f32 isn't Ord; use the IEEE-754 total-order trick on bits.
-    fn key(x: f32) -> i32 {
-        let b = x.to_bits() as i32;
-        b ^ (((b >> 31) as u32) >> 1) as i32
-    }
-    let mut heap: BinaryHeap<Reverse<(i32, u32)>> = BinaryHeap::with_capacity(k + 1);
-    for (i, &s) in scores.iter().enumerate() {
-        let item = Reverse((key(s), i as u32));
+    // Heap top is the worst kept rank; a candidate replaces it only when
+    // strictly better (ranks are distinct, so no equal case exists).
+    let mut heap: BinaryHeap<Reverse<(i64, u32)>> = BinaryHeap::with_capacity(k + 1);
+    for i in 0..scores.len() as u32 {
+        let r = rank(scores, i);
         if heap.len() < k {
-            heap.push(item);
-        } else if let Some(&Reverse((min_key, _))) = heap.peek() {
-            if key(s) > min_key {
+            heap.push(Reverse((r, i)));
+        } else if let Some(&Reverse((min_rank, _))) = heap.peek() {
+            if r > min_rank {
                 heap.pop();
-                heap.push(item);
+                heap.push(Reverse((r, i)));
             }
         }
     }
@@ -78,7 +96,7 @@ pub fn top_k_quickselect(scores: &[f32], k: usize) -> Vec<u32> {
     let mut idx: Vec<u32> = (0..n as u32).collect();
     let mut lo = 0usize;
     let mut hi = n;
-    // Invariant: the k largest end up in idx[..k].
+    // Invariant: the k largest (by `rank`) end up in idx[..k].
     let mut rng_state = 0x9E3779B97F4A7C15u64 ^ (n as u64);
     while hi - lo > 1 {
         // Random-ish pivot to dodge adversarial patterns.
@@ -86,12 +104,12 @@ pub fn top_k_quickselect(scores: &[f32], k: usize) -> Vec<u32> {
         rng_state ^= rng_state >> 7;
         rng_state ^= rng_state << 17;
         let pivot_i = lo + (rng_state as usize) % (hi - lo);
-        let pivot = scores[idx[pivot_i] as usize];
-        // Partition: larger-than-pivot first.
+        let pivot = rank(scores, idx[pivot_i]);
+        // Partition: higher-ranked-than-pivot first.
         let mut store = lo;
         idx.swap(pivot_i, hi - 1);
         for i in lo..hi - 1 {
-            if scores[idx[i] as usize] > pivot {
+            if rank(scores, idx[i]) > pivot {
                 idx.swap(i, store);
                 store += 1;
             }
@@ -131,14 +149,55 @@ mod tests {
             let a = as_sorted_set(&top_k_sort(&scores, k));
             let b = as_sorted_set(&top_k_heap(&scores, k));
             let c = as_sorted_set(&top_k_quickselect(&scores, k));
-            // With ties possible, compare selected *values* not indices.
-            let vals = |ix: &[u32]| {
-                let mut v: Vec<f32> = ix.iter().map(|&i| scores[i as usize]).collect();
-                v.sort_by(|x, y| x.partial_cmp(y).unwrap());
-                v
-            };
-            assert_eq!(vals(&a), vals(&b), "trial {trial} heap");
-            assert_eq!(vals(&a), vals(&c), "trial {trial} quickselect");
+            // The shared total order makes selections identical by
+            // *index*, not just by value.
+            assert_eq!(a, b, "trial {trial} heap");
+            assert_eq!(a, c, "trial {trial} quickselect");
+        }
+    }
+
+    #[test]
+    fn algorithms_agree_on_nan_duplicate_and_signed_zero_inputs() {
+        // Adversarial rows for the old mixed-comparator bug: NaN-laden
+        // (the partial_cmp-based sort treated NaN as equal-to-anything
+        // while the heap total-ordered it), heavy exact duplicates, and
+        // ±0.0 (total order separates them; `==` does not).
+        let nan = f32::NAN;
+        let cases: Vec<Vec<f32>> = vec![
+            vec![nan, 1.0, 2.0, nan, 0.5],
+            vec![nan; 6],
+            vec![1.0, nan, f32::INFINITY, f32::NEG_INFINITY, -nan, 0.0],
+            vec![3.0, 3.0, 3.0, 3.0, 3.0],
+            vec![0.0, -0.0, 0.0, -0.0, 1.0, -1.0],
+            vec![-0.0, 0.0],
+            vec![2.0, 2.0, nan, 2.0, nan, -0.0, 0.0, 2.0],
+            vec![f32::MIN, f32::MAX, 0.0, nan, -0.0, f32::EPSILON, -f32::EPSILON],
+        ];
+        for (ci, scores) in cases.iter().enumerate() {
+            for k in 0..=scores.len() {
+                let a = as_sorted_set(&top_k_sort(scores, k));
+                let b = as_sorted_set(&top_k_heap(scores, k));
+                let c = as_sorted_set(&top_k_quickselect(scores, k));
+                assert_eq!(a, b, "case {ci} k {k} heap");
+                assert_eq!(a, c, "case {ci} k {k} quickselect");
+                assert_eq!(a.len(), k, "case {ci} k {k} cardinality");
+            }
+        }
+        // Ties break toward the lower index, so selections are exact:
+        // five equal scores, k=2 → indices {0, 1}.
+        let tied = vec![3.0, 3.0, 3.0, 3.0, 3.0];
+        for algo in [TopKAlgo::Sort, TopKAlgo::Heap, TopKAlgo::QuickSelect] {
+            assert_eq!(as_sorted_set(&top_k_indices(algo, &tied, 2)), vec![0, 1], "{algo:?}");
+        }
+        // total_cmp semantics: positive NaN outranks +inf, +0.0 outranks
+        // -0.0.
+        let mixed = vec![f32::INFINITY, nan, 5.0];
+        for algo in [TopKAlgo::Sort, TopKAlgo::Heap, TopKAlgo::QuickSelect] {
+            assert_eq!(as_sorted_set(&top_k_indices(algo, &mixed, 1)), vec![1], "{algo:?}");
+        }
+        let zeros = vec![-0.0, 0.0];
+        for algo in [TopKAlgo::Sort, TopKAlgo::Heap, TopKAlgo::QuickSelect] {
+            assert_eq!(as_sorted_set(&top_k_indices(algo, &zeros, 1)), vec![1], "{algo:?}");
         }
     }
 

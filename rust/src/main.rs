@@ -65,6 +65,8 @@ fn main() -> Result<()> {
                  \x20 --shed-policy off|strict|hedged         predictive early load shedding\n\
                  \x20 --shed-margin 0.1                       (hedged) shed only past this\n\
                  \x20                                         fraction over the deadline\n\
+                 \x20 --prefill-chunk N                       chunked prefill: N tokens per\n\
+                 \x20                                         scheduling round (0 = monolithic)\n\
                  \x20 --trace-out FILE.jsonl                  dump the flight recorder after\n\
                  \x20                                         the run (+ FILE.chrome.json)\n\
                  generate: --prompt STR --max-tokens N --temperature T\n\
@@ -146,6 +148,10 @@ fn engine_config(args: &Args, svc: &RuntimeService) -> Result<EngineConfig> {
         // Serving always runs on the wall clock; the deterministic
         // decode-steps twin is a test/bench harness knob.
         clock: EngineClock::Wall,
+        prefill_chunk: match args.usize_or("prefill-chunk", 0) {
+            0 => None,
+            n => Some(n),
+        },
         verbose: args.flag("verbose"),
     })
 }

@@ -74,7 +74,16 @@ pub enum EventKind {
     RequestShed { id: u64, class: u8, predicted_ttft_ms: f64 },
     RequestRejected { id: u64 },
     PrefillStart { id: u64, lane: u32, tokens: u32 },
+    /// One executed chunk of a chunked prefill: the lane now holds
+    /// `done` of `total` prompt tokens. Emitted strictly inside a
+    /// `prefill_start`…`prefill_end` episode with `done` increasing —
+    /// the interleaving the trace-check lifecycle verifies.
+    PrefillChunk { id: u64, lane: u32, done: u32, total: u32 },
     PrefillEnd { id: u64, lane: u32, tokens: u32 },
+    /// Padding-lane blank re-prefill at the physical cache bound —
+    /// carries no request id (the lane holds no request) but is real
+    /// backend work, so it is traced and billed like any prefill.
+    LaneReset { lane: u32 },
     FirstToken { id: u64, ttft_steps: u64 },
     PreemptFull { id: u64, lane: u32, freed_blocks: u32 },
     PreemptPartial { id: u64, lane: u32, freed_blocks: u32, kept_len: u32 },
@@ -103,7 +112,9 @@ impl EventKind {
             EventKind::RequestShed { .. } => "request_shed",
             EventKind::RequestRejected { .. } => "request_rejected",
             EventKind::PrefillStart { .. } => "prefill_start",
+            EventKind::PrefillChunk { .. } => "prefill_chunk",
             EventKind::PrefillEnd { .. } => "prefill_end",
+            EventKind::LaneReset { .. } => "lane_reset",
             EventKind::FirstToken { .. } => "first_token",
             EventKind::PreemptFull { .. } => "preempt_full",
             EventKind::PreemptPartial { .. } => "preempt_partial",
@@ -121,13 +132,16 @@ impl EventKind {
             | EventKind::RequestShed { id, .. }
             | EventKind::RequestRejected { id }
             | EventKind::PrefillStart { id, .. }
+            | EventKind::PrefillChunk { id, .. }
             | EventKind::PrefillEnd { id, .. }
             | EventKind::FirstToken { id, .. }
             | EventKind::PreemptFull { id, .. }
             | EventKind::PreemptPartial { id, .. }
             | EventKind::Resume { id, .. }
             | EventKind::Finish { id, .. } => Some(id),
-            EventKind::SchedRound { .. } | EventKind::Pool(_) => None,
+            EventKind::SchedRound { .. } | EventKind::LaneReset { .. } | EventKind::Pool(_) => {
+                None
+            }
         }
     }
 }

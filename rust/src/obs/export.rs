@@ -64,6 +64,15 @@ pub fn event_json(ev: &TraceEvent) -> Json {
             fields.push(("lane", json::num(lane as f64)));
             fields.push(("tokens", json::num(tokens as f64)));
         }
+        EventKind::PrefillChunk { id, lane, done, total } => {
+            fields.push(("id", json::num(id as f64)));
+            fields.push(("lane", json::num(lane as f64)));
+            fields.push(("done", json::num(done as f64)));
+            fields.push(("total", json::num(total as f64)));
+        }
+        EventKind::LaneReset { lane } => {
+            fields.push(("lane", json::num(lane as f64)));
+        }
         EventKind::FirstToken { id, ttft_steps } => {
             fields.push(("id", json::num(id as f64)));
             fields.push(("ttft_steps", json::num(ttft_steps as f64)));
@@ -311,6 +320,12 @@ struct IdState {
     first_tokens: u32,
     preempts: u32,
     resumes: u32,
+    /// Inside a `prefill_start`…`prefill_end` episode (chunk events are
+    /// only legal here; a preempt also closes the episode).
+    prefill_open: bool,
+    /// Last `done` seen from a `prefill_chunk` in the open episode —
+    /// chunk progress must be strictly increasing and ≤ total.
+    chunk_done: Option<u64>,
     terminal: Option<&'static str>,
 }
 
@@ -323,13 +338,14 @@ fn terminal_of(name: &str) -> Option<&'static str> {
     }
 }
 
-/// Core invariant check over `(event_name, request_id)` pairs in trace
-/// order. Shared by the in-memory and JSONL paths so both certify the
-/// same contract.
+/// Core invariant check over `(event_name, request_id, chunk)` triples
+/// in trace order (`chunk` is the `(done, total)` payload of
+/// `prefill_chunk` events, `None` otherwise). Shared by the in-memory
+/// and JSONL paths so both certify the same contract.
 fn check_stream<S, I>(items: I, dropped: u64) -> TraceCheck
 where
     S: AsRef<str>,
-    I: IntoIterator<Item = (S, Option<u64>)>,
+    I: IntoIterator<Item = (S, Option<u64>, Option<(u64, u64)>)>,
 {
     let mut out = TraceCheck::default();
     if dropped > 0 {
@@ -337,7 +353,7 @@ where
             .push(format!("{dropped} events lost to ring overwrite; trace is not conservable"));
     }
     let mut ids: HashMap<u64, IdState> = HashMap::new();
-    for (name, id) in items {
+    for (name, id, chunk) in items {
         out.events += 1;
         let name = name.as_ref();
         let Some(id) = id else { continue };
@@ -362,7 +378,49 @@ where
                     out.violations.push(format!("id {id}: more than one first_token"));
                 }
             }
-            "preempt_full" | "preempt_partial" => st.preempts += 1,
+            "prefill_start" => {
+                if st.prefill_open {
+                    out.violations
+                        .push(format!("id {id}: prefill_start inside an open prefill episode"));
+                }
+                st.prefill_open = true;
+                st.chunk_done = None;
+            }
+            "prefill_chunk" => {
+                if !st.prefill_open {
+                    out.violations
+                        .push(format!("id {id}: prefill_chunk outside a prefill episode"));
+                }
+                if let Some((done, total)) = chunk {
+                    if done > total {
+                        out.violations
+                            .push(format!("id {id}: prefill_chunk done {done} > total {total}"));
+                    }
+                    if let Some(prev) = st.chunk_done {
+                        if done <= prev {
+                            out.violations.push(format!(
+                                "id {id}: prefill_chunk done {done} not after {prev}"
+                            ));
+                        }
+                    }
+                    st.chunk_done = Some(done);
+                }
+            }
+            "prefill_end" => {
+                if !st.prefill_open {
+                    out.violations
+                        .push(format!("id {id}: prefill_end without prefill_start"));
+                }
+                st.prefill_open = false;
+                st.chunk_done = None;
+            }
+            "preempt_full" | "preempt_partial" => {
+                st.preempts += 1;
+                // A mid-prefill preemption abandons the episode; the
+                // re-admission opens a fresh one.
+                st.prefill_open = false;
+                st.chunk_done = None;
+            }
             "resume" => {
                 st.resumes += 1;
                 if st.resumes > st.preempts {
@@ -399,7 +457,15 @@ where
 /// Check a live recorder in memory.
 pub fn check_recorder(rec: &FlightRecorder) -> TraceCheck {
     check_stream(
-        rec.iter().map(|e| (e.kind.name(), e.kind.request_id())),
+        rec.iter().map(|e| {
+            let chunk = match e.kind {
+                EventKind::PrefillChunk { done, total, .. } => {
+                    Some((done as u64, total as u64))
+                }
+                _ => None,
+            };
+            (e.kind.name(), e.kind.request_id(), chunk)
+        }),
         rec.dropped(),
     )
 }
@@ -414,7 +480,7 @@ pub fn check_jsonl(src: &str) -> Result<TraceCheck> {
         anyhow::bail!("not a flight-recorder trace (missing meta line)");
     }
     let dropped = meta.get("dropped").and_then(|d| d.as_f64()).unwrap_or(0.0) as u64;
-    let mut items: Vec<(String, Option<u64>)> = Vec::new();
+    let mut items: Vec<(String, Option<u64>, Option<(u64, u64)>)> = Vec::new();
     let mut last_seq: Option<u64> = None;
     for (i, line) in lines.enumerate() {
         let v = Json::parse(line).map_err(|e| anyhow::anyhow!("line {}: {e}", i + 2))?;
@@ -434,7 +500,14 @@ pub fn check_jsonl(src: &str) -> Result<TraceCheck> {
         }
         last_seq = Some(seq);
         let id = v.get("id").and_then(|x| x.as_f64()).map(|x| x as u64);
-        items.push((name, id));
+        let chunk = match (
+            v.get("done").and_then(|x| x.as_f64()),
+            v.get("total").and_then(|x| x.as_f64()),
+        ) {
+            (Some(d), Some(t)) if name == "prefill_chunk" => Some((d as u64, t as u64)),
+            _ => None,
+        };
+        items.push((name, id, chunk));
     }
     Ok(check_stream(items, dropped))
 }
@@ -502,6 +575,90 @@ mod tests {
         r.record(0.0, 0, admit(1));
         r.record(1.0, 0, finish(1));
         assert!(!check_recorder(&r).ok());
+    }
+
+    #[test]
+    fn chunked_prefill_lifecycle_conserves() {
+        let r = rec_with(&[
+            admit(1),
+            EventKind::PrefillStart { id: 1, lane: 0, tokens: 10 },
+            EventKind::PrefillChunk { id: 1, lane: 0, done: 4, total: 10 },
+            EventKind::PrefillChunk { id: 1, lane: 0, done: 8, total: 10 },
+            EventKind::PrefillChunk { id: 1, lane: 0, done: 10, total: 10 },
+            EventKind::PrefillEnd { id: 1, lane: 0, tokens: 10 },
+            EventKind::FirstToken { id: 1, ttft_steps: 3 },
+            finish(1),
+        ]);
+        let chk = check_recorder(&r);
+        assert!(chk.ok(), "{:?}", chk.violations);
+        // And the JSONL path parses done/total into the same verdict.
+        let from_text = check_jsonl(&trace_jsonl(&r)).unwrap();
+        assert!(from_text.ok(), "{:?}", from_text.violations);
+    }
+
+    #[test]
+    fn preempt_closes_the_prefill_episode_and_readmission_reopens_it() {
+        let r = rec_with(&[
+            admit(1),
+            EventKind::PrefillStart { id: 1, lane: 0, tokens: 10 },
+            EventKind::PrefillChunk { id: 1, lane: 0, done: 4, total: 10 },
+            EventKind::PreemptFull { id: 1, lane: 0, freed_blocks: 2 },
+            // Fresh episode restarts chunk progress from scratch.
+            EventKind::PrefillStart { id: 1, lane: 1, tokens: 10 },
+            EventKind::PrefillChunk { id: 1, lane: 1, done: 4, total: 10 },
+            EventKind::PrefillChunk { id: 1, lane: 1, done: 10, total: 10 },
+            EventKind::PrefillEnd { id: 1, lane: 1, tokens: 10 },
+            EventKind::FirstToken { id: 1, ttft_steps: 9 },
+            finish(1),
+        ]);
+        let chk = check_recorder(&r);
+        // The preempt had no resume (the request was re-admitted as
+        // fresh work), which is legal: resumes ≤ preempts.
+        assert!(chk.ok(), "{:?}", chk.violations);
+    }
+
+    #[test]
+    fn chunk_lifecycle_violations_are_caught() {
+        // Chunk outside any episode.
+        let chk = check_recorder(&rec_with(&[
+            admit(1),
+            EventKind::PrefillChunk { id: 1, lane: 0, done: 4, total: 10 },
+            finish(1),
+        ]));
+        assert!(chk.violations.iter().any(|v| v.contains("outside a prefill episode")));
+        // Non-increasing done.
+        let chk = check_recorder(&rec_with(&[
+            admit(1),
+            EventKind::PrefillStart { id: 1, lane: 0, tokens: 10 },
+            EventKind::PrefillChunk { id: 1, lane: 0, done: 4, total: 10 },
+            EventKind::PrefillChunk { id: 1, lane: 0, done: 4, total: 10 },
+            EventKind::PrefillEnd { id: 1, lane: 0, tokens: 10 },
+            finish(1),
+        ]));
+        assert!(chk.violations.iter().any(|v| v.contains("not after")));
+        // done past total.
+        let chk = check_recorder(&rec_with(&[
+            admit(1),
+            EventKind::PrefillStart { id: 1, lane: 0, tokens: 10 },
+            EventKind::PrefillChunk { id: 1, lane: 0, done: 11, total: 10 },
+            EventKind::PrefillEnd { id: 1, lane: 0, tokens: 10 },
+            finish(1),
+        ]));
+        assert!(chk.violations.iter().any(|v| v.contains("done 11 > total 10")));
+        // Nested prefill_start and dangling prefill_end.
+        let chk = check_recorder(&rec_with(&[
+            admit(1),
+            EventKind::PrefillStart { id: 1, lane: 0, tokens: 10 },
+            EventKind::PrefillStart { id: 1, lane: 0, tokens: 10 },
+            finish(1),
+        ]));
+        assert!(chk.violations.iter().any(|v| v.contains("inside an open prefill episode")));
+        let chk = check_recorder(&rec_with(&[
+            admit(1),
+            EventKind::PrefillEnd { id: 1, lane: 0, tokens: 10 },
+            finish(1),
+        ]));
+        assert!(chk.violations.iter().any(|v| v.contains("without prefill_start")));
     }
 
     #[test]

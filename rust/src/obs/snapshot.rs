@@ -70,6 +70,8 @@ pub struct StatsSnapshot {
     pub requests_shed: u64,
     pub tokens_generated: u64,
     pub prefills: u64,
+    pub prefill_chunks: u64,
+    pub lane_reset_prefills: u64,
     pub decode_steps: u64,
     pub preemptions: u64,
     pub resumes: u64,
@@ -123,6 +125,8 @@ impl StatsSnapshot {
             ("requests_shed", json::num(self.requests_shed as f64)),
             ("tokens_generated", json::num(self.tokens_generated as f64)),
             ("prefills", json::num(self.prefills as f64)),
+            ("prefill_chunks", json::num(self.prefill_chunks as f64)),
+            ("lane_reset_prefills", json::num(self.lane_reset_prefills as f64)),
             ("decode_steps", json::num(self.decode_steps as f64)),
             ("preemptions", json::num(self.preemptions as f64)),
             ("resumes", json::num(self.resumes as f64)),
@@ -159,6 +163,8 @@ impl StatsSnapshot {
         counter("loki_requests_shed_total", "Requests shed by predictive admission.", self.requests_shed as f64);
         counter("loki_tokens_generated_total", "Decode tokens produced.", self.tokens_generated as f64);
         counter("loki_prefills_total", "Prefill calls.", self.prefills as f64);
+        counter("loki_prefill_chunks_total", "Chunked-prefill chunks executed.", self.prefill_chunks as f64);
+        counter("loki_lane_reset_prefills_total", "Padding-lane blank re-prefills.", self.lane_reset_prefills as f64);
         counter("loki_decode_steps_total", "Decode iterations.", self.decode_steps as f64);
         counter("loki_preemptions_total", "Lane preemptions.", self.preemptions as f64);
         counter("loki_resumes_total", "Preempted requests resumed.", self.resumes as f64);

@@ -31,6 +31,39 @@ pub trait DecodeBackend: Send {
     /// id and last-position logits per prompt.
     fn prefill(&self, pca: &str, prompts: Vec<Vec<i32>>) -> Result<(StateId, Vec<Vec<f32>>)>;
 
+    /// Incrementally extend a batch-1 prefill state: `state` already
+    /// holds `full[..done]`; append the next `n` tokens so it holds
+    /// `full[..done + n]`. Returns the (possibly new) state id and the
+    /// last-position logits row. Pass `done == 0` with `state == 0` to
+    /// open a fresh chunked prefill.
+    ///
+    /// The default implementation *emulates* incremental prefill by
+    /// freeing `state` and re-prefilling the whole prefix — correct for
+    /// any history-pure backend but O(done + n) work per chunk (O(L²/c)
+    /// for the full prompt). The stub-XLA `RuntimeHandle` stack rides
+    /// this emulation because its compiled prefill graph has no
+    /// append-to-state entry point (see ROADMAP "block-table-aware
+    /// compiled path"); `SimRuntime` overrides it with a true O(n)
+    /// in-place append. Under emulation, wall-clock prefill-cost
+    /// observations attribute the full re-prefill to `n` chunk tokens,
+    /// so the estimator's per-token prefill cost reads pessimistic for
+    /// long prompts — a documented limitation, not a correctness issue.
+    fn prefill_extend(
+        &self,
+        pca: &str,
+        state: StateId,
+        full: &[i32],
+        done: usize,
+        n: usize,
+    ) -> Result<(StateId, Vec<f32>)> {
+        if done > 0 {
+            self.free(state);
+        }
+        let upto = (done + n).min(full.len());
+        let (id, mut logits) = self.prefill(pca, vec![full[..upto].to_vec()])?;
+        Ok((id, logits.swap_remove(0)))
+    }
+
     /// Advance every lane of a state by one token; returns logits per lane.
     fn decode(&self, req: DecodeRequest) -> Result<Vec<Vec<f32>>>;
 

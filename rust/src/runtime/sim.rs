@@ -92,6 +92,38 @@ impl DecodeBackend for SimRuntime {
         Ok((id, logits))
     }
 
+    fn prefill_extend(
+        &self,
+        _pca: &str,
+        state: StateId,
+        full: &[i32],
+        done: usize,
+        n: usize,
+    ) -> Result<(StateId, Vec<f32>)> {
+        let upto = (done + n).min(full.len());
+        ensure!(done < upto, "sim: empty prefill_extend chunk");
+        let mut st = self.inner.lock().unwrap();
+        if done == 0 {
+            st.next += 1;
+            let id = st.next;
+            st.states.insert(id, vec![full[..upto].to_vec()]);
+            drop(st);
+            return Ok((id, self.logits(&full[..upto])));
+        }
+        let lanes = st
+            .states
+            .get_mut(&state)
+            .ok_or_else(|| anyhow!("sim: prefill_extend of unknown state {state}"))?;
+        ensure!(lanes.len() == 1, "sim: prefill_extend on a gang of {}", lanes.len());
+        ensure!(
+            lanes[0].len() == done && lanes[0] == &full[..done],
+            "sim: prefill_extend prefix mismatch at {done}"
+        );
+        lanes[0].extend_from_slice(&full[done..upto]);
+        drop(st);
+        Ok((state, self.logits(&full[..upto])))
+    }
+
     fn decode(&self, req: DecodeRequest) -> Result<Vec<Vec<f32>>> {
         let mut st = self.inner.lock().unwrap();
         let lanes = st
@@ -222,6 +254,78 @@ mod tests {
             })
             .unwrap();
         assert_eq!(l_orig[0], l_resume[0], "resume diverged from uncontended decode");
+    }
+
+    #[test]
+    fn chunked_prefill_extend_matches_monolithic_prefill() {
+        // Growing a state chunk-by-chunk must land on the same history —
+        // and therefore bit-identical logits — as one monolithic prefill.
+        let s = sim();
+        let full: Vec<i32> = (0..23).map(|i| ((i * 5 + 1) % 32) as i32).collect();
+        let (_, l_mono) = s.prefill("pca", vec![full.clone()]).unwrap();
+        let mut state = 0;
+        let mut done = 0usize;
+        let mut last = Vec::new();
+        for chunk in [4usize, 7, 1, 999] {
+            let (id, l) = s.prefill_extend("pca", state, &full, done, chunk).unwrap();
+            state = id;
+            done = (done + chunk).min(full.len());
+            last = l;
+        }
+        assert_eq!(done, full.len());
+        assert_eq!(last, l_mono[0], "chunked prefill diverged from monolithic");
+        // The chunked state decodes like a monolithic one.
+        let d = s
+            .decode(DecodeRequest {
+                state,
+                variant: crate::runtime::DecodeVariant::Full,
+                tokens: vec![9],
+            })
+            .unwrap();
+        let mut hist = full.clone();
+        hist.push(9);
+        assert_eq!(d[0], s.logits(&hist));
+    }
+
+    #[test]
+    fn default_prefill_extend_emulation_matches_exact_override() {
+        // A backend without an incremental entry point inherits the
+        // re-prefill emulation; it must produce the same logits as the
+        // sim's exact O(n) append (both are history-pure).
+        struct NoExtend(SimRuntime);
+        impl DecodeBackend for NoExtend {
+            fn prefill(
+                &self,
+                pca: &str,
+                prompts: Vec<Vec<i32>>,
+            ) -> Result<(StateId, Vec<Vec<f32>>)> {
+                self.0.prefill(pca, prompts)
+            }
+            fn decode(&self, req: DecodeRequest) -> Result<Vec<Vec<f32>>> {
+                self.0.decode(req)
+            }
+            fn inject(&self, gang: StateId, lane: StateId, idx: usize) -> Result<()> {
+                self.0.inject(gang, lane, idx)
+            }
+            fn free(&self, id: StateId) {
+                self.0.free(id)
+            }
+        }
+        let exact = sim();
+        let emu = NoExtend(sim());
+        let full: Vec<i32> = (0..17).map(|i| ((i * 3 + 2) % 32) as i32).collect();
+        let (mut se, mut de) = (0, 0usize);
+        let (mut sm, mut dm) = (0, 0usize);
+        for chunk in [5usize, 5, 5, 5] {
+            let (ide, le) = exact.prefill_extend("pca", se, &full, de, chunk).unwrap();
+            let (idm, lm) = emu.prefill_extend("pca", sm, &full, dm, chunk).unwrap();
+            assert_eq!(le, lm, "emulation diverged at done={de}");
+            se = ide;
+            de = (de + chunk).min(full.len());
+            sm = idm;
+            dm = (dm + chunk).min(full.len());
+        }
+        assert_eq!(de, full.len());
     }
 
     #[test]

@@ -1089,3 +1089,206 @@ fn reservation_formula_is_pinned() {
         1024
     );
 }
+
+/// Satellite regression: prefill attribution counts only the *real*
+/// prompt tokens of an admitted batch — a mostly-padded bootstrap gang
+/// must not credit its filler lanes. (Crediting padding diluted the
+/// estimator's per-token prefill rate, under-pricing long prompts until
+/// `Strict` admitted provably-doomed requests.)
+#[test]
+fn prefill_accounting_ignores_padding_lanes() {
+    let cfg = EngineConfig {
+        clock: EngineClock::Steps { step_ms: 1.0, prefill_ms_per_token: 1.0 },
+        ..Default::default()
+    };
+    // One 8-token prompt into a gang of 4: three padding lanes ride
+    // along in the batched bootstrap prefill.
+    let specs = vec![Spec {
+        prompt: prompt(0, 8),
+        max_new: 4,
+        sampling: SampleCfg::greedy(),
+        priority: Priority::Interactive,
+        slo_ms: None,
+    }];
+    let (got, m) = run(&cfg, caps(64, 4), &specs);
+    assert_eq!(got.len(), 1);
+    assert_eq!(
+        m.prefill_tokens, 8,
+        "bootstrap must bill the real prompt only, not its 3 padding lanes: {}",
+        m.report()
+    );
+    // The charged virtual time follows the same count: 8 tokens at
+    // 1 ms/token on the engine clock — not 11.
+    assert!((m.prefill_charged_ms - 8.0).abs() < 1e-9, "charged {}", m.prefill_charged_ms);
+}
+
+/// Tentpole: the PR 5 first-token/preempt-resume scenario must hold on
+/// the chunked-prefill path too. With the chunk covering the whole
+/// prompt the schedule is the monolithic one (B is preempted as a
+/// *busy* lane and resumed); with a smaller chunk the same round's
+/// preemption lands mid-prefill — the item requeues *unopened* (a
+/// fresh request stays fresh: no resume, nothing recomputed) and
+/// restarts its prefill from token zero. Either way outputs are
+/// byte-identical to the uncontended twin and first-token bookkeeping
+/// fires exactly once per request.
+#[test]
+fn chunked_prefill_preempt_resume_is_byte_identical() {
+    let clock = EngineClock::Steps { step_ms: 1.0, prefill_ms_per_token: 0.0 };
+    // Same cast as `first_token_metrics_recorded_once_across_preempt_resume`:
+    // A's speculative growth preempts B in the very round B is admitted
+    // (C's completion freed the blocks B took).
+    let specs = vec![
+        Spec {
+            prompt: prompt(0, 8),
+            max_new: 16,
+            sampling: SampleCfg::greedy(),
+            priority: Priority::Interactive,
+            slo_ms: None,
+        },
+        Spec {
+            prompt: prompt(1, 8),
+            max_new: 8,
+            sampling: SampleCfg::greedy(),
+            priority: Priority::Interactive,
+            slo_ms: None,
+        },
+        Spec {
+            prompt: prompt(2, 8),
+            max_new: 4,
+            sampling: SampleCfg::greedy(),
+            priority: Priority::Interactive,
+            slo_ms: Some(1000.0),
+        },
+    ];
+    let base_cfg = EngineConfig {
+        pool: PoolConfig { block_size: BS, num_blocks: 0, prefix_sharing: true },
+        clock,
+        ..Default::default()
+    };
+    let (base, bm) = run(&base_cfg, caps(256, 2), &specs);
+    assert_eq!(bm.preemptions, 0, "worst-case pool must never preempt");
+
+    let contended = |chunk: usize| EngineConfig {
+        pool: PoolConfig { block_size: BS, num_blocks: 4, prefix_sharing: true },
+        admission: AdmissionPolicy::Speculative { reserve_frac: 0.0, headroom_blocks: 1 },
+        clock,
+        prefill_chunk: Some(chunk),
+        ..Default::default()
+    };
+
+    // Chunk ≥ prompt: every prefill is a single chunk, injected in its
+    // admission round — the monolithic schedule, so B is preempted as a
+    // busy lane before its first delivery and resumed with a
+    // prompt-only replay.
+    let (got, m) = run(&contended(8), caps(256, 2), &specs);
+    assert_same_outputs(&base, &got);
+    assert_eq!(m.requests_done, 3, "{}", m.report());
+    assert_eq!((m.preemptions, m.resumes), (1, 1), "{}", m.report());
+    assert_eq!(m.recomputed_tokens, 8, "resume replays the prompt only: {}", m.report());
+    assert_eq!(got[2].timing.preemptions, 1, "B carries its preemption count");
+    assert_eq!(m.ttft.count(), 3, "{}", m.report());
+    let int = m.class(Priority::Interactive);
+    assert_eq!(int.ttft_ms.count(), 3);
+    assert_eq!(int.deadline_hits + int.deadline_misses, 1, "B graded exactly once");
+    assert_eq!(int.deadline_hits, 1);
+    // One chunk per admission: A, C, B, and B's resume.
+    assert_eq!(m.prefill_chunks, 4, "{}", m.report());
+    assert_eq!(m.prefill_stall.count(), 4);
+
+    // Chunk smaller than the prompt: the same preemption lands while B
+    // is still `Prefilling`. The partial batch-1 state is discarded,
+    // the whole reservation returns, and the item re-enters its band
+    // front unopened.
+    let (got, m) = run(&contended(4), caps(256, 2), &specs);
+    assert_same_outputs(&base, &got);
+    assert_eq!(m.requests_done, 3, "{}", m.report());
+    assert_eq!(m.preemptions, 1, "{}", m.report());
+    assert_eq!(m.resumes, 0, "mid-prefill preemption requeues unopened: {}", m.report());
+    assert_eq!(m.recomputed_tokens, 0, "{}", m.report());
+    assert_eq!(got[2].timing.preemptions, 0, "a fresh restart carries no preemption count");
+    assert_eq!(m.ttft.count(), 3, "{}", m.report());
+    let int = m.class(Priority::Interactive);
+    assert_eq!(int.ttft_ms.count(), 3);
+    assert_eq!(int.deadline_hits + int.deadline_misses, 1, "B graded exactly once");
+    assert_eq!(int.deadline_hits, 1);
+    // A and C take 2 chunks apiece; B runs 1 chunk, forfeits it to the
+    // preemption, and re-runs both from scratch.
+    assert_eq!(m.prefill_chunks, 7, "{}", m.report());
+    assert_eq!(m.prefill_stall.count(), 3, "only completed prefills record a stall");
+}
+
+/// Tentpole acceptance (deterministic twin of bench scenario 7): under
+/// the steps clock with a nonzero per-token prefill charge, chunking a
+/// long prompt drops interactive TTFT — their first tokens no longer
+/// wait out the whole monolithic prefill charge — while completed
+/// streams stay byte-identical, the long prompt's penalty is bounded by
+/// one round per extra chunk, and a rerun reproduces everything.
+#[test]
+fn chunked_prefill_cuts_interactive_ttft_with_identical_outputs() {
+    const CHUNK: usize = 16;
+    let clock = EngineClock::Steps { step_ms: 1.0, prefill_ms_per_token: 0.5 };
+    // All four requests fit the bootstrap gang, so the monolithic run
+    // prefills the long prompt in the same batch as the interactive
+    // turns — the worst case, where its whole 48 ms prefill charge
+    // lands on the clock before every first token. (The interactive
+    // band still sorts ahead of Batch in the queue; with one gang-wide
+    // batch that only decides lane order, which nothing here observes.)
+    let mut specs = vec![Spec {
+        prompt: prompt(0, 96),
+        max_new: 8,
+        sampling: SampleCfg::greedy(),
+        priority: Priority::Batch,
+        slo_ms: Some(50.0),
+    }];
+    for i in 1..4u64 {
+        specs.push(Spec {
+            prompt: prompt(i, 8),
+            max_new: 4,
+            sampling: SampleCfg::greedy(),
+            priority: Priority::Interactive,
+            slo_ms: Some(400.0),
+        });
+    }
+    let cfg = |chunk: Option<usize>| EngineConfig {
+        gang_batch: 4,
+        victim_policy: VictimPolicy::DeadlineAware,
+        clock,
+        prefill_chunk: chunk,
+        ..Default::default()
+    };
+    let (mono, mono_m) = run(&cfg(None), caps(256, 4), &specs);
+    let (chunked, chunked_m) = run(&cfg(Some(CHUNK)), caps(256, 4), &specs);
+    assert_eq!(mono_m.requests_done, 4, "{}", mono_m.report());
+    assert_eq!(chunked_m.requests_done, 4, "{}", chunked_m.report());
+    assert_same_outputs(&mono, &chunked);
+
+    // Interactive first tokens land between the long prompt's chunks.
+    let mono_p99 = mono_m.class(Priority::Interactive).ttft_ms.percentile(99.0);
+    let chunked_p99 = chunked_m.class(Priority::Interactive).ttft_ms.percentile(99.0);
+    assert!(
+        chunked_p99 < mono_p99,
+        "chunked int ttft_ms p99 {chunked_p99} must beat monolithic {mono_p99}"
+    );
+    // Bounded penalty: at most one extra decode round per chunk after
+    // the first.
+    let extra_rounds = (96usize.div_ceil(CHUNK) - 1) as u64;
+    assert!(
+        chunked_m.decode_steps <= mono_m.decode_steps + extra_rounds,
+        "decode steps {} must stay within {} + {}",
+        chunked_m.decode_steps,
+        mono_m.decode_steps,
+        extra_rounds
+    );
+    // Chunk accounting is exact: 96/16 = 6 chunks for the long prompt,
+    // one apiece for the three short ones; monolithic runs none.
+    assert_eq!(chunked_m.prefill_chunks, 9, "{}", chunked_m.report());
+    assert_eq!(chunked_m.chunked_prefill_tokens, 120);
+    assert_eq!(chunked_m.prefill_stall.count(), 4);
+    assert_eq!(mono_m.prefill_chunks, 0, "{}", mono_m.report());
+
+    // Deterministic: a rerun reproduces the streams and the histogram.
+    let (again, again_m) = run(&cfg(Some(CHUNK)), caps(256, 4), &specs);
+    assert_same_outputs(&chunked, &again);
+    let again_p99 = again_m.class(Priority::Interactive).ttft_ms.percentile(99.0);
+    assert_eq!(again_p99, chunked_p99);
+}
