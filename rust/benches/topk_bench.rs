@@ -39,7 +39,7 @@ fn main() {
             .median_secs();
             let best = [("sort", t_sort), ("heap", t_heap), ("quickselect", t_qs)]
                 .iter()
-                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .min_by(|a, b| a.1.total_cmp(&b.1))
                 .unwrap()
                 .0
                 .to_string();

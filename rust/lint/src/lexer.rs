@@ -1,0 +1,374 @@
+//! Comment/string-aware lexical scanner for Rust sources.
+//!
+//! `repro-lint` cannot be a grep: after four PRs of fixing
+//! `partial_cmp().unwrap()` panics, the tree is full of *comments* (and
+//! test fixtures, and doc strings) that mention the very patterns the
+//! rules forbid. This module classifies every character of a source file
+//! as code, comment, or literal content, so the rule matchers in
+//! [`crate::rules`] only ever see real code.
+//!
+//! The scanner is a hand-rolled state machine, not a full parser. It
+//! understands:
+//!
+//! * line comments (`//`, `///`, `//!`) and *nested* block comments,
+//! * string literals with escapes, raw strings (`r"…"`, `r#"…"#`, any
+//!   number of hashes), byte strings (`b"…"`, `br#"…"#`),
+//! * char / byte-char literals vs lifetimes (`'a'` vs `&'a str`),
+//! * raw identifiers (`r#match` is code, not a raw string),
+//! * `#[cfg(test)]` regions — brace-matched and excluded from linting,
+//!   so unit tests can exercise forbidden patterns without waivers.
+//!
+//! Columns are preserved: the `code` and `comment` views of a line are
+//! the original line with out-of-class characters blanked to spaces, so
+//! diagnostics point at the true source column (char columns, not bytes).
+
+/// One source line split into aligned per-class views.
+#[derive(Debug)]
+pub struct Line {
+    /// The original line, verbatim (no trailing newline).
+    pub raw: String,
+    /// Code characters only; comments and literal contents blanked.
+    pub code: String,
+    /// Comment characters only; waivers are parsed from this view.
+    pub comment: String,
+    /// Inside a `#[cfg(test)]` region — excluded from linting.
+    pub in_test: bool,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Class {
+    Code,
+    Comment,
+    Literal,
+}
+
+/// Split a source file into per-line code/comment views with
+/// `#[cfg(test)]` regions marked.
+pub fn strip(src: &str) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let classes = classify(&chars);
+    let mut lines = split_lines(&chars, &classes);
+    mark_test_regions(&mut lines);
+    lines
+}
+
+pub(crate) fn is_ident(ch: char) -> bool {
+    ch.is_ascii_alphanumeric() || ch == '_'
+}
+
+fn classify(c: &[char]) -> Vec<Class> {
+    let n = c.len();
+    let mut k = vec![Class::Code; n];
+    let mut i = 0;
+    while i < n {
+        let ch = c[i];
+        if ch == '/' && i + 1 < n && c[i + 1] == '/' {
+            while i < n && c[i] != '\n' {
+                k[i] = Class::Comment;
+                i += 1;
+            }
+        } else if ch == '/' && i + 1 < n && c[i + 1] == '*' {
+            let mut depth = 0usize;
+            while i < n {
+                if i + 1 < n && c[i] == '/' && c[i + 1] == '*' {
+                    depth += 1;
+                    k[i] = Class::Comment;
+                    k[i + 1] = Class::Comment;
+                    i += 2;
+                } else if i + 1 < n && c[i] == '*' && c[i + 1] == '/' {
+                    depth = depth.saturating_sub(1);
+                    k[i] = Class::Comment;
+                    k[i + 1] = Class::Comment;
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    k[i] = Class::Comment;
+                    i += 1;
+                }
+            }
+        } else if ch == '"' {
+            i = consume_string(c, &mut k, i);
+        } else if (ch == 'r' || ch == 'b') && (i == 0 || !is_ident(c[i - 1])) {
+            match consume_prefixed(c, &mut k, i) {
+                Some(next) => i = next,
+                None => i += 1,
+            }
+        } else if ch == '\'' {
+            i = consume_char_or_lifetime(c, &mut k, i);
+        } else {
+            i += 1;
+        }
+    }
+    k
+}
+
+/// Consume a `"…"` literal starting at the opening quote; the quotes
+/// stay code (harmless to matchers), the contents become `Literal`.
+/// Returns the index just past the closing quote.
+fn consume_string(c: &[char], k: &mut [Class], open: usize) -> usize {
+    let n = c.len();
+    let mut i = open + 1;
+    while i < n {
+        if c[i] == '\\' && i + 1 < n {
+            k[i] = Class::Literal;
+            k[i + 1] = Class::Literal;
+            i += 2;
+        } else if c[i] == '"' {
+            return i + 1;
+        } else {
+            k[i] = Class::Literal;
+            i += 1;
+        }
+    }
+    i
+}
+
+/// At an `r`/`b` that may prefix a literal: consume `b"…"`, `b'…'`,
+/// `r"…"`, `r#"…"#`, `br#"…"#`. Returns `None` for plain identifiers
+/// and raw identifiers (`r#match`).
+fn consume_prefixed(c: &[char], k: &mut [Class], i: usize) -> Option<usize> {
+    let n = c.len();
+    let (raw, body) = match c[i] {
+        'b' if i + 1 < n && c[i + 1] == 'r' => (true, i + 2),
+        'b' => (false, i + 1),
+        'r' => (true, i + 1),
+        _ => return None,
+    };
+    if !raw {
+        if body < n && c[body] == '"' {
+            return Some(consume_string(c, k, body));
+        }
+        if body < n && c[body] == '\'' {
+            return Some(consume_char_or_lifetime(c, k, body));
+        }
+        return None;
+    }
+    let mut j = body;
+    let mut hashes = 0usize;
+    while j < n && c[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= n || c[j] != '"' {
+        // `r#match` raw identifier, or a plain ident starting with r/br.
+        return None;
+    }
+    j += 1;
+    // Raw strings have no escapes; they close at `"` + `hashes` hashes.
+    while j < n {
+        let closed = c[j] == '"'
+            && c.get(j + 1..j + 1 + hashes).is_some_and(|h| h.iter().all(|&x| x == '#'));
+        if closed {
+            return Some(j + 1 + hashes);
+        }
+        k[j] = Class::Literal;
+        j += 1;
+    }
+    Some(j)
+}
+
+/// At a `'`: a char literal (`'x'`, `'\n'`, `'\u{1F600}'`) consumes
+/// through its closing quote with contents blanked; a lifetime or loop
+/// label (`'a`, `'static`, `'outer:`) stays code.
+fn consume_char_or_lifetime(c: &[char], k: &mut [Class], i: usize) -> usize {
+    let n = c.len();
+    if i + 1 < n && c[i + 1] == '\\' {
+        let mut j = i + 1;
+        while j < n && c[j] != '\'' {
+            if c[j] == '\\' {
+                k[j] = Class::Literal;
+                if j + 1 < n {
+                    k[j + 1] = Class::Literal;
+                }
+                j += 2;
+            } else {
+                k[j] = Class::Literal;
+                j += 1;
+            }
+        }
+        return (j + 1).min(n);
+    }
+    if i + 2 < n && c[i + 2] == '\'' && c[i + 1] != '\'' {
+        k[i + 1] = Class::Literal;
+        return i + 3;
+    }
+    i + 1
+}
+
+fn split_lines(c: &[char], k: &[Class]) -> Vec<Line> {
+    let mut lines = Vec::new();
+    let mut raw = String::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    for (i, &ch) in c.iter().enumerate() {
+        if ch == '\n' {
+            lines.push(Line {
+                raw: std::mem::take(&mut raw),
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+                in_test: false,
+            });
+            continue;
+        }
+        raw.push(ch);
+        match k[i] {
+            Class::Code => {
+                code.push(ch);
+                comment.push(' ');
+            }
+            Class::Comment => {
+                code.push(' ');
+                comment.push(ch);
+            }
+            Class::Literal => {
+                code.push(' ');
+                comment.push(' ');
+            }
+        }
+    }
+    if !raw.is_empty() {
+        lines.push(Line { raw, code, comment, in_test: false });
+    }
+    lines
+}
+
+fn brace_delta(depth: usize, code: &str) -> usize {
+    let opens = code.matches('{').count();
+    let closes = code.matches('}').count();
+    (depth + opens).saturating_sub(closes)
+}
+
+/// Mark every line inside a `#[cfg(test)]`-gated item. The attribute
+/// arms a pending state; the next `{` opens a brace-matched region.
+/// A `;` before any `{` disarms it (`#[cfg(test)] use …;`). Braces are
+/// counted on the code view only, so literals/comments never desync.
+fn mark_test_regions(lines: &mut [Line]) {
+    let mut depth = 0usize;
+    let mut pending = false;
+    for line in lines.iter_mut() {
+        if depth > 0 {
+            line.in_test = true;
+            depth = brace_delta(depth, &line.code);
+            continue;
+        }
+        if pending {
+            line.in_test = true;
+            if line.code.contains('{') {
+                depth = brace_delta(0, &line.code);
+                pending = false;
+            } else if line.code.contains(';') {
+                pending = false;
+            }
+            continue;
+        }
+        if line.code.contains("#[cfg(test)]") {
+            line.in_test = true;
+            let attr_end = line.code.find("#[cfg(test)]").map(|p| p + 12).unwrap_or(0);
+            let rest = &line.code[attr_end..];
+            if rest.contains('{') {
+                depth = brace_delta(0, rest);
+            } else if !rest.contains(';') {
+                pending = true;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> Vec<String> {
+        strip(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn line_and_nested_block_comments_are_stripped() {
+        let src = "let x = 1; // partial_cmp here\n/* a /* nested */ b */ let y = 2;\n";
+        let code = code_of(src);
+        assert!(!code[0].contains("partial_cmp"));
+        assert!(code[0].contains("let x = 1;"));
+        assert!(!code[1].contains('a'), "block comment body must be blanked: {:?}", code[1]);
+        assert!(code[1].contains("let y = 2;"));
+    }
+
+    #[test]
+    fn comment_view_keeps_comment_text_for_waivers() {
+        let src = "let x = 1; // lint:allow(float-ord): why\n";
+        let lines = strip(src);
+        assert!(lines[0].comment.contains("lint:allow(float-ord): why"));
+        assert!(!lines[0].code.contains("lint"));
+    }
+
+    #[test]
+    fn string_contents_are_blanked_but_quotes_remain() {
+        let src = "let s = \"Instant::now() { } \\\" quoted\";\n";
+        let code = &code_of(src)[0];
+        assert!(!code.contains("Instant"));
+        assert!(!code.contains('{'));
+        assert_eq!(code.matches('"').count(), 2);
+    }
+
+    #[test]
+    fn raw_and_byte_strings_are_blanked() {
+        let src = concat!(
+            "let a = r#\"partial_cmp() \"inner\" \"#;\n",
+            "let b = r\"SystemTime::now()\";\n",
+            "let c = b\"HashMap<u8>\";\n",
+            "let d = br##\"Vec<f64>\"##;\n",
+        );
+        for line in code_of(src) {
+            assert!(!line.contains("partial_cmp"), "{line:?}");
+            assert!(!line.contains("SystemTime"), "{line:?}");
+            assert!(!line.contains("HashMap"), "{line:?}");
+            assert!(!line.contains("Vec<f64"), "{line:?}");
+        }
+    }
+
+    #[test]
+    fn raw_identifiers_are_code_not_strings() {
+        let src = "let r#match = 1; let after = r#match + 1;\n";
+        let code = &code_of(src)[0];
+        assert!(code.contains("let after"), "{code:?}");
+    }
+
+    #[test]
+    fn char_literals_blank_but_lifetimes_survive() {
+        let src = "fn f<'a>(s: &'a str) -> (char, char) { ('{', '\\'') }\n";
+        let code = &code_of(src)[0];
+        assert!(code.contains("fn f<'a>(s: &'a str)"), "{code:?}");
+        assert_eq!(code.matches('{').count(), 1, "brace char literal must blank: {code:?}");
+    }
+
+    #[test]
+    fn columns_are_preserved() {
+        let src = "abc /* x */ def\n";
+        let lines = strip(src);
+        assert_eq!(lines[0].code.find("def"), src.find("def"));
+    }
+
+    #[test]
+    fn cfg_test_regions_are_marked_and_brace_matched() {
+        let src = concat!(
+            "pub fn live() {}\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    #[test]\n",
+            "    fn t() { let s = \"}\"; }\n",
+            "}\n",
+            "pub fn live_again() {}\n",
+        );
+        let lines = strip(src);
+        let flags: Vec<bool> = lines.iter().map(|l| l.in_test).collect();
+        assert_eq!(flags, vec![false, true, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn cfg_test_on_a_bodyless_item_does_not_swallow_the_file() {
+        let src = "#[cfg(test)]\nuse std::fmt::Debug;\npub fn live() { let x = 1; }\n";
+        let lines = strip(src);
+        assert!(!lines[2].in_test, "code after `#[cfg(test)] use …;` must stay live");
+    }
+}

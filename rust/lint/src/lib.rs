@@ -1,0 +1,33 @@
+//! `repro-lint` — a hermetic invariant linter for this repository.
+//!
+//! The headline claims of this reproduction (paged-vs-flat bit-identity,
+//! chunked-vs-monolithic byte-identical streams, Steps-clock trace
+//! byte-equality) rest on invariants that were re-broken and re-fixed by
+//! hand across four PRs. This crate mechanizes them as a blocking CI
+//! gate:
+//!
+//! | rule | forbids |
+//! |------|---------|
+//! | `float-ord` | `partial_cmp` on floats (NaN panics / unstable order) |
+//! | `raw-clock` | `Instant::now`/`SystemTime::now` outside the clock module |
+//! | `nondet-iter` | `HashMap`/`HashSet` in determinism-critical modules |
+//! | `unbounded-metrics` | float `Vec` accumulators in metrics paths |
+//! | `panic-in-hot-path` | `unwrap`/`expect`/`panic!` in engine/server hot paths |
+//!
+//! Matching is lexical but comment/string-aware ([`lexer`]): rule names
+//! mentioned in comments, string literals, raw strings, or `#[cfg(test)]`
+//! regions never trip. Violations are suppressed per-line with
+//! `// lint:allow(rule): reason` — the reason is mandatory ([`rules`]).
+//!
+//! The crate is pure `std` with zero dependencies, by design: it gates
+//! CI, so it must build hermetically under the same no-registry
+//! constraint that forced the vendored `anyhow`/`xla` crates.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{
+    applicable, lint_paths, lint_source, parse_waiver, to_json, Diagnostic, FileResult, Report,
+    Waiver, BAD_WAIVER, FLOAT_ORD, NONDET_ITER, PANIC_IN_HOT_PATH, RAW_CLOCK, RULES,
+    UNBOUNDED_METRICS,
+};

@@ -1,0 +1,83 @@
+//! CLI for `repro-lint`. Exit codes: 0 = clean, 1 = violations,
+//! 2 = usage or I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "\
+repro-lint — hermetic invariant linter (determinism + float safety)
+
+USAGE:
+    repro-lint [--check] [--json] <path>...
+
+ARGS:
+    <path>...   Files or directories to scan (recursively, *.rs only;
+                hidden entries and target/ are skipped)
+
+FLAGS:
+    --check     Explicitly request gate semantics (the default — exit 1
+                on any violation); accepted so CI invocations read clearly
+    --json      Emit the report as JSON instead of human-readable lines
+    -h, --help  Show this help
+
+RULES:
+    float-ord           no `partial_cmp` on floats — use `total_cmp`/`linalg::topk`
+    raw-clock           no raw `Instant::now`/`SystemTime::now` in
+                        coordinator/runtime/obs/kvpool (clock module exempt)
+    nondet-iter         no `HashMap`/`HashSet` in determinism-critical modules
+    unbounded-metrics   no float `Vec` accumulators in metrics paths
+    panic-in-hot-path   no `unwrap`/`expect`/`panic!` in engine/server hot paths
+
+WAIVERS:
+    // lint:allow(rule): reason     (reason mandatory; on its own line,
+                                     applies to the next line of code)
+";
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut roots: Vec<PathBuf> = Vec::new();
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--check" => {}
+            "-h" | "--help" => {
+                print!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            flag if flag.starts_with('-') => {
+                eprintln!("repro-lint: unknown flag `{flag}`\n\n{USAGE}");
+                return ExitCode::from(2);
+            }
+            _ => roots.push(PathBuf::from(arg)),
+        }
+    }
+    if roots.is_empty() {
+        eprintln!("repro-lint: no paths given\n\n{USAGE}");
+        return ExitCode::from(2);
+    }
+    let report = match repro_lint::lint_paths(&roots) {
+        Ok(report) => report,
+        Err(err) => {
+            eprintln!("repro-lint: {err}");
+            return ExitCode::from(2);
+        }
+    };
+    if json {
+        print!("{}", repro_lint::to_json(&report));
+    } else {
+        for d in &report.diagnostics {
+            println!("{d}");
+        }
+        println!(
+            "repro-lint: {} file(s) scanned, {} violation(s), {} waived",
+            report.files_scanned,
+            report.diagnostics.len(),
+            report.waived
+        );
+    }
+    if report.diagnostics.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

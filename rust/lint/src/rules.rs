@@ -1,0 +1,631 @@
+//! The rule registry, per-module policy map, waiver parsing, and the
+//! lint driver that ties them together.
+//!
+//! Every rule here fossilizes a bug class this repo has already paid
+//! for (see the README "Static analysis" section for the PR history):
+//!
+//! * `float-ord` — `partial_cmp().unwrap()` NaN panics (PRs 3, 5, 6, 7).
+//! * `raw-clock` — raw `Instant::now()` stamps leaking past the
+//!   `EngineClock`, breaking Steps-clock trace byte-equality (PR 5's
+//!   double-stamp bug).
+//! * `nondet-iter` — `HashMap`/`HashSet` iteration order poisoning
+//!   determinism-critical modules.
+//! * `unbounded-metrics` — unbounded `Vec` accumulators in metrics hot
+//!   paths (replaced by `StreamingHist` in PR 6).
+//! * `panic-in-hot-path` — `unwrap`/`expect`/`panic!` in the engine
+//!   scheduling loop and server handler, where a panic drops every
+//!   in-flight request.
+//!
+//! Waiver syntax: `// lint:allow(rule): reason` (reason mandatory).
+//! A waiver on a code line suppresses matches on that line; a waiver on
+//! a comment-only line suppresses matches on the next line containing
+//! code. Malformed waivers (missing reason, unknown rule) emit a
+//! `bad-waiver` diagnostic and suppress nothing.
+
+use crate::lexer::{self, is_ident};
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub const FLOAT_ORD: &str = "float-ord";
+pub const RAW_CLOCK: &str = "raw-clock";
+pub const NONDET_ITER: &str = "nondet-iter";
+pub const UNBOUNDED_METRICS: &str = "unbounded-metrics";
+pub const PANIC_IN_HOT_PATH: &str = "panic-in-hot-path";
+/// Pseudo-rule for malformed waivers; not waivable itself.
+pub const BAD_WAIVER: &str = "bad-waiver";
+
+/// Every enforceable rule, in severity-agnostic registry order.
+pub const RULES: [&str; 5] = [
+    FLOAT_ORD,
+    RAW_CLOCK,
+    NONDET_ITER,
+    UNBOUNDED_METRICS,
+    PANIC_IN_HOT_PATH,
+];
+
+struct Pattern {
+    rule: &'static str,
+    text: &'static str,
+    /// Require a non-identifier char (or start of line) before the match.
+    start_boundary: bool,
+    /// Require a non-identifier char (or end of line) after the match.
+    end_boundary: bool,
+    message: &'static str,
+}
+
+const PATTERNS: [Pattern; 13] = [
+    Pattern {
+        rule: FLOAT_ORD,
+        text: "partial_cmp",
+        start_boundary: true,
+        end_boundary: true,
+        message: "float ordering via `partial_cmp` — use `total_cmp` (or `linalg::topk`) \
+                  so NaN cannot panic or destabilize the sort",
+    },
+    Pattern {
+        rule: RAW_CLOCK,
+        text: "Instant::now",
+        start_boundary: true,
+        end_boundary: true,
+        message: "raw `Instant::now()` outside the clock module — route through \
+                  `EngineClock`/`coordinator::clock` so the Steps twin stays deterministic",
+    },
+    Pattern {
+        rule: RAW_CLOCK,
+        text: "SystemTime::now",
+        start_boundary: true,
+        end_boundary: true,
+        message: "raw `SystemTime::now()` outside the clock module — route through \
+                  `EngineClock`/`coordinator::clock` so the Steps twin stays deterministic",
+    },
+    Pattern {
+        rule: NONDET_ITER,
+        text: "HashMap<",
+        start_boundary: true,
+        end_boundary: false,
+        message: "`HashMap` in a determinism-critical module — iteration order is \
+                  nondeterministic; use `BTreeMap`, sort before iterating, or waive \
+                  keyed-only access",
+    },
+    Pattern {
+        rule: NONDET_ITER,
+        text: "HashMap::<",
+        start_boundary: true,
+        end_boundary: false,
+        message: "`HashMap` in a determinism-critical module — iteration order is \
+                  nondeterministic; use `BTreeMap`, sort before iterating, or waive \
+                  keyed-only access",
+    },
+    Pattern {
+        rule: NONDET_ITER,
+        text: "HashSet<",
+        start_boundary: true,
+        end_boundary: false,
+        message: "`HashSet` in a determinism-critical module — iteration order is \
+                  nondeterministic; use `BTreeSet`, sort before iterating, or waive \
+                  keyed-only access",
+    },
+    Pattern {
+        rule: NONDET_ITER,
+        text: "HashSet::<",
+        start_boundary: true,
+        end_boundary: false,
+        message: "`HashSet` in a determinism-critical module — iteration order is \
+                  nondeterministic; use `BTreeSet`, sort before iterating, or waive \
+                  keyed-only access",
+    },
+    Pattern {
+        rule: UNBOUNDED_METRICS,
+        text: "Vec<f32",
+        start_boundary: true,
+        end_boundary: false,
+        message: "unbounded float `Vec` accumulator in a metrics path — use \
+                  `obs::StreamingHist` (bounded log-bucketed histogram)",
+    },
+    Pattern {
+        rule: UNBOUNDED_METRICS,
+        text: "Vec<f64",
+        start_boundary: true,
+        end_boundary: false,
+        message: "unbounded float `Vec` accumulator in a metrics path — use \
+                  `obs::StreamingHist` (bounded log-bucketed histogram)",
+    },
+    Pattern {
+        rule: PANIC_IN_HOT_PATH,
+        text: ".unwrap()",
+        start_boundary: false,
+        end_boundary: false,
+        message: "`unwrap()` in the scheduling loop / server handler — a panic here \
+                  drops every in-flight request; handle the error or waive with the \
+                  invariant that makes it unreachable",
+    },
+    Pattern {
+        rule: PANIC_IN_HOT_PATH,
+        text: ".expect(",
+        start_boundary: false,
+        end_boundary: false,
+        message: "`expect()` in the scheduling loop / server handler — a panic here \
+                  drops every in-flight request; handle the error or waive with the \
+                  invariant that makes it unreachable",
+    },
+    Pattern {
+        rule: PANIC_IN_HOT_PATH,
+        text: "panic!",
+        start_boundary: true,
+        end_boundary: false,
+        message: "`panic!` in the scheduling loop / server handler — a panic here \
+                  drops every in-flight request; handle the error or waive with the \
+                  invariant that makes it unreachable",
+    },
+    Pattern {
+        rule: PANIC_IN_HOT_PATH,
+        text: "unreachable!",
+        start_boundary: true,
+        end_boundary: false,
+        message: "`unreachable!` in the scheduling loop / server handler — a panic \
+                  here drops every in-flight request; handle the error or waive with \
+                  the invariant that makes it unreachable",
+    },
+];
+
+/// Normalize a path for policy matching: forward slashes, leading `/`
+/// so `contains("/src/coordinator/")` works on relative inputs too.
+fn norm(path: &Path) -> String {
+    let mut s = path.to_string_lossy().replace('\\', "/");
+    if !s.starts_with('/') {
+        s.insert(0, '/');
+    }
+    s
+}
+
+/// The per-module policy map: which rule applies to which file.
+///
+/// Wall-clock serving code (`util::bench`, `experiments`, `eval`,
+/// `main.rs`, benches, examples) may read real clocks; the deterministic
+/// twin (`coordinator`, `runtime`, `obs`, `kvpool`) may not, except the
+/// sanctioned `coordinator/clock.rs` module.
+pub fn applicable(rule: &str, path: &Path) -> bool {
+    let p = norm(path);
+    match rule {
+        FLOAT_ORD => true,
+        RAW_CLOCK => {
+            !p.ends_with("/src/coordinator/clock.rs")
+                && ["/src/coordinator/", "/src/runtime/", "/src/obs/", "/src/kvpool/"]
+                    .iter()
+                    .any(|m| p.contains(m))
+        }
+        NONDET_ITER => [
+            "/src/coordinator/",
+            "/src/kvpool/",
+            "/src/runtime/",
+            "/src/obs/",
+            "/src/attnsim/",
+            "/src/linalg/",
+            "/src/data/",
+        ]
+        .iter()
+        .any(|m| p.contains(m)),
+        UNBOUNDED_METRICS => {
+            p.contains("/src/obs/") || p.ends_with("/src/coordinator/metrics.rs")
+        }
+        PANIC_IN_HOT_PATH => {
+            p.ends_with("/src/coordinator/engine.rs") || p.contains("/src/server/")
+        }
+        _ => false,
+    }
+}
+
+/// A parsed `lint:allow` waiver, or why it failed to parse.
+pub enum Waiver {
+    /// Validated rule names this waiver suppresses.
+    Rules(Vec<String>),
+    /// Malformed: the contained message explains what is wrong. A
+    /// malformed waiver suppresses nothing.
+    Malformed(String),
+}
+
+/// Parse a waiver out of a line's comment view. Returns `None` when the
+/// comment contains no `lint:allow(` marker at all.
+pub fn parse_waiver(comment: &str) -> Option<Waiver> {
+    let marker = "lint:allow(";
+    let start = comment.find(marker)?;
+    let after = &comment[start + marker.len()..];
+    let close = match after.find(')') {
+        Some(c) => c,
+        None => {
+            return Some(Waiver::Malformed(
+                "unclosed waiver — expected `lint:allow(rule): reason`".to_string(),
+            ))
+        }
+    };
+    let rules: Vec<String> = after[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    if rules.is_empty() {
+        return Some(Waiver::Malformed(
+            "empty rule list — expected `lint:allow(rule): reason`".to_string(),
+        ));
+    }
+    if let Some(bad) = rules.iter().find(|r| !RULES.contains(&r.as_str())) {
+        return Some(Waiver::Malformed(format!(
+            "unknown rule `{bad}` — known rules: {}",
+            RULES.join(", ")
+        )));
+    }
+    let rest = after[close + 1..].trim_start();
+    let reason_ok = rest
+        .strip_prefix(':')
+        .map(|r| !r.trim().is_empty())
+        .unwrap_or(false);
+    if !reason_ok {
+        return Some(Waiver::Malformed(
+            "waiver reason is mandatory — `lint:allow(rule): reason`".to_string(),
+        ));
+    }
+    Some(Waiver::Rules(rules))
+}
+
+/// One violation (or `bad-waiver`) at a file:line:col.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// 1-based character column.
+    pub col: usize,
+    pub rule: String,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}:{}: [{}] {}",
+            self.path, self.line, self.col, self.rule, self.message
+        )
+    }
+}
+
+/// Result of linting one source file.
+pub struct FileResult {
+    pub diagnostics: Vec<Diagnostic>,
+    /// Number of matches suppressed by valid waivers.
+    pub waived: usize,
+}
+
+/// Lint one file's contents. Pure — no filesystem access.
+pub fn lint_source(path: &Path, src: &str) -> FileResult {
+    let display = path.to_string_lossy().replace('\\', "/");
+    let lines = lexer::strip(src);
+    let mut diagnostics = Vec::new();
+    let mut waived = 0usize;
+
+    // Pass 1: resolve waivers. `active[i]` holds the rule names waived on
+    // line i. A waiver on a comment-only line forwards to the next line
+    // containing code (skipping blank and comment-only lines).
+    let mut active: Vec<Vec<String>> = vec![Vec::new(); lines.len()];
+    let mut pending: Vec<String> = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if line.in_test {
+            pending.clear();
+            continue;
+        }
+        let has_code = !line.code.trim().is_empty();
+        if has_code && !pending.is_empty() {
+            active[i].append(&mut pending);
+        }
+        match parse_waiver(&line.comment) {
+            None => {}
+            Some(Waiver::Malformed(msg)) => {
+                let col = line.comment.find("lint:allow(").map_or(1, |c| c + 1);
+                diagnostics.push(Diagnostic {
+                    path: display.clone(),
+                    line: i + 1,
+                    col,
+                    rule: BAD_WAIVER.to_string(),
+                    message: msg,
+                });
+            }
+            Some(Waiver::Rules(rules)) => {
+                if has_code {
+                    active[i].extend(rules);
+                } else {
+                    pending.extend(rules);
+                }
+            }
+        }
+    }
+
+    // Pass 2: match patterns against the code view of each live line.
+    for (i, line) in lines.iter().enumerate() {
+        if line.in_test || line.code.trim().is_empty() {
+            continue;
+        }
+        let code: Vec<char> = line.code.chars().collect();
+        for pat in PATTERNS.iter() {
+            if !applicable(pat.rule, path) {
+                continue;
+            }
+            for col0 in find_matches(&code, pat) {
+                if active[i].iter().any(|r| r == pat.rule) {
+                    waived += 1;
+                } else {
+                    diagnostics.push(Diagnostic {
+                        path: display.clone(),
+                        line: i + 1,
+                        col: col0 + 1,
+                        rule: pat.rule.to_string(),
+                        message: pat.message.to_string(),
+                    });
+                }
+            }
+        }
+    }
+
+    diagnostics.sort_by(|a, b| (a.line, a.col, &a.rule).cmp(&(b.line, b.col, &b.rule)));
+    FileResult { diagnostics, waived }
+}
+
+/// All start positions (char columns, 0-based) where the pattern occurs
+/// in a line's code view, honoring identifier boundaries.
+fn find_matches(code: &[char], pat: &Pattern) -> Vec<usize> {
+    let needle: Vec<char> = pat.text.chars().collect();
+    let (n, m) = (code.len(), needle.len());
+    let mut out = Vec::new();
+    if m == 0 || n < m {
+        return out;
+    }
+    for start in 0..=n - m {
+        if code[start..start + m] != needle[..] {
+            continue;
+        }
+        if pat.start_boundary && start > 0 && is_ident(code[start - 1]) {
+            continue;
+        }
+        if pat.end_boundary && start + m < n && is_ident(code[start + m]) {
+            continue;
+        }
+        out.push(start);
+    }
+    out
+}
+
+/// Aggregate result over a set of roots.
+pub struct Report {
+    pub diagnostics: Vec<Diagnostic>,
+    pub files_scanned: usize,
+    pub waived: usize,
+}
+
+/// Walk the given files/directories (recursively, `.rs` only, skipping
+/// hidden entries and `target/`), lint each file, and aggregate. File
+/// order is sorted so output and JSON are byte-deterministic.
+pub fn lint_paths(roots: &[PathBuf]) -> io::Result<Report> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for root in roots {
+        collect_rs(root, &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+    let mut report = Report { diagnostics: Vec::new(), files_scanned: 0, waived: 0 };
+    for file in &files {
+        let src = fs::read_to_string(file)?;
+        let result = lint_source(file, &src);
+        report.files_scanned += 1;
+        report.waived += result.waived;
+        report.diagnostics.extend(result.diagnostics);
+    }
+    Ok(report)
+}
+
+fn collect_rs(path: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let meta = fs::metadata(path)?;
+    if meta.is_file() {
+        if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path.to_path_buf());
+        }
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> = fs::read_dir(path)?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<io::Result<_>>()?;
+    entries.sort();
+    for entry in entries {
+        let name = entry.file_name().and_then(|n| n.to_str()).unwrap_or_default();
+        if name.starts_with('.') || name == "target" {
+            continue;
+        }
+        if entry.is_dir() {
+            collect_rs(&entry, out)?;
+        } else if entry.extension().is_some_and(|e| e == "rs") {
+            out.push(entry);
+        }
+    }
+    Ok(())
+}
+
+/// Render a report as stable, hand-rolled JSON (no serde — the linter
+/// must build hermetically).
+pub fn to_json(report: &Report) -> String {
+    let mut s = String::from("{\n");
+    s.push_str(&format!(
+        "  \"files_scanned\": {},\n  \"waived\": {},\n  \"violations\": [",
+        report.files_scanned, report.waived
+    ));
+    for (i, d) in report.diagnostics.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "\n    {{\"path\": \"{}\", \"line\": {}, \"col\": {}, \"rule\": \"{}\", \"message\": \"{}\"}}",
+            esc(&d.path),
+            d.line,
+            d.col,
+            esc(&d.rule),
+            esc(&d.message)
+        ));
+    }
+    if !report.diagnostics.is_empty() {
+        s.push_str("\n  ");
+    }
+    s.push_str("]\n}\n");
+    s
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(path: &str, src: &str) -> FileResult {
+        lint_source(Path::new(path), src)
+    }
+
+    #[test]
+    fn policy_map_scopes_rules_to_modules() {
+        let coord = Path::new("rust/src/coordinator/engine.rs");
+        let clock = Path::new("rust/src/coordinator/clock.rs");
+        let linalg = Path::new("rust/src/linalg/topk.rs");
+        let example = Path::new("examples/serve_batch.rs");
+        assert!(applicable(FLOAT_ORD, coord) && applicable(FLOAT_ORD, example));
+        assert!(applicable(RAW_CLOCK, coord));
+        assert!(!applicable(RAW_CLOCK, clock), "clock module is the allowlist");
+        assert!(!applicable(RAW_CLOCK, linalg));
+        assert!(!applicable(RAW_CLOCK, example));
+        assert!(applicable(PANIC_IN_HOT_PATH, coord));
+        assert!(!applicable(PANIC_IN_HOT_PATH, linalg));
+    }
+
+    #[test]
+    fn waiver_requires_reason_and_known_rule() {
+        assert!(matches!(
+            parse_waiver(" lint:allow(float-ord): NaN-free by construction"),
+            Some(Waiver::Rules(r)) if r == vec![FLOAT_ORD.to_string()]
+        ));
+        assert!(matches!(
+            parse_waiver(" lint:allow(float-ord)"),
+            Some(Waiver::Malformed(_))
+        ));
+        assert!(matches!(
+            parse_waiver(" lint:allow(float-ord):   "),
+            Some(Waiver::Malformed(_))
+        ));
+        assert!(matches!(
+            parse_waiver(" lint:allow(no-such-rule): reason"),
+            Some(Waiver::Malformed(_))
+        ));
+        assert!(parse_waiver(" just a comment").is_none());
+    }
+
+    #[test]
+    fn violation_fires_with_column_and_waiver_suppresses() {
+        let src = "let m = xs.iter().max_by(|a, b| a.partial_cmp(b).unwrap());\n";
+        let r = lint("rust/src/linalg/x.rs", src);
+        assert_eq!(r.diagnostics.len(), 1);
+        assert_eq!(r.diagnostics[0].rule, FLOAT_ORD);
+        assert_eq!(r.diagnostics[0].line, 1);
+        assert_eq!(r.diagnostics[0].col, src.find("partial_cmp").unwrap() + 1);
+
+        let waived = format!("{} // lint:allow(float-ord): test scaffold", src.trim_end());
+        let r = lint("rust/src/linalg/x.rs", &waived);
+        assert!(r.diagnostics.is_empty());
+        assert_eq!(r.waived, 1);
+    }
+
+    #[test]
+    fn standalone_waiver_applies_to_next_code_line() {
+        let src = concat!(
+            "// lint:allow(raw-clock): wall-only stat, Steps twin never runs this\n",
+            "// (second comment line between waiver and code)\n",
+            "\n",
+            "let t0 = Instant::now();\n",
+        );
+        let r = lint("rust/src/runtime/stack.rs", src);
+        assert!(r.diagnostics.is_empty(), "{:?}", r.diagnostics);
+        assert_eq!(r.waived, 1);
+    }
+
+    #[test]
+    fn comments_and_strings_do_not_trip_rules() {
+        let src = concat!(
+            "// the old partial_cmp().unwrap() sort panicked here\n",
+            "let s = \"Instant::now() HashMap<u64, u64>\";\n",
+            "let r = r#\"partial_cmp SystemTime::now\"#;\n",
+        );
+        let r = lint("rust/src/coordinator/engine.rs", src);
+        assert!(r.diagnostics.is_empty(), "{:?}", r.diagnostics);
+    }
+
+    #[test]
+    fn malformed_waiver_reports_and_does_not_suppress() {
+        let src = "let t0 = Instant::now(); // lint:allow(raw-clock)\n";
+        let r = lint("rust/src/kvpool/x.rs", src);
+        let rules: Vec<&str> = r.diagnostics.iter().map(|d| d.rule.as_str()).collect();
+        assert!(rules.contains(&BAD_WAIVER), "{rules:?}");
+        assert!(rules.contains(&RAW_CLOCK), "{rules:?}");
+        assert_eq!(r.waived, 0);
+    }
+
+    #[test]
+    fn ident_boundaries_guard_lookalikes() {
+        let src = concat!(
+            "fn my_partial_cmp_helper() {}\n",
+            "let x = not_partial_cmp();\n",
+            "let y = v.unwrap_or(0);\n",
+        );
+        let r = lint("rust/src/coordinator/engine.rs", src);
+        assert!(r.diagnostics.is_empty(), "{:?}", r.diagnostics);
+    }
+
+    #[test]
+    fn cfg_test_code_is_exempt() {
+        let src = concat!(
+            "pub fn live() {}\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    fn t() { let _ = a.partial_cmp(b).unwrap(); }\n",
+            "}\n",
+        );
+        let r = lint("rust/src/linalg/x.rs", src);
+        assert!(r.diagnostics.is_empty(), "{:?}", r.diagnostics);
+    }
+
+    #[test]
+    fn json_output_is_escaped_and_shaped() {
+        let report = Report {
+            diagnostics: vec![Diagnostic {
+                path: "a\"b.rs".to_string(),
+                line: 3,
+                col: 7,
+                rule: FLOAT_ORD.to_string(),
+                message: "back\\slash".to_string(),
+            }],
+            files_scanned: 1,
+            waived: 2,
+        };
+        let j = to_json(&report);
+        assert!(j.contains("\"files_scanned\": 1"));
+        assert!(j.contains("\"waived\": 2"));
+        assert!(j.contains("a\\\"b.rs"));
+        assert!(j.contains("back\\\\slash"));
+    }
+}

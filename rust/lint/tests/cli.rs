@@ -1,0 +1,71 @@
+//! End-to-end CLI pins: exit codes (0 clean / 1 violations / 2 usage),
+//! human and JSON output shapes.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_repro-lint"))
+}
+
+fn fixture(rel: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(rel)
+}
+
+#[test]
+fn violating_tree_exits_one_with_file_line_diagnostics() {
+    let out = bin()
+        .arg("--check")
+        .arg(fixture("tree"))
+        .output()
+        .expect("binary runs");
+    assert_eq!(out.status.code(), Some(1));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("float_ord.rs:4:"), "{stdout}");
+    assert!(stdout.contains("[float-ord]"), "{stdout}");
+    assert!(stdout.contains("15 violation(s)"), "{stdout}");
+}
+
+#[test]
+fn clean_tree_exits_zero_and_reports_waivers() {
+    let out = bin().arg(fixture("clean")).output().expect("binary runs");
+    assert_eq!(out.status.code(), Some(0));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("0 violation(s)"), "{stdout}");
+    assert!(stdout.contains("3 waived"), "{stdout}");
+}
+
+#[test]
+fn json_report_carries_rule_path_line_col() {
+    let out = bin()
+        .args(["--json"])
+        .arg(fixture("tree"))
+        .output()
+        .expect("binary runs");
+    assert_eq!(out.status.code(), Some(1));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("\"violations\": ["), "{stdout}");
+    assert!(stdout.contains("\"rule\": \"float-ord\""), "{stdout}");
+    assert!(stdout.contains("\"line\": 4"), "{stdout}");
+    assert!(stdout.contains("\"files_scanned\": 9"), "{stdout}");
+}
+
+#[test]
+fn usage_and_io_errors_exit_two() {
+    let no_args = bin().output().expect("binary runs");
+    assert_eq!(no_args.status.code(), Some(2));
+
+    let bad_flag = bin().arg("--frobnicate").output().expect("binary runs");
+    assert_eq!(bad_flag.status.code(), Some(2));
+
+    let missing = bin().arg(fixture("no/such/dir")).output().expect("binary runs");
+    assert_eq!(missing.status.code(), Some(2));
+}
+
+#[test]
+fn help_exits_zero_and_documents_waiver_syntax() {
+    let out = bin().arg("--help").output().expect("binary runs");
+    assert_eq!(out.status.code(), Some(0));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("lint:allow(rule): reason"), "{stdout}");
+}

@@ -1,0 +1,6 @@
+// fixture: the clock module is the raw-clock allowlist — raw reads
+// here are sanctioned without waivers.
+use std::time::Instant;
+pub fn wall_now() -> Instant {
+    Instant::now()
+}

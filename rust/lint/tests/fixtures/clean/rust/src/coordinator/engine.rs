@@ -1,0 +1,8 @@
+// fixture: a standalone waiver applies to the next code line, skipping
+// blank and comment-only lines in between.
+pub fn schedule(q: &mut Vec<u64>) -> u64 {
+    // lint:allow(panic-in-hot-path): queue verified non-empty by caller
+
+    // (another comment between the waiver and the code)
+    q.pop().unwrap()
+}

@@ -1,0 +1,9 @@
+// fixture: valid waivers (reason mandatory) suppress each rule.
+use std::time::Instant;
+pub struct S {
+    // lint:allow(nondet-iter): keyed access only, never iterated
+    map: std::collections::HashMap<u64, u32>,
+}
+pub fn now() -> Instant {
+    Instant::now() // lint:allow(raw-clock): wall-only metric, Steps twin unaffected
+}

@@ -1,0 +1,16 @@
+// fixture: rule names in comments, strings, raw strings, and
+// #[cfg(test)] regions must not trip:
+// partial_cmp, Instant::now(), HashMap<u64, u64>, Vec<f64>, panic!.
+pub fn traps() -> (usize, usize) {
+    let s = "partial_cmp().unwrap() and Instant::now()";
+    let r = r#"SystemTime::now() "HashMap<u8, u8>" panic!"#;
+    (s.len(), r.len())
+}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn nan_case_is_test_only() {
+        let mut v = vec![1.0f64, f64::NAN];
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    }
+}

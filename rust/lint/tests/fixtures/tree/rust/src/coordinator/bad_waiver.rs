@@ -1,0 +1,10 @@
+// fixture: malformed waivers report bad-waiver and suppress nothing.
+use std::time::Instant;
+// lint:allow(raw-clock)
+pub fn missing_reason() -> Instant {
+    Instant::now()
+}
+// lint:allow(no-such-rule): the rule name is unknown
+pub fn unknown_rule() -> Instant {
+    Instant::now()
+}

@@ -1,0 +1,7 @@
+// fixture: panic-in-hot-path fires in the scheduling loop.
+pub fn schedule(q: &mut Vec<u64>) -> u64 {
+    q.pop().unwrap()
+}
+pub fn grade(x: Option<u64>) -> u64 {
+    x.expect("graded")
+}

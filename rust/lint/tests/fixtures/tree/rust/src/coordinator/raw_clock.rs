@@ -1,0 +1,5 @@
+// fixture: raw-clock fires in coordinator code outside the clock module.
+use std::time::Instant;
+pub fn stamp() -> Instant {
+    Instant::now()
+}

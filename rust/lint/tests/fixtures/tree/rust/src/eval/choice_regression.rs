@@ -1,0 +1,9 @@
+// fixture: pins the acceptance criterion — re-introducing the exact
+// pre-fix choice.rs argmax must fail the gate.
+pub fn argmax(scored: &[(usize, f64)]) -> usize {
+    scored
+        .iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .map(|(i, _)| *i)
+        .unwrap_or(0)
+}

@@ -1,0 +1,10 @@
+// fixture: nondet-iter fires on declaration and turbofish sites
+// (a bare `use std::collections::HashMap;` import does not fire).
+use std::collections::HashMap;
+pub struct Tables {
+    tables: HashMap<u64, u32>,
+}
+pub fn build() -> usize {
+    let m = HashMap::<u64, u32>::new();
+    m.len()
+}

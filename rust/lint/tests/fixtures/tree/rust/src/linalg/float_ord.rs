@@ -1,0 +1,5 @@
+// fixture: float-ord fires on real code even when the line above is a
+// comment mentioning the old partial_cmp().unwrap() sort (a trap).
+pub fn sort_scores(xs: &mut [f32]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}

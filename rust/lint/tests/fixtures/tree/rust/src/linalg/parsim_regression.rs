@@ -1,0 +1,5 @@
+// fixture: pins the acceptance criterion — re-introducing the exact
+// pre-fix parsim.rs sort must fail the gate.
+pub fn makespan_sorted(sorted: &mut [f64]) {
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+}

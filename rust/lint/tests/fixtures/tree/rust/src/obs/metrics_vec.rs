@@ -1,0 +1,5 @@
+// fixture: unbounded-metrics fires on float Vec accumulators only.
+pub struct Metrics {
+    samples: Vec<f64>,
+    counts: Vec<u64>,
+}

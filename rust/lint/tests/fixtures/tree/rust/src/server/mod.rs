@@ -1,0 +1,7 @@
+// fixture: panic-in-hot-path fires in the server connection handler.
+pub fn handle(line: Option<&str>) {
+    let req = line.unwrap();
+    if req.is_empty() {
+        panic!("empty request");
+    }
+}

@@ -1,0 +1,118 @@
+//! Fixture-corpus pins: every rule fires where expected, every waiver
+//! suppresses, traps stay silent, and deleting any single waiver makes
+//! the gate fail (the acceptance criterion from ISSUE 8).
+
+use repro_lint::{
+    lint_paths, lint_source, BAD_WAIVER, FLOAT_ORD, NONDET_ITER, PANIC_IN_HOT_PATH, RAW_CLOCK,
+    UNBOUNDED_METRICS,
+};
+use std::path::{Path, PathBuf};
+
+fn fixture(rel: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(rel)
+}
+
+/// (rule, basename, line) for every diagnostic under a fixture root.
+fn rules_and_lines(root: &str) -> Vec<(String, String, usize)> {
+    let report = lint_paths(&[fixture(root)]).expect("fixture tree readable");
+    report
+        .diagnostics
+        .iter()
+        .map(|d| {
+            let file = d.path.rsplit('/').next().unwrap().to_string();
+            (d.rule.clone(), file, d.line)
+        })
+        .collect()
+}
+
+#[test]
+fn violating_tree_fires_exactly_the_expected_diagnostics() {
+    let got = rules_and_lines("tree");
+    let own = |r: &str, f: &str, l: usize| (r.to_string(), f.to_string(), l);
+    // Files sort lexicographically; diagnostics sort by line within a file.
+    let expected = vec![
+        own(BAD_WAIVER, "bad_waiver.rs", 3),
+        own(RAW_CLOCK, "bad_waiver.rs", 5),
+        own(BAD_WAIVER, "bad_waiver.rs", 7),
+        own(RAW_CLOCK, "bad_waiver.rs", 9),
+        own(PANIC_IN_HOT_PATH, "engine.rs", 3),
+        own(PANIC_IN_HOT_PATH, "engine.rs", 6),
+        own(RAW_CLOCK, "raw_clock.rs", 4),
+        own(FLOAT_ORD, "choice_regression.rs", 6),
+        own(NONDET_ITER, "nondet.rs", 5),
+        own(NONDET_ITER, "nondet.rs", 8),
+        own(FLOAT_ORD, "float_ord.rs", 4),
+        own(FLOAT_ORD, "parsim_regression.rs", 4),
+        own(UNBOUNDED_METRICS, "metrics_vec.rs", 3),
+        own(PANIC_IN_HOT_PATH, "mod.rs", 3),
+        own(PANIC_IN_HOT_PATH, "mod.rs", 5),
+    ];
+    assert_eq!(got, expected);
+}
+
+#[test]
+fn reintroducing_either_fixed_partial_cmp_call_fails_the_gate() {
+    for file in [
+        "tree/rust/src/linalg/parsim_regression.rs",
+        "tree/rust/src/eval/choice_regression.rs",
+    ] {
+        let got = lint_paths(&[fixture(file)]).expect("fixture readable");
+        assert_eq!(
+            got.diagnostics.len(),
+            1,
+            "{file} must fire exactly the float-ord regression"
+        );
+        assert_eq!(got.diagnostics[0].rule, FLOAT_ORD);
+    }
+}
+
+#[test]
+fn clean_tree_is_silent_and_counts_waivers() {
+    let report = lint_paths(&[fixture("clean")]).expect("fixture tree readable");
+    let msgs: Vec<String> = report.diagnostics.iter().map(|d| d.to_string()).collect();
+    assert!(report.diagnostics.is_empty(), "clean tree fired:\n{}", msgs.join("\n"));
+    assert_eq!(report.files_scanned, 4);
+    assert_eq!(report.waived, 3);
+}
+
+#[test]
+fn deleting_any_single_waiver_resurfaces_a_violation() {
+    for file in [
+        "clean/rust/src/coordinator/waived.rs",
+        "clean/rust/src/coordinator/engine.rs",
+    ] {
+        let path = fixture(file);
+        let src = std::fs::read_to_string(&path).expect("fixture readable");
+        let waiver_lines: Vec<usize> = src
+            .lines()
+            .enumerate()
+            .filter(|(_, l)| l.contains("lint:allow("))
+            .map(|(i, _)| i)
+            .collect();
+        assert!(!waiver_lines.is_empty(), "{file} holds no waivers?");
+        for &wl in &waiver_lines {
+            let mutated: String = src
+                .lines()
+                .enumerate()
+                .map(|(i, l)| {
+                    if i == wl {
+                        // Drop the waiver comment, keep any code on the line.
+                        match l.find("//") {
+                            Some(p) => &l[..p],
+                            None => "",
+                        }
+                    } else {
+                        l
+                    }
+                })
+                .collect::<Vec<_>>()
+                .join("\n");
+            let result = lint_source(&path, &mutated);
+            assert!(
+                !result.diagnostics.is_empty(),
+                "deleting the waiver on line {} of {file} must fail the gate",
+                wl + 1
+            );
+        }
+    }
+}

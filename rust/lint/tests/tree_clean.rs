@@ -1,0 +1,33 @@
+//! The gate itself, as a tier-1 test: the real repository tree must be
+//! lint-clean. This is what makes the determinism/float-safety
+//! invariants part of `cargo test`, not just a CI job.
+
+use repro_lint::lint_paths;
+use std::path::{Path, PathBuf};
+
+#[test]
+fn real_tree_is_clean_under_the_gate() {
+    let repo = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let roots: Vec<PathBuf> = ["rust/src", "rust/benches", "examples"]
+        .iter()
+        .map(|r| repo.join(r))
+        .collect();
+    let report = lint_paths(&roots).expect("repo tree readable");
+    let msgs: Vec<String> = report.diagnostics.iter().map(|d| d.to_string()).collect();
+    assert!(
+        report.diagnostics.is_empty(),
+        "the tree must be lint-clean (fix or waive with a reason):\n{}",
+        msgs.join("\n")
+    );
+    // Coverage floors: if these shrink, the roots moved or the scan broke.
+    assert!(
+        report.files_scanned >= 80,
+        "scanned only {} files — did the lint roots move?",
+        report.files_scanned
+    );
+    assert!(
+        report.waived >= 20,
+        "waiver inventory shrank to {} — waivers deleted without fixing sites?",
+        report.waived
+    );
+}

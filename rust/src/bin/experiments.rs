@@ -15,6 +15,7 @@ use loki::runtime::RuntimeStack;
 use loki::util::args::Args;
 use loki::util::artifacts_dir;
 
+#[allow(clippy::disallowed_methods)] // genuine wall measurement: per-figure runtime reporting
 fn main() -> Result<()> {
     let args = Args::from_env();
     let quick = args.flag("quick") || std::env::var("LOKI_QUICK").is_ok();

@@ -1,0 +1,151 @@
+//! The engine's time authority: [`EngineClock`] (wall time vs the
+//! deterministic decode-steps twin) plus the *only* sanctioned raw
+//! wall-clock reads in the coordinator/runtime/obs/kvpool subtree.
+//!
+//! `repro-lint`'s `raw-clock` rule forbids `Instant::now()` everywhere
+//! else in those modules: PR 5's double-stamp bug (a first token graded
+//! against a *second* `Instant::now()` taken after the first stamp) is
+//! exactly the drift class that breaks Steps-clock trace byte-equality.
+//! Wall time enters through [`wall_now`]/[`WallTimer`] here, and the
+//! Steps twin never observes it.
+
+use std::time::Instant;
+
+/// The single sanctioned raw wall-clock read. Call sites take one stamp
+/// per scheduling decision and pass the `Instant` around instead of
+/// re-reading — re-reads are how double-stamp bugs happen.
+#[allow(clippy::disallowed_methods)] // the allowlisted read everything else routes through
+pub fn wall_now() -> Instant {
+    Instant::now()
+}
+
+/// Scoped wall-duration measurement for rate observations
+/// (`ServiceRateEstimator::observe_*` and the runtime perf counters).
+/// Exists so hot-path timing reads as intent and the raw clock stays in
+/// this module.
+#[derive(Clone, Copy, Debug)]
+pub struct WallTimer(Instant);
+
+impl WallTimer {
+    pub fn start() -> Self {
+        WallTimer(wall_now())
+    }
+
+    /// Seconds elapsed since [`WallTimer::start`].
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+/// Which clock the predictor and the deadline grader run on.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum EngineClock {
+    /// Real time: rates are EWMA-estimated from measured step/prefill
+    /// wall time, deadlines are graded against the emission `Instant`.
+    /// The serving default.
+    #[default]
+    Wall,
+    /// The deterministic decode-steps twin for `SimRuntime` tests: one
+    /// decode step costs exactly `step_ms` virtual milliseconds and
+    /// prefill costs `prefill_ms_per_token` per prompt token; a
+    /// request's elapsed time is `(now_step - submitted_step) ·
+    /// step_ms` and its first token is graded `hit` iff `ttft_steps ·
+    /// step_ms + prefill_ms_per_token · prompt_len ≤ slo_ms` — the
+    /// grader charges exactly what the predictor prices, so a `Strict`
+    /// shed can never disagree with the grade it preempted. No wall
+    /// clock anywhere — shed decisions, deadline grades and goodput
+    /// are bit-reproducible.
+    Steps {
+        /// Virtual milliseconds one decode step costs.
+        step_ms: f64,
+        /// Virtual milliseconds one prefilled prompt token costs.
+        prefill_ms_per_token: f64,
+    },
+}
+
+impl EngineClock {
+    /// Milliseconds a queued request has already waited, in this
+    /// clock's domain. The *same* conversion the grader uses — both
+    /// sides of the shed decision must price time identically, or a
+    /// `Strict` shed could disagree with the grade it preempted.
+    pub fn waited_ms(
+        &self,
+        now: Instant,
+        submitted: Instant,
+        now_step: u64,
+        submitted_step: u64,
+    ) -> f64 {
+        match *self {
+            EngineClock::Wall => now.saturating_duration_since(submitted).as_secs_f64() * 1e3,
+            EngineClock::Steps { step_ms, .. } => {
+                now_step.saturating_sub(submitted_step) as f64 * step_ms
+            }
+        }
+    }
+
+    /// Grade a first token against its deadline. `Wall` compares the
+    /// emission instant to the arrival-stamped deadline; `Steps` prices
+    /// the emission in the virtual domain — decode steps *plus* the
+    /// prompt-proportional prefill cost, exactly what the predictor
+    /// charges, so the zero-shed-error invariant is structural rather
+    /// than comment-enforced.
+    pub fn deadline_hit(
+        &self,
+        emitted: Instant,
+        deadline: Instant,
+        ttft_steps: u64,
+        prompt_tokens: usize,
+        slo_ms: f64,
+    ) -> bool {
+        match *self {
+            EngineClock::Wall => emitted <= deadline,
+            EngineClock::Steps { step_ms, prefill_ms_per_token } => {
+                let virtual_ms =
+                    ttft_steps as f64 * step_ms + prefill_ms_per_token * prompt_tokens as f64;
+                virtual_ms <= slo_ms
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use std::time::Duration;
+
+    #[test]
+    fn clock_domains_price_time_consistently() {
+        let steps = EngineClock::Steps { step_ms: 2.0, prefill_ms_per_token: 0.5 };
+        let t0 = wall_now();
+        // Steps domain ignores wall instants entirely: waited is a pure
+        // function of the step delta.
+        assert_eq!(steps.waited_ms(t0, t0, 7, 3), 8.0);
+        assert_eq!(steps.waited_ms(t0, t0, 3, 7), 0.0, "pre-submission clamps to 0");
+        // Grading charges steps *and* the prompt-proportional prefill:
+        // 4 steps · 2 ms + 8 tokens · 0.5 ms = 12 ms.
+        assert!(steps.deadline_hit(t0, t0, 4, 8, 12.0), "boundary is inclusive");
+        assert!(!steps.deadline_hit(t0, t0, 4, 8, 11.9));
+        // Wall domain compares instants and ignores the step fields.
+        let wall = EngineClock::Wall;
+        let deadline = t0 + Duration::from_millis(50);
+        assert!(wall.deadline_hit(t0, deadline, u64::MAX, usize::MAX, 0.0));
+        assert!(!wall.deadline_hit(deadline + Duration::from_millis(1), deadline, 0, 0, 0.0));
+        let waited = wall.waited_ms(t0 + Duration::from_millis(25), t0, 0, 0);
+        assert!((waited - 25.0).abs() < 1.0, "wall waited ≈ 25 ms, got {waited}");
+    }
+
+    #[test]
+    fn engine_clock_defaults_to_wall() {
+        assert_eq!(EngineClock::default(), EngineClock::Wall);
+    }
+
+    #[test]
+    fn wall_timer_measures_nonnegative_monotonic_time() {
+        let t = WallTimer::start();
+        let a = t.elapsed_s();
+        let b = t.elapsed_s();
+        assert!(a >= 0.0);
+        assert!(b >= a, "elapsed must be monotonic: {a} then {b}");
+    }
+}

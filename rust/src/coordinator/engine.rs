@@ -98,8 +98,9 @@ use crate::model::ByteTokenizer;
 use crate::obs::{EventKind, FinishCode, StatsHub};
 use crate::runtime::{DecodeBackend, DecodeRequest, RuntimeService, StateId};
 
+use super::clock::{wall_now, EngineClock, WallTimer};
 use super::metrics::EngineMetrics;
-use super::predictor::{EngineClock, ServiceRateEstimator, ShedPolicy};
+use super::predictor::{ServiceRateEstimator, ShedPolicy};
 use super::request::{
     FinishReason, GenRequest, GenResult, Priority, QueuedRequest, RequestTiming, ShedInfo,
 };
@@ -721,6 +722,7 @@ impl Engine {
             .map(|(i, _)| i)
             .unwrap_or(0);
         if best != 0 {
+            // lint:allow(panic-in-hot-path): `best` indexes the same deque enumerated this round
             let item = pending.remove(best).expect("index in range");
             pending.push_front(item);
         }
@@ -912,13 +914,14 @@ impl Engine {
             VictimPolicy::PriorityAware | VictimPolicy::DeadlineAware => {
                 let own = lane_priority(&lanes[grower]).unwrap_or(Priority::Batch);
                 let deadline_aware = self.cfg.victim_policy == VictimPolicy::DeadlineAware;
-                let now = Instant::now();
+                let now = wall_now();
                 candidates
                     // Never evict strictly-higher-priority work; the
                     // grower yields its own lane instead (the caller's
                     // no-victim path).
                     .filter(|&l| lane_priority(&lanes[l]).is_some_and(|p| p >= own))
                     .max_by_key(|&l| {
+                        // lint:allow(panic-in-hot-path): the candidate filter keeps only occupied lanes
                         let seq = lane_seq[l].expect("candidates hold live seqs");
                         // Score: lowest class first (Batch > Interactive
                         // in the Ord), then — deadline-aware only — the
@@ -937,6 +940,7 @@ impl Engine {
                                 let q = item_queued(&p.item);
                                 (q.req.priority, q.deadline, p.done)
                             }
+                            // lint:allow(panic-in-hot-path): the candidate filter keeps only occupied lanes
                             Lane::Free => unreachable!("candidates are occupied lanes"),
                         };
                         let slack = if deadline_aware {
@@ -1113,6 +1117,7 @@ impl Engine {
                     let Some(front) = pending.front() else { break };
                     match self.try_admit(&mut pool, &mut tables, front) {
                         Admit::Granted(seq, tokens) => {
+                            // lint:allow(panic-in-hot-path): front() admitted above, so the queue is non-empty
                             let item = pending.pop_front().unwrap();
                             batch.push((item, tokens, seq));
                         }
@@ -1134,6 +1139,7 @@ impl Engine {
                             break;
                         }
                         Admit::NeverFits => {
+                            // lint:allow(panic-in-hot-path): front() admitted above, so the queue is non-empty
                             let item = pending.pop_front().unwrap();
                             self.fail_item(item, &mut pool, &mut tables, &mut metrics);
                         }
@@ -1163,9 +1169,9 @@ impl Engine {
                             tokens: tokens.len() as u32,
                         });
                     }
-                    let t0 = Instant::now();
+                    let t0 = WallTimer::start();
                     let (id, logits) = self.backend.prefill(&self.cfg.pca, prompts)?;
-                    est.observe_prefill(prefill_tokens, t0.elapsed().as_secs_f64());
+                    est.observe_prefill(prefill_tokens, t0.elapsed_s());
                     self.charge_prefill(&mut metrics, prefill_tokens);
                     metrics.prefills += 1;
                     gang = Some(id);
@@ -1213,9 +1219,11 @@ impl Engine {
                     continue;
                 }
                 self.schedule_head(&mut pending);
+                // lint:allow(panic-in-hot-path): the loop breaks first when the queue is empty
                 let front = pending.front().unwrap();
                 match self.try_admit(&mut pool, &mut tables, front) {
                     Admit::Granted(seq, tokens) => {
+                        // lint:allow(panic-in-hot-path): front() admitted above, so the queue is non-empty
                         let item = pending.pop_front().unwrap();
                         let id = item_queued(&item).req.id;
                         metrics.record(EventKind::PrefillStart {
@@ -1241,10 +1249,10 @@ impl Engine {
                                 start_step: metrics.decode_steps,
                             }));
                         } else {
-                            let t0 = Instant::now();
+                            let t0 = WallTimer::start();
                             let (lane_id, logits) =
                                 self.backend.prefill(&self.cfg.pca, vec![tokens.clone()])?;
-                            est.observe_prefill(tokens.len(), t0.elapsed().as_secs_f64());
+                            est.observe_prefill(tokens.len(), t0.elapsed_s());
                             self.charge_prefill(&mut metrics, tokens.len());
                             metrics.prefills += 1;
                             self.backend.inject(gang_id, lane_id, lane)?;
@@ -1283,6 +1291,7 @@ impl Engine {
                         break;
                     }
                     Admit::NeverFits => {
+                        // lint:allow(panic-in-hot-path): front() admitted above, so the queue is non-empty
                         let item = pending.pop_front().unwrap();
                         self.fail_item(item, &mut pool, &mut tables, &mut metrics);
                     }
@@ -1307,6 +1316,7 @@ impl Engine {
                     let Lane::Prefilling(mut p) =
                         std::mem::replace(&mut lanes[lane], Lane::Free)
                     else {
+                        // lint:allow(panic-in-hot-path): the enclosing match arm just matched Prefilling
                         unreachable!("matched Prefilling above");
                     };
                     let total = p.tokens.len();
@@ -1316,17 +1326,17 @@ impl Engine {
                         // Degenerate empty target (empty prompt admitted):
                         // nothing to chunk — one plain prefill opens and
                         // finishes the episode.
-                        let t0 = Instant::now();
+                        let t0 = WallTimer::start();
                         let (s, mut l) = self.backend.prefill(&self.cfg.pca, vec![Vec::new()])?;
-                        est.observe_prefill(total, t0.elapsed().as_secs_f64());
+                        est.observe_prefill(total, t0.elapsed_s());
                         (s, l.swap_remove(0))
                     } else {
                         let prior = p.state.take().unwrap_or(0);
-                        let t0 = Instant::now();
+                        let t0 = WallTimer::start();
                         let out = self
                             .backend
                             .prefill_extend(&self.cfg.pca, prior, &p.tokens, p.done, n)?;
-                        est.observe_prefill(n, t0.elapsed().as_secs_f64());
+                        est.observe_prefill(n, t0.elapsed_s());
                         self.charge_prefill(&mut metrics, n);
                         p.done += n;
                         metrics.prefill_chunks += 1;
@@ -1382,9 +1392,9 @@ impl Engine {
                     continue;
                 }
                 if lane_len[lane] + 1 >= self.max_len {
-                    let t0 = Instant::now();
+                    let t0 = WallTimer::start();
                     let (blank, _) = self.backend.prefill(&self.cfg.pca, vec![vec![0]])?;
-                    est.observe_prefill(1, t0.elapsed().as_secs_f64());
+                    est.observe_prefill(1, t0.elapsed_s());
                     self.charge_prefill(&mut metrics, 1);
                     self.backend.inject(gang_id, blank, lane)?;
                     lane_len[lane] = 1;
@@ -1408,14 +1418,14 @@ impl Engine {
                     Lane::Free | Lane::Prefilling(_) => 0,
                 })
                 .collect();
-            let t0 = Instant::now();
+            let t0 = WallTimer::start();
             let logits = self.backend.decode(DecodeRequest {
                 state: gang_id,
                 variant: self.cfg.variant.clone(),
                 tokens,
             })?;
             metrics.decode_steps += 1;
-            let step_s = t0.elapsed().as_secs_f64();
+            let step_s = t0.elapsed_s();
             metrics.decode_step_time.push(step_s);
             est.observe_step(step_s);
             for len in lane_len.iter_mut() {
@@ -1510,7 +1520,7 @@ impl Engine {
                         // bookkeeping above it, so a token produced
                         // before the deadline could still be graded a
                         // miss under scheduler jitter.)
-                        let emitted = Instant::now();
+                        let emitted = wall_now();
                         let t = emitted.saturating_duration_since(b.req.submitted).as_secs_f64();
                         // Steps since the request entered the queue — a
                         // deterministic, uptime-independent TTFT.
@@ -1952,7 +1962,7 @@ impl Engine {
         if self.cfg.victim_policy == VictimPolicy::DeadlineAware {
             order.sort_by_key(|&i| effective_deadline_key(&pending[i]));
         }
-        let now = Instant::now();
+        let now = wall_now();
         let now_step = metrics.decode_steps;
         let mut doomed: Vec<(usize, f64)> = Vec::new();
         for &i in &order {
@@ -1999,6 +2009,7 @@ impl Engine {
         for (i, predicted_ttft_ms) in doomed {
             let Some(item) = pending.remove(i) else { continue };
             let PendingItem::Fresh(q) = item else {
+                // lint:allow(panic-in-hot-path): only Fresh entries enter `doomed` two lines up
                 unreachable!("only fresh SLO'd entries are marked doomed")
             };
             self.shed(q, predicted_ttft_ms, metrics);

@@ -21,7 +21,7 @@ use crate::obs::{
     ClassSnap, EventKind, FlightRecorder, HistSnap, StatsSnapshot, StreamingHist,
 };
 
-use super::predictor::EngineClock;
+use super::clock::{wall_now, EngineClock};
 use super::request::{Priority, PRIORITY_CLASSES};
 
 /// Latency and scheduler activity for one priority class — the
@@ -223,7 +223,7 @@ pub struct EngineMetrics {
 impl Default for EngineMetrics {
     fn default() -> Self {
         Self {
-            started: Instant::now(),
+            started: wall_now(),
             clock: EngineClock::Wall,
             trace: FlightRecorder::default(),
             requests_in: 0,

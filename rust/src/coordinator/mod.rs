@@ -17,6 +17,9 @@
 //!   the youngest lane under pressure, resuming it byte-identically via
 //!   prefix recompute. Full prompt blocks are prefix-shared across
 //!   identical prefixes either way.
+//! * [`clock`] — the engine's time authority: [`clock::EngineClock`]
+//!   (wall vs deterministic decode-steps twin) and the subtree's only
+//!   sanctioned raw wall-clock reads (`repro-lint` enforces this).
 //! * [`metrics`] — fleet counters + latency summaries.
 //! * [`predictor`] — the online service-rate estimator (EWMA decode-step
 //!   cost + prompt-proportional prefill cost) behind predictive
@@ -29,17 +32,19 @@
 //! attention graph (full / loki / h2o / pcaattn) per gang, making sparse
 //! attention a serving-config rather than a model fork.
 
+pub mod clock;
 pub mod engine;
 pub mod metrics;
 pub mod predictor;
 pub mod request;
 pub mod sampler;
 
+pub use clock::{wall_now, EngineClock, WallTimer};
 pub use engine::{
     reserve_tokens, AdmissionPolicy, Engine, EngineCaps, EngineConfig, PoolConfig,
     PreemptMode, SchedulerPolicy, VictimPolicy, RESERVE_SLACK_TOKENS,
 };
 pub use metrics::{ClassMetrics, EngineMetrics};
-pub use predictor::{EngineClock, ServiceRateEstimator, ShedPolicy, EWMA_ALPHA};
+pub use predictor::{ServiceRateEstimator, ShedPolicy, EWMA_ALPHA};
 pub use request::{GenRequest, GenResult, Priority, RequestTiming, ShedInfo};
 pub use sampler::{SampleCfg, Sampler};

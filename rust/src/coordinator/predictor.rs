@@ -27,7 +27,7 @@
 //! grading happens in the same steps domain, so a `SimRuntime` trace
 //! sheds, grades and reports identically on every run.
 
-use std::time::Instant;
+use super::clock::EngineClock;
 
 /// EWMA smoothing factor for both online rates. One fifth of each new
 /// observation: noisy individual steps cannot whipsaw admission, but a
@@ -81,77 +81,6 @@ impl ShedPolicy {
             "strict" => Some(ShedPolicy::Strict),
             "hedged" => Some(ShedPolicy::Hedged { margin_frac }),
             _ => None,
-        }
-    }
-}
-
-/// Which clock the predictor and the deadline grader run on.
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
-pub enum EngineClock {
-    /// Real time: rates are EWMA-estimated from measured step/prefill
-    /// wall time, deadlines are graded against the emission `Instant`.
-    /// The serving default.
-    #[default]
-    Wall,
-    /// The deterministic decode-steps twin for `SimRuntime` tests: one
-    /// decode step costs exactly `step_ms` virtual milliseconds and
-    /// prefill costs `prefill_ms_per_token` per prompt token; a
-    /// request's elapsed time is `(now_step - submitted_step) ·
-    /// step_ms` and its first token is graded `hit` iff `ttft_steps ·
-    /// step_ms + prefill_ms_per_token · prompt_len ≤ slo_ms` — the
-    /// grader charges exactly what the predictor prices, so a `Strict`
-    /// shed can never disagree with the grade it preempted. No wall
-    /// clock anywhere — shed decisions, deadline grades and goodput
-    /// are bit-reproducible.
-    Steps {
-        /// Virtual milliseconds one decode step costs.
-        step_ms: f64,
-        /// Virtual milliseconds one prefilled prompt token costs.
-        prefill_ms_per_token: f64,
-    },
-}
-
-impl EngineClock {
-    /// Milliseconds a queued request has already waited, in this
-    /// clock's domain. The *same* conversion the grader uses — both
-    /// sides of the shed decision must price time identically, or a
-    /// `Strict` shed could disagree with the grade it preempted.
-    pub fn waited_ms(
-        &self,
-        now: Instant,
-        submitted: Instant,
-        now_step: u64,
-        submitted_step: u64,
-    ) -> f64 {
-        match *self {
-            EngineClock::Wall => now.saturating_duration_since(submitted).as_secs_f64() * 1e3,
-            EngineClock::Steps { step_ms, .. } => {
-                now_step.saturating_sub(submitted_step) as f64 * step_ms
-            }
-        }
-    }
-
-    /// Grade a first token against its deadline. `Wall` compares the
-    /// emission instant to the arrival-stamped deadline; `Steps` prices
-    /// the emission in the virtual domain — decode steps *plus* the
-    /// prompt-proportional prefill cost, exactly what the predictor
-    /// charges, so the zero-shed-error invariant is structural rather
-    /// than comment-enforced.
-    pub fn deadline_hit(
-        &self,
-        emitted: Instant,
-        deadline: Instant,
-        ttft_steps: u64,
-        prompt_tokens: usize,
-        slo_ms: f64,
-    ) -> bool {
-        match *self {
-            EngineClock::Wall => emitted <= deadline,
-            EngineClock::Steps { step_ms, prefill_ms_per_token } => {
-                let virtual_ms =
-                    ttft_steps as f64 * step_ms + prefill_ms_per_token * prompt_tokens as f64;
-                virtual_ms <= slo_ms
-            }
         }
     }
 }
@@ -320,27 +249,8 @@ mod tests {
         assert!((est.prefill_ms(16) - 2.0).abs() < 1e-12);
     }
 
-    #[test]
-    fn clock_domains_price_time_consistently() {
-        use std::time::Duration;
-        let steps = EngineClock::Steps { step_ms: 2.0, prefill_ms_per_token: 0.5 };
-        let t0 = Instant::now();
-        // Steps domain ignores wall instants entirely: waited is a pure
-        // function of the step delta.
-        assert_eq!(steps.waited_ms(t0, t0, 7, 3), 8.0);
-        assert_eq!(steps.waited_ms(t0, t0, 3, 7), 0.0, "pre-submission clamps to 0");
-        // Grading charges steps *and* the prompt-proportional prefill:
-        // 4 steps · 2 ms + 8 tokens · 0.5 ms = 12 ms.
-        assert!(steps.deadline_hit(t0, t0, 4, 8, 12.0), "boundary is inclusive");
-        assert!(!steps.deadline_hit(t0, t0, 4, 8, 11.9));
-        // Wall domain compares instants and ignores the step fields.
-        let wall = EngineClock::Wall;
-        let deadline = t0 + Duration::from_millis(50);
-        assert!(wall.deadline_hit(t0, deadline, u64::MAX, usize::MAX, 0.0));
-        assert!(!wall.deadline_hit(deadline + Duration::from_millis(1), deadline, 0, 0, 0.0));
-        let waited = wall.waited_ms(t0 + Duration::from_millis(25), t0, 0, 0);
-        assert!((waited - 25.0).abs() < 1.0, "wall waited ≈ 25 ms, got {waited}");
-    }
+    // `clock_domains_price_time_consistently` moved to
+    // `super::clock::tests` along with `EngineClock` itself.
 
     #[test]
     fn shed_policy_margins() {
@@ -351,7 +261,6 @@ mod tests {
         // shedding work that was predicted to *make* its deadline.
         assert_eq!(ShedPolicy::Hedged { margin_frac: -3.0 }.margin_frac(), Some(0.0));
         assert_eq!(ShedPolicy::default(), ShedPolicy::Off, "PR 4 pinned");
-        assert_eq!(EngineClock::default(), EngineClock::Wall);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 use std::sync::mpsc::Sender;
 use std::time::{Duration, Instant};
 
+use super::clock::wall_now;
 use super::sampler::SampleCfg;
 
 /// Request importance class, the scheduling signal behind the engine's
@@ -160,7 +161,7 @@ impl QueuedRequest {
     /// so a request queued behind a backlog keeps the SLO its client
     /// measured from, not from whenever the scheduler first saw it idle.
     pub fn stamp(req: GenRequest, submitted_step: u64, submitted_ms: f64) -> Self {
-        let submitted = Instant::now();
+        let submitted = wall_now();
         let deadline = req
             .slo_ms
             .filter(|ms| ms.is_finite() && *ms > 0.0)

@@ -66,11 +66,48 @@ pub fn score_choices_batch(
         }
         stack.free(id);
     }
-    let predicted = logprobs
+    let predicted = argmax_logprob(&logprobs);
+    Ok(ChoiceOutcome { predicted, correct, logprobs })
+}
+
+/// Argmax over choice log-probs in IEEE total order, ties broken toward
+/// the lower index — the same discipline as `linalg::topk`. The old
+/// `partial_cmp().unwrap()` panicked on a NaN log-prob (one degenerate
+/// logit row aborted the whole eval); `total_cmp` ranks NaN above +inf,
+/// so a NaN lane is *selected* (and graded wrong) rather than fatal.
+pub fn argmax_logprob(logprobs: &[f64]) -> usize {
+    logprobs
         .iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1).then_with(|| b.0.cmp(&a.0)))
         .map(|(i, _)| i)
-        .unwrap_or(0);
-    Ok(ChoiceOutcome { predicted, correct, logprobs })
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::argmax_logprob;
+
+    #[test]
+    fn picks_the_max_logprob() {
+        assert_eq!(argmax_logprob(&[-2.0, -0.25, -1.0]), 1);
+    }
+
+    #[test]
+    fn ties_break_toward_the_lower_index() {
+        assert_eq!(argmax_logprob(&[-1.0, -0.5, -0.5]), 1);
+        assert_eq!(argmax_logprob(&[0.0, 0.0, 0.0]), 0);
+    }
+
+    #[test]
+    fn nan_is_ranked_not_fatal() {
+        // Regression: this input used to panic via partial_cmp().unwrap().
+        assert_eq!(argmax_logprob(&[f64::NAN, -0.5]), 0, "+NaN tops total order");
+        assert_eq!(argmax_logprob(&[-f64::NAN, -1.0]), 1, "-NaN bottoms total order");
+    }
+
+    #[test]
+    fn empty_input_defaults_to_zero() {
+        assert_eq!(argmax_logprob(&[]), 0);
+    }
 }

@@ -30,6 +30,7 @@ impl PplReport {
 /// The first `seed_len` tokens are prefilled (full attention, matching the
 /// paper's setup where approximation applies to generation steps) and
 /// excluded from the NLL.
+#[allow(clippy::disallowed_methods)] // genuine wall measurement: eval throughput reporting
 pub fn perplexity(
     stack: &RuntimeStack,
     pca: &str,

@@ -18,6 +18,7 @@ use crate::util::json::{self, Json};
 use crate::util::rng::Xoshiro256;
 use crate::util::table::{fnum, Table};
 
+#[allow(clippy::disallowed_methods)] // genuine wall measurement: figure regen times real kernels
 pub fn run(quick: bool) -> Result<Json> {
     // Llama2-13B per-layer shape (H=40, D=128), paper's microbench setup:
     // prompt 3072, +gen steps, batch scaled down on quick runs.

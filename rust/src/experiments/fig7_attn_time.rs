@@ -30,6 +30,7 @@ impl Breakdown {
 }
 
 /// One decode step at cache length `live`, returning stage times.
+#[allow(clippy::disallowed_methods)] // genuine wall measurement: figure regen times real kernels
 fn step(
     shape: AttnShape,
     q: &[f32],

@@ -58,15 +58,19 @@ pub fn chain_hash(prev: u64, tokens: &[i32]) -> u64 {
 pub struct TableSet {
     block_size: usize,
     sharing: bool,
+    // lint:allow(nondet-iter): keyed access only (by SeqId), never iterated
     tables: HashMap<SeqId, BlockTable>,
     next: SeqId,
     /// chain hash of a full prefix block → the block holding it.
+    // lint:allow(nondet-iter): keyed access only (by prefix hash), never iterated
     prefix_map: HashMap<u64, BlockId>,
     /// Reverse index for cleanup when a shared block is finally freed.
+    // lint:allow(nondet-iter): keyed access only (by BlockId), never iterated
     block_hash: HashMap<BlockId, u64>,
     /// Live blocks holding at least one written token slot (maintained
     /// incrementally on admit/advance/fork and pruned on physical free,
     /// so the per-decode-iteration occupancy snapshot is O(1)).
+    // lint:allow(nondet-iter): membership checks + counted len only; occupancy snapshot never iterates
     written: HashSet<BlockId>,
     /// Blocks obtained by sharing instead of allocation (the savings).
     pub shared_hits: u64,

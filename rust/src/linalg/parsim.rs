@@ -43,7 +43,11 @@ pub fn makespan(units: &[f64], cfg: &ParSimCfg) -> f64 {
         return 0.0;
     }
     let mut sorted: Vec<f64> = units.to_vec();
-    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    // Descending total order (stable sort → lower index wins ties, the
+    // same discipline as `linalg::topk`). The old `partial_cmp().unwrap()`
+    // panicked on NaN units; `total_cmp` ranks NaN deterministically and
+    // the ns conversion below saturates it to zero work.
+    sorted.sort_by(|a, b| b.total_cmp(a));
     // Min-heap of worker finish times.
     use std::cmp::Reverse;
     use std::collections::BinaryHeap;
@@ -86,6 +90,7 @@ pub fn score_units_2d(lanes: usize, live: usize, d_used: usize, block: usize) ->
 
 /// Measure this host's serial MAC throughput so simulated absolute times
 /// are anchored to reality.
+#[allow(clippy::disallowed_methods)] // genuine wall measurement: calibration anchors sim time
 pub fn calibrate_mac_rate() -> f64 {
     let n = 4_000_000usize;
     let a: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
@@ -145,6 +150,20 @@ mod tests {
         assert_eq!(units.len(), 12);
         let total: f64 = units.iter().sum();
         assert!((total - (3 * 1023 * 16) as f64).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nan_units_are_deterministic_not_a_panic() {
+        // Regression: the old `partial_cmp().unwrap()` sort aborted on a
+        // NaN unit. Now NaN ranks totally and casts to zero-time work, so
+        // the makespan is the same wherever the NaN sits — and the same
+        // as an explicit zero unit.
+        let a = makespan(&[2e9, f64::NAN, 1e9], &cfg(2));
+        let b = makespan(&[f64::NAN, 2e9, 1e9], &cfg(2));
+        let c = makespan(&[2e9, 0.0, 1e9], &cfg(2));
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+        assert!((a - 2.0).abs() < 1e-6, "{a}");
     }
 
     #[test]

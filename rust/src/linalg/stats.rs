@@ -45,7 +45,9 @@ pub fn jaccard(a: &[u32], b: &[u32]) -> f64 {
     if a.is_empty() && b.is_empty() {
         return 1.0;
     }
+    // lint:allow(nondet-iter): intersection/union *counts* are order-independent
     let sa: std::collections::HashSet<u32> = a.iter().copied().collect();
+    // lint:allow(nondet-iter): intersection/union *counts* are order-independent
     let sb: std::collections::HashSet<u32> = b.iter().copied().collect();
     let inter = sa.intersection(&sb).count();
     let union = sa.union(&sb).count();

@@ -343,6 +343,7 @@ fn serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[allow(clippy::disallowed_methods)] // genuine wall measurement: client-side E2E latency
 fn bench_serve(args: &Args) -> Result<()> {
     let svc = RuntimeService::start(artifacts_dir()).context("starting runtime")?;
     let cfg = engine_config(args, &svc)?;

@@ -229,8 +229,11 @@ pub fn chrome_trace(rec: &FlightRecorder) -> Json {
         ])
     };
     // id → admission timestamp; lane → (occupied-since, id); id → lane.
+    // lint:allow(nondet-iter): keyed access only (by request id), never iterated
     let mut admitted_at: HashMap<u64, f64> = HashMap::new();
+    // lint:allow(nondet-iter): keyed access only (by lane), never iterated
     let mut lane_busy: HashMap<u32, (f64, u64)> = HashMap::new();
+    // lint:allow(nondet-iter): keyed access only (by request id), never iterated
     let mut lane_of: HashMap<u64, u32> = HashMap::new();
     let mut close_lane = |events: &mut Vec<Json>, lane: u32, ts: f64, outcome: &str| {
         if let Some((t0, id)) = lane_busy.remove(&lane) {
@@ -352,6 +355,7 @@ where
         out.violations
             .push(format!("{dropped} events lost to ring overwrite; trace is not conservable"));
     }
+    // lint:allow(nondet-iter): keyed access; the terminal sweep below iterates in sorted id order
     let mut ids: HashMap<u64, IdState> = HashMap::new();
     for (name, id, chunk) in items {
         out.events += 1;
@@ -434,7 +438,11 @@ where
         }
     }
     out.admitted = ids.len() as u64;
-    for (id, st) in &ids {
+    // Sweep terminals in sorted id order: the per-id violation messages
+    // land in the report deterministically (HashMap order would not).
+    let mut by_id: Vec<(&u64, &IdState)> = ids.iter().collect();
+    by_id.sort_by_key(|(id, _)| **id);
+    for (id, st) in by_id {
         match st.terminal {
             Some("finish") => out.finished += 1,
             Some("request_shed") => out.shed += 1,

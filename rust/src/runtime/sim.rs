@@ -54,6 +54,7 @@ pub struct SimRuntime {
 struct SimState {
     next: StateId,
     /// State id → per-lane token histories (prompt + every decoded token).
+    // lint:allow(nondet-iter): keyed access only (by StateId), never iterated
     states: HashMap<StateId, Vec<Vec<i32>>>,
 }
 

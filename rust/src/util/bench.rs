@@ -85,6 +85,7 @@ pub fn fmt_dur(d: Duration) -> String {
 /// Run `f` repeatedly, returning robust timing statistics. The closure
 /// should perform one complete operation; use `std::hint::black_box` on
 /// inputs/outputs to defeat const-folding.
+#[allow(clippy::disallowed_methods)] // genuine wall measurement: this *is* the stopwatch
 pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
     for _ in 0..cfg.warmup_iters {
         f();
