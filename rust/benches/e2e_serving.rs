@@ -19,9 +19,15 @@
 //! steps clock with a nonzero per-token prefill charge) runs a mixed
 //! long-prompt + interactive trace with chunked prefill on vs off and
 //! reports the interactive TTFT win, the bounded long-prompt penalty
-//! and output equality. `--smoke-json PATH` writes all three scenarios'
-//! deterministic numbers as one JSON document and exits — the bounded
-//! e2e smoke CI runs on every push.
+//! and output equality. Scenario 8 (artifact-free, steps clock) routes
+//! a bursty multi-tenant shared-prefix trace through the sharded
+//! frontend's [`Router`] over two engine replicas — round-robin vs
+//! prefix-affinity — and reports fleet prefix-hit rate, charged TTFT
+//! and goodput; `--trace-out-router PATH` dumps the affinity run's
+//! per-replica flight recorders for `repro trace-check`'s
+//! cross-replica disjointness gate. `--smoke-json PATH` writes all four
+//! scenarios' deterministic numbers as one JSON document and exits —
+//! the bounded e2e smoke CI runs on every push.
 
 use std::sync::mpsc::channel;
 
@@ -29,7 +35,7 @@ use loki::coordinator::request::{FinishReason, GenRequest, GenResult, Priority};
 use loki::coordinator::sampler::SampleCfg;
 use loki::coordinator::{
     AdmissionPolicy, Engine, EngineCaps, EngineClock, EngineConfig, EngineMetrics, PoolConfig,
-    PreemptMode, ShedPolicy, VictimPolicy,
+    PreemptMode, RoutePolicy, Router, RouterCfg, ShedPolicy, VictimPolicy,
 };
 use loki::data::workload::{GenLenDist, Workload, WorkloadCfg};
 use loki::data::TaskSuite;
@@ -425,6 +431,229 @@ fn chunked_json(runs: &[(String, Vec<GenResult>, EngineMetrics)]) -> json::Json 
     ])
 }
 
+/// One scenario-8 policy run: the routing split plus the fleet-level
+/// numbers affinity routing is graded on.
+struct RouterRun {
+    label: String,
+    /// Requests routed to each of the two replicas.
+    routed: Vec<u64>,
+    replicas: Vec<EngineMetrics>,
+    /// Fleet prefix-hit rate: shared blocks over probed blocks, summed
+    /// across replicas before dividing.
+    prefix_hit_rate: f64,
+    /// Fleet charged-domain TTFT mean (count-weighted across replicas).
+    ttft_ms_mean: f64,
+    /// Fleet goodput: deadline-hit tokens per decode step, summed
+    /// across replicas before dividing.
+    goodput: f64,
+    deadline_hits: u64,
+    /// Total prefix blocks the router already had mirrored on the
+    /// chosen replica at decision time, across all decisions.
+    matched_blocks: usize,
+}
+
+/// Scenario 8: sharded serving — the frontend's [`Router`] splits a
+/// bursty multi-tenant shared-prefix trace across two engine replicas,
+/// round-robin vs prefix-affinity. Each tenant's requests arrive as a
+/// gang-sized burst whose prompts share an 8-block system prefix;
+/// affinity routing lands the whole burst on the tenant's home replica,
+/// so one burst-mate pays the cold prefill and the rest share its
+/// blocks (3/4 warm per gang wave), while round-robin splits every
+/// burst 2/2 and pays the cold miss on *both* replicas (2/4 warm).
+/// With `prefix_prefill_discount` on and a nonzero per-token prefill
+/// charge, the extra cold prefills show up in charged TTFT and in the
+/// deadline grades (warm admissions hit the SLO, cold ones can't), so
+/// affinity must strictly win on prefix-hit rate, mean TTFT and
+/// goodput. Runs on [`SimRuntime`] + the steps clock: every number and
+/// every per-replica flight-recorder trace is byte-reproducible. The
+/// acceptance twin with the strict assertions lives in
+/// `rust/tests/router_sharding.rs`.
+fn router_sharding(quick: bool) -> anyhow::Result<Vec<RouterRun>> {
+    const GANG: usize = 4;
+    const BS: usize = 16;
+    const TENANTS: usize = 8;
+    const BURST: usize = GANG;
+    const PREFIX_BLOCKS: usize = 8;
+    const SUFFIX: usize = 16;
+    // Charged-domain SLO: a warm first token costs its wave's decode
+    // steps plus the 16 undiscounted suffix tokens (≤ ~61 ms at the
+    // trace sizes below); a cold one is charged the full 144-token
+    // prefill (≥ 145 ms) and can never land in budget.
+    const SLO_MS: f64 = 80.0;
+    let rounds = if quick { 2 } else { 3 };
+    let caps = EngineCaps { max_len: 256, max_prompt: 256, gang_batch: GANG, bytes_per_token: 8 };
+    // Bursty arrivals: each tenant fires BURST parallel calls per round
+    // (prefix ++ unique per-request suffix), tenants round-robining the
+    // submission stream.
+    let mut prompts: Vec<Vec<i32>> = Vec::new();
+    for round in 0..rounds {
+        for tenant in 0..TENANTS {
+            for slot in 0..BURST {
+                let mut p = sim_prompt(10_000 + tenant as u64, PREFIX_BLOCKS * BS);
+                let unique = (round * TENANTS * BURST + tenant * BURST + slot) as u64;
+                p.extend(sim_prompt(20_000 + unique, SUFFIX));
+                prompts.push(p);
+            }
+        }
+    }
+    let mut runs = Vec::new();
+    for (label, policy) in
+        [("round-robin", RoutePolicy::RoundRobin), ("prefix-affinity", RoutePolicy::PrefixAffinity)]
+    {
+        let mut router =
+            Router::new(RouterCfg { replicas: 2, policy, block_size: BS, max_load_skew: 64 });
+        // The whole trace is routed up front: each replica's input queue
+        // is then a pure function of (trace, policy), so every engine
+        // run — and its flight-recorder trace — is byte-reproducible.
+        let assignment: Vec<usize> =
+            prompts.iter().enumerate().map(|(i, p)| router.route(i as u64, p)).collect();
+        let mut replicas = Vec::new();
+        for r in 0..router.replicas() {
+            let cfg = EngineConfig {
+                gang_batch: GANG,
+                victim_policy: VictimPolicy::DeadlineAware,
+                clock: EngineClock::Steps { step_ms: 1.0, prefill_ms_per_token: 1.0 },
+                pool: PoolConfig { block_size: BS, num_blocks: 0, prefix_sharing: true },
+                prefix_prefill_discount: true,
+                ..Default::default()
+            };
+            let backend = Box::new(SimRuntime::new(SimCfg::default()));
+            let engine = Engine::with_backend(backend, caps, cfg.clone());
+            let (tx, rx) = Engine::channel(&cfg);
+            let (reply, _results) = channel();
+            for (i, prompt) in prompts.iter().enumerate() {
+                if assignment[i] != r {
+                    continue;
+                }
+                tx.send(GenRequest {
+                    id: i as u64,
+                    prompt: prompt.clone(),
+                    max_new_tokens: 4,
+                    stop_token: None,
+                    sampling: SampleCfg::greedy(),
+                    priority: Priority::Interactive,
+                    slo_ms: Some(SLO_MS),
+                    reply: reply.clone(),
+                })?;
+            }
+            drop(tx);
+            drop(reply);
+            replicas.push(engine.run(rx)?);
+        }
+        let (mut shared, mut refb, mut steps, mut hits, mut hit_tokens) =
+            (0u64, 0u64, 0u64, 0u64, 0u64);
+        let (mut ttft_w, mut ttft_n) = (0.0f64, 0usize);
+        for m in &replicas {
+            shared += m.prefix_shared_blocks;
+            refb += m.prefix_ref_blocks;
+            steps += m.decode_steps;
+            let int = m.class(Priority::Interactive);
+            hits += int.deadline_hits;
+            hit_tokens += int.deadline_hit_tokens;
+            ttft_w += int.ttft_ms.mean() * int.ttft_ms.count() as f64;
+            ttft_n += int.ttft_ms.count();
+        }
+        let matched: usize = router.decisions().iter().map(|d| d.matched_blocks).sum();
+        runs.push(RouterRun {
+            label: label.to_string(),
+            routed: router.routed().to_vec(),
+            prefix_hit_rate: if refb == 0 { 1.0 } else { shared as f64 / refb as f64 },
+            ttft_ms_mean: if ttft_n == 0 { 0.0 } else { ttft_w / ttft_n as f64 },
+            goodput: if steps == 0 { 0.0 } else { hit_tokens as f64 / steps as f64 },
+            deadline_hits: hits,
+            matched_blocks: matched,
+            replicas,
+        });
+    }
+    Ok(runs)
+}
+
+fn emit_router_table(runs: &[RouterRun]) {
+    let mut table = Table::new(
+        "E2E serving: sharded frontend over 2 replicas, round-robin vs prefix-affinity",
+        &[
+            "route policy",
+            "routed r0/r1",
+            "prefix hit %",
+            "ttft ms mean",
+            "goodput tok/step",
+            "deadline hits",
+            "matched blocks",
+        ],
+    );
+    for run in runs {
+        table.row(vec![
+            run.label.clone(),
+            format!("{}/{}", run.routed[0], run.routed[1]),
+            fnum(run.prefix_hit_rate * 100.0, 1),
+            fnum(run.ttft_ms_mean, 1),
+            fnum(run.goodput, 3),
+            format!("{}", run.deadline_hits),
+            format!("{}", run.matched_blocks),
+        ]);
+    }
+    table.emit("e2e_serving_router");
+    println!(
+        "(steps-clock run over SimRuntime replicas: every column is\n\
+         deterministic. affinity lands each tenant burst on its home\n\
+         replica, so burst-mates share the cold prefill's blocks;\n\
+         round-robin pays the cold miss on both replicas, which the\n\
+         prefix-prefill discount turns into charged-TTFT and goodput\n\
+         losses)"
+    );
+}
+
+/// Serialize the scenario-8 runs for the CI artifact: every field is
+/// steps-clock deterministic, so CI can assert the affinity-beats-
+/// round-robin ordering on exact numbers.
+fn router_json(runs: &[RouterRun]) -> json::Json {
+    let mut items = Vec::new();
+    for run in runs {
+        let per_replica: Vec<json::Json> = run
+            .replicas
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                json::obj(vec![
+                    ("replica", json::num(i as f64)),
+                    ("routed", json::num(run.routed[i] as f64)),
+                    ("requests_done", json::num(m.requests_done as f64)),
+                    ("decode_steps", json::num(m.decode_steps as f64)),
+                    ("prefix_shared_blocks", json::num(m.prefix_shared_blocks as f64)),
+                    ("prefix_ref_blocks", json::num(m.prefix_ref_blocks as f64)),
+                    ("prefix_hit_rate", json::num(m.prefix_hit_rate())),
+                    (
+                        "prefill_discounted_tokens",
+                        json::num(m.prefill_discounted_tokens as f64),
+                    ),
+                ])
+            })
+            .collect();
+        items.push(json::obj(vec![
+            ("route_policy", json::s(&run.label)),
+            ("prefix_hit_rate", json::num(run.prefix_hit_rate)),
+            ("ttft_ms_mean", json::num(run.ttft_ms_mean)),
+            ("goodput_tok_per_step", json::num(run.goodput)),
+            ("deadline_hits", json::num(run.deadline_hits as f64)),
+            ("matched_blocks", json::num(run.matched_blocks as f64)),
+            ("replicas", json::arr(per_replica)),
+        ]));
+    }
+    json::obj(vec![
+        ("scenario", json::s("sharded_prefix_affinity_routing")),
+        ("runs", json::arr(items)),
+    ])
+}
+
+/// `foo.jsonl` → `foo-r0.jsonl`: one flight-recorder file per replica,
+/// the same naming `repro bench-serve --replicas N --trace-out` uses.
+fn replica_trace_path(raw: &str, replica: usize) -> std::path::PathBuf {
+    let p = std::path::Path::new(raw);
+    let stem = p.file_stem().and_then(|s| s.to_str()).unwrap_or("trace");
+    let ext = p.extension().and_then(|s| s.to_str()).unwrap_or("jsonl");
+    p.with_file_name(format!("{stem}-r{replica}.{ext}"))
+}
+
 /// Serialize the scenario-6 runs for the CI artifact: under the steps
 /// clock every field here is deterministic across builds.
 fn shed_json(runs: &[(String, EngineMetrics)]) -> json::Json {
@@ -490,6 +719,8 @@ fn main() -> anyhow::Result<()> {
     emit_shed_table(&shed_runs);
     let chunked_runs = chunked_prefill(quick)?;
     emit_chunked_table(&chunked_runs);
+    let router_runs = router_sharding(quick)?;
+    emit_router_table(&router_runs);
     // `--trace-out PATH`: dump the strict-shedding scenario-6 run's
     // flight recorder. That run is on the deterministic steps clock, so
     // the JSONL bytes are identical across builds and CI gates on its
@@ -540,6 +771,35 @@ fn main() -> anyhow::Result<()> {
             m.trace.dropped()
         );
     }
+    // `--trace-out-router PATH`: dump the scenario-8 prefix-affinity
+    // run's per-replica flight recorders (PATH-r0.jsonl, PATH-r1.jsonl
+    // + chrome siblings). Each request's whole lifecycle runs on the
+    // replica the router picked, so `repro trace-check` over both files
+    // at once must find disjoint admitted-id sets — the cross-replica
+    // conservation gate CI blocks on.
+    if args.flag("trace-out-router") {
+        anyhow::bail!("--trace-out-router needs a file path");
+    }
+    if let Some(raw) = args.get("trace-out-router") {
+        let run = router_runs
+            .iter()
+            .find(|r| r.label == "prefix-affinity")
+            .expect("scenario 8 always includes a prefix-affinity pass");
+        for (i, m) in run.replicas.iter().enumerate() {
+            let path = replica_trace_path(raw, i);
+            loki::obs::export::write_jsonl(&m.trace, &path)?;
+            let chrome = loki::obs::export::chrome_sibling(&path);
+            loki::obs::export::write_chrome(&m.trace, &chrome)?;
+            println!(
+                "router replica {} trace written to {} (+ {}): {} events, {} dropped",
+                i,
+                path.display(),
+                chrome.display(),
+                m.trace.len(),
+                m.trace.dropped()
+            );
+        }
+    }
     if let Some(path) = args.get("smoke-json") {
         let doc = json::obj(vec![(
             "scenarios",
@@ -547,6 +807,7 @@ fn main() -> anyhow::Result<()> {
                 flood_json(&flood_runs),
                 shed_json(&shed_runs),
                 chunked_json(&chunked_runs),
+                router_json(&router_runs),
             ]),
         )]);
         std::fs::write(path, doc.to_string() + "\n")?;
@@ -570,6 +831,7 @@ fn main() -> anyhow::Result<()> {
             gen_len: (12, 40),
             gen_len_dist: GenLenDist::Uniform,
             shared_prefix_len: 0,
+            prefix_group_count: 1,
             batch_frac: 0.0,
             slo_ms_interactive: None,
             slo_ms_batch: None,
@@ -611,6 +873,7 @@ fn main() -> anyhow::Result<()> {
             gen_len: (8, 24),
             gen_len_dist: GenLenDist::Uniform,
             shared_prefix_len: 96,
+            prefix_group_count: 1,
             batch_frac: 0.0,
             slo_ms_interactive: None,
             slo_ms_batch: None,
@@ -673,6 +936,7 @@ fn main() -> anyhow::Result<()> {
             gen_len: (8, 8), // ignored under LongTail
             gen_len_dist: GenLenDist::LongTail { mean: 24.0, cap: tail_cap },
             shared_prefix_len: 0,
+            prefix_group_count: 1,
             batch_frac: 0.0,
             slo_ms_interactive: None,
             slo_ms_batch: None,
@@ -731,6 +995,7 @@ fn main() -> anyhow::Result<()> {
             gen_len: (8, 8), // ignored under LongTail
             gen_len_dist: GenLenDist::LongTail { mean: 24.0, cap: tail_cap },
             shared_prefix_len: 0,
+            prefix_group_count: 1,
             batch_frac: 0.5,
             slo_ms_interactive: None,
             slo_ms_batch: None,

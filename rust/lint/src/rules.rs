@@ -13,8 +13,10 @@
 //! * `unbounded-metrics` — unbounded `Vec` accumulators in metrics hot
 //!   paths (replaced by `StreamingHist` in PR 6).
 //! * `panic-in-hot-path` — `unwrap`/`expect`/`panic!` in the engine
-//!   scheduling loop and server handler, where a panic drops every
-//!   in-flight request.
+//!   scheduling loop, the router decision core, and the server /
+//!   frontend dispatch path, where a panic drops every in-flight
+//!   request (and, in the sharded frontend, poisons the router lock
+//!   for every connection thread).
 //!
 //! Waiver syntax: `// lint:allow(rule): reason` (reason mandatory).
 //! A waiver on a code line suppresses matches on that line; a waiver on
@@ -211,7 +213,9 @@ pub fn applicable(rule: &str, path: &Path) -> bool {
             p.contains("/src/obs/") || p.ends_with("/src/coordinator/metrics.rs")
         }
         PANIC_IN_HOT_PATH => {
-            p.ends_with("/src/coordinator/engine.rs") || p.contains("/src/server/")
+            p.ends_with("/src/coordinator/engine.rs")
+                || p.ends_with("/src/coordinator/router.rs")
+                || p.contains("/src/server/")
         }
         _ => false,
     }
@@ -513,6 +517,12 @@ mod tests {
         assert!(!applicable(RAW_CLOCK, example));
         assert!(applicable(PANIC_IN_HOT_PATH, coord));
         assert!(!applicable(PANIC_IN_HOT_PATH, linalg));
+        let router = Path::new("rust/src/coordinator/router.rs");
+        let frontend = Path::new("rust/src/server/frontend.rs");
+        assert!(applicable(PANIC_IN_HOT_PATH, router), "router decision core is hot-path");
+        assert!(applicable(PANIC_IN_HOT_PATH, frontend), "frontend dispatch is hot-path");
+        let metrics = Path::new("rust/src/coordinator/metrics.rs");
+        assert!(!applicable(PANIC_IN_HOT_PATH, metrics), "scope stays per-file, not per-dir");
     }
 
     #[test]

@@ -1,0 +1,5 @@
+// fixture: panic-in-hot-path fires in the router decision core.
+pub fn pick(outstanding: &[usize]) -> usize {
+    let best = outstanding.iter().enumerate().min_by_key(|(_, o)| **o);
+    best.unwrap().0
+}

@@ -1,0 +1,4 @@
+// fixture: panic-in-hot-path fires in the frontend dispatch path.
+pub fn dispatch(replica: Option<usize>) -> usize {
+    replica.expect("router always picks a live replica")
+}

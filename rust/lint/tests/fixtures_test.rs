@@ -38,12 +38,14 @@ fn violating_tree_fires_exactly_the_expected_diagnostics() {
         own(PANIC_IN_HOT_PATH, "engine.rs", 3),
         own(PANIC_IN_HOT_PATH, "engine.rs", 6),
         own(RAW_CLOCK, "raw_clock.rs", 4),
+        own(PANIC_IN_HOT_PATH, "router.rs", 4),
         own(FLOAT_ORD, "choice_regression.rs", 6),
         own(NONDET_ITER, "nondet.rs", 5),
         own(NONDET_ITER, "nondet.rs", 8),
         own(FLOAT_ORD, "float_ord.rs", 4),
         own(FLOAT_ORD, "parsim_regression.rs", 4),
         own(UNBOUNDED_METRICS, "metrics_vec.rs", 3),
+        own(PANIC_IN_HOT_PATH, "frontend.rs", 3),
         own(PANIC_IN_HOT_PATH, "mod.rs", 3),
         own(PANIC_IN_HOT_PATH, "mod.rs", 5),
     ];

@@ -306,6 +306,20 @@ pub struct EngineConfig {
     /// itself. `None` (default) prefills monolithically, pinning the
     /// prior behavior bit-identically.
     pub prefill_chunk: Option<usize>,
+    /// Steps-clock prefill pricing for prefix-shared blocks: when on, a
+    /// fresh admission whose leading prompt blocks were served from the
+    /// content-addressed prefix index is charged prefill time only for
+    /// the blocks it actually materialized — a replica already holding a
+    /// prompt's prefix delivers a cheaper (virtual-time) first token,
+    /// which is the locality win prefix-affinity routing is graded on.
+    /// The same discounted token count feeds that request's deadline
+    /// grade. The shed predictor deliberately keeps pricing the *full*
+    /// prompt (conservative: it can over-predict, never under-predict),
+    /// so the scenario-6 zero-shed-error invariant only holds with the
+    /// discount off. `false` (default) pins every earlier Steps trace
+    /// bit-identically; `Wall` ignores it (real prefills cost real
+    /// time). Estimator observations always bill real tokens either way.
+    pub prefix_prefill_discount: bool,
     pub verbose: bool,
 }
 
@@ -325,6 +339,7 @@ impl Default for EngineConfig {
             shed: ShedPolicy::Off,
             clock: EngineClock::Wall,
             prefill_chunk: None,
+            prefix_prefill_discount: false,
             verbose: false,
         }
     }
@@ -373,6 +388,14 @@ struct PrefillLane {
     /// Batch-1 backend state holding the partial prefix; `None` until
     /// the first chunk runs.
     state: Option<StateId>,
+    /// Prefix-shared prompt tokens this admission was granted (blocks ×
+    /// block size) — the deadline grade's discount under
+    /// [`EngineConfig::prefix_prefill_discount`].
+    shared_tokens: usize,
+    /// Shared tokens not yet consumed by chunk charging: the leading
+    /// chunks cover the shared prefix, so each chunk's Steps-clock
+    /// charge draws down this credit first.
+    discount_left: usize,
     /// Admission tick (assigned at admission, not injection, so victim
     /// age ranks mid-prefill lanes as the youngest occupants).
     tick: u64,
@@ -396,6 +419,13 @@ struct BusyLane {
     /// Whether the first token beat the request's SLO deadline (`None`
     /// until the first token, or forever when no SLO was set).
     deadline_hit: Option<bool>,
+    /// Prompt tokens this request's deadline grade charges prefill time
+    /// for: the full (clamped) prompt, minus the prefix-shared tokens of
+    /// its original admission when
+    /// [`EngineConfig::prefix_prefill_discount`] is on — set once at
+    /// first admission and kept across preempt/resume cycles, like the
+    /// rest of the first-token bookkeeping.
+    grade_prompt_tokens: usize,
     /// Times this request was evicted mid-flight and re-queued.
     preempted: u32,
     /// Original admission tick — *kept* across preempt/resume cycles so
@@ -510,8 +540,11 @@ fn assign_tick(item: &PendingItem, admit_tick: &mut u64) -> u64 {
 enum Admit {
     /// Blocks granted; the sequence owns its reservation and the prefill
     /// tokens were materialized (built lazily — Backpressure iterations
-    /// never clone token vectors).
-    Granted(SeqId, Vec<i32>),
+    /// never clone token vectors). The trailing count is how many full
+    /// prompt blocks this admission *shared* from the prefix index
+    /// (always 0 for resumes — their prefix never left the table), the
+    /// input to the Steps-clock prefill discount and the hit-rate tally.
+    Granted(SeqId, Vec<i32>, usize),
     /// Not enough free blocks *right now* — wait for a completion.
     Backpressure,
     /// The request can never fit the configured pool; fail it fast.
@@ -615,11 +648,23 @@ impl Engine {
     /// — folded into `now_ms`/`uptime_s`), so prefill work advances the
     /// deterministic clock the same way the wall clock would move.
     /// `prefill_ms_per_token == 0.0` (every pinned scenario) charges
-    /// nothing, keeping prior traces bit-identical.
-    fn charge_prefill(&self, metrics: &mut EngineMetrics, tokens: usize) {
+    /// nothing, keeping prior traces bit-identical. `shared_tokens` is
+    /// the prefix-shared portion of this prefill: with
+    /// [`EngineConfig::prefix_prefill_discount`] on, those tokens are
+    /// charged no virtual time — modeling the suffix-aware device
+    /// prefill a block-table-aware cache performs (the pool accounting
+    /// already skips shared blocks; this makes the Steps clock agree).
+    fn charge_prefill(&self, metrics: &mut EngineMetrics, tokens: usize, shared_tokens: usize) {
         metrics.prefill_tokens += tokens as u64;
+        let discount = if self.cfg.prefix_prefill_discount {
+            let d = shared_tokens.min(tokens);
+            metrics.prefill_discounted_tokens += d as u64;
+            d
+        } else {
+            0
+        };
         if let EngineClock::Steps { prefill_ms_per_token, .. } = self.cfg.clock {
-            metrics.prefill_charged_ms += tokens as f64 * prefill_ms_per_token;
+            metrics.prefill_charged_ms += (tokens - discount) as f64 * prefill_ms_per_token;
         }
     }
 
@@ -1111,15 +1156,16 @@ impl Engine {
                 }
             }
             if gang.is_none() && !pending.is_empty() {
-                let mut batch: Vec<(PendingItem, Vec<i32>, SeqId)> = Vec::new();
+                let mut batch: Vec<(PendingItem, Vec<i32>, SeqId, usize)> = Vec::new();
                 while batch.len() < self.gang_batch {
                     self.schedule_head(&mut pending);
                     let Some(front) = pending.front() else { break };
                     match self.try_admit(&mut pool, &mut tables, front) {
-                        Admit::Granted(seq, tokens) => {
+                        Admit::Granted(seq, tokens, shared) => {
                             // lint:allow(panic-in-hot-path): front() admitted above, so the queue is non-empty
                             let item = pending.pop_front().unwrap();
-                            batch.push((item, tokens, seq));
+                            self.note_prefix_probe(&mut metrics, &item, &tokens);
+                            batch.push((item, tokens, seq, shared));
                         }
                         Admit::Backpressure => {
                             metrics.admission_blocked += 1;
@@ -1147,7 +1193,7 @@ impl Engine {
                 }
                 if !batch.is_empty() {
                     let mut prompts: Vec<Vec<i32>> =
-                        batch.iter().map(|(_, t, _)| t.clone()).collect();
+                        batch.iter().map(|(_, t, _, _)| t.clone()).collect();
                     // Pad to the configured gang width so the persistent
                     // gang lands in the right batch bucket even under
                     // light load.
@@ -1161,8 +1207,10 @@ impl Engine {
                     // `prefill_ms(len)` then under-priced every future
                     // prompt, and `Strict` admitted provably-doomed
                     // requests instead of shedding them.
-                    let prefill_tokens: usize = batch.iter().map(|(_, t, _)| t.len()).sum();
-                    for (lane, (item, tokens, _)) in batch.iter().enumerate() {
+                    let prefill_tokens: usize = batch.iter().map(|(_, t, _, _)| t.len()).sum();
+                    let bs = self.cfg.pool.block_size.max(1);
+                    let shared_tokens: usize = batch.iter().map(|(_, _, _, s)| s * bs).sum();
+                    for (lane, (item, tokens, _, _)) in batch.iter().enumerate() {
                         metrics.record(EventKind::PrefillStart {
                             id: item_queued(item).req.id,
                             lane: lane as u32,
@@ -1172,11 +1220,11 @@ impl Engine {
                     let t0 = WallTimer::start();
                     let (id, logits) = self.backend.prefill(&self.cfg.pca, prompts)?;
                     est.observe_prefill(prefill_tokens, t0.elapsed_s());
-                    self.charge_prefill(&mut metrics, prefill_tokens);
+                    self.charge_prefill(&mut metrics, prefill_tokens, shared_tokens);
                     metrics.prefills += 1;
                     gang = Some(id);
                     let n = batch.len();
-                    for (lane, (item, tokens, seq)) in batch.into_iter().enumerate() {
+                    for (lane, (item, tokens, seq, shared)) in batch.into_iter().enumerate() {
                         metrics.record(EventKind::PrefillEnd {
                             id: item_queued(&item).req.id,
                             lane: lane as u32,
@@ -1188,6 +1236,7 @@ impl Engine {
                         lanes[lane] = self.lane_for(
                             item,
                             tokens,
+                            shared * bs,
                             &logits[lane],
                             lane,
                             tick,
@@ -1222,9 +1271,11 @@ impl Engine {
                 // lint:allow(panic-in-hot-path): the loop breaks first when the queue is empty
                 let front = pending.front().unwrap();
                 match self.try_admit(&mut pool, &mut tables, front) {
-                    Admit::Granted(seq, tokens) => {
+                    Admit::Granted(seq, tokens, shared) => {
                         // lint:allow(panic-in-hot-path): front() admitted above, so the queue is non-empty
                         let item = pending.pop_front().unwrap();
+                        self.note_prefix_probe(&mut metrics, &item, &tokens);
+                        let shared_tokens = shared * self.cfg.pool.block_size.max(1);
                         let id = item_queued(&item).req.id;
                         metrics.record(EventKind::PrefillStart {
                             id,
@@ -1245,6 +1296,8 @@ impl Engine {
                                 tokens,
                                 done: 0,
                                 state: None,
+                                shared_tokens,
+                                discount_left: shared_tokens,
                                 tick,
                                 start_step: metrics.decode_steps,
                             }));
@@ -1253,7 +1306,7 @@ impl Engine {
                             let (lane_id, logits) =
                                 self.backend.prefill(&self.cfg.pca, vec![tokens.clone()])?;
                             est.observe_prefill(tokens.len(), t0.elapsed_s());
-                            self.charge_prefill(&mut metrics, tokens.len());
+                            self.charge_prefill(&mut metrics, tokens.len(), shared_tokens);
                             metrics.prefills += 1;
                             self.backend.inject(gang_id, lane_id, lane)?;
                             metrics.injections += 1;
@@ -1266,6 +1319,7 @@ impl Engine {
                             lanes[lane] = self.lane_for(
                                 item,
                                 tokens,
+                                shared_tokens,
                                 &logits[0],
                                 lane,
                                 tick,
@@ -1337,7 +1391,9 @@ impl Engine {
                             .backend
                             .prefill_extend(&self.cfg.pca, prior, &p.tokens, p.done, n)?;
                         est.observe_prefill(n, t0.elapsed_s());
-                        self.charge_prefill(&mut metrics, n);
+                        let disc = p.discount_left.min(n);
+                        p.discount_left -= disc;
+                        self.charge_prefill(&mut metrics, n, disc);
                         p.done += n;
                         metrics.prefill_chunks += 1;
                         metrics.chunked_prefill_tokens += n as u64;
@@ -1368,9 +1424,9 @@ impl Engine {
                         tokens: total as u32,
                     });
                     lane_len[lane] = total;
-                    let PrefillLane { item, tokens, tick, .. } = *p;
-                    lanes[lane] =
-                        self.lane_for(item, tokens, &logits, lane, tick, &mut metrics);
+                    let PrefillLane { item, tokens, shared_tokens, tick, .. } = *p;
+                    lanes[lane] = self
+                        .lane_for(item, tokens, shared_tokens, &logits, lane, tick, &mut metrics);
                     lane_tick[lane] = busy_tick(&lanes[lane]);
                 }
             }
@@ -1395,7 +1451,7 @@ impl Engine {
                     let t0 = WallTimer::start();
                     let (blank, _) = self.backend.prefill(&self.cfg.pca, vec![vec![0]])?;
                     est.observe_prefill(1, t0.elapsed_s());
-                    self.charge_prefill(&mut metrics, 1);
+                    self.charge_prefill(&mut metrics, 1, 0);
                     self.backend.inject(gang_id, blank, lane)?;
                     lane_len[lane] = 1;
                     metrics.lane_resets += 1;
@@ -1551,7 +1607,7 @@ impl Engine {
                                 emitted,
                                 deadline,
                                 steps,
-                                b.prompt.len(),
+                                b.grade_prompt_tokens,
                                 b.req.req.slo_ms.unwrap_or(f64::INFINITY),
                             );
                             b.deadline_hit = Some(hit);
@@ -1647,6 +1703,23 @@ impl Engine {
         }
     }
 
+    /// Tally an admission's full prompt blocks into the prefix-hit-rate
+    /// denominator. Kept-prefix resumes never probe the index (their
+    /// table is still live), so they are excluded; everything else —
+    /// fresh work and full-preemption recomputes — walks the shared
+    /// index at admit and counts.
+    fn note_prefix_probe(
+        &self,
+        metrics: &mut EngineMetrics,
+        item: &PendingItem,
+        tokens: &[i32],
+    ) {
+        if matches!(item, PendingItem::Resume { kept: Some(_), .. }) {
+            return;
+        }
+        metrics.prefix_ref_blocks += (tokens.len() / self.cfg.pool.block_size.max(1)) as u64;
+    }
+
     /// Pool admission: grant the policy's reservation or don't touch the
     /// pool at all.
     fn try_admit(
@@ -1679,7 +1752,7 @@ impl Engine {
             }
             let tokens = self.plan_tokens(item);
             return match tables.resume_extend(pool, k.seq, tokens.len(), total_blocks) {
-                Ok(()) => Admit::Granted(k.seq, tokens),
+                Ok(()) => Admit::Granted(k.seq, tokens, 0),
                 Err(_) => Admit::Backpressure,
             };
         }
@@ -1693,8 +1766,17 @@ impl Engine {
             return Admit::Backpressure;
         }
         let tokens = self.plan_tokens(item);
+        // The admit walk bumps `shared_hits` once per block it serves
+        // from the prefix index; the delta is exactly this admission's
+        // share count (resumes take the branch above, so only fresh
+        // work — Resume{kept: None} recomputes included — lands here,
+        // and recomputes legitimately re-share their own prefix).
+        let hits_before = tables.shared_hits;
         match tables.admit(pool, &tokens, reserve) {
-            Ok(seq) => Admit::Granted(seq, tokens),
+            Ok(seq) => {
+                let shared = (tables.shared_hits - hits_before) as usize;
+                Admit::Granted(seq, tokens, shared)
+            }
             Err(_) => Admit::Backpressure,
         }
     }
@@ -2070,13 +2152,16 @@ impl Engine {
         &self,
         item: PendingItem,
         tokens: Vec<i32>,
+        shared_tokens: usize,
         logits: &[f32],
         lane_idx: usize,
         tick: u64,
         metrics: &mut EngineMetrics,
     ) -> Lane {
         match item {
-            PendingItem::Fresh(q) => self.admit_lane(q, tokens, logits, tick, metrics),
+            PendingItem::Fresh(q) => {
+                self.admit_lane(q, tokens, shared_tokens, logits, tick, metrics)
+            }
             // Resumes keep their original admission tick: age is measured
             // from first admission, so a victim does not become the
             // youngest (i.e. next) victim merely by having been evicted.
@@ -2113,6 +2198,7 @@ impl Engine {
         &self,
         q: QueuedRequest,
         prompt: Vec<i32>,
+        shared_tokens: usize,
         logits: &[f32],
         tick: u64,
         metrics: &mut EngineMetrics,
@@ -2120,6 +2206,11 @@ impl Engine {
         metrics
             .queue_wait
             .push(q.submitted.elapsed().as_secs_f64());
+        let grade_prompt_tokens = if self.cfg.prefix_prefill_discount {
+            prompt.len().saturating_sub(shared_tokens)
+        } else {
+            prompt.len()
+        };
         let mut sampler = Sampler::new(q.req.sampling);
         let first = sampler.sample(logits) as i32;
         Lane::Busy(Box::new(BusyLane {
@@ -2131,6 +2222,7 @@ impl Engine {
             ttft_s: None,
             ttft_step: None,
             deadline_hit: None,
+            grade_prompt_tokens,
             preempted: 0,
             tick,
         }))

@@ -202,6 +202,16 @@ pub struct EngineMetrics {
     pub pool_blocks_peak: u64,
     /// Prompt blocks obtained by prefix sharing instead of allocation.
     pub prefix_shared_blocks: u64,
+    /// Full prompt blocks probed against the prefix index at admission
+    /// (fresh requests plus full-preemption recomputes — every admission
+    /// that *could* have shared) — the denominator of
+    /// [`EngineMetrics::prefix_hit_rate`], matching the numerator's
+    /// `shared_hits` tally block for block.
+    pub prefix_ref_blocks: u64,
+    /// Prompt tokens whose Steps-clock prefill charge was waived by
+    /// [`EngineConfig::prefix_prefill_discount`] because their blocks
+    /// were served from the shared prefix index instead of prefilled.
+    pub prefill_discounted_tokens: u64,
     /// What a flat `[gang, max_len]` K+V cache holds for the same gang —
     /// the baseline the paged pool is measured against.
     pub kv_flat_bytes: u64,
@@ -256,6 +266,8 @@ impl Default for EngineMetrics {
             pool_block_bytes: 0,
             pool_blocks_peak: 0,
             prefix_shared_blocks: 0,
+            prefix_ref_blocks: 0,
+            prefill_discounted_tokens: 0,
             kv_flat_bytes: 0,
             pool_occupancy: StreamingHist::new(),
             ttft: StreamingHist::new(),
@@ -352,6 +364,17 @@ impl EngineMetrics {
         }
         let good: u64 = self.per_class.iter().map(|c| c.deadline_hit_tokens).sum();
         good as f64 / self.decode_steps as f64
+    }
+
+    /// Fraction of fresh-admission full prompt blocks served from the
+    /// content-addressed prefix index instead of freshly prefilled — the
+    /// per-replica locality number affinity routing is graded on. 1.0
+    /// when no full blocks were ever probed (nothing was missable).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_ref_blocks == 0 {
+            return 1.0;
+        }
+        self.prefix_shared_blocks as f64 / self.prefix_ref_blocks as f64
     }
 
     /// Decode and recompute work that produced no SLO-compliant value:
@@ -556,6 +579,15 @@ mod tests {
         // Occupancy averages the *written* fraction: (8/64 + 4/64) / 2.
         assert!((m.mean_pool_occupancy() - 6.0 / 64.0).abs() < 1e-12);
         assert!(m.report().contains("peak 10/64 blocks"));
+    }
+
+    #[test]
+    fn prefix_hit_rate_is_shared_over_probed_blocks() {
+        let mut m = EngineMetrics::default();
+        assert_eq!(m.prefix_hit_rate(), 1.0, "no probes → nothing missable");
+        m.prefix_ref_blocks = 8;
+        m.note_pool(4, 4, 6);
+        assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-12);
     }
 
     #[test]

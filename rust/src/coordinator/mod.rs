@@ -21,6 +21,11 @@
 //!   (wall vs deterministic decode-steps twin) and the subtree's only
 //!   sanctioned raw wall-clock reads (`repro-lint` enforces this).
 //! * [`metrics`] — fleet counters + latency summaries.
+//! * [`router`] — the sharded-frontend decision core: a deterministic
+//!   replica chooser ([`router::RoutePolicy::PrefixAffinity`] keys on the
+//!   kvpool's content-addressed prefix-block hashes, with a bounded
+//!   load-skew override) that [`crate::server::Frontend`] wires to real
+//!   engine channels.
 //! * [`predictor`] — the online service-rate estimator (EWMA decode-step
 //!   cost + prompt-proportional prefill cost) behind predictive
 //!   admission: under an [`engine::EngineConfig::shed`] policy, queued
@@ -37,6 +42,7 @@ pub mod engine;
 pub mod metrics;
 pub mod predictor;
 pub mod request;
+pub mod router;
 pub mod sampler;
 
 pub use clock::{wall_now, EngineClock, WallTimer};
@@ -47,4 +53,5 @@ pub use engine::{
 pub use metrics::{ClassMetrics, EngineMetrics};
 pub use predictor::{ServiceRateEstimator, ShedPolicy, EWMA_ALPHA};
 pub use request::{GenRequest, GenResult, Priority, RequestTiming, ShedInfo};
+pub use router::{RouteDecision, RoutePolicy, Router, RouterCfg};
 pub use sampler::{SampleCfg, Sampler};

@@ -1,0 +1,400 @@
+//! Front-door request routing over N engine replicas.
+//!
+//! The single [`super::Engine`] is policy-rich but one box; the
+//! millions-of-users step is a sharded frontend that picks *which*
+//! replica serves each request. The router is deliberately a pure,
+//! deterministic decision core — it owns no channels, spawns no
+//! threads, and never touches an engine-owned `TableSet`. The
+//! [`crate::server::Frontend`] wires its decisions to real submission
+//! channels; the e2e bench drives it directly.
+//!
+//! [`RoutePolicy::PrefixAffinity`] keys on the same content-addressed
+//! block hashes the kvpool's prefix-sharing tables register
+//! ([`crate::kvpool::prefix_block_hashes`]): the router mirrors, per
+//! replica, the full-block hashes of every prompt it routed there, so
+//! "which replica already holds this prompt's prefix blocks" is a set
+//! intersection — no cross-thread peeking into live pool state, and
+//! byte-identical decisions for a fixed request sequence. A bounded
+//! load-skew override gives the affinity policy a global admission
+//! view: when the affinity pick is running too far ahead of its least
+//! loaded sibling (queued work the PR 5 predictor would shed), the
+//! request is routed to the least loaded replica instead — the hot
+//! replica sheds, siblings absorb.
+
+use crate::kvpool::prefix_block_hashes;
+use std::collections::BTreeSet;
+
+/// Which replica a request lands on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle through replicas in submission order — the locality-blind
+    /// baseline affinity routing is graded against.
+    #[default]
+    RoundRobin,
+    /// Route to the replica whose routed-prompt mirror shares the most
+    /// prefix blocks with this prompt (ties: least outstanding work,
+    /// then lowest index), subject to the load-skew override.
+    PrefixAffinity,
+}
+
+impl RoutePolicy {
+    /// Stable CLI name (`--route-policy round-robin|prefix-affinity`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::PrefixAffinity => "prefix-affinity",
+        }
+    }
+
+    /// Parse a CLI spelling; `None` for unknown input.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "round-robin" | "rr" => Some(RoutePolicy::RoundRobin),
+            "prefix-affinity" | "affinity" => Some(RoutePolicy::PrefixAffinity),
+            _ => None,
+        }
+    }
+}
+
+/// Router shape and policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct RouterCfg {
+    /// Number of engine replicas behind the frontend (≥ 1; 0 clamps).
+    pub replicas: usize,
+    pub policy: RoutePolicy,
+    /// KV block size the replicas run — affinity hashes prompts at this
+    /// granularity, and it must match the engines' `PoolConfig` or the
+    /// mirror would disagree with the tables it models.
+    pub block_size: usize,
+    /// Global-admission override for `PrefixAffinity`: when the
+    /// affinity pick has more than this many outstanding requests above
+    /// the least loaded replica, route there instead. Locality is worth
+    /// a bounded queue imbalance, not an unbounded one — past the bound
+    /// the hot replica would only shed what a sibling could absorb.
+    pub max_load_skew: usize,
+}
+
+impl Default for RouterCfg {
+    fn default() -> Self {
+        Self {
+            replicas: 2,
+            policy: RoutePolicy::RoundRobin,
+            block_size: 16,
+            max_load_skew: 8,
+        }
+    }
+}
+
+/// One routing decision, kept for determinism pinning and trace
+/// cross-checks (request id → replica index).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RouteDecision {
+    pub id: u64,
+    pub replica: usize,
+    /// Prefix blocks of this prompt already mirrored on the chosen
+    /// replica at decision time (the affinity score it won with; 0
+    /// under `RoundRobin`).
+    pub matched_blocks: usize,
+}
+
+/// Deterministic replica chooser. See the module docs for the design.
+pub struct Router {
+    cfg: RouterCfg,
+    /// Next replica under `RoundRobin`.
+    rr_next: usize,
+    /// Per-replica mirror of the full-block prefix hashes of every
+    /// prompt routed there. Sorted sets: membership-checked and never
+    /// hashed-iterated, so decisions are reproducible by construction.
+    mirror: Vec<BTreeSet<u64>>,
+    /// Requests routed to each replica and not yet completed/shed — the
+    /// router's global load view.
+    outstanding: Vec<usize>,
+    /// Total requests ever routed to each replica.
+    routed: Vec<u64>,
+    /// Shed replies observed per replica (fed back by the frontend).
+    shed: Vec<u64>,
+    decisions: Vec<RouteDecision>,
+}
+
+impl Router {
+    pub fn new(cfg: RouterCfg) -> Self {
+        let n = cfg.replicas.max(1);
+        Self {
+            cfg: RouterCfg { replicas: n, ..cfg },
+            rr_next: 0,
+            mirror: vec![BTreeSet::new(); n],
+            outstanding: vec![0; n],
+            routed: vec![0; n],
+            shed: vec![0; n],
+            decisions: Vec::new(),
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.cfg.replicas
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.cfg.policy
+    }
+
+    /// Route one request: pick a replica, mirror the prompt's prefix
+    /// hashes there, and log the decision.
+    pub fn route(&mut self, id: u64, prompt: &[i32]) -> usize {
+        self.route_inner(id, prompt, None)
+    }
+
+    /// Route a shed-retry, excluding the replica that shed it — with
+    /// more than one replica, a resubmitted request always lands on a
+    /// sibling (which, under affinity, may then warm its own mirror).
+    pub fn route_retry(&mut self, id: u64, prompt: &[i32], prior: usize) -> usize {
+        let avoid = if self.cfg.replicas > 1 { Some(prior) } else { None };
+        self.route_inner(id, prompt, avoid)
+    }
+
+    fn route_inner(&mut self, id: u64, prompt: &[i32], avoid: Option<usize>) -> usize {
+        let hashes = prefix_block_hashes(prompt, self.cfg.block_size);
+        let (replica, matched) = match self.cfg.policy {
+            RoutePolicy::RoundRobin => {
+                let mut r = self.rr_next % self.cfg.replicas;
+                if Some(r) == avoid {
+                    self.rr_next += 1;
+                    r = self.rr_next % self.cfg.replicas;
+                }
+                self.rr_next += 1;
+                (r, 0)
+            }
+            RoutePolicy::PrefixAffinity => self.affinity_pick(&hashes, avoid),
+        };
+        for h in &hashes {
+            self.mirror[replica].insert(*h);
+        }
+        self.outstanding[replica] += 1;
+        self.routed[replica] += 1;
+        self.decisions.push(RouteDecision { id, replica, matched_blocks: matched });
+        replica
+    }
+
+    /// Affinity core: max prefix-block overlap, tie-broken by least
+    /// outstanding then lowest index, overridden to the least loaded
+    /// replica when the winner's load skew exceeds the bound.
+    fn affinity_pick(&self, hashes: &[u64], avoid: Option<usize>) -> (usize, usize) {
+        let mut best: Option<(usize, usize)> = None; // (replica, matched)
+        let mut least: Option<usize> = None; // least-outstanding replica
+        for r in 0..self.cfg.replicas {
+            if Some(r) == avoid {
+                continue;
+            }
+            let matched = hashes.iter().filter(|h| self.mirror[r].contains(h)).count();
+            let better = match best {
+                None => true,
+                Some((br, bm)) => {
+                    matched > bm
+                        || (matched == bm && self.outstanding[r] < self.outstanding[br])
+                }
+            };
+            if better {
+                best = Some((r, matched));
+            }
+            let lighter = match least {
+                None => true,
+                Some(lr) => self.outstanding[r] < self.outstanding[lr],
+            };
+            if lighter {
+                least = Some(r);
+            }
+        }
+        let (br, bm) = match best {
+            Some(b) => b,
+            // Unreachable shape (≥ 1 replica, avoid only set when > 1),
+            // but the hot path degrades to replica 0 instead of
+            // panicking the dispatch thread.
+            None => (0, 0),
+        };
+        let lr = least.unwrap_or(br);
+        if self.outstanding[br] > self.outstanding[lr] + self.cfg.max_load_skew {
+            (lr, hashes.iter().filter(|h| self.mirror[lr].contains(h)).count())
+        } else {
+            (br, bm)
+        }
+    }
+
+    /// A routed request finished (any terminal reply but a shed).
+    pub fn note_done(&mut self, replica: usize) {
+        if let Some(o) = self.outstanding.get_mut(replica) {
+            *o = o.saturating_sub(1);
+        }
+    }
+
+    /// A routed request was shed by its replica — load is released and
+    /// the shed feeds the router's global view.
+    pub fn note_shed(&mut self, replica: usize) {
+        if let Some(o) = self.outstanding.get_mut(replica) {
+            *o = o.saturating_sub(1);
+        }
+        if let Some(s) = self.shed.get_mut(replica) {
+            *s += 1;
+        }
+    }
+
+    /// Requests currently routed-but-unfinished, per replica.
+    pub fn outstanding(&self) -> &[usize] {
+        &self.outstanding
+    }
+
+    /// Total requests ever routed, per replica.
+    pub fn routed(&self) -> &[u64] {
+        &self.routed
+    }
+
+    /// Shed replies observed, per replica.
+    pub fn shed_counts(&self) -> &[u64] {
+        &self.shed
+    }
+
+    /// Every decision made, in submission order.
+    pub fn decisions(&self) -> &[RouteDecision] {
+        &self.decisions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prompt(tag: i32, len: usize) -> Vec<i32> {
+        (0..len as i32).map(|i| tag * 1000 + i).collect()
+    }
+
+    /// `prefix ++ unique tail` prompts, the shape affinity exists for.
+    fn tenant_prompt(tenant: i32, user: i32, bs: usize) -> Vec<i32> {
+        let mut p = prompt(tenant, 4 * bs);
+        p.extend((0..bs as i32 / 2).map(|i| 900_000 + user * 100 + i));
+        p
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in [RoutePolicy::RoundRobin, RoutePolicy::PrefixAffinity] {
+            assert_eq!(RoutePolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(RoutePolicy::parse("rr"), Some(RoutePolicy::RoundRobin));
+        assert_eq!(RoutePolicy::parse("affinity"), Some(RoutePolicy::PrefixAffinity));
+        assert_eq!(RoutePolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn round_robin_cycles_and_logs_decisions() {
+        let mut r = Router::new(RouterCfg { replicas: 3, ..Default::default() });
+        let p = prompt(1, 40);
+        let picks: Vec<usize> = (0..6).map(|i| r.route(i, &p)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        assert_eq!(r.routed(), &[2, 2, 2]);
+        assert_eq!(r.decisions().len(), 6);
+        assert_eq!(r.decisions()[3], RouteDecision { id: 3, replica: 0, matched_blocks: 0 });
+    }
+
+    #[test]
+    fn affinity_pins_a_tenant_to_one_replica() {
+        let bs = 16;
+        let cfg = RouterCfg {
+            replicas: 2,
+            policy: RoutePolicy::PrefixAffinity,
+            block_size: bs,
+            max_load_skew: 64,
+        };
+        let mut r = Router::new(cfg);
+        // First sight of each tenant: no overlap anywhere, ties go to
+        // the least loaded replica — tenants spread out.
+        let a0 = r.route(0, &tenant_prompt(1, 0, bs));
+        let b0 = r.route(1, &tenant_prompt(2, 0, bs));
+        assert_ne!(a0, b0, "fresh tenants spread across idle replicas");
+        // Every later request of a tenant follows its prefix.
+        for i in 0..8 {
+            assert_eq!(r.route(100 + i, &tenant_prompt(1, 1 + i as i32, bs)), a0);
+            assert_eq!(r.route(200 + i, &tenant_prompt(2, 1 + i as i32, bs)), b0);
+        }
+        let d = r.decisions();
+        assert!(d[2].matched_blocks >= 4, "repeat tenant must match its prefix blocks");
+    }
+
+    #[test]
+    fn load_skew_override_sheds_to_the_least_loaded_sibling() {
+        let bs = 8;
+        let cfg = RouterCfg {
+            replicas: 2,
+            policy: RoutePolicy::PrefixAffinity,
+            block_size: bs,
+            max_load_skew: 2,
+        };
+        let mut r = Router::new(cfg);
+        let t = tenant_prompt(7, 0, bs);
+        let home = r.route(0, &t);
+        // Pile outstanding work onto the tenant's home replica without
+        // completing any of it; past the skew bound the router must
+        // absorb on the sibling despite the affinity score.
+        let mut overflowed = None;
+        for i in 1..8 {
+            let got = r.route(i, &tenant_prompt(7, i as i32, bs));
+            if got != home {
+                overflowed = Some(i);
+                break;
+            }
+        }
+        let flip = overflowed.expect("skew bound must eventually override affinity");
+        assert!(flip >= 3, "override must not fire before the bound (fired at {flip})");
+        // Completions drain the home replica; affinity resumes.
+        for _ in 0..6 {
+            r.note_done(home);
+        }
+        assert_eq!(r.route(99, &tenant_prompt(7, 99, bs)), home);
+    }
+
+    #[test]
+    fn retry_routing_lands_on_a_sibling() {
+        let bs = 8;
+        let mut r = Router::new(RouterCfg {
+            replicas: 2,
+            policy: RoutePolicy::PrefixAffinity,
+            block_size: bs,
+            max_load_skew: 1000,
+        });
+        let t = tenant_prompt(3, 0, bs);
+        let home = r.route(0, &t);
+        r.note_shed(home);
+        assert_eq!(r.shed_counts()[home], 1);
+        let retry = r.route_retry(1, &t, home);
+        assert_ne!(retry, home, "retry must land on a sibling replica");
+        // Single replica: nothing to avoid, retry goes back.
+        let mut solo = Router::new(RouterCfg { replicas: 1, ..Default::default() });
+        assert_eq!(solo.route_retry(0, &t, 0), 0);
+    }
+
+    #[test]
+    fn identical_request_sequences_decide_identically() {
+        let bs = 16;
+        let cfg = RouterCfg {
+            replicas: 3,
+            policy: RoutePolicy::PrefixAffinity,
+            block_size: bs,
+            max_load_skew: 4,
+        };
+        let run = || {
+            let mut r = Router::new(cfg);
+            let mut out = Vec::new();
+            for i in 0..64u64 {
+                let tenant = (i % 5) as i32;
+                let user = (i / 5) as i32;
+                out.push(r.route(i, &tenant_prompt(tenant, user, bs)));
+                if i % 3 == 0 {
+                    r.note_done(out[i as usize]);
+                }
+            }
+            (out, r.decisions().to_vec())
+        };
+        let (a, da) = run();
+        let (b, db) = run();
+        assert_eq!(a, b, "same sequence must route identically");
+        assert_eq!(da, db);
+    }
+}

@@ -37,6 +37,15 @@ pub struct WorkloadCfg {
     /// exactly what the kvpool's content-addressed prefix sharing
     /// deduplicates. 0 disables.
     pub shared_prefix_len: usize,
+    /// Number of *distinct* shared prefixes ("tenants"): each request
+    /// draws one of `prefix_group_count` system prompts (all exactly
+    /// `shared_prefix_len` bytes) instead of the single global one — the
+    /// multi-tenant regime prefix-affinity routing shards across
+    /// replicas. Group prefixes beyond the first and the per-request
+    /// group draw come from a dedicated RNG stream, so raising the count
+    /// never perturbs arrivals, user suffixes, lengths, classes or SLOs.
+    /// 1 (the default) pins the single-prefix traces byte-identically.
+    pub prefix_group_count: usize,
     /// Probability a request is `Priority::Batch` (0 → all interactive,
     /// the single-class traces every earlier scenario used; 1 → all
     /// batch). Drawn per request, deterministic for a fixed seed — the
@@ -77,6 +86,7 @@ impl Default for WorkloadCfg {
             gen_len: (16, 64),
             gen_len_dist: GenLenDist::Uniform,
             shared_prefix_len: 0,
+            prefix_group_count: 1,
             batch_frac: 0.0,
             slo_ms_interactive: None,
             slo_ms_batch: None,
@@ -109,7 +119,9 @@ impl Workload {
     /// Build a trace using filler sentences as prompt material. When
     /// `shared_prefix_len > 0`, one system prompt of exactly that many
     /// bytes is built first and prepended verbatim to every request on
-    /// top of the per-request (`prompt_len`-sized) user suffix.
+    /// top of the per-request (`prompt_len`-sized) user suffix; with
+    /// `prefix_group_count > 1` each request instead draws one of that
+    /// many distinct equal-length system prompts (tenants).
     pub fn generate(cfg: &WorkloadCfg, fillers: &[String]) -> Self {
         assert!(!fillers.is_empty());
         let mut rng = Xoshiro256::new(cfg.seed ^ w0rkload_seed());
@@ -122,6 +134,17 @@ impl Workload {
         let mut slo_rng = Xoshiro256::new(cfg.seed ^ 0x510_D1CE);
         let jitter = cfg.slo_jitter_frac.clamp(0.0, 0.9);
         let shared = Self::filler_text(&mut rng, cfg.shared_prefix_len, fillers);
+        // Fourth stream for multi-tenant prefix groups: extra group
+        // prefixes and the per-request group draw must ride along
+        // without reshuffling the base trace (group 0 is the original
+        // main-stream system prompt, so `prefix_group_count == 1` never
+        // touches this stream at all).
+        let mut group_rng = Xoshiro256::new(cfg.seed ^ 0xAFF1_717E);
+        let groups = cfg.prefix_group_count.max(1);
+        let mut prefixes = vec![shared];
+        for _ in 1..groups {
+            prefixes.push(Self::filler_text(&mut group_rng, cfg.shared_prefix_len, fillers));
+        }
         let mut t = 0.0f64;
         let mut items = Vec::with_capacity(cfg.n_requests);
         for _ in 0..cfg.n_requests {
@@ -129,7 +152,8 @@ impl Workload {
                 t += rng.exponential(cfg.rate);
             }
             let plen = rng.range(cfg.prompt_len.0, cfg.prompt_len.1 + 1);
-            let mut prompt = shared.clone();
+            let group = if groups > 1 { group_rng.range(0, groups) } else { 0 };
+            let mut prompt = prefixes[group].clone();
             prompt.push_str(&Self::filler_text(&mut rng, plen, fillers));
             let max_new_tokens = match cfg.gen_len_dist {
                 GenLenDist::Uniform => rng.range(cfg.gen_len.0, cfg.gen_len.1 + 1),
@@ -228,6 +252,53 @@ mod tests {
         let distinct: std::collections::HashSet<&str> =
             w.items.iter().map(|i| &i.prompt[64..]).collect();
         assert!(distinct.len() > 1, "user suffixes should differ");
+    }
+
+    #[test]
+    fn prefix_groups_ride_along_without_perturbing_the_trace() {
+        let base = WorkloadCfg {
+            n_requests: 48,
+            shared_prefix_len: 64,
+            prompt_len: (10, 20),
+            seed: 7,
+            ..Default::default()
+        };
+        let single = Workload::generate(&base, &fillers());
+        let multi = Workload::generate(
+            &WorkloadCfg { prefix_group_count: 4, ..base.clone() },
+            &fillers(),
+        );
+        // Grouping must only swap the leading 64 bytes: arrivals, user
+        // suffixes and lengths stay byte-identical to the single-tenant
+        // trace.
+        let mut groups_seen = std::collections::HashSet::new();
+        for (a, b) in single.items.iter().zip(&multi.items) {
+            assert_eq!(a.arrival_s, b.arrival_s);
+            assert_eq!(a.max_new_tokens, b.max_new_tokens);
+            assert_eq!(&a.prompt[64..], &b.prompt[64..], "user suffix must ride along");
+            groups_seen.insert(b.prompt[..64].to_string());
+        }
+        assert!(
+            groups_seen.len() > 1 && groups_seen.len() <= 4,
+            "4 tenants must yield 2–4 distinct prefixes, got {}",
+            groups_seen.len()
+        );
+        // Deterministic: the same seed redraws the same groups.
+        let again = Workload::generate(
+            &WorkloadCfg { prefix_group_count: 4, ..base.clone() },
+            &fillers(),
+        );
+        for (a, b) in multi.items.iter().zip(&again.items) {
+            assert_eq!(a.prompt, b.prompt);
+        }
+        // Default (1) pins the single-prefix trace byte-identically.
+        let one = Workload::generate(
+            &WorkloadCfg { prefix_group_count: 1, ..base.clone() },
+            &fillers(),
+        );
+        for (a, b) in single.items.iter().zip(&one.items) {
+            assert_eq!(a.prompt, b.prompt);
+        }
     }
 
     #[test]

@@ -28,5 +28,5 @@ pub mod tiered;
 
 pub use block::{BlockAllocator, BlockId, PoolExhausted};
 pub use stats::{PoolStats, TierStats};
-pub use table::{chain_hash, BlockTable, SeqId, TableSet, TruncateOutcome};
+pub use table::{chain_hash, prefix_block_hashes, BlockTable, SeqId, TableSet, TruncateOutcome};
 pub use tiered::{PagedArena, PoolSeqId, TieredKvPool, TieredPoolCfg};

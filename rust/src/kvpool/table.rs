@@ -55,6 +55,24 @@ pub fn chain_hash(prev: u64, tokens: &[i32]) -> u64 {
     h
 }
 
+/// The chained content hashes of a prompt's *full* blocks — hash `i`
+/// covers `prompt[..(i+1)·block_size]`, exactly the keys
+/// [`TableSet::admit`] registers in its prefix map. This is the
+/// content-addressing surface the multi-replica router keys affinity on:
+/// two prompts share a resident prefix iff their leading hashes agree,
+/// so a router that mirrors routed hashes per replica can compute block
+/// overlap without touching any engine-owned `TableSet`.
+pub fn prefix_block_hashes(prompt: &[i32], block_size: usize) -> Vec<u64> {
+    let bs = block_size.max(1);
+    let mut chain = 0u64;
+    let mut hashes = Vec::with_capacity(prompt.len() / bs);
+    for i in 0..prompt.len() / bs {
+        chain = chain_hash(chain, &prompt[i * bs..(i + 1) * bs]);
+        hashes.push(chain);
+    }
+    hashes
+}
+
 pub struct TableSet {
     block_size: usize,
     sharing: bool,
@@ -465,16 +483,10 @@ impl TableSet {
         if !self.sharing {
             return 0;
         }
-        let bs = self.block_size;
-        let mut chain = 0u64;
-        let mut shared = 0;
-        for i in 0..prompt.len() / bs {
-            chain = chain_hash(chain, &prompt[i * bs..(i + 1) * bs]);
-            if self.prefix_map.contains_key(&chain) {
-                shared += 1;
-            }
-        }
-        shared
+        prefix_block_hashes(prompt, self.block_size)
+            .iter()
+            .filter(|h| self.prefix_map.contains_key(h))
+            .count()
     }
 
     fn rollback(&mut self, alloc: &mut BlockAllocator, acquired: &[BlockId]) {
@@ -631,6 +643,30 @@ mod tests {
         // Sharing disabled → never counts.
         let ts_off = TableSet::new(4, false);
         assert_eq!(ts_off.shareable_full_blocks(&prompt), 0);
+    }
+
+    #[test]
+    fn prefix_block_hashes_match_the_tables_registration() {
+        let bs = 4;
+        let prompt = toks(10, 0); // 2 full blocks + tail
+        let hashes = prefix_block_hashes(&prompt, bs);
+        assert_eq!(hashes.len(), 2, "only full blocks hash");
+        // Hash i is the chained hash the admit path registers: a prompt
+        // sharing block 0 but diverging in block 1 agrees on hash 0 only.
+        let mut other = prompt.clone();
+        other[5] = 999;
+        let other_hashes = prefix_block_hashes(&other, bs);
+        assert_eq!(hashes[0], other_hashes[0]);
+        assert_ne!(hashes[1], other_hashes[1]);
+        // Agreement with the resident index: after admitting the prompt,
+        // exactly the blocks whose hashes are registered are shareable.
+        let mut alloc = BlockAllocator::new(16, bs);
+        let mut ts = TableSet::new(bs, true);
+        ts.admit(&mut alloc, &prompt, 10).unwrap();
+        assert_eq!(ts.shareable_full_blocks(&prompt), hashes.len());
+        assert_eq!(ts.shareable_full_blocks(&other), 1);
+        // Degenerate block size clamps instead of dividing by zero.
+        assert_eq!(prefix_block_hashes(&prompt, 0).len(), prompt.len());
     }
 
     #[test]

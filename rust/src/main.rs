@@ -69,15 +69,25 @@ fn main() -> Result<()> {
                  \x20                                         scheduling round (0 = monolithic)\n\
                  \x20 --trace-out FILE.jsonl                  dump the flight recorder after\n\
                  \x20                                         the run (+ FILE.chrome.json)\n\
+                 \x20 --prefix-prefill-discount               Steps clock: charge no prefill\n\
+                 \x20                                         time for prefix-shared blocks\n\
+                 sharded serving (serve / bench-serve):\n\
+                 \x20 --replicas N                            engine replicas (default 1)\n\
+                 \x20 --route-policy round-robin|prefix-affinity\n\
+                 \x20 --max-load-skew N                       affinity's load-override bound\n\
                  generate: --prompt STR --max-tokens N --temperature T\n\
                  \x20         --priority interactive|batch --slo-ms MS\n\
                  serve:    --listen 127.0.0.1:7077   (scrape live metrics with a\n\
                  \x20        {{\"stats\": true}} protocol line)\n\
                  bench-serve: --requests N --rate R --shared-prefix BYTES --batch-frac F\n\
+                 \x20            --prefix-groups N (distinct shared prefixes)\n\
                  \x20            --slo-ms MS (interactive SLO) --batch-slo-ms MS\n\
                  \x20            --slo-jitter F (per-request SLO jitter fraction)\n\
-                 trace-check: FILE.jsonl — exit non-zero if the trace violates\n\
-                 \x20            lifecycle conservation"
+                 \x20            --shed-retries N (resubmit shed requests after their\n\
+                 \x20            retry_after_ms hint; default 1)\n\
+                 trace-check: FILE.jsonl [FILE.jsonl ...] — exit non-zero on lifecycle\n\
+                 \x20            violations; multiple files also enforce disjoint\n\
+                 \x20            per-replica admission"
             );
             Ok(())
         }
@@ -152,7 +162,27 @@ fn engine_config(args: &Args, svc: &RuntimeService) -> Result<EngineConfig> {
             0 => None,
             n => Some(n),
         },
+        prefix_prefill_discount: args.flag("prefix-prefill-discount"),
         verbose: args.flag("verbose"),
+    })
+}
+
+/// Parse the sharded-serving flags shared by `serve` and `bench-serve`:
+/// `--replicas N` (default 1) and `--route-policy round-robin|
+/// prefix-affinity` (default round-robin), plus the affinity policy's
+/// `--max-load-skew` bound. `block_size` comes from the engine config so
+/// the router hashes prompts at the replicas' actual page size.
+fn router_cfg_from_args(args: &Args, cfg: &EngineConfig) -> Result<loki::coordinator::RouterCfg> {
+    let spelled = args.str_or("route-policy", "round-robin");
+    let policy = match loki::coordinator::RoutePolicy::parse(&spelled) {
+        Some(p) => p,
+        None => bail!("unknown --route-policy {spelled} (round-robin|prefix-affinity)"),
+    };
+    Ok(loki::coordinator::RouterCfg {
+        replicas: args.usize_or("replicas", 1).max(1),
+        policy,
+        block_size: cfg.pool.block_size,
+        max_load_skew: args.usize_or("max-load-skew", 8),
     })
 }
 
@@ -204,30 +234,55 @@ fn maybe_write_trace(args: &Args, metrics: &loki::coordinator::EngineMetrics) ->
     Ok(())
 }
 
-/// `repro trace-check FILE.jsonl` — parse a flight-recorder dump and
-/// verify its lifecycle conservation invariants (every admitted request
-/// reaches exactly one terminal; admitted = finished + shed + rejected +
-/// in-flight; no ring overwrites). Non-zero exit on violation, so CI
-/// can gate on it.
+/// `repro trace-check FILE.jsonl [FILE.jsonl …]` — parse one or more
+/// flight-recorder dumps and verify their lifecycle conservation
+/// invariants (every admitted request reaches exactly one terminal;
+/// admitted = finished + shed + rejected + in-flight; no ring
+/// overwrites). With multiple files — the per-replica traces of one
+/// sharded run — it additionally enforces the routing invariant: a
+/// request routed to replica R lives its whole lifecycle on R, so no id
+/// may be admitted in more than one trace. Non-zero exit on any
+/// violation, so CI can gate on it.
 fn trace_check(args: &Args) -> Result<()> {
-    let path = args
-        .positional
-        .get(1)
-        .context("usage: repro trace-check FILE.jsonl")?;
-    let src = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
-    let check = loki::obs::export::check_jsonl(&src)?;
-    println!(
-        "{path}: {} events | admitted {} = finished {} + shed {} + rejected {} + in-flight {}",
-        check.events, check.admitted, check.finished, check.shed, check.rejected, check.in_flight
-    );
-    if check.ok() {
-        println!("conservation: OK");
-        Ok(())
-    } else {
+    let paths = &args.positional[1..];
+    if paths.is_empty() {
+        bail!("usage: repro trace-check FILE.jsonl [FILE.jsonl ...]");
+    }
+    let mut labeled = Vec::with_capacity(paths.len());
+    let mut total_violations = 0usize;
+    for path in paths {
+        let src = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+        let check = loki::obs::export::check_jsonl(&src)?;
+        println!(
+            "{path}: {} events | admitted {} = finished {} + shed {} + rejected {} + in-flight {}",
+            check.events,
+            check.admitted,
+            check.finished,
+            check.shed,
+            check.rejected,
+            check.in_flight
+        );
         for v in &check.violations {
             eprintln!("violation: {v}");
         }
-        bail!("{} conservation violation(s)", check.violations.len());
+        total_violations += check.violations.len();
+        labeled.push((path.clone(), check));
+    }
+    if labeled.len() > 1 {
+        let cross = loki::obs::export::cross_replica_violations(&labeled);
+        for v in &cross {
+            eprintln!("violation: {v}");
+        }
+        if cross.is_empty() {
+            println!("cross-replica: {} traces admit disjoint id sets", labeled.len());
+        }
+        total_violations += cross.len();
+    }
+    if total_violations == 0 {
+        println!("conservation: OK");
+        Ok(())
+    } else {
+        bail!("{total_violations} conservation violation(s)");
     }
 }
 
@@ -319,40 +374,107 @@ fn serve(args: &Args) -> Result<()> {
     let listen = args.str_or("listen", "127.0.0.1:7077");
     let svc = RuntimeService::start(artifacts_dir()).context("starting runtime")?;
     let cfg = engine_config(args, &svc)?;
+    let router_cfg = router_cfg_from_args(args, &cfg)?;
     // Protocol-level cap: asking for more decode than the cache can hold
     // is a client error answered immediately, not a queue entry.
     let server_cfg = loki::server::ServerCfg {
         max_tokens_cap: svc.manifest.model.max_len,
         ..Default::default()
     };
-    // Live metrics: the engine publishes a snapshot per scheduling
-    // round; the server answers `{"stats": true}` scrapes from it.
-    let hub = loki::obs::new_hub();
-    let engine = Engine::new(&svc, cfg.clone()).with_stats_hub(hub.clone());
-    let (tx, rx) = Engine::channel(&cfg);
-    let server_tx = tx.clone();
-    let server = std::thread::spawn(move || {
-        let listener = std::net::TcpListener::bind(&listen)
-            .unwrap_or_else(|e| panic!("bind {listen}: {e}"));
-        loki::server::serve_listener(listener, server_tx, server_cfg, Some(hub)).expect("server")
-    });
-    let metrics = engine.run(rx)?;
-    println!("{}", metrics.report());
-    maybe_write_trace(args, &metrics)?;
-    let _ = server.join();
+    if router_cfg.replicas == 1 {
+        // Single-replica shape, unchanged: engine on the main thread,
+        // listener on a helper.
+        let hub = loki::obs::new_hub();
+        let engine = Engine::new(&svc, cfg.clone()).with_stats_hub(hub.clone());
+        let (tx, rx) = Engine::channel(&cfg);
+        let server_tx = tx.clone();
+        let server = std::thread::spawn(move || {
+            let listener = std::net::TcpListener::bind(&listen)
+                .unwrap_or_else(|e| panic!("bind {listen}: {e}"));
+            loki::server::serve_listener(listener, server_tx, server_cfg, Some(hub))
+                .expect("server")
+        });
+        let metrics = engine.run(rx)?;
+        println!("{}", metrics.report());
+        maybe_write_trace(args, &metrics)?;
+        let _ = server.join();
+        return Ok(());
+    }
+    // Sharded serving: one engine (own KV pool, own queue, own stats
+    // hub) per replica on its own thread; the frontend routes every
+    // connection's requests across them.
+    let mut submits = Vec::with_capacity(router_cfg.replicas);
+    let mut hubs = Vec::with_capacity(router_cfg.replicas);
+    let mut workers = Vec::with_capacity(router_cfg.replicas);
+    for i in 0..router_cfg.replicas {
+        let hub = loki::obs::new_hub();
+        let engine = Engine::new(&svc, cfg.clone()).with_stats_hub(hub.clone());
+        let (tx, rx) = Engine::channel(&cfg);
+        submits.push(tx);
+        hubs.push(hub);
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("engine-{i}"))
+                .spawn(move || engine.run(rx))
+                .with_context(|| format!("spawn engine {i}"))?,
+        );
+    }
+    let fe = std::sync::Arc::new(loki::server::Frontend::new(router_cfg, submits, hubs)?);
+    let listener =
+        std::net::TcpListener::bind(&listen).with_context(|| format!("bind {listen}"))?;
+    loki::server::serve_frontend(listener, fe, server_cfg)?;
+    for w in workers {
+        match w.join() {
+            Ok(Ok(metrics)) => println!("{}", metrics.report()),
+            Ok(Err(e)) => eprintln!("[serve] engine error: {e}"),
+            Err(_) => eprintln!("[serve] engine thread panicked"),
+        }
+    }
     Ok(())
+}
+
+/// In-flight bookkeeping for the bench client: which trace item a
+/// request id belongs to, which retry attempt it is, and which replica
+/// it was routed to.
+#[derive(Clone, Copy)]
+struct InFlight {
+    item: usize,
+    attempt: usize,
+    replica: usize,
+}
+
+/// `foo.jsonl` → `foo-r2.jsonl`: per-replica trace paths for sharded
+/// bench runs.
+fn replica_trace_path(raw: &str, i: usize) -> std::path::PathBuf {
+    let p = std::path::Path::new(raw);
+    let stem = p.file_stem().and_then(|s| s.to_str()).unwrap_or("trace");
+    match p.extension().and_then(|s| s.to_str()) {
+        Some(ext) => p.with_file_name(format!("{stem}-r{i}.{ext}")),
+        None => p.with_file_name(format!("{stem}-r{i}")),
+    }
 }
 
 #[allow(clippy::disallowed_methods)] // genuine wall measurement: client-side E2E latency
 fn bench_serve(args: &Args) -> Result<()> {
+    use std::collections::HashMap;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::{Arc, Mutex};
+
     let svc = RuntimeService::start(artifacts_dir()).context("starting runtime")?;
     let cfg = engine_config(args, &svc)?;
+    let router_cfg = router_cfg_from_args(args, &cfg)?;
+    // Shed-aware client backoff: a shed reply is resubmitted after its
+    // `retry_after_ms` hint, up to this many times per request. Retries
+    // route through the frontend again, so with >1 replica they land on
+    // a sibling of the replica that shed them.
+    let shed_retries = args.usize_or("shed-retries", 1);
     let suite = TaskSuite::load(&artifacts_dir())?;
     let wl = Workload::generate(
         &WorkloadCfg {
             n_requests: args.usize_or("requests", 24),
             rate: args.f64_or("rate", 0.0),
             shared_prefix_len: args.usize_or("shared-prefix", 0),
+            prefix_group_count: args.usize_or("prefix-groups", 1),
             batch_frac: args.f64_or("batch-frac", 0.0),
             slo_ms_interactive: slo_ms_arg(args, "slo-ms")?,
             slo_ms_batch: slo_ms_arg(args, "batch-slo-ms")?,
@@ -361,34 +483,171 @@ fn bench_serve(args: &Args) -> Result<()> {
         },
         &suite.fillers,
     );
-    let engine = Engine::new(&svc, cfg.clone());
-    let (tx, rx) = Engine::channel(&cfg);
-    let tok = ByteTokenizer;
+    let mut submits = Vec::with_capacity(router_cfg.replicas);
+    let mut workers = Vec::with_capacity(router_cfg.replicas);
+    for i in 0..router_cfg.replicas {
+        let engine = Engine::new(&svc, cfg.clone());
+        let (tx, rx) = Engine::channel(&cfg);
+        submits.push(tx);
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("engine-{i}"))
+                .spawn(move || engine.run(rx))
+                .with_context(|| format!("spawn engine {i}"))?,
+        );
+    }
+    let fe = Arc::new(loki::server::Frontend::new(router_cfg, submits, Vec::new())?);
     let (reply, results) = channel();
-    let submit = std::thread::spawn(move || {
-        let start = std::time::Instant::now();
-        for (i, item) in wl.items.iter().enumerate() {
-            let wait = item.arrival_s - start.elapsed().as_secs_f64();
-            if wait > 0.0 {
-                std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+    // id → in-flight record. Inserted under the lock *around* the
+    // dispatch, so the collector can never receive a result whose id it
+    // cannot resolve.
+    let in_flight: Arc<Mutex<HashMap<u64, InFlight>>> = Arc::new(Mutex::new(HashMap::new()));
+    let items = Arc::new(wl.items);
+    let total = items.len();
+
+    let submit = {
+        let fe = fe.clone();
+        let in_flight = in_flight.clone();
+        let items = items.clone();
+        let reply = reply.clone();
+        std::thread::spawn(move || {
+            let tok = ByteTokenizer;
+            let start = std::time::Instant::now();
+            for (i, item) in items.iter().enumerate() {
+                let wait = item.arrival_s - start.elapsed().as_secs_f64();
+                if wait > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+                }
+                let req = GenRequest {
+                    id: i as u64,
+                    prompt: tok.encode(&item.prompt),
+                    max_new_tokens: item.max_new_tokens,
+                    stop_token: None,
+                    sampling: SampleCfg::greedy(),
+                    priority: item.priority,
+                    slo_ms: item.slo_ms,
+                    reply: reply.clone(),
+                };
+                let Ok(mut m) = in_flight.lock() else { return };
+                if let Ok(replica) = fe.dispatch(req) {
+                    m.insert(i as u64, InFlight { item: i, attempt: 0, replica });
+                }
+                // A failed dispatch means a dead replica; the
+                // collector's timeout ends the run.
             }
-            tx.send(GenRequest {
-                id: i as u64,
-                prompt: tok.encode(&item.prompt),
-                max_new_tokens: item.max_new_tokens,
-                stop_token: None,
-                sampling: SampleCfg::greedy(),
-                priority: item.priority,
-                slo_ms: item.slo_ms,
-                reply: reply.clone(),
-            })
-            .ok();
+        })
+    };
+
+    let mut finished = 0usize;
+    let mut shed_final = 0u64;
+    let mut retries_sent = 0u64;
+    let sibling_landings = Arc::new(AtomicU64::new(0));
+    let mut retry_threads = Vec::new();
+    while finished < total {
+        let res = match results.recv_timeout(std::time::Duration::from_secs(120)) {
+            Ok(r) => r,
+            Err(_) => {
+                eprintln!("[bench-serve] timed out waiting for {} result(s)", total - finished);
+                break;
+            }
+        };
+        let fl = in_flight.lock().ok().and_then(|mut m| m.remove(&res.id));
+        let Some(fl) = fl else {
+            finished += 1;
+            continue;
+        };
+        if let Some(shed) = res.shed {
+            fe.note_shed(fl.replica);
+            if fl.attempt < shed_retries {
+                retries_sent += 1;
+                let fe = fe.clone();
+                let in_flight = in_flight.clone();
+                let items = items.clone();
+                let reply = reply.clone();
+                let sibling_landings = sibling_landings.clone();
+                retry_threads.push(std::thread::spawn(move || {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(
+                        (shed.retry_after_ms / 1000.0).max(0.0),
+                    ));
+                    let tok = ByteTokenizer;
+                    let item = &items[fl.item];
+                    // Fresh id per attempt: retries must never collide
+                    // with first-attempt ids (one disjoint generation
+                    // per attempt number).
+                    let new_id = (fl.attempt as u64 + 1) * 1_000_000 + fl.item as u64;
+                    let req = GenRequest {
+                        id: new_id,
+                        prompt: tok.encode(&item.prompt),
+                        max_new_tokens: item.max_new_tokens,
+                        stop_token: None,
+                        sampling: SampleCfg::greedy(),
+                        priority: item.priority,
+                        slo_ms: item.slo_ms,
+                        reply,
+                    };
+                    let Ok(mut m) = in_flight.lock() else { return };
+                    if let Ok(replica) = fe.dispatch_retry(req, fl.replica) {
+                        if replica != fl.replica {
+                            sibling_landings.fetch_add(1, Ordering::Relaxed);
+                        }
+                        m.insert(
+                            new_id,
+                            InFlight { item: fl.item, attempt: fl.attempt + 1, replica },
+                        );
+                    }
+                }));
+                // The retry's own result closes this item.
+                continue;
+            }
+            shed_final += 1;
+        } else {
+            fe.note_done(fl.replica);
         }
-    });
-    let metrics = engine.run(rx)?;
+        finished += 1;
+    }
+    drop(reply);
     let _ = submit.join();
-    drop(results);
-    println!("{}", metrics.report());
-    maybe_write_trace(args, &metrics)?;
+    for t in retry_threads {
+        let _ = t.join();
+    }
+    if retries_sent > 0 || shed_final > 0 {
+        println!(
+            "[bench-serve] shed backoff: {retries_sent} resubmitted ({} landed on a sibling), {shed_final} shed after retries",
+            sibling_landings.load(Ordering::Relaxed)
+        );
+    }
+    // Dropping the frontend drops every submit channel; the engines
+    // drain and exit.
+    drop(fe);
+    let mut reports = Vec::new();
+    for w in workers {
+        match w.join() {
+            Ok(Ok(m)) => reports.push(m),
+            Ok(Err(e)) => eprintln!("[bench-serve] engine error: {e}"),
+            Err(_) => eprintln!("[bench-serve] engine thread panicked"),
+        }
+    }
+    for (i, m) in reports.iter().enumerate() {
+        if reports.len() > 1 {
+            println!("=== replica {i} ===");
+        }
+        println!("{}", m.report());
+    }
+    if reports.len() == 1 {
+        maybe_write_trace(args, &reports[0])?;
+    } else {
+        if args.flag("trace-out") {
+            bail!("--trace-out needs a file path");
+        }
+        if let Some(raw) = args.get("trace-out") {
+            for (i, m) in reports.iter().enumerate() {
+                let path = replica_trace_path(raw, i);
+                loki::obs::export::write_jsonl(&m.trace, &path)?;
+                let chrome = loki::obs::export::chrome_sibling(&path);
+                loki::obs::export::write_chrome(&m.trace, &chrome)?;
+                eprintln!("[trace] replica {i} -> {}", path.display());
+            }
+        }
+    }
     Ok(())
 }

@@ -25,7 +25,7 @@
 //! * totals conserve: `admitted = finished + shed + rejected` (an id
 //!   still in flight is a violation for a drained engine run).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
@@ -309,6 +309,11 @@ pub struct TraceCheck {
     pub shed: u64,
     pub rejected: u64,
     pub in_flight: u64,
+    /// Every request id this trace admitted — the surface the sharded
+    /// frontend's cross-replica check intersects: a request routed to
+    /// replica R must live its whole lifecycle on R, so per-replica
+    /// traces must admit pairwise-disjoint id sets.
+    pub admitted_ids: BTreeSet<u64>,
     pub violations: Vec<String>,
 }
 
@@ -316,6 +321,27 @@ impl TraceCheck {
     pub fn ok(&self) -> bool {
         self.violations.is_empty()
     }
+}
+
+/// Cross-replica routing invariant over per-replica trace checks: no
+/// request id may be admitted by more than one replica (the router
+/// owns placement; a double admit means a request leaked across the
+/// shard boundary). Returns one violation line per leaked id, in id
+/// order; empty ⇒ the shard traces are disjoint.
+pub fn cross_replica_violations(labeled: &[(String, TraceCheck)]) -> Vec<String> {
+    let mut owners: BTreeMap<u64, Vec<&str>> = BTreeMap::new();
+    for (label, chk) in labeled {
+        for id in &chk.admitted_ids {
+            owners.entry(*id).or_default().push(label.as_str());
+        }
+    }
+    owners
+        .iter()
+        .filter(|(_, files)| files.len() > 1)
+        .map(|(id, files)| {
+            format!("id {id}: admitted on multiple replicas ({})", files.join(", "))
+        })
+        .collect()
 }
 
 #[derive(Default)]
@@ -362,6 +388,7 @@ where
         let name = name.as_ref();
         let Some(id) = id else { continue };
         if name == "request_admitted" {
+            out.admitted_ids.insert(id);
             if ids.insert(id, IdState::default()).is_some() {
                 out.violations.push(format!("id {id}: duplicate request_admitted"));
             }
@@ -681,6 +708,26 @@ mod tests {
         assert_eq!(from_text.rejected, from_mem.rejected);
         // Serialization is deterministic: same recorder, same bytes.
         assert_eq!(trace_hash(text.as_bytes()), trace_hash(trace_jsonl(&r).as_bytes()));
+    }
+
+    #[test]
+    fn cross_replica_disjointness_is_enforced() {
+        let r0 = rec_with(&[admit(1), finish(1), admit(3), finish(3)]);
+        let r1 = rec_with(&[admit(2), finish(2)]);
+        let c0 = check_recorder(&r0);
+        let c1 = check_recorder(&r1);
+        assert_eq!(c0.admitted_ids.iter().copied().collect::<Vec<_>>(), vec![1, 3]);
+        let labeled = vec![("replica0.jsonl".to_string(), c0), ("replica1.jsonl".to_string(), c1)];
+        assert!(cross_replica_violations(&labeled).is_empty());
+        // Same id admitted on both replicas: a routing leak.
+        let leak = check_recorder(&rec_with(&[admit(3), finish(3)]));
+        let labeled = vec![
+            ("replica0.jsonl".to_string(), check_recorder(&r0)),
+            ("replica1.jsonl".to_string(), leak),
+        ];
+        let v = cross_replica_violations(&labeled);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("id 3") && v[0].contains("replica0.jsonl"), "{v:?}");
     }
 
     #[test]

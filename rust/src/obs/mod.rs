@@ -32,6 +32,7 @@ pub mod recorder;
 pub mod snapshot;
 
 pub use event::{EventKind, FinishCode, PoolEvent, PoolEventLog, TraceEvent};
+pub use export::{cross_replica_violations, TraceCheck};
 pub use hist::StreamingHist;
 pub use recorder::{FlightRecorder, DEFAULT_TRACE_CAPACITY};
 pub use snapshot::{new_hub, ClassSnap, HistSnap, StatsHub, StatsSnapshot};

@@ -46,6 +46,36 @@ impl HistSnap {
             ("max", json::num(self.max)),
         ])
     }
+
+    /// Count-weighted merge across replicas. Means and maxima merge
+    /// exactly; the percentiles are count-weighted averages of the
+    /// per-replica percentiles — an *approximation* (exact fleet
+    /// quantiles would need the underlying histograms), good enough for
+    /// a dashboard roll-up and clearly better than showing one replica.
+    fn merged(parts: impl Iterator<Item = HistSnap>) -> HistSnap {
+        let mut out = HistSnap::default();
+        let mut wsum = [0.0f64; 4]; // mean, p50, p95, p99 accumulators
+        for h in parts {
+            if h.count == 0 {
+                continue;
+            }
+            let w = h.count as f64;
+            out.count += h.count;
+            wsum[0] += h.mean * w;
+            wsum[1] += h.p50 * w;
+            wsum[2] += h.p95 * w;
+            wsum[3] += h.p99 * w;
+            out.max = out.max.max(h.max);
+        }
+        if out.count > 0 {
+            let n = out.count as f64;
+            out.mean = wsum[0] / n;
+            out.p50 = wsum[1] / n;
+            out.p95 = wsum[2] / n;
+            out.p99 = wsum[3] / n;
+        }
+        out
+    }
 }
 
 /// Per-class (interactive/batch) counters.
@@ -102,6 +132,60 @@ pub fn new_hub() -> StatsHub {
 const CLASS_NAMES: [&str; 2] = ["interactive", "batch"];
 
 impl StatsSnapshot {
+    /// Roll per-replica snapshots up into one fleet view for the
+    /// sharded frontend's `{"stats": true}` reply: counters and gauges
+    /// sum, `uptime_s` is the slowest replica's (they started together;
+    /// under the Steps clock the busiest one has ticked furthest),
+    /// `goodput_tok_per_step` is re-derived decode-step-weighted, and
+    /// histograms merge count-weighted (see [`HistSnap::merged`] for
+    /// the percentile caveat). Empty input → default snapshot.
+    pub fn merged(parts: &[StatsSnapshot]) -> StatsSnapshot {
+        let mut out = StatsSnapshot::default();
+        let mut goodput_weighted = 0.0f64;
+        for p in parts {
+            out.uptime_s = out.uptime_s.max(p.uptime_s);
+            out.throughput_tok_s += p.throughput_tok_s;
+            out.requests_in += p.requests_in;
+            out.requests_done += p.requests_done;
+            out.requests_rejected += p.requests_rejected;
+            out.requests_shed += p.requests_shed;
+            out.tokens_generated += p.tokens_generated;
+            out.prefills += p.prefills;
+            out.prefill_chunks += p.prefill_chunks;
+            out.lane_reset_prefills += p.lane_reset_prefills;
+            out.decode_steps += p.decode_steps;
+            out.preemptions += p.preemptions;
+            out.resumes += p.resumes;
+            out.queue_depth += p.queue_depth;
+            out.busy_lanes += p.busy_lanes;
+            out.pool_blocks_total += p.pool_blocks_total;
+            out.pool_blocks_in_use += p.pool_blocks_in_use;
+            out.pool_blocks_peak += p.pool_blocks_peak;
+            goodput_weighted += p.goodput_tok_per_step * p.decode_steps as f64;
+            out.wasted_work_tokens += p.wasted_work_tokens;
+            out.trace_recorded += p.trace_recorded;
+            out.trace_dropped += p.trace_dropped;
+            for (oc, pc) in out.classes.iter_mut().zip(p.classes.iter()) {
+                oc.done += pc.done;
+                oc.preemptions += pc.preemptions;
+                oc.shed += pc.shed;
+                oc.deadline_hits += pc.deadline_hits;
+                oc.deadline_misses += pc.deadline_misses;
+            }
+        }
+        if out.decode_steps > 0 {
+            out.goodput_tok_per_step = goodput_weighted / out.decode_steps as f64;
+        }
+        out.ttft = HistSnap::merged(parts.iter().map(|p| p.ttft));
+        out.e2e = HistSnap::merged(parts.iter().map(|p| p.e2e));
+        out.queue_wait = HistSnap::merged(parts.iter().map(|p| p.queue_wait));
+        out.decode_step = HistSnap::merged(parts.iter().map(|p| p.decode_step));
+        for i in 0..2 {
+            out.classes[i].ttft = HistSnap::merged(parts.iter().map(|p| p.classes[i].ttft));
+        }
+        out
+    }
+
     /// Structured JSON form (the `"stats"` reply body).
     pub fn to_json(&self) -> Json {
         let classes = (0..2).map(|i| {
@@ -250,6 +334,37 @@ mod tests {
         ] {
             assert!(p.contains(family), "missing {family:?} in:\n{p}");
         }
+    }
+
+    #[test]
+    fn merged_sums_counters_and_weights_hists() {
+        let mut a = sample(); // ttft count 2, mean 0.15
+        a.goodput_tok_per_step = 1.0;
+        let mut b = sample();
+        b.requests_in = 6;
+        b.decode_steps = 48;
+        b.goodput_tok_per_step = 0.5;
+        b.uptime_s = 5.0;
+        let mut h = StreamingHist::new();
+        for _ in 0..6 {
+            h.push(0.6);
+        }
+        b.ttft = HistSnap::of(&h);
+        let m = StatsSnapshot::merged(&[a, b]);
+        assert_eq!(m.requests_in, 10);
+        assert_eq!(m.decode_steps, 64);
+        assert_eq!(m.uptime_s, 5.0);
+        // Step-weighted goodput: (1.0*16 + 0.5*48) / 64.
+        assert!((m.goodput_tok_per_step - 0.625).abs() < 1e-12);
+        // Count-weighted ttft mean: (0.15*2 + 0.6*6) / 8.
+        assert_eq!(m.ttft.count, 8);
+        assert!((m.ttft.mean - 0.4875).abs() < 1e-9);
+        assert!((m.ttft.max - 0.6).abs() < 1e-12);
+        // Merging one snapshot with an empty one is the identity on
+        // counters.
+        let solo = StatsSnapshot::merged(&[sample(), StatsSnapshot::default()]);
+        assert_eq!(solo.requests_in, sample().requests_in);
+        assert_eq!(StatsSnapshot::merged(&[]).requests_in, 0);
     }
 
     #[test]

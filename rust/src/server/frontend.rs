@@ -1,0 +1,289 @@
+//! Sharded serving frontend: the glue between the deterministic
+//! [`Router`] decision core and N live engine replicas.
+//!
+//! The frontend owns one submission channel and one stats hub per
+//! replica plus a mutex-guarded router. Connection threads call
+//! [`Frontend::dispatch`], which makes the placement decision under the
+//! lock (so the router's load view and prefix mirrors are always
+//! consistent) and then submits on the chosen replica's channel
+//! *outside* any per-replica state — a full replica backpressures only
+//! its own queue. Terminal replies feed [`Frontend::note_done`] /
+//! [`Frontend::note_shed`] back into the router's outstanding counts,
+//! closing the global admission loop: a replica that sheds drains its
+//! routed load, so the skew override steers follow-up traffic to
+//! siblings that can absorb it.
+//!
+//! A single-replica frontend (`Frontend::single`) is the exact old
+//! server shape — `serve_listener`'s public signature and the JSON
+//! protocol are unchanged for it, which keeps `tests/server_protocol.rs`
+//! green without edits.
+
+use std::sync::mpsc::SyncSender;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::request::GenRequest;
+use crate::coordinator::router::{RoutePolicy, Router, RouterCfg};
+use crate::obs::{StatsHub, StatsSnapshot};
+use crate::util::json::{self, Json};
+
+pub struct Frontend {
+    router: Mutex<Router>,
+    submits: Vec<SyncSender<GenRequest>>,
+    /// One hub per replica (parallel to `submits`), or empty when the
+    /// server runs without stats publishing.
+    hubs: Vec<StatsHub>,
+}
+
+impl Frontend {
+    /// Multi-replica frontend. `submits` must match `cfg.replicas`;
+    /// `hubs` must be empty (stats disabled) or match too.
+    pub fn new(
+        cfg: RouterCfg,
+        submits: Vec<SyncSender<GenRequest>>,
+        hubs: Vec<StatsHub>,
+    ) -> Result<Self> {
+        if submits.is_empty() || submits.len() != cfg.replicas.max(1) {
+            bail!(
+                "frontend needs one submit channel per replica (got {} for {} replicas)",
+                submits.len(),
+                cfg.replicas.max(1)
+            );
+        }
+        if !hubs.is_empty() && hubs.len() != submits.len() {
+            bail!(
+                "frontend stats hubs must match replicas (got {} for {})",
+                hubs.len(),
+                submits.len()
+            );
+        }
+        Ok(Self { router: Mutex::new(Router::new(cfg)), submits, hubs })
+    }
+
+    /// The pre-sharding server shape: one replica, trivially routed.
+    pub fn single(submit: SyncSender<GenRequest>, stats: Option<StatsHub>) -> Self {
+        Self {
+            router: Mutex::new(Router::new(RouterCfg {
+                replicas: 1,
+                policy: RoutePolicy::RoundRobin,
+                ..RouterCfg::default()
+            })),
+            submits: vec![submit],
+            hubs: stats.into_iter().collect(),
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.submits.len()
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        match self.router.lock() {
+            Ok(r) => r.policy(),
+            Err(_) => RoutePolicy::RoundRobin,
+        }
+    }
+
+    /// Route and submit one request; returns the replica index it
+    /// landed on (the caller pairs it with the terminal reply to call
+    /// `note_done`/`note_shed`).
+    pub fn dispatch(&self, req: GenRequest) -> Result<usize> {
+        self.dispatch_inner(req, None)
+    }
+
+    /// Route and submit a shed-retry, steering it away from the replica
+    /// that shed it (with >1 replica the retry always lands on a
+    /// sibling).
+    pub fn dispatch_retry(&self, req: GenRequest, prior: usize) -> Result<usize> {
+        self.dispatch_inner(req, Some(prior))
+    }
+
+    fn dispatch_inner(&self, req: GenRequest, prior: Option<usize>) -> Result<usize> {
+        let replica = {
+            let mut router = self
+                .router
+                .lock()
+                .map_err(|_| anyhow::anyhow!("router lock poisoned"))?;
+            match prior {
+                Some(p) => router.route_retry(req.id, &req.prompt, p),
+                None => router.route(req.id, &req.prompt),
+            }
+        };
+        let submit = self
+            .submits
+            .get(replica)
+            .context("router picked an unknown replica")?;
+        if submit.send(req).is_err() {
+            // The replica's engine hung up; release the routed load so
+            // the router stops steering traffic at a corpse.
+            self.note_done(replica);
+            bail!("engine replica {replica} is down");
+        }
+        Ok(replica)
+    }
+
+    /// A dispatched request reached any non-shed terminal reply.
+    pub fn note_done(&self, replica: usize) {
+        if let Ok(mut router) = self.router.lock() {
+            router.note_done(replica);
+        }
+    }
+
+    /// A dispatched request was shed by its replica.
+    pub fn note_shed(&self, replica: usize) {
+        if let Ok(mut router) = self.router.lock() {
+            router.note_shed(replica);
+        }
+    }
+
+    /// Requests ever routed, per replica (tests / diagnostics).
+    pub fn routed_counts(&self) -> Vec<u64> {
+        match self.router.lock() {
+            Ok(r) => r.routed().to_vec(),
+            Err(_) => Vec::new(),
+        }
+    }
+
+    /// Render the `{"stats": true}` scrape reply. Single replica keeps
+    /// the original `{"stats": …, "prom": …}` shape byte-for-byte;
+    /// multi-replica returns the fleet merge in those same fields plus
+    /// a `"replicas"` array of per-replica snapshots (`null` for a
+    /// replica that has not published a round yet).
+    pub fn stats_reply(&self) -> Result<Json> {
+        if self.hubs.is_empty() {
+            bail!("stats not enabled on this server");
+        }
+        let mut snaps: Vec<Option<StatsSnapshot>> = Vec::with_capacity(self.hubs.len());
+        for hub in &self.hubs {
+            let slot = hub
+                .lock()
+                .map_err(|_| anyhow::anyhow!("stats hub poisoned"))?
+                .clone();
+            snaps.push(slot);
+        }
+        if self.hubs.len() == 1 {
+            let snap = snaps
+                .pop()
+                .flatten()
+                .context("no stats yet: engine has not completed a scheduling round")?;
+            return Ok(json::obj(vec![
+                ("stats", snap.to_json()),
+                ("prom", json::s(&snap.prometheus())),
+            ]));
+        }
+        let published: Vec<StatsSnapshot> = snaps.iter().flatten().cloned().collect();
+        if published.is_empty() {
+            bail!("no stats yet: no replica has completed a scheduling round");
+        }
+        let merged = StatsSnapshot::merged(&published);
+        let per_replica: Vec<Json> = snaps
+            .iter()
+            .map(|s| s.as_ref().map_or(Json::Null, |snap| snap.to_json()))
+            .collect();
+        Ok(json::obj(vec![
+            ("stats", merged.to_json()),
+            ("prom", json::s(&merged.prometheus())),
+            ("replicas", Json::Arr(per_replica)),
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Priority;
+    use crate::coordinator::sampler::SampleCfg;
+    use crate::obs::new_hub;
+    use std::sync::mpsc::sync_channel;
+
+    fn req(id: u64, prompt: Vec<i32>) -> (GenRequest, std::sync::mpsc::Receiver<crate::coordinator::request::GenResult>) {
+        let (reply, rx) = std::sync::mpsc::channel();
+        (
+            GenRequest {
+                id,
+                prompt,
+                max_new_tokens: 4,
+                stop_token: None,
+                sampling: SampleCfg { temperature: 0.0, top_p: 0.95, seed: id },
+                priority: Priority::Interactive,
+                slo_ms: None,
+                reply,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn shape_validation() {
+        let (tx, _rx) = sync_channel(4);
+        assert!(Frontend::new(RouterCfg { replicas: 2, ..Default::default() }, vec![tx], vec![])
+            .is_err());
+        let (tx, _rx) = sync_channel::<GenRequest>(4);
+        let err = Frontend::new(
+            RouterCfg { replicas: 1, ..Default::default() },
+            vec![tx],
+            vec![new_hub(), new_hub()],
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn dispatch_routes_round_robin_across_replicas() {
+        let (tx0, rx0) = sync_channel(8);
+        let (tx1, rx1) = sync_channel(8);
+        let fe = Frontend::new(
+            RouterCfg { replicas: 2, policy: RoutePolicy::RoundRobin, ..Default::default() },
+            vec![tx0, tx1],
+            vec![],
+        )
+        .unwrap();
+        let mut landed = Vec::new();
+        for id in 0..4 {
+            let (r, _reply_rx) = req(id, vec![1, 2, 3]);
+            landed.push(fe.dispatch(r).unwrap());
+        }
+        assert_eq!(landed, vec![0, 1, 0, 1]);
+        assert_eq!(rx0.try_iter().count(), 2);
+        assert_eq!(rx1.try_iter().count(), 2);
+        assert_eq!(fe.routed_counts(), vec![2, 2]);
+        for r in landed {
+            fe.note_done(r);
+        }
+    }
+
+    #[test]
+    fn dead_replica_is_an_error_not_a_panic() {
+        let (tx, rx) = sync_channel(1);
+        let fe = Frontend::single(tx, None);
+        drop(rx);
+        let (r, _reply_rx) = req(1, vec![1]);
+        let err = fe.dispatch(r).unwrap_err();
+        assert!(err.to_string().contains("down"), "{err}");
+        assert_eq!(fe.routed_counts(), vec![1]);
+    }
+
+    #[test]
+    fn stats_reply_shapes() {
+        let (tx, _rx) = sync_channel::<GenRequest>(1);
+        let fe = Frontend::single(tx, None);
+        assert!(fe.stats_reply().unwrap_err().to_string().contains("not enabled"));
+
+        let (tx0, _rx0) = sync_channel::<GenRequest>(1);
+        let (tx1, _rx1) = sync_channel::<GenRequest>(1);
+        let h0 = new_hub();
+        let h1 = new_hub();
+        let fe = Frontend::new(
+            RouterCfg { replicas: 2, ..Default::default() },
+            vec![tx0, tx1],
+            vec![h0.clone(), h1.clone()],
+        )
+        .unwrap();
+        assert!(fe.stats_reply().unwrap_err().to_string().contains("no stats yet"));
+        *h0.lock().unwrap() = Some(StatsSnapshot { requests_in: 3, ..Default::default() });
+        *h1.lock().unwrap() = Some(StatsSnapshot { requests_in: 4, ..Default::default() });
+        let j = fe.stats_reply().unwrap();
+        assert_eq!(j.req("stats").req("requests_in").as_i64(), Some(7));
+        assert_eq!(j.req("replicas").as_arr().unwrap().len(), 2);
+    }
+}

@@ -48,6 +48,19 @@
 //! `repro serve --listen 127.0.0.1:7077` starts it; `server::client_call`
 //! is a tiny blocking client used by tests and demos. Thread-per-
 //! connection: the engine's bounded queue provides backpressure.
+//!
+//! **Sharded serving** (`repro serve --replicas N --route-policy …`):
+//! every connection dispatches through a [`Frontend`], which routes each
+//! request to one of N engine replicas (see
+//! [`crate::coordinator::router`]) and feeds terminal replies back into
+//! the router's load view. The wire protocol is unchanged for a single
+//! replica; with N > 1 generation and shed replies gain a `"replica"`
+//! field (which replica served the request) and the `"stats"` scrape
+//! returns the fleet-merged snapshot plus a per-replica array.
+
+pub mod frontend;
+
+pub use frontend::Frontend;
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
@@ -116,17 +129,27 @@ pub fn serve_cfg(addr: &str, submit: SyncSender<GenRequest>, cfg: ServerCfg) -> 
 /// Serve forever on an already-bound listener. Tests bind port 0 first
 /// to learn the ephemeral address, then hand the listener over.
 /// `stats`, when given, backs the `{"stats": true}` scrape command with
-/// the engine's live snapshot hub.
+/// the engine's live snapshot hub. Single-replica convenience shape —
+/// sharded serving builds a [`Frontend`] and calls [`serve_frontend`].
 pub fn serve_listener(
     listener: TcpListener,
     submit: SyncSender<GenRequest>,
     cfg: ServerCfg,
     stats: Option<StatsHub>,
 ) -> Result<()> {
+    serve_frontend(listener, Arc::new(Frontend::single(submit, stats)), cfg)
+}
+
+/// Serve forever on an already-bound listener, dispatching every
+/// request through the frontend's router.
+pub fn serve_frontend(listener: TcpListener, fe: Arc<Frontend>, cfg: ServerCfg) -> Result<()> {
     if let Ok(addr) = listener.local_addr() {
-        eprintln!("[server] listening on {addr}");
+        eprintln!(
+            "[server] listening on {addr} ({} replica(s), {})",
+            fe.replicas(),
+            fe.policy().name()
+        );
     }
-    let submit = Arc::new(submit);
     for stream in listener.incoming() {
         let stream = match stream {
             Ok(s) => s,
@@ -135,10 +158,9 @@ pub fn serve_listener(
                 continue;
             }
         };
-        let submit = submit.clone();
-        let stats = stats.clone();
+        let fe = fe.clone();
         std::thread::spawn(move || {
-            if let Err(e) = handle_conn(stream, &submit, cfg, stats.as_ref()) {
+            if let Err(e) = handle_conn(stream, &fe, cfg) {
                 eprintln!("[server] connection error: {e}");
             }
         });
@@ -146,12 +168,7 @@ pub fn serve_listener(
     Ok(())
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    submit: &SyncSender<GenRequest>,
-    cfg: ServerCfg,
-    stats: Option<&StatsHub>,
-) -> Result<()> {
+fn handle_conn(stream: TcpStream, fe: &Frontend, cfg: ServerCfg) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -163,7 +180,7 @@ fn handle_conn(
         }
         // Errors become structured replies; the read loop continues, so
         // one bad line never poisons the connection.
-        let resp = match handle_line(&line, submit, &tok, cfg, stats) {
+        let resp = match handle_line(&line, fe, &tok, cfg) {
             Ok(j) => j,
             Err(e) => json::obj(vec![("error", json::s(&e.to_string()))]),
         };
@@ -174,35 +191,13 @@ fn handle_conn(
     Ok(())
 }
 
-/// Render the `{"stats": true}` scrape reply from the hub's latest
-/// snapshot. A missing hub (server started without an engine-side
-/// publisher) and an empty one (engine hasn't completed a scheduling
-/// round yet) are distinct client-visible errors.
-fn stats_reply(stats: Option<&StatsHub>) -> Result<Json> {
-    let hub = stats.context("stats not enabled on this server")?;
-    let snap = hub
-        .lock()
-        .map_err(|_| anyhow::anyhow!("stats hub poisoned"))?
-        .clone()
-        .context("no stats yet: engine has not completed a scheduling round")?;
-    Ok(json::obj(vec![
-        ("stats", snap.to_json()),
-        ("prom", json::s(&snap.prometheus())),
-    ]))
-}
-
-fn handle_line(
-    line: &str,
-    submit: &SyncSender<GenRequest>,
-    tok: &ByteTokenizer,
-    cfg: ServerCfg,
-    stats: Option<&StatsHub>,
-) -> Result<Json> {
+fn handle_line(line: &str, fe: &Frontend, tok: &ByteTokenizer, cfg: ServerCfg) -> Result<Json> {
     let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request JSON: {e}"))?;
     // A stats scrape is not a generation request: no prompt, no queue
-    // entry, answered from the hub's latest published snapshot.
+    // entry, answered from the hubs' latest published snapshots (merged
+    // across replicas when sharded).
     if req.get("stats").and_then(|v| v.as_bool()) == Some(true) {
-        return stats_reply(stats);
+        return fe.stats_reply();
     }
     let prompt = req
         .get("prompt")
@@ -243,19 +238,28 @@ fn handle_line(
     };
     let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
     let (reply, rx) = channel();
-    submit
-        .send(GenRequest {
-            id,
-            prompt: tok.encode(prompt),
-            max_new_tokens: max_tokens,
-            stop_token: Some(b'\n' as i32),
-            sampling: SampleCfg { temperature, top_p: 0.95, seed: id },
-            priority,
-            slo_ms,
-            reply,
-        })
-        .map_err(|_| anyhow::anyhow!("engine is down"))?;
-    let res = rx.recv().map_err(|_| anyhow::anyhow!("engine dropped request"))?;
+    let replica = fe.dispatch(GenRequest {
+        id,
+        prompt: tok.encode(prompt),
+        max_new_tokens: max_tokens,
+        stop_token: Some(b'\n' as i32),
+        sampling: SampleCfg { temperature, top_p: 0.95, seed: id },
+        priority,
+        slo_ms,
+        reply,
+    })?;
+    let res = match rx.recv() {
+        Ok(r) => r,
+        Err(_) => {
+            fe.note_done(replica);
+            bail!("engine dropped request");
+        }
+    };
+    if res.shed.is_some() {
+        fe.note_shed(replica);
+    } else {
+        fe.note_done(replica);
+    }
     if let Some(shed) = res.shed {
         // Predictive admission refused the request: a structured shed
         // reply (not an error — the request was valid, its deadline was
@@ -270,6 +274,9 @@ fn handle_line(
         ];
         if let Some(ms) = slo_ms {
             fields.push(("slo_ms", json::num(ms)));
+        }
+        if fe.replicas() > 1 {
+            fields.push(("replica", json::num(replica as f64)));
         }
         return Ok(json::obj(fields));
     }
@@ -289,6 +296,9 @@ fn handle_line(
             "deadline_hit",
             res.timing.deadline_hit.map_or(Json::Null, Json::Bool),
         ));
+    }
+    if fe.replicas() > 1 {
+        fields.push(("replica", json::num(replica as f64)));
     }
     Ok(json::obj(fields))
 }

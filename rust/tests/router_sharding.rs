@@ -1,0 +1,228 @@
+//! Deterministic acceptance tests for the sharded serving frontend:
+//! the [`Router`] splits a bursty multi-tenant shared-prefix trace
+//! across two sim-backed engine replicas, and on the Steps clock the
+//! whole fleet — routing decisions, per-replica token streams and
+//! flight-recorder traces — must be a pure function of (trace, policy).
+//!
+//! This is the acceptance twin of e2e_serving scenario 8: the bench
+//! reports the numbers, this file pins the orderings (prefix-affinity
+//! strictly beats round-robin on fleet prefix-hit rate, charged TTFT
+//! and goodput) plus the reproducibility and cross-replica-disjointness
+//! invariants CI gates on.
+
+use std::sync::mpsc::channel;
+
+use loki::coordinator::request::{GenRequest, GenResult, Priority};
+use loki::coordinator::sampler::SampleCfg;
+use loki::coordinator::{
+    Engine, EngineCaps, EngineClock, EngineConfig, EngineMetrics, PoolConfig, RouteDecision,
+    RoutePolicy, Router, RouterCfg, VictimPolicy,
+};
+use loki::obs::export::{check_jsonl, cross_replica_violations, trace_hash, trace_jsonl};
+use loki::runtime::{SimCfg, SimRuntime};
+
+const GANG: usize = 4;
+const BS: usize = 16;
+const TENANTS: usize = 8;
+const BURST: usize = GANG;
+const ROUNDS: usize = 2;
+const PREFIX_BLOCKS: usize = 8;
+const SUFFIX: usize = 16;
+// Charged-domain SLO: warm first tokens (prefix served from the shared
+// index, only the 16 suffix tokens charged) land well inside it; cold
+// ones are charged the full 144-token prefill and can never make it.
+const SLO_MS: f64 = 80.0;
+
+/// Distinct-per-request prompt material within the sim vocabulary.
+fn sim_prompt(id: u64, len: usize) -> Vec<i32> {
+    (0..len).map(|i| ((id as usize * 31 + i * 7 + 3) % 96) as i32).collect()
+}
+
+/// The scenario-8 trace shape: each tenant fires a gang-sized burst of
+/// `prefix ++ unique suffix` prompts per round, tenants round-robining
+/// the submission stream.
+fn trace_prompts() -> Vec<Vec<i32>> {
+    let mut prompts = Vec::new();
+    for round in 0..ROUNDS {
+        for tenant in 0..TENANTS {
+            for slot in 0..BURST {
+                let mut p = sim_prompt(10_000 + tenant as u64, PREFIX_BLOCKS * BS);
+                let unique = (round * TENANTS * BURST + tenant * BURST + slot) as u64;
+                p.extend(sim_prompt(20_000 + unique, SUFFIX));
+                prompts.push(p);
+            }
+        }
+    }
+    prompts
+}
+
+struct ShardRun {
+    assignment: Vec<usize>,
+    decisions: Vec<RouteDecision>,
+    replicas: Vec<(Vec<GenResult>, EngineMetrics)>,
+    /// Per-replica flight-recorder JSONL bytes.
+    traces: Vec<String>,
+}
+
+/// Route the trace up front, then run each replica's share through its
+/// own sim-backed engine on the Steps clock — the same construction as
+/// e2e_serving scenario 8, so the bench numbers and these assertions
+/// grade the same system.
+fn run_policy(policy: RoutePolicy) -> ShardRun {
+    let prompts = trace_prompts();
+    let mut router =
+        Router::new(RouterCfg { replicas: 2, policy, block_size: BS, max_load_skew: 64 });
+    let assignment: Vec<usize> =
+        prompts.iter().enumerate().map(|(i, p)| router.route(i as u64, p)).collect();
+    let caps = EngineCaps { max_len: 256, max_prompt: 256, gang_batch: GANG, bytes_per_token: 8 };
+    let mut replicas = Vec::new();
+    let mut traces = Vec::new();
+    for r in 0..router.replicas() {
+        let cfg = EngineConfig {
+            gang_batch: GANG,
+            victim_policy: VictimPolicy::DeadlineAware,
+            clock: EngineClock::Steps { step_ms: 1.0, prefill_ms_per_token: 1.0 },
+            pool: PoolConfig { block_size: BS, num_blocks: 0, prefix_sharing: true },
+            prefix_prefill_discount: true,
+            ..Default::default()
+        };
+        let engine =
+            Engine::with_backend(Box::new(SimRuntime::new(SimCfg::default())), caps, cfg.clone());
+        let (tx, rx) = Engine::channel(&cfg);
+        let (reply, results) = channel();
+        for (i, p) in prompts.iter().enumerate() {
+            if assignment[i] != r {
+                continue;
+            }
+            tx.send(GenRequest {
+                id: i as u64,
+                prompt: p.clone(),
+                max_new_tokens: 4,
+                stop_token: None,
+                sampling: SampleCfg::greedy(),
+                priority: Priority::Interactive,
+                slo_ms: Some(SLO_MS),
+                reply: reply.clone(),
+            })
+            .unwrap();
+        }
+        drop(tx);
+        drop(reply);
+        let metrics = engine.run(rx).unwrap();
+        let mut got: Vec<GenResult> = results.try_iter().collect();
+        got.sort_by_key(|x| x.id);
+        traces.push(trace_jsonl(&metrics.trace));
+        replicas.push((got, metrics));
+    }
+    ShardRun { assignment, decisions: router.decisions().to_vec(), replicas, traces }
+}
+
+/// Fleet numbers: (prefix-hit rate, charged-TTFT mean, goodput).
+fn fleet(run: &ShardRun) -> (f64, f64, f64) {
+    let (mut shared, mut refb, mut steps, mut hit_tokens) = (0u64, 0u64, 0u64, 0u64);
+    let (mut ttft_w, mut ttft_n) = (0.0f64, 0usize);
+    for (_, m) in &run.replicas {
+        shared += m.prefix_shared_blocks;
+        refb += m.prefix_ref_blocks;
+        steps += m.decode_steps;
+        let int = m.class(Priority::Interactive);
+        hit_tokens += int.deadline_hit_tokens;
+        ttft_w += int.ttft_ms.mean() * int.ttft_ms.count() as f64;
+        ttft_n += int.ttft_ms.count();
+    }
+    (
+        shared as f64 / refb as f64,
+        ttft_w / ttft_n as f64,
+        hit_tokens as f64 / steps as f64,
+    )
+}
+
+#[test]
+fn same_trace_same_seed_reruns_byte_identically() {
+    for policy in [RoutePolicy::RoundRobin, RoutePolicy::PrefixAffinity] {
+        let a = run_policy(policy);
+        let b = run_policy(policy);
+        assert_eq!(a.assignment, b.assignment, "routing must be reproducible ({policy:?})");
+        assert_eq!(a.decisions, b.decisions, "decision log must be reproducible ({policy:?})");
+        for r in 0..2 {
+            assert_eq!(
+                a.traces[r], b.traces[r],
+                "replica {r} trace bytes diverged across reruns ({policy:?})"
+            );
+            assert_eq!(
+                trace_hash(a.traces[r].as_bytes()),
+                trace_hash(b.traces[r].as_bytes())
+            );
+            let (ra, rb) = (&a.replicas[r].0, &b.replicas[r].0);
+            assert_eq!(ra.len(), rb.len());
+            for (x, y) in ra.iter().zip(rb) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.tokens, y.tokens, "id {} token stream diverged", x.id);
+                assert_eq!(x.finished_reason, y.finished_reason);
+            }
+        }
+    }
+}
+
+#[test]
+fn affinity_beats_round_robin_on_locality_ttft_and_goodput() {
+    let rr = run_policy(RoutePolicy::RoundRobin);
+    let aff = run_policy(RoutePolicy::PrefixAffinity);
+    let total = TENANTS * BURST * ROUNDS;
+    for run in [&rr, &aff] {
+        let done: usize = run.replicas.iter().map(|(r, _)| r.len()).sum();
+        assert_eq!(done, total, "every routed request must complete");
+        // Both policies keep the shard balanced on this trace.
+        assert_eq!(run.replicas[0].0.len(), total / 2);
+    }
+    let (rr_hit, rr_ttft, rr_goodput) = fleet(&rr);
+    let (aff_hit, aff_ttft, aff_goodput) = fleet(&aff);
+    // Affinity lands each tenant burst on its home replica: one cold
+    // prefill per gang wave instead of one per replica. Strictly more
+    // shared blocks, strictly cheaper charged TTFT, strictly more
+    // deadline-hit tokens per decode step.
+    assert!(
+        aff_hit > rr_hit,
+        "prefix-hit rate: affinity {aff_hit:.3} must beat round-robin {rr_hit:.3}"
+    );
+    assert!(
+        aff_ttft < rr_ttft,
+        "charged TTFT: affinity {aff_ttft:.1}ms must beat round-robin {rr_ttft:.1}ms"
+    );
+    assert!(
+        aff_goodput > rr_goodput,
+        "goodput: affinity {aff_goodput:.3} must beat round-robin {rr_goodput:.3}"
+    );
+    // The routing layer itself must see the locality it created: every
+    // post-first affinity decision matched its tenant's mirrored prefix.
+    let matched: usize = aff.decisions.iter().map(|d| d.matched_blocks).sum();
+    let rr_matched: usize = rr.decisions.iter().map(|d| d.matched_blocks).sum();
+    assert!(matched > 0, "affinity decisions must report matched prefix blocks");
+    assert_eq!(rr_matched, 0, "round-robin never scores a match");
+}
+
+#[test]
+fn replica_traces_pass_conservation_and_are_disjoint() {
+    let run = run_policy(RoutePolicy::PrefixAffinity);
+    let mut labeled = Vec::new();
+    for (r, trace) in run.traces.iter().enumerate() {
+        let check = check_jsonl(trace).expect("replica trace must parse");
+        assert!(
+            check.ok(),
+            "replica {r} conservation violations: {:?}",
+            check.violations
+        );
+        assert!(check.admitted > 0);
+        labeled.push((format!("replica-{r}"), check));
+    }
+    assert!(
+        cross_replica_violations(&labeled).is_empty(),
+        "a request routed to replica R must live its whole lifecycle on R"
+    );
+    // Sanity of the gate itself: a replica paired with its own copy
+    // trivially double-admits every id.
+    let copy = check_jsonl(&run.traces[0]).unwrap();
+    let expected = copy.admitted_ids.len();
+    let dup = vec![labeled.swap_remove(0), (String::from("copy"), copy)];
+    assert_eq!(cross_replica_violations(&dup).len(), expected);
+}
