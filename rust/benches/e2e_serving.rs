@@ -25,9 +25,15 @@
 //! prefix-affinity — and reports fleet prefix-hit rate, charged TTFT
 //! and goodput; `--trace-out-router PATH` dumps the affinity run's
 //! per-replica flight recorders for `repro trace-check`'s
-//! cross-replica disjointness gate. `--smoke-json PATH` writes all four
-//! scenarios' deterministic numbers as one JSON document and exits —
-//! the bounded e2e smoke CI runs on every push.
+//! cross-replica disjointness gate. Scenario 9 (artifact-free, steps
+//! clock) drives a multi-turn conversational session tree — each turn's
+//! prompt a strict extension of the last — through two prefix-affinity
+//! replicas with chunked prefill and the idle-leaf victim policy,
+//! prefix reuse on vs off, and reports the turn-≥1 radix hit rate and
+//! the warm-turn charged-TTFT gap; `--trace-out-session PATH` dumps its
+//! per-replica traces. `--smoke-json PATH` writes all five scenarios'
+//! deterministic numbers as one JSON document and exits — the bounded
+//! e2e smoke CI runs on every push.
 
 use std::sync::mpsc::channel;
 
@@ -70,6 +76,7 @@ fn run_trace(
             stop_token: None,
             sampling: SampleCfg::greedy(),
             priority: item.priority,
+            turn: item.turn,
             slo_ms: item.slo_ms,
             reply: reply.clone(),
         })?;
@@ -113,6 +120,7 @@ fn flood_over_backlog(quick: bool) -> anyhow::Result<Vec<(String, EngineMetrics)
                 stop_token: None,
                 sampling: SampleCfg::greedy(),
                 priority: Priority::Batch,
+                turn: 0,
                 slo_ms: None,
                 reply: reply.clone(),
             })?;
@@ -126,6 +134,7 @@ fn flood_over_backlog(quick: bool) -> anyhow::Result<Vec<(String, EngineMetrics)
                 stop_token: None,
                 sampling: SampleCfg::greedy(),
                 priority: Priority::Interactive,
+                turn: 0,
                 slo_ms: Some(250.0),
                 reply: reply.clone(),
             })?;
@@ -207,6 +216,7 @@ fn overload_shed(quick: bool) -> anyhow::Result<Vec<(String, EngineMetrics)>> {
                 stop_token: None,
                 sampling: SampleCfg::greedy(),
                 priority: Priority::Interactive,
+                turn: 0,
                 slo_ms: Some(SLO_MS),
                 reply: reply.clone(),
             })?;
@@ -330,6 +340,7 @@ fn chunked_prefill(quick: bool) -> anyhow::Result<Vec<(String, Vec<GenResult>, E
                 stop_token: None,
                 sampling: SampleCfg::greedy(),
                 priority: Priority::Batch,
+                turn: 0,
                 slo_ms: Some(1000.0),
                 reply: reply.clone(),
             })?;
@@ -343,6 +354,7 @@ fn chunked_prefill(quick: bool) -> anyhow::Result<Vec<(String, Vec<GenResult>, E
                 stop_token: None,
                 sampling: SampleCfg::greedy(),
                 priority: Priority::Interactive,
+                turn: 0,
                 slo_ms: Some(400.0),
                 reply: reply.clone(),
             })?;
@@ -532,6 +544,7 @@ fn router_sharding(quick: bool) -> anyhow::Result<Vec<RouterRun>> {
                     stop_token: None,
                     sampling: SampleCfg::greedy(),
                     priority: Priority::Interactive,
+                    turn: 0,
                     slo_ms: Some(SLO_MS),
                     reply: reply.clone(),
                 })?;
@@ -645,6 +658,218 @@ fn router_json(runs: &[RouterRun]) -> json::Json {
     ])
 }
 
+/// One scenario-9 run: fleet numbers for the multi-turn session tree.
+struct SessionRun {
+    label: String,
+    /// Requests routed to each of the two replicas.
+    routed: Vec<u64>,
+    replicas: Vec<EngineMetrics>,
+    /// Fleet turn-≥1 prefix-hit rate: shared blocks over probed blocks
+    /// across follow-up turns, summed across replicas before dividing.
+    turn_hit_rate: f64,
+    /// Fleet charged-domain TTFT mean over follow-up turns
+    /// (count-weighted across both replicas' per-turn histograms).
+    warm_ttft_ms_mean: f64,
+    /// Cumulative radix-tree block hits, summed across replicas.
+    radix_hit_blocks: u64,
+    /// Whether an immediate rerun reproduced every replica's
+    /// flight-recorder trace byte-for-byte.
+    rerun_identical: bool,
+}
+
+/// Scenario 9: multi-turn conversational sessions through the sharded
+/// frontend — each session's turn-t prompt extends its turn-(t-1)
+/// prompt by the assistant reply plus the next user message
+/// (block-aligned, so the whole history is shareable), and the radix
+/// tree is what makes the follow-up turns cheap. Prefix-affinity
+/// routing lands a whole session on its home replica, chunked prefill
+/// is on, and the idle-leaf victim policy is live. With prefix reuse
+/// on, every turn-≥1 admission walks the tree and is charged only its
+/// fresh suffix; the no-reuse baseline re-pays the whole growing
+/// history each turn, which the prefix-prefill discount turns into a
+/// charged-TTFT gap. Runs on [`SimRuntime`] + the steps clock, and
+/// each config is run twice so byte-identical reruns are checked
+/// in-band; the strict assertions live in
+/// `rust/tests/multi_turn_radix.rs`.
+fn session_tree() -> anyhow::Result<Vec<SessionRun>> {
+    const GANG: usize = 8;
+    const BS: usize = 16;
+    const SESSIONS: usize = 4;
+    const TURNS: usize = 3;
+    const T0_BLOCKS: usize = 4;
+    const GROW_BLOCKS: usize = 2;
+    let caps = EngineCaps { max_len: 256, max_prompt: 256, gang_batch: GANG, bytes_per_token: 8 };
+    // Token-level session histories in submission order (turn-major, so
+    // every turn-(t-1) admission precedes its turn-t extension).
+    let mut prompts: Vec<Vec<i32>> = Vec::new();
+    let mut turns: Vec<u32> = Vec::new();
+    let mut hists: Vec<Vec<i32>> =
+        (0..SESSIONS).map(|s| sim_prompt(30_000 + s as u64, T0_BLOCKS * BS)).collect();
+    for t in 0..TURNS {
+        for (s, hist) in hists.iter_mut().enumerate() {
+            if t > 0 {
+                hist.extend(sim_prompt(40_000 + (s * 16 + t) as u64, GROW_BLOCKS * BS));
+            }
+            prompts.push(hist.clone());
+            turns.push(t as u32);
+        }
+    }
+    // Route once with prefix affinity; both configs replay the same
+    // assignment, so the reuse contrast below is engine-side only.
+    let mut router = Router::new(RouterCfg {
+        replicas: 2,
+        policy: RoutePolicy::PrefixAffinity,
+        block_size: BS,
+        max_load_skew: 64,
+    });
+    let assignment: Vec<usize> =
+        prompts.iter().enumerate().map(|(i, p)| router.route(i as u64, p)).collect();
+    let routed = router.routed().to_vec();
+    let run_once = |sharing: bool| -> anyhow::Result<Vec<EngineMetrics>> {
+        let mut replicas = Vec::new();
+        for r in 0..2 {
+            let cfg = EngineConfig {
+                gang_batch: GANG,
+                victim_policy: VictimPolicy::IdleLeaf,
+                clock: EngineClock::Steps { step_ms: 1.0, prefill_ms_per_token: 1.0 },
+                prefill_chunk: Some(2 * BS),
+                pool: PoolConfig { block_size: BS, num_blocks: 0, prefix_sharing: sharing },
+                prefix_prefill_discount: true,
+                ..Default::default()
+            };
+            let backend = Box::new(SimRuntime::new(SimCfg::default()));
+            let engine = Engine::with_backend(backend, caps, cfg.clone());
+            let (tx, rx) = Engine::channel(&cfg);
+            let (reply, _results) = channel();
+            for (i, prompt) in prompts.iter().enumerate() {
+                if assignment[i] != r {
+                    continue;
+                }
+                tx.send(GenRequest {
+                    id: i as u64,
+                    prompt: prompt.clone(),
+                    max_new_tokens: 24,
+                    stop_token: None,
+                    sampling: SampleCfg::greedy(),
+                    priority: Priority::Interactive,
+                    turn: turns[i],
+                    slo_ms: None,
+                    reply: reply.clone(),
+                })?;
+            }
+            drop(tx);
+            drop(reply);
+            replicas.push(engine.run(rx)?);
+        }
+        Ok(replicas)
+    };
+    let mut runs = Vec::new();
+    for (label, sharing) in [("prefix-reuse", true), ("no-reuse", false)] {
+        let replicas = run_once(sharing)?;
+        let again = run_once(sharing)?;
+        let rerun_identical = replicas.iter().zip(&again).all(|(a, b)| {
+            loki::obs::export::trace_jsonl(&a.trace) == loki::obs::export::trace_jsonl(&b.trace)
+        });
+        let (mut shared, mut refb, mut hitb) = (0u64, 0u64, 0u64);
+        let (mut ttft_w, mut ttft_n) = (0.0f64, 0usize);
+        for m in &replicas {
+            shared += m.turn_shared_blocks;
+            refb += m.turn_ref_blocks;
+            hitb += m.radix_hit_blocks;
+            for h in m.turn_ttft_ms.iter().skip(1) {
+                ttft_w += h.mean() * h.count() as f64;
+                ttft_n += h.count();
+            }
+        }
+        runs.push(SessionRun {
+            label: label.to_string(),
+            routed: routed.clone(),
+            turn_hit_rate: if refb == 0 { 1.0 } else { shared as f64 / refb as f64 },
+            warm_ttft_ms_mean: if ttft_n == 0 { 0.0 } else { ttft_w / ttft_n as f64 },
+            radix_hit_blocks: hitb,
+            rerun_identical,
+            replicas,
+        });
+    }
+    Ok(runs)
+}
+
+fn emit_session_table(runs: &[SessionRun]) {
+    let mut table = Table::new(
+        "E2E serving: multi-turn session tree over 2 replicas, prefix reuse vs none",
+        &[
+            "prefix reuse",
+            "routed r0/r1",
+            "turn>=1 hit %",
+            "warm ttft ms",
+            "radix hits",
+            "done",
+            "rerun identical",
+        ],
+    );
+    for run in runs {
+        let done: u64 = run.replicas.iter().map(|m| m.requests_done).sum();
+        table.row(vec![
+            run.label.clone(),
+            format!("{}/{}", run.routed[0], run.routed[1]),
+            fnum(run.turn_hit_rate * 100.0, 1),
+            fnum(run.warm_ttft_ms_mean, 1),
+            format!("{}", run.radix_hit_blocks),
+            format!("{done}"),
+            format!("{}", run.rerun_identical),
+        ]);
+    }
+    table.emit("e2e_serving_session");
+    println!(
+        "(steps-clock run over SimRuntime replicas: every column is\n\
+         deterministic. each follow-up turn re-references the whole\n\
+         conversation so far; with reuse on the radix tree charges only\n\
+         the fresh suffix, the no-reuse baseline re-prefills the full\n\
+         history every turn)"
+    );
+}
+
+/// Serialize the scenario-9 runs for the CI artifact: every field is
+/// steps-clock deterministic, so CI can assert the reuse-beats-no-reuse
+/// ordering and the rerun byte-identity on exact numbers.
+fn session_json(runs: &[SessionRun]) -> json::Json {
+    let mut items = Vec::new();
+    for run in runs {
+        let per_replica: Vec<json::Json> = run
+            .replicas
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                json::obj(vec![
+                    ("replica", json::num(i as f64)),
+                    ("routed", json::num(run.routed[i] as f64)),
+                    ("requests_done", json::num(m.requests_done as f64)),
+                    ("decode_steps", json::num(m.decode_steps as f64)),
+                    ("turn_ref_blocks", json::num(m.turn_ref_blocks as f64)),
+                    ("turn_shared_blocks", json::num(m.turn_shared_blocks as f64)),
+                    ("radix_hit_blocks", json::num(m.radix_hit_blocks as f64)),
+                    (
+                        "prefill_discounted_tokens",
+                        json::num(m.prefill_discounted_tokens as f64),
+                    ),
+                ])
+            })
+            .collect();
+        items.push(json::obj(vec![
+            ("prefix_reuse", json::s(&run.label)),
+            ("turn_hit_rate", json::num(run.turn_hit_rate)),
+            ("warm_ttft_ms_mean", json::num(run.warm_ttft_ms_mean)),
+            ("radix_hit_blocks", json::num(run.radix_hit_blocks as f64)),
+            ("rerun_identical", json::Json::Bool(run.rerun_identical)),
+            ("replicas", json::arr(per_replica)),
+        ]));
+    }
+    json::obj(vec![
+        ("scenario", json::s("multi_turn_session_tree")),
+        ("runs", json::arr(items)),
+    ])
+}
+
 /// `foo.jsonl` → `foo-r0.jsonl`: one flight-recorder file per replica,
 /// the same naming `repro bench-serve --replicas N --trace-out` uses.
 fn replica_trace_path(raw: &str, replica: usize) -> std::path::PathBuf {
@@ -721,6 +946,8 @@ fn main() -> anyhow::Result<()> {
     emit_chunked_table(&chunked_runs);
     let router_runs = router_sharding(quick)?;
     emit_router_table(&router_runs);
+    let session_runs = session_tree()?;
+    emit_session_table(&session_runs);
     // `--trace-out PATH`: dump the strict-shedding scenario-6 run's
     // flight recorder. That run is on the deterministic steps clock, so
     // the JSONL bytes are identical across builds and CI gates on its
@@ -800,6 +1027,34 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
+    // `--trace-out-session PATH`: dump the scenario-9 prefix-reuse
+    // run's per-replica flight recorders (PATH-r0.jsonl, PATH-r1.jsonl
+    // + chrome siblings). The traces exercise the radix-tree share →
+    // release lifecycle across conversation turns, so CI gates
+    // `repro trace-check` on them alongside the router traces.
+    if args.flag("trace-out-session") {
+        anyhow::bail!("--trace-out-session needs a file path");
+    }
+    if let Some(raw) = args.get("trace-out-session") {
+        let run = session_runs
+            .iter()
+            .find(|r| r.label == "prefix-reuse")
+            .expect("scenario 9 always includes a prefix-reuse pass");
+        for (i, m) in run.replicas.iter().enumerate() {
+            let path = replica_trace_path(raw, i);
+            loki::obs::export::write_jsonl(&m.trace, &path)?;
+            let chrome = loki::obs::export::chrome_sibling(&path);
+            loki::obs::export::write_chrome(&m.trace, &chrome)?;
+            println!(
+                "session replica {} trace written to {} (+ {}): {} events, {} dropped",
+                i,
+                path.display(),
+                chrome.display(),
+                m.trace.len(),
+                m.trace.dropped()
+            );
+        }
+    }
     if let Some(path) = args.get("smoke-json") {
         let doc = json::obj(vec![(
             "scenarios",
@@ -808,6 +1063,7 @@ fn main() -> anyhow::Result<()> {
                 shed_json(&shed_runs),
                 chunked_json(&chunked_runs),
                 router_json(&router_runs),
+                session_json(&session_runs),
             ]),
         )]);
         std::fs::write(path, doc.to_string() + "\n")?;
@@ -837,6 +1093,7 @@ fn main() -> anyhow::Result<()> {
             slo_ms_batch: None,
             slo_jitter_frac: 0.0,
             seed: 3,
+            ..Default::default()
         },
         &suite.fillers,
     );
@@ -879,6 +1136,7 @@ fn main() -> anyhow::Result<()> {
             slo_ms_batch: None,
             slo_jitter_frac: 0.0,
             seed: 7,
+            ..Default::default()
         },
         &suite.fillers,
     );
@@ -942,6 +1200,7 @@ fn main() -> anyhow::Result<()> {
             slo_ms_batch: None,
             slo_jitter_frac: 0.0,
             seed: 11,
+            ..Default::default()
         },
         &suite.fillers,
     );
@@ -1001,6 +1260,7 @@ fn main() -> anyhow::Result<()> {
             slo_ms_batch: None,
             slo_jitter_frac: 0.0,
             seed: 17,
+            ..Default::default()
         },
         &suite.fillers,
     );

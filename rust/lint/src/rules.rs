@@ -13,7 +13,8 @@
 //! * `unbounded-metrics` — unbounded `Vec` accumulators in metrics hot
 //!   paths (replaced by `StreamingHist` in PR 6).
 //! * `panic-in-hot-path` — `unwrap`/`expect`/`panic!` in the engine
-//!   scheduling loop, the router decision core, and the server /
+//!   scheduling loop, the router decision core, the radix prefix tree
+//!   (walked on every admission and physical free), and the server /
 //!   frontend dispatch path, where a panic drops every in-flight
 //!   request (and, in the sharded frontend, poisons the router lock
 //!   for every connection thread).
@@ -215,6 +216,7 @@ pub fn applicable(rule: &str, path: &Path) -> bool {
         PANIC_IN_HOT_PATH => {
             p.ends_with("/src/coordinator/engine.rs")
                 || p.ends_with("/src/coordinator/router.rs")
+                || p.ends_with("/src/kvpool/radix.rs")
                 || p.contains("/src/server/")
         }
         _ => false,
@@ -523,6 +525,17 @@ mod tests {
         assert!(applicable(PANIC_IN_HOT_PATH, frontend), "frontend dispatch is hot-path");
         let metrics = Path::new("rust/src/coordinator/metrics.rs");
         assert!(!applicable(PANIC_IN_HOT_PATH, metrics), "scope stays per-file, not per-dir");
+        let radix = Path::new("rust/src/kvpool/radix.rs");
+        let table = Path::new("rust/src/kvpool/table.rs");
+        assert!(
+            applicable(PANIC_IN_HOT_PATH, radix),
+            "radix tree is walked on every admission — hot-path"
+        );
+        assert!(applicable(NONDET_ITER, radix), "kvpool is determinism-critical");
+        assert!(
+            !applicable(PANIC_IN_HOT_PATH, table),
+            "panic scope widens per-file (radix.rs only), not to all of kvpool"
+        );
     }
 
     #[test]

@@ -23,7 +23,7 @@ fn violating_tree_exits_one_with_file_line_diagnostics() {
     let stdout = String::from_utf8_lossy(&out.stdout);
     assert!(stdout.contains("float_ord.rs:4:"), "{stdout}");
     assert!(stdout.contains("[float-ord]"), "{stdout}");
-    assert!(stdout.contains("15 violation(s)"), "{stdout}");
+    assert!(stdout.contains("19 violation(s)"), "{stdout}");
 }
 
 #[test]
@@ -47,7 +47,7 @@ fn json_report_carries_rule_path_line_col() {
     assert!(stdout.contains("\"violations\": ["), "{stdout}");
     assert!(stdout.contains("\"rule\": \"float-ord\""), "{stdout}");
     assert!(stdout.contains("\"line\": 4"), "{stdout}");
-    assert!(stdout.contains("\"files_scanned\": 9"), "{stdout}");
+    assert!(stdout.contains("\"files_scanned\": 12"), "{stdout}");
 }
 
 #[test]

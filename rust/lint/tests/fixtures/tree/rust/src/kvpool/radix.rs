@@ -1,0 +1,10 @@
+// fixture: the radix prefix tree is in both scopes — nondet-iter
+// (kvpool is determinism-critical) and panic-in-hot-path (the tree is
+// walked on every admission and physical free).
+use std::collections::HashMap;
+pub struct Tree {
+    nodes: HashMap<u64, u32>,
+}
+pub fn resolve(t: &Tree, hash: u64) -> u32 {
+    *t.nodes.get(&hash).expect("node must be indexed")
+}

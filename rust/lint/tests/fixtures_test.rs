@@ -42,6 +42,8 @@ fn violating_tree_fires_exactly_the_expected_diagnostics() {
         own(FLOAT_ORD, "choice_regression.rs", 6),
         own(NONDET_ITER, "nondet.rs", 5),
         own(NONDET_ITER, "nondet.rs", 8),
+        own(NONDET_ITER, "radix.rs", 6),
+        own(PANIC_IN_HOT_PATH, "radix.rs", 9),
         own(FLOAT_ORD, "float_ord.rs", 4),
         own(FLOAT_ORD, "parsim_regression.rs", 4),
         own(UNBOUNDED_METRICS, "metrics_vec.rs", 3),

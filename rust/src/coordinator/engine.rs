@@ -88,14 +88,14 @@
 
 use std::cmp::Reverse;
 use std::collections::VecDeque;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TryRecvError};
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::kvpool::{BlockAllocator, SeqId, TableSet};
 use crate::model::ByteTokenizer;
-use crate::obs::{EventKind, FinishCode, StatsHub};
+use crate::obs::{EventKind, FinishCode, PoolEvent, StatsHub};
 use crate::runtime::{DecodeBackend, DecodeRequest, RuntimeService, StateId};
 
 use super::clock::{wall_now, EngineClock, WallTimer};
@@ -199,6 +199,16 @@ pub enum VictimPolicy {
     ///   (deadline-less lanes count as infinite) is evicted first, then
     ///   the cheapest planned recompute, then the youngest.
     DeadlineAware,
+    /// Radix-tree-aware single-class policy (`--victim-policy
+    /// idle-leaf`): evict the lane holding the most *private* (leaf)
+    /// blocks first, breaking ties youngest-first. Leaves of the prefix
+    /// tree free the most memory per preemption while — structurally —
+    /// never releasing an ancestor block another live sequence still
+    /// references: shared interior blocks carry one refcount per
+    /// descendant table, so evicting a leaf returns exactly its private
+    /// tail. Queueing discipline is identical to [`Self::YoungestFirst`]
+    /// (single-class FIFO); only victim scoring changes.
+    IdleLeaf,
 }
 
 /// How much of a victim's KV a preemption releases
@@ -588,6 +598,11 @@ pub struct Engine {
     /// Live-metrics publication slot (`"stats"` server command); `None`
     /// outside serving — publishing is skipped entirely then.
     stats: Option<StatsHub>,
+    /// Eviction-feedback channel: every physically freed prefix block's
+    /// chain hash (`PoolEvent::PrefixReleased`) is forwarded here so the
+    /// frontend can keep the router's per-replica affinity mirror
+    /// honest. `None` outside sharded serving — forwarding is skipped.
+    evict_tx: Option<Sender<u64>>,
 }
 
 impl Engine {
@@ -629,6 +644,7 @@ impl Engine {
             cfg,
             tokenizer: ByteTokenizer,
             stats: None,
+            evict_tx: None,
         }
     }
 
@@ -638,6 +654,19 @@ impl Engine {
     /// touching engine state.
     pub fn with_stats_hub(mut self, hub: StatsHub) -> Self {
         self.stats = Some(hub);
+        self
+    }
+
+    /// Attach an eviction-feedback channel: the engine forwards the
+    /// chain hash of every physically freed prefix block
+    /// (`PoolEvent::PrefixReleased`) as it drains pool events each
+    /// scheduling round. The sharded frontend gives each replica engine
+    /// one of these and drains the receivers into
+    /// [`super::router::Router::note_evicted`] before routing, so the
+    /// affinity mirror never advertises prefix blocks the pool has
+    /// already reclaimed.
+    pub fn with_evict_feedback(mut self, tx: Sender<u64>) -> Self {
+        self.evict_tx = Some(tx);
         self
     }
 
@@ -695,7 +724,9 @@ impl Engine {
     /// submissions.
     fn enqueue(&self, pending: &mut VecDeque<PendingItem>, item: PendingItem, front_of_band: bool) {
         match self.cfg.victim_policy {
-            VictimPolicy::YoungestFirst => {
+            // Idle-leaf scoring only changes *victim* choice; queueing
+            // stays single-class FIFO, same as youngest-first.
+            VictimPolicy::YoungestFirst | VictimPolicy::IdleLeaf => {
                 if front_of_band {
                     pending.push_front(item);
                 } else {
@@ -956,6 +987,16 @@ impl Engine {
         });
         match self.cfg.victim_policy {
             VictimPolicy::YoungestFirst => candidates.max_by_key(|&l| lane_tick[l]),
+            // Most private (leaf-tail) blocks first — the eviction that
+            // returns the most capacity per preemption — then the
+            // youngest. Ancestor blocks shared with another live
+            // sequence carry a refcount per sharer, so this can only
+            // ever free a leaf's private tail, never an interior node a
+            // live descendant still references.
+            VictimPolicy::IdleLeaf => candidates.max_by_key(|&l| {
+                let private = lane_seq[l].map_or(0, |s| tables.private_blocks(pool, s));
+                (private, lane_tick[l])
+            }),
             VictimPolicy::PriorityAware | VictimPolicy::DeadlineAware => {
                 let own = lane_priority(&lanes[grower]).unwrap_or(Priority::Batch);
                 let deadline_aware = self.cfg.victim_policy == VictimPolicy::DeadlineAware;
@@ -1164,7 +1205,7 @@ impl Engine {
                         Admit::Granted(seq, tokens, shared) => {
                             // lint:allow(panic-in-hot-path): front() admitted above, so the queue is non-empty
                             let item = pending.pop_front().unwrap();
-                            self.note_prefix_probe(&mut metrics, &item, &tokens);
+                            self.note_prefix_probe(&mut metrics, &item, &tokens, shared);
                             batch.push((item, tokens, seq, shared));
                         }
                         Admit::Backpressure => {
@@ -1274,7 +1315,7 @@ impl Engine {
                     Admit::Granted(seq, tokens, shared) => {
                         // lint:allow(panic-in-hot-path): front() admitted above, so the queue is non-empty
                         let item = pending.pop_front().unwrap();
-                        self.note_prefix_probe(&mut metrics, &item, &tokens);
+                        self.note_prefix_probe(&mut metrics, &item, &tokens, shared);
                         let shared_tokens = shared * self.cfg.pool.block_size.max(1);
                         let id = item_queued(&item).req.id;
                         metrics.record(EventKind::PrefillStart {
@@ -1521,6 +1562,7 @@ impl Engine {
                 }
             }
             metrics.note_pool(pool.blocks_in_use(), tables.written_blocks(), tables.shared_hits);
+            metrics.note_radix(tables.radix_nodes(), tables.radix_hit_blocks());
             // Scheduler-round trace event: lane occupancy, queue depth,
             // free pool and the per-step attention score-path bytes —
             // moved (under the configured variant) vs exact-attention.
@@ -1548,8 +1590,13 @@ impl Engine {
                 score_bytes_exact: score_exact,
             });
             // Drain the kvpool's event side-channel into the recorder —
-            // the engine stamps the clock, keeping `kvpool` a leaf.
+            // the engine stamps the clock, keeping `kvpool` a leaf. Any
+            // `PrefixReleased` hash is also forwarded to the eviction-
+            // feedback channel so the router mirror stays honest.
             for pe in tables.events.drain() {
+                if let (PoolEvent::PrefixReleased { hash }, Some(tx)) = (pe, &self.evict_tx) {
+                    let _ = tx.send(hash);
+                }
                 metrics.record(EventKind::Pool(pe));
             }
             self.publish_stats(&metrics, pending.len(), busy_now as usize, pool.blocks_in_use());
@@ -1589,6 +1636,11 @@ impl Engine {
                         b.ttft_s = Some(t);
                         b.ttft_step = Some(steps);
                         metrics.ttft.push(t);
+                        // Per-turn TTFT in the same charged domain:
+                        // turn ≥ 1 requests extend a resident history,
+                        // so their bucket shows what the radix tree's
+                        // prefix reuse buys in first-token latency.
+                        metrics.note_turn_ttft(b.req.req.turn, ms);
                         let class = &mut metrics.per_class[b.req.req.priority.index()];
                         class.ttft.push(t);
                         class.ttft_steps.push(steps as f64);
@@ -1655,9 +1707,13 @@ impl Engine {
             self.backend.free(g);
         }
         metrics.note_pool(pool.blocks_in_use(), tables.written_blocks(), tables.shared_hits);
+        metrics.note_radix(tables.radix_nodes(), tables.radix_hit_blocks());
         // Final drain: pool events emitted after the last decode round
         // (terminal frees, drain-path truncations) must still land.
         for pe in tables.events.drain() {
+            if let (PoolEvent::PrefixReleased { hash }, Some(tx)) = (pe, &self.evict_tx) {
+                let _ = tx.send(hash);
+            }
             metrics.record(EventKind::Pool(pe));
         }
         self.publish_stats(&metrics, pending.len(), 0, pool.blocks_in_use());
@@ -1707,17 +1763,25 @@ impl Engine {
     /// denominator. Kept-prefix resumes never probe the index (their
     /// table is still live), so they are excluded; everything else —
     /// fresh work and full-preemption recomputes — walks the shared
-    /// index at admit and counts.
+    /// index at admit and counts. `shared` is the radix-tree hits this
+    /// admission resolved: follow-up turns (turn ≥ 1) also feed the
+    /// per-turn conversational hit rate the multi-turn scenarios grade.
     fn note_prefix_probe(
         &self,
         metrics: &mut EngineMetrics,
         item: &PendingItem,
         tokens: &[i32],
+        shared: usize,
     ) {
         if matches!(item, PendingItem::Resume { kept: Some(_), .. }) {
             return;
         }
-        metrics.prefix_ref_blocks += (tokens.len() / self.cfg.pool.block_size.max(1)) as u64;
+        let full_blocks = (tokens.len() / self.cfg.pool.block_size.max(1)) as u64;
+        metrics.prefix_ref_blocks += full_blocks;
+        if item_queued(item).req.turn >= 1 {
+            metrics.turn_ref_blocks += full_blocks;
+            metrics.turn_shared_blocks += (shared as u64).min(full_blocks);
+        }
     }
 
     /// Pool admission: grant the policy's reservation or don't touch the
@@ -2331,6 +2395,7 @@ mod tests {
                     stop_token: None,
                     sampling: SampleCfg::greedy(),
                     priority,
+                    turn: 0,
                     slo_ms,
                     reply,
                 },

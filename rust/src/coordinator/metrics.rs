@@ -18,11 +18,17 @@
 use std::time::Instant;
 
 use crate::obs::{
-    ClassSnap, EventKind, FlightRecorder, HistSnap, StatsSnapshot, StreamingHist,
+    ClassSnap, EventKind, FlightRecorder, HistSnap, StatsSnapshot, StreamingHist, TURN_BUCKETS,
 };
 
 use super::clock::{wall_now, EngineClock};
 use super::request::{Priority, PRIORITY_CLASSES};
+
+/// Per-turn TTFT buckets: conversation turns 0, 1, 2 exactly, and a
+/// tail bucket accumulating every turn ≥ 3. Aliases the snapshot
+/// layer's [`TURN_BUCKETS`] so engine histograms and exposition arrays
+/// can never drift apart.
+pub const TURN_TTFT_BUCKETS: usize = TURN_BUCKETS;
 
 /// Latency and scheduler activity for one priority class — the
 /// multi-class SLO view (`per_class[Priority::Interactive.index()]` vs
@@ -212,6 +218,25 @@ pub struct EngineMetrics {
     /// [`EngineConfig::prefix_prefill_discount`] because their blocks
     /// were served from the shared prefix index instead of prefilled.
     pub prefill_discounted_tokens: u64,
+    /// Live node count of the kvpool radix tree (latest scheduler-round
+    /// snapshot): one node per distinct resident shared prompt block.
+    pub radix_nodes: u64,
+    /// Cumulative admission-walk hits the radix tree has resolved
+    /// (`RadixTree::hit_blocks`; latest snapshot of a monotone counter).
+    pub radix_hit_blocks: u64,
+    /// Full prompt blocks probed at admission by follow-up conversation
+    /// turns (turn ≥ 1) — the denominator of
+    /// [`EngineMetrics::turn_cache_hit_rate`].
+    pub turn_ref_blocks: u64,
+    /// Of those, blocks served from the radix tree instead of freshly
+    /// prefilled — the numerator.
+    pub turn_shared_blocks: u64,
+    /// Charged-domain TTFT (same domain as [`ClassMetrics::ttft_ms`])
+    /// bucketed by conversation turn: indices 0–2 are exact turns,
+    /// index 3 folds in every turn ≥ 3. The multi-turn scenarios grade
+    /// turn ≥ 1 buckets against turn 0 to show what radix-tree prefix
+    /// reuse buys in first-token latency.
+    pub turn_ttft_ms: [StreamingHist; TURN_TTFT_BUCKETS],
     /// What a flat `[gang, max_len]` K+V cache holds for the same gang —
     /// the baseline the paged pool is measured against.
     pub kv_flat_bytes: u64,
@@ -268,6 +293,11 @@ impl Default for EngineMetrics {
             prefix_shared_blocks: 0,
             prefix_ref_blocks: 0,
             prefill_discounted_tokens: 0,
+            radix_nodes: 0,
+            radix_hit_blocks: 0,
+            turn_ref_blocks: 0,
+            turn_shared_blocks: 0,
+            turn_ttft_ms: std::array::from_fn(|_| StreamingHist::new()),
             kv_flat_bytes: 0,
             pool_occupancy: StreamingHist::new(),
             ttft: StreamingHist::new(),
@@ -335,6 +365,33 @@ impl EngineMetrics {
             self.pool_occupancy
                 .push(written_blocks as f64 / self.pool_blocks_total as f64);
         }
+    }
+
+    /// Record the radix tree's scheduler-round gauges: live node count
+    /// and the cumulative admission hits it has resolved so far.
+    pub fn note_radix(&mut self, nodes: usize, hit_blocks: u64) {
+        self.radix_nodes = nodes as u64;
+        self.radix_hit_blocks = hit_blocks;
+    }
+
+    /// Push one charged-domain first-token latency into its conversation
+    /// turn's bucket (turn ≥ 3 folds into the tail bucket).
+    pub fn note_turn_ttft(&mut self, turn: u32, ms: f64) {
+        let idx = (turn as usize).min(TURN_TTFT_BUCKETS - 1);
+        if let Some(h) = self.turn_ttft_ms.get_mut(idx) {
+            h.push(ms);
+        }
+    }
+
+    /// Conversational prefix-hit rate: the fraction of turn ≥ 1 full
+    /// prompt blocks served from the radix tree instead of freshly
+    /// prefilled. 1.0 when no follow-up turn ever probed — nothing was
+    /// missable (same convention as [`Self::prefix_hit_rate`]).
+    pub fn turn_cache_hit_rate(&self) -> f64 {
+        if self.turn_ref_blocks == 0 {
+            return 1.0;
+        }
+        self.turn_shared_blocks as f64 / self.turn_ref_blocks as f64
     }
 
     /// Mean written-block pool occupancy over the run (0.0 when nothing
@@ -451,6 +508,13 @@ impl EngineMetrics {
             pool_blocks_peak: self.pool_blocks_peak,
             goodput_tok_per_step: self.goodput(),
             wasted_work_tokens: self.wasted_work_tokens(),
+            radix_nodes: self.radix_nodes,
+            radix_hit_blocks: self.radix_hit_blocks,
+            turn_ref_blocks: self.turn_ref_blocks,
+            turn_shared_blocks: self.turn_shared_blocks,
+            turn_ttft_ms: std::array::from_fn(|i| {
+                self.turn_ttft_ms.get(i).map(HistSnap::of).unwrap_or_default()
+            }),
             ttft: HistSnap::of(&self.ttft),
             e2e: HistSnap::of(&self.e2e_latency),
             queue_wait: HistSnap::of(&self.queue_wait),
@@ -470,6 +534,7 @@ impl EngineMetrics {
              admission: mean occupancy {:.1}% | preempts {} ({} partial, {} kept-reclaims) \
              / resumes {} ({} tok recomputed, {} saved) | grows {} (+{} blocks, {} stalls) \
              | aging promotions {}\n\
+             radix:     {} nodes | {} tree hits | turn>=1 hit rate {:.1}% ({}/{} blocks)\n\
              prefill:   {} tok real | chunks {} ({} tok chunked) | lane-reset prefills {} \
              | stall_steps: {}\n\
              goodput:   {:.3} tok/step (deadline-hit tokens) | wasted {} tok \
@@ -506,6 +571,11 @@ impl EngineMetrics {
             self.grown_blocks,
             self.grow_stalls,
             self.aging_promotions,
+            self.radix_nodes,
+            self.radix_hit_blocks,
+            self.turn_cache_hit_rate() * 100.0,
+            self.turn_shared_blocks,
+            self.turn_ref_blocks,
             self.prefill_tokens,
             self.prefill_chunks,
             self.chunked_prefill_tokens,
@@ -543,6 +613,20 @@ impl EngineMetrics {
                 c.requests_shed,
                 c.prefill_chunks,
             ));
+        }
+        // Per-turn charged-domain TTFT: only buckets that saw traffic
+        // print, so single-shot runs keep their exact report shape plus
+        // one `turn 0` line and multi-turn runs show the reuse gradient.
+        for (i, h) in self.turn_ttft_ms.iter().enumerate() {
+            if h.count() == 0 {
+                continue;
+            }
+            let label = if i + 1 == TURN_TTFT_BUCKETS {
+                format!("{i}+")
+            } else {
+                i.to_string()
+            };
+            s.push_str(&format!("\nturn {label:<3} ttft_ms: {}", h.display()));
         }
         s
     }
@@ -829,6 +913,41 @@ mod tests {
             ),
             "{report}"
         );
+    }
+
+    #[test]
+    fn turn_metrics_bucket_and_rate() {
+        let mut m = EngineMetrics::default();
+        assert_eq!(m.turn_cache_hit_rate(), 1.0, "no follow-up probes → nothing missable");
+        m.turn_ref_blocks = 8;
+        m.turn_shared_blocks = 6;
+        assert!((m.turn_cache_hit_rate() - 0.75).abs() < 1e-12);
+        // Turns 0..=2 land in their own bucket; 3 and beyond fold into
+        // the tail.
+        m.note_turn_ttft(0, 10.0);
+        m.note_turn_ttft(1, 20.0);
+        m.note_turn_ttft(2, 30.0);
+        m.note_turn_ttft(3, 40.0);
+        m.note_turn_ttft(9, 50.0);
+        assert_eq!(m.turn_ttft_ms[0].count(), 1);
+        assert_eq!(m.turn_ttft_ms[1].count(), 1);
+        assert_eq!(m.turn_ttft_ms[2].count(), 1);
+        assert_eq!(m.turn_ttft_ms[3].count(), 2, "turn ≥ 3 folds into the tail bucket");
+        assert!((m.turn_ttft_ms[3].mean() - 45.0).abs() < 1e-12);
+        m.note_radix(12, 34);
+        let report = m.report();
+        assert!(report.contains("radix:     12 nodes | 34 tree hits"), "{report}");
+        assert!(report.contains("turn>=1 hit rate 75.0% (6/8 blocks)"), "{report}");
+        assert!(report.contains("\nturn 0   ttft_ms:"), "{report}");
+        assert!(report.contains("\nturn 3+  ttft_ms:"), "{report}");
+    }
+
+    #[test]
+    fn report_has_no_turn_lines_without_turn_traffic() {
+        let m = EngineMetrics::default();
+        let report = m.report();
+        assert!(!report.contains("\nturn "), "{report}");
+        assert!(report.contains("radix:     0 nodes | 0 tree hits"), "{report}");
     }
 
     #[test]

@@ -50,7 +50,7 @@ pub use engine::{
     reserve_tokens, AdmissionPolicy, Engine, EngineCaps, EngineConfig, PoolConfig,
     PreemptMode, SchedulerPolicy, VictimPolicy, RESERVE_SLACK_TOKENS,
 };
-pub use metrics::{ClassMetrics, EngineMetrics};
+pub use metrics::{ClassMetrics, EngineMetrics, TURN_TTFT_BUCKETS};
 pub use predictor::{ServiceRateEstimator, ShedPolicy, EWMA_ALPHA};
 pub use request::{GenRequest, GenResult, Priority, RequestTiming, ShedInfo};
 pub use router::{RouteDecision, RoutePolicy, Router, RouterCfg};

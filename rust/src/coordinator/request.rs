@@ -60,6 +60,13 @@ pub struct GenRequest {
     pub sampling: SampleCfg,
     /// Importance class for the scheduler's victim/admission policies.
     pub priority: Priority,
+    /// Zero-based conversation turn this request represents (0 = first
+    /// turn / single-shot). Pure annotation from the workload layer: it
+    /// never changes scheduling, but the metrics bucket TTFT and
+    /// prefix-hit rates per turn with it — turn ≥ 1 prompts extend a
+    /// resident history, so their radix-tree hit rate is the signal the
+    /// multi-turn scenarios grade.
+    pub turn: u32,
     /// Optional time-to-first-token SLO in milliseconds. The engine
     /// stamps an absolute deadline (`arrival + slo_ms`) at submission;
     /// under [`super::engine::VictimPolicy::DeadlineAware`] the pending

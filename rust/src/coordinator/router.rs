@@ -219,6 +219,24 @@ impl Router {
         }
     }
 
+    /// Pool eviction feedback: replica `replica` physically freed the
+    /// prefix block keyed by `hash` (a `PoolEvent::PrefixReleased`
+    /// drained by the frontend), so the mirror entry is dead — affinity
+    /// must stop counting it toward longest-match. This is what keeps a
+    /// long-lived mirror honest: before the feedback channel the mirror
+    /// was append-only per run while the pools released drained
+    /// refcounts underneath it.
+    pub fn note_evicted(&mut self, replica: usize, hash: u64) {
+        if let Some(m) = self.mirror.get_mut(replica) {
+            m.remove(&hash);
+        }
+    }
+
+    /// Mirrored prefix entries per replica (gauge for stats/tests).
+    pub fn mirror_len(&self, replica: usize) -> usize {
+        self.mirror.get(replica).map(|m| m.len()).unwrap_or(0)
+    }
+
     /// A routed request finished (any terminal reply but a shed).
     pub fn note_done(&mut self, replica: usize) {
         if let Some(o) = self.outstanding.get_mut(replica) {
@@ -368,6 +386,39 @@ mod tests {
         // Single replica: nothing to avoid, retry goes back.
         let mut solo = Router::new(RouterCfg { replicas: 1, ..Default::default() });
         assert_eq!(solo.route_retry(0, &t, 0), 0);
+    }
+
+    #[test]
+    fn router_mirror_tracks_pool_evictions() {
+        let bs = 16;
+        let cfg = RouterCfg {
+            replicas: 2,
+            policy: RoutePolicy::PrefixAffinity,
+            block_size: bs,
+            max_load_skew: 64,
+        };
+        let mut r = Router::new(cfg);
+        let t = tenant_prompt(5, 0, bs);
+        let home = r.route(0, &t);
+        r.note_done(home);
+        let mirrored = r.mirror_len(home);
+        assert!(mirrored >= 4, "routing must mirror the prompt's full blocks");
+        // The pool on `home` drains the tenant's prefix refcounts and
+        // emits PrefixReleased per block; the frontend feeds them back.
+        for h in prefix_block_hashes(&t, bs) {
+            r.note_evicted(home, h);
+        }
+        assert_eq!(r.mirror_len(home), 0, "dead entries must leave the mirror");
+        // With the mirror honest, the next request of that tenant scores
+        // zero matches — it ties on overlap and goes to the least loaded
+        // replica, not to the stale home.
+        let again = r.route(1, &tenant_prompt(5, 1, bs));
+        let d = r.decisions()[1];
+        assert_eq!(d.matched_blocks, 0, "affinity must not count evicted entries");
+        assert_eq!(again, d.replica);
+        // Eviction feedback for an unknown replica or hash is a no-op.
+        r.note_evicted(99, 1234);
+        r.note_evicted(home, 0xDEAD_BEEF);
     }
 
     #[test]

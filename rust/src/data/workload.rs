@@ -73,6 +73,24 @@ pub struct WorkloadCfg {
     /// which the protocol rejects). 0 (the default) pins every earlier
     /// trace byte-identically.
     pub slo_jitter_frac: f64,
+    /// Conversation turns per session (`--turns`). Each base request
+    /// becomes turn 0 of a session; every follow-up turn's prompt is the
+    /// previous turn's prompt extended with a simulated assistant reply
+    /// plus a fresh user message, so a session's full history prefix is
+    /// byte-identical across turns — exactly what the kvpool radix tree
+    /// deduplicates. Follow-up material comes from a dedicated RNG
+    /// stream, so raising this never perturbs the base trace. 1 (the
+    /// default) emits single-shot traces byte-identically.
+    pub turns_per_session: usize,
+    /// Seconds between a session's consecutive turns (`--think-time`):
+    /// the client-side "think time" separating a reply from the next
+    /// user message. 0 lands every turn at the session's base arrival.
+    pub think_time_gap: f64,
+    /// Sibling requests per turn (`--branch-factor`): > 1 emits that
+    /// many *identical-prompt* requests per turn (regeneration forks —
+    /// the tree-of-turns workload behind fork/COW refcount accounting).
+    /// 1 (the default) emits linear sessions.
+    pub branch_factor: usize,
     pub seed: u64,
 }
 
@@ -91,6 +109,9 @@ impl Default for WorkloadCfg {
             slo_ms_interactive: None,
             slo_ms_batch: None,
             slo_jitter_frac: 0.0,
+            turns_per_session: 1,
+            think_time_gap: 0.0,
+            branch_factor: 1,
             seed: 0,
         }
     }
@@ -107,6 +128,12 @@ pub struct TraceItem {
     /// Per-class TTFT SLO from the workload config (`None` → no
     /// deadline; the engine stamps `arrival + slo_ms` at submission).
     pub slo_ms: Option<f64>,
+    /// Conversation session this request belongs to (`None` on
+    /// single-shot traces — stamped only when the multi-turn generator
+    /// is active, keyed by the base request's index).
+    pub session: Option<u64>,
+    /// Zero-based turn within the session (0 = first turn/single-shot).
+    pub turn: u32,
 }
 
 /// A generated request trace.
@@ -145,9 +172,15 @@ impl Workload {
         for _ in 1..groups {
             prefixes.push(Self::filler_text(&mut group_rng, cfg.shared_prefix_len, fillers));
         }
+        let turns = cfg.turns_per_session.max(1);
+        let branches = cfg.branch_factor.max(1);
+        // Only a *multi-turn* trace carries session keys: the default
+        // (1 turn, 1 branch) must leave every base item byte-identical,
+        // session-less and turn-0, and never touch the turn stream.
+        let multi = turns > 1 || branches > 1;
         let mut t = 0.0f64;
-        let mut items = Vec::with_capacity(cfg.n_requests);
-        for _ in 0..cfg.n_requests {
+        let mut items = Vec::with_capacity(cfg.n_requests * turns * branches);
+        for i in 0..cfg.n_requests {
             if cfg.rate > 0.0 && rng.uniform() >= cfg.burst_p {
                 t += rng.exponential(cfg.rate);
             }
@@ -155,17 +188,7 @@ impl Workload {
             let group = if groups > 1 { group_rng.range(0, groups) } else { 0 };
             let mut prompt = prefixes[group].clone();
             prompt.push_str(&Self::filler_text(&mut rng, plen, fillers));
-            let max_new_tokens = match cfg.gen_len_dist {
-                GenLenDist::Uniform => rng.range(cfg.gen_len.0, cfg.gen_len.1 + 1),
-                GenLenDist::LongTail { mean, cap } => {
-                    // Exponential with the configured mean (rate 1/mean),
-                    // rounded and truncated. With cap ≫ mean the
-                    // truncation bias is negligible — pinned by the
-                    // `long_tail_*` tests below.
-                    let draw = rng.exponential(1.0 / mean.max(1e-9));
-                    (draw.round() as usize).clamp(1, cap.max(1))
-                }
-            };
+            let max_new_tokens = Self::draw_gen_len(&mut rng, cfg);
             let priority = if class_rng.uniform() < cfg.batch_frac {
                 Priority::Batch
             } else {
@@ -180,9 +203,89 @@ impl Workload {
                 Priority::Batch => cfg.slo_ms_batch,
             }
             .map(|ms| if jitter > 0.0 { ms * jitter_draw } else { ms });
-            items.push(TraceItem { arrival_s: t, prompt, max_new_tokens, priority, slo_ms });
+            let session = if multi { Some(i as u64) } else { None };
+            items.push(TraceItem {
+                arrival_s: t,
+                prompt,
+                max_new_tokens,
+                priority,
+                slo_ms,
+                session,
+                turn: 0,
+            });
+        }
+        if multi {
+            // Fifth stream: follow-up turns and regeneration forks ride
+            // along without perturbing the base trace above.
+            let mut turn_rng = Xoshiro256::new(cfg.seed ^ 0x5E55_10E5);
+            let gap = cfg.think_time_gap.max(0.0);
+            let base_count = items.len();
+            for s in 0..base_count {
+                let mut history = items[s].prompt.clone();
+                let base_arrival = items[s].arrival_s;
+                let priority = items[s].priority;
+                let slo_ms = items[s].slo_ms;
+                // Turn-0 regeneration forks: identical prompt, same
+                // arrival — siblings share every full prompt block and
+                // diverge only in their decoded (COW) tails.
+                for _ in 1..branches {
+                    let max_new_tokens = Self::draw_gen_len(&mut turn_rng, cfg);
+                    items.push(TraceItem {
+                        arrival_s: base_arrival,
+                        prompt: history.clone(),
+                        max_new_tokens,
+                        priority,
+                        slo_ms,
+                        session: Some(s as u64),
+                        turn: 0,
+                    });
+                }
+                for turn in 1..turns {
+                    // The session history grows by a simulated assistant
+                    // reply (gen_len-sized) plus the next user message
+                    // (prompt_len-sized); the previous turn's prompt is
+                    // a strict byte prefix of this one, so the radix
+                    // tree resolves the whole history at admission.
+                    let rlen = turn_rng.range(cfg.gen_len.0, cfg.gen_len.1 + 1);
+                    history.push_str(&Self::filler_text(&mut turn_rng, rlen, fillers));
+                    let ulen = turn_rng.range(cfg.prompt_len.0, cfg.prompt_len.1 + 1);
+                    history.push_str(&Self::filler_text(&mut turn_rng, ulen, fillers));
+                    let arrival = base_arrival + turn as f64 * gap;
+                    for _ in 0..branches {
+                        let max_new_tokens = Self::draw_gen_len(&mut turn_rng, cfg);
+                        items.push(TraceItem {
+                            arrival_s: arrival,
+                            prompt: history.clone(),
+                            max_new_tokens,
+                            priority,
+                            slo_ms,
+                            session: Some(s as u64),
+                            turn: turn as u32,
+                        });
+                    }
+                }
+            }
+            // Re-interleave sessions by arrival. Stable sort + total
+            // ordering keeps ties (zero rate or zero gap) in insertion
+            // order, so the trace stays deterministic.
+            items.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
         }
         Self { items }
+    }
+
+    /// Draw one `max_new_tokens` from the configured distribution.
+    fn draw_gen_len(rng: &mut Xoshiro256, cfg: &WorkloadCfg) -> usize {
+        match cfg.gen_len_dist {
+            GenLenDist::Uniform => rng.range(cfg.gen_len.0, cfg.gen_len.1 + 1),
+            GenLenDist::LongTail { mean, cap } => {
+                // Exponential with the configured mean (rate 1/mean),
+                // rounded and truncated. With cap ≫ mean the truncation
+                // bias is negligible — pinned by the `long_tail_*`
+                // tests below.
+                let draw = rng.exponential(1.0 / mean.max(1e-9));
+                (draw.round() as usize).clamp(1, cap.max(1))
+            }
+        }
     }
 
     /// Exactly `len` bytes of filler prose.
@@ -457,6 +560,115 @@ mod tests {
         let zero = Workload::generate(&base, &fillers());
         for (a, b) in plain.items.iter().zip(&zero.items) {
             assert_eq!(a.slo_ms, b.slo_ms);
+        }
+    }
+
+    #[test]
+    fn multi_turn_sessions_extend_history_and_ride_along() {
+        let base = WorkloadCfg {
+            n_requests: 8,
+            rate: 10.0,
+            prompt_len: (10, 20),
+            gen_len: (4, 8),
+            seed: 7,
+            ..Default::default()
+        };
+        let single = Workload::generate(&base, &fillers());
+        assert!(single.items.iter().all(|i| i.session.is_none() && i.turn == 0));
+        let multi = Workload::generate(
+            &WorkloadCfg { turns_per_session: 3, think_time_gap: 0.5, ..base.clone() },
+            &fillers(),
+        );
+        assert_eq!(multi.items.len(), 8 * 3);
+        // Turn-0 items are the base trace, byte-identical and in the
+        // same relative order (turns ride along, never reshuffle).
+        let turn0: Vec<&TraceItem> = multi.items.iter().filter(|i| i.turn == 0).collect();
+        assert_eq!(turn0.len(), 8);
+        for (a, b) in single.items.iter().zip(&turn0) {
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.arrival_s, b.arrival_s);
+            assert_eq!(a.max_new_tokens, b.max_new_tokens);
+        }
+        // Within a session: each turn's prompt strictly extends the
+        // previous turn's (the radix-shared history) and arrives one
+        // think-time gap later.
+        for s in 0..8u64 {
+            let mut turns: Vec<&TraceItem> =
+                multi.items.iter().filter(|i| i.session == Some(s)).collect();
+            turns.sort_by_key(|i| i.turn);
+            assert_eq!(turns.len(), 3);
+            for w in turns.windows(2) {
+                assert!(
+                    w[1].prompt.starts_with(&w[0].prompt)
+                        && w[1].prompt.len() > w[0].prompt.len(),
+                    "turn {} must extend turn {}'s history",
+                    w[1].turn,
+                    w[0].turn
+                );
+                assert!((w[1].arrival_s - w[0].arrival_s - 0.5).abs() < 1e-12);
+                assert_eq!(w[1].priority, w[0].priority);
+            }
+        }
+        // Arrival-sorted and deterministic.
+        for pair in multi.items.windows(2) {
+            assert!(pair[1].arrival_s >= pair[0].arrival_s);
+        }
+        let again = Workload::generate(
+            &WorkloadCfg { turns_per_session: 3, think_time_gap: 0.5, ..base.clone() },
+            &fillers(),
+        );
+        for (a, b) in multi.items.iter().zip(&again.items) {
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.arrival_s, b.arrival_s);
+            assert_eq!((a.session, a.turn), (b.session, b.turn));
+        }
+    }
+
+    #[test]
+    fn branch_factor_forks_identical_sibling_prompts() {
+        let base = WorkloadCfg {
+            n_requests: 4,
+            prompt_len: (10, 20),
+            gen_len: (4, 8),
+            seed: 11,
+            ..Default::default()
+        };
+        let w = Workload::generate(
+            &WorkloadCfg { turns_per_session: 2, branch_factor: 3, ..base.clone() },
+            &fillers(),
+        );
+        // 4 sessions × 2 turns × 3 branches.
+        assert_eq!(w.items.len(), 4 * 2 * 3);
+        for s in 0..4u64 {
+            for turn in 0..2u32 {
+                let sibs: Vec<&TraceItem> = w
+                    .items
+                    .iter()
+                    .filter(|i| i.session == Some(s) && i.turn == turn)
+                    .collect();
+                assert_eq!(sibs.len(), 3, "session {s} turn {turn}");
+                // Regeneration forks: byte-identical prompts at the
+                // same arrival — full prompt-block sharing, decoded
+                // tails diverge via COW.
+                for sib in &sibs {
+                    assert_eq!(sib.prompt, sibs[0].prompt);
+                    assert_eq!(sib.arrival_s, sibs[0].arrival_s);
+                }
+            }
+        }
+        // Branching alone (single turn) still forks the base prompt.
+        let forked = Workload::generate(
+            &WorkloadCfg { branch_factor: 2, ..base.clone() },
+            &fillers(),
+        );
+        assert_eq!(forked.items.len(), 4 * 2);
+        let base_trace = Workload::generate(&base, &fillers());
+        for s in 0..4u64 {
+            let sibs: Vec<&TraceItem> =
+                forked.items.iter().filter(|i| i.session == Some(s)).collect();
+            assert_eq!(sibs.len(), 2);
+            assert_eq!(sibs[0].prompt, sibs[1].prompt);
+            assert_eq!(sibs[0].prompt, base_trace.items[s as usize].prompt);
         }
     }
 

@@ -10,6 +10,11 @@
 //!   sharing (chain-hashed full prompt blocks, copy-on-write tails). The
 //!   coordinator uses a [`TableSet`] to mirror the device cache and admit
 //!   a request only when its blocks can actually be granted.
+//! * [`radix`] — the refcounted radix tree the tables share through:
+//!   nodes keyed by [`chain_hash`], parent = one-block-shorter prefix,
+//!   leaves = live sequences. The single prefix-sharing structure —
+//!   admission, the engine's mirror and the router's affinity view all
+//!   resolve against it.
 //! * [`tiered`] — the data plane: hot low-rank K̂ tier (always resident,
 //!   Loki ranks here) + cold full-KV tier with LRU page residency; the
 //!   paged attention kernels in [`crate::attnsim`] read it through
@@ -22,11 +27,13 @@
 //! full-D pages page in on demand (cf. Double Sparsity, Yang et al.).
 
 pub mod block;
+pub mod radix;
 pub mod stats;
 pub mod table;
 pub mod tiered;
 
 pub use block::{BlockAllocator, BlockId, PoolExhausted};
+pub use radix::{RadixNode, RadixTree};
 pub use stats::{PoolStats, TierStats};
 pub use table::{chain_hash, prefix_block_hashes, BlockTable, SeqId, TableSet, TruncateOutcome};
 pub use tiered::{PagedArena, PoolSeqId, TieredKvPool, TieredPoolCfg};

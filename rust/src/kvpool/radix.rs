@@ -1,0 +1,251 @@
+//! Refcounted radix tree over block-granular token runs — the single
+//! source of truth for prefix sharing.
+//!
+//! Nodes are full prompt blocks keyed by the content-addressed
+//! [`super::chain_hash`] scheme: a node's key is the chained hash of
+//! every token from the prompt start through its own block, so its
+//! parent is simply the node for the one-block-shorter prefix. Edges
+//! are therefore token-run segments (one block per edge), the root set
+//! is the forest of distinct first blocks, and leaves are the deepest
+//! blocks still referenced by live sequences. [`super::TableSet`] walks
+//! this tree on `admit`/`fork`/`free` (the old flat `prefix_map` /
+//! `block_hash` pair is gone — there is no second index to drift), the
+//! engine's admission mirror answers prefix probes through it, and the
+//! router's per-replica affinity mirror is kept honest by the
+//! `PoolEvent::PrefixReleased` feedback emitted when a node's block
+//! drains its last reference.
+//!
+//! Physical lifetime stays with the ref-counted block allocator: the
+//! tree holds *structure* (hash → block, parent/child links), never a
+//! reference of its own. Ancestor protection for idle-leaf eviction is
+//! structural — a shared ancestor block carries one refcount per live
+//! descendant table, so freeing a leaf can only return the leaf's
+//! private blocks.
+//!
+//! Determinism: storage is `BTreeMap`/`BTreeSet` only, so every
+//! iteration order is sorted and reproducible by construction, and the
+//! hot paths are written panic-free (no indexing, no unwrap) — this
+//! module is inside the `repro-lint` `nondet-iter` and
+//! `panic-in-hot-path` scopes.
+
+use super::block::BlockId;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One full prompt block in the tree. Plain data: the allocator owns
+/// the block's refcount, the node only records where it sits.
+#[derive(Clone, Debug)]
+pub struct RadixNode {
+    /// Chain hash of the one-block-shorter prefix; `None` for a root
+    /// (first block of a prompt) or after the parent was released
+    /// out-of-order.
+    pub parent: Option<u64>,
+    /// Physical block this prefix resolves to.
+    pub block: BlockId,
+    /// Number of full blocks in the prefix this node terminates
+    /// (1-based: a root node has depth 1).
+    pub depth: usize,
+    /// Chain hashes of the one-block-longer prefixes seen so far.
+    pub children: BTreeSet<u64>,
+}
+
+/// The tree. See the module docs for the design.
+#[derive(Clone, Debug, Default)]
+pub struct RadixTree {
+    nodes: BTreeMap<u64, RadixNode>,
+    /// Reverse index for eviction feedback: physical block → node key.
+    by_block: BTreeMap<BlockId, u64>,
+    /// Cumulative blocks served from the tree (admission walks that
+    /// resolved to an existing node) — the `radix_hit_blocks` gauge.
+    hit_blocks: u64,
+}
+
+impl RadixTree {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resolve a chain hash to its physical block and count the hit.
+    /// Use [`RadixTree::peek`] for non-charging probes.
+    pub fn lookup(&mut self, hash: u64) -> Option<BlockId> {
+        match self.nodes.get(&hash) {
+            Some(n) => {
+                self.hit_blocks += 1;
+                Some(n.block)
+            }
+            None => None,
+        }
+    }
+
+    /// Resolve without charging the hit counter (planning / routing
+    /// probes that never admit).
+    pub fn peek(&self, hash: u64) -> Option<BlockId> {
+        self.nodes.get(&hash).map(|n| n.block)
+    }
+
+    pub fn contains(&self, hash: u64) -> bool {
+        self.nodes.contains_key(&hash)
+    }
+
+    /// Insert a node for `hash` resolving to `block`, linked under
+    /// `parent` (the hash of the one-block-shorter prefix, if that
+    /// prefix is itself indexed). Inserting an existing hash is a
+    /// no-op: content addressing means equal hash ⇒ equal tokens, and
+    /// the first writer's block is the shared one.
+    pub fn insert(&mut self, hash: u64, parent: Option<u64>, block: BlockId) {
+        if self.nodes.contains_key(&hash) {
+            return;
+        }
+        let depth = match parent.and_then(|p| self.nodes.get_mut(&p)) {
+            Some(pn) => {
+                pn.children.insert(hash);
+                pn.depth + 1
+            }
+            None => 1,
+        };
+        let parent = parent.filter(|p| self.nodes.contains_key(p));
+        self.nodes.insert(hash, RadixNode { parent, block, depth, children: BTreeSet::new() });
+        self.by_block.insert(block, hash);
+    }
+
+    /// A physical block drained its last reference: drop its node (if
+    /// the block was indexed) and return the released chain hash so the
+    /// caller can emit `PoolEvent::PrefixReleased`. Children of the
+    /// released node are detached, not removed — out-of-order release
+    /// (tables free front-to-back to keep the allocator's LIFO free
+    /// list order pinned) may drop an ancestor while a descendant block
+    /// still holds references.
+    pub fn remove_by_block(&mut self, block: BlockId) -> Option<u64> {
+        let hash = self.by_block.remove(&block)?;
+        let node = self.nodes.remove(&hash)?;
+        if let Some(p) = node.parent.and_then(|p| self.nodes.get_mut(&p)) {
+            p.children.remove(&hash);
+        }
+        for c in &node.children {
+            if let Some(cn) = self.nodes.get_mut(c) {
+                cn.parent = None;
+            }
+        }
+        Some(hash)
+    }
+
+    /// Live nodes — the `radix_nodes` gauge.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Cumulative tree-lookup hits — the `radix_hit_blocks` gauge.
+    pub fn hit_blocks(&self) -> u64 {
+        self.hit_blocks
+    }
+
+    /// A leaf has no indexed one-block-longer extension.
+    pub fn is_leaf(&self, hash: u64) -> bool {
+        self.nodes.get(&hash).map(|n| n.children.is_empty()).unwrap_or(false)
+    }
+
+    /// Depth of the node (full blocks in its prefix), if present.
+    pub fn depth(&self, hash: u64) -> Option<usize> {
+        self.nodes.get(&hash).map(|n| n.depth)
+    }
+
+    /// Node keys in sorted order — deterministic iteration for tests
+    /// and snapshots.
+    pub fn keys(&self) -> impl Iterator<Item = u64> + '_ {
+        self.nodes.keys().copied()
+    }
+
+    /// Walk up from `hash` to its root, returning the path (self
+    /// first). Bounded by the recorded depth, so a corrupted link can
+    /// never loop.
+    pub fn ancestry(&self, hash: u64) -> Vec<u64> {
+        let mut path = Vec::new();
+        let mut cur = Some(hash);
+        let mut fuel = self.nodes.get(&hash).map(|n| n.depth).unwrap_or(0);
+        while let Some(h) = cur {
+            match self.nodes.get(&h) {
+                Some(n) => {
+                    path.push(h);
+                    cur = n.parent;
+                }
+                None => break,
+            }
+            if fuel == 0 {
+                break;
+            }
+            fuel -= 1;
+        }
+        path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_links_parent_and_depth() {
+        let mut t = RadixTree::new();
+        t.insert(10, None, 0);
+        t.insert(20, Some(10), 1);
+        t.insert(30, Some(20), 2);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.depth(10), Some(1));
+        assert_eq!(t.depth(30), Some(3));
+        assert!(t.is_leaf(30));
+        assert!(!t.is_leaf(10));
+        assert_eq!(t.ancestry(30), vec![30, 20, 10]);
+    }
+
+    #[test]
+    fn lookup_counts_hits_and_peek_does_not() {
+        let mut t = RadixTree::new();
+        t.insert(10, None, 0);
+        assert_eq!(t.peek(10), Some(0));
+        assert_eq!(t.hit_blocks(), 0);
+        assert_eq!(t.lookup(10), Some(0));
+        assert_eq!(t.lookup(99), None);
+        assert_eq!(t.hit_blocks(), 1);
+    }
+
+    #[test]
+    fn duplicate_insert_keeps_the_first_block() {
+        let mut t = RadixTree::new();
+        t.insert(10, None, 0);
+        t.insert(10, None, 7);
+        assert_eq!(t.peek(10), Some(0));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn remove_by_block_detaches_children_without_dropping_them() {
+        let mut t = RadixTree::new();
+        t.insert(10, None, 0);
+        t.insert(20, Some(10), 1);
+        t.insert(21, Some(10), 2);
+        // Front-to-back free order: the ancestor's block drains first.
+        assert_eq!(t.remove_by_block(0), Some(10));
+        assert_eq!(t.len(), 2);
+        assert!(t.contains(20) && t.contains(21));
+        // Detached children become roots of their own subtrees; their
+        // recorded depth is historical, ancestry stops at the break.
+        assert_eq!(t.ancestry(20), vec![20]);
+        // Removing a child cleans it out of nothing (parent gone).
+        assert_eq!(t.remove_by_block(1), Some(20));
+        assert_eq!(t.remove_by_block(1), None, "already gone");
+        assert_eq!(t.remove_by_block(5), None, "never indexed");
+    }
+
+    #[test]
+    fn remove_cleans_parent_child_link() {
+        let mut t = RadixTree::new();
+        t.insert(10, None, 0);
+        t.insert(20, Some(10), 1);
+        assert!(!t.is_leaf(10));
+        assert_eq!(t.remove_by_block(1), Some(20));
+        assert!(t.is_leaf(10), "releasing the child must restore leaf-ness");
+    }
+}

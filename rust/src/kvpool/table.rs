@@ -1,15 +1,19 @@
 //! Per-sequence block tables with copy-on-write prefix sharing.
 //!
 //! A [`BlockTable`] maps a sequence's token positions onto allocator
-//! blocks. [`TableSet`] manages one table per live sequence plus a
-//! content-addressed prefix index: every *full* block of prompt tokens is
-//! keyed by the chain hash of all tokens up to and including that block,
-//! so two requests with the same prompt prefix resolve to the same blocks
+//! blocks. [`TableSet`] manages one table per live sequence plus the
+//! content-addressed [`super::RadixTree`]: every *full* block of prompt
+//! tokens is a tree node keyed by the chain hash of all tokens up to and
+//! including that block (its parent is the one-block-shorter prefix), so
+//! two requests with the same prompt prefix resolve to the same blocks
 //! (refcount++) instead of fresh allocations — vLLM-style automatic
 //! prefix caching, no request-side grouping API required. Tail blocks
 //! (partial prompt block + generated tokens) are always private, which is
 //! what makes the sharing copy-on-write: divergence after the common
-//! prefix lands in per-sequence blocks.
+//! prefix lands in per-sequence blocks (a fork's tail is a child branch).
+//! When a tree node's block drains its last reference the tables emit
+//! [`PoolEvent::PrefixReleased`] so downstream mirrors (the router's
+//! per-replica affinity view) drop the dead entry.
 //!
 //! `TableSet` is pure bookkeeping over token ids — the coordinator uses it
 //! to mirror the device cache for admission control. The data-plane
@@ -20,6 +24,7 @@ use std::collections::{HashMap, HashSet};
 use crate::obs::{PoolEvent, PoolEventLog};
 
 use super::block::{BlockAllocator, BlockId, PoolExhausted};
+use super::radix::RadixTree;
 
 pub type SeqId = u64;
 
@@ -79,12 +84,11 @@ pub struct TableSet {
     // lint:allow(nondet-iter): keyed access only (by SeqId), never iterated
     tables: HashMap<SeqId, BlockTable>,
     next: SeqId,
-    /// chain hash of a full prefix block → the block holding it.
-    // lint:allow(nondet-iter): keyed access only (by prefix hash), never iterated
-    prefix_map: HashMap<u64, BlockId>,
-    /// Reverse index for cleanup when a shared block is finally freed.
-    // lint:allow(nondet-iter): keyed access only (by BlockId), never iterated
-    block_hash: HashMap<BlockId, u64>,
+    /// The one prefix-sharing structure: chain hash → node → block,
+    /// with parent/child links for the conversation-tree queries. The
+    /// old flat `prefix_map`/`block_hash` pair delegated here and was
+    /// removed.
+    tree: RadixTree,
     /// Live blocks holding at least one written token slot (maintained
     /// incrementally on admit/advance/fork and pruned on physical free,
     /// so the per-decode-iteration occupancy snapshot is O(1)).
@@ -106,8 +110,7 @@ impl TableSet {
             sharing,
             tables: HashMap::new(),
             next: 1,
-            prefix_map: HashMap::new(),
-            block_hash: HashMap::new(),
+            tree: RadixTree::new(),
             written: HashSet::new(),
             shared_hits: 0,
             events: PoolEventLog::default(),
@@ -149,9 +152,10 @@ impl TableSet {
         let mut blocks: Vec<BlockId> = Vec::with_capacity(total_blocks);
         let mut shared_now = 0u32;
         let mut chain = 0u64;
+        let mut parent: Option<u64> = None;
         for i in 0..full {
             chain = chain_hash(chain, &prompt[i * bs..(i + 1) * bs]);
-            let shared = if self.sharing { self.prefix_map.get(&chain).copied() } else { None };
+            let shared = if self.sharing { self.tree.lookup(chain) } else { None };
             match shared {
                 Some(b) => {
                     alloc.retain(b);
@@ -162,8 +166,7 @@ impl TableSet {
                 None => match alloc.alloc() {
                     Ok(b) => {
                         if self.sharing {
-                            self.prefix_map.insert(chain, b);
-                            self.block_hash.insert(b, chain);
+                            self.tree.insert(chain, parent, b);
                         }
                         blocks.push(b);
                     }
@@ -173,6 +176,7 @@ impl TableSet {
                     }
                 },
             }
+            parent = Some(chain);
         }
         // Private tail: partial prompt block + reserved decode headroom.
         for _ in full..total_blocks {
@@ -462,6 +466,10 @@ impl TableSet {
         }
         let id = self.next;
         self.next += 1;
+        // The fork counter tracks branch fan-out (sampling n>1, retries);
+        // before the radix refactor it was never incremented here, so
+        // `PoolStats::forks` read 0 however many branches were live.
+        alloc.stats.forks += 1;
         // A fork is an admission by another name: full blocks are shared,
         // only a CoW tail (if any) is a fresh allocation.
         self.events.push(PoolEvent::Alloc {
@@ -485,8 +493,26 @@ impl TableSet {
         }
         prefix_block_hashes(prompt, self.block_size)
             .iter()
-            .filter(|h| self.prefix_map.contains_key(h))
+            .filter(|&&h| self.tree.contains(h))
             .count()
+    }
+
+    /// Read-only view of the radix tree (routing probes, tests,
+    /// snapshots). Lookups through this view never charge the hit
+    /// counter — use [`TableSet::admit`] for that.
+    pub fn radix(&self) -> &RadixTree {
+        &self.tree
+    }
+
+    /// Live prefix nodes — the `radix_nodes` gauge.
+    pub fn radix_nodes(&self) -> usize {
+        self.tree.len()
+    }
+
+    /// Cumulative admission blocks served from the tree — the
+    /// `radix_hit_blocks` gauge.
+    pub fn radix_hit_blocks(&self) -> u64 {
+        self.tree.hit_blocks()
     }
 
     fn rollback(&mut self, alloc: &mut BlockAllocator, acquired: &[BlockId]) {
@@ -495,12 +521,15 @@ impl TableSet {
         }
     }
 
-    fn release_and_clean(&mut self, alloc: &mut BlockAllocator, b: BlockId) {
+    fn release_and_clean(&mut self, alloc: &mut BlockAllocator, b: BlockId) -> bool {
         if alloc.release(b) {
             self.written.remove(&b);
-            if let Some(h) = self.block_hash.remove(&b) {
-                self.prefix_map.remove(&h);
+            if let Some(h) = self.tree.remove_by_block(b) {
+                self.events.push(PoolEvent::PrefixReleased { hash: h });
             }
+            true
+        } else {
+            false
         }
     }
 }
@@ -877,13 +906,69 @@ mod tests {
         );
         assert_eq!(evs[2], PoolEvent::Grow { seq: s, blocks: 3 });
         assert_eq!(evs[3], PoolEvent::Free { seq: s, blocks: 6 });
-        assert_eq!(evs.len(), 4);
+        // The prompt's one full block was a radix node; its physical
+        // free (refcount drained) announces the released chain hash so
+        // affinity mirrors can drop the entry.
+        let h = chain_hash(0, &toks(4, 0));
+        assert_eq!(evs[4], PoolEvent::PrefixReleased { hash: h });
+        assert_eq!(evs.len(), 5);
         // Sharing shows up in the admit event.
         let prompt = toks(8, 0);
         let _a = ts.admit(&mut alloc, &prompt, 9).unwrap();
         let b = ts.admit(&mut alloc, &prompt, 9).unwrap();
         let evs: Vec<_> = ts.events.drain().collect();
         assert_eq!(evs[1], PoolEvent::Alloc { seq: b, blocks: 3, shared: 2 });
+    }
+
+    #[test]
+    fn admit_builds_linked_radix_nodes() {
+        let mut alloc = BlockAllocator::new(16, 4);
+        let mut ts = TableSet::new(4, true);
+        let prompt = toks(12, 0); // 3 full blocks
+        let s = ts.admit(&mut alloc, &prompt, 12).unwrap();
+        assert_eq!(ts.radix_nodes(), 3);
+        let hashes = prefix_block_hashes(&prompt, 4);
+        assert_eq!(ts.radix().depth(hashes[2]), Some(3));
+        assert_eq!(ts.radix().ancestry(hashes[2]), vec![hashes[2], hashes[1], hashes[0]]);
+        assert!(ts.radix().is_leaf(hashes[2]));
+        // A prompt diverging in its second block branches under the
+        // shared root instead of duplicating it.
+        let mut other = prompt.clone();
+        other[6] = 999;
+        let t = ts.admit(&mut alloc, &other, 12).unwrap();
+        let oh = prefix_block_hashes(&other, 4);
+        assert_eq!(oh[0], hashes[0], "shared first block, same node");
+        assert!(!ts.radix().is_leaf(hashes[0]), "root now has two children");
+        assert_eq!(ts.radix_nodes(), 5, "1 shared root + 2 nodes per branch");
+        assert_eq!(ts.radix_hit_blocks(), 1, "one block served from the tree");
+        assert_eq!(ts.radix().ancestry(oh[2]), vec![oh[2], oh[1], hashes[0]]);
+        ts.free(&mut alloc, s);
+        ts.free(&mut alloc, t);
+        assert_eq!(ts.radix_nodes(), 0, "drained tree is empty");
+        alloc.check_invariants();
+    }
+
+    #[test]
+    fn prefix_released_fires_only_at_physical_free() {
+        let mut alloc = BlockAllocator::new(16, 4);
+        let mut ts = TableSet::new(4, true);
+        let prompt = toks(4, 0); // exactly one shared full block
+        let a = ts.admit(&mut alloc, &prompt, 4).unwrap();
+        let b = ts.admit(&mut alloc, &prompt, 4).unwrap();
+        ts.events.drain().for_each(drop);
+        ts.free(&mut alloc, a);
+        let evs: Vec<_> = ts.events.drain().collect();
+        assert!(
+            !evs.iter().any(|e| matches!(e, PoolEvent::PrefixReleased { .. })),
+            "survivor still references the block: no release event"
+        );
+        assert_eq!(ts.radix_nodes(), 1);
+        ts.free(&mut alloc, b);
+        let evs: Vec<_> = ts.events.drain().collect();
+        let h = chain_hash(0, &prompt);
+        assert!(evs.contains(&PoolEvent::PrefixReleased { hash: h }));
+        assert_eq!(ts.radix_nodes(), 0);
+        alloc.check_invariants();
     }
 
     #[test]

@@ -57,8 +57,10 @@ fn main() -> Result<()> {
                  \x20 --admission full|speculative            KV reservation policy\n\
                  \x20 --reserve-frac 0.25                     speculative decode-budget fraction\n\
                  \x20 --headroom-blocks 2                     blocks per speculative grow\n\
-                 \x20 --victim-policy youngest|priority|deadline\n\
+                 \x20 --victim-policy youngest|priority|deadline|idle-leaf\n\
                  \x20                                         preemption victim selection\n\
+                 \x20                                         (idle-leaf: most private radix-\n\
+                 \x20                                         leaf blocks first)\n\
                  \x20 --preempt full|partial                  whole vs tail-block eviction\n\
                  \x20 --aging-steps N                         cross-class aging bound in decode\n\
                  \x20                                         steps (deadline policy; 0 = off)\n\
@@ -83,6 +85,9 @@ fn main() -> Result<()> {
                  \x20            --prefix-groups N (distinct shared prefixes)\n\
                  \x20            --slo-ms MS (interactive SLO) --batch-slo-ms MS\n\
                  \x20            --slo-jitter F (per-request SLO jitter fraction)\n\
+                 \x20            --turns N (conversation turns per session)\n\
+                 \x20            --think-time S (seconds between a session's turns)\n\
+                 \x20            --branch-factor N (identical-prompt forks per turn)\n\
                  \x20            --shed-retries N (resubmit shed requests after their\n\
                  \x20            retry_after_ms hint; default 1)\n\
                  trace-check: FILE.jsonl [FILE.jsonl ...] — exit non-zero on lifecycle\n\
@@ -136,7 +141,10 @@ fn engine_config(args: &Args, svc: &RuntimeService) -> Result<EngineConfig> {
             "youngest" | "youngest-first" => VictimPolicy::YoungestFirst,
             "priority" | "priority-aware" => VictimPolicy::PriorityAware,
             "deadline" | "deadline-aware" => VictimPolicy::DeadlineAware,
-            other => bail!("unknown --victim-policy {other} (youngest|priority|deadline)"),
+            "idle-leaf" | "idle" => VictimPolicy::IdleLeaf,
+            other => {
+                bail!("unknown --victim-policy {other} (youngest|priority|deadline|idle-leaf)")
+            }
         },
         preempt: match args.str_or("preempt", "full").as_str() {
             "full" => PreemptMode::Full,
@@ -347,6 +355,7 @@ fn generate(args: &Args) -> Result<()> {
             seed: 1,
         },
         priority,
+        turn: 0,
         slo_ms,
         reply,
     })
@@ -406,9 +415,17 @@ fn serve(args: &Args) -> Result<()> {
     let mut submits = Vec::with_capacity(router_cfg.replicas);
     let mut hubs = Vec::with_capacity(router_cfg.replicas);
     let mut workers = Vec::with_capacity(router_cfg.replicas);
+    let mut evict_rxs = Vec::with_capacity(router_cfg.replicas);
     for i in 0..router_cfg.replicas {
         let hub = loki::obs::new_hub();
-        let engine = Engine::new(&svc, cfg.clone()).with_stats_hub(hub.clone());
+        // Eviction feedback: each engine reports physically freed prefix
+        // blocks so the frontend can erase them from the router's
+        // per-replica affinity mirror instead of routing on stale hashes.
+        let (etx, erx) = channel();
+        evict_rxs.push(erx);
+        let engine = Engine::new(&svc, cfg.clone())
+            .with_stats_hub(hub.clone())
+            .with_evict_feedback(etx);
         let (tx, rx) = Engine::channel(&cfg);
         submits.push(tx);
         hubs.push(hub);
@@ -419,7 +436,9 @@ fn serve(args: &Args) -> Result<()> {
                 .with_context(|| format!("spawn engine {i}"))?,
         );
     }
-    let fe = std::sync::Arc::new(loki::server::Frontend::new(router_cfg, submits, hubs)?);
+    let fe = std::sync::Arc::new(
+        loki::server::Frontend::new(router_cfg, submits, hubs)?.with_evict_feedback(evict_rxs)?,
+    );
     let listener =
         std::net::TcpListener::bind(&listen).with_context(|| format!("bind {listen}"))?;
     loki::server::serve_frontend(listener, fe, server_cfg)?;
@@ -479,14 +498,20 @@ fn bench_serve(args: &Args) -> Result<()> {
             slo_ms_interactive: slo_ms_arg(args, "slo-ms")?,
             slo_ms_batch: slo_ms_arg(args, "batch-slo-ms")?,
             slo_jitter_frac: args.f64_or("slo-jitter", 0.0),
+            turns_per_session: args.usize_or("turns", 1),
+            think_time_gap: args.f64_or("think-time", 0.0),
+            branch_factor: args.usize_or("branch-factor", 1),
             ..Default::default()
         },
         &suite.fillers,
     );
     let mut submits = Vec::with_capacity(router_cfg.replicas);
     let mut workers = Vec::with_capacity(router_cfg.replicas);
+    let mut evict_rxs = Vec::with_capacity(router_cfg.replicas);
     for i in 0..router_cfg.replicas {
-        let engine = Engine::new(&svc, cfg.clone());
+        let (etx, erx) = channel();
+        evict_rxs.push(erx);
+        let engine = Engine::new(&svc, cfg.clone()).with_evict_feedback(etx);
         let (tx, rx) = Engine::channel(&cfg);
         submits.push(tx);
         workers.push(
@@ -496,7 +521,10 @@ fn bench_serve(args: &Args) -> Result<()> {
                 .with_context(|| format!("spawn engine {i}"))?,
         );
     }
-    let fe = Arc::new(loki::server::Frontend::new(router_cfg, submits, Vec::new())?);
+    let fe = Arc::new(
+        loki::server::Frontend::new(router_cfg, submits, Vec::new())?
+            .with_evict_feedback(evict_rxs)?,
+    );
     let (reply, results) = channel();
     // id → in-flight record. Inserted under the lock *around* the
     // dispatch, so the collector can never receive a result whose id it
@@ -525,6 +553,7 @@ fn bench_serve(args: &Args) -> Result<()> {
                     stop_token: None,
                     sampling: SampleCfg::greedy(),
                     priority: item.priority,
+                    turn: item.turn,
                     slo_ms: item.slo_ms,
                     reply: reply.clone(),
                 };
@@ -582,6 +611,7 @@ fn bench_serve(args: &Args) -> Result<()> {
                         stop_token: None,
                         sampling: SampleCfg::greedy(),
                         priority: item.priority,
+                        turn: item.turn,
                         slo_ms: item.slo_ms,
                         reply,
                     };

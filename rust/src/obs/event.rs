@@ -51,6 +51,11 @@ pub enum PoolEvent {
     Fault { seq: u64, pages: u32, bytes: u64 },
     /// Tier budget enforcement demoted `pages` hot pages to cold.
     Demotion { pages: u32 },
+    /// A content-addressed prefix block drained its last reference and
+    /// was physically freed: the chain hash `hash` no longer resolves in
+    /// the radix tree. The frontend forwards these to the router so
+    /// per-replica affinity mirrors drop the dead entry.
+    PrefixReleased { hash: u64 },
 }
 
 impl PoolEvent {
@@ -62,6 +67,7 @@ impl PoolEvent {
             PoolEvent::Truncate { .. } => "pool_truncate",
             PoolEvent::Fault { .. } => "pool_fault",
             PoolEvent::Demotion { .. } => "tier_demotion",
+            PoolEvent::PrefixReleased { .. } => "prefix_released",
         }
     }
 }

@@ -140,6 +140,11 @@ pub fn event_json(ev: &TraceEvent) -> Json {
             PoolEvent::Demotion { pages } => {
                 fields.push(("pages", json::num(pages as f64)));
             }
+            PoolEvent::PrefixReleased { hash } => {
+                // Hex string, not a JSON number: the 64-bit chain hash
+                // would lose precision above 2^53 as an f64.
+                fields.push(("hash", json::s(&format!("{hash:016x}"))));
+            }
         },
     }
     json::obj(fields)

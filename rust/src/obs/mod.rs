@@ -35,4 +35,4 @@ pub use event::{EventKind, FinishCode, PoolEvent, PoolEventLog, TraceEvent};
 pub use export::{cross_replica_violations, TraceCheck};
 pub use hist::StreamingHist;
 pub use recorder::{FlightRecorder, DEFAULT_TRACE_CAPACITY};
-pub use snapshot::{new_hub, ClassSnap, HistSnap, StatsHub, StatsSnapshot};
+pub use snapshot::{new_hub, ClassSnap, HistSnap, StatsHub, StatsSnapshot, TURN_BUCKETS};

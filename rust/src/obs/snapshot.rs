@@ -13,6 +13,11 @@ use std::sync::{Arc, Mutex};
 use super::hist::StreamingHist;
 use crate::util::json::{self, Json};
 
+/// Number of per-turn TTFT buckets carried by the snapshot: turns 0, 1
+/// and 2 exactly, with index 3 folding in every turn ≥ 3. The engine's
+/// `EngineMetrics` sizes its per-turn histograms off this same constant.
+pub const TURN_BUCKETS: usize = 4;
+
 /// Compact view of one histogram for exposition.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct HistSnap {
@@ -112,6 +117,17 @@ pub struct StatsSnapshot {
     pub pool_blocks_peak: u64,
     pub goodput_tok_per_step: f64,
     pub wasted_work_tokens: u64,
+    /// Radix-tree gauges: live prefix nodes and cumulative admission
+    /// hits resolved by the tree.
+    pub radix_nodes: u64,
+    pub radix_hit_blocks: u64,
+    /// Turn ≥ 1 prefix probe / hit tallies (denominator / numerator of
+    /// [`StatsSnapshot::turn_cache_hit_rate`], kept raw so the fleet
+    /// merge stays exact).
+    pub turn_ref_blocks: u64,
+    pub turn_shared_blocks: u64,
+    /// Charged-domain TTFT per conversation turn (0, 1, 2, 3+).
+    pub turn_ttft_ms: [HistSnap; TURN_BUCKETS],
     pub ttft: HistSnap,
     pub e2e: HistSnap,
     pub queue_wait: HistSnap,
@@ -163,6 +179,10 @@ impl StatsSnapshot {
             out.pool_blocks_peak += p.pool_blocks_peak;
             goodput_weighted += p.goodput_tok_per_step * p.decode_steps as f64;
             out.wasted_work_tokens += p.wasted_work_tokens;
+            out.radix_nodes += p.radix_nodes;
+            out.radix_hit_blocks += p.radix_hit_blocks;
+            out.turn_ref_blocks += p.turn_ref_blocks;
+            out.turn_shared_blocks += p.turn_shared_blocks;
             out.trace_recorded += p.trace_recorded;
             out.trace_dropped += p.trace_dropped;
             for (oc, pc) in out.classes.iter_mut().zip(p.classes.iter()) {
@@ -183,7 +203,20 @@ impl StatsSnapshot {
         for i in 0..2 {
             out.classes[i].ttft = HistSnap::merged(parts.iter().map(|p| p.classes[i].ttft));
         }
+        for i in 0..TURN_BUCKETS {
+            out.turn_ttft_ms[i] = HistSnap::merged(parts.iter().map(|p| p.turn_ttft_ms[i]));
+        }
         out
+    }
+
+    /// Conversational prefix-hit rate: turn ≥ 1 shared over probed full
+    /// blocks; 1.0 when no follow-up turn ever probed (nothing was
+    /// missable — same convention as the engine's prefix hit rate).
+    pub fn turn_cache_hit_rate(&self) -> f64 {
+        if self.turn_ref_blocks == 0 {
+            return 1.0;
+        }
+        self.turn_shared_blocks as f64 / self.turn_ref_blocks as f64
     }
 
     /// Structured JSON form (the `"stats"` reply body).
@@ -221,6 +254,15 @@ impl StatsSnapshot {
             ("pool_blocks_peak", json::num(self.pool_blocks_peak as f64)),
             ("goodput_tok_per_step", json::num(self.goodput_tok_per_step)),
             ("wasted_work_tokens", json::num(self.wasted_work_tokens as f64)),
+            ("radix_nodes", json::num(self.radix_nodes as f64)),
+            ("radix_hit_blocks", json::num(self.radix_hit_blocks as f64)),
+            ("turn_ref_blocks", json::num(self.turn_ref_blocks as f64)),
+            ("turn_shared_blocks", json::num(self.turn_shared_blocks as f64)),
+            ("turn_cache_hit_rate", json::num(self.turn_cache_hit_rate())),
+            (
+                "turn_ttft_ms",
+                Json::Arr(self.turn_ttft_ms.iter().map(|h| h.to_json()).collect()),
+            ),
             ("ttft_s", self.ttft.to_json()),
             ("e2e_s", self.e2e.to_json()),
             ("queue_wait_s", self.queue_wait.to_json()),
@@ -253,6 +295,7 @@ impl StatsSnapshot {
         counter("loki_preemptions_total", "Lane preemptions.", self.preemptions as f64);
         counter("loki_resumes_total", "Preempted requests resumed.", self.resumes as f64);
         counter("loki_wasted_work_tokens_total", "Missed-deadline plus recomputed tokens.", self.wasted_work_tokens as f64);
+        counter("loki_radix_hit_blocks_total", "Admission prefix blocks resolved by the radix tree.", self.radix_hit_blocks as f64);
         counter("loki_trace_events_total", "Flight-recorder events recorded.", self.trace_recorded as f64);
         counter("loki_trace_dropped_total", "Flight-recorder events lost to ring overwrite.", self.trace_dropped as f64);
         let mut gauge = |name: &str, help: &str, v: f64| {
@@ -267,6 +310,8 @@ impl StatsSnapshot {
         gauge("loki_pool_blocks_in_use", "KV pool blocks in use.", self.pool_blocks_in_use as f64);
         gauge("loki_pool_blocks_total", "KV pool capacity in blocks.", self.pool_blocks_total as f64);
         gauge("loki_goodput_tokens_per_step", "Deadline-hit tokens per decode step.", self.goodput_tok_per_step);
+        gauge("loki_radix_nodes", "Live radix-tree prefix nodes.", self.radix_nodes as f64);
+        gauge("loki_turn_cache_hit_rate", "Turn >= 1 conversational prefix-hit rate.", self.turn_cache_hit_rate());
         let mut summary = |name: &str, help: &str, h: &HistSnap| {
             let _ = writeln!(out, "# HELP {name} {help}");
             let _ = writeln!(out, "# TYPE {name} summary");
@@ -280,6 +325,10 @@ impl StatsSnapshot {
         summary("loki_e2e_seconds", "End-to-end request latency.", &self.e2e);
         summary("loki_queue_wait_seconds", "Queue wait before admission to a lane.", &self.queue_wait);
         summary("loki_decode_step_seconds", "Decode iteration duration.", &self.decode_step);
+        for (i, h) in self.turn_ttft_ms.iter().enumerate() {
+            let _ = writeln!(out, "loki_turn_ttft_ms_count{{turn=\"{i}\"}} {}", h.count);
+            let _ = writeln!(out, "loki_turn_ttft_ms_mean{{turn=\"{i}\"}} {}", h.mean);
+        }
         for (i, c) in self.classes.iter().enumerate() {
             let cls = CLASS_NAMES[i];
             let _ = writeln!(out, "loki_class_requests_done_total{{class=\"{cls}\"}} {}", c.done);
@@ -320,6 +369,10 @@ mod tests {
         assert_eq!(round.req("requests_in").as_i64(), Some(4));
         assert_eq!(round.req("ttft_s").req("count").as_i64(), Some(2));
         assert_eq!(round.req("classes").as_arr().unwrap().len(), 2);
+        assert_eq!(round.req("radix_nodes").as_i64(), Some(0));
+        assert_eq!(round.req("turn_ttft_ms").as_arr().unwrap().len(), TURN_BUCKETS);
+        // No follow-up turns probed: nothing was missable.
+        assert_eq!(round.req("turn_cache_hit_rate").as_i64(), Some(1));
     }
 
     #[test]
@@ -331,6 +384,10 @@ mod tests {
             "# TYPE loki_ttft_seconds summary",
             "loki_ttft_seconds{quantile=\"0.5\"}",
             "loki_class_requests_done_total{class=\"interactive\"}",
+            "loki_radix_nodes 0",
+            "loki_radix_hit_blocks_total 0",
+            "loki_turn_cache_hit_rate 1",
+            "loki_turn_ttft_ms_count{turn=\"0\"} 0",
         ] {
             assert!(p.contains(family), "missing {family:?} in:\n{p}");
         }
@@ -345,6 +402,10 @@ mod tests {
         b.decode_steps = 48;
         b.goodput_tok_per_step = 0.5;
         b.uptime_s = 5.0;
+        b.radix_nodes = 3;
+        b.turn_ref_blocks = 10;
+        b.turn_shared_blocks = 4;
+        b.turn_ttft_ms[1] = b.ttft;
         let mut h = StreamingHist::new();
         for _ in 0..6 {
             h.push(0.6);
@@ -360,6 +421,14 @@ mod tests {
         assert_eq!(m.ttft.count, 8);
         assert!((m.ttft.mean - 0.4875).abs() < 1e-9);
         assert!((m.ttft.max - 0.6).abs() < 1e-12);
+        // Radix / turn tallies sum across replicas; turn hists merge
+        // bucket-by-bucket.
+        assert_eq!(m.radix_nodes, 3);
+        assert_eq!(m.turn_ref_blocks, 10);
+        assert_eq!(m.turn_shared_blocks, 4);
+        assert!((m.turn_cache_hit_rate() - 0.4).abs() < 1e-12);
+        assert_eq!(m.turn_ttft_ms[1].count, 2);
+        assert_eq!(m.turn_ttft_ms[0].count, 0);
         // Merging one snapshot with an empty one is the identity on
         // counters.
         let solo = StatsSnapshot::merged(&[sample(), StatsSnapshot::default()]);

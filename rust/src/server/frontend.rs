@@ -18,7 +18,7 @@
 //! protocol are unchanged for it, which keeps `tests/server_protocol.rs`
 //! green without edits.
 
-use std::sync::mpsc::SyncSender;
+use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
@@ -34,6 +34,13 @@ pub struct Frontend {
     /// One hub per replica (parallel to `submits`), or empty when the
     /// server runs without stats publishing.
     hubs: Vec<StatsHub>,
+    /// One eviction-feedback receiver per replica (parallel to
+    /// `submits`), or empty when feedback is disabled. Each engine
+    /// forwards the hash of every `PoolEvent::PrefixReleased` here; the
+    /// frontend drains them into [`Router::note_evicted`] under the
+    /// router lock on every dispatch, so the affinity mirror never
+    /// counts a prefix the pool has already physically freed.
+    evict: Vec<Mutex<Receiver<u64>>>,
 }
 
 impl Frontend {
@@ -58,7 +65,23 @@ impl Frontend {
                 submits.len()
             );
         }
-        Ok(Self { router: Mutex::new(Router::new(cfg)), submits, hubs })
+        Ok(Self { router: Mutex::new(Router::new(cfg)), submits, hubs, evict: Vec::new() })
+    }
+
+    /// Attach per-replica pool-eviction feedback channels (one
+    /// `Receiver<u64>` of released prefix hashes per replica, parallel
+    /// to the submit channels). Engines built with
+    /// `Engine::with_evict_feedback` send on the matching `Sender`.
+    pub fn with_evict_feedback(mut self, rxs: Vec<Receiver<u64>>) -> Result<Self> {
+        if rxs.len() != self.submits.len() {
+            bail!(
+                "eviction feedback needs one receiver per replica (got {} for {})",
+                rxs.len(),
+                self.submits.len()
+            );
+        }
+        self.evict = rxs.into_iter().map(Mutex::new).collect();
+        Ok(self)
     }
 
     /// The pre-sharding server shape: one replica, trivially routed.
@@ -71,6 +94,7 @@ impl Frontend {
             })),
             submits: vec![submit],
             hubs: stats.into_iter().collect(),
+            evict: Vec::new(),
         }
     }
 
@@ -105,6 +129,15 @@ impl Frontend {
                 .router
                 .lock()
                 .map_err(|_| anyhow::anyhow!("router lock poisoned"))?;
+            // Apply pending pool-eviction feedback before deciding, so
+            // the affinity score never counts a dead mirror entry.
+            for (r, rx) in self.evict.iter().enumerate() {
+                if let Ok(rx) = rx.lock() {
+                    while let Ok(hash) = rx.try_recv() {
+                        router.note_evicted(r, hash);
+                    }
+                }
+            }
             match prior {
                 Some(p) => router.route_retry(req.id, &req.prompt, p),
                 None => router.route(req.id, &req.prompt),
@@ -207,6 +240,7 @@ mod tests {
                 stop_token: None,
                 sampling: SampleCfg { temperature: 0.0, top_p: 0.95, seed: id },
                 priority: Priority::Interactive,
+                turn: 0,
                 slo_ms: None,
                 reply,
             },
@@ -250,6 +284,48 @@ mod tests {
         for r in landed {
             fe.note_done(r);
         }
+    }
+
+    #[test]
+    fn evict_feedback_drains_into_the_router_mirror() {
+        let bs = RouterCfg::default().block_size;
+        let (tx0, _rx0) = sync_channel(8);
+        let (tx1, _rx1) = sync_channel(8);
+        let (ev0_tx, ev0_rx) = std::sync::mpsc::channel();
+        let (ev1_tx, ev1_rx) = std::sync::mpsc::channel();
+        let fe = Frontend::new(
+            RouterCfg { replicas: 2, policy: RoutePolicy::PrefixAffinity, ..Default::default() },
+            vec![tx0, tx1],
+            vec![],
+        )
+        .unwrap()
+        .with_evict_feedback(vec![ev0_rx, ev1_rx])
+        .unwrap();
+        // Shape validation: receiver count must match replicas.
+        let (tx, _rx) = sync_channel::<GenRequest>(1);
+        let (_etx, erx) = std::sync::mpsc::channel();
+        assert!(Frontend::single(tx, None).with_evict_feedback(vec![erx, {
+            let (_t, r) = std::sync::mpsc::channel();
+            r
+        }])
+        .is_err());
+        // Route a prompt with two full blocks; its hashes are mirrored
+        // on the replica it landed on.
+        let prompt: Vec<i32> = (0..(2 * bs) as i32).collect();
+        let (r0, _reply0) = req(0, prompt.clone());
+        let home = fe.dispatch(r0).unwrap();
+        fe.note_done(home);
+        // The pool releases those prefixes; the next dispatch drains the
+        // feedback before routing, so the repeat scores zero matches.
+        let ev = [&ev0_tx, &ev1_tx][home];
+        for h in crate::kvpool::prefix_block_hashes(&prompt, bs) {
+            ev.send(h).unwrap();
+        }
+        let (r1, _reply1) = req(1, prompt.clone());
+        fe.dispatch(r1).unwrap();
+        let decided = fe.router.lock().unwrap().decisions().to_vec();
+        assert_eq!(decided[1].matched_blocks, 0, "evicted entries must not match");
+        fe.note_done(decided[1].replica);
     }
 
     #[test]

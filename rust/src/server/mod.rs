@@ -236,6 +236,12 @@ fn handle_line(line: &str, fe: &Frontend, tok: &ByteTokenizer, cfg: ServerCfg) -
             Some(ms)
         }
     };
+    // Optional conversation-turn index (0 = first turn). Only feeds
+    // per-turn metrics attribution; never changes scheduling.
+    let turn = match req.get("turn") {
+        None => 0,
+        Some(v) => v.as_f64().context("\"turn\" must be a number")? as u32,
+    };
     let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
     let (reply, rx) = channel();
     let replica = fe.dispatch(GenRequest {
@@ -245,6 +251,7 @@ fn handle_line(line: &str, fe: &Frontend, tok: &ByteTokenizer, cfg: ServerCfg) -
         stop_token: Some(b'\n' as i32),
         sampling: SampleCfg { temperature, top_p: 0.95, seed: id },
         priority,
+        turn,
         slo_ms,
         reply,
     })?;

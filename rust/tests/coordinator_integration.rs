@@ -31,6 +31,7 @@ fn request(
         stop_token: None,
         sampling: SampleCfg::greedy(),
         priority: Priority::Interactive,
+        turn: 0,
         slo_ms: None,
         reply,
     }
@@ -106,6 +107,7 @@ fn stop_token_ends_generation_early() {
         stop_token: Some(b' ' as i32),
         sampling: SampleCfg::greedy(),
         priority: Priority::Interactive,
+        turn: 0,
         slo_ms: None,
         reply,
     })

@@ -53,6 +53,7 @@ fn run(cfg: &EngineConfig, caps: EngineCaps, specs: &[Spec]) -> (Vec<GenResult>,
             stop_token: None,
             sampling: s.sampling,
             priority: s.priority,
+            turn: 0,
             slo_ms: s.slo_ms,
             reply: reply.clone(),
         })

@@ -382,6 +382,128 @@ fn prop_truncate_then_reappend_is_bit_identical() {
     }
 }
 
+/// Conversational fork trees (`branch_factor > 1` in the workload
+/// generator): one root prompt forked into several siblings, each then
+/// growing and advancing a private decode tail. Invariants, checked both
+/// mid-flight and at teardown:
+/// - every live block's refcount equals the number of live tables that
+///   hold it (the radix tree and fork paths agree on sharing);
+/// - copy-on-write isolation: the only blocks two branches may have in
+///   common are the root's full prefix blocks — CoW tails and grown
+///   decode blocks are private to their branch;
+/// - alloc/free books balance, frees in arbitrary order strand nothing,
+///   and the radix tree drains to empty with the pool.
+#[test]
+fn prop_fork_trees_isolate_cow_tails_and_balance_books() {
+    use std::collections::HashMap;
+
+    // Refcount == live holders, for every block any live table references
+    // — and no block in use that no table holds.
+    fn assert_refcounts_match_holders(
+        tables: &TableSet,
+        alloc: &BlockAllocator,
+        live: &[u64],
+        trial: usize,
+    ) {
+        let mut holders: HashMap<u32, u32> = HashMap::new();
+        for &s in live {
+            for &b in &tables.table(s).unwrap().blocks {
+                *holders.entry(b).or_insert(0) += 1;
+            }
+        }
+        assert_eq!(
+            holders.len(),
+            alloc.blocks_in_use(),
+            "trial {trial}: blocks in use not accounted to any live table"
+        );
+        for (&b, &n) in &holders {
+            assert_eq!(
+                alloc.ref_count(b),
+                n,
+                "trial {trial}: block {b} refcount diverged from live holders"
+            );
+        }
+    }
+
+    for trial in 0..TRIALS {
+        let mut rng = Xoshiro256::new(23_000 + trial as u64);
+        let bs = [4, 8][rng.below(2)];
+        let mut alloc = BlockAllocator::new(256, bs);
+        let mut tables = TableSet::new(bs, true);
+
+        // Root prompt: 1–3 full blocks plus, half the time, a partial
+        // tail — so both fork paths (pure share, share + CoW copy) run.
+        let full = rng.range(1, 4);
+        let tail = if rng.below(2) == 0 { 0 } else { rng.range(1, bs) };
+        let plen = full * bs + tail;
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.below(4) as i32).collect();
+        let root = tables.admit(&mut alloc, &prompt, plen).unwrap();
+
+        let branch = rng.range(2, 6);
+        let mut live = vec![root];
+        for _ in 0..branch {
+            live.push(tables.fork(&mut alloc, root).unwrap());
+        }
+        assert_eq!(
+            alloc.stats.forks, branch as u64,
+            "trial {trial}: branch fan-out must be counted"
+        );
+        if tail > 0 {
+            assert_eq!(
+                alloc.stats.cow_copies, branch as u64,
+                "trial {trial}: every fork of a partial tail copies exactly one block"
+            );
+        }
+
+        // Each branch decodes a private tail of random length.
+        for i in 0..live.len() {
+            let seq = live[i];
+            for _ in 0..rng.range(1, 2 * bs) {
+                if tables.needs_grow(seq) && tables.grow(&mut alloc, seq, 1).is_err() {
+                    break;
+                }
+                tables.advance(seq);
+            }
+            alloc.check_invariants();
+        }
+        assert_refcounts_match_holders(&tables, &alloc, &live, trial);
+
+        // CoW isolation: any block two branches share must be one of the
+        // root's full prefix blocks.
+        let prefix: Vec<u32> = tables.table(root).unwrap().blocks[..full].to_vec();
+        for (i, &a) in live.iter().enumerate() {
+            let ta = tables.table(a).unwrap().blocks.clone();
+            for &b in &live[i + 1..] {
+                let tb = tables.table(b).unwrap();
+                for blk in ta.iter().filter(|blk| tb.blocks.contains(blk)) {
+                    assert!(
+                        prefix.contains(blk),
+                        "trial {trial}: branches {a} and {b} share non-prefix block {blk}"
+                    );
+                }
+            }
+        }
+
+        // Free in random order (root included mid-stream): the shared
+        // prefix must survive exactly as long as any holder does.
+        while !live.is_empty() {
+            let seq = live.swap_remove(rng.below(live.len()));
+            tables.free(&mut alloc, seq);
+            assert_refcounts_match_holders(&tables, &alloc, &live, trial);
+            assert_eq!(
+                alloc.stats.allocs - alloc.stats.frees,
+                alloc.blocks_in_use() as u64,
+                "trial {trial}: alloc/free books diverged"
+            );
+            alloc.check_invariants();
+        }
+        assert_eq!(alloc.blocks_in_use(), 0, "trial {trial}: blocks leaked");
+        assert_eq!(tables.radix_nodes(), 0, "trial {trial}: radix tree must drain");
+        assert_eq!(alloc.stats.allocs, alloc.stats.frees, "trial {trial}: books must close");
+        alloc.check_invariants();
+    }
+}
+
 /// Prefix sharing is real memory: admitting N identical prompts must cost
 /// the full-prefix blocks once plus one private tail block per sequence.
 #[test]

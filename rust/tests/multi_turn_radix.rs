@@ -1,0 +1,389 @@
+//! Deterministic acceptance tests for the radix-tree prefix refactor:
+//! multi-turn conversational sessions through the sharded frontend,
+//! idle-leaf victim selection, and the eviction-feedback loop that
+//! keeps the router's affinity mirror honest.
+//!
+//! This is the acceptance twin of e2e_serving scenario 9: the bench
+//! reports the numbers, this file pins the orderings (prefix reuse
+//! strictly beats the no-reuse baseline on turn-≥1 hit rate and warm
+//! charged TTFT), the byte-identity invariants (reruns reproduce every
+//! replica trace exactly; sharing never changes token streams), and
+//! the structural ancestor-protection guarantee of idle-leaf eviction.
+
+use std::sync::mpsc::channel;
+
+use loki::coordinator::request::{FinishReason, GenRequest, GenResult, Priority};
+use loki::coordinator::sampler::SampleCfg;
+use loki::coordinator::{
+    AdmissionPolicy, Engine, EngineCaps, EngineClock, EngineConfig, EngineMetrics, PoolConfig,
+    RoutePolicy, Router, RouterCfg, VictimPolicy,
+};
+use loki::kvpool::{prefix_block_hashes, BlockAllocator, TableSet};
+use loki::obs::export::trace_jsonl;
+use loki::obs::PoolEvent;
+use loki::runtime::{SimCfg, SimRuntime};
+
+const GANG: usize = 8;
+const BS: usize = 16;
+const SESSIONS: usize = 4;
+const TURNS: usize = 3;
+const T0_BLOCKS: usize = 4;
+const GROW_BLOCKS: usize = 2;
+const MAX_NEW: usize = 24;
+
+/// Distinct-per-request prompt material within the sim vocabulary.
+fn sim_prompt(id: u64, len: usize) -> Vec<i32> {
+    (0..len).map(|i| ((id as usize * 31 + i * 7 + 3) % 96) as i32).collect()
+}
+
+/// The scenario-9 trace shape: per session, turn t's prompt is turn
+/// t-1's prompt extended by the (block-aligned) assistant reply plus
+/// the next user message. Submission order is turn-major, so every
+/// turn-(t-1) admission precedes its turn-t extension. Returns
+/// (prompts, turn indices) in submission order.
+fn session_trace() -> (Vec<Vec<i32>>, Vec<u32>) {
+    let mut prompts = Vec::new();
+    let mut turns = Vec::new();
+    let mut hists: Vec<Vec<i32>> =
+        (0..SESSIONS).map(|s| sim_prompt(30_000 + s as u64, T0_BLOCKS * BS)).collect();
+    for t in 0..TURNS {
+        for (s, hist) in hists.iter_mut().enumerate() {
+            if t > 0 {
+                hist.extend(sim_prompt(40_000 + (s * 16 + t) as u64, GROW_BLOCKS * BS));
+            }
+            prompts.push(hist.clone());
+            turns.push(t as u32);
+        }
+    }
+    (prompts, turns)
+}
+
+struct FleetRun {
+    replicas: Vec<(Vec<GenResult>, EngineMetrics)>,
+    /// Per-replica flight-recorder JSONL bytes.
+    traces: Vec<String>,
+}
+
+/// Route the session trace up front with prefix affinity, then run each
+/// replica's share through its own sim-backed engine on the Steps clock
+/// with chunked prefill and the idle-leaf victim policy — the same
+/// construction as e2e_serving scenario 9.
+fn run_fleet(sharing: bool) -> FleetRun {
+    let (prompts, turns) = session_trace();
+    let mut router = Router::new(RouterCfg {
+        replicas: 2,
+        policy: RoutePolicy::PrefixAffinity,
+        block_size: BS,
+        max_load_skew: 64,
+    });
+    let assignment: Vec<usize> =
+        prompts.iter().enumerate().map(|(i, p)| router.route(i as u64, p)).collect();
+    let caps = EngineCaps { max_len: 256, max_prompt: 256, gang_batch: GANG, bytes_per_token: 8 };
+    let mut replicas = Vec::new();
+    let mut traces = Vec::new();
+    for r in 0..router.replicas() {
+        let cfg = EngineConfig {
+            gang_batch: GANG,
+            victim_policy: VictimPolicy::IdleLeaf,
+            clock: EngineClock::Steps { step_ms: 1.0, prefill_ms_per_token: 1.0 },
+            prefill_chunk: Some(2 * BS),
+            pool: PoolConfig { block_size: BS, num_blocks: 0, prefix_sharing: sharing },
+            prefix_prefill_discount: true,
+            ..Default::default()
+        };
+        let engine =
+            Engine::with_backend(Box::new(SimRuntime::new(SimCfg::default())), caps, cfg.clone());
+        let (tx, rx) = Engine::channel(&cfg);
+        let (reply, results) = channel();
+        for (i, prompt) in prompts.iter().enumerate() {
+            if assignment[i] != r {
+                continue;
+            }
+            tx.send(GenRequest {
+                id: i as u64,
+                prompt: prompt.clone(),
+                max_new_tokens: MAX_NEW,
+                stop_token: None,
+                sampling: SampleCfg::greedy(),
+                priority: Priority::Interactive,
+                turn: turns[i],
+                slo_ms: None,
+                reply: reply.clone(),
+            })
+            .unwrap();
+        }
+        drop(tx);
+        drop(reply);
+        let metrics = engine.run(rx).unwrap();
+        let mut got: Vec<GenResult> = results.try_iter().collect();
+        got.sort_by_key(|x| x.id);
+        traces.push(trace_jsonl(&metrics.trace));
+        replicas.push((got, metrics));
+    }
+    FleetRun { replicas, traces }
+}
+
+/// Fleet turn-≥1 hit rate plus the count-weighted mean charged TTFT of
+/// the follow-up-turn histograms.
+fn fleet_warm_numbers(run: &FleetRun) -> (u64, u64, f64) {
+    let (mut shared, mut refb) = (0u64, 0u64);
+    let (mut w, mut n) = (0.0f64, 0usize);
+    for (_, m) in &run.replicas {
+        shared += m.turn_shared_blocks;
+        refb += m.turn_ref_blocks;
+        for h in m.turn_ttft_ms.iter().skip(1) {
+            w += h.mean() * h.count() as f64;
+            n += h.count();
+        }
+    }
+    assert!(n > 0, "trace must produce follow-up-turn first tokens");
+    (shared, refb, w / n as f64)
+}
+
+/// The scenario-9 pins: with prefix reuse on, every follow-up turn
+/// resolves its history through the radix tree (high turn-≥1 hit rate,
+/// nonzero tree hits) and its charged TTFT strictly beats the no-reuse
+/// baseline, while sharing changes no token stream and reruns reproduce
+/// every replica trace byte-for-byte.
+#[test]
+fn multi_turn_reuse_beats_no_reuse_and_reruns_are_byte_identical() {
+    let reuse = run_fleet(true);
+    let again = run_fleet(true);
+    assert_eq!(reuse.traces, again.traces, "rerun must reproduce traces byte-for-byte");
+    let none = run_fleet(false);
+
+    let done: u64 = reuse.replicas.iter().map(|(_, m)| m.requests_done).sum();
+    assert_eq!(done as usize, SESSIONS * TURNS, "every turn of every session must finish");
+    for ((a, _), (b, _)) in reuse.replicas.iter().zip(&none.replicas) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.tokens, y.tokens, "sharing changed request #{}'s tokens", x.id);
+            assert_eq!(x.finished_reason, FinishReason::MaxTokens);
+        }
+    }
+
+    let (shared_on, ref_on, warm_on) = fleet_warm_numbers(&reuse);
+    let (shared_off, ref_off, warm_off) = fleet_warm_numbers(&none);
+    assert_eq!(ref_on, ref_off, "probed follow-up blocks are a property of the trace");
+    assert_eq!(shared_off, 0, "no-reuse baseline must share nothing");
+    assert!(
+        2 * shared_on > ref_on,
+        "follow-up turns must resolve most of their history through the tree: {shared_on}/{ref_on}"
+    );
+    assert!(
+        warm_on < warm_off,
+        "reused history must strictly beat re-prefilling it: {warm_on} vs {warm_off}"
+    );
+
+    let tree_hits: u64 = reuse.replicas.iter().map(|(_, m)| m.radix_hit_blocks).sum();
+    assert_eq!(tree_hits, shared_on, "every shared block is a radix-tree hit");
+    assert_eq!(
+        none.replicas.iter().map(|(_, m)| m.radix_hit_blocks).sum::<u64>(),
+        0,
+        "sharing off must never consult the tree"
+    );
+}
+
+/// Satellite 1 end-to-end: the chain hashes the engine's pool announces
+/// on physical prefix frees flow through the eviction-feedback channel,
+/// and replaying them into [`Router::note_evicted`] drains the mirror
+/// of exactly the replica whose engine freed them.
+#[test]
+fn engine_evictions_drain_the_router_mirror_end_to_end() {
+    let (prompts, turns) = session_trace();
+    let mut router = Router::new(RouterCfg {
+        replicas: 2,
+        policy: RoutePolicy::PrefixAffinity,
+        block_size: BS,
+        max_load_skew: 64,
+    });
+    let assignment: Vec<usize> =
+        prompts.iter().enumerate().map(|(i, p)| router.route(i as u64, p)).collect();
+    assert!(router.mirror_len(0) > 0 && router.mirror_len(1) > 0);
+    let mirrored_r1 = router.mirror_len(1);
+
+    // Run replica 0's share with eviction feedback wired up.
+    let caps = EngineCaps { max_len: 256, max_prompt: 256, gang_batch: GANG, bytes_per_token: 8 };
+    let cfg = EngineConfig {
+        gang_batch: GANG,
+        victim_policy: VictimPolicy::IdleLeaf,
+        clock: EngineClock::Steps { step_ms: 1.0, prefill_ms_per_token: 1.0 },
+        pool: PoolConfig { block_size: BS, num_blocks: 0, prefix_sharing: true },
+        prefix_prefill_discount: true,
+        ..Default::default()
+    };
+    let (etx, erx) = channel();
+    let engine =
+        Engine::with_backend(Box::new(SimRuntime::new(SimCfg::default())), caps, cfg.clone())
+            .with_evict_feedback(etx);
+    let (tx, rx) = Engine::channel(&cfg);
+    let (reply, _results) = channel();
+    for (i, prompt) in prompts.iter().enumerate() {
+        if assignment[i] != 0 {
+            continue;
+        }
+        tx.send(GenRequest {
+            id: i as u64,
+            prompt: prompt.clone(),
+            max_new_tokens: MAX_NEW,
+            stop_token: None,
+            sampling: SampleCfg::greedy(),
+            priority: Priority::Interactive,
+            turn: turns[i],
+            slo_ms: None,
+            reply: reply.clone(),
+        })
+        .unwrap();
+    }
+    drop(tx);
+    drop(reply);
+    engine.run(rx).unwrap();
+
+    // By the end of the run every sequence has completed, so every
+    // prefix block replica 0 ever registered was physically freed and
+    // its hash forwarded. Replaying the feed must empty replica 0's
+    // mirror while leaving replica 1's untouched.
+    let mut evicted = 0usize;
+    for hash in erx.try_iter() {
+        router.note_evicted(0, hash);
+        evicted += 1;
+    }
+    assert!(evicted > 0, "completed run must announce prefix releases");
+    assert_eq!(router.mirror_len(0), 0, "mirror kept entries its engine freed");
+    assert_eq!(router.mirror_len(1), mirrored_r1, "other replica's mirror untouched");
+}
+
+/// Satellite 3 (structural half): evicting a leaf sequence returns
+/// exactly its private blocks — the shared ancestor chain a sibling
+/// still references survives with its radix nodes intact, and only the
+/// leaf's own extension hashes are announced as released.
+#[test]
+fn leaf_eviction_returns_exactly_private_blocks_and_spares_ancestors() {
+    let bs = 4;
+    let mut alloc = BlockAllocator::new(32, bs);
+    let mut ts = TableSet::new(bs, true);
+    let ancestor_prompt: Vec<i32> = (0..12).collect(); // 3 full blocks
+    let parent = ts.admit(&mut alloc, &ancestor_prompt, 12).unwrap();
+    let mut leaf_prompt = ancestor_prompt.clone();
+    leaf_prompt.extend(100..108); // +2 full blocks of divergent history
+    let leaf = ts.admit(&mut alloc, &leaf_prompt, 24).unwrap(); // +1 reserved tail
+    ts.events.drain().for_each(drop);
+
+    let ancestor_hashes = prefix_block_hashes(&ancestor_prompt, bs);
+    let leaf_hashes = prefix_block_hashes(&leaf_prompt, bs);
+    assert_eq!(ts.radix_nodes(), 5, "3 shared ancestors + 2 leaf extensions");
+    let private = ts.private_blocks(&alloc, leaf);
+    assert_eq!(private, 3, "2 extension blocks + 1 reserved tail");
+    let in_use = alloc.blocks_in_use();
+
+    ts.preempt_free(&mut alloc, leaf);
+    assert_eq!(
+        alloc.blocks_in_use(),
+        in_use - private,
+        "eviction must return exactly the leaf's private blocks"
+    );
+    for h in &ancestor_hashes {
+        assert!(ts.radix().contains(*h), "live-descendant ancestor evicted from the tree");
+    }
+    for h in &leaf_hashes[ancestor_hashes.len()..] {
+        assert!(!ts.radix().contains(*h), "dead leaf extension must leave the tree");
+    }
+    // Exactly the extension hashes are announced — mirrors must not be
+    // told to forget a prefix the survivor still serves.
+    let released: Vec<u64> = ts
+        .events
+        .drain()
+        .filter_map(|e| match e {
+            PoolEvent::PrefixReleased { hash } => Some(hash),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(released, leaf_hashes[ancestor_hashes.len()..].to_vec());
+
+    // The survivor's chain is fully intact: a re-admission of the leaf
+    // prompt re-shares the ancestors it kept alive.
+    let back = ts.admit(&mut alloc, &leaf_prompt, 24).unwrap();
+    assert_eq!(
+        ts.table(back).unwrap().blocks[..3],
+        ts.table(parent).unwrap().blocks[..3],
+        "re-admission must land on the protected ancestor blocks"
+    );
+    ts.free(&mut alloc, parent);
+    ts.free(&mut alloc, back);
+    assert_eq!(alloc.blocks_in_use(), 0);
+    alloc.check_invariants();
+}
+
+/// Satellite 3 (engine half): under a contended pool the idle-leaf
+/// victim policy preempts and resumes without changing a single output
+/// byte, and a rerun reproduces the whole flight-recorder trace — the
+/// victim choice is deterministic.
+#[test]
+fn idle_leaf_victims_resume_byte_identically() {
+    let pbs = 8; // pool block size for this scenario
+    let caps = EngineCaps { max_len: 512, max_prompt: 512, gang_batch: 2, bytes_per_token: 8 };
+    let specs: Vec<(Vec<i32>, usize)> = vec![
+        (sim_prompt(0, 24), 40),
+        (sim_prompt(1, 30), 48),
+        (sim_prompt(2, 20), 32),
+        (sim_prompt(3, 28), 36),
+    ];
+    let run = |num_blocks: usize| -> (Vec<GenResult>, EngineMetrics) {
+        let cfg = EngineConfig {
+            gang_batch: 2,
+            victim_policy: VictimPolicy::IdleLeaf,
+            pool: PoolConfig { block_size: pbs, num_blocks, prefix_sharing: true },
+            admission: if num_blocks == 0 {
+                AdmissionPolicy::ReserveFull
+            } else {
+                AdmissionPolicy::Speculative { reserve_frac: 0.2, headroom_blocks: 1 }
+            },
+            ..Default::default()
+        };
+        let engine =
+            Engine::with_backend(Box::new(SimRuntime::new(SimCfg::default())), caps, cfg.clone());
+        let (tx, rx) = Engine::channel(&cfg);
+        let (reply, results) = channel();
+        for (i, (prompt, max_new)) in specs.iter().enumerate() {
+            tx.send(GenRequest {
+                id: i as u64,
+                prompt: prompt.clone(),
+                max_new_tokens: *max_new,
+                stop_token: None,
+                sampling: SampleCfg::greedy(),
+                priority: Priority::Interactive,
+                turn: 0,
+                slo_ms: None,
+                reply: reply.clone(),
+            })
+            .unwrap();
+        }
+        drop(tx);
+        drop(reply);
+        let m = engine.run(rx).unwrap();
+        let mut got: Vec<GenResult> = results.try_iter().collect();
+        got.sort_by_key(|r| r.id);
+        (got, m)
+    };
+
+    let (base, base_m) = run(0);
+    assert_eq!(base_m.preemptions, 0, "unbounded pool must never preempt");
+    // 16 blocks cannot hold the two longest footprints at once, so
+    // decode-time growth must pick idle-leaf victims.
+    let (got, m) = run(16);
+    assert!(m.preemptions > 0, "scenario failed to force preemption: {}", m.report());
+    assert!(m.resumes > 0, "preempted leaves must resume");
+    assert_eq!(base.len(), got.len());
+    for (x, y) in base.iter().zip(&got) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.tokens, y.tokens, "request #{} tokens diverged under idle-leaf", x.id);
+        assert_eq!(x.finished_reason, y.finished_reason);
+    }
+    let (got2, m2) = run(16);
+    assert_eq!(m.preemptions, m2.preemptions, "victim choice must be deterministic");
+    assert_eq!(trace_jsonl(&m.trace), trace_jsonl(&m2.trace), "rerun must reproduce the trace");
+    for (x, y) in got.iter().zip(&got2) {
+        assert_eq!(x.tokens, y.tokens);
+    }
+}

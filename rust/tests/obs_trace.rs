@@ -56,6 +56,7 @@ fn run(cfg: &EngineConfig, caps: EngineCaps, specs: &[Spec]) -> EngineMetrics {
             stop_token: None,
             sampling: s.sampling,
             priority: s.priority,
+            turn: 0,
             slo_ms: s.slo_ms,
             reply: reply.clone(),
         })

@@ -101,6 +101,7 @@ fn run_policy(policy: RoutePolicy) -> ShardRun {
                 stop_token: None,
                 sampling: SampleCfg::greedy(),
                 priority: Priority::Interactive,
+                turn: 0,
                 slo_ms: Some(SLO_MS),
                 reply: reply.clone(),
             })
